@@ -1,0 +1,57 @@
+"""AOT: lower every L2 variant to HLO *text* + write artifacts/manifest.json.
+
+HLO text (NOT lowered.compiler_ir('hlo') proto serialization): jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1
+(the version behind the rust `xla` crate) rejects; the text parser reassigns
+ids and round-trips cleanly. See /opt/xla-example/README.md.
+"""
+
+import argparse
+import json
+import os
+
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", nargs="*", help="subset of variant names")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    names = args.only or sorted(model.VARIANTS)
+    manifest = {"kernels": []}
+    for name in names:
+        fn, shapes = model.VARIANTS[name]
+        text = to_hlo_text(model.lower_variant(name))
+        hlo_file = f"{name}.hlo.txt"
+        with open(os.path.join(args.out_dir, hlo_file), "w") as f:
+            f.write(text)
+        manifest["kernels"].append(
+            {
+                "name": name,
+                "hlo": hlo_file,
+                "input_shapes": [list(s.shape) for s in shapes],
+                "output_shapes": model.output_shapes(name),
+                "dtype": "f32",
+            }
+        )
+        print(f"  {name}: {len(text)} chars -> {hlo_file}")
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {len(manifest['kernels'])} kernels to {args.out_dir}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,18 @@
+"""L1 Pallas kernels (interpret-mode) + pure-jnp oracles (`ref`)."""
+
+from . import ref  # noqa: F401
+from .elementwise import saxpy, scale_offset, vecadd  # noqa: F401
+from .matmul import matmul  # noqa: F401
+from .reduce import dot, filter_sum  # noqa: F401
+from .stencil import jacobi2d  # noqa: F401
+
+__all__ = [
+    "ref",
+    "vecadd",
+    "saxpy",
+    "scale_offset",
+    "dot",
+    "filter_sum",
+    "jacobi2d",
+    "matmul",
+]

@@ -1,0 +1,86 @@
+"""L1 Pallas kernels — elementwise streaming ops.
+
+Every kernel here is the compute hot-spot of one `olympus.kernel` node.
+TPU adaptation (DESIGN.md §Hardware-Adaptation): the BlockSpec grid tiles the
+stream into VMEM-resident chunks, mirroring at kernel level the PC → FIFO →
+compute-unit data movement Olympus orchestrates at system level. All kernels
+are lowered with `interpret=True`: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, and correctness (not wallclock) is what the interpret path
+validates.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Chunk that fits comfortably in VMEM alongside double-buffering headroom:
+# 2 inputs + 1 output x 1024 f32 = 12 KiB of a ~16 MiB VMEM.
+BLOCK = 1024
+
+
+def _block_grid(n: int) -> tuple[int]:
+    if n % BLOCK == 0 and n >= BLOCK:
+        return (n // BLOCK,)
+    return (1,)
+
+
+def _block_shape(n: int) -> tuple[int]:
+    return (BLOCK,) if (n % BLOCK == 0 and n >= BLOCK) else (n,)
+
+
+def _vecadd_kernel(a_ref, b_ref, o_ref):
+    o_ref[...] = a_ref[...] + b_ref[...]
+
+
+def vecadd(a, b):
+    """c = a + b over 1-D f32 arrays, tiled in BLOCK-element VMEM chunks."""
+    n = a.shape[0]
+    spec = pl.BlockSpec(_block_shape(n), lambda i: (i,))
+    return pl.pallas_call(
+        _vecadd_kernel,
+        grid=_block_grid(n),
+        in_specs=[spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=True,
+    )(a, b)
+
+
+def _saxpy_kernel(alpha_ref, x_ref, y_ref, o_ref):
+    o_ref[...] = alpha_ref[0] * x_ref[...] + y_ref[...]
+
+
+def saxpy(alpha, x, y):
+    """y' = alpha*x + y; alpha is a (1,) array broadcast to every chunk."""
+    n = x.shape[0]
+    spec = pl.BlockSpec(_block_shape(n), lambda i: (i,))
+    alpha_spec = pl.BlockSpec((1,), lambda i: (0,))
+    return pl.pallas_call(
+        _saxpy_kernel,
+        grid=_block_grid(n),
+        in_specs=[alpha_spec, spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=True,
+    )(alpha, x, y)
+
+
+def _scale_offset_kernel(x_ref, s_ref, off_ref, o_ref):
+    o_ref[...] = x_ref[...] * s_ref[0] + off_ref[0]
+
+
+def scale_offset(x, scale, offset):
+    """y = x*scale + offset; scale/offset are (1,) arrays."""
+    n = x.shape[0]
+    spec = pl.BlockSpec(_block_shape(n), lambda i: (i,))
+    one = pl.BlockSpec((1,), lambda i: (0,))
+    return pl.pallas_call(
+        _scale_offset_kernel,
+        grid=_block_grid(n),
+        in_specs=[spec, one, one],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=True,
+    )(x, scale, offset)

@@ -1,0 +1,60 @@
+"""L1 Pallas kernel — MXU-shaped tiled matmul.
+
+TPU adaptation: tiles are (128, 128) — the MXU systolic-array shape — and the
+multiply operands are cast to bf16 (MXU-native) with f32 accumulation. The
+K dimension is the innermost sequential grid axis so the accumulator tile
+stays resident in VMEM across K steps (double-buffering the A/B tiles is the
+TPU pipeline the BlockSpec index maps express).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE = 128
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    a = a_ref[...].astype(jnp.bfloat16)
+    b = b_ref[...].astype(jnp.bfloat16)
+    o_ref[...] += jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+
+def matmul(a, b):
+    """C = A @ B for f32 matrices with dims divisible by TILE (or small
+    enough to be a single tile)."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, "inner dims must match"
+    if m % TILE or n % TILE or k % TILE:
+        # Single-block fallback for small/odd shapes (still bf16 multiply).
+        return pl.pallas_call(
+            lambda a_ref, b_ref, o_ref: o_ref.__setitem__(
+                ...,
+                jnp.dot(
+                    a_ref[...].astype(jnp.bfloat16),
+                    b_ref[...].astype(jnp.bfloat16),
+                    preferred_element_type=jnp.float32,
+                ),
+            ),
+            out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+            interpret=True,
+        )(a, b)
+    grid = (m // TILE, n // TILE, k // TILE)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TILE, TILE), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((TILE, TILE), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((TILE, TILE), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(a, b)

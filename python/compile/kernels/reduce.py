@@ -1,0 +1,67 @@
+"""L1 Pallas kernels — reductions (dot product, filtered aggregation).
+
+Reductions accumulate across sequential grid steps into a (1,)- or (2,)-
+shaped output ref. In interpret mode grid steps execute in order, which is
+also the TPU sequential-grid semantics, so the accumulation pattern is
+portable.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .elementwise import BLOCK, _block_grid, _block_shape
+
+
+def _dot_kernel(a_ref, b_ref, o_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[0] += jnp.sum(a_ref[...] * b_ref[...], dtype=jnp.float32)
+
+
+def dot(a, b):
+    """Dot product of two 1-D f32 arrays, reduced to a (1,) array."""
+    n = a.shape[0]
+    spec = pl.BlockSpec(_block_shape(n), lambda i: (i,))
+    out_spec = pl.BlockSpec((1,), lambda i: (0,))
+    return pl.pallas_call(
+        _dot_kernel,
+        grid=_block_grid(n),
+        in_specs=[spec, spec],
+        out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct((1,), jnp.float32),
+        interpret=True,
+    )(a, b)
+
+
+def _filter_sum_kernel(x_ref, t_ref, o_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...]
+    mask = x > t_ref[0]
+    o_ref[0] += jnp.sum(jnp.where(mask, x, 0.0), dtype=jnp.float32)
+    o_ref[1] += jnp.sum(mask.astype(jnp.float32), dtype=jnp.float32)
+
+
+def filter_sum(x, threshold):
+    """[sum(x[x>t]), count(x>t)] as a (2,) array; t is a (1,) array."""
+    n = x.shape[0]
+    spec = pl.BlockSpec(_block_shape(n), lambda i: (i,))
+    t_spec = pl.BlockSpec((1,), lambda i: (0,))
+    out_spec = pl.BlockSpec((2,), lambda i: (0,))
+    return pl.pallas_call(
+        _filter_sum_kernel,
+        grid=_block_grid(n),
+        in_specs=[spec, t_spec],
+        out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct((2,), jnp.float32),
+        interpret=True,
+    )(x, threshold)

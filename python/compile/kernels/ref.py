@@ -1,0 +1,58 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the CORE correctness signal: pytest (and randomized shape sweeps)
+assert `kernels.<name>(...) ~= ref.<name>(...)` for every kernel and shape
+variant before anything is AOT-lowered for the rust runtime.
+"""
+
+import jax.numpy as jnp
+
+
+def vecadd(a, b):
+    """Elementwise sum (paper Fig 4 'kernel' stand-in: c = a + b)."""
+    return a + b
+
+
+def saxpy(alpha, x, y):
+    """y' = alpha * x + y. `alpha` has shape (1,) so the AOT signature is
+    array-only (the rust runtime only ships array literals)."""
+    return alpha[0] * x + y
+
+
+def dot(a, b):
+    """Dot product, reduced to a (1,) array."""
+    return jnp.sum(a * b, dtype=jnp.float32).reshape((1,))
+
+
+def jacobi2d(grid):
+    """One 5-point Jacobi relaxation sweep over an (N, N) grid with fixed
+    boundaries (the CFD motif of Soldavini et al., TRETS'22 [13]).
+
+    Interior: u'[i,j] = 0.25*(u[i-1,j] + u[i+1,j] + u[i,j-1] + u[i,j+1]);
+    boundary rows/cols pass through unchanged.
+    """
+    up = grid[:-2, 1:-1]
+    down = grid[2:, 1:-1]
+    left = grid[1:-1, :-2]
+    right = grid[1:-1, 2:]
+    interior = 0.25 * (up + down + left + right)
+    return grid.at[1:-1, 1:-1].set(interior)
+
+
+def matmul(a, b):
+    """Matmul; f32 accumulation (the Pallas version tiles for the MXU)."""
+    return jnp.matmul(a, b)
+
+
+def filter_sum(x, threshold):
+    """Streaming analytics motif (EVEREST big-data [1]): returns
+    [sum of elements > threshold, count of elements > threshold] as (2,)."""
+    mask = x > threshold[0]
+    s = jnp.sum(jnp.where(mask, x, 0.0), dtype=jnp.float32)
+    c = jnp.sum(mask.astype(jnp.float32), dtype=jnp.float32)
+    return jnp.stack([s, c])
+
+
+def scale_offset(x, scale, offset):
+    """y = x * scale + offset (normalization / data-mover stage)."""
+    return x * scale[0] + offset[0]

@@ -1,0 +1,35 @@
+"""L1 Pallas kernel — 2-D 5-point Jacobi stencil (CFD motif of [13]).
+
+The grid tile is processed as a single VMEM-resident block: a 128x128 f32
+tile is 64 KiB (plus the shifted copies), far under VMEM capacity, so the
+HBM <-> VMEM schedule is one block in / one block out per sweep. Larger grids
+are handled at *system* level by Olympus replication/bus-widening across
+tiles, not inside the kernel — matching how the paper partitions work across
+pseudo-channels rather than inside one kernel.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _jacobi_kernel(g_ref, o_ref):
+    g = g_ref[...]
+    up = g[:-2, 1:-1]
+    down = g[2:, 1:-1]
+    left = g[1:-1, :-2]
+    right = g[1:-1, 2:]
+    interior = 0.25 * (up + down + left + right)
+    out = g
+    out = out.at[1:-1, 1:-1].set(interior)
+    o_ref[...] = out
+
+
+def jacobi2d(grid):
+    """One Jacobi sweep over an (N, N) f32 grid; boundaries pass through."""
+    n, m = grid.shape
+    return pl.pallas_call(
+        _jacobi_kernel,
+        out_shape=jax.ShapeDtypeStruct((n, m), jnp.float32),
+        interpret=True,
+    )(grid)

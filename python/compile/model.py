@@ -1,0 +1,87 @@
+"""L2 — JAX compute graphs wrapping the L1 Pallas kernels.
+
+Each `olympus.kernel` op's `callee` attribute names one VARIANTS entry: a
+jitted jax function at a fixed shape, AOT-lowered by `aot.py` to HLO text the
+rust runtime loads via PJRT. Shapes are fixed at AOT time because PJRT
+executables are monomorphic; the system-level simulator streams data in
+chunks matching these shapes.
+
+Every function returns a tuple — the HLO is lowered with `return_tuple=True`
+(see aot.py) and the rust side unwraps the tuple.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import kernels
+
+f32 = jnp.float32
+
+
+def _s(*shape):
+    return jax.ShapeDtypeStruct(shape, f32)
+
+
+def _vecadd(a, b):
+    return (kernels.vecadd(a, b),)
+
+
+def _saxpy(alpha, x, y):
+    return (kernels.saxpy(alpha, x, y),)
+
+
+def _scale_offset(x, s, o):
+    return (kernels.scale_offset(x, s, o),)
+
+
+def _dot(a, b):
+    return (kernels.dot(a, b),)
+
+
+def _filter_sum(x, t):
+    return (kernels.filter_sum(x, t),)
+
+
+def _jacobi2d(g):
+    return (kernels.jacobi2d(g),)
+
+
+def _jacobi2d_x4(g):
+    """Four fused Jacobi sweeps — the 'deep pipeline' variant used by the CFD
+    example: one artifact per four system-level iterations."""
+    for _ in range(4):
+        g = kernels.jacobi2d(g)
+    return (g,)
+
+
+def _matmul(a, b):
+    return (kernels.matmul(a, b),)
+
+
+# name -> (python_fn, [input ShapeDtypeStructs])
+VARIANTS = {
+    "vecadd_1024": (_vecadd, [_s(1024), _s(1024)]),
+    "vecadd_4096": (_vecadd, [_s(4096), _s(4096)]),
+    "saxpy_1024": (_saxpy, [_s(1), _s(1024), _s(1024)]),
+    "scale_offset_1024": (_scale_offset, [_s(1024), _s(1), _s(1)]),
+    "dot_1024": (_dot, [_s(1024), _s(1024)]),
+    "filter_sum_1024": (_filter_sum, [_s(1024), _s(1)]),
+    "jacobi2d_64": (_jacobi2d, [_s(64, 64)]),
+    "jacobi2d_128": (_jacobi2d, [_s(128, 128)]),
+    "jacobi2d_64_x4": (_jacobi2d_x4, [_s(64, 64)]),
+    "matmul_128": (_matmul, [_s(128, 128), _s(128, 128)]),
+    "matmul_256": (_matmul, [_s(256, 256), _s(256, 256)]),
+}
+
+
+def lower_variant(name):
+    """jax.jit(...).lower(...) for one VARIANTS entry."""
+    fn, shapes = VARIANTS[name]
+    return jax.jit(fn).lower(*shapes)
+
+
+def output_shapes(name):
+    """Concrete output shapes for the manifest."""
+    fn, shapes = VARIANTS[name]
+    out = jax.eval_shape(fn, *shapes)
+    return [list(o.shape) for o in out]

@@ -1,0 +1,79 @@
+"""Hypothesis sweeps: Pallas kernels vs pure-jnp oracles across random
+shapes and values (the L1 property-testing requirement)."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile import kernels
+from compile.kernels import ref
+
+SET = settings(max_examples=12, deadline=None)
+
+floats = st.floats(min_value=-100.0, max_value=100.0, allow_nan=False, width=32)
+
+
+@SET
+@given(n=st.integers(1, 5000), seed=st.integers(0, 2**32 - 1))
+def test_vecadd_any_shape(n, seed):
+    r = np.random.default_rng(seed)
+    a = jnp.asarray(r.normal(size=n), jnp.float32)
+    b = jnp.asarray(r.normal(size=n), jnp.float32)
+    np.testing.assert_allclose(kernels.vecadd(a, b), ref.vecadd(a, b), rtol=1e-6)
+
+
+@SET
+@given(n=st.integers(1, 4096), alpha=floats, seed=st.integers(0, 2**32 - 1))
+def test_saxpy_any_shape_and_alpha(n, alpha, seed):
+    r = np.random.default_rng(seed)
+    a = jnp.asarray([alpha], jnp.float32)
+    x = jnp.asarray(r.normal(size=n), jnp.float32)
+    y = jnp.asarray(r.normal(size=n), jnp.float32)
+    np.testing.assert_allclose(
+        kernels.saxpy(a, x, y), ref.saxpy(a, x, y), rtol=1e-4, atol=1e-3
+    )
+
+
+@SET
+@given(n=st.integers(2, 3000), seed=st.integers(0, 2**32 - 1))
+def test_dot_any_shape(n, seed):
+    r = np.random.default_rng(seed)
+    a = jnp.asarray(r.normal(size=n), jnp.float32)
+    b = jnp.asarray(r.normal(size=n), jnp.float32)
+    np.testing.assert_allclose(kernels.dot(a, b), ref.dot(a, b), rtol=1e-3, atol=1e-3)
+
+
+@SET
+@given(n=st.integers(2, 2000), t=floats, seed=st.integers(0, 2**32 - 1))
+def test_filter_sum_any_threshold(n, t, seed):
+    r = np.random.default_rng(seed)
+    x = jnp.asarray(r.normal(size=n) * 50, jnp.float32)
+    tt = jnp.asarray([t], jnp.float32)
+    np.testing.assert_allclose(
+        kernels.filter_sum(x, tt), ref.filter_sum(x, tt), rtol=1e-3, atol=1e-2
+    )
+
+
+@SET
+@given(n=st.integers(3, 96), seed=st.integers(0, 2**32 - 1))
+def test_jacobi_any_grid(n, seed):
+    r = np.random.default_rng(seed)
+    g = jnp.asarray(r.normal(size=(n, n)), jnp.float32)
+    np.testing.assert_allclose(kernels.jacobi2d(g), ref.jacobi2d(g), rtol=1e-6)
+
+
+@SET
+@given(
+    m=st.integers(1, 80),
+    k=st.integers(1, 80),
+    n=st.integers(1, 80),
+    seed=st.integers(0, 2**32 - 1),
+)
+def test_matmul_any_shape(m, k, n, seed):
+    r = np.random.default_rng(seed)
+    a = jnp.asarray(r.normal(size=(m, k)), jnp.float32)
+    b = jnp.asarray(r.normal(size=(k, n)), jnp.float32)
+    np.testing.assert_allclose(
+        kernels.matmul(a, b), ref.matmul(a, b), rtol=5e-2, atol=0.6
+    )

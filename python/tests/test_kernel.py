@@ -1,0 +1,107 @@
+"""Kernel-vs-oracle correctness: every Pallas kernel against ref.py,
+across shapes/values, plus randomized sweeps (seeded, deterministic)."""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from compile import kernels
+from compile.kernels import ref
+
+
+def rng(seed=0):
+    return np.random.default_rng(seed)
+
+
+@pytest.mark.parametrize("n", [8, 256, 1024, 4096, 5000])
+def test_vecadd(n):
+    r = rng(n)
+    a = jnp.asarray(r.normal(size=n), jnp.float32)
+    b = jnp.asarray(r.normal(size=n), jnp.float32)
+    np.testing.assert_allclose(kernels.vecadd(a, b), ref.vecadd(a, b), rtol=1e-6)
+
+
+@pytest.mark.parametrize("n", [16, 1024, 2048])
+def test_saxpy(n):
+    r = rng(n + 1)
+    alpha = jnp.asarray(r.normal(size=1), jnp.float32)
+    x = jnp.asarray(r.normal(size=n), jnp.float32)
+    y = jnp.asarray(r.normal(size=n), jnp.float32)
+    np.testing.assert_allclose(
+        kernels.saxpy(alpha, x, y), ref.saxpy(alpha, x, y), rtol=1e-5, atol=1e-6
+    )
+
+
+@pytest.mark.parametrize("n", [16, 1024, 3072])
+def test_scale_offset(n):
+    r = rng(n + 2)
+    x = jnp.asarray(r.normal(size=n), jnp.float32)
+    s = jnp.asarray(r.normal(size=1), jnp.float32)
+    o = jnp.asarray(r.normal(size=1), jnp.float32)
+    np.testing.assert_allclose(
+        kernels.scale_offset(x, s, o), ref.scale_offset(x, s, o), rtol=1e-5, atol=1e-6
+    )
+
+
+@pytest.mark.parametrize("n", [16, 1024, 4096])
+def test_dot(n):
+    r = rng(n + 3)
+    a = jnp.asarray(r.normal(size=n), jnp.float32)
+    b = jnp.asarray(r.normal(size=n), jnp.float32)
+    np.testing.assert_allclose(
+        kernels.dot(a, b), ref.dot(a, b), rtol=1e-4, atol=1e-4
+    )
+
+
+@pytest.mark.parametrize("n", [32, 1024, 2048])
+def test_filter_sum(n):
+    r = rng(n + 4)
+    x = jnp.asarray(r.normal(size=n), jnp.float32)
+    t = jnp.asarray([0.1], jnp.float32)
+    np.testing.assert_allclose(
+        kernels.filter_sum(x, t), ref.filter_sum(x, t), rtol=1e-4, atol=1e-4
+    )
+
+
+@pytest.mark.parametrize("n", [8, 64, 128])
+def test_jacobi2d(n):
+    r = rng(n + 5)
+    g = jnp.asarray(r.normal(size=(n, n)), jnp.float32)
+    got = kernels.jacobi2d(g)
+    want = ref.jacobi2d(g)
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+    # boundaries must pass through untouched
+    np.testing.assert_array_equal(np.asarray(got)[0], np.asarray(g)[0])
+    np.testing.assert_array_equal(np.asarray(got)[-1], np.asarray(g)[-1])
+
+
+@pytest.mark.parametrize("m,k,n", [(16, 16, 16), (128, 128, 128), (256, 128, 128)])
+def test_matmul(m, k, n):
+    r = rng(m + k + n)
+    a = jnp.asarray(r.normal(size=(m, k)), jnp.float32)
+    b = jnp.asarray(r.normal(size=(k, n)), jnp.float32)
+    # bf16 multiply => loose tolerance vs f32 oracle
+    np.testing.assert_allclose(
+        kernels.matmul(a, b), ref.matmul(a, b), rtol=5e-2, atol=5e-1
+    )
+
+
+def test_random_shape_sweep_elementwise():
+    """Randomized (seeded) sweep across 25 shapes — the 'hypothesis-style'
+    invariant check: Pallas kernel == oracle for arbitrary sizes."""
+    r = rng(99)
+    for _ in range(25):
+        n = int(r.integers(1, 6000))
+        a = jnp.asarray(r.normal(size=n), jnp.float32)
+        b = jnp.asarray(r.normal(size=n), jnp.float32)
+        np.testing.assert_allclose(kernels.vecadd(a, b), ref.vecadd(a, b), rtol=1e-6)
+
+
+def test_random_shape_sweep_reduce():
+    r = rng(100)
+    for _ in range(10):
+        n = int(r.integers(2, 4000))
+        a = jnp.asarray(r.normal(size=n), jnp.float32)
+        b = jnp.asarray(r.normal(size=n), jnp.float32)
+        np.testing.assert_allclose(kernels.dot(a, b), ref.dot(a, b), rtol=1e-3, atol=1e-3)

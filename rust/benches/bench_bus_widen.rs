@@ -1,0 +1,98 @@
+//! Claim C4 (paper §V-B + Fig 7): bus widening achieves near-ideal speedup
+//! for the number of replications when data widths divide the PC width.
+//!
+//! Regenerates the speedup-vs-bus-width series on the Fig 4a app, and shows
+//! the channel layouts the pass produces (the Fig 7b "lanes").
+
+use olympus::analysis::{analyze_bandwidth, analyze_resources, Dfg};
+use olympus::dialect::{ChannelView, DfgBuilder, KernelEst, ParamType, ResourceVec, OP_SUPER_NODE};
+use olympus::ir::Module;
+use olympus::passes::manager::{parse_pipeline, PassContext};
+use olympus::platform::builtin;
+use olympus::sim::TimingModel;
+use olympus::util::benchkit::Bench;
+
+const ELEMS: u64 = 65536;
+const LATENCY: u64 = 1060;
+
+/// Fig 4a-shaped app with a long stream (latency amortized over 64k elems).
+fn app() -> Module {
+    let mut b = DfgBuilder::new();
+    let a = b.channel(32, ParamType::Stream, ELEMS);
+    let bb = b.channel(32, ParamType::Stream, ELEMS);
+    let c = b.channel(32, ParamType::Stream, ELEMS);
+    b.kernel(
+        "vecadd_1024",
+        &[a, bb],
+        &[c],
+        KernelEst { latency: LATENCY, ii: 1, res: ResourceVec::new(4316, 5373, 2, 0, 0) },
+    );
+    b.finish()
+}
+
+/// Returns (makespan, lanes, word efficiency) for a bus width.
+fn widen(width: u64) -> (f64, u32, f64) {
+    let plat = builtin("u280").unwrap();
+    let mut m = app();
+    let mut ctx = PassContext::new(plat.clone());
+    let p = format!("sanitize, bus-widen{{width={width}}}, channel-reassign");
+    parse_pipeline(&p, &mut ctx).unwrap().run(&mut m, &ctx).unwrap();
+    let dfg = Dfg::build(&m);
+    let bw = analyze_bandwidth(&m, &plat, &dfg);
+    let res = analyze_resources(&m, &plat, &dfg);
+    let lanes = m
+        .top_ops_named(OP_SUPER_NODE)
+        .first()
+        .and_then(|&sn| m.op(sn).int_attr("lanes"))
+        .unwrap_or(1) as u32;
+    let timing = TimingModel::new(&plat, res.utilization, true);
+    // each lane CU processes 1/lanes of the fixed stream
+    let (_, compute) = timing.cu_time_s(LATENCY, 1, ELEMS / lanes as u64);
+    let eff = ChannelView::all(&m)
+        .first()
+        .and_then(|ch| ch.layout(&m))
+        .map(|l| l.efficiency())
+        .unwrap_or(0.0);
+    (bw.makespan_s.max(compute), lanes, eff)
+}
+
+fn main() {
+    println!("# Bus widening: speedup vs bus width (paper Fig 7, 32-bit elements)");
+    println!("{:>8} {:>7} {:>12} {:>9} {:>9}", "width", "lanes", "makespan", "speedup", "word-eff");
+    let (base, _, _) = widen(32); // width == elem width -> no widening
+    for width in [32u64, 64, 128, 256] {
+        let (t, lanes, eff) = widen(width);
+        let speedup = base / t;
+        println!(
+            "{:>8} {:>7} {:>10.2}us {:>8.2}x {:>8.1}%",
+            width,
+            lanes,
+            t * 1e6,
+            speedup,
+            eff * 100.0
+        );
+        println!("BENCH\tbench_bus_widen\twidth_{width}\t{}\t0\t0\t{speedup}\tspeedup", t * 1e9);
+        if width >= 64 {
+            let ideal = (width / 32) as f64;
+            assert!(
+                speedup > ideal * 0.6,
+                "width {width}: speedup {speedup} far from ideal {ideal}"
+            );
+            assert!(eff > 0.99, "widened word must be fully packed");
+        }
+    }
+
+    // pass runtime
+    let mut b = Bench::new("bus-widen-pass-runtime");
+    for width in [128u64, 256] {
+        b.bench(&format!("widen_{width}"), || {
+            let plat = builtin("u280").unwrap();
+            let mut m = app();
+            let mut ctx = PassContext::new(plat);
+            let p = format!("sanitize, bus-widen{{width={width}}}");
+            parse_pipeline(&p, &mut ctx).unwrap().run(&mut m, &ctx).unwrap();
+            m.num_ops()
+        });
+    }
+    b.run();
+}

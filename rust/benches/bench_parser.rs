@@ -1,0 +1,43 @@
+//! §Perf: IR parser + printer throughput (MB/s) over module size.
+
+use olympus::ir::{parse_module, print_module};
+use olympus::util::benchkit::Bench;
+use olympus::util::Rng;
+use olympus::workload::{random_dfg, WorkloadSpec};
+
+fn main() {
+    let mut b = Bench::new("ir-parser-printer");
+    for kernels in [16usize, 128, 1024, 4096] {
+        let mut rng = Rng::new(kernels as u64);
+        let m = random_dfg(&mut rng, &WorkloadSpec { kernels, ..Default::default() });
+        // sanitize adds layouts = heavier attribute dictionaries
+        {
+            let mut ctx = olympus::passes::PassContext::new(
+                olympus::platform::builtin("u280").unwrap(),
+            );
+            let pm = olympus::passes::parse_pipeline("sanitize", &mut ctx).unwrap();
+            let mut m2 = m.clone();
+            pm.run(&mut m2, &ctx).unwrap();
+            let text = print_module(&m2);
+            let mb = text.len() as f64 / 1e6;
+            let t = text.clone();
+            b.bench_with_throughput(&format!("parse_{kernels}_kernels_{}B", text.len()), move || {
+                let t0 = std::time::Instant::now();
+                let m = parse_module(&t).unwrap();
+                let secs = t0.elapsed().as_secs_f64();
+                std::hint::black_box(m.num_ops());
+                Some((mb / secs, "MB/s".to_string()))
+            });
+            let m3 = m2.clone();
+            b.bench_with_throughput(&format!("print_{kernels}_kernels"), move || {
+                let t0 = std::time::Instant::now();
+                let s = print_module(&m3);
+                let secs = t0.elapsed().as_secs_f64();
+                let mb = s.len() as f64 / 1e6;
+                std::hint::black_box(s.len());
+                Some((mb / secs, "MB/s".to_string()))
+            });
+        }
+    }
+    b.run();
+}

@@ -1,0 +1,60 @@
+//! Figs 4–5 + olympus-opt engineering: per-pass runtime over DFG size
+//! (sanitize, channel-reassign, iris, full pipeline) and the Fig 4/5
+//! golden transformations as micro-checks.
+
+use olympus::dialect::build::fig4a_module;
+use olympus::dialect::PcView;
+use olympus::passes::manager::{parse_pipeline, PassContext};
+use olympus::platform::builtin;
+use olympus::util::benchkit::Bench;
+use olympus::util::Rng;
+use olympus::workload::{random_dfg, WorkloadSpec};
+
+fn run_pipeline(m: &olympus::ir::Module, pipeline: &str) -> olympus::ir::Module {
+    let mut m = m.clone();
+    let mut ctx = PassContext::new(builtin("u280").unwrap());
+    parse_pipeline(pipeline, &mut ctx).unwrap().run(&mut m, &ctx).unwrap();
+    m
+}
+
+fn main() {
+    // golden checks first (Figs 4 and 5 shapes)
+    {
+        let m = run_pipeline(&fig4a_module(), "sanitize");
+        assert_eq!(PcView::all(&m).len(), 3, "Fig 4b: one PC per global channel");
+        assert!(PcView::all(&m).iter().all(|pc| pc.id(&m) == 0), "Fig 4b: all id 0");
+        let m = run_pipeline(&fig4a_module(), "sanitize, channel-reassign");
+        let mut ids: Vec<u32> = PcView::all(&m).iter().map(|pc| pc.id(&m)).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), 3, "Fig 5: distinct ids");
+        println!("golden Fig4/Fig5 transformations: OK");
+    }
+
+    let mut b = Bench::new("olympus-opt-pass-runtime");
+    for kernels in [8usize, 64, 256, 1024] {
+        let mut rng = Rng::new(kernels as u64);
+        let m = random_dfg(&mut rng, &WorkloadSpec { kernels, ..Default::default() });
+        let n_ops = m.num_ops();
+        for pipeline in [
+            "sanitize",
+            "sanitize, channel-reassign",
+            "sanitize, iris, channel-reassign",
+            "sanitize, plm-share, iris, replicate{factor=2}, channel-reassign, canonicalize",
+        ] {
+            let label = format!(
+                "{}_kernels_{}",
+                kernels,
+                pipeline.split(',').count()
+            );
+            let m2 = m.clone();
+            let p = pipeline.to_string();
+            b.bench_with_throughput(&label, move || {
+                let out = run_pipeline(&m2, &p);
+                let _ = std::hint::black_box(out.num_ops());
+                Some((n_ops as f64, "ops".to_string()))
+            });
+        }
+    }
+    b.run();
+}

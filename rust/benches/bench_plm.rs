@@ -1,0 +1,87 @@
+//! Claim C5 (paper §V-B "PLM optimization"): Mnemosyne-style sharing saves
+//! BRAM, "often to a high enough degree to allow for additional compute
+//! unit replication and therefore speedup".
+//!
+//! Regenerates the BRAM-saved / extra-replication / speedup table on a
+//! BRAM-bound multi-phase app.
+
+use olympus::analysis::{analyze_resources, Dfg};
+use olympus::dialect::{ChannelView, DfgBuilder, KernelEst, ParamType, ResourceVec};
+use olympus::ir::{Attribute, Module};
+use olympus::passes::manager::{parse_pipeline, PassContext};
+use olympus::platform::builtin;
+use olympus::util::benchkit::Bench;
+
+/// BRAM-hungry two-phase pipeline: each stage double-buffers a large tile.
+/// `phases` tiles of `brams_each` BRAM36 each, alternating phase tags.
+fn app(n_bufs: usize, brams_each: u64) -> Module {
+    let mut b = DfgBuilder::new();
+    let mut prev = b.channel(32, ParamType::Stream, 1024);
+    let mut smalls = Vec::new();
+    for _ in 0..n_bufs {
+        let tile = b.channel(32, ParamType::Small, brams_each * 36 * 1024 / 32);
+        smalls.push(tile);
+        let next = b.channel(32, ParamType::Stream, 1024);
+        b.kernel(
+            "vecadd_1024",
+            &[prev, tile],
+            &[next],
+            KernelEst { latency: 1060, ii: 1, res: ResourceVec::new(9000, 11000, 30, 0, 6) },
+        );
+        prev = next;
+    }
+    let mut m = b.finish();
+    // compiler-supplied phases: buffer k live only in phase k (sequential
+    // stages) -> all mutually temporally compatible
+    for (k, ch) in smalls.iter().enumerate() {
+        let op = ChannelView::from_value(&m, *ch).unwrap().op;
+        m.op_mut(op).set_attr("phase", Attribute::Int(k as i64));
+    }
+    m
+}
+
+fn evaluate(share: bool) -> (u64, u64, f64) {
+    let plat = builtin("u280").unwrap();
+    let mut m = app(6, 160); // 6 x 160 = 960 BRAM36 of PLM demand (~48%)
+    let mut ctx = PassContext::new(plat.clone());
+    let pipeline = if share {
+        "sanitize, plm-share, replicate, channel-reassign"
+    } else {
+        "sanitize, replicate, channel-reassign"
+    };
+    parse_pipeline(pipeline, &mut ctx).unwrap().run(&mut m, &ctx).unwrap();
+    let dfg = Dfg::build(&m);
+    let res = analyze_resources(&m, &plat, &dfg);
+    let cus = dfg.compute_unit_count(&m) as u64;
+    (res.total.bram, cus, res.utilization)
+}
+
+fn main() {
+    println!("# PLM sharing: BRAM saved -> extra replication (paper §V-B)");
+    let (bram_no, cus_no, util_no) = evaluate(false);
+    let (bram_yes, cus_yes, util_yes) = evaluate(true);
+    println!("{:<22} {:>10} {:>8} {:>8}", "design", "BRAM36", "CUs", "util");
+    println!("{:<22} {:>10} {:>8} {:>7.1}%", "no sharing", bram_no, cus_no, util_no * 100.0);
+    println!("{:<22} {:>10} {:>8} {:>7.1}%", "mnemosyne sharing", bram_yes, cus_yes, util_yes * 100.0);
+    // replication is throughput: speedup == CU ratio on this stream app
+    let speedup = cus_yes as f64 / cus_no as f64;
+    println!("\nextra replication from saved BRAM: {cus_no} -> {cus_yes} CUs ({speedup:.2}x throughput)");
+    println!("BENCH\tbench_plm\tshared_cus\t0\t0\t0\t{speedup}\tthroughput-ratio");
+    assert!(cus_yes > cus_no, "sharing must unlock extra replication");
+
+    // planner runtime
+    let mut b = Bench::new("plm-share-pass-runtime");
+    for n in [8usize, 64, 256] {
+        b.bench(&format!("plm_share_{n}_buffers"), || {
+            let plat = builtin("u280").unwrap();
+            let mut m = app(n, 4);
+            let mut ctx = PassContext::new(plat);
+            parse_pipeline("sanitize, plm-share", &mut ctx)
+                .unwrap()
+                .run(&mut m, &ctx)
+                .unwrap();
+            m.num_ops()
+        });
+    }
+    b.run();
+}

@@ -1,0 +1,57 @@
+//! §Perf: platform-simulator throughput — firings/s and simulated-bytes/s
+//! over design size (CU count), PJRT executables cached across runs.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Arc;
+
+use olympus::coordinator::run_flow;
+use olympus::platform::builtin;
+use olympus::runtime::{KernelRegistry, PjrtRuntime};
+use olympus::sim::Simulator;
+use olympus::util::benchkit::Bench;
+use olympus::util::Rng;
+use olympus::workload::{random_dfg, WorkloadSpec};
+
+fn main() {
+    let plat = builtin("u280").unwrap();
+    let rt = Arc::new(PjrtRuntime::cpu().expect("pjrt"));
+    let registry = KernelRegistry::load(
+        rt,
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts").as_path(),
+    )
+    .expect("artifacts");
+
+    let mut b = Bench::new("simulator-throughput");
+    for kernels in [2usize, 8, 32] {
+        let mut rng = Rng::new(kernels as u64);
+        let spec = WorkloadSpec { kernels, small_p: 0.0, ..Default::default() };
+        let m = random_dfg(&mut rng, &spec);
+        let r = run_flow(m, &plat, Some("sanitize, channel-reassign")).expect("flow");
+        let sim = Simulator::new(&r.arch, &registry).with_resources(&r.resources);
+        // host buffers for every read binding
+        let mut buffers: HashMap<String, Vec<f32>> = HashMap::new();
+        for mv in &r.arch.movers {
+            if mv.dir == olympus::lower::MoverDir::Read {
+                for (f, ep) in &mv.routes {
+                    let base = f.split('.').next().unwrap_or(f).to_string();
+                    let len = match ep {
+                        olympus::lower::Endpoint::Plm(i) => {
+                            (r.arch.plms[*i].bits / 32).max(1) as usize
+                        }
+                        _ => 1024,
+                    };
+                    buffers.entry(base).or_insert_with(|| rng.vecf32(len));
+                }
+            }
+        }
+        let n_cus = r.arch.cus.len();
+        b.bench_with_throughput(&format!("{kernels}_kernels_{n_cus}_cus"), || {
+            let out = sim.run(&buffers).unwrap();
+            let firings: u64 = out.metrics.per_cu.iter().map(|c| c.firings).sum();
+            let secs = out.metrics.sim_wall_s;
+            Some((firings as f64 / secs, "firings/s".to_string()))
+        });
+    }
+    b.run();
+}

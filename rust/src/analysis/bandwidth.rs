@@ -1,0 +1,230 @@
+//! Bandwidth-utilization analysis (paper §V-B, first analysis).
+//!
+//! Model: a physical memory channel (PC) moves `width_bits` per beat at
+//! `freq_mhz`. A data channel whose layout packs `used_bits` useful bits
+//! into a `word_bits` word consumes `ceil(word_bits / pc_width)` beats per
+//! word — a *naive* 32-bit stream on a 256-bit HBM PC therefore wastes
+//! 87.5% of every beat, which is exactly the inefficiency the paper's Iris
+//! bus optimization removes.
+
+use std::collections::BTreeMap;
+
+use crate::dialect::Layout;
+use crate::ir::Module;
+use crate::platform::{MemKind, PlatformSpec};
+
+use super::dfg::Dfg;
+
+/// Per-PC usage summary.
+#[derive(Debug, Clone)]
+pub struct PcUsage {
+    pub pc_id: u32,
+    pub kind: MemKind,
+    /// Useful payload moved per app iteration (bytes).
+    pub useful_bytes: u64,
+    /// Beats needed per app iteration.
+    pub beats: u64,
+    /// Bandwidth efficiency: useful bits / (beats × width).
+    pub efficiency: f64,
+    /// Seconds to move one iteration's data at peak beat rate.
+    pub time_s: f64,
+    /// Channels assigned here.
+    pub num_channels: usize,
+}
+
+/// Whole-design bandwidth report.
+#[derive(Debug, Clone)]
+pub struct BandwidthReport {
+    pub per_pc: Vec<PcUsage>,
+    /// Useful bytes per iteration across all PCs.
+    pub total_useful_bytes: u64,
+    /// Weighted efficiency across used PCs.
+    pub aggregate_efficiency: f64,
+    /// Streaming makespan: the slowest PC's transfer time (s).
+    pub makespan_s: f64,
+    /// The PC that binds the makespan.
+    pub bottleneck_pc: Option<u32>,
+    /// Achieved aggregate bandwidth if all PCs stream concurrently (GB/s):
+    /// total useful bytes / makespan.
+    pub achieved_gbs: f64,
+    /// Fraction of the platform's *used-PC* peak actually delivering payload.
+    pub utilization: f64,
+}
+
+/// Analyze bandwidth for the current PC assignment.
+///
+/// Channels without PC terminals (pre-sanitize IR) are ignored; run the
+/// sanitize pass first for a meaningful report.
+pub fn analyze_bandwidth(m: &Module, plat: &PlatformSpec, dfg: &Dfg) -> BandwidthReport {
+    // pc id -> (useful_bits, beats, channels)
+    let mut acc: BTreeMap<u32, (u64, u64, usize)> = BTreeMap::new();
+    for binding in &dfg.memory_channels {
+        let ch = binding.channel;
+        for pc in &binding.pcs {
+            let pc_id = pc.id(m);
+            let Some(spec) = plat.pcs.get(pc_id as usize) else { continue };
+            let layout = ch
+                .layout(m)
+                .unwrap_or_else(|| Layout::scalar("ch", ch.elem_bits(m).max(1), ch.depth(m)));
+            let word_bits = layout.word_bits.max(1);
+            let used_bits_per_word = layout.used_bits().min(word_bits) as u64;
+            let beats_per_word = word_bits.div_ceil(spec.width_bits) as u64;
+            // When several PCs serve one channel (replication assigns clones
+            // their own PC ops), each PC carries the full channel payload of
+            // its clone; the layout depth already reflects that.
+            let words = layout.depth;
+            let e = acc.entry(pc_id).or_default();
+            e.0 += used_bits_per_word * words;
+            e.1 += beats_per_word * words;
+            e.2 += 1;
+        }
+    }
+
+    let mut per_pc = Vec::new();
+    let mut total_bits = 0u64;
+    let mut makespan = 0.0f64;
+    let mut bottleneck = None;
+    for (pc_id, (bits, beats, nch)) in acc {
+        let spec = plat.pcs[pc_id as usize];
+        let cap_bits = beats * spec.width_bits as u64;
+        let efficiency = if cap_bits == 0 { 0.0 } else { bits as f64 / cap_bits as f64 };
+        let time_s = beats as f64 / (spec.freq_mhz * 1e6);
+        if time_s > makespan {
+            makespan = time_s;
+            bottleneck = Some(pc_id);
+        }
+        total_bits += bits;
+        per_pc.push(PcUsage {
+            pc_id,
+            kind: spec.kind,
+            useful_bytes: bits / 8,
+            beats,
+            efficiency,
+            time_s,
+            num_channels: nch,
+        });
+    }
+
+    let total_useful_bytes = total_bits / 8;
+    let used_peak_gbs: f64 =
+        per_pc.iter().map(|u| plat.pcs[u.pc_id as usize].bandwidth_gbs()).sum();
+    let achieved_gbs =
+        if makespan > 0.0 { total_useful_bytes as f64 / makespan / 1e9 } else { 0.0 };
+    let aggregate_efficiency = if per_pc.is_empty() {
+        0.0
+    } else {
+        let total_beats_bits: u64 =
+            per_pc.iter().map(|u| u.beats * plat.pcs[u.pc_id as usize].width_bits as u64).sum();
+        if total_beats_bits == 0 { 0.0 } else { total_bits as f64 / total_beats_bits as f64 }
+    };
+    BandwidthReport {
+        per_pc,
+        total_useful_bytes,
+        aggregate_efficiency,
+        makespan_s: makespan,
+        bottleneck_pc: bottleneck,
+        achieved_gbs,
+        utilization: if used_peak_gbs > 0.0 { achieved_gbs / used_peak_gbs } else { 0.0 },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dialect::{DfgBuilder, ParamType};
+    use crate::platform::builtin;
+
+    /// vecadd DFG with all three channels on PC 0 (the post-sanitize default).
+    fn vecadd_on_one_pc() -> (Module, Dfg) {
+        let mut b = DfgBuilder::new();
+        let a = b.channel(32, ParamType::Stream, 1024);
+        let bb = b.channel(32, ParamType::Stream, 1024);
+        let c = b.channel(32, ParamType::Stream, 1024);
+        b.kernel("vecadd_1024", &[a, bb], &[c], Default::default());
+        for v in [a, bb, c] {
+            b.pc(v, 0);
+        }
+        let m = b.finish();
+        let g = Dfg::build(&m);
+        (m, g)
+    }
+
+    #[test]
+    fn naive_32bit_stream_is_one_eighth_efficient() {
+        let (m, g) = vecadd_on_one_pc();
+        let plat = builtin("u280").unwrap();
+        let rep = analyze_bandwidth(&m, &plat, &g);
+        assert_eq!(rep.per_pc.len(), 1);
+        // scalar 32-bit words on a 256-bit PC: 12.5% efficiency
+        assert!((rep.per_pc[0].efficiency - 0.125).abs() < 1e-9, "{rep:?}");
+        assert_eq!(rep.per_pc[0].num_channels, 3);
+        assert_eq!(rep.total_useful_bytes, 3 * 1024 * 4);
+    }
+
+    #[test]
+    fn spreading_channels_reduces_makespan() {
+        let (m1, g1) = vecadd_on_one_pc();
+        let plat = builtin("u280").unwrap();
+        let rep1 = analyze_bandwidth(&m1, &plat, &g1);
+
+        // same DFG, channels spread over PCs 0,1,2
+        let mut b = DfgBuilder::new();
+        let a = b.channel(32, ParamType::Stream, 1024);
+        let bb = b.channel(32, ParamType::Stream, 1024);
+        let c = b.channel(32, ParamType::Stream, 1024);
+        b.kernel("vecadd_1024", &[a, bb], &[c], Default::default());
+        for (i, v) in [a, bb, c].into_iter().enumerate() {
+            b.pc(v, i as u32);
+        }
+        let m2 = b.finish();
+        let g2 = Dfg::build(&m2);
+        let rep2 = analyze_bandwidth(&m2, &plat, &g2);
+
+        assert_eq!(rep2.per_pc.len(), 3);
+        // 3 channels sharing one PC take 3x the beats of one channel
+        assert!((rep1.makespan_s / rep2.makespan_s - 3.0).abs() < 1e-9);
+        // aggregate achieved bandwidth triples
+        assert!((rep2.achieved_gbs / rep1.achieved_gbs - 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn packed_layout_restores_efficiency() {
+        use crate::dialect::{Layout, LayoutField};
+        let mut b = DfgBuilder::new();
+        let a = b.channel(32, ParamType::Stream, 1024);
+        b.kernel("k", &[a], &[], Default::default());
+        b.pc(a, 0);
+        let mut m = b.finish();
+        // pack 8 × 32-bit into each 256-bit word (what Iris would emit)
+        let ch = crate::dialect::ChannelView::all(&m)[0];
+        ch.set_layout(
+            &mut m,
+            &Layout {
+                word_bits: 256,
+                depth: 128,
+                lanes: 1,
+                fields: vec![LayoutField {
+                    array: "a".into(),
+                    elem_bits: 32,
+                    count: 8,
+                    offset_bits: 0,
+                }],
+            },
+        );
+        let g = Dfg::build(&m);
+        let plat = builtin("u280").unwrap();
+        let rep = analyze_bandwidth(&m, &plat, &g);
+        assert!((rep.per_pc[0].efficiency - 1.0).abs() < 1e-9);
+        assert_eq!(rep.total_useful_bytes, 4096);
+    }
+
+    #[test]
+    fn no_pcs_means_empty_report() {
+        let m = crate::dialect::build::fig4a_module();
+        let g = Dfg::build(&m);
+        let plat = builtin("u280").unwrap();
+        let rep = analyze_bandwidth(&m, &plat, &g);
+        assert!(rep.per_pc.is_empty());
+        assert_eq!(rep.utilization, 0.0);
+    }
+}

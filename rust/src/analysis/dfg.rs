@@ -1,0 +1,187 @@
+//! DFG extraction: a graph view over the Olympus ops in a module.
+
+use std::collections::HashMap;
+
+use crate::dialect::{ChannelView, KernelView, ParamType, PcView, OP_SUPER_NODE};
+use crate::ir::{Module, OpId, ValueId};
+
+/// How a channel reaches memory.
+#[derive(Debug, Clone)]
+pub struct ChannelBinding {
+    pub channel: ChannelView,
+    /// PC terminal ops attached to this channel (empty for kernel-to-kernel).
+    pub pcs: Vec<PcView>,
+    /// Direction seen from memory: true if kernels *read* this channel
+    /// (memory → kernel), false if kernels write it (kernel → memory).
+    pub is_read: bool,
+}
+
+/// Graph view of a module's dataflow.
+pub struct Dfg {
+    /// Kernel nodes (includes super-nodes) in program order.
+    pub kernels: Vec<OpId>,
+    /// All channels in program order.
+    pub channels: Vec<ChannelView>,
+    /// Channels bound to global memory, with their PC terminals.
+    pub memory_channels: Vec<ChannelBinding>,
+    /// Channels between two kernels (on-chip).
+    pub internal_channels: Vec<ChannelView>,
+    /// channel value -> (producer kernels, consumer kernels)
+    pub endpoints: HashMap<ValueId, (Vec<OpId>, Vec<OpId>)>,
+}
+
+impl Dfg {
+    /// Build the graph view. Single pass over the ops: a one-shot use map
+    /// replaces per-channel `uses_of` scans (which made this quadratic —
+    /// see EXPERIMENTS.md §Perf).
+    pub fn build(m: &Module) -> Dfg {
+        let mut kernels: Vec<OpId> = KernelView::all(m).into_iter().map(|k| k.op).collect();
+        kernels.extend(m.top_ops_named(OP_SUPER_NODE));
+        kernels.sort_unstable();
+        let channels = ChannelView::all(m);
+        let use_map = m.use_map();
+        let mut memory_channels = Vec::new();
+        let mut internal_channels = Vec::new();
+        let mut endpoints = HashMap::new();
+        for ch in &channels {
+            let mut prod = Vec::new();
+            let mut cons = Vec::new();
+            let mut pcs: Vec<PcView> = Vec::new();
+            for &(user, idx) in use_map.get(&ch.value(m)).map(|v| v.as_slice()).unwrap_or(&[]) {
+                let op = m.op(user);
+                match op.name.as_str() {
+                    n if n == crate::dialect::OP_KERNEL || n == OP_SUPER_NODE => {
+                        let (ins, _) = op.operand_segments();
+                        if idx < ins.len() {
+                            cons.push(user);
+                        } else {
+                            prod.push(user);
+                        }
+                    }
+                    n if n == crate::dialect::OP_PC => pcs.push(PcView { op: user }),
+                    _ => {}
+                }
+            }
+            endpoints.insert(ch.value(m), (prod.clone(), cons.clone()));
+            // Iris members ride a bus channel: on-chip after the unpacker.
+            if m.op(ch.op).str_attr("via_bus").is_some() {
+                internal_channels.push(*ch);
+                continue;
+            }
+            // Iris bus channels carry an explicit direction attribute.
+            if let Some(dir) = m.op(ch.op).str_attr("direction") {
+                memory_channels.push(ChannelBinding {
+                    channel: *ch,
+                    pcs,
+                    is_read: dir == "read",
+                });
+                continue;
+            }
+            let global = prod.is_empty() || cons.is_empty()
+                || ch.param_type(m) == Some(ParamType::Complex);
+            if global {
+                memory_channels.push(ChannelBinding {
+                    channel: *ch,
+                    pcs,
+                    // no producer kernel => memory feeds the consumers
+                    is_read: prod.is_empty(),
+                });
+            } else {
+                internal_channels.push(*ch);
+            }
+        }
+        Dfg { kernels, channels, memory_channels, internal_channels, endpoints }
+    }
+
+    /// Map pc-id -> channels bound to it (only channels with PC terminals).
+    pub fn pc_assignment(&self, m: &Module) -> HashMap<u32, Vec<ChannelView>> {
+        let mut out: HashMap<u32, Vec<ChannelView>> = HashMap::new();
+        for b in &self.memory_channels {
+            for pc in &b.pcs {
+                out.entry(pc.id(m)).or_default().push(b.channel);
+            }
+        }
+        out
+    }
+
+    /// Total number of kernel nodes (flattening super-node regions).
+    pub fn compute_unit_count(&self, m: &Module) -> usize {
+        let mut n = 0;
+        for &k in &self.kernels {
+            let op = m.op(k);
+            if op.name == OP_SUPER_NODE {
+                n += op.regions.iter().map(|r| r.ops.len()).sum::<usize>();
+            } else {
+                n += 1;
+            }
+        }
+        n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dialect::build::fig4a_module;
+    use crate::dialect::DfgBuilder;
+
+    #[test]
+    fn fig4a_dfg() {
+        let m = fig4a_module();
+        let g = Dfg::build(&m);
+        assert_eq!(g.kernels.len(), 1);
+        assert_eq!(g.channels.len(), 3);
+        assert_eq!(g.memory_channels.len(), 3);
+        assert!(g.internal_channels.is_empty());
+        // a, b are reads; c is a write
+        assert!(g.memory_channels[0].is_read);
+        assert!(g.memory_channels[1].is_read);
+        assert!(!g.memory_channels[2].is_read);
+    }
+
+    #[test]
+    fn pipeline_has_internal_channel() {
+        let mut b = DfgBuilder::new();
+        let x = b.channel(32, ParamType::Stream, 64);
+        let y = b.channel(32, ParamType::Stream, 64);
+        let z = b.channel(32, ParamType::Stream, 64);
+        b.kernel("k1", &[x], &[y], Default::default());
+        b.kernel("k2", &[y], &[z], Default::default());
+        let m = b.finish();
+        let g = Dfg::build(&m);
+        assert_eq!(g.kernels.len(), 2);
+        assert_eq!(g.memory_channels.len(), 2); // x in, z out
+        assert_eq!(g.internal_channels.len(), 1); // y
+        assert_eq!(g.compute_unit_count(&m), 2);
+    }
+
+    #[test]
+    fn complex_channel_is_memory_even_with_both_endpoints() {
+        let mut b = DfgBuilder::new();
+        let x = b.channel(64, ParamType::Complex, 1 << 20);
+        let y = b.channel(32, ParamType::Stream, 64);
+        b.kernel("p", &[x], &[y], Default::default());
+        b.kernel("q", &[y, x], &[], Default::default());
+        let m = b.finish();
+        let g = Dfg::build(&m);
+        // x is complex => memory-bound regardless of endpoints
+        assert!(g
+            .memory_channels
+            .iter()
+            .any(|mc| mc.channel.value(&m) == x));
+    }
+
+    #[test]
+    fn pc_assignment_groups_by_id() {
+        let mut b = DfgBuilder::new();
+        let x = b.channel(32, ParamType::Stream, 64);
+        let y = b.channel(32, ParamType::Stream, 64);
+        b.kernel("k", &[x], &[y], Default::default());
+        b.pc(x, 3);
+        b.pc(y, 3);
+        let m = b.finish();
+        let g = Dfg::build(&m);
+        let asg = g.pc_assignment(&m);
+        assert_eq!(asg[&3].len(), 2);
+    }
+}

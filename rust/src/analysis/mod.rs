@@ -1,0 +1,11 @@
+//! Analyses (paper §V-B): bandwidth-utilization and resource-utilization
+//! estimation, plus DFG extraction shared by the transformation passes and
+//! the hardware lowering.
+
+mod bandwidth;
+mod dfg;
+mod resources;
+
+pub use bandwidth::{analyze_bandwidth, BandwidthReport, PcUsage};
+pub use dfg::{ChannelBinding, Dfg};
+pub use resources::{analyze_resources, ResourceReport};

@@ -1,0 +1,207 @@
+//! Resource-utilization analysis (paper §V-B, second analysis).
+//!
+//! Sums kernel estimates (the Fig 2 attributes) plus infrastructure
+//! overheads Olympus itself introduces when lowering: stream FIFOs, PLM
+//! buffers for `small` channels, and per-PC AXI data movers.
+
+use crate::dialect::{ChannelView, KernelView, ParamType, ResourceVec, OP_SUPER_NODE};
+use crate::ir::Module;
+use crate::platform::PlatformSpec;
+
+use super::dfg::Dfg;
+
+/// Resource accounting for a design on a platform.
+#[derive(Debug, Clone)]
+pub struct ResourceReport {
+    /// Sum of kernel (and super-node member) estimates.
+    pub kernels: ResourceVec,
+    /// FIFO + PLM + data-mover overhead.
+    pub infrastructure: ResourceVec,
+    /// kernels + infrastructure.
+    pub total: ResourceVec,
+    /// Binding utilization fraction (max over resource classes).
+    pub utilization: f64,
+    /// Name of the binding resource class.
+    pub binding: &'static str,
+    /// Largest k such that k copies of the whole design fit under the
+    /// platform's utilization limit (>= 1 when the design fits at all).
+    pub replication_headroom: u64,
+    /// True iff total fits under the platform limit.
+    pub fits: bool,
+}
+
+/// BRAM36 blocks needed for `bits` of storage (36 Kib per block).
+fn bram36_for_bits(bits: u64) -> u64 {
+    bits.div_ceil(36 * 1024)
+}
+
+/// Overhead of one AXI data mover / channel adapter.
+fn datamover_cost() -> ResourceVec {
+    // ballpark from Vitis AXI DataMover utilization reports
+    ResourceVec::new(1200, 900, 2, 0, 0)
+}
+
+/// Infrastructure cost of one channel given its role.
+fn channel_cost(m: &Module, ch: &ChannelView, is_memory: bool) -> ResourceVec {
+    // the fifo-sizing pass records a (smaller) physical FIFO depth
+    let words = m
+        .op(ch.op)
+        .int_attr("fifo_depth")
+        .map(|v| v.max(0) as u64)
+        .unwrap_or_else(|| ch.depth(m));
+    let bits = words * ch.elem_bits(m) as u64;
+    let mut cost = match ch.param_type(m) {
+        // stream => FIFO of `fifo_depth` (or `depth`) words
+        Some(ParamType::Stream) => ResourceVec::new(100, 80, bram36_for_bits(bits), 0, 0),
+        // small => PLM buffer of the full payload (random access)
+        Some(ParamType::Small) => ResourceVec::new(
+            150,
+            120,
+            bram36_for_bits(ch.depth(m) * ch.elem_bits(m) as u64),
+            0,
+            0,
+        ),
+        // complex => direct AXI port, no buffering
+        Some(ParamType::Complex) | None => ResourceVec::new(200, 160, 0, 0, 0),
+    };
+    if is_memory {
+        cost += datamover_cost();
+    }
+    cost
+}
+
+/// Analyze resource usage of the whole design.
+pub fn analyze_resources(m: &Module, plat: &PlatformSpec, dfg: &Dfg) -> ResourceReport {
+    let mut kernels = ResourceVec::ZERO;
+    for &k in &dfg.kernels {
+        let op = m.op(k);
+        if op.name == OP_SUPER_NODE {
+            for r in &op.regions {
+                for &inner in &r.ops {
+                    kernels += KernelView { op: inner }.resources(m);
+                }
+            }
+        } else {
+            kernels += KernelView { op: k }.resources(m);
+        }
+    }
+
+    let mut infra = ResourceVec::ZERO;
+    // PLM sharing (Mnemosyne) records a discount on the channel op.
+    for b in &dfg.memory_channels {
+        infra += channel_cost(m, &b.channel, true);
+    }
+    for ch in &dfg.internal_channels {
+        infra += channel_cost(m, ch, false);
+    }
+    // Discounts recorded by the PLM-sharing pass (bram saved).
+    let mut saved_bram = 0u64;
+    for ch in &dfg.channels {
+        if let Some(v) = m.op(ch.op).int_attr("plm_shared_bram_saved") {
+            saved_bram += v.max(0) as u64;
+        }
+    }
+    infra.bram = infra.bram.saturating_sub(saved_bram);
+
+    let total = kernels + infra;
+    let util = total.utilization(&plat.resources);
+    let utilization = util.max();
+    let fits = utilization <= plat.util_limit;
+    let replication_headroom = if utilization <= 0.0 {
+        u64::MAX
+    } else {
+        ((plat.util_limit / utilization).floor() as u64).max(if fits { 1 } else { 0 })
+    };
+    ResourceReport {
+        kernels,
+        infrastructure: infra,
+        total,
+        utilization,
+        binding: util.argmax(),
+        replication_headroom,
+        fits,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dialect::{DfgBuilder, KernelEst, ParamType};
+    use crate::platform::builtin;
+
+    fn build(est: KernelEst) -> (Module, Dfg) {
+        let mut b = DfgBuilder::new();
+        let a = b.channel(32, ParamType::Stream, 1024);
+        let c = b.channel(32, ParamType::Stream, 1024);
+        b.kernel("k", &[a], &[c], est);
+        b.pc(a, 0);
+        b.pc(c, 1);
+        let m = b.finish();
+        let g = Dfg::build(&m);
+        (m, g)
+    }
+
+    #[test]
+    fn sums_kernels_and_infra() {
+        let est = KernelEst {
+            latency: 10,
+            ii: 1,
+            res: ResourceVec::new(1000, 2000, 4, 0, 8),
+        };
+        let (m, g) = build(est);
+        let plat = builtin("u280").unwrap();
+        let rep = analyze_resources(&m, &plat, &g);
+        assert_eq!(rep.kernels, ResourceVec::new(1000, 2000, 4, 0, 8));
+        assert!(rep.infrastructure.ff > 0);
+        assert!(rep.infrastructure.bram >= 2); // two FIFOs
+        assert_eq!(rep.total, rep.kernels + rep.infrastructure);
+        assert!(rep.fits);
+        assert!(rep.replication_headroom > 10, "tiny kernel should replicate many times");
+    }
+
+    #[test]
+    fn headroom_shrinks_with_kernel_size() {
+        let plat = builtin("u280").unwrap();
+        let small = analyze_resources(
+            &build(KernelEst { latency: 1, ii: 1, res: ResourceVec::new(10_000, 10_000, 10, 0, 10) }).0,
+            &plat,
+            &Dfg::build(&build(KernelEst { latency: 1, ii: 1, res: ResourceVec::new(10_000, 10_000, 10, 0, 10) }).0),
+        );
+        let big = analyze_resources(
+            &build(KernelEst { latency: 1, ii: 1, res: ResourceVec::new(1_000_000, 600_000, 900, 0, 4000) }).0,
+            &plat,
+            &Dfg::build(&build(KernelEst { latency: 1, ii: 1, res: ResourceVec::new(1_000_000, 600_000, 900, 0, 4000) }).0),
+        );
+        assert!(small.replication_headroom > big.replication_headroom);
+        assert!(big.replication_headroom <= 2);
+    }
+
+    #[test]
+    fn over_capacity_does_not_fit() {
+        let plat = builtin("generic-ddr").unwrap();
+        let (m, g) = build(KernelEst {
+            latency: 1,
+            ii: 1,
+            res: ResourceVec::new(2_000_000, 2_000_000, 5_000, 0, 5_000),
+        });
+        let rep = analyze_resources(&m, &plat, &g);
+        assert!(!rep.fits);
+        assert_eq!(rep.replication_headroom, 0);
+        assert!(rep.utilization > 1.0);
+    }
+
+    #[test]
+    fn plm_share_discount_reduces_bram() {
+        let mut b = DfgBuilder::new();
+        let a = b.channel(32, ParamType::Small, 8192);
+        b.kernel("k", &[a], &[], Default::default());
+        b.pc(a, 0);
+        let mut m = b.finish();
+        let plat = builtin("u280").unwrap();
+        let before = analyze_resources(&m, &plat, &Dfg::build(&m));
+        let ch = ChannelView::all(&m)[0];
+        m.op_mut(ch.op).set_attr("plm_shared_bram_saved", crate::ir::Attribute::Int(4));
+        let after = analyze_resources(&m, &plat, &Dfg::build(&m));
+        assert_eq!(before.total.bram - after.total.bram, 4);
+    }
+}

@@ -1,0 +1,119 @@
+//! End-to-end flow (paper Fig 3).
+
+use anyhow::Result;
+
+use crate::analysis::{analyze_bandwidth, analyze_resources, BandwidthReport, Dfg, ResourceReport};
+use crate::ir::Module;
+use crate::lower::{build_architecture, emit_host_driver, emit_verilog, emit_vitis_cfg, Architecture};
+use crate::passes::manager::{parse_pipeline, PassContext, PassRecord};
+use crate::passes::{run_dse, DseReport};
+use crate::platform::PlatformSpec;
+
+/// Flow configuration.
+pub struct Flow {
+    pub platform: PlatformSpec,
+    /// Explicit pass pipeline; `None` runs the DSE loop instead.
+    pub pipeline: Option<String>,
+    /// Replication factors swept by the DSE (empty = defaults).
+    pub dse_factors: Vec<u64>,
+}
+
+/// Everything the flow produces (the purple boxes of Fig 3).
+pub struct FlowResult {
+    /// The optimized IR.
+    pub module: Module,
+    /// Per-pass execution records (explicit pipelines only).
+    pub records: Vec<PassRecord>,
+    /// DSE decision table (DSE mode only).
+    pub dse: Option<DseReport>,
+    /// Lowered architecture netlist.
+    pub arch: Architecture,
+    /// Vitis connectivity config.
+    pub cfg: String,
+    /// Structural Verilog.
+    pub verilog: String,
+    /// Generated host driver source.
+    pub driver: String,
+    /// Post-optimization analyses.
+    pub bandwidth: BandwidthReport,
+    pub resources: ResourceReport,
+}
+
+impl Flow {
+    pub fn new(platform: PlatformSpec) -> Self {
+        Flow { platform, pipeline: None, dse_factors: Vec::new() }
+    }
+
+    pub fn with_pipeline(mut self, pipeline: &str) -> Self {
+        self.pipeline = Some(pipeline.to_string());
+        self
+    }
+
+    /// Run optimize -> analyze -> lower -> emit.
+    pub fn run(&self, input: Module, app_name: &str) -> Result<FlowResult> {
+        let mut module = input;
+        let mut records = Vec::new();
+        let mut dse = None;
+        match &self.pipeline {
+            Some(p) => {
+                let mut ctx = PassContext::new(self.platform.clone());
+                let pm = parse_pipeline(p, &mut ctx)?;
+                records = pm.run(&mut module, &ctx)?;
+            }
+            None => {
+                let rep = run_dse(&module, &self.platform, &self.dse_factors)?;
+                module = rep.best.clone();
+                dse = Some(rep);
+            }
+        }
+        let dfg = Dfg::build(&module);
+        let bandwidth = analyze_bandwidth(&module, &self.platform, &dfg);
+        let resources = analyze_resources(&module, &self.platform, &dfg);
+        let arch = build_architecture(&module, &self.platform)?;
+        let cfg = emit_vitis_cfg(&arch);
+        let verilog = emit_verilog(&arch);
+        let driver = emit_host_driver(&arch, app_name);
+        Ok(FlowResult { module, records, dse, arch, cfg, verilog, driver, bandwidth, resources })
+    }
+}
+
+/// One-call convenience: pipeline `None` = DSE.
+pub fn run_flow(input: Module, platform: &PlatformSpec, pipeline: Option<&str>) -> Result<FlowResult> {
+    let mut flow = Flow::new(platform.clone());
+    if let Some(p) = pipeline {
+        flow = flow.with_pipeline(p);
+    }
+    flow.run(input, "app")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dialect::build::fig4a_module;
+    use crate::platform::builtin;
+
+    #[test]
+    fn explicit_pipeline_flow() {
+        let r = run_flow(
+            fig4a_module(),
+            &builtin("u280").unwrap(),
+            Some("sanitize, iris, channel-reassign"),
+        )
+        .unwrap();
+        assert_eq!(r.records.len(), 3);
+        assert!(r.dse.is_none());
+        assert!(!r.cfg.is_empty());
+        assert!(!r.verilog.is_empty());
+        assert!(r.bandwidth.aggregate_efficiency > 0.9);
+        assert!(r.resources.fits);
+    }
+
+    #[test]
+    fn dse_flow_picks_nontrivial_strategy() {
+        let r = run_flow(fig4a_module(), &builtin("u280").unwrap(), None).unwrap();
+        let dse = r.dse.expect("dse table");
+        assert!(dse.candidates.len() >= 6);
+        assert_ne!(dse.best_strategy, "baseline");
+        assert!(!r.arch.cus.is_empty());
+    }
+}

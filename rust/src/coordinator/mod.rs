@@ -1,0 +1,9 @@
+//! The Fig 3 flow coordinator: Olympus MLIR + platform info + kernel
+//! implementations in; optimized architecture, `.cfg`, Verilog, host driver
+//! and a simulated execution out.
+
+mod flow;
+mod report;
+
+pub use flow::{run_flow, Flow, FlowResult};
+pub use report::{flow_report_json, render_dse_table};

@@ -1,0 +1,137 @@
+//! Textual + JSON reports for the CLI and the examples.
+
+use crate::util::Json;
+
+use crate::passes::DseReport;
+
+/// Machine-readable flow report (`report.json` emitted by `olympus lower`):
+/// the design summary a downstream CI would diff against.
+pub fn flow_report_json(r: &super::flow::FlowResult) -> Json {
+    let pcs: Vec<Json> = r
+        .bandwidth
+        .per_pc
+        .iter()
+        .map(|u| {
+            Json::obj(vec![
+                ("pc", (u.pc_id as usize).into()),
+                ("beats", (u.beats as usize).into()),
+                ("useful_bytes", (u.useful_bytes as usize).into()),
+                ("efficiency", u.efficiency.into()),
+            ])
+        })
+        .collect();
+    let cus: Vec<Json> = r
+        .arch
+        .cus
+        .iter()
+        .map(|c| {
+            Json::obj(vec![
+                ("name", c.name.as_str().into()),
+                ("callee", c.callee.as_str().into()),
+                ("lane", (c.lane as usize).into()),
+                ("replica", (c.replica as usize).into()),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("platform", r.arch.platform.name.as_str().into()),
+        (
+            "bandwidth",
+            Json::obj(vec![
+                ("aggregate_efficiency", r.bandwidth.aggregate_efficiency.into()),
+                ("achieved_gbs", r.bandwidth.achieved_gbs.into()),
+                ("makespan_s", r.bandwidth.makespan_s.into()),
+                ("per_pc", Json::Arr(pcs)),
+            ]),
+        ),
+        (
+            "resources",
+            Json::obj(vec![
+                ("utilization", r.resources.utilization.into()),
+                ("binding", r.resources.binding.into()),
+                ("fits", r.resources.fits.into()),
+                ("bram", (r.resources.total.bram as usize).into()),
+                ("lut", (r.resources.total.lut as usize).into()),
+                ("ff", (r.resources.total.ff as usize).into()),
+                ("dsp", (r.resources.total.dsp as usize).into()),
+            ]),
+        ),
+        (
+            "architecture",
+            Json::obj(vec![
+                ("fifos", r.arch.fifos.len().into()),
+                ("plms", r.arch.plms.len().into()),
+                ("movers", r.arch.movers.len().into()),
+                ("axi_ports", r.arch.axi_ports.len().into()),
+                ("cus", Json::Arr(cus)),
+            ]),
+        ),
+    ])
+}
+
+/// Render the DSE decision table (strategy × metrics).
+pub fn render_dse_table(rep: &DseReport) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{:<16} {:>12} {:>12} {:>8} {:>8} {:>6} {:>5}\n",
+        "strategy", "makespan", "GB/s", "bw-eff", "util", "CUs", "fits"
+    ));
+    for c in &rep.candidates {
+        out.push_str(&format!(
+            "{:<16} {:>10.3}us {:>12.2} {:>7.1}% {:>7.1}% {:>6} {:>5}\n",
+            c.strategy,
+            c.makespan_s * 1e6,
+            c.achieved_gbs,
+            c.efficiency * 100.0,
+            c.utilization * 100.0,
+            c.compute_units,
+            if c.fits { "yes" } else { "NO" }
+        ));
+    }
+    out.push_str(&format!("best: {}\n", rep.best_strategy));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dialect::build::fig4a_module;
+    use crate::passes::run_dse;
+    use crate::platform::builtin;
+
+    #[test]
+    fn table_renders_all_candidates() {
+        let rep = run_dse(&fig4a_module(), &builtin("u280").unwrap(), &[2]).unwrap();
+        let t = render_dse_table(&rep);
+        assert!(t.contains("baseline"));
+        assert!(t.contains("best: "));
+        assert!(t.lines().count() >= rep.candidates.len() + 2);
+    }
+}
+
+#[cfg(test)]
+mod json_tests {
+    use super::*;
+    use crate::coordinator::run_flow;
+    use crate::dialect::build::fig4a_module;
+    use crate::platform::builtin;
+
+    #[test]
+    fn flow_report_is_valid_json_with_key_fields() {
+        let r = run_flow(
+            fig4a_module(),
+            &builtin("u280").unwrap(),
+            Some("sanitize, iris, channel-reassign"),
+        )
+        .unwrap();
+        let j = flow_report_json(&r);
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(parsed.get("platform").as_str(), Some("u280"));
+        assert!(parsed.get("bandwidth").get("aggregate_efficiency").as_f64().unwrap() > 0.9);
+        assert!(parsed.get("resources").get("fits") == &Json::Bool(true));
+        assert_eq!(
+            parsed.get("architecture").get("cus").as_arr().unwrap().len(),
+            r.arch.cus.len()
+        );
+    }
+}

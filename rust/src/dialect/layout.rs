@@ -1,0 +1,215 @@
+//! Channel layouts (paper Figs 4c, 7b, 8b).
+//!
+//! A layout describes how logical arrays are organized in the physical words
+//! flowing through a channel:
+//!
+//! * after **sanitize** (Fig 4c): one field, one element per word —
+//!   `word_bits == elem_bits`, depth = channel depth;
+//! * after **bus widening** (Fig 7b): `lanes > 1`, each lane carrying one
+//!   replica's elements side by side;
+//! * after **Iris** (Fig 8b): several fields of *different* arrays
+//!   interleaved in one word, possibly with an array split across positions.
+//!
+//! Serialized as a `layout` dictionary attribute on `olympus.make_channel`,
+//! so layouts survive the IR print/parse round-trip.
+
+use crate::ir::{AttrMap, Attribute};
+
+/// One array's slots within the layout word.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LayoutField {
+    /// Logical array name (e.g. `"a"`, or `"b.0"` for an Iris-split chunk).
+    pub array: String,
+    /// Element width in bits.
+    pub elem_bits: u32,
+    /// Number of consecutive elements of this array per word.
+    pub count: u32,
+    /// Bit offset of the field's first element within the word.
+    pub offset_bits: u32,
+}
+
+/// A channel data layout.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Layout {
+    /// Physical word width in bits.
+    pub word_bits: u32,
+    /// Number of words.
+    pub depth: u64,
+    /// Parallel lanes (bus widening replicates kernels per lane).
+    pub lanes: u32,
+    /// Field placements within one word.
+    pub fields: Vec<LayoutField>,
+}
+
+impl Layout {
+    /// The sanitize-stage layout: one element of width `elem_bits` per word.
+    pub fn scalar(array: &str, elem_bits: u32, depth: u64) -> Layout {
+        Layout {
+            word_bits: elem_bits,
+            depth,
+            lanes: 1,
+            fields: vec![LayoutField {
+                array: array.to_string(),
+                elem_bits,
+                count: 1,
+                offset_bits: 0,
+            }],
+        }
+    }
+
+    /// Occupied bits per word.
+    pub fn used_bits(&self) -> u32 {
+        self.fields.iter().map(|f| f.elem_bits * f.count).sum()
+    }
+
+    /// Bandwidth efficiency: occupied / word width (the paper's Iris metric).
+    pub fn efficiency(&self) -> f64 {
+        if self.word_bits == 0 {
+            return 0.0;
+        }
+        self.used_bits() as f64 / self.word_bits as f64
+    }
+
+    /// True iff no two fields overlap and all fit in the word.
+    pub fn is_valid(&self) -> bool {
+        let mut spans: Vec<(u32, u32)> = self
+            .fields
+            .iter()
+            .map(|f| (f.offset_bits, f.offset_bits + f.elem_bits * f.count))
+            .collect();
+        spans.sort_unstable();
+        for w in spans.windows(2) {
+            if w[0].1 > w[1].0 {
+                return false;
+            }
+        }
+        spans.last().map(|&(_, end)| end <= self.word_bits).unwrap_or(true)
+    }
+
+    // ---- attribute (de)serialization -------------------------------------
+
+    pub fn to_attr(&self) -> Attribute {
+        let mut d = AttrMap::new();
+        d.insert("word_bits".into(), Attribute::Int(self.word_bits as i64));
+        d.insert("depth".into(), Attribute::Int(self.depth as i64));
+        d.insert("lanes".into(), Attribute::Int(self.lanes as i64));
+        let fields = self
+            .fields
+            .iter()
+            .map(|f| {
+                let mut fd = AttrMap::new();
+                fd.insert("array".into(), Attribute::Str(f.array.clone()));
+                fd.insert("elem_bits".into(), Attribute::Int(f.elem_bits as i64));
+                fd.insert("count".into(), Attribute::Int(f.count as i64));
+                fd.insert("offset_bits".into(), Attribute::Int(f.offset_bits as i64));
+                Attribute::Dict(fd)
+            })
+            .collect();
+        d.insert("fields".into(), Attribute::Array(fields));
+        Attribute::Dict(d)
+    }
+
+    pub fn from_attr(attr: &Attribute) -> Option<Layout> {
+        let d = attr.as_dict()?;
+        let word_bits = d.get("word_bits")?.as_int()? as u32;
+        let depth = d.get("depth")?.as_int()? as u64;
+        let lanes = d.get("lanes")?.as_int()? as u32;
+        let mut fields = Vec::new();
+        for f in d.get("fields")?.as_array()? {
+            let fd = f.as_dict()?;
+            fields.push(LayoutField {
+                array: fd.get("array")?.as_str()?.to_string(),
+                elem_bits: fd.get("elem_bits")?.as_int()? as u32,
+                count: fd.get("count")?.as_int()? as u32,
+                offset_bits: fd.get("offset_bits")?.as_int()? as u32,
+            });
+        }
+        Some(Layout { word_bits, depth, lanes, fields })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_layout_fig4c() {
+        let l = Layout::scalar("a", 32, 20);
+        assert_eq!(l.word_bits, 32);
+        assert_eq!(l.depth, 20);
+        assert_eq!(l.lanes, 1);
+        assert_eq!(l.efficiency(), 1.0);
+        assert!(l.is_valid());
+    }
+
+    #[test]
+    fn interleaved_fig8b() {
+        // a (32b) + b split into two 48b chunks on a 128-bit bus
+        let l = Layout {
+            word_bits: 128,
+            depth: 100,
+            lanes: 1,
+            fields: vec![
+                LayoutField { array: "a".into(), elem_bits: 32, count: 1, offset_bits: 0 },
+                LayoutField { array: "b.0".into(), elem_bits: 48, count: 1, offset_bits: 32 },
+                LayoutField { array: "b.1".into(), elem_bits: 48, count: 1, offset_bits: 80 },
+            ],
+        };
+        assert!(l.is_valid());
+        assert_eq!(l.used_bits(), 128);
+        assert_eq!(l.efficiency(), 1.0);
+    }
+
+    #[test]
+    fn overlap_is_invalid() {
+        let l = Layout {
+            word_bits: 64,
+            depth: 1,
+            lanes: 1,
+            fields: vec![
+                LayoutField { array: "a".into(), elem_bits: 40, count: 1, offset_bits: 0 },
+                LayoutField { array: "b".into(), elem_bits: 40, count: 1, offset_bits: 32 },
+            ],
+        };
+        assert!(!l.is_valid());
+    }
+
+    #[test]
+    fn overflow_is_invalid() {
+        let l = Layout {
+            word_bits: 32,
+            depth: 1,
+            lanes: 1,
+            fields: vec![LayoutField { array: "a".into(), elem_bits: 64, count: 1, offset_bits: 0 }],
+        };
+        assert!(!l.is_valid());
+    }
+
+    #[test]
+    fn attr_roundtrip() {
+        let l = Layout {
+            word_bits: 256,
+            depth: 1024,
+            lanes: 4,
+            fields: vec![
+                LayoutField { array: "a".into(), elem_bits: 64, count: 2, offset_bits: 0 },
+                LayoutField { array: "b".into(), elem_bits: 32, count: 1, offset_bits: 128 },
+            ],
+        };
+        let attr = l.to_attr();
+        let l2 = Layout::from_attr(&attr).unwrap();
+        assert_eq!(l, l2);
+    }
+
+    #[test]
+    fn naive_padding_efficiency() {
+        // the paper's ~45% naive case: a 112-bit struct padded into 256-bit words
+        let l = Layout {
+            word_bits: 256,
+            depth: 10,
+            lanes: 1,
+            fields: vec![LayoutField { array: "s".into(), elem_bits: 112, count: 1, offset_bits: 0 }],
+        };
+        assert!((l.efficiency() - 0.4375).abs() < 1e-9);
+    }
+}

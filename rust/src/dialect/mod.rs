@@ -1,0 +1,30 @@
+//! The Olympus dialect (paper §IV).
+//!
+//! Operations:
+//! * `olympus.make_channel` — creates a `!olympus.channel<iN>` edge of the
+//!   DFG; attributes `encapsulatedType`, `paramType`
+//!   (`"stream" | "small" | "complex"`), `depth`, and (after sanitize) a
+//!   `layout` dictionary.
+//! * `olympus.kernel` — a DFG node; attributes `callee`, `latency`, `ii`,
+//!   resource estimates (`ff`, `lut`, `bram`, `uram`, `dsp`) and
+//!   `operand_segment_sizes` splitting operands into inputs/outputs.
+//! * `olympus.pc` — terminal for channels touching global memory; attribute
+//!   `id` selects the physical pseudo-channel.
+//! * `olympus.super_node` — post-bus-widening container holding replicated
+//!   kernels in its region (paper Fig 7).
+//!
+//! [`verify_dialect`] layers Olympus-specific rules on the structural
+//! verifier; typed views ([`ChannelView`], [`KernelView`], [`PcView`]) give
+//! passes ergonomic access without stringly-typed attribute code.
+
+pub mod build;
+pub mod layout;
+pub mod ops;
+pub mod resources;
+pub mod verify;
+
+pub use build::{DfgBuilder, KernelEst};
+pub use layout::{Layout, LayoutField};
+pub use ops::{ChannelView, KernelView, ParamType, PcView, OP_KERNEL, OP_MAKE_CHANNEL, OP_PC, OP_SUPER_NODE};
+pub use resources::ResourceVec;
+pub use verify::{verify_dialect, DialectError};

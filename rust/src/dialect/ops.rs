@@ -1,0 +1,275 @@
+//! Olympus op names and typed views.
+
+use crate::ir::{Attribute, Module, OpId, Type, ValueId};
+
+use super::layout::Layout;
+use super::resources::ResourceVec;
+
+pub const OP_MAKE_CHANNEL: &str = "olympus.make_channel";
+pub const OP_KERNEL: &str = "olympus.kernel";
+pub const OP_PC: &str = "olympus.pc";
+pub const OP_SUPER_NODE: &str = "olympus.super_node";
+
+/// `paramType` values (paper §IV).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ParamType {
+    /// Produced/consumed in order; small statically-sized elements;
+    /// `depth` = max FIFO depth.
+    Stream,
+    /// Random access, ≤100s of kB per kernel iteration; `depth` = #elements.
+    Small,
+    /// Anything (huge / indirect / nested); `depth` = #bytes.
+    Complex,
+}
+
+impl ParamType {
+    pub fn parse(s: &str) -> Option<ParamType> {
+        match s {
+            "stream" => Some(ParamType::Stream),
+            "small" => Some(ParamType::Small),
+            "complex" => Some(ParamType::Complex),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ParamType::Stream => "stream",
+            ParamType::Small => "small",
+            ParamType::Complex => "complex",
+        }
+    }
+}
+
+/// Typed view over an `olympus.make_channel` op.
+#[derive(Debug, Clone, Copy)]
+pub struct ChannelView {
+    pub op: OpId,
+}
+
+impl ChannelView {
+    /// All channel ops in program order.
+    pub fn all(m: &Module) -> Vec<ChannelView> {
+        m.top_ops_named(OP_MAKE_CHANNEL).into_iter().map(|op| ChannelView { op }).collect()
+    }
+
+    pub fn from_value(m: &Module, v: ValueId) -> Option<ChannelView> {
+        let op = m.defining_op(v)?;
+        (m.op(op).name == OP_MAKE_CHANNEL).then_some(ChannelView { op })
+    }
+
+    /// The SSA value of the channel.
+    pub fn value(&self, m: &Module) -> ValueId {
+        m.op(self.op).results[0]
+    }
+
+    pub fn elem_type(&self, m: &Module) -> Option<Type> {
+        m.op(self.op).type_attr("encapsulatedType").cloned()
+    }
+
+    /// Element width in bits (from the encapsulated type).
+    pub fn elem_bits(&self, m: &Module) -> u32 {
+        self.elem_type(m).and_then(|t| t.bitwidth()).unwrap_or(0)
+    }
+
+    pub fn param_type(&self, m: &Module) -> Option<ParamType> {
+        ParamType::parse(m.op(self.op).str_attr("paramType")?)
+    }
+
+    pub fn depth(&self, m: &Module) -> u64 {
+        m.op(self.op).int_attr("depth").unwrap_or(0).max(0) as u64
+    }
+
+    pub fn layout(&self, m: &Module) -> Option<Layout> {
+        Layout::from_attr(m.op(self.op).attr("layout")?)
+    }
+
+    pub fn set_layout(&self, m: &mut Module, layout: &Layout) {
+        m.op_mut(self.op).set_attr("layout", layout.to_attr());
+    }
+
+    /// Total payload in bits moved through this channel per app iteration.
+    /// stream/small: depth × elem_bits; complex: depth bytes.
+    pub fn payload_bits(&self, m: &Module) -> u64 {
+        match self.param_type(m) {
+            Some(ParamType::Complex) => self.depth(m) * 8,
+            _ => self.depth(m) * self.elem_bits(m) as u64,
+        }
+    }
+
+    /// Kernel consumers/producers of this channel, via operand segments.
+    /// Returns (producers, consumers) as kernel op ids.
+    pub fn endpoints(&self, m: &Module) -> (Vec<OpId>, Vec<OpId>) {
+        let v = self.value(m);
+        let mut producers = Vec::new();
+        let mut consumers = Vec::new();
+        for (user, idx) in m.uses_of(v) {
+            let op = m.op(user);
+            if op.name != OP_KERNEL && op.name != OP_SUPER_NODE {
+                continue;
+            }
+            let (ins, _) = op.operand_segments();
+            if idx < ins.len() {
+                consumers.push(user); // channel is an *input* to the kernel
+            } else {
+                producers.push(user); // channel is an *output* of the kernel
+            }
+        }
+        (producers, consumers)
+    }
+
+    /// A channel is *global* when it is not connected to kernels on both
+    /// sides (paper §V-A): those channels get `olympus.pc` terminals.
+    pub fn is_global(&self, m: &Module) -> bool {
+        let (p, c) = self.endpoints(m);
+        p.is_empty() || c.is_empty()
+    }
+
+    /// The `olympus.pc` ops attached to this channel.
+    pub fn pcs(&self, m: &Module) -> Vec<OpId> {
+        m.uses_of(self.value(m))
+            .into_iter()
+            .filter(|(u, _)| m.op(*u).name == OP_PC)
+            .map(|(u, _)| u)
+            .collect()
+    }
+}
+
+/// Typed view over an `olympus.kernel` op.
+#[derive(Debug, Clone, Copy)]
+pub struct KernelView {
+    pub op: OpId,
+}
+
+impl KernelView {
+    pub fn all(m: &Module) -> Vec<KernelView> {
+        m.top_ops_named(OP_KERNEL).into_iter().map(|op| KernelView { op }).collect()
+    }
+
+    pub fn callee(&self, m: &Module) -> String {
+        m.op(self.op).str_attr("callee").unwrap_or("").to_string()
+    }
+
+    pub fn latency(&self, m: &Module) -> u64 {
+        m.op(self.op).int_attr("latency").unwrap_or(1).max(1) as u64
+    }
+
+    /// Initiation interval in cycles.
+    pub fn ii(&self, m: &Module) -> u64 {
+        m.op(self.op).int_attr("ii").unwrap_or(1).max(1) as u64
+    }
+
+    pub fn resources(&self, m: &Module) -> ResourceVec {
+        let g = |k: &str| m.op(self.op).int_attr(k).unwrap_or(0).max(0) as u64;
+        ResourceVec::new(g("ff"), g("lut"), g("bram"), g("uram"), g("dsp"))
+    }
+
+    /// (input channels, output channels).
+    pub fn io(&self, m: &Module) -> (Vec<ValueId>, Vec<ValueId>) {
+        m.op(self.op).operand_segments()
+    }
+}
+
+/// Typed view over an `olympus.pc` op.
+#[derive(Debug, Clone, Copy)]
+pub struct PcView {
+    pub op: OpId,
+}
+
+impl PcView {
+    pub fn all(m: &Module) -> Vec<PcView> {
+        m.top_ops_named(OP_PC).into_iter().map(|op| PcView { op }).collect()
+    }
+
+    /// Physical pseudo-channel id.
+    pub fn id(&self, m: &Module) -> u32 {
+        m.op(self.op).int_attr("id").unwrap_or(0).max(0) as u32
+    }
+
+    pub fn set_id(&self, m: &mut Module, id: u32) {
+        m.op_mut(self.op).set_attr("id", Attribute::Int(id as i64));
+    }
+
+    /// The channel this PC terminates.
+    pub fn channel(&self, m: &Module) -> Option<ChannelView> {
+        let v = *m.op(self.op).operands.first()?;
+        ChannelView::from_value(m, v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::parse_module;
+
+    const DFG: &str = r#"
+%a = "olympus.make_channel"() {encapsulatedType = i32, paramType = "stream", depth = 1024} : () -> (!olympus.channel<i32>)
+%b = "olympus.make_channel"() {encapsulatedType = i32, paramType = "stream", depth = 1024} : () -> (!olympus.channel<i32>)
+%c = "olympus.make_channel"() {encapsulatedType = i32, paramType = "stream", depth = 1024} : () -> (!olympus.channel<i32>)
+"olympus.kernel"(%a, %b, %c) {callee = "vecadd_1024", latency = 1060, ii = 1, ff = 4316, lut = 5373, bram = 2, uram = 0, dsp = 0, operand_segment_sizes = array<i32: 2, 1>} : (!olympus.channel<i32>, !olympus.channel<i32>, !olympus.channel<i32>) -> ()
+"#;
+
+    #[test]
+    fn channel_views() {
+        let m = parse_module(DFG).unwrap();
+        let chans = ChannelView::all(&m);
+        assert_eq!(chans.len(), 3);
+        assert_eq!(chans[0].elem_bits(&m), 32);
+        assert_eq!(chans[0].param_type(&m), Some(ParamType::Stream));
+        assert_eq!(chans[0].depth(&m), 1024);
+        assert_eq!(chans[0].payload_bits(&m), 1024 * 32);
+        assert!(chans[0].layout(&m).is_none());
+    }
+
+    #[test]
+    fn endpoints_and_globality() {
+        let m = parse_module(DFG).unwrap();
+        let chans = ChannelView::all(&m);
+        // a, b: inputs to the kernel, no producer kernel -> global
+        let (p, c) = chans[0].endpoints(&m);
+        assert!(p.is_empty());
+        assert_eq!(c.len(), 1);
+        assert!(chans[0].is_global(&m));
+        // c: output of the kernel, no consumer -> global
+        let (p, c) = chans[2].endpoints(&m);
+        assert_eq!(p.len(), 1);
+        assert!(c.is_empty());
+        assert!(chans[2].is_global(&m));
+    }
+
+    #[test]
+    fn kernel_view() {
+        let m = parse_module(DFG).unwrap();
+        let k = KernelView::all(&m)[0];
+        assert_eq!(k.callee(&m), "vecadd_1024");
+        assert_eq!(k.latency(&m), 1060);
+        assert_eq!(k.ii(&m), 1);
+        assert_eq!(k.resources(&m), ResourceVec::new(4316, 5373, 2, 0, 0));
+        let (ins, outs) = k.io(&m);
+        assert_eq!(ins.len(), 2);
+        assert_eq!(outs.len(), 1);
+    }
+
+    #[test]
+    fn internal_channel_not_global() {
+        let src = r#"
+%x = "olympus.make_channel"() {encapsulatedType = i32, paramType = "stream", depth = 16} : () -> (!olympus.channel<i32>)
+%y = "olympus.make_channel"() {encapsulatedType = i32, paramType = "stream", depth = 16} : () -> (!olympus.channel<i32>)
+"olympus.kernel"(%x, %y) {callee = "p", operand_segment_sizes = array<i32: 1, 1>} : (!olympus.channel<i32>, !olympus.channel<i32>) -> ()
+"olympus.kernel"(%y) {callee = "q", operand_segment_sizes = array<i32: 1, 0>} : (!olympus.channel<i32>) -> ()
+"#;
+        let m = parse_module(src).unwrap();
+        let chans = ChannelView::all(&m);
+        assert!(chans[0].is_global(&m)); // x: consumed only
+        assert!(!chans[1].is_global(&m)); // y: produced by p, consumed by q
+    }
+
+    #[test]
+    fn param_type_parse() {
+        assert_eq!(ParamType::parse("stream"), Some(ParamType::Stream));
+        assert_eq!(ParamType::parse("small"), Some(ParamType::Small));
+        assert_eq!(ParamType::parse("complex"), Some(ParamType::Complex));
+        assert_eq!(ParamType::parse("other"), None);
+        assert_eq!(ParamType::Stream.as_str(), "stream");
+    }
+}

@@ -1,0 +1,176 @@
+//! FPGA resource vectors: (ff, lut, bram, uram, dsp).
+//!
+//! Used both by `olympus.kernel` estimates (paper Fig 2) and platform
+//! capacity specs (paper §V-B).
+
+use std::fmt;
+use std::ops::{Add, AddAssign, Mul};
+
+/// A quantity of each FPGA resource class.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct ResourceVec {
+    pub ff: u64,
+    pub lut: u64,
+    pub bram: u64,
+    pub uram: u64,
+    pub dsp: u64,
+}
+
+impl ResourceVec {
+    pub const ZERO: ResourceVec = ResourceVec { ff: 0, lut: 0, bram: 0, uram: 0, dsp: 0 };
+
+    pub fn new(ff: u64, lut: u64, bram: u64, uram: u64, dsp: u64) -> Self {
+        ResourceVec { ff, lut, bram, uram, dsp }
+    }
+
+    /// Element-wise utilization fractions against a capacity vector.
+    /// Classes with zero capacity count as 0 when usage is 0, else 1 (infeasible).
+    pub fn utilization(&self, capacity: &ResourceVec) -> UtilVec {
+        let frac = |use_, cap| {
+            if cap == 0 {
+                if use_ == 0 {
+                    0.0
+                } else {
+                    f64::INFINITY
+                }
+            } else {
+                use_ as f64 / cap as f64
+            }
+        };
+        UtilVec {
+            ff: frac(self.ff, capacity.ff),
+            lut: frac(self.lut, capacity.lut),
+            bram: frac(self.bram, capacity.bram),
+            uram: frac(self.uram, capacity.uram),
+            dsp: frac(self.dsp, capacity.dsp),
+        }
+    }
+
+    /// True iff every class fits within `capacity * limit`.
+    pub fn fits(&self, capacity: &ResourceVec, limit: f64) -> bool {
+        self.utilization(capacity).max() <= limit
+    }
+
+    pub fn saturating_sub(&self, other: &ResourceVec) -> ResourceVec {
+        ResourceVec {
+            ff: self.ff.saturating_sub(other.ff),
+            lut: self.lut.saturating_sub(other.lut),
+            bram: self.bram.saturating_sub(other.bram),
+            uram: self.uram.saturating_sub(other.uram),
+            dsp: self.dsp.saturating_sub(other.dsp),
+        }
+    }
+}
+
+impl Add for ResourceVec {
+    type Output = ResourceVec;
+    fn add(self, o: ResourceVec) -> ResourceVec {
+        ResourceVec {
+            ff: self.ff + o.ff,
+            lut: self.lut + o.lut,
+            bram: self.bram + o.bram,
+            uram: self.uram + o.uram,
+            dsp: self.dsp + o.dsp,
+        }
+    }
+}
+
+impl AddAssign for ResourceVec {
+    fn add_assign(&mut self, o: ResourceVec) {
+        *self = *self + o;
+    }
+}
+
+impl Mul<u64> for ResourceVec {
+    type Output = ResourceVec;
+    fn mul(self, k: u64) -> ResourceVec {
+        ResourceVec {
+            ff: self.ff * k,
+            lut: self.lut * k,
+            bram: self.bram * k,
+            uram: self.uram * k,
+            dsp: self.dsp * k,
+        }
+    }
+}
+
+impl fmt::Display for ResourceVec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "ff={} lut={} bram={} uram={} dsp={}",
+            self.ff, self.lut, self.bram, self.uram, self.dsp
+        )
+    }
+}
+
+/// Per-class utilization fractions.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct UtilVec {
+    pub ff: f64,
+    pub lut: f64,
+    pub bram: f64,
+    pub uram: f64,
+    pub dsp: f64,
+}
+
+impl UtilVec {
+    /// The binding (max) utilization across classes.
+    pub fn max(&self) -> f64 {
+        self.ff.max(self.lut).max(self.bram).max(self.uram).max(self.dsp)
+    }
+
+    /// Name of the binding resource class.
+    pub fn argmax(&self) -> &'static str {
+        let pairs = [
+            ("ff", self.ff),
+            ("lut", self.lut),
+            ("bram", self.bram),
+            ("uram", self.uram),
+            ("dsp", self.dsp),
+        ];
+        pairs
+            .iter()
+            .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .map(|(n, _)| *n)
+            .unwrap()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arithmetic() {
+        let a = ResourceVec::new(1, 2, 3, 4, 5);
+        let b = ResourceVec::new(10, 20, 30, 40, 50);
+        assert_eq!(a + b, ResourceVec::new(11, 22, 33, 44, 55));
+        assert_eq!(a * 3, ResourceVec::new(3, 6, 9, 12, 15));
+        assert_eq!(b.saturating_sub(&a), ResourceVec::new(9, 18, 27, 36, 45));
+        assert_eq!(a.saturating_sub(&b), ResourceVec::ZERO);
+    }
+
+    #[test]
+    fn utilization_and_fit() {
+        let usage = ResourceVec::new(50, 50, 10, 0, 0);
+        let cap = ResourceVec::new(100, 200, 10, 0, 10);
+        let u = usage.utilization(&cap);
+        assert_eq!(u.ff, 0.5);
+        assert_eq!(u.lut, 0.25);
+        assert_eq!(u.bram, 1.0);
+        assert_eq!(u.uram, 0.0);
+        assert_eq!(u.max(), 1.0);
+        assert_eq!(u.argmax(), "bram");
+        assert!(usage.fits(&cap, 1.0));
+        assert!(!usage.fits(&cap, 0.8));
+    }
+
+    #[test]
+    fn zero_capacity_with_usage_is_infeasible() {
+        let usage = ResourceVec::new(0, 0, 0, 1, 0);
+        let cap = ResourceVec::new(1, 1, 1, 0, 1);
+        assert!(usage.utilization(&cap).max().is_infinite());
+        assert!(!usage.fits(&cap, 0.99));
+    }
+}

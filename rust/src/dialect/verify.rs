@@ -1,0 +1,225 @@
+//! Olympus dialect verifier: rules beyond structural SSA validity.
+
+use thiserror::Error;
+
+use crate::ir::{Module, OpId, Type};
+
+use super::layout::Layout;
+use super::ops::{ChannelView, ParamType, PcView, OP_KERNEL, OP_MAKE_CHANNEL, OP_PC, OP_SUPER_NODE};
+
+/// Dialect-level diagnostic.
+#[derive(Debug, Error, PartialEq)]
+pub enum DialectError {
+    #[error("make_channel {0:?}: missing/invalid encapsulatedType (must be iN)")]
+    BadEncapsulatedType(OpId),
+    #[error("make_channel {0:?}: paramType '{1}' is not stream|small|complex")]
+    BadParamType(OpId, String),
+    #[error("make_channel {0:?}: depth must be >= 1")]
+    BadDepth(OpId),
+    #[error("make_channel {0:?}: result type {1} disagrees with encapsulatedType {2}")]
+    ChannelTypeMismatch(OpId, String, String),
+    #[error("make_channel {0:?}: layout attribute malformed or inconsistent")]
+    BadLayout(OpId),
+    #[error("kernel {0:?}: missing callee")]
+    MissingCallee(OpId),
+    #[error("kernel {0:?}: operand_segment_sizes does not cover all operands")]
+    BadSegments(OpId),
+    #[error("kernel {0:?}: operand {1} is not a channel value")]
+    NonChannelOperand(OpId, usize),
+    #[error("pc {0:?}: must have exactly one channel operand")]
+    PcArity(OpId),
+    #[error("pc {0:?}: operand is not a global-memory channel")]
+    PcOnInternalChannel(OpId),
+    #[error("pc {0:?}: negative id")]
+    PcBadId(OpId),
+    #[error("unknown olympus op '{1}' ({0:?})")]
+    UnknownOp(OpId, String),
+}
+
+/// Check every Olympus op in `m`; returns all diagnostics (empty == ok).
+///
+/// `strict_pc` additionally requires PC operands to be global channels —
+/// true for post-sanitize IR, false while the user is still hand-writing IR.
+pub fn verify_dialect(m: &Module, strict_pc: bool) -> Vec<DialectError> {
+    let mut errs = Vec::new();
+    let all: Vec<OpId> = m.all_ops().collect();
+    for id in all {
+        let op = m.op(id);
+        if op.dialect() != "olympus" {
+            continue;
+        }
+        match op.name.as_str() {
+            OP_MAKE_CHANNEL => verify_channel(m, id, &mut errs),
+            OP_KERNEL | OP_SUPER_NODE => verify_kernel(m, id, &mut errs),
+            OP_PC => verify_pc(m, id, strict_pc, &mut errs),
+            other => errs.push(DialectError::UnknownOp(id, other.to_string())),
+        }
+    }
+    errs
+}
+
+fn verify_channel(m: &Module, id: OpId, errs: &mut Vec<DialectError>) {
+    let op = m.op(id);
+    let enc = match op.type_attr("encapsulatedType") {
+        Some(Type::Integer(w)) if *w > 0 => Some(*w),
+        _ => {
+            errs.push(DialectError::BadEncapsulatedType(id));
+            None
+        }
+    };
+    match op.str_attr("paramType") {
+        Some(s) if ParamType::parse(s).is_some() => {}
+        Some(s) => errs.push(DialectError::BadParamType(id, s.to_string())),
+        None => errs.push(DialectError::BadParamType(id, "<missing>".to_string())),
+    }
+    if op.int_attr("depth").unwrap_or(0) < 1 {
+        errs.push(DialectError::BadDepth(id));
+    }
+    // result type must be !olympus.channel<encapsulatedType> — except after
+    // bus widening, where the channel type is widened while encapsulatedType
+    // stays the logical element (lanes recorded in the layout).
+    if let (Some(w), Some(&res)) = (enc, op.results.first()) {
+        let want = Type::channel_of(Type::int(w));
+        let got = m.value_type(res);
+        let lanes = ChannelView { op: id }.layout(m).map(|l| l.lanes).unwrap_or(1);
+        let want_widened = Type::channel_of(Type::int(w * lanes));
+        if *got != want && *got != want_widened {
+            errs.push(DialectError::ChannelTypeMismatch(id, got.to_string(), want.to_string()));
+        }
+    }
+    if let Some(attr) = op.attr("layout") {
+        match Layout::from_attr(attr) {
+            Some(l) if l.is_valid() => {}
+            _ => errs.push(DialectError::BadLayout(id)),
+        }
+    }
+}
+
+fn verify_kernel(m: &Module, id: OpId, errs: &mut Vec<DialectError>) {
+    let op = m.op(id);
+    if op.name == OP_KERNEL && op.str_attr("callee").map(|s| s.is_empty()).unwrap_or(true) {
+        errs.push(DialectError::MissingCallee(id));
+    }
+    if let Some(seg) = op.attr("operand_segment_sizes").and_then(|a| a.as_dense_i32()) {
+        let sum: i64 = seg.iter().map(|&x| x as i64).sum();
+        if seg.len() != 2 || sum != op.operands.len() as i64 || seg.iter().any(|&x| x < 0) {
+            errs.push(DialectError::BadSegments(id));
+        }
+    }
+    for (i, &v) in op.operands.iter().enumerate() {
+        if !m.value_type(v).is_channel() {
+            errs.push(DialectError::NonChannelOperand(id, i));
+        }
+    }
+}
+
+fn verify_pc(m: &Module, id: OpId, strict: bool, errs: &mut Vec<DialectError>) {
+    let op = m.op(id);
+    if op.operands.len() != 1 {
+        errs.push(DialectError::PcArity(id));
+        return;
+    }
+    if op.int_attr("id").unwrap_or(0) < 0 {
+        errs.push(DialectError::PcBadId(id));
+    }
+    let v = op.operands[0];
+    if !m.value_type(v).is_channel() {
+        errs.push(DialectError::PcArity(id));
+        return;
+    }
+    if strict {
+        if let Some(ch) = ChannelView::from_value(m, v) {
+            if !ch.is_global(m) && ch.param_type(m) != Some(ParamType::Complex) {
+                errs.push(DialectError::PcOnInternalChannel(id));
+            }
+        }
+    }
+    let _ = PcView { op: id };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dialect::build::fig4a_module;
+    use crate::ir::parse_module;
+
+    #[test]
+    fn fig4a_is_clean() {
+        assert!(verify_dialect(&fig4a_module(), false).is_empty());
+    }
+
+    #[test]
+    fn rejects_bad_param_type() {
+        let src = r#"%0 = "olympus.make_channel"() {encapsulatedType = i32, paramType = "bulk", depth = 4} : () -> (!olympus.channel<i32>)"#;
+        let m = parse_module(src).unwrap();
+        let errs = verify_dialect(&m, false);
+        assert!(errs.iter().any(|e| matches!(e, DialectError::BadParamType(..))), "{errs:?}");
+    }
+
+    #[test]
+    fn rejects_missing_depth() {
+        let src = r#"%0 = "olympus.make_channel"() {encapsulatedType = i32, paramType = "stream"} : () -> (!olympus.channel<i32>)"#;
+        let m = parse_module(src).unwrap();
+        assert!(verify_dialect(&m, false)
+            .iter()
+            .any(|e| matches!(e, DialectError::BadDepth(_))));
+    }
+
+    #[test]
+    fn rejects_type_mismatch() {
+        let src = r#"%0 = "olympus.make_channel"() {encapsulatedType = i64, paramType = "stream", depth = 4} : () -> (!olympus.channel<i32>)"#;
+        let m = parse_module(src).unwrap();
+        assert!(verify_dialect(&m, false)
+            .iter()
+            .any(|e| matches!(e, DialectError::ChannelTypeMismatch(..))));
+    }
+
+    #[test]
+    fn rejects_missing_callee() {
+        let src = r#"
+%0 = "olympus.make_channel"() {encapsulatedType = i32, paramType = "stream", depth = 4} : () -> (!olympus.channel<i32>)
+"olympus.kernel"(%0) {latency = 5} : (!olympus.channel<i32>) -> ()
+"#;
+        let m = parse_module(src).unwrap();
+        assert!(verify_dialect(&m, false)
+            .iter()
+            .any(|e| matches!(e, DialectError::MissingCallee(_))));
+    }
+
+    #[test]
+    fn rejects_bad_segments() {
+        let src = r#"
+%0 = "olympus.make_channel"() {encapsulatedType = i32, paramType = "stream", depth = 4} : () -> (!olympus.channel<i32>)
+"olympus.kernel"(%0) {callee = "k", operand_segment_sizes = array<i32: 2, 1>} : (!olympus.channel<i32>) -> ()
+"#;
+        let m = parse_module(src).unwrap();
+        assert!(verify_dialect(&m, false)
+            .iter()
+            .any(|e| matches!(e, DialectError::BadSegments(_))));
+    }
+
+    #[test]
+    fn rejects_unknown_olympus_op() {
+        let src = r#""olympus.mystery"() : () -> ()"#;
+        let m = parse_module(src).unwrap();
+        assert!(verify_dialect(&m, false)
+            .iter()
+            .any(|e| matches!(e, DialectError::UnknownOp(..))));
+    }
+
+    #[test]
+    fn strict_pc_on_internal_channel() {
+        let src = r#"
+%x = "olympus.make_channel"() {encapsulatedType = i32, paramType = "stream", depth = 16} : () -> (!olympus.channel<i32>)
+"olympus.kernel"(%x) {callee = "p", operand_segment_sizes = array<i32: 0, 1>} : (!olympus.channel<i32>) -> ()
+"olympus.kernel"(%x) {callee = "q", operand_segment_sizes = array<i32: 1, 0>} : (!olympus.channel<i32>) -> ()
+"olympus.pc"(%x) {id = 0} : (!olympus.channel<i32>) -> ()
+"#;
+        let m = parse_module(src).unwrap();
+        assert!(verify_dialect(&m, true)
+            .iter()
+            .any(|e| matches!(e, DialectError::PcOnInternalChannel(_))));
+        // non-strict accepts it
+        assert!(verify_dialect(&m, false).is_empty());
+    }
+}

@@ -1,0 +1,144 @@
+//! The simulated device handle.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::lower::{Architecture, MoverDir};
+use crate::runtime::KernelRegistry;
+use crate::sim::{SimMetrics, Simulator};
+
+/// A programmed device: architecture + kernel binaries, ready to run.
+///
+/// Mirrors the XRT flow: `program` ≈ `xclLoadXclbin`, `write_buffer` ≈
+/// `clCreateBuffer` + `clEnqueueMigrateMemObjects`, `run` ≈
+/// `clEnqueueTask`, `read_buffer` ≈ migrate-back.
+pub struct Device {
+    arch: Architecture,
+    registry: KernelRegistry,
+    buffers: HashMap<String, Vec<f32>>,
+    outputs: HashMap<String, Vec<f32>>,
+    last_metrics: Option<SimMetrics>,
+    utilization: f64,
+}
+
+impl Device {
+    /// "Load the bitstream": validate the architecture against the kernel
+    /// manifest and return a device handle.
+    pub fn program(arch: Architecture, registry: KernelRegistry) -> Result<Device> {
+        let dev = Device {
+            arch,
+            registry,
+            buffers: HashMap::new(),
+            outputs: HashMap::new(),
+            last_metrics: None,
+            utilization: 0.0,
+        };
+        Simulator::new(&dev.arch, &dev.registry).validate()?;
+        Ok(dev)
+    }
+
+    /// Record resource utilization (from `analyze_resources`) so the timing
+    /// model can apply the congestion derate.
+    pub fn set_utilization(&mut self, utilization: f64) {
+        self.utilization = utilization;
+    }
+
+    /// Readable names of the device's memory-facing channels.
+    pub fn channel_names(&self) -> Vec<&str> {
+        let mut names: Vec<&str> = self.arch.memory_bindings.keys().map(|s| s.as_str()).collect();
+        names.sort_unstable();
+        names
+    }
+
+    /// Create + fill an on-device buffer bound to channel `name`.
+    pub fn write_buffer(&mut self, name: &str, data: &[f32]) -> Result<()> {
+        if !self.arch.memory_bindings.contains_key(name) {
+            bail!(
+                "channel '{name}' is not a memory-facing channel (have: {:?})",
+                self.channel_names()
+            );
+        }
+        self.buffers.insert(name.to_string(), data.to_vec());
+        Ok(())
+    }
+
+    /// Execute one app iteration; returns the run's metrics.
+    pub fn run(&mut self) -> Result<SimMetrics> {
+        // read channels = read movers' base fields
+        for mv in &self.arch.movers {
+            if mv.dir != MoverDir::Read {
+                continue;
+            }
+            for (field, _) in &mv.routes {
+                let base = field.split('.').next().unwrap_or(field);
+                if !self.buffers.contains_key(base) {
+                    bail!("read channel '{base}' has no host buffer (call write_buffer first)");
+                }
+            }
+        }
+        let sim = Simulator {
+            arch: &self.arch,
+            registry: &self.registry,
+            congestion_model: true,
+            utilization: self.utilization,
+        };
+        let out = sim.run(&self.buffers)?;
+        self.outputs = out.outputs;
+        self.last_metrics = Some(out.metrics.clone());
+        Ok(out.metrics)
+    }
+
+    /// Read back an output buffer produced by the last `run`.
+    pub fn read_buffer(&self, name: &str) -> Result<Vec<f32>> {
+        self.outputs
+            .get(name)
+            .cloned()
+            .with_context(|| {
+                format!(
+                    "no output for channel '{name}' (outputs: {:?})",
+                    self.outputs.keys().collect::<Vec<_>>()
+                )
+            })
+    }
+
+    /// Execute `n` app iterations back-to-back (the steady-state serving
+    /// loop of the generated host API); returns aggregate metrics: summed
+    /// makespan/bytes, per-iteration mean throughput.
+    pub fn run_iterations(&mut self, n: usize) -> Result<SimMetrics> {
+        if n == 0 {
+            bail!("run_iterations(0)");
+        }
+        let mut agg: Option<SimMetrics> = None;
+        for _ in 0..n {
+            let m = self.run()?;
+            match &mut agg {
+                None => agg = Some(m),
+                Some(a) => {
+                    a.makespan_s += m.makespan_s;
+                    a.mem_time_s += m.mem_time_s;
+                    a.compute_time_s += m.compute_time_s;
+                    a.total_bytes += m.total_bytes;
+                    a.sim_wall_s += m.sim_wall_s;
+                }
+            }
+        }
+        let mut a = agg.unwrap();
+        a.achieved_gbs = if a.makespan_s > 0.0 {
+            a.total_bytes as f64 / a.makespan_s / 1e9
+        } else {
+            0.0
+        };
+        self.last_metrics = Some(a.clone());
+        Ok(a)
+    }
+
+    /// Metrics of the last run.
+    pub fn metrics(&self) -> Option<&SimMetrics> {
+        self.last_metrics.as_ref()
+    }
+
+    pub fn architecture(&self) -> &Architecture {
+        &self.arch
+    }
+}

@@ -1,0 +1,8 @@
+//! Host runtime (paper §V-C host API): the generated driver's verbs —
+//! device init, buffer create/migrate, kernel execution — implemented over
+//! the platform simulator. On a real Alveo these calls map 1:1 onto the
+//! OpenCL/XRT methods the paper's generated library uses.
+
+mod device;
+
+pub use device::Device;

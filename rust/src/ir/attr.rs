@@ -1,0 +1,242 @@
+//! Attributes: compile-time-constant op metadata.
+//!
+//! Covers the attribute kinds the Olympus dialect uses (Figures 1–2 of the
+//! paper) plus arrays/dicts so layouts and platform annotations compose:
+//! `depth = 20`, `paramType = "stream"`, `encapsulatedType = i32`,
+//! `operand_segment_sizes = array<i32: 2, 1>`, nested layout dictionaries.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+use super::types::Type;
+
+/// Attribute map with deterministic (sorted) iteration order.
+pub type AttrMap = BTreeMap<String, Attribute>;
+
+/// An attribute value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Attribute {
+    /// `42 : i64` (the type suffix is implicit i64 when printed bare).
+    Int(i64),
+    /// `1.5 : f64`.
+    Float(f64),
+    /// `"stream"`.
+    Str(String),
+    /// `true` / `false`.
+    Bool(bool),
+    /// A type used as an attribute, e.g. `encapsulatedType = i32`.
+    Type(Type),
+    /// `[a, b, c]`.
+    Array(Vec<Attribute>),
+    /// `{k = v, ...}`.
+    Dict(AttrMap),
+    /// `array<i32: 2, 1>` — dense integer array (operand_segment_sizes).
+    DenseI32(Vec<i32>),
+    /// Unit attribute (presence-only flag).
+    Unit,
+}
+
+impl Attribute {
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Attribute::Int(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    pub fn as_u64(&self) -> Option<u64> {
+        self.as_int().filter(|v| *v >= 0).map(|v| v as u64)
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_int().filter(|v| *v >= 0).map(|v| v as usize)
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Attribute::Float(v) => Some(*v),
+            Attribute::Int(v) => Some(*v as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Attribute::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_type(&self) -> Option<&Type> {
+        match self {
+            Attribute::Type(t) => Some(t),
+            _ => None,
+        }
+    }
+
+    pub fn as_array(&self) -> Option<&[Attribute]> {
+        match self {
+            Attribute::Array(a) => Some(a),
+            _ => None,
+        }
+    }
+
+    pub fn as_dict(&self) -> Option<&AttrMap> {
+        match self {
+            Attribute::Dict(d) => Some(d),
+            _ => None,
+        }
+    }
+
+    pub fn as_dense_i32(&self) -> Option<&[i32]> {
+        match self {
+            Attribute::DenseI32(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+impl From<i64> for Attribute {
+    fn from(v: i64) -> Self {
+        Attribute::Int(v)
+    }
+}
+impl From<usize> for Attribute {
+    fn from(v: usize) -> Self {
+        Attribute::Int(v as i64)
+    }
+}
+impl From<u32> for Attribute {
+    fn from(v: u32) -> Self {
+        Attribute::Int(v as i64)
+    }
+}
+impl From<&str> for Attribute {
+    fn from(v: &str) -> Self {
+        Attribute::Str(v.to_string())
+    }
+}
+impl From<String> for Attribute {
+    fn from(v: String) -> Self {
+        Attribute::Str(v)
+    }
+}
+impl From<bool> for Attribute {
+    fn from(v: bool) -> Self {
+        Attribute::Bool(v)
+    }
+}
+impl From<Type> for Attribute {
+    fn from(v: Type) -> Self {
+        Attribute::Type(v)
+    }
+}
+impl From<f64> for Attribute {
+    fn from(v: f64) -> Self {
+        Attribute::Float(v)
+    }
+}
+
+fn escape_str(s: &str, out: &mut fmt::Formatter<'_>) -> fmt::Result {
+    write!(out, "\"")?;
+    for c in s.chars() {
+        match c {
+            '"' => write!(out, "\\\"")?,
+            '\\' => write!(out, "\\\\")?,
+            '\n' => write!(out, "\\n")?,
+            '\t' => write!(out, "\\t")?,
+            c => write!(out, "{c}")?,
+        }
+    }
+    write!(out, "\"")
+}
+
+impl fmt::Display for Attribute {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Attribute::Int(v) => write!(f, "{v}"),
+            Attribute::Float(v) => {
+                if v.fract() == 0.0 && v.is_finite() {
+                    write!(f, "{v:.6e}")
+                } else {
+                    write!(f, "{v}")
+                }
+            }
+            Attribute::Str(s) => escape_str(s, f),
+            Attribute::Bool(b) => write!(f, "{b}"),
+            Attribute::Type(t) => write!(f, "{t}"),
+            Attribute::Array(a) => {
+                write!(f, "[")?;
+                for (i, x) in a.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, ", ")?;
+                    }
+                    write!(f, "{x}")?;
+                }
+                write!(f, "]")
+            }
+            Attribute::Dict(d) => {
+                write!(f, "{{")?;
+                for (i, (k, v)) in d.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, ", ")?;
+                    }
+                    write!(f, "{k} = {v}")?;
+                }
+                write!(f, "}}")
+            }
+            Attribute::DenseI32(v) => {
+                // MLIR dense-array syntax: `array<i32: 2, 1>` (empty: `array<i32>`).
+                write!(f, "array<i32")?;
+                for (i, x) in v.iter().enumerate() {
+                    if i == 0 {
+                        write!(f, ": {x}")?;
+                    } else {
+                        write!(f, ", {x}")?;
+                    }
+                }
+                write!(f, ">")
+            }
+            Attribute::Unit => write!(f, "unit"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accessors() {
+        assert_eq!(Attribute::Int(7).as_int(), Some(7));
+        assert_eq!(Attribute::Int(-1).as_u64(), None);
+        assert_eq!(Attribute::Str("s".into()).as_str(), Some("s"));
+        assert_eq!(Attribute::Type(Type::int(32)).as_type(), Some(&Type::int(32)));
+        assert_eq!(Attribute::DenseI32(vec![2, 1]).as_dense_i32(), Some(&[2, 1][..]));
+    }
+
+    #[test]
+    fn display_dense_array() {
+        assert_eq!(Attribute::DenseI32(vec![2, 1]).to_string(), "array<i32: 2, 1>");
+        assert_eq!(Attribute::DenseI32(vec![]).to_string(), "array<i32>");
+    }
+
+    #[test]
+    fn display_scalars() {
+        assert_eq!(Attribute::Int(20).to_string(), "20");
+        assert_eq!(Attribute::Str("stream".into()).to_string(), "\"stream\"");
+        assert_eq!(Attribute::Bool(true).to_string(), "true");
+        assert_eq!(Attribute::Type(Type::int(32)).to_string(), "i32");
+    }
+
+    #[test]
+    fn display_nested() {
+        let a = Attribute::Array(vec![Attribute::Int(1), Attribute::Str("x".into())]);
+        assert_eq!(a.to_string(), "[1, \"x\"]");
+        let mut d = AttrMap::new();
+        d.insert("width".into(), Attribute::Int(32));
+        d.insert("depth".into(), Attribute::Int(20));
+        // BTreeMap: sorted keys
+        assert_eq!(Attribute::Dict(d).to_string(), "{depth = 20, width = 32}");
+    }
+}

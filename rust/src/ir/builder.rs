@@ -1,0 +1,121 @@
+//! Convenience builder for constructing IR programmatically (examples,
+//! tests and workload generators use this instead of parsing text).
+
+use super::attr::{AttrMap, Attribute};
+use super::module::{Module, OpId};
+use super::op::Operation;
+use super::types::Type;
+use super::value::ValueId;
+
+/// Fluent op builder bound to a module.
+pub struct OpBuilder<'m> {
+    pub module: &'m mut Module,
+}
+
+impl<'m> OpBuilder<'m> {
+    pub fn new(module: &'m mut Module) -> Self {
+        OpBuilder { module }
+    }
+
+    /// Start building an op with the given fully-qualified name.
+    pub fn op(&mut self, name: &str) -> OpCtor<'_, 'm> {
+        OpCtor {
+            b: self,
+            op: Operation::new(name),
+            result_types: Vec::new(),
+            at: None,
+        }
+    }
+}
+
+/// In-flight operation under construction.
+pub struct OpCtor<'a, 'm> {
+    b: &'a mut OpBuilder<'m>,
+    op: Operation,
+    result_types: Vec<Type>,
+    at: Option<usize>,
+}
+
+impl OpCtor<'_, '_> {
+    pub fn operand(mut self, v: ValueId) -> Self {
+        self.op.operands.push(v);
+        self
+    }
+
+    pub fn operands(mut self, vs: &[ValueId]) -> Self {
+        self.op.operands.extend_from_slice(vs);
+        self
+    }
+
+    pub fn attr(mut self, key: &str, value: impl Into<Attribute>) -> Self {
+        self.op.attrs.insert(key.to_string(), value.into());
+        self
+    }
+
+    pub fn attrs(mut self, map: AttrMap) -> Self {
+        self.op.attrs.extend(map);
+        self
+    }
+
+    pub fn result(mut self, ty: Type) -> Self {
+        self.result_types.push(ty);
+        self
+    }
+
+    /// Insert at a specific top-level position instead of appending.
+    pub fn at(mut self, pos: usize) -> Self {
+        self.at = Some(pos);
+        self
+    }
+
+    /// Finish: insert into the module, materialize result values.
+    pub fn build(self) -> (OpId, Vec<ValueId>) {
+        let OpCtor { b, op, result_types, at } = self;
+        let id = match at {
+            Some(pos) => b.module.insert_top_at(pos, op),
+            None => b.module.push_top(op),
+        };
+        let mut results = Vec::with_capacity(result_types.len());
+        for (i, ty) in result_types.into_iter().enumerate() {
+            let v = b.module.new_result(id, i as u32, ty);
+            results.push(v);
+        }
+        b.module.op_mut(id).results = results.clone();
+        (id, results)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builds_channel_and_kernel() {
+        let mut m = Module::new();
+        let mut b = OpBuilder::new(&mut m);
+        let (_, ch) = b
+            .op("olympus.make_channel")
+            .attr("encapsulatedType", Type::int(32))
+            .attr("paramType", "stream")
+            .attr("depth", 20i64)
+            .result(Type::channel_of(Type::int(32)))
+            .build();
+        let (kid, _) = b
+            .op("olympus.kernel")
+            .operand(ch[0])
+            .attr("callee", "vecadd_1024")
+            .build();
+        assert_eq!(m.top.len(), 2);
+        assert_eq!(m.op(kid).operands.len(), 1);
+        assert_eq!(m.uses_of(ch[0]), vec![(kid, 0)]);
+    }
+
+    #[test]
+    fn insert_at_position() {
+        let mut m = Module::new();
+        let mut b = OpBuilder::new(&mut m);
+        let (first, _) = b.op("a.x").build();
+        let (second, _) = b.op("a.y").at(0).build();
+        assert_eq!(m.top, vec![second, first]);
+    }
+}

@@ -1,0 +1,37 @@
+//! MLIR-subset IR core.
+//!
+//! Implements exactly the slice of MLIR the Olympus dialect needs, built
+//! from scratch (no MLIR C++ / bindings):
+//!
+//! * [`Type`] — builtin integer/float/index types plus dialect types such as
+//!   `!olympus.channel<i32>`;
+//! * [`Attribute`] — integers, strings, types, arrays, dictionaries and
+//!   dense integer arrays (`operand_segment_sizes`);
+//! * [`Operation`] / [`Module`] — arena-allocated generic operations in SSA
+//!   form, with optional nested regions (used by bus-widening super-nodes);
+//! * a lexer/parser for the MLIR *generic* operation syntax used in the
+//!   paper's Figures 1–2, a printer producing the same syntax, and a
+//!   structural verifier.
+//!
+//! The IR is deliberately printable→parsable round-trip stable; proptest-style
+//! randomized tests in `rust/tests/` rely on that.
+
+pub mod attr;
+pub mod builder;
+pub mod module;
+pub mod op;
+pub mod parser;
+pub mod printer;
+pub mod types;
+pub mod value;
+pub mod verifier;
+
+pub use attr::{AttrMap, Attribute};
+pub use builder::OpBuilder;
+pub use module::{Module, OpId};
+pub use op::{Operation, Region};
+pub use parser::{parse_module, ParseError};
+pub use printer::print_module;
+pub use types::{FloatKind, Type};
+pub use value::{ValueDef, ValueId, ValueInfo};
+pub use verifier::{verify_module, VerifyError};

@@ -1,0 +1,272 @@
+//! The [`Module`]: arena-allocated operations + SSA value table.
+//!
+//! Ops live in a slab (`Vec<Option<Operation>>`); erasing leaves a tombstone
+//! so [`OpId`]s stay stable across pass pipelines. Top-level op order is the
+//! program order used by the printer and the lowering.
+
+use super::op::{Operation, Region};
+use super::types::Type;
+use super::value::{ValueDef, ValueId, ValueInfo};
+
+/// Handle to an operation in a module's arena.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct OpId(pub u32);
+
+impl OpId {
+    pub fn index(self) -> usize {
+        self.0 as usize
+    }
+}
+
+/// A module: the IR unit the parser returns and passes transform.
+#[derive(Debug, Clone, Default)]
+pub struct Module {
+    ops: Vec<Option<Operation>>,
+    /// Top-level operation order.
+    pub top: Vec<OpId>,
+    values: Vec<ValueInfo>,
+}
+
+impl Module {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    // ---- op accessors -------------------------------------------------
+
+    pub fn op(&self, id: OpId) -> &Operation {
+        self.ops[id.index()].as_ref().expect("op erased")
+    }
+
+    pub fn op_mut(&mut self, id: OpId) -> &mut Operation {
+        self.ops[id.index()].as_mut().expect("op erased")
+    }
+
+    pub fn op_exists(&self, id: OpId) -> bool {
+        self.ops.get(id.index()).map(|o| o.is_some()).unwrap_or(false)
+    }
+
+    /// All live op ids, in arena order (use [`Module::top`] for program order).
+    pub fn all_ops(&self) -> impl Iterator<Item = OpId> + '_ {
+        self.ops
+            .iter()
+            .enumerate()
+            .filter_map(|(i, o)| o.as_ref().map(|_| OpId(i as u32)))
+    }
+
+    /// Top-level ops in program order.
+    pub fn top_ops(&self) -> impl Iterator<Item = OpId> + '_ {
+        self.top.iter().copied()
+    }
+
+    /// Number of live operations (including ops nested in regions).
+    pub fn num_ops(&self) -> usize {
+        self.ops.iter().filter(|o| o.is_some()).count()
+    }
+
+    // ---- construction --------------------------------------------------
+
+    /// Insert a detached op into the arena (not yet in `top`).
+    pub fn insert_op(&mut self, op: Operation) -> OpId {
+        let id = OpId(self.ops.len() as u32);
+        self.ops.push(Some(op));
+        id
+    }
+
+    /// Insert and append to the top-level op list.
+    pub fn push_top(&mut self, op: Operation) -> OpId {
+        let id = self.insert_op(op);
+        self.top.push(id);
+        id
+    }
+
+    /// Insert `op` at `pos` in the top-level list.
+    pub fn insert_top_at(&mut self, pos: usize, op: Operation) -> OpId {
+        let id = self.insert_op(op);
+        self.top.insert(pos.min(self.top.len()), id);
+        id
+    }
+
+    /// Create a fresh SSA value of type `ty`, defined by (`op`, `idx`).
+    pub fn new_result(&mut self, op: OpId, idx: u32, ty: Type) -> ValueId {
+        let v = ValueId(self.values.len() as u32);
+        self.values.push(ValueInfo { ty, def: ValueDef::OpResult { op, idx } });
+        v
+    }
+
+    /// Create a detached value (parser fixes the def up afterwards).
+    pub fn new_detached_value(&mut self, ty: Type) -> ValueId {
+        let v = ValueId(self.values.len() as u32);
+        self.values.push(ValueInfo { ty, def: ValueDef::Detached });
+        v
+    }
+
+    pub fn set_value_def(&mut self, v: ValueId, def: ValueDef) {
+        self.values[v.index()].def = def;
+    }
+
+    // ---- value accessors ------------------------------------------------
+
+    pub fn value_type(&self, v: ValueId) -> &Type {
+        &self.values[v.index()].ty
+    }
+
+    pub fn value_def(&self, v: ValueId) -> ValueDef {
+        self.values[v.index()].def
+    }
+
+    /// The op defining `v`, if attached.
+    pub fn defining_op(&self, v: ValueId) -> Option<OpId> {
+        match self.value_def(v) {
+            ValueDef::OpResult { op, .. } => Some(op),
+            ValueDef::Detached => None,
+        }
+    }
+
+    pub fn num_values(&self) -> usize {
+        self.values.len()
+    }
+
+    /// All (op, operand_index) uses of `v`, scanning top-level and nested ops.
+    ///
+    /// O(total operands). Callers that query many values should build a
+    /// [`Module::use_map`] once instead.
+    pub fn uses_of(&self, v: ValueId) -> Vec<(OpId, usize)> {
+        let mut out = Vec::new();
+        for id in self.all_ops() {
+            for (i, o) in self.op(id).operands.iter().enumerate() {
+                if *o == v {
+                    out.push((id, i));
+                }
+            }
+        }
+        out
+    }
+
+    /// One-pass use map: value -> all (op, operand index) uses. Build this
+    /// once per analysis/pass instead of calling [`Module::uses_of`] per
+    /// value (which makes whole-module traversals quadratic).
+    pub fn use_map(&self) -> std::collections::HashMap<ValueId, Vec<(OpId, usize)>> {
+        let mut map: std::collections::HashMap<ValueId, Vec<(OpId, usize)>> =
+            std::collections::HashMap::with_capacity(self.values.len());
+        for id in self.all_ops() {
+            for (i, &o) in self.op(id).operands.iter().enumerate() {
+                map.entry(o).or_default().push((id, i));
+            }
+        }
+        map
+    }
+
+    // ---- mutation -------------------------------------------------------
+
+    /// Erase an op (tombstone) and remove it from the top-level list and any
+    /// region op lists. Its results become dangling; callers must rewrite
+    /// uses first (the verifier catches violations).
+    pub fn erase_op(&mut self, id: OpId) {
+        self.top.retain(|&o| o != id);
+        // remove from any region (skip the common region-less ops — this
+        // runs once per erased op and must stay cheap)
+        for (i, slot) in self.ops.iter_mut().enumerate() {
+            if i == id.index() {
+                continue;
+            }
+            if let Some(op) = slot {
+                if !op.regions.is_empty() {
+                    for r in &mut op.regions {
+                        r.ops.retain(|&o| o != id);
+                    }
+                }
+            }
+        }
+        self.ops[id.index()] = None;
+    }
+
+    /// Replace every use of `from` with `to` across all ops.
+    pub fn replace_all_uses(&mut self, from: ValueId, to: ValueId) {
+        for slot in self.ops.iter_mut().flatten() {
+            for o in &mut slot.operands {
+                if *o == from {
+                    *o = to;
+                }
+            }
+        }
+    }
+
+    /// Move a top-level op into a region of another op.
+    pub fn move_into_region(&mut self, op: OpId, parent: OpId, region_idx: usize) {
+        self.top.retain(|&o| o != op);
+        let p = self.op_mut(parent);
+        while p.regions.len() <= region_idx {
+            p.regions.push(Region::default());
+        }
+        p.regions[region_idx].ops.push(op);
+    }
+
+    /// Ops of `name` in program order (top level only).
+    pub fn top_ops_named(&self, name: &str) -> Vec<OpId> {
+        self.top.iter().copied().filter(|&id| self.op(id).name == name).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::attr::Attribute;
+
+    fn mk_channel(m: &mut Module) -> (OpId, ValueId) {
+        let mut op = Operation::new("olympus.make_channel");
+        op.set_attr("depth", Attribute::Int(8));
+        let id = m.push_top(op);
+        let v = m.new_result(id, 0, Type::channel_of(Type::int(32)));
+        m.op_mut(id).results.push(v);
+        (id, v)
+    }
+
+    #[test]
+    fn build_and_access() {
+        let mut m = Module::new();
+        let (cid, v) = mk_channel(&mut m);
+        assert_eq!(m.num_ops(), 1);
+        assert_eq!(m.value_type(v), &Type::channel_of(Type::int(32)));
+        assert_eq!(m.defining_op(v), Some(cid));
+    }
+
+    #[test]
+    fn uses_and_replace() {
+        let mut m = Module::new();
+        let (_, v1) = mk_channel(&mut m);
+        let (_, v2) = mk_channel(&mut m);
+        let mut k = Operation::new("olympus.kernel");
+        k.operands.push(v1);
+        let kid = m.push_top(k);
+        assert_eq!(m.uses_of(v1), vec![(kid, 0)]);
+        assert!(m.uses_of(v2).is_empty());
+        m.replace_all_uses(v1, v2);
+        assert!(m.uses_of(v1).is_empty());
+        assert_eq!(m.uses_of(v2), vec![(kid, 0)]);
+    }
+
+    #[test]
+    fn erase_removes_from_top() {
+        let mut m = Module::new();
+        let (cid, _) = mk_channel(&mut m);
+        assert_eq!(m.top.len(), 1);
+        m.erase_op(cid);
+        assert_eq!(m.top.len(), 0);
+        assert_eq!(m.num_ops(), 0);
+        assert!(!m.op_exists(cid));
+    }
+
+    #[test]
+    fn move_into_region() {
+        let mut m = Module::new();
+        let (c1, _) = mk_channel(&mut m);
+        let super_node = m.push_top(Operation::new("olympus.super_node"));
+        m.move_into_region(c1, super_node, 0);
+        assert_eq!(m.top.len(), 1);
+        assert_eq!(m.op(super_node).regions[0].ops, vec![c1]);
+        // erase of nested op cleans the region list
+        m.erase_op(c1);
+        assert!(m.op(super_node).regions[0].ops.is_empty());
+    }
+}

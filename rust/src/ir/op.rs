@@ -1,0 +1,118 @@
+//! Generic operations and regions.
+
+use super::attr::{AttrMap, Attribute};
+use super::module::OpId;
+use super::types::Type;
+use super::value::ValueId;
+
+/// A region: a list of nested operations (single implicit block — the
+/// Olympus dialect never needs block arguments or multi-block CFGs; the one
+/// consumer of regions is the bus-widening super-node).
+#[derive(Debug, Clone, Default)]
+pub struct Region {
+    pub ops: Vec<OpId>,
+}
+
+/// A generic operation in MLIR's universal form:
+/// `results = "dialect.name"(operands) {attrs} : (in-types) -> (out-types)`.
+#[derive(Debug, Clone)]
+pub struct Operation {
+    /// Fully-qualified name, e.g. `"olympus.make_channel"`.
+    pub name: String,
+    pub operands: Vec<ValueId>,
+    pub results: Vec<ValueId>,
+    pub attrs: AttrMap,
+    pub regions: Vec<Region>,
+}
+
+impl Operation {
+    pub fn new(name: impl Into<String>) -> Self {
+        Operation {
+            name: name.into(),
+            operands: Vec::new(),
+            results: Vec::new(),
+            attrs: AttrMap::new(),
+            regions: Vec::new(),
+        }
+    }
+
+    /// Dialect prefix (`olympus` of `olympus.kernel`).
+    pub fn dialect(&self) -> &str {
+        self.name.split('.').next().unwrap_or("")
+    }
+
+    /// Attribute accessor.
+    pub fn attr(&self, key: &str) -> Option<&Attribute> {
+        self.attrs.get(key)
+    }
+
+    pub fn set_attr(&mut self, key: &str, value: Attribute) {
+        self.attrs.insert(key.to_string(), value);
+    }
+
+    pub fn int_attr(&self, key: &str) -> Option<i64> {
+        self.attr(key)?.as_int()
+    }
+
+    pub fn str_attr(&self, key: &str) -> Option<&str> {
+        self.attr(key)?.as_str()
+    }
+
+    pub fn type_attr(&self, key: &str) -> Option<&Type> {
+        self.attr(key)?.as_type()
+    }
+
+    /// Split operands into (inputs, outputs) using `operand_segment_sizes`
+    /// when present; otherwise all operands are inputs.
+    pub fn operand_segments(&self) -> (Vec<ValueId>, Vec<ValueId>) {
+        match self.attr("operand_segment_sizes").and_then(|a| a.as_dense_i32()) {
+            Some(seg) if seg.len() == 2 => {
+                let n_in = seg[0].max(0) as usize;
+                let ins = self.operands.iter().take(n_in).copied().collect();
+                let outs = self.operands.iter().skip(n_in).copied().collect();
+                (ins, outs)
+            }
+            _ => (self.operands.clone(), Vec::new()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dialect_prefix() {
+        assert_eq!(Operation::new("olympus.kernel").dialect(), "olympus");
+        assert_eq!(Operation::new("weird").dialect(), "weird");
+    }
+
+    #[test]
+    fn attr_roundtrip() {
+        let mut op = Operation::new("olympus.make_channel");
+        op.set_attr("depth", Attribute::Int(20));
+        op.set_attr("paramType", "stream".into());
+        assert_eq!(op.int_attr("depth"), Some(20));
+        assert_eq!(op.str_attr("paramType"), Some("stream"));
+        assert_eq!(op.int_attr("missing"), None);
+    }
+
+    #[test]
+    fn segments_default_all_inputs() {
+        let mut op = Operation::new("olympus.kernel");
+        op.operands = vec![ValueId(0), ValueId(1)];
+        let (ins, outs) = op.operand_segments();
+        assert_eq!(ins.len(), 2);
+        assert!(outs.is_empty());
+    }
+
+    #[test]
+    fn segments_split() {
+        let mut op = Operation::new("olympus.kernel");
+        op.operands = vec![ValueId(0), ValueId(1), ValueId(2)];
+        op.set_attr("operand_segment_sizes", Attribute::DenseI32(vec![2, 1]));
+        let (ins, outs) = op.operand_segments();
+        assert_eq!(ins, vec![ValueId(0), ValueId(1)]);
+        assert_eq!(outs, vec![ValueId(2)]);
+    }
+}

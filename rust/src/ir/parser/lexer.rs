@@ -1,0 +1,370 @@
+//! Lexer for MLIR generic syntax.
+
+use std::fmt;
+
+/// Token kinds.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TokenKind {
+    /// `%name` — SSA value reference (name without the `%`).
+    Percent(String),
+    /// Bare identifier / keyword (`depth`, `i32`, `module`, `true`…).
+    Ident(String),
+    /// `"..."` string literal (unescaped content).
+    Str(String),
+    /// Integer literal (possibly negative).
+    Int(i64),
+    /// Float literal.
+    Float(f64),
+    /// `!dialect.name` — dialect type prefix (content without `!`).
+    Bang(String),
+    LParen,
+    RParen,
+    LBrace,
+    RBrace,
+    LBracket,
+    RBracket,
+    Less,
+    Greater,
+    Comma,
+    Colon,
+    Equal,
+    Arrow,
+    Eof,
+}
+
+impl fmt::Display for TokenKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            TokenKind::Percent(s) => write!(f, "%{s}"),
+            TokenKind::Ident(s) => write!(f, "{s}"),
+            TokenKind::Str(s) => write!(f, "\"{s}\""),
+            TokenKind::Int(v) => write!(f, "{v}"),
+            TokenKind::Float(v) => write!(f, "{v}"),
+            TokenKind::Bang(s) => write!(f, "!{s}"),
+            TokenKind::LParen => write!(f, "("),
+            TokenKind::RParen => write!(f, ")"),
+            TokenKind::LBrace => write!(f, "{{"),
+            TokenKind::RBrace => write!(f, "}}"),
+            TokenKind::LBracket => write!(f, "["),
+            TokenKind::RBracket => write!(f, "]"),
+            TokenKind::Less => write!(f, "<"),
+            TokenKind::Greater => write!(f, ">"),
+            TokenKind::Comma => write!(f, ","),
+            TokenKind::Colon => write!(f, ":"),
+            TokenKind::Equal => write!(f, "="),
+            TokenKind::Arrow => write!(f, "->"),
+            TokenKind::Eof => write!(f, "<eof>"),
+        }
+    }
+}
+
+/// A token with its source location.
+#[derive(Debug, Clone)]
+pub struct Token {
+    pub kind: TokenKind,
+    pub line: usize,
+    pub col: usize,
+}
+
+/// Streaming lexer.
+pub struct Lexer<'a> {
+    src: &'a [u8],
+    pos: usize,
+    line: usize,
+    col: usize,
+}
+
+impl<'a> Lexer<'a> {
+    pub fn new(src: &'a str) -> Self {
+        Lexer { src: src.as_bytes(), pos: 0, line: 1, col: 1 }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.src.get(self.pos).copied()
+    }
+
+    fn bump(&mut self) -> Option<u8> {
+        let c = self.peek()?;
+        self.pos += 1;
+        if c == b'\n' {
+            self.line += 1;
+            self.col = 1;
+        } else {
+            self.col += 1;
+        }
+        Some(c)
+    }
+
+    fn skip_ws_and_comments(&mut self) {
+        loop {
+            match self.peek() {
+                Some(b' ') | Some(b'\t') | Some(b'\n') | Some(b'\r') => {
+                    self.bump();
+                }
+                Some(b'/') if self.src.get(self.pos + 1) == Some(&b'/') => {
+                    while let Some(c) = self.bump() {
+                        if c == b'\n' {
+                            break;
+                        }
+                    }
+                }
+                _ => return,
+            }
+        }
+    }
+
+    fn ident_tail(&mut self, first: u8) -> String {
+        let mut s = String::new();
+        s.push(first as char);
+        while let Some(c) = self.peek() {
+            if c.is_ascii_alphanumeric() || c == b'_' || c == b'.' || c == b'$' || c == b'-' {
+                // '-' only valid inside identifiers like `operand-segment`? MLIR idents
+                // don't contain '-'; keep it out to avoid eating `->`.
+                if c == b'-' {
+                    break;
+                }
+                s.push(c as char);
+                self.bump();
+            } else {
+                break;
+            }
+        }
+        s
+    }
+
+    /// Produce the next token.
+    pub fn next_token(&mut self) -> Result<Token, String> {
+        self.skip_ws_and_comments();
+        let (line, col) = (self.line, self.col);
+        let tok = |kind| Ok(Token { kind, line, col });
+        let Some(c) = self.peek() else {
+            return tok(TokenKind::Eof);
+        };
+        match c {
+            b'(' => {
+                self.bump();
+                tok(TokenKind::LParen)
+            }
+            b')' => {
+                self.bump();
+                tok(TokenKind::RParen)
+            }
+            b'{' => {
+                self.bump();
+                tok(TokenKind::LBrace)
+            }
+            b'}' => {
+                self.bump();
+                tok(TokenKind::RBrace)
+            }
+            b'[' => {
+                self.bump();
+                tok(TokenKind::LBracket)
+            }
+            b']' => {
+                self.bump();
+                tok(TokenKind::RBracket)
+            }
+            b'<' => {
+                self.bump();
+                tok(TokenKind::Less)
+            }
+            b'>' => {
+                self.bump();
+                tok(TokenKind::Greater)
+            }
+            b',' => {
+                self.bump();
+                tok(TokenKind::Comma)
+            }
+            b':' => {
+                self.bump();
+                tok(TokenKind::Colon)
+            }
+            b'=' => {
+                self.bump();
+                tok(TokenKind::Equal)
+            }
+            b'%' => {
+                self.bump();
+                let mut s = String::new();
+                while let Some(c) = self.peek() {
+                    if c.is_ascii_alphanumeric() || c == b'_' {
+                        s.push(c as char);
+                        self.bump();
+                    } else {
+                        break;
+                    }
+                }
+                if s.is_empty() {
+                    return Err(format!("{line}:{col}: bare '%'"));
+                }
+                tok(TokenKind::Percent(s))
+            }
+            b'!' => {
+                self.bump();
+                let first = self.bump().ok_or(format!("{line}:{col}: bare '!'"))?;
+                if !(first.is_ascii_alphabetic() || first == b'_') {
+                    return Err(format!("{line}:{col}: bad dialect type"));
+                }
+                let s = self.ident_tail(first);
+                tok(TokenKind::Bang(s))
+            }
+            b'"' => {
+                self.bump();
+                let mut s = String::new();
+                loop {
+                    match self.bump() {
+                        None => return Err(format!("{line}:{col}: unterminated string")),
+                        Some(b'"') => break,
+                        Some(b'\\') => match self.bump() {
+                            Some(b'n') => s.push('\n'),
+                            Some(b't') => s.push('\t'),
+                            Some(b'"') => s.push('"'),
+                            Some(b'\\') => s.push('\\'),
+                            other => {
+                                return Err(format!(
+                                    "{line}:{col}: bad escape {:?}",
+                                    other.map(|c| c as char)
+                                ))
+                            }
+                        },
+                        Some(c) => s.push(c as char),
+                    }
+                }
+                tok(TokenKind::Str(s))
+            }
+            b'-' => {
+                self.bump();
+                if self.peek() == Some(b'>') {
+                    self.bump();
+                    return tok(TokenKind::Arrow);
+                }
+                // negative number
+                self.number(true, line, col)
+            }
+            c if c.is_ascii_digit() => self.number(false, line, col),
+            c if c.is_ascii_alphabetic() || c == b'_' => {
+                self.bump();
+                let s = self.ident_tail(c);
+                tok(TokenKind::Ident(s))
+            }
+            c => Err(format!("{line}:{col}: unexpected character '{}'", c as char)),
+        }
+    }
+
+    fn number(&mut self, neg: bool, line: usize, col: usize) -> Result<Token, String> {
+        let mut s = String::new();
+        if neg {
+            s.push('-');
+        }
+        let mut is_float = false;
+        while let Some(c) = self.peek() {
+            if c.is_ascii_digit() {
+                s.push(c as char);
+                self.bump();
+            } else if c == b'.' && !is_float {
+                // lookahead: require a digit after '.' (else it's something else)
+                if self.src.get(self.pos + 1).is_some_and(|d| d.is_ascii_digit()) {
+                    is_float = true;
+                    s.push('.');
+                    self.bump();
+                } else {
+                    break;
+                }
+            } else if (c == b'e' || c == b'E')
+                && self
+                    .src
+                    .get(self.pos + 1)
+                    .is_some_and(|d| d.is_ascii_digit() || *d == b'-' || *d == b'+')
+            {
+                is_float = true;
+                s.push(c as char);
+                self.bump();
+                if matches!(self.peek(), Some(b'-') | Some(b'+')) {
+                    s.push(self.bump().unwrap() as char);
+                }
+            } else {
+                break;
+            }
+        }
+        if s == "-" {
+            return Err(format!("{line}:{col}: lone '-'"));
+        }
+        if is_float {
+            s.parse::<f64>()
+                .map(|v| Token { kind: TokenKind::Float(v), line, col })
+                .map_err(|e| format!("{line}:{col}: bad float: {e}"))
+        } else {
+            s.parse::<i64>()
+                .map(|v| Token { kind: TokenKind::Int(v), line, col })
+                .map_err(|e| format!("{line}:{col}: bad int: {e}"))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(src: &str) -> Vec<TokenKind> {
+        let mut lx = Lexer::new(src);
+        let mut out = Vec::new();
+        loop {
+            let t = lx.next_token().unwrap();
+            if t.kind == TokenKind::Eof {
+                break;
+            }
+            out.push(t.kind);
+        }
+        out
+    }
+
+    #[test]
+    fn lexes_fig1_line() {
+        let toks = kinds(r#"%2 = "olympus.make_channel"() {depth = 20} : () -> (!olympus.channel<i32>)"#);
+        assert_eq!(toks[0], TokenKind::Percent("2".into()));
+        assert_eq!(toks[1], TokenKind::Equal);
+        assert_eq!(toks[2], TokenKind::Str("olympus.make_channel".into()));
+        assert!(toks.contains(&TokenKind::Bang("olympus.channel".into())));
+        assert!(toks.contains(&TokenKind::Arrow));
+        assert!(toks.contains(&TokenKind::Int(20)));
+    }
+
+    #[test]
+    fn lexes_negative_and_float() {
+        assert_eq!(kinds("-3"), vec![TokenKind::Int(-3)]);
+        assert_eq!(kinds("-3.5"), vec![TokenKind::Float(-3.5)]);
+        assert_eq!(kinds("1e3"), vec![TokenKind::Float(1000.0)]);
+        assert_eq!(kinds("2 -> 3"), vec![TokenKind::Int(2), TokenKind::Arrow, TokenKind::Int(3)]);
+    }
+
+    #[test]
+    fn skips_comments() {
+        assert_eq!(
+            kinds("a // comment\n b"),
+            vec![TokenKind::Ident("a".into()), TokenKind::Ident("b".into())]
+        );
+    }
+
+    #[test]
+    fn string_escapes() {
+        assert_eq!(kinds(r#""a\nb""#), vec![TokenKind::Str("a\nb".into())]);
+        assert_eq!(kinds(r#""q\"w""#), vec![TokenKind::Str("q\"w".into())]);
+    }
+
+    #[test]
+    fn error_on_garbage() {
+        let mut lx = Lexer::new("@");
+        assert!(lx.next_token().is_err());
+    }
+
+    #[test]
+    fn tracks_locations() {
+        let mut lx = Lexer::new("a\n  b");
+        let a = lx.next_token().unwrap();
+        assert_eq!((a.line, a.col), (1, 1));
+        let b = lx.next_token().unwrap();
+        assert_eq!((b.line, b.col), (2, 3));
+    }
+}

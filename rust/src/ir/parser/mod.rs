@@ -1,0 +1,8 @@
+//! Parser for the MLIR generic operation syntax (paper Figures 1–2).
+
+mod lexer;
+#[allow(clippy::module_inception)]
+mod parser;
+
+pub use lexer::{Lexer, Token, TokenKind};
+pub use parser::{parse_module, ParseError};

@@ -1,0 +1,661 @@
+//! Recursive-descent parser for MLIR generic operation syntax.
+//!
+//! Grammar (the slice we support — enough for the paper's figures plus
+//! regions, arrays, dicts and dense arrays):
+//!
+//! ```text
+//! module   ::= (`module` `{` op* `}`)? op* EOF
+//! op       ::= (res (`,` res)* `=`)? str-lit `(` operands? `)`
+//!              region-list? attr-dict? `:` fn-type
+//! region-list ::= `(` `{` op* `}` (`,` `{` op* `}`)* `)`
+//! attr-dict ::= `{` (ident `=` attr (`,` ident `=` attr)*)? `}`
+//! attr     ::= int | float | str | bool | type | `[` attrs `]`
+//!            | `{` dict `}` | `array` `<` `i32` (`:` int (`,` int)*)? `>`
+//!            | `dense` `<` `[` ints `]` `>` `:` type
+//! type     ::= `iN` | `f16|bf16|f32|f64` | `index` | `none`
+//!            | `!` dialect-ident (`<` type `>`)?
+//! fn-type  ::= `(` types? `)` `->` (`(` types? `)` | type)
+//! ```
+
+use std::collections::HashMap;
+
+use thiserror::Error;
+
+use crate::ir::attr::{AttrMap, Attribute};
+use crate::ir::module::{Module, OpId};
+use crate::ir::op::{Operation, Region};
+use crate::ir::types::{FloatKind, Type};
+use crate::ir::value::{ValueDef, ValueId};
+
+use super::lexer::{Lexer, Token, TokenKind};
+
+/// Parse error with location.
+#[derive(Debug, Error)]
+#[error("parse error at {line}:{col}: {msg}")]
+pub struct ParseError {
+    pub line: usize,
+    pub col: usize,
+    pub msg: String,
+}
+
+struct Parser<'a> {
+    lx: Lexer<'a>,
+    tok: Token,
+    /// SSA name -> value id.
+    env: HashMap<String, ValueId>,
+    m: Module,
+}
+
+type PResult<T> = Result<T, ParseError>;
+
+impl<'a> Parser<'a> {
+    fn new(src: &'a str) -> PResult<Self> {
+        let mut lx = Lexer::new(src);
+        let tok = lx.next_token().map_err(Self::lex_err)?;
+        Ok(Parser { lx, tok, env: HashMap::new(), m: Module::new() })
+    }
+
+    fn lex_err(msg: String) -> ParseError {
+        // lexer errors embed "line:col: msg"
+        let mut parts = msg.splitn(3, ':');
+        let line = parts.next().and_then(|s| s.parse().ok()).unwrap_or(0);
+        let col = parts.next().and_then(|s| s.trim().parse().ok()).unwrap_or(0);
+        let msg = parts.next().unwrap_or(&msg).trim().to_string();
+        ParseError { line, col, msg }
+    }
+
+    fn err<T>(&self, msg: impl Into<String>) -> PResult<T> {
+        Err(ParseError { line: self.tok.line, col: self.tok.col, msg: msg.into() })
+    }
+
+    fn bump(&mut self) -> PResult<Token> {
+        let next = self.lx.next_token().map_err(Self::lex_err)?;
+        Ok(std::mem::replace(&mut self.tok, next))
+    }
+
+    fn eat(&mut self, kind: &TokenKind) -> PResult<()> {
+        if &self.tok.kind == kind {
+            self.bump()?;
+            Ok(())
+        } else {
+            self.err(format!("expected '{kind}', found '{}'", self.tok.kind))
+        }
+    }
+
+    fn at(&self, kind: &TokenKind) -> bool {
+        &self.tok.kind == kind
+    }
+
+    fn at_ident(&self, s: &str) -> bool {
+        matches!(&self.tok.kind, TokenKind::Ident(i) if i == s)
+    }
+
+    // ---- types ---------------------------------------------------------
+
+    fn parse_type(&mut self) -> PResult<Type> {
+        match self.tok.kind.clone() {
+            TokenKind::Ident(id) => {
+                self.bump()?;
+                self.builtin_type(&id)
+            }
+            TokenKind::Bang(name) => {
+                self.bump()?;
+                let (dialect, tail) = match name.split_once('.') {
+                    Some((d, t)) => (d.to_string(), t.to_string()),
+                    None => (name.clone(), String::new()),
+                };
+                let mut inner = None;
+                if self.at(&TokenKind::Less) {
+                    self.bump()?;
+                    inner = Some(self.parse_type()?);
+                    self.eat(&TokenKind::Greater)?;
+                }
+                if dialect == "olympus" && tail == "channel" {
+                    let elem = inner
+                        .ok_or(())
+                        .or_else(|_| self.err("!olympus.channel requires an element type"))?;
+                    Ok(Type::Channel(Box::new(elem)))
+                } else {
+                    Ok(Type::Opaque {
+                        dialect,
+                        name: tail,
+                        body: inner.map(|t| t.to_string()).unwrap_or_default(),
+                    })
+                }
+            }
+            TokenKind::LParen => {
+                let (ins, outs) = self.parse_fn_type()?;
+                Ok(Type::Function(ins, outs))
+            }
+            other => self.err(format!("expected a type, found '{other}'")),
+        }
+    }
+
+    fn builtin_type(&mut self, id: &str) -> PResult<Type> {
+        match id {
+            "index" => Ok(Type::Index),
+            "none" => Ok(Type::None),
+            "f16" => Ok(Type::Float(FloatKind::F16)),
+            "bf16" => Ok(Type::Float(FloatKind::BF16)),
+            "f32" => Ok(Type::Float(FloatKind::F32)),
+            "f64" => Ok(Type::Float(FloatKind::F64)),
+            _ if id.starts_with('i') && id[1..].chars().all(|c| c.is_ascii_digit()) => {
+                let w: u32 = id[1..]
+                    .parse()
+                    .map_err(|_| ())
+                    .or_else(|_| self.err(format!("bad integer type '{id}'")))?;
+                if w == 0 || w > 1_048_576 {
+                    return self.err(format!("unsupported integer width {w}"));
+                }
+                Ok(Type::Integer(w))
+            }
+            _ => self.err(format!("unknown type '{id}'")),
+        }
+    }
+
+    fn parse_type_list_parens(&mut self) -> PResult<Vec<Type>> {
+        self.eat(&TokenKind::LParen)?;
+        let mut tys = Vec::new();
+        if !self.at(&TokenKind::RParen) {
+            loop {
+                tys.push(self.parse_type()?);
+                if self.at(&TokenKind::Comma) {
+                    self.bump()?;
+                } else {
+                    break;
+                }
+            }
+        }
+        self.eat(&TokenKind::RParen)?;
+        Ok(tys)
+    }
+
+    fn parse_fn_type(&mut self) -> PResult<(Vec<Type>, Vec<Type>)> {
+        let ins = self.parse_type_list_parens()?;
+        self.eat(&TokenKind::Arrow)?;
+        let outs = if self.at(&TokenKind::LParen) {
+            self.parse_type_list_parens()?
+        } else {
+            vec![self.parse_type()?]
+        };
+        Ok((ins, outs))
+    }
+
+    // ---- attributes ------------------------------------------------------
+
+    fn parse_attr(&mut self) -> PResult<Attribute> {
+        match self.tok.kind.clone() {
+            TokenKind::Int(v) => {
+                self.bump()?;
+                // optional `: iN` type suffix — width recorded only as value
+                if self.at(&TokenKind::Colon) {
+                    self.bump()?;
+                    self.parse_type()?;
+                }
+                Ok(Attribute::Int(v))
+            }
+            TokenKind::Float(v) => {
+                self.bump()?;
+                if self.at(&TokenKind::Colon) {
+                    self.bump()?;
+                    self.parse_type()?;
+                }
+                Ok(Attribute::Float(v))
+            }
+            TokenKind::Str(s) => {
+                self.bump()?;
+                Ok(Attribute::Str(s))
+            }
+            TokenKind::LBracket => {
+                self.bump()?;
+                let mut items = Vec::new();
+                if !self.at(&TokenKind::RBracket) {
+                    loop {
+                        items.push(self.parse_attr()?);
+                        if self.at(&TokenKind::Comma) {
+                            self.bump()?;
+                        } else {
+                            break;
+                        }
+                    }
+                }
+                self.eat(&TokenKind::RBracket)?;
+                Ok(Attribute::Array(items))
+            }
+            TokenKind::LBrace => {
+                let dict = self.parse_attr_dict()?;
+                Ok(Attribute::Dict(dict))
+            }
+            TokenKind::Ident(id) => match id.as_str() {
+                "true" => {
+                    self.bump()?;
+                    Ok(Attribute::Bool(true))
+                }
+                "false" => {
+                    self.bump()?;
+                    Ok(Attribute::Bool(false))
+                }
+                "unit" => {
+                    self.bump()?;
+                    Ok(Attribute::Unit)
+                }
+                "array" => self.parse_dense_array(),
+                "dense" => self.parse_dense_legacy(),
+                _ => {
+                    let t = self.parse_type()?;
+                    Ok(Attribute::Type(t))
+                }
+            },
+            TokenKind::Bang(_) => Ok(Attribute::Type(self.parse_type()?)),
+            other => self.err(format!("expected an attribute, found '{other}'")),
+        }
+    }
+
+    /// `array<i32: 2, 1>` (modern MLIR DenseArrayAttr).
+    fn parse_dense_array(&mut self) -> PResult<Attribute> {
+        self.bump()?; // array
+        self.eat(&TokenKind::Less)?;
+        if !self.at_ident("i32") && !self.at_ident("i64") {
+            return self.err("expected i32/i64 in array<...>");
+        }
+        self.bump()?;
+        let mut vals = Vec::new();
+        if self.at(&TokenKind::Colon) {
+            self.bump()?;
+            loop {
+                match self.tok.kind {
+                    TokenKind::Int(v) => {
+                        vals.push(v as i32);
+                        self.bump()?;
+                    }
+                    _ => return self.err("expected integer in dense array"),
+                }
+                if self.at(&TokenKind::Comma) {
+                    self.bump()?;
+                } else {
+                    break;
+                }
+            }
+        }
+        self.eat(&TokenKind::Greater)?;
+        Ok(Attribute::DenseI32(vals))
+    }
+
+    /// `dense<[2, 1]> : tensor<2xi32>` (legacy operand_segment_sizes form).
+    fn parse_dense_legacy(&mut self) -> PResult<Attribute> {
+        self.bump()?; // dense
+        self.eat(&TokenKind::Less)?;
+        self.eat(&TokenKind::LBracket)?;
+        let mut vals = Vec::new();
+        if !self.at(&TokenKind::RBracket) {
+            loop {
+                match self.tok.kind {
+                    TokenKind::Int(v) => {
+                        vals.push(v as i32);
+                        self.bump()?;
+                    }
+                    _ => return self.err("expected integer in dense<[...]>"),
+                }
+                if self.at(&TokenKind::Comma) {
+                    self.bump()?;
+                } else {
+                    break;
+                }
+            }
+        }
+        self.eat(&TokenKind::RBracket)?;
+        self.eat(&TokenKind::Greater)?;
+        // `: tensor<2xi32>` suffix — consume loosely
+        self.eat(&TokenKind::Colon)?;
+        if let TokenKind::Ident(_) = self.tok.kind {
+            self.bump()?;
+            if self.at(&TokenKind::Less) {
+                // swallow `<2xi32>` as raw tokens
+                let mut depth = 1;
+                self.bump()?;
+                while depth > 0 {
+                    match self.tok.kind {
+                        TokenKind::Less => depth += 1,
+                        TokenKind::Greater => depth -= 1,
+                        TokenKind::Eof => return self.err("unterminated tensor type"),
+                        _ => {}
+                    }
+                    self.bump()?;
+                }
+            }
+        }
+        Ok(Attribute::DenseI32(vals))
+    }
+
+    fn parse_attr_dict(&mut self) -> PResult<AttrMap> {
+        self.eat(&TokenKind::LBrace)?;
+        let mut map = AttrMap::new();
+        if !self.at(&TokenKind::RBrace) {
+            loop {
+                let key = match &self.tok.kind {
+                    TokenKind::Ident(s) => s.clone(),
+                    TokenKind::Str(s) => s.clone(),
+                    other => return self.err(format!("expected attribute name, found '{other}'")),
+                };
+                self.bump()?;
+                if self.at(&TokenKind::Equal) {
+                    self.bump()?;
+                    let v = self.parse_attr()?;
+                    map.insert(key, v);
+                } else {
+                    // presence-only unit attribute
+                    map.insert(key, Attribute::Unit);
+                }
+                if self.at(&TokenKind::Comma) {
+                    self.bump()?;
+                } else {
+                    break;
+                }
+            }
+        }
+        self.eat(&TokenKind::RBrace)?;
+        Ok(map)
+    }
+
+    // ---- operations -------------------------------------------------------
+
+    /// Returns true if the current token could begin an operation.
+    fn at_op_start(&self) -> bool {
+        matches!(self.tok.kind, TokenKind::Percent(_) | TokenKind::Str(_))
+    }
+
+    fn parse_op(&mut self) -> PResult<OpId> {
+        // results
+        let mut result_names = Vec::new();
+        if let TokenKind::Percent(_) = self.tok.kind {
+            loop {
+                match self.tok.kind.clone() {
+                    TokenKind::Percent(name) => {
+                        result_names.push(name);
+                        self.bump()?;
+                    }
+                    _ => return self.err("expected %value"),
+                }
+                if self.at(&TokenKind::Comma) {
+                    self.bump()?;
+                } else {
+                    break;
+                }
+            }
+            self.eat(&TokenKind::Equal)?;
+        }
+        // op name
+        let name = match self.tok.kind.clone() {
+            TokenKind::Str(s) => {
+                self.bump()?;
+                s
+            }
+            other => return self.err(format!("expected op name string, found '{other}'")),
+        };
+        // operands
+        self.eat(&TokenKind::LParen)?;
+        let mut operand_names = Vec::new();
+        if !self.at(&TokenKind::RParen) {
+            loop {
+                match self.tok.kind.clone() {
+                    TokenKind::Percent(n) => {
+                        operand_names.push((n, self.tok.line, self.tok.col));
+                        self.bump()?;
+                    }
+                    other => return self.err(format!("expected %operand, found '{other}'")),
+                }
+                if self.at(&TokenKind::Comma) {
+                    self.bump()?;
+                } else {
+                    break;
+                }
+            }
+        }
+        self.eat(&TokenKind::RParen)?;
+
+        // optional region-list: `({ ... }, { ... })`
+        let mut regions: Vec<Vec<OpId>> = Vec::new();
+        if self.at(&TokenKind::LParen) {
+            self.bump()?;
+            loop {
+                self.eat(&TokenKind::LBrace)?;
+                let mut ops = Vec::new();
+                while self.at_op_start() {
+                    ops.push(self.parse_op()?);
+                }
+                self.eat(&TokenKind::RBrace)?;
+                regions.push(ops);
+                if self.at(&TokenKind::Comma) {
+                    self.bump()?;
+                } else {
+                    break;
+                }
+            }
+            self.eat(&TokenKind::RParen)?;
+        }
+
+        // optional attr-dict
+        let attrs = if self.at(&TokenKind::LBrace) { self.parse_attr_dict()? } else { AttrMap::new() };
+
+        // `:` fn-type
+        self.eat(&TokenKind::Colon)?;
+        let (in_tys, out_tys) = self.parse_fn_type()?;
+
+        if in_tys.len() != operand_names.len() {
+            return self.err(format!(
+                "op '{name}': {} operands but {} operand types",
+                operand_names.len(),
+                in_tys.len()
+            ));
+        }
+        if out_tys.len() != result_names.len() {
+            return self.err(format!(
+                "op '{name}': {} results but {} result types",
+                result_names.len(),
+                out_tys.len()
+            ));
+        }
+
+        // resolve operands
+        let mut operands = Vec::with_capacity(operand_names.len());
+        for ((n, line, col), ty) in operand_names.into_iter().zip(in_tys.iter()) {
+            let Some(&v) = self.env.get(&n) else {
+                return Err(ParseError {
+                    line,
+                    col,
+                    msg: format!("use of undefined value %{n}"),
+                });
+            };
+            if self.m.value_type(v) != ty {
+                return Err(ParseError {
+                    line,
+                    col,
+                    msg: format!(
+                        "type mismatch for %{n}: declared {}, but defined as {}",
+                        ty,
+                        self.m.value_type(v)
+                    ),
+                });
+            }
+            operands.push(v);
+        }
+
+        let mut op = Operation::new(name);
+        op.operands = operands;
+        op.attrs = attrs;
+        for ops in regions {
+            op.regions.push(Region { ops });
+        }
+        let id = self.m.insert_op(op);
+
+        // materialize results and bind names
+        let mut results = Vec::with_capacity(result_names.len());
+        for (i, (rname, ty)) in result_names.into_iter().zip(out_tys.into_iter()).enumerate() {
+            let v = self.m.new_detached_value(ty);
+            self.m.set_value_def(v, ValueDef::OpResult { op: id, idx: i as u32 });
+            if self.env.insert(rname.clone(), v).is_some() {
+                return self.err(format!("redefinition of %{rname}"));
+            }
+            results.push(v);
+        }
+        self.m.op_mut(id).results = results;
+        Ok(id)
+    }
+
+    fn parse_module_body(&mut self) -> PResult<()> {
+        // optional `module {` wrapper
+        let wrapped = if self.at_ident("module") {
+            self.bump()?;
+            self.eat(&TokenKind::LBrace)?;
+            true
+        } else {
+            false
+        };
+        while self.at_op_start() {
+            let id = self.parse_op()?;
+            self.m.top.push(id);
+        }
+        if wrapped {
+            self.eat(&TokenKind::RBrace)?;
+        }
+        if !self.at(&TokenKind::Eof) {
+            return self.err(format!("unexpected token '{}'", self.tok.kind));
+        }
+        Ok(())
+    }
+}
+
+/// Parse MLIR generic-syntax text into a [`Module`].
+pub fn parse_module(src: &str) -> Result<Module, ParseError> {
+    let mut p = Parser::new(src)?;
+    p.parse_module_body()?;
+    Ok(p.m)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::printer::print_module;
+
+    /// The paper's Figure 1, verbatim (modulo whitespace).
+    const FIG1: &str = r#"
+%2 = "olympus.make_channel"() {
+ encapsulatedType = i32,
+ paramType = "stream",
+ depth = 20
+} : () -> (
+ !olympus.channel<i32>
+)
+"#;
+
+    #[test]
+    fn parses_fig1() {
+        let m = parse_module(FIG1).unwrap();
+        assert_eq!(m.top.len(), 1);
+        let op = m.op(m.top[0]);
+        assert_eq!(op.name, "olympus.make_channel");
+        assert_eq!(op.int_attr("depth"), Some(20));
+        assert_eq!(op.str_attr("paramType"), Some("stream"));
+        assert_eq!(op.type_attr("encapsulatedType"), Some(&Type::int(32)));
+        assert_eq!(m.value_type(op.results[0]), &Type::channel_of(Type::int(32)));
+    }
+
+    #[test]
+    fn parses_fig2_style_kernel() {
+        let src = r#"
+%2 = "olympus.make_channel"() {encapsulatedType = i32, paramType = "stream", depth = 20} : () -> (!olympus.channel<i32>)
+%3 = "olympus.make_channel"() {encapsulatedType = i32, paramType = "stream", depth = 20} : () -> (!olympus.channel<i32>)
+%4 = "olympus.make_channel"() {encapsulatedType = i32, paramType = "stream", depth = 20} : () -> (!olympus.channel<i32>)
+"olympus.kernel"(%2, %3, %4) {
+  callee = "vadd", latency = 142, ii = 1,
+  ff = 4316, lut = 5admissible = 0
+} : (!olympus.channel<i32>, !olympus.channel<i32>, !olympus.channel<i32>) -> ()
+"#;
+        // NOTE: the funky `5admissible` would be a lex error — use the clean version:
+        let src = src.replace("ff = 4316, lut = 5admissible = 0", "ff = 4316, lut = 5373, bram = 2, uram = 0, dsp = 0, operand_segment_sizes = array<i32: 2, 1>");
+        let m = parse_module(&src).unwrap();
+        let kernels = m.top_ops_named("olympus.kernel");
+        assert_eq!(kernels.len(), 1);
+        let k = m.op(kernels[0]);
+        assert_eq!(k.str_attr("callee"), Some("vadd"));
+        assert_eq!(k.int_attr("latency"), Some(142));
+        let (ins, outs) = k.operand_segments();
+        assert_eq!(ins.len(), 2);
+        assert_eq!(outs.len(), 1);
+    }
+
+    #[test]
+    fn parses_legacy_dense_segments() {
+        let src = r#"
+%0 = "olympus.make_channel"() {depth = 4} : () -> (!olympus.channel<i64>)
+"olympus.kernel"(%0) {operand_segment_sizes = dense<[0, 1]> : tensor<2xi32>} : (!olympus.channel<i64>) -> ()
+"#;
+        let m = parse_module(src).unwrap();
+        let k = m.top_ops_named("olympus.kernel")[0];
+        let (ins, outs) = m.op(k).operand_segments();
+        assert_eq!(ins.len(), 0);
+        assert_eq!(outs.len(), 1);
+    }
+
+    #[test]
+    fn parses_regions() {
+        let src = r#"
+%0 = "olympus.make_channel"() {depth = 2} : () -> (!olympus.channel<i64>)
+"olympus.super_node"(%0) ({
+  "olympus.kernel"(%0) {callee = "k0"} : (!olympus.channel<i64>) -> ()
+  "olympus.kernel"(%0) {callee = "k1"} : (!olympus.channel<i64>) -> ()
+}) {lanes = 2} : (!olympus.channel<i64>) -> ()
+"#;
+        let m = parse_module(src).unwrap();
+        let sn = m.top_ops_named("olympus.super_node")[0];
+        assert_eq!(m.op(sn).regions.len(), 1);
+        assert_eq!(m.op(sn).regions[0].ops.len(), 2);
+        assert_eq!(m.top.len(), 2); // nested kernels are not top-level
+    }
+
+    #[test]
+    fn module_wrapper_accepted() {
+        let src = "module {\n%0 = \"olympus.make_channel\"() {depth = 1} : () -> (!olympus.channel<i8>)\n}";
+        assert!(parse_module(src).is_ok());
+    }
+
+    #[test]
+    fn undefined_value_is_error() {
+        let e = parse_module(r#""olympus.pc"(%9) {id = 0} : (!olympus.channel<i8>) -> ()"#)
+            .unwrap_err();
+        assert!(e.msg.contains("undefined value"), "{e}");
+    }
+
+    #[test]
+    fn type_mismatch_is_error() {
+        let src = r#"
+%0 = "olympus.make_channel"() {depth = 1} : () -> (!olympus.channel<i8>)
+"olympus.pc"(%0) {id = 0} : (!olympus.channel<i32>) -> ()
+"#;
+        let e = parse_module(src).unwrap_err();
+        assert!(e.msg.contains("type mismatch"), "{e}");
+    }
+
+    #[test]
+    fn redefinition_is_error() {
+        let src = r#"
+%0 = "olympus.make_channel"() {depth = 1} : () -> (!olympus.channel<i8>)
+%0 = "olympus.make_channel"() {depth = 1} : () -> (!olympus.channel<i8>)
+"#;
+        assert!(parse_module(src).is_err());
+    }
+
+    #[test]
+    fn arity_mismatch_is_error() {
+        let src = r#"%0, %1 = "olympus.make_channel"() {depth = 1} : () -> (!olympus.channel<i8>)"#;
+        assert!(parse_module(src).is_err());
+    }
+
+    #[test]
+    fn roundtrip_print_parse() {
+        let m = parse_module(FIG1).unwrap();
+        let text = print_module(&m);
+        let m2 = parse_module(&text).unwrap();
+        assert_eq!(print_module(&m2), text);
+    }
+}

@@ -1,0 +1,141 @@
+//! Printer: emits MLIR *generic* operation syntax, the same form as the
+//! paper's Figures 1–2:
+//!
+//! ```text
+//! %2 = "olympus.make_channel"() {depth = 20, ...} : () -> (!olympus.channel<i32>)
+//! "olympus.kernel"(%2, %3) {callee = "k", ...} : (!olympus.channel<i32>, ...) -> ()
+//! ```
+//!
+//! Values are renumbered sequentially in program order, so printing is a
+//! canonicalization: two structurally-equal modules print identically.
+
+use std::collections::HashMap;
+use std::fmt::Write;
+
+use super::module::{Module, OpId};
+use super::value::ValueId;
+
+struct Printer<'m> {
+    m: &'m Module,
+    names: HashMap<ValueId, usize>,
+    next: usize,
+    out: String,
+}
+
+impl<'m> Printer<'m> {
+    fn name_of(&mut self, v: ValueId) -> usize {
+        if let Some(&n) = self.names.get(&v) {
+            return n;
+        }
+        let n = self.next;
+        self.next += 1;
+        self.names.insert(v, n);
+        n
+    }
+
+    fn print_op(&mut self, id: OpId, indent: usize) {
+        let op = self.m.op(id).clone();
+        let pad = "  ".repeat(indent);
+        self.out.push_str(&pad);
+        if !op.results.is_empty() {
+            let names: Vec<String> =
+                op.results.iter().map(|&r| format!("%{}", self.name_of(r))).collect();
+            let _ = write!(self.out, "{} = ", names.join(", "));
+        }
+        let _ = write!(self.out, "\"{}\"(", op.name);
+        let opnds: Vec<String> =
+            op.operands.iter().map(|&o| format!("%{}", self.name_of(o))).collect();
+        self.out.push_str(&opnds.join(", "));
+        self.out.push(')');
+        // regions (MLIR generic: region-list before attr-dict)
+        if !op.regions.is_empty() {
+            self.out.push_str(" (");
+            for (ri, r) in op.regions.iter().enumerate() {
+                if ri > 0 {
+                    self.out.push_str(", ");
+                }
+                self.out.push_str("{\n");
+                for &inner in &r.ops {
+                    self.print_op(inner, indent + 1);
+                }
+                self.out.push_str(&pad);
+                self.out.push('}');
+            }
+            self.out.push(')');
+        }
+        if !op.attrs.is_empty() {
+            self.out.push_str(" {");
+            let attrs: Vec<String> =
+                op.attrs.iter().map(|(k, v)| format!("{k} = {v}")).collect();
+            self.out.push_str(&attrs.join(", "));
+            self.out.push('}');
+        }
+        // function type
+        let in_tys: Vec<String> =
+            op.operands.iter().map(|&o| self.m.value_type(o).to_string()).collect();
+        let out_tys: Vec<String> =
+            op.results.iter().map(|&r| self.m.value_type(r).to_string()).collect();
+        let _ = write!(self.out, " : ({}) -> ({})", in_tys.join(", "), out_tys.join(", "));
+        self.out.push('\n');
+    }
+}
+
+/// Print a module in generic syntax (top-level ops, no `module {}` wrapper —
+/// the parser accepts both).
+pub fn print_module(m: &Module) -> String {
+    let mut p = Printer { m, names: HashMap::new(), next: 0, out: String::new() };
+    for id in m.top.clone() {
+        p.print_op(id, 0);
+    }
+    p.out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::builder::OpBuilder;
+    use crate::ir::types::Type;
+
+    #[test]
+    fn prints_fig1_shape() {
+        let mut m = Module::new();
+        let mut b = OpBuilder::new(&mut m);
+        b.op("olympus.make_channel")
+            .attr("encapsulatedType", Type::int(32))
+            .attr("paramType", "stream")
+            .attr("depth", 20i64)
+            .result(Type::channel_of(Type::int(32)))
+            .build();
+        let text = print_module(&m);
+        assert_eq!(
+            text.trim(),
+            "%0 = \"olympus.make_channel\"() {depth = 20, encapsulatedType = i32, paramType = \"stream\"} : () -> (!olympus.channel<i32>)"
+        );
+    }
+
+    #[test]
+    fn prints_operands_and_results() {
+        let mut m = Module::new();
+        let mut b = OpBuilder::new(&mut m);
+        let (_, ch) = b
+            .op("olympus.make_channel")
+            .result(Type::channel_of(Type::int(64)))
+            .build();
+        b.op("olympus.pc").operand(ch[0]).attr("id", 0i64).build();
+        let text = print_module(&m);
+        assert!(text.contains("\"olympus.pc\"(%0) {id = 0} : (!olympus.channel<i64>) -> ()"));
+    }
+
+    #[test]
+    fn deterministic() {
+        let mut m = Module::new();
+        let mut b = OpBuilder::new(&mut m);
+        for i in 0..5 {
+            b.op("olympus.make_channel")
+                .attr("depth", i as i64)
+                .result(Type::channel_of(Type::int(32)))
+                .build();
+        }
+        assert_eq!(print_module(&m), print_module(&m));
+    }
+}

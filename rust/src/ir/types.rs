@@ -1,0 +1,173 @@
+//! IR types: the builtin slice used by Olympus plus dialect types.
+
+use std::fmt;
+
+/// Builtin float kinds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum FloatKind {
+    F16,
+    BF16,
+    F32,
+    F64,
+}
+
+impl FloatKind {
+    pub fn bitwidth(self) -> u32 {
+        match self {
+            FloatKind::F16 | FloatKind::BF16 => 16,
+            FloatKind::F32 => 32,
+            FloatKind::F64 => 64,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            FloatKind::F16 => "f16",
+            FloatKind::BF16 => "bf16",
+            FloatKind::F32 => "f32",
+            FloatKind::F64 => "f64",
+        }
+    }
+}
+
+/// An IR type.
+///
+/// The paper's dialect encodes *all* element data as signless integers of
+/// the data's bitwidth (`encapsulatedType = i32` for an f32, a Q10.22
+/// fixed-point, or an i32 alike) — only the width matters for bandwidth
+/// planning, so [`Type::Integer`] carries just a width.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub enum Type {
+    /// `iN` — signless integer of width N.
+    Integer(u32),
+    /// `f32` etc.
+    Float(FloatKind),
+    /// `index`.
+    Index,
+    /// `none`.
+    None,
+    /// `!olympus.channel<T>` — a dataflow channel carrying elements of T.
+    Channel(Box<Type>),
+    /// `(T, ...) -> (U, ...)` — function type (used in op signatures).
+    Function(Vec<Type>, Vec<Type>),
+    /// `!dialect.name<body>` — any other dialect type, kept opaque.
+    Opaque {
+        dialect: String,
+        name: String,
+        /// Raw text between `<` and `>` (empty when absent).
+        body: String,
+    },
+}
+
+impl Type {
+    /// Shorthand for `iN`.
+    pub fn int(width: u32) -> Type {
+        Type::Integer(width)
+    }
+
+    /// Shorthand for `!olympus.channel<iN>`.
+    pub fn channel_of(elem: Type) -> Type {
+        Type::Channel(Box::new(elem))
+    }
+
+    /// Bitwidth of a data type, if meaningful.
+    pub fn bitwidth(&self) -> Option<u32> {
+        match self {
+            Type::Integer(w) => Some(*w),
+            Type::Float(k) => Some(k.bitwidth()),
+            Type::Channel(e) => e.bitwidth(),
+            _ => None,
+        }
+    }
+
+    /// Element type of a channel type.
+    pub fn channel_elem(&self) -> Option<&Type> {
+        match self {
+            Type::Channel(e) => Some(e),
+            _ => None,
+        }
+    }
+
+    pub fn is_channel(&self) -> bool {
+        matches!(self, Type::Channel(_))
+    }
+}
+
+impl fmt::Display for Type {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Type::Integer(w) => write!(f, "i{w}"),
+            Type::Float(k) => write!(f, "{}", k.name()),
+            Type::Index => write!(f, "index"),
+            Type::None => write!(f, "none"),
+            Type::Channel(e) => write!(f, "!olympus.channel<{e}>"),
+            Type::Function(ins, outs) => {
+                write!(f, "(")?;
+                for (i, t) in ins.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, ", ")?;
+                    }
+                    write!(f, "{t}")?;
+                }
+                write!(f, ") -> (")?;
+                for (i, t) in outs.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, ", ")?;
+                    }
+                    write!(f, "{t}")?;
+                }
+                write!(f, ")")
+            }
+            Type::Opaque { dialect, name, body } => {
+                if body.is_empty() {
+                    write!(f, "!{dialect}.{name}")
+                } else {
+                    write!(f, "!{dialect}.{name}<{body}>")
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_integer() {
+        assert_eq!(Type::int(32).to_string(), "i32");
+        assert_eq!(Type::int(1).to_string(), "i1");
+        assert_eq!(Type::int(512).to_string(), "i512");
+    }
+
+    #[test]
+    fn display_channel() {
+        assert_eq!(Type::channel_of(Type::int(64)).to_string(), "!olympus.channel<i64>");
+        assert_eq!(
+            Type::channel_of(Type::channel_of(Type::int(8))).to_string(),
+            "!olympus.channel<!olympus.channel<i8>>"
+        );
+    }
+
+    #[test]
+    fn bitwidths() {
+        assert_eq!(Type::int(256).bitwidth(), Some(256));
+        assert_eq!(Type::Float(FloatKind::BF16).bitwidth(), Some(16));
+        assert_eq!(Type::channel_of(Type::int(32)).bitwidth(), Some(32));
+        assert_eq!(Type::Index.bitwidth(), None);
+    }
+
+    #[test]
+    fn display_function_type() {
+        let t = Type::Function(vec![Type::int(32), Type::Index], vec![Type::int(1)]);
+        assert_eq!(t.to_string(), "(i32, index) -> (i1)");
+    }
+
+    #[test]
+    fn channel_elem_access() {
+        let c = Type::channel_of(Type::int(128));
+        assert_eq!(c.channel_elem(), Some(&Type::int(128)));
+        assert!(c.is_channel());
+        assert!(!Type::int(8).is_channel());
+    }
+}

@@ -1,0 +1,30 @@
+//! SSA values: handles, definitions and metadata.
+
+use super::types::Type;
+
+/// Handle to an SSA value in a [`crate::ir::Module`]'s value arena.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ValueId(pub u32);
+
+impl ValueId {
+    pub fn index(self) -> usize {
+        self.0 as usize
+    }
+}
+
+/// Where a value is defined.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ValueDef {
+    /// Result `idx` of operation `op`.
+    OpResult { op: super::module::OpId, idx: u32 },
+    /// Detached (created but not yet attached to an op; transient during
+    /// construction — the verifier rejects modules that still contain one).
+    Detached,
+}
+
+/// Metadata stored per value.
+#[derive(Debug, Clone)]
+pub struct ValueInfo {
+    pub ty: Type,
+    pub def: ValueDef,
+}

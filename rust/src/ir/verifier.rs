@@ -1,0 +1,158 @@
+//! Structural verifier: SSA and module-shape invariants that hold for any
+//! dialect. Dialect-specific rules live in `dialect::verify`.
+
+use std::collections::HashSet;
+
+use thiserror::Error;
+
+use super::module::{Module, OpId};
+use super::value::ValueDef;
+
+/// A verifier diagnostic.
+#[derive(Debug, Error, PartialEq)]
+pub enum VerifyError {
+    #[error("op {0:?} ('{1}') operand {2} refers to an erased/unknown defining op")]
+    DanglingOperand(OpId, String, usize),
+    #[error("op {0:?} ('{1}') result {2} does not point back to the op")]
+    BadResultDef(OpId, String, usize),
+    #[error("value {0} is detached (no defining op)")]
+    DetachedValue(u32),
+    #[error("op {0:?} appears twice in op lists")]
+    DuplicateOp(OpId),
+    #[error("op {0:?} ('{1}') uses value defined *after* it in program order")]
+    UseBeforeDef(OpId, String),
+}
+
+/// Verify structural invariants; returns all violations (empty == ok).
+pub fn verify_module(m: &Module) -> Vec<VerifyError> {
+    let mut errs = Vec::new();
+
+    // 1. No op appears twice across top + regions.
+    let mut seen: HashSet<OpId> = HashSet::new();
+    let mut order: Vec<OpId> = Vec::new();
+    let mut walk = |id: OpId, errs: &mut Vec<VerifyError>, order: &mut Vec<OpId>| {
+        if !seen.insert(id) {
+            errs.push(VerifyError::DuplicateOp(id));
+        }
+        order.push(id);
+    };
+    // program order: top-level, with region ops immediately after their parent
+    fn visit(
+        m: &Module,
+        id: OpId,
+        f: &mut impl FnMut(OpId, &mut Vec<VerifyError>, &mut Vec<OpId>),
+        errs: &mut Vec<VerifyError>,
+        order: &mut Vec<OpId>,
+    ) {
+        f(id, errs, order);
+        for r in &m.op(id).regions {
+            for &inner in &r.ops {
+                visit(m, inner, f, errs, order);
+            }
+        }
+    }
+    for id in m.top.clone() {
+        visit(m, id, &mut walk, &mut errs, &mut order);
+    }
+
+    // position in program order for use-before-def checking
+    let pos: std::collections::HashMap<OpId, usize> =
+        order.iter().enumerate().map(|(i, &o)| (o, i)).collect();
+
+    for &id in &order {
+        let op = m.op(id);
+        // 2. operands' defining ops exist and precede the user
+        for (i, &v) in op.operands.iter().enumerate() {
+            match m.value_def(v) {
+                ValueDef::Detached => errs.push(VerifyError::DetachedValue(v.0)),
+                ValueDef::OpResult { op: def_op, .. } => {
+                    if !m.op_exists(def_op) || !pos.contains_key(&def_op) {
+                        errs.push(VerifyError::DanglingOperand(id, op.name.clone(), i));
+                    } else if pos[&def_op] >= pos[&id] {
+                        errs.push(VerifyError::UseBeforeDef(id, op.name.clone()));
+                    }
+                }
+            }
+        }
+        // 3. results point back to this op with the right index
+        for (i, &r) in op.results.iter().enumerate() {
+            match m.value_def(r) {
+                ValueDef::OpResult { op: def_op, idx } if def_op == id && idx as usize == i => {}
+                _ => errs.push(VerifyError::BadResultDef(id, op.name.clone(), i)),
+            }
+        }
+    }
+    errs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::builder::OpBuilder;
+    use crate::ir::op::Operation;
+    use crate::ir::types::Type;
+
+    #[test]
+    fn clean_module_verifies() {
+        let mut m = Module::new();
+        let mut b = OpBuilder::new(&mut m);
+        let (_, ch) = b
+            .op("olympus.make_channel")
+            .result(Type::channel_of(Type::int(32)))
+            .build();
+        b.op("olympus.pc").operand(ch[0]).attr("id", 0i64).build();
+        assert!(verify_module(&m).is_empty());
+    }
+
+    #[test]
+    fn catches_dangling_operand() {
+        let mut m = Module::new();
+        let mut b = OpBuilder::new(&mut m);
+        let (cid, ch) = b
+            .op("olympus.make_channel")
+            .result(Type::channel_of(Type::int(32)))
+            .build();
+        b.op("olympus.pc").operand(ch[0]).build();
+        m.erase_op(cid);
+        let errs = verify_module(&m);
+        assert!(
+            errs.iter().any(|e| matches!(e, VerifyError::DanglingOperand(..))),
+            "{errs:?}"
+        );
+    }
+
+    #[test]
+    fn catches_use_before_def() {
+        let mut m = Module::new();
+        let mut b = OpBuilder::new(&mut m);
+        let (_, ch) = b
+            .op("olympus.make_channel")
+            .result(Type::channel_of(Type::int(32)))
+            .build();
+        // insert a user *before* the def in program order
+        b.op("olympus.pc").operand(ch[0]).at(0).build();
+        let errs = verify_module(&m);
+        assert!(errs.iter().any(|e| matches!(e, VerifyError::UseBeforeDef(..))), "{errs:?}");
+    }
+
+    #[test]
+    fn catches_detached_value() {
+        let mut m = Module::new();
+        let v = m.new_detached_value(Type::int(8));
+        let mut op = Operation::new("olympus.pc");
+        op.operands.push(v);
+        m.push_top(op);
+        let errs = verify_module(&m);
+        assert!(errs.iter().any(|e| matches!(e, VerifyError::DetachedValue(_))), "{errs:?}");
+    }
+
+    #[test]
+    fn catches_bad_result_def() {
+        let mut m = Module::new();
+        let id = m.push_top(Operation::new("olympus.make_channel"));
+        let v = m.new_detached_value(Type::int(8));
+        m.op_mut(id).results.push(v); // def not fixed up
+        let errs = verify_module(&m);
+        assert!(errs.iter().any(|e| matches!(e, VerifyError::BadResultDef(..))), "{errs:?}");
+    }
+}

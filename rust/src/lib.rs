@@ -1,0 +1,35 @@
+//! # Olympus — Platform-Aware FPGA System Architecture Generation based on MLIR
+//!
+//! Reproduction of Soldavini & Pilato (2023). The crate implements:
+//!
+//! * an MLIR-subset IR core ([`ir`]) with a parser/printer for the generic
+//!   operation syntax used by the paper's Figures 1–2;
+//! * the Olympus dialect ([`dialect`]): `olympus.make_channel`,
+//!   `olympus.kernel`, `olympus.pc` and the `!olympus.channel<iN>` type;
+//! * analyses ([`analysis`]) and transformation passes ([`passes`]) —
+//!   sanitize, channel reassignment, replication, bus widening, the Iris
+//!   bus optimization and Mnemosyne-style PLM sharing;
+//! * platform models ([`platform`]) for the Xilinx Alveo U280 and friends;
+//! * a hardware lowering ([`lower`]) producing an architecture netlist,
+//!   Vitis `.cfg`, Verilog stubs and a generated host API;
+//! * a cycle-approximate platform simulator ([`sim`]) standing in for the
+//!   Alveo card, plus a host runtime ([`host`]);
+//! * a PJRT runtime ([`runtime`]) that loads AOT-compiled JAX/Pallas kernels
+//!   (HLO text in `artifacts/`) and executes them for kernel compute units.
+//!
+//! See `DESIGN.md` for the paper → module map.
+
+pub mod analysis;
+pub mod coordinator;
+pub mod dialect;
+pub mod host;
+pub mod ir;
+pub mod iris;
+pub mod lower;
+pub mod mnemosyne;
+pub mod passes;
+pub mod platform;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+pub mod workload;

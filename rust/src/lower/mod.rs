@@ -1,0 +1,29 @@
+//! Hardware lowering (paper §V-C): turn the optimized Olympus DFG into a
+//! system architecture.
+//!
+//! The paper's backend emits a Vivado block design + Vitis `.cfg` + host
+//! API library and synthesizes a bitstream. Our backend emits the same
+//! *artifacts* — an [`Architecture`] netlist, the `.cfg` connectivity file,
+//! structural Verilog stubs and a generated host driver — and then executes
+//! the architecture on the in-tree platform simulator ([`crate::sim`])
+//! instead of on silicon (DESIGN.md §2, substitution 3).
+//!
+//! Lowering rules (paper §V-C):
+//! * `stream` channels -> FIFOs of the specified depth;
+//! * `small` channels -> PLMs in BRAM (shared via Mnemosyne groups);
+//! * `complex` channels -> direct AXI ports to the device PCs;
+//! * channels with Iris layouts -> data movers with pack/unpack adapters;
+//! * channels on `olympus.pc` terminals -> bound to physical PCs (the
+//!   `.cfg` `sp=` lines for Vitis).
+
+mod arch;
+mod cfg_emit;
+mod hdl_emit;
+mod host_emit;
+
+pub use arch::{
+    build_architecture, Architecture, CuInst, Endpoint, FifoInst, MoverDir, MoverInst, PlmInst,
+};
+pub use cfg_emit::emit_vitis_cfg;
+pub use hdl_emit::emit_verilog;
+pub use host_emit::emit_host_driver;

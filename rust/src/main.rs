@@ -1,0 +1,219 @@
+//! `olympus` — the Fig 3 flow CLI.
+//!
+//! ```text
+//! olympus platforms
+//! olympus opt   <file.mlir> [--platform u280] [--pipeline "sanitize,iris"]
+//! olympus dse   <file.mlir> [--platform u280]
+//! olympus lower <file.mlir> [--platform u280] [--pipeline ...] [--out DIR]
+//! olympus run   <file.mlir> [--platform u280] [--pipeline ...] [--artifacts DIR] [--seed N]
+//! ```
+//!
+//! `run` executes the lowered design on the platform simulator with seeded
+//! random host buffers and prints the simulation report. (clap is not
+//! vendored in this offline build; argument parsing is hand-rolled.)
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use olympus::coordinator::{render_dse_table, run_flow};
+use olympus::dialect::{ChannelView, ParamType};
+use olympus::host::Device;
+use olympus::ir::{parse_module, print_module, Module};
+use olympus::platform::{builtin, builtin_names, PlatformSpec};
+use olympus::runtime::{KernelRegistry, PjrtRuntime};
+use olympus::util::Rng;
+
+struct Args {
+    positional: Vec<String>,
+    flags: HashMap<String, String>,
+}
+
+fn parse_args(argv: &[String]) -> Args {
+    let mut positional = Vec::new();
+    let mut flags = HashMap::new();
+    let mut i = 0;
+    while i < argv.len() {
+        let a = &argv[i];
+        if let Some(name) = a.strip_prefix("--") {
+            if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                flags.insert(name.to_string(), argv[i + 1].clone());
+                i += 2;
+            } else {
+                flags.insert(name.to_string(), "true".to_string());
+                i += 1;
+            }
+        } else {
+            positional.push(a.clone());
+            i += 1;
+        }
+    }
+    Args { positional, flags }
+}
+
+fn load_platform(args: &Args) -> Result<PlatformSpec> {
+    let name = args.flags.get("platform").map(|s| s.as_str()).unwrap_or("u280");
+    if let Some(p) = builtin(name) {
+        return Ok(p);
+    }
+    // not a builtin: treat as a JSON platform file (Fig 3 "platform info")
+    PlatformSpec::load(Path::new(name))
+        .with_context(|| format!("'{name}' is neither a builtin ({builtin:?}) nor a readable platform file", builtin = builtin_names()))
+}
+
+fn load_module(path: &str) -> Result<Module> {
+    let text =
+        std::fs::read_to_string(path).with_context(|| format!("read input IR '{path}'"))?;
+    let m = parse_module(&text).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+    let errs = olympus::ir::verify_module(&m);
+    if !errs.is_empty() {
+        bail!("{path}: structural verification failed: {errs:?}");
+    }
+    let derrs = olympus::dialect::verify_dialect(&m, false);
+    if !derrs.is_empty() {
+        bail!("{path}: dialect verification failed: {derrs:?}");
+    }
+    Ok(m)
+}
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: olympus <platforms|opt|dse|lower|run> [input.mlir] \
+         [--platform NAME|file.json] [--pipeline P] [--out DIR] [--artifacts DIR] [--seed N]"
+    );
+    std::process::exit(2)
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        usage();
+    }
+    let cmd = argv[0].clone();
+    let args = parse_args(&argv[1..]);
+    match cmd.as_str() {
+        "platforms" => {
+            for n in builtin_names() {
+                let p = builtin(n).unwrap();
+                println!(
+                    "{:<14} {:>3} mem channels, {:>7.1} GB/s peak, {}",
+                    p.name,
+                    p.num_pcs(),
+                    p.total_bandwidth_gbs(),
+                    p.resources
+                );
+            }
+            Ok(())
+        }
+        "opt" => {
+            let input = args.positional.first().unwrap_or_else(|| usage());
+            let m = load_module(input)?;
+            let plat = load_platform(&args)?;
+            let pipeline = args.flags.get("pipeline").map(|s| s.as_str());
+            let r = run_flow(m, &plat, pipeline)?;
+            for rec in &r.records {
+                eprintln!(
+                    "[{}] {}{}",
+                    rec.name,
+                    if rec.changed { "changed" } else { "no-op" },
+                    rec.remarks.iter().map(|s| format!("; {s}")).collect::<String>()
+                );
+            }
+            print!("{}", print_module(&r.module));
+            Ok(())
+        }
+        "dse" => {
+            let input = args.positional.first().unwrap_or_else(|| usage());
+            let m = load_module(input)?;
+            let plat = load_platform(&args)?;
+            let r = run_flow(m, &plat, None)?;
+            print!("{}", render_dse_table(r.dse.as_ref().unwrap()));
+            Ok(())
+        }
+        "lower" => {
+            let input = args.positional.first().unwrap_or_else(|| usage());
+            let m = load_module(input)?;
+            let plat = load_platform(&args)?;
+            let pipeline = args.flags.get("pipeline").map(|s| s.as_str());
+            let out = PathBuf::from(args.flags.get("out").cloned().unwrap_or("out".into()));
+            std::fs::create_dir_all(&out)?;
+            let r = run_flow(m, &plat, pipeline)?;
+            std::fs::write(out.join("design.mlir"), print_module(&r.module))?;
+            std::fs::write(out.join("link.cfg"), &r.cfg)?;
+            std::fs::write(out.join("olympus_top.v"), &r.verilog)?;
+            std::fs::write(out.join("host_driver.rs"), &r.driver)?;
+            std::fs::write(
+                out.join("report.json"),
+                olympus::coordinator::flow_report_json(&r).to_string(),
+            )?;
+            println!(
+                "wrote design.mlir, link.cfg, olympus_top.v, host_driver.rs, report.json to {}",
+                out.display()
+            );
+            println!(
+                "bandwidth: {:.1}% efficient, {:.2} GB/s achievable; resources: {:.1}% ({})",
+                r.bandwidth.aggregate_efficiency * 100.0,
+                r.bandwidth.achieved_gbs,
+                r.resources.utilization * 100.0,
+                r.resources.binding
+            );
+            Ok(())
+        }
+        "run" => {
+            let input = args.positional.first().unwrap_or_else(|| usage());
+            let m = load_module(input)?;
+            let plat = load_platform(&args)?;
+            let pipeline = args.flags.get("pipeline").map(|s| s.as_str());
+            let artifacts =
+                PathBuf::from(args.flags.get("artifacts").cloned().unwrap_or("artifacts".into()));
+            let seed: u64 =
+                args.flags.get("seed").and_then(|s| s.parse().ok()).unwrap_or(42);
+
+            // channel payload sizes (for synthetic host buffers), pre-opt
+            let mut sizes: Vec<(String, usize)> = Vec::new();
+            {
+                let mut sane = m.clone();
+                let mut ctx = olympus::passes::PassContext::new(plat.clone());
+                olympus::passes::parse_pipeline("sanitize", &mut ctx)?.run(&mut sane, &ctx)?;
+                for ch in ChannelView::all(&sane) {
+                    let name =
+                        sane.op(ch.op).str_attr("name").unwrap_or("ch").to_string();
+                    let elems = match ch.param_type(&sane) {
+                        Some(ParamType::Complex) => (ch.depth(&sane) / 4).max(1) as usize,
+                        _ => ch.depth(&sane) as usize,
+                    };
+                    sizes.push((name, elems));
+                }
+            }
+
+            let r = run_flow(m, &plat, pipeline)?;
+            let rt = Arc::new(PjrtRuntime::cpu()?);
+            let registry = KernelRegistry::load(rt, &artifacts)?;
+            let mut dev = Device::program(r.arch.clone(), registry)?;
+            dev.set_utilization(r.resources.utilization);
+            let mut rng = Rng::new(seed);
+            let names: Vec<String> =
+                dev.channel_names().iter().map(|s| s.to_string()).collect();
+            for name in &names {
+                // feed every read-side channel (clones included)
+                let base = name.split('.').next().unwrap_or(name);
+                if let Some((_, elems)) = sizes.iter().find(|(n, _)| n == base || n == name) {
+                    let data = rng.vecf32(*elems);
+                    let _ = dev.write_buffer(name, &data);
+                }
+            }
+            let metrics = dev.run()?;
+            println!("{metrics}");
+            for name in &names {
+                if let Ok(out) = dev.read_buffer(name) {
+                    let sum: f32 = out.iter().sum();
+                    println!("output '{name}': {} elems, checksum {sum:.4}", out.len());
+                }
+            }
+            Ok(())
+        }
+        _ => usage(),
+    }
+}

@@ -1,0 +1,202 @@
+//! Compatibility-graph construction + greedy clique partitioning.
+
+/// Sharing-relevant facts about one buffer.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CompatInfo {
+    /// Stable buffer name (the channel's `name` attribute).
+    pub name: String,
+    /// Storage demand in BRAM36 blocks.
+    pub brams: u64,
+    /// Execution phase; buffers in different phases are never live together
+    /// (temporal compatibility).
+    pub phase: Option<i64>,
+    /// Explicit spatial-compatibility tag: same tag => may share a memory.
+    pub share_group: Option<String>,
+}
+
+/// Two buffers may share one physical memory iff temporally or spatially
+/// compatible.
+pub fn compatible(a: &CompatInfo, b: &CompatInfo) -> bool {
+    let temporal = match (a.phase, b.phase) {
+        (Some(pa), Some(pb)) => pa != pb,
+        _ => false,
+    };
+    let spatial = match (&a.share_group, &b.share_group) {
+        (Some(ga), Some(gb)) => ga == gb,
+        _ => false,
+    };
+    temporal || spatial
+}
+
+/// One shared physical memory.
+#[derive(Debug, Clone)]
+pub struct SharingGroup {
+    /// Member buffer names.
+    pub members: Vec<String>,
+    /// BRAMs of the physical memory: max of members (temporal sharing keeps
+    /// only one member's data live at a time).
+    pub brams: u64,
+    /// BRAMs saved vs. separate memories.
+    pub saved: u64,
+}
+
+/// A full sharing plan.
+#[derive(Debug, Clone, Default)]
+pub struct SharingPlan {
+    pub groups: Vec<SharingGroup>,
+}
+
+impl SharingPlan {
+    pub fn total_saved(&self) -> u64 {
+        self.groups.iter().map(|g| g.saved).sum()
+    }
+}
+
+/// Greedy clique partition: biggest buffers first, each placed into the
+/// first group whose *every* member is compatible (sharing requires mutual
+/// compatibility), else a new group.
+pub fn plan_sharing(buffers: &[CompatInfo]) -> SharingPlan {
+    let mut order: Vec<usize> = (0..buffers.len()).collect();
+    order.sort_by(|&a, &b| buffers[b].brams.cmp(&buffers[a].brams));
+
+    let mut groups: Vec<Vec<usize>> = Vec::new();
+    for i in order {
+        let slot = groups
+            .iter_mut()
+            .find(|g| g.iter().all(|&j| compatible(&buffers[i], &buffers[j])));
+        match slot {
+            Some(g) => g.push(i),
+            None => groups.push(vec![i]),
+        }
+    }
+
+    SharingPlan {
+        groups: groups
+            .into_iter()
+            .map(|g| {
+                let total: u64 = g.iter().map(|&i| buffers[i].brams).sum();
+                let brams = g.iter().map(|&i| buffers[i].brams).max().unwrap_or(0);
+                SharingGroup {
+                    members: g.iter().map(|&i| buffers[i].name.clone()).collect(),
+                    brams,
+                    saved: total - brams,
+                }
+            })
+            .collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn buf(name: &str, brams: u64, phase: Option<i64>, group: Option<&str>) -> CompatInfo {
+        CompatInfo { name: name.into(), brams, phase, share_group: group.map(|s| s.into()) }
+    }
+
+    #[test]
+    fn different_phases_share() {
+        let plan = plan_sharing(&[buf("a", 8, Some(0), None), buf("b", 6, Some(1), None)]);
+        assert_eq!(plan.groups.len(), 1);
+        assert_eq!(plan.groups[0].brams, 8);
+        assert_eq!(plan.total_saved(), 6);
+    }
+
+    #[test]
+    fn same_phase_does_not_share() {
+        let plan = plan_sharing(&[buf("a", 8, Some(0), None), buf("b", 6, Some(0), None)]);
+        assert_eq!(plan.groups.len(), 2);
+        assert_eq!(plan.total_saved(), 0);
+    }
+
+    #[test]
+    fn no_info_no_sharing() {
+        let plan = plan_sharing(&[buf("a", 8, None, None), buf("b", 6, None, None)]);
+        assert_eq!(plan.groups.len(), 2);
+    }
+
+    #[test]
+    fn spatial_tag_shares() {
+        let plan =
+            plan_sharing(&[buf("a", 4, None, Some("g")), buf("b", 4, None, Some("g"))]);
+        assert_eq!(plan.groups.len(), 1);
+        assert_eq!(plan.total_saved(), 4);
+    }
+
+    #[test]
+    fn mutual_compatibility_required() {
+        // a(phase 0), b(phase 1), c(phase 1): c shares with a but NOT with b
+        let plan = plan_sharing(&[
+            buf("a", 10, Some(0), None),
+            buf("b", 9, Some(1), None),
+            buf("c", 8, Some(1), None),
+        ]);
+        // {a, b} share; c can't join (b and c same phase) -> own group
+        assert_eq!(plan.groups.len(), 2);
+        assert_eq!(plan.total_saved(), 9);
+    }
+
+    #[test]
+    fn three_phase_pipeline_saves_two_thirds() {
+        let bufs: Vec<CompatInfo> =
+            (0..6).map(|i| buf(&format!("t{i}"), 10, Some(i % 3), None)).collect();
+        let plan = plan_sharing(&bufs);
+        // 6 buffers in 3 phases -> groups of 3 distinct phases, 2 groups
+        assert_eq!(plan.groups.len(), 2);
+        assert_eq!(plan.total_saved(), 40, "60 brams packed into 20");
+    }
+
+    #[test]
+    fn sharing_plan_is_sound() {
+        use crate::util::{prop, Rng};
+        prop::check("mnemosyne-sound", 50, 20, |rng: &mut Rng, size| {
+            let n = 1 + rng.range(0, size.max(1));
+            let bufs: Vec<CompatInfo> = (0..n)
+                .map(|i| {
+                    buf(
+                        &format!("b{i}"),
+                        rng.range(1, 64) as u64,
+                        rng.chance(0.7).then(|| rng.range(0, 4) as i64),
+                        rng.chance(0.3).then(|| "s".to_string()).as_deref(),
+                    )
+                })
+                .collect();
+            let plan = plan_sharing(&bufs);
+            // every buffer appears exactly once
+            let mut seen = std::collections::HashSet::new();
+            for g in &plan.groups {
+                for m in &g.members {
+                    if !seen.insert(m.clone()) {
+                        return Err(format!("{m} in two groups"));
+                    }
+                }
+                // pairwise compatibility within the group
+                for x in &g.members {
+                    for y in &g.members {
+                        if x != y {
+                            let bx = bufs.iter().find(|b| &b.name == x).unwrap();
+                            let by = bufs.iter().find(|b| &b.name == y).unwrap();
+                            if !compatible(bx, by) {
+                                return Err(format!("{x} and {y} share but are incompatible"));
+                            }
+                        }
+                    }
+                }
+                // group memory == max member
+                let mx = g
+                    .members
+                    .iter()
+                    .map(|m| bufs.iter().find(|b| &b.name == m).unwrap().brams)
+                    .max()
+                    .unwrap();
+                if g.brams != mx {
+                    return Err("group size != max member".into());
+                }
+            }
+            if seen.len() != bufs.len() {
+                return Err("buffer lost".into());
+            }
+            Ok(())
+        });
+    }
+}

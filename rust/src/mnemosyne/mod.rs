@@ -1,0 +1,14 @@
+//! Mnemosyne-style PLM sharing (Pilato et al., TCAD'17 — paper reference
+//! [15]): share physical BRAM between `small` buffers that are never alive
+//! at the same time (temporal compatibility) or that can coexist in one
+//! physical memory's ports (spatial compatibility).
+//!
+//! "This information can be detected by static compiler analysis and
+//! supplied as additional information" (paper §V-B) — here it arrives as
+//! channel attributes: `phase = <int>` (buffers of different phases are
+//! never simultaneously live) and `share_group = "<tag>"` (explicitly
+//! spatially compatible).
+
+mod compat;
+
+pub use compat::{plan_sharing, CompatInfo, SharingPlan, SharingGroup};

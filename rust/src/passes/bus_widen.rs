@@ -1,0 +1,275 @@
+//! Bus-widening pass (paper §V-B, Fig 7).
+//!
+//! When data widths divide the PC width, a kernel is replicated so multiple
+//! instances share the full word: a 64-bit-input kernel on a 256-bit PC
+//! becomes 4 instances, each reading one 64-bit *lane*. The pass:
+//!
+//! 1. widens each of the kernel's global stream channels to
+//!    `elem_bits × lanes`, with a multi-lane layout (Fig 7b);
+//! 2. replaces the kernel with an `olympus.super_node` whose region holds
+//!    `lanes` clones of the kernel (Fig 7a's dashed super-node);
+//! 3. data movers later split the lanes and feed the right instance.
+//!
+//! Options: `bus-widen.width` (bits, default: the platform's widest memory
+//! port), `bus-widen.max-lanes` (0 = unbounded).
+
+use anyhow::Result;
+
+use crate::analysis::{analyze_resources, Dfg};
+use crate::dialect::{
+    ChannelView, KernelView, Layout, LayoutField, ParamType, OP_KERNEL, OP_SUPER_NODE,
+};
+use crate::ir::{Attribute, Module, OpId, Operation, Region, Type, ValueId};
+
+use super::manager::{Pass, PassContext, PassOutcome};
+
+pub struct BusWiden;
+
+/// Compute feasible lanes for one kernel: every global stream operand must
+/// have the same `width / elem_bits` ratio >= 2.
+fn feasible_lanes(m: &Module, k: &KernelView, width: u64) -> Option<u32> {
+    let op = m.op(k.op);
+    let mut lanes: Option<u32> = None;
+    let mut n_mem_stream = 0;
+    for &v in &op.operands {
+        let ch = ChannelView::from_value(m, v)?;
+        if ch.param_type(m) != Some(ParamType::Stream) {
+            return None; // only pure-stream kernels are widened
+        }
+        if !ch.is_global(m) {
+            return None; // internal channels would need matched widening
+        }
+        n_mem_stream += 1;
+        let eb = ch.elem_bits(m) as u64;
+        if eb == 0 || width % eb != 0 {
+            return None;
+        }
+        let l = (width / eb) as u32;
+        match lanes {
+            None => lanes = Some(l),
+            Some(prev) if prev == l => {}
+            _ => return None, // mixed widths: Iris handles those instead
+        }
+    }
+    if n_mem_stream == 0 {
+        return None;
+    }
+    lanes.filter(|&l| l >= 2)
+}
+
+/// Widen channel `ch` to `lanes` lanes, preserving PC terminals. Returns the
+/// new channel value.
+fn widen_channel(m: &mut Module, ch: ChannelView, lanes: u32) -> ValueId {
+    let old = m.op(ch.op).clone();
+    let old_val = old.results[0];
+    let elem_bits = ch.elem_bits(m).max(1);
+    let name = old.attrs.get("name").and_then(|a| a.as_str()).unwrap_or("ch").to_string();
+    let old_layout = ch.layout(m);
+    let words = old_layout.as_ref().map(|l| l.depth).unwrap_or_else(|| ch.depth(m));
+
+    let mut clone = old.clone();
+    clone.results.clear();
+    let fields = (0..lanes)
+        .map(|j| LayoutField {
+            array: format!("{name}.l{j}"),
+            elem_bits,
+            count: 1,
+            offset_bits: j * elem_bits,
+        })
+        .collect();
+    let layout = Layout {
+        word_bits: elem_bits * lanes,
+        depth: words.div_ceil(lanes as u64).max(1),
+        lanes,
+        fields,
+    };
+    clone.attrs.insert("layout".into(), layout.to_attr());
+
+    let pos = m.top.iter().position(|&o| o == ch.op).unwrap_or(m.top.len());
+    let id = m.insert_top_at(pos, clone);
+    let v = m.new_result(id, 0, Type::channel_of(Type::int(elem_bits * lanes)));
+    m.op_mut(id).results.push(v);
+    // move all uses (kernel + pc) to the widened channel, drop the old op
+    m.replace_all_uses(old_val, v);
+    m.erase_op(ch.op);
+    v
+}
+
+impl Pass for BusWiden {
+    fn name(&self) -> &'static str {
+        "bus-widen"
+    }
+
+    fn run(&self, m: &mut Module, ctx: &PassContext) -> Result<PassOutcome> {
+        let default_width =
+            ctx.platform.pcs.iter().map(|p| p.width_bits).max().unwrap_or(256) as u64;
+        let width = ctx.opt_u64("bus-widen.width", default_width);
+        let max_lanes = ctx.opt_u64("bus-widen.max-lanes", 0);
+
+        let kernels: Vec<KernelView> = KernelView::all(m);
+        if kernels.is_empty() {
+            return Ok(PassOutcome::unchanged());
+        }
+        let plat = &ctx.platform;
+        let mut changed = false;
+        let mut remarks = Vec::new();
+
+        for k in kernels {
+            let Some(mut lanes) = feasible_lanes(m, &k, width) else { continue };
+            if max_lanes >= 2 {
+                lanes = lanes.min(max_lanes as u32);
+            }
+            // shrink lanes until the replicated kernels fit the fabric
+            let base = analyze_resources(m, plat, &Dfg::build(m));
+            let kres = k.resources(m);
+            while lanes >= 2 {
+                let extra = kres * (lanes as u64 - 1);
+                if (base.total + extra).fits(&plat.resources, plat.util_limit) {
+                    break;
+                }
+                lanes /= 2;
+            }
+            if lanes < 2 {
+                continue;
+            }
+
+            let kop = m.op(k.op).clone();
+            // widen every operand channel
+            let mut new_operands = Vec::with_capacity(kop.operands.len());
+            for &v in &kop.operands {
+                let ch = ChannelView::from_value(m, v).expect("checked in feasible_lanes");
+                new_operands.push(widen_channel(m, ch, lanes));
+            }
+
+            // build the super-node at the kernel's position
+            let mut sn = Operation::new(OP_SUPER_NODE);
+            sn.operands = new_operands.clone();
+            sn.attrs = kop.attrs.clone();
+            sn.attrs.insert("lanes".into(), Attribute::Int(lanes as i64));
+            let pos = m.top.iter().position(|&o| o == k.op).unwrap_or(m.top.len());
+            let sn_id: OpId = m.insert_top_at(pos, sn);
+            // region with `lanes` kernel clones
+            let mut members = Vec::new();
+            for lane in 0..lanes {
+                let mut clone = Operation::new(OP_KERNEL);
+                clone.operands = new_operands.clone();
+                clone.attrs = kop.attrs.clone();
+                clone.attrs.insert("lane".into(), Attribute::Int(lane as i64));
+                members.push(m.insert_op(clone));
+            }
+            m.op_mut(sn_id).regions.push(Region { ops: members });
+            m.erase_op(k.op);
+
+            changed = true;
+            remarks.push(format!(
+                "kernel '{}' widened to {lanes} lanes on a {width}-bit bus",
+                kop.attrs.get("callee").and_then(|a| a.as_str()).unwrap_or("?")
+            ));
+        }
+        Ok(PassOutcome { changed, remarks })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dialect::build::fig4a_module;
+    use crate::dialect::PcView;
+    use crate::ir::verify_module;
+    use crate::passes::sanitize::Sanitize;
+    use crate::platform::builtin;
+
+    fn ctx() -> PassContext {
+        PassContext::new(builtin("u280").unwrap())
+    }
+
+    #[test]
+    fn fig7_widen_128() {
+        let mut m = fig4a_module();
+        Sanitize.run(&mut m, &ctx()).unwrap();
+        let c = ctx().with_opt("bus-widen.width", "128");
+        let out = BusWiden.run(&mut m, &c).unwrap();
+        assert!(out.changed);
+        assert!(verify_module(&m).is_empty());
+        // kernel replaced by a super-node with 4 lanes (128 / 32)
+        assert!(KernelView::all(&m).is_empty());
+        let sns = m.top_ops_named(OP_SUPER_NODE);
+        assert_eq!(sns.len(), 1);
+        let sn = m.op(sns[0]);
+        assert_eq!(sn.int_attr("lanes"), Some(4));
+        assert_eq!(sn.regions[0].ops.len(), 4);
+        // channels widened: 128-bit words, 4-lane layout, depth / 4
+        for ch in ChannelView::all(&m) {
+            let l = ch.layout(&m).unwrap();
+            assert_eq!(l.word_bits, 128);
+            assert_eq!(l.lanes, 4);
+            assert_eq!(l.depth, 256);
+            assert_eq!(l.fields.len(), 4);
+            assert!((l.efficiency() - 1.0).abs() < 1e-9);
+            // encapsulatedType still records the logical 32-bit element
+            assert_eq!(ch.elem_bits(&m), 32);
+        }
+        // PC terminals survived the rewiring
+        assert_eq!(PcView::all(&m).len(), 3);
+    }
+
+    #[test]
+    fn indivisible_width_is_skipped() {
+        let mut m = fig4a_module();
+        Sanitize.run(&mut m, &ctx()).unwrap();
+        let c = ctx().with_opt("bus-widen.width", "48");
+        let out = BusWiden.run(&mut m, &c).unwrap();
+        assert!(!out.changed);
+        assert_eq!(KernelView::all(&m).len(), 1);
+    }
+
+    #[test]
+    fn max_lanes_caps_replication() {
+        let mut m = fig4a_module();
+        Sanitize.run(&mut m, &ctx()).unwrap();
+        let c = ctx()
+            .with_opt("bus-widen.width", "256")
+            .with_opt("bus-widen.max-lanes", "2");
+        BusWiden.run(&mut m, &c).unwrap();
+        let sn = m.top_ops_named(OP_SUPER_NODE)[0];
+        assert_eq!(m.op(sn).int_attr("lanes"), Some(2));
+    }
+
+    #[test]
+    fn resource_pressure_shrinks_lanes() {
+        use crate::dialect::{DfgBuilder, KernelEst, ParamType, ResourceVec};
+        let mut b = DfgBuilder::new();
+        let a = b.channel(32, ParamType::Stream, 1024);
+        let o = b.channel(32, ParamType::Stream, 1024);
+        // ~26% of U280 LUTs per kernel: only 2 extra copies fit under 80%
+        b.kernel(
+            "big",
+            &[a],
+            &[o],
+            KernelEst { latency: 1, ii: 1, res: ResourceVec::new(0, 340_000, 0, 0, 0) },
+        );
+        let mut m = b.finish();
+        Sanitize.run(&mut m, &ctx()).unwrap();
+        let c = ctx().with_opt("bus-widen.width", "256");
+        BusWiden.run(&mut m, &c).unwrap();
+        let sns = m.top_ops_named(OP_SUPER_NODE);
+        assert_eq!(sns.len(), 1);
+        // 8 lanes don't fit; halved to 2 (8 -> 4 -> 2)
+        assert_eq!(m.op(sns[0]).int_attr("lanes"), Some(2));
+    }
+
+    #[test]
+    fn internal_channels_block_widening() {
+        use crate::dialect::{DfgBuilder, ParamType};
+        let mut b = DfgBuilder::new();
+        let x = b.channel(32, ParamType::Stream, 64);
+        let y = b.channel(32, ParamType::Stream, 64);
+        let z = b.channel(32, ParamType::Stream, 64);
+        b.kernel("k1", &[x], &[y], Default::default());
+        b.kernel("k2", &[y], &[z], Default::default());
+        let mut m = b.finish();
+        Sanitize.run(&mut m, &ctx()).unwrap();
+        let out = BusWiden.run(&mut m, &ctx()).unwrap();
+        assert!(!out.changed, "kernels with internal channels are not widened");
+    }
+}

@@ -1,0 +1,124 @@
+//! Canonicalization: dead-channel elimination + duplicate-PC cleanup.
+
+use anyhow::Result;
+
+use crate::dialect::{ChannelView, PcView};
+use crate::ir::Module;
+
+use super::manager::{Pass, PassContext, PassOutcome};
+
+pub struct Canonicalize;
+
+impl Pass for Canonicalize {
+    fn name(&self) -> &'static str {
+        "canonicalize"
+    }
+
+    fn run(&self, m: &mut Module, _ctx: &PassContext) -> Result<PassOutcome> {
+        let mut changed = false;
+        let mut removed_pcs = 0;
+        let mut removed_channels = 0;
+
+        // duplicate PC terminals on the same channel with the same id
+        let mut seen: std::collections::HashSet<(crate::ir::ValueId, u32)> =
+            std::collections::HashSet::new();
+        for pc in PcView::all(m) {
+            let Some(&v) = m.op(pc.op).operands.first() else { continue };
+            let id = pc.id(m);
+            if !seen.insert((v, id)) {
+                m.erase_op(pc.op);
+                removed_pcs += 1;
+                changed = true;
+            }
+        }
+
+        // channels with no users at all (no kernels, no pc, not a bus member)
+        loop {
+            let use_map = m.use_map();
+            let dead: Vec<_> = ChannelView::all(m)
+                .into_iter()
+                .filter(|ch| {
+                    use_map.get(&ch.value(m)).map(|u| u.is_empty()).unwrap_or(true)
+                        && m.op(ch.op).str_attr("via_bus").is_none()
+                        && m.op(ch.op).attr("iris_members").is_none()
+                })
+                .collect();
+            if dead.is_empty() {
+                break;
+            }
+            for ch in dead {
+                m.erase_op(ch.op);
+                removed_channels += 1;
+                changed = true;
+            }
+        }
+
+        let mut out = PassOutcome { changed, remarks: vec![] };
+        if removed_pcs > 0 {
+            out = out.remark(format!("removed {removed_pcs} duplicate pc terminals"));
+        }
+        if removed_channels > 0 {
+            out = out.remark(format!("removed {removed_channels} dead channels"));
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dialect::{DfgBuilder, ParamType};
+    use crate::platform::builtin;
+
+    fn ctx() -> PassContext {
+        PassContext::new(builtin("u280").unwrap())
+    }
+
+    #[test]
+    fn removes_dead_channel() {
+        let mut b = DfgBuilder::new();
+        let _dead = b.channel(32, ParamType::Stream, 8);
+        let live = b.channel(32, ParamType::Stream, 8);
+        b.kernel("k", &[live], &[], Default::default());
+        let mut m = b.finish();
+        let out = Canonicalize.run(&mut m, &ctx()).unwrap();
+        assert!(out.changed);
+        assert_eq!(ChannelView::all(&m).len(), 1);
+    }
+
+    #[test]
+    fn dedups_pc_terminals() {
+        let mut b = DfgBuilder::new();
+        let x = b.channel(32, ParamType::Stream, 8);
+        b.kernel("k", &[x], &[], Default::default());
+        b.pc(x, 0);
+        b.pc(x, 0);
+        b.pc(x, 1); // different id: kept
+        let mut m = b.finish();
+        Canonicalize.run(&mut m, &ctx()).unwrap();
+        assert_eq!(PcView::all(&m).len(), 2);
+    }
+
+    #[test]
+    fn keeps_bus_channels() {
+        use crate::ir::Attribute;
+        let mut b = DfgBuilder::new();
+        let x = b.channel(256, ParamType::Stream, 8);
+        let mut m = b.finish();
+        let ch = ChannelView::all(&m)[0];
+        m.op_mut(ch.op).set_attr("iris_members", Attribute::Array(vec![]));
+        let out = Canonicalize.run(&mut m, &ctx()).unwrap();
+        assert!(!out.changed);
+        let _ = x;
+    }
+
+    #[test]
+    fn idempotent() {
+        let mut b = DfgBuilder::new();
+        let x = b.channel(32, ParamType::Stream, 8);
+        b.kernel("k", &[x], &[], Default::default());
+        let mut m = b.finish();
+        Canonicalize.run(&mut m, &ctx()).unwrap();
+        assert!(!Canonicalize.run(&mut m, &ctx()).unwrap().changed);
+    }
+}

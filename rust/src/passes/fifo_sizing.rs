@@ -1,0 +1,132 @@
+//! FIFO-sizing pass (an Olympus-opt extension the paper's flow leaves to
+//! the backend): memory-facing stream FIFOs don't need to hold the whole
+//! transfer — they only rate-decouple the data mover from the kernel, so a
+//! double-buffered burst is enough. Shrinking them converts BRAM into
+//! replication headroom, like the PLM optimization does.
+//!
+//! The physical FIFO depth is recorded as a `fifo_depth` attribute; the
+//! `depth` attribute keeps its paper semantics (total payload), which the
+//! movers and the bandwidth analysis still use.
+//!
+//! Options: `fifo-sizing.burst` — mover burst length in words (default 64).
+
+use anyhow::Result;
+
+use crate::analysis::Dfg;
+use crate::dialect::ParamType;
+use crate::ir::{Attribute, Module};
+
+use super::manager::{Pass, PassContext, PassOutcome};
+
+pub struct FifoSizing;
+
+impl Pass for FifoSizing {
+    fn name(&self) -> &'static str {
+        "fifo-sizing"
+    }
+
+    fn run(&self, m: &mut Module, ctx: &PassContext) -> Result<PassOutcome> {
+        let burst = ctx.opt_u64("fifo-sizing.burst", 64).max(1);
+        let dfg = Dfg::build(m);
+        let mut changed = false;
+        let mut shrunk = 0u64;
+        // memory-facing streams + iris members (their FIFO sits behind the
+        // bus unpacker, same double-buffering argument)
+        let mut candidates = Vec::new();
+        for b in &dfg.memory_channels {
+            candidates.push(b.channel);
+        }
+        for ch in &dfg.internal_channels {
+            if m.op(ch.op).str_attr("via_bus").is_some() {
+                candidates.push(*ch);
+            }
+        }
+        for ch in candidates {
+            if ch.param_type(m) != Some(ParamType::Stream) {
+                continue;
+            }
+            if m.op(ch.op).attr("iris_members").is_some() {
+                continue; // bus channels have no on-chip FIFO
+            }
+            let depth = ch.depth(m);
+            let target = 2 * burst;
+            let existing = m.op(ch.op).int_attr("fifo_depth").map(|v| v.max(0) as u64);
+            if depth > target && existing != Some(target) {
+                m.op_mut(ch.op).set_attr("fifo_depth", Attribute::Int(target as i64));
+                shrunk += 1;
+                changed = true;
+            }
+        }
+        Ok(PassOutcome {
+            changed,
+            remarks: vec![format!("double-buffered {shrunk} memory-facing FIFOs at {burst}-word bursts")],
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::analyze_resources;
+    use crate::dialect::build::fig4a_module;
+    use crate::dialect::ChannelView;
+    use crate::passes::sanitize::Sanitize;
+    use crate::platform::builtin;
+
+    fn ctx() -> PassContext {
+        PassContext::new(builtin("u280").unwrap())
+    }
+
+    #[test]
+    fn shrinks_memory_fifos() {
+        let mut m = fig4a_module();
+        Sanitize.run(&mut m, &ctx()).unwrap();
+        let out = FifoSizing.run(&mut m, &ctx()).unwrap();
+        assert!(out.changed);
+        for ch in ChannelView::all(&m) {
+            assert_eq!(m.op(ch.op).int_attr("fifo_depth"), Some(128));
+            assert_eq!(ch.depth(&m), 1024, "payload depth untouched");
+        }
+    }
+
+    #[test]
+    fn saves_bram() {
+        use crate::dialect::{DfgBuilder, ParamType};
+        // deep 256-bit stream: full-depth FIFO would burn many BRAM36
+        let mut b = DfgBuilder::new();
+        let x = b.channel(256, ParamType::Stream, 64 * 1024);
+        b.kernel("k", &[x], &[], Default::default());
+        let mut m = b.finish();
+        Sanitize.run(&mut m, &ctx()).unwrap();
+        let plat = builtin("u280").unwrap();
+        let before = analyze_resources(&m, &plat, &crate::analysis::Dfg::build(&m));
+        FifoSizing.run(&mut m, &ctx()).unwrap();
+        let after = analyze_resources(&m, &plat, &crate::analysis::Dfg::build(&m));
+        assert!(
+            after.total.bram < before.total.bram / 10,
+            "before {} after {}",
+            before.total.bram,
+            after.total.bram
+        );
+    }
+
+    #[test]
+    fn shallow_fifos_untouched() {
+        use crate::dialect::{DfgBuilder, ParamType};
+        let mut b = DfgBuilder::new();
+        let x = b.channel(32, ParamType::Stream, 16);
+        b.kernel("k", &[x], &[], Default::default());
+        let mut m = b.finish();
+        Sanitize.run(&mut m, &ctx()).unwrap();
+        let out = FifoSizing.run(&mut m, &ctx()).unwrap();
+        assert!(!out.changed);
+    }
+
+    #[test]
+    fn idempotent() {
+        let mut m = fig4a_module();
+        Sanitize.run(&mut m, &ctx()).unwrap();
+        FifoSizing.run(&mut m, &ctx()).unwrap();
+        assert!(!FifoSizing.run(&mut m, &ctx()).unwrap().changed);
+    }
+}

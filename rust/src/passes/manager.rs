@@ -1,0 +1,246 @@
+//! Pass trait, context, manager and pipeline parsing.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use crate::dialect::verify_dialect;
+use crate::ir::{verify_module, Module};
+use crate::platform::PlatformSpec;
+
+/// Options + platform shared by all passes in a pipeline.
+#[derive(Debug, Clone)]
+pub struct PassContext {
+    pub platform: PlatformSpec,
+    /// Pass-specific options, e.g. `{"factor": "4"}` for `replicate{factor=4}`.
+    pub opts: BTreeMap<String, String>,
+}
+
+impl PassContext {
+    pub fn new(platform: PlatformSpec) -> Self {
+        PassContext { platform, opts: BTreeMap::new() }
+    }
+
+    pub fn with_opt(mut self, k: &str, v: &str) -> Self {
+        self.opts.insert(k.to_string(), v.to_string());
+        self
+    }
+
+    pub fn opt_u64(&self, key: &str, default: u64) -> u64 {
+        self.opts.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn opt_f64(&self, key: &str, default: f64) -> f64 {
+        self.opts.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn opt_bool(&self, key: &str, default: bool) -> bool {
+        self.opts.get(key).map(|s| s == "true" || s == "1").unwrap_or(default)
+    }
+}
+
+/// What a pass reports back.
+#[derive(Debug, Clone, Default)]
+pub struct PassOutcome {
+    pub changed: bool,
+    /// Human-readable remarks (printed by the CLI with `-v`).
+    pub remarks: Vec<String>,
+}
+
+impl PassOutcome {
+    pub fn changed(msg: impl Into<String>) -> Self {
+        PassOutcome { changed: true, remarks: vec![msg.into()] }
+    }
+
+    pub fn unchanged() -> Self {
+        PassOutcome::default()
+    }
+
+    pub fn remark(mut self, msg: impl Into<String>) -> Self {
+        self.remarks.push(msg.into());
+        self
+    }
+}
+
+/// A transformation or analysis pass over a module.
+pub trait Pass {
+    fn name(&self) -> &'static str;
+    fn run(&self, m: &mut Module, ctx: &PassContext) -> Result<PassOutcome>;
+}
+
+/// Per-pass execution record.
+#[derive(Debug, Clone)]
+pub struct PassRecord {
+    pub name: &'static str,
+    pub changed: bool,
+    pub remarks: Vec<String>,
+    pub micros: u128,
+}
+
+/// Ordered pass pipeline with verification between passes.
+pub struct PassManager {
+    passes: Vec<Box<dyn Pass>>,
+    /// Verify structural + dialect invariants after each pass (on by default).
+    pub verify_each: bool,
+    /// Require PC terminals only on global channels (post-sanitize rule).
+    pub strict_pc: bool,
+}
+
+impl Default for PassManager {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl PassManager {
+    pub fn new() -> Self {
+        PassManager { passes: Vec::new(), verify_each: true, strict_pc: false }
+    }
+
+    pub fn add(&mut self, pass: Box<dyn Pass>) -> &mut Self {
+        self.passes.push(pass);
+        self
+    }
+
+    pub fn len(&self) -> usize {
+        self.passes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.passes.is_empty()
+    }
+
+    /// Run all passes in order; fails fast on the first verifier violation.
+    pub fn run(&self, m: &mut Module, ctx: &PassContext) -> Result<Vec<PassRecord>> {
+        let mut records = Vec::new();
+        for pass in &self.passes {
+            let t0 = Instant::now();
+            let outcome = pass.run(m, ctx)?;
+            let micros = t0.elapsed().as_micros();
+            if self.verify_each {
+                let errs = verify_module(m);
+                if !errs.is_empty() {
+                    bail!("pass '{}' broke structural invariants: {:?}", pass.name(), errs);
+                }
+                let derrs = verify_dialect(m, self.strict_pc);
+                if !derrs.is_empty() {
+                    bail!("pass '{}' broke dialect invariants: {:?}", pass.name(), derrs);
+                }
+            }
+            records.push(PassRecord {
+                name: pass.name(),
+                changed: outcome.changed,
+                remarks: outcome.remarks,
+                micros,
+            });
+        }
+        Ok(records)
+    }
+}
+
+/// Instantiate a pass by name (the `olympus-opt` pass registry).
+pub fn make_pass(name: &str) -> Result<Box<dyn Pass>> {
+    Ok(match name {
+        "sanitize" => Box::new(super::sanitize::Sanitize),
+        "channel-reassign" => Box::new(super::channel_reassign::ChannelReassign),
+        "replicate" => Box::new(super::replicate::Replicate),
+        "bus-widen" => Box::new(super::bus_widen::BusWiden),
+        "iris" => Box::new(super::iris::IrisBusOpt),
+        "plm-share" => Box::new(super::plm_share::PlmShare),
+        "fifo-sizing" => Box::new(super::fifo_sizing::FifoSizing),
+        "canonicalize" => Box::new(super::canonicalize::Canonicalize),
+        other => bail!("unknown pass '{other}' (see `olympus opt --help` for the registry)"),
+    })
+}
+
+/// Parse a `pass1,pass2{k=v,k2=v2},pass3` pipeline string. Options apply to
+/// the whole context (pass options are namespaced by convention:
+/// `replicate.factor`, `bus-widen.width`, ...).
+pub fn parse_pipeline(spec: &str, ctx: &mut PassContext) -> Result<PassManager> {
+    let mut pm = PassManager::new();
+    let mut rest = spec.trim();
+    while !rest.is_empty() {
+        // pass name up to ',' or '{'
+        let end = rest.find(['{', ',']).unwrap_or(rest.len());
+        let name = rest[..end].trim();
+        if name.is_empty() {
+            bail!("empty pass name in pipeline '{spec}'");
+        }
+        rest = &rest[end..];
+        if rest.starts_with('{') {
+            let close = rest.find('}').ok_or_else(|| anyhow::anyhow!("unclosed '{{' in pipeline"))?;
+            for kv in rest[1..close].split(',') {
+                let kv = kv.trim();
+                if kv.is_empty() {
+                    continue;
+                }
+                let (k, v) = kv
+                    .split_once('=')
+                    .ok_or_else(|| anyhow::anyhow!("bad option '{kv}' (want k=v)"))?;
+                ctx.opts.insert(format!("{name}.{}", k.trim()), v.trim().to_string());
+            }
+            rest = &rest[close + 1..];
+        }
+        pm.add(make_pass(name)?);
+        rest = rest.trim_start();
+        if let Some(r) = rest.strip_prefix(',') {
+            rest = r.trim_start();
+        }
+    }
+    Ok(pm)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::builtin;
+
+    #[test]
+    fn registry_knows_all_passes() {
+        for p in [
+            "sanitize",
+            "channel-reassign",
+            "replicate",
+            "bus-widen",
+            "iris",
+            "plm-share",
+            "fifo-sizing",
+            "canonicalize",
+        ] {
+            assert!(make_pass(p).is_ok(), "missing pass {p}");
+        }
+        assert!(make_pass("bogus").is_err());
+    }
+
+    #[test]
+    fn pipeline_parsing() {
+        let mut ctx = PassContext::new(builtin("u280").unwrap());
+        let pm =
+            parse_pipeline("sanitize, replicate{factor=4}, bus-widen{width=128}", &mut ctx)
+                .unwrap();
+        assert_eq!(pm.len(), 3);
+        assert_eq!(ctx.opt_u64("replicate.factor", 0), 4);
+        assert_eq!(ctx.opt_u64("bus-widen.width", 0), 128);
+    }
+
+    #[test]
+    fn pipeline_errors() {
+        let mut ctx = PassContext::new(builtin("u280").unwrap());
+        assert!(parse_pipeline("sanitize, nope", &mut ctx).is_err());
+        assert!(parse_pipeline("replicate{factor}", &mut ctx).is_err());
+        assert!(parse_pipeline("replicate{factor=2", &mut ctx).is_err());
+    }
+
+    #[test]
+    fn ctx_option_accessors() {
+        let ctx = PassContext::new(builtin("u280").unwrap())
+            .with_opt("a", "7")
+            .with_opt("b", "0.5")
+            .with_opt("c", "true");
+        assert_eq!(ctx.opt_u64("a", 0), 7);
+        assert_eq!(ctx.opt_f64("b", 0.0), 0.5);
+        assert!(ctx.opt_bool("c", false));
+        assert_eq!(ctx.opt_u64("missing", 3), 3);
+    }
+}

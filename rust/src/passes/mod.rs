@@ -1,0 +1,31 @@
+//! Olympus-opt: the pass infrastructure and the paper's transformation
+//! passes (§V-B).
+//!
+//! * [`sanitize`] — Fig 4: insert layouts + `olympus.pc` terminals.
+//! * [`channel_reassign`] — Fig 5: spread PC-bound channels across the
+//!   platform's physical channels.
+//! * [`replicate`] — Fig 6: clone the whole DFG for parallelism under the
+//!   resource-utilization limit.
+//! * [`bus_widen`] — Fig 7: widen channels to multi-lane words and replicate
+//!   kernels per lane under a super-node.
+//! * [`iris`] — Fig 8: interleave channels onto shared buses (the Iris
+//!   algorithm lives in [`crate::iris`]).
+//! * [`fifo_sizing`] — double-buffer memory-facing FIFOs (BRAM saver).
+//! * [`plm_share`] — Mnemosyne-style PLM sharing for `small` channels.
+//! * [`canonicalize`] — cleanup: drop dead channels, dedup PC terminals.
+//! * [`dse`] — the Fig 3 iterative optimize loop: candidate strategies are
+//!   evaluated with the analyses and the best design is kept.
+
+pub mod bus_widen;
+pub mod canonicalize;
+pub mod channel_reassign;
+pub mod dse;
+pub mod fifo_sizing;
+pub mod iris;
+pub mod manager;
+pub mod plm_share;
+pub mod replicate;
+pub mod sanitize;
+
+pub use dse::{run_dse, run_iterative, DseReport};
+pub use manager::{make_pass, parse_pipeline, Pass, PassContext, PassManager, PassOutcome};

@@ -1,0 +1,147 @@
+//! PLM-optimization pass (paper §V-B "PLM optimization").
+//!
+//! Runs the Mnemosyne planner over all `small` channels and records the
+//! sharing plan in the IR: each shared channel gets `plm_group = <gid>` and
+//! group leaders carry `plm_shared_bram_saved` (consumed by the resource
+//! analysis, which is how the saved area converts into extra replication
+//! headroom — "often to a high enough degree to allow for additional
+//! compute unit replication and therefore speedup").
+
+use anyhow::Result;
+
+use crate::dialect::{ChannelView, ParamType};
+use crate::ir::{Attribute, Module};
+use crate::mnemosyne::{plan_sharing, CompatInfo};
+
+use super::manager::{Pass, PassContext, PassOutcome};
+
+pub struct PlmShare;
+
+/// BRAM36 blocks for a small channel's buffer.
+fn brams_of(m: &Module, ch: &ChannelView) -> u64 {
+    (ch.depth(m) * ch.elem_bits(m) as u64).div_ceil(36 * 1024)
+}
+
+impl Pass for PlmShare {
+    fn name(&self) -> &'static str {
+        "plm-share"
+    }
+
+    fn run(&self, m: &mut Module, _ctx: &PassContext) -> Result<PassOutcome> {
+        let smalls: Vec<ChannelView> = ChannelView::all(m)
+            .into_iter()
+            .filter(|ch| ch.param_type(m) == Some(ParamType::Small))
+            .collect();
+        if smalls.len() < 2 {
+            return Ok(PassOutcome::unchanged());
+        }
+        let infos: Vec<CompatInfo> = smalls
+            .iter()
+            .map(|ch| CompatInfo {
+                name: m.op(ch.op).str_attr("name").unwrap_or("plm").to_string(),
+                brams: brams_of(m, ch),
+                phase: m.op(ch.op).int_attr("phase"),
+                share_group: m.op(ch.op).str_attr("share_group").map(|s| s.to_string()),
+            })
+            .collect();
+        let plan = plan_sharing(&infos);
+        if plan.total_saved() == 0 {
+            return Ok(PassOutcome::unchanged().remark("no compatible PLM pairs"));
+        }
+        let mut changed = false;
+        for (gid, group) in plan.groups.iter().enumerate() {
+            if group.members.len() < 2 {
+                continue;
+            }
+            for (k, name) in group.members.iter().enumerate() {
+                let ch = smalls[infos.iter().position(|i| &i.name == name).unwrap()];
+                m.op_mut(ch.op).set_attr("plm_group", Attribute::Int(gid as i64));
+                if k == 0 {
+                    m.op_mut(ch.op)
+                        .set_attr("plm_shared_bram_saved", Attribute::Int(group.saved as i64));
+                }
+                changed = true;
+            }
+        }
+        Ok(PassOutcome {
+            changed,
+            remarks: vec![format!(
+                "{} sharing group(s), {} BRAM36 saved",
+                plan.groups.iter().filter(|g| g.members.len() > 1).count(),
+                plan.total_saved()
+            )],
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::{analyze_resources, Dfg};
+    use crate::dialect::DfgBuilder;
+    use crate::passes::sanitize::Sanitize;
+    use crate::platform::builtin;
+
+    fn ctx() -> PassContext {
+        PassContext::new(builtin("u280").unwrap())
+    }
+
+    /// Two-phase pipeline with two big `small` buffers.
+    fn two_phase() -> Module {
+        let mut b = DfgBuilder::new();
+        let s1 = b.channel(32, ParamType::Small, 36 * 1024); // 32 BRAM36
+        let s2 = b.channel(32, ParamType::Small, 36 * 1024);
+        let k1in = b.channel(32, ParamType::Stream, 64);
+        let k2out = b.channel(32, ParamType::Stream, 64);
+        b.kernel("k1", &[k1in], &[s1], Default::default());
+        b.kernel("k2", &[s1, s2], &[k2out], Default::default());
+        let mut m = b.finish();
+        Sanitize.run(&mut m, &ctx()).unwrap();
+        // compiler-supplied phases: s1 live in phase 0, s2 in phase 1
+        let chans = ChannelView::all(&m);
+        m.op_mut(chans[0].op).set_attr("phase", Attribute::Int(0));
+        m.op_mut(chans[1].op).set_attr("phase", Attribute::Int(1));
+        m
+    }
+
+    #[test]
+    fn sharing_recorded_and_saves_bram() {
+        let mut m = two_phase();
+        let plat = builtin("u280").unwrap();
+        let before = analyze_resources(&m, &plat, &Dfg::build(&m));
+        let out = PlmShare.run(&mut m, &ctx()).unwrap();
+        assert!(out.changed);
+        let after = analyze_resources(&m, &plat, &Dfg::build(&m));
+        assert!(after.total.bram < before.total.bram);
+        assert_eq!(before.total.bram - after.total.bram, 32);
+        // group attrs present
+        let chans = ChannelView::all(&m);
+        assert_eq!(m.op(chans[0].op).int_attr("plm_group"), Some(0));
+        assert_eq!(m.op(chans[1].op).int_attr("plm_group"), Some(0));
+    }
+
+    #[test]
+    fn no_phases_no_change() {
+        let mut b = DfgBuilder::new();
+        let s1 = b.channel(32, ParamType::Small, 4096);
+        let s2 = b.channel(32, ParamType::Small, 4096);
+        b.kernel("k", &[s1, s2], &[], Default::default());
+        let mut m = b.finish();
+        Sanitize.run(&mut m, &ctx()).unwrap();
+        let out = PlmShare.run(&mut m, &ctx()).unwrap();
+        assert!(!out.changed);
+    }
+
+    #[test]
+    fn single_small_channel_noop() {
+        let mut b = DfgBuilder::new();
+        let s1 = b.channel(32, ParamType::Small, 4096);
+        b.kernel("k", &[s1], &[], Default::default());
+        let mut m = b.finish();
+        Sanitize.run(&mut m, &ctx()).unwrap();
+        assert!(!PlmShare.run(&mut m, &ctx()).unwrap().changed);
+    }
+
+    use crate::dialect::ParamType;
+    use crate::ir::Module;
+}

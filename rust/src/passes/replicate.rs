@@ -1,0 +1,231 @@
+//! Replication pass (paper §V-B, Fig 6).
+//!
+//! Clones the entire DFG up to the resource-utilization limit. Every
+//! operator is replicated under a new identifier; replicated PC terminals
+//! keep the *same* physical id (paper: "Each replicated PC node is given
+//! the same id") — a later `channel-reassign` may spread them.
+//!
+//! Options: `replicate.factor` — total number of copies wanted (0 = auto:
+//! as many as fit under the platform utilization limit).
+
+use std::collections::HashMap;
+
+use anyhow::Result;
+
+use crate::analysis::{analyze_resources, Dfg};
+use crate::dialect::{OP_KERNEL, OP_MAKE_CHANNEL, OP_PC, OP_SUPER_NODE};
+use crate::ir::{Attribute, Module, Region, ValueId};
+
+use super::manager::{Pass, PassContext, PassOutcome};
+
+pub struct Replicate;
+
+/// Clone every top-level olympus op `extra` more times; returns #clones made.
+pub fn replicate_dfg(m: &mut Module, extra: u64) -> usize {
+    let base: Vec<_> = m.top.clone();
+    let mut made = 0;
+    for r in 1..=extra {
+        let mut vmap: HashMap<ValueId, ValueId> = HashMap::new();
+        for &src in &base {
+            let op = m.op(src).clone();
+            match op.name.as_str() {
+                OP_MAKE_CHANNEL => {
+                    let mut clone = op.clone();
+                    clone.results.clear();
+                    if let Some(Attribute::Str(n)) = clone.attrs.get("name").cloned() {
+                        // `#` as the replica separator: `.` is reserved for
+                        // Iris/lane slot suffixes (`ch0.2`), whose *base* the
+                        // movers extract by splitting at the first `.`.
+                        clone.attrs.insert("name".into(), Attribute::Str(format!("{n}#r{r}")));
+                    }
+                    // Layout fields refer to channels by base name; rename
+                    // every base (the whole DFG is cloned, so every referenced
+                    // channel gets the same #r suffix) — else clone movers
+                    // would route into the originals' FIFOs.
+                    if let Some(attr) = clone.attrs.get("layout") {
+                        if let Some(mut l) = crate::dialect::Layout::from_attr(attr) {
+                            for f in &mut l.fields {
+                                f.array = match f.array.split_once('.') {
+                                    Some((base, rest)) => format!("{base}#r{r}.{rest}"),
+                                    None => format!("{}#r{r}", f.array),
+                                };
+                            }
+                            clone.attrs.insert("layout".into(), l.to_attr());
+                        }
+                    }
+                    // Iris bus channels list their members by name.
+                    if let Some(Attribute::Array(members)) = clone.attrs.get("iris_members").cloned()
+                    {
+                        let renamed = members
+                            .into_iter()
+                            .map(|a| match a {
+                                Attribute::Str(s) => Attribute::Str(format!("{s}#r{r}")),
+                                other => other,
+                            })
+                            .collect();
+                        clone.attrs.insert("iris_members".into(), Attribute::Array(renamed));
+                    }
+                    // member channels point at their bus by name
+                    if let Some(Attribute::Str(bus)) = clone.attrs.get("via_bus").cloned() {
+                        clone.attrs.insert("via_bus".into(), Attribute::Str(format!("{bus}#r{r}")));
+                    }
+                    clone.attrs.insert("replica".into(), Attribute::Int(r as i64));
+                    let id = m.push_top(clone);
+                    let ty = m.value_type(op.results[0]).clone();
+                    let v = m.new_result(id, 0, ty);
+                    m.op_mut(id).results.push(v);
+                    vmap.insert(op.results[0], v);
+                }
+                OP_KERNEL | OP_PC | OP_SUPER_NODE => {
+                    let mut clone = op.clone();
+                    clone.operands = op
+                        .operands
+                        .iter()
+                        .map(|v| *vmap.get(v).unwrap_or(v))
+                        .collect();
+                    clone.attrs.insert("replica".into(), Attribute::Int(r as i64));
+                    clone.regions.clear();
+                    let id = m.push_top(clone);
+                    // clone region kernels (super-node members)
+                    for (ri, region) in op.regions.iter().enumerate() {
+                        let mut new_ops = Vec::new();
+                        for &inner in &region.ops {
+                            let mut ic = m.op(inner).clone();
+                            ic.operands =
+                                ic.operands.iter().map(|v| *vmap.get(v).unwrap_or(v)).collect();
+                            ic.attrs.insert("replica".into(), Attribute::Int(r as i64));
+                            new_ops.push(m.insert_op(ic));
+                        }
+                        let p = m.op_mut(id);
+                        while p.regions.len() <= ri {
+                            p.regions.push(Region::default());
+                        }
+                        p.regions[ri].ops = new_ops;
+                    }
+                    made += 1;
+                }
+                _ => {}
+            }
+        }
+    }
+    made
+}
+
+impl Pass for Replicate {
+    fn name(&self) -> &'static str {
+        "replicate"
+    }
+
+    fn run(&self, m: &mut Module, ctx: &PassContext) -> Result<PassOutcome> {
+        let requested = ctx.opt_u64("replicate.factor", 0);
+        let dfg = Dfg::build(m);
+        if dfg.kernels.is_empty() {
+            return Ok(PassOutcome::unchanged());
+        }
+        let rep = analyze_resources(m, &ctx.platform, &dfg);
+        let headroom = rep.replication_headroom.min(1_000_000);
+        let factor = if requested == 0 { headroom } else { requested.min(headroom) };
+        if factor <= 1 {
+            return Ok(PassOutcome::unchanged()
+                .remark(format!("no replication (headroom {headroom}, requested {requested})")));
+        }
+        replicate_dfg(m, factor - 1);
+        Ok(PassOutcome::changed(format!(
+            "replicated DFG x{factor} (binding resource: {}, utilization {:.1}% -> ~{:.1}%)",
+            rep.binding,
+            rep.utilization * 100.0,
+            rep.utilization * factor as f64 * 100.0
+        )))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dialect::build::fig4a_module;
+    use crate::dialect::{ChannelView, KernelView, PcView};
+    use crate::ir::verify_module;
+    use crate::passes::sanitize::Sanitize;
+    use crate::platform::builtin;
+
+    fn ctx() -> PassContext {
+        PassContext::new(builtin("u280").unwrap())
+    }
+
+    #[test]
+    fn fig6_replicate_twice() {
+        let mut m = fig4a_module();
+        Sanitize.run(&mut m, &ctx()).unwrap();
+        let c = ctx().with_opt("replicate.factor", "2");
+        let out = Replicate.run(&mut m, &c).unwrap();
+        assert!(out.changed);
+        assert_eq!(KernelView::all(&m).len(), 2);
+        assert_eq!(ChannelView::all(&m).len(), 6);
+        let pcs = PcView::all(&m);
+        assert_eq!(pcs.len(), 6);
+        // replicated PCs keep the same id (paper)
+        assert!(pcs.iter().all(|pc| pc.id(&m) == 0));
+        assert!(verify_module(&m).is_empty());
+        // clone channels are renamed
+        let names: Vec<String> = ChannelView::all(&m)
+            .iter()
+            .map(|ch| m.op(ch.op).str_attr("name").unwrap().to_string())
+            .collect();
+        assert!(names.contains(&"ch0".to_string()));
+        assert!(names.contains(&"ch0#r1".to_string()));
+    }
+
+    #[test]
+    fn auto_factor_respects_headroom() {
+        use crate::dialect::{DfgBuilder, KernelEst, ParamType, ResourceVec};
+        // kernel using ~30% of U280 LUTs -> headroom under the 80% limit is 2
+        let mut b = DfgBuilder::new();
+        let a = b.channel(32, ParamType::Stream, 64);
+        b.kernel(
+            "k",
+            &[a],
+            &[],
+            KernelEst { latency: 1, ii: 1, res: ResourceVec::new(0, 400_000, 0, 0, 0) },
+        );
+        let mut m = b.finish();
+        Sanitize.run(&mut m, &ctx()).unwrap();
+        Replicate.run(&mut m, &ctx()).unwrap();
+        assert_eq!(KernelView::all(&m).len(), 2, "0.8/0.31 ~ 2 copies fit");
+    }
+
+    #[test]
+    fn requested_capped_by_headroom() {
+        use crate::dialect::{DfgBuilder, KernelEst, ParamType, ResourceVec};
+        let mut b = DfgBuilder::new();
+        let a = b.channel(32, ParamType::Stream, 64);
+        b.kernel(
+            "k",
+            &[a],
+            &[],
+            KernelEst { latency: 1, ii: 1, res: ResourceVec::new(0, 400_000, 0, 0, 0) },
+        );
+        let mut m = b.finish();
+        Sanitize.run(&mut m, &ctx()).unwrap();
+        let c = ctx().with_opt("replicate.factor", "64");
+        Replicate.run(&mut m, &c).unwrap();
+        assert_eq!(KernelView::all(&m).len(), 2, "request 64 capped to headroom 2");
+    }
+
+    #[test]
+    fn oversized_design_is_not_replicated() {
+        use crate::dialect::{DfgBuilder, KernelEst, ParamType, ResourceVec};
+        let mut b = DfgBuilder::new();
+        let a = b.channel(32, ParamType::Stream, 64);
+        b.kernel(
+            "k",
+            &[a],
+            &[],
+            KernelEst { latency: 1, ii: 1, res: ResourceVec::new(0, 1_200_000, 0, 0, 0) },
+        );
+        let mut m = b.finish();
+        Sanitize.run(&mut m, &ctx()).unwrap();
+        let out = Replicate.run(&mut m, &ctx()).unwrap();
+        assert!(!out.changed);
+        assert_eq!(KernelView::all(&m).len(), 1);
+    }
+}

@@ -1,0 +1,152 @@
+//! Sanitize pass (paper §V-A, Fig 4).
+//!
+//! 1. Gives every channel a stable `name` attribute (`ch0`, `ch1`, …) used
+//!    by layouts, the Iris packer and the simulator.
+//! 2. Creates a scalar layout (one element per word, Fig 4c) for every
+//!    channel that has none.
+//! 3. Creates one `olympus.pc` terminal with `id = 0` for every channel
+//!    touching global memory that lacks one.
+//!
+//! After this pass the IR "could immediately be passed to the hardware
+//! lowering step to create [a] working, but inefficient, design" (Fig 4b).
+
+use anyhow::Result;
+
+use crate::dialect::{ChannelView, Layout, ParamType};
+use crate::ir::{Attribute, Module, OpBuilder};
+
+use super::manager::{Pass, PassContext, PassOutcome};
+
+pub struct Sanitize;
+
+impl Pass for Sanitize {
+    fn name(&self) -> &'static str {
+        "sanitize"
+    }
+
+    fn run(&self, m: &mut Module, _ctx: &PassContext) -> Result<PassOutcome> {
+        let mut changed = false;
+        let mut remarks = Vec::new();
+
+        // 1. names
+        for (i, ch) in ChannelView::all(m).into_iter().enumerate() {
+            if m.op(ch.op).str_attr("name").is_none() {
+                m.op_mut(ch.op).set_attr("name", Attribute::Str(format!("ch{i}")));
+                changed = true;
+            }
+        }
+
+        // 2. layouts
+        let mut n_layouts = 0;
+        for ch in ChannelView::all(m) {
+            if ch.layout(m).is_none() {
+                let name = m.op(ch.op).str_attr("name").unwrap_or("ch").to_string();
+                let elem_bits = ch.elem_bits(m).max(1);
+                let words = match ch.param_type(m) {
+                    // complex: depth is bytes -> words of elem_bits
+                    Some(ParamType::Complex) => (ch.depth(m) * 8).div_ceil(elem_bits as u64),
+                    _ => ch.depth(m),
+                };
+                ch.set_layout(m, &Layout::scalar(&name, elem_bits, words.max(1)));
+                n_layouts += 1;
+                changed = true;
+            }
+        }
+        if n_layouts > 0 {
+            remarks.push(format!("created {n_layouts} scalar layouts"));
+        }
+
+        // 3. PC terminals for global channels (one Dfg build instead of a
+        // per-channel uses_of scan — keeps sanitize linear in module size)
+        let mut n_pcs = 0;
+        let dfg = crate::analysis::Dfg::build(m);
+        let need_pc: Vec<_> = dfg
+            .memory_channels
+            .iter()
+            .filter(|b| b.pcs.is_empty())
+            .map(|b| b.channel.value(m))
+            .collect();
+        for v in need_pc {
+            let mut b = OpBuilder::new(m);
+            b.op(crate::dialect::OP_PC).operand(v).attr("id", 0i64).build();
+            n_pcs += 1;
+            changed = true;
+        }
+        if n_pcs > 0 {
+            remarks.push(format!("inserted {n_pcs} pc terminals (all id=0)"));
+        }
+
+        Ok(PassOutcome { changed, remarks })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dialect::build::fig4a_module;
+    use crate::dialect::{DfgBuilder, PcView};
+    use crate::platform::builtin;
+
+    fn ctx() -> PassContext {
+        PassContext::new(builtin("u280").unwrap())
+    }
+
+    #[test]
+    fn fig4a_to_fig4b() {
+        let mut m = fig4a_module();
+        let out = Sanitize.run(&mut m, &ctx()).unwrap();
+        assert!(out.changed);
+        // every channel has a name, a layout, and (being global) a PC with id 0
+        for ch in ChannelView::all(&m) {
+            assert!(m.op(ch.op).str_attr("name").is_some());
+            let l = ch.layout(&m).expect("layout");
+            assert_eq!(l.word_bits, 32);
+            assert_eq!(l.depth, 1024);
+            assert_eq!(l.lanes, 1);
+            assert_eq!(l.efficiency(), 1.0);
+            assert_eq!(ch.pcs(&m).len(), 1);
+        }
+        let pcs = PcView::all(&m);
+        assert_eq!(pcs.len(), 3);
+        assert!(pcs.iter().all(|pc| pc.id(&m) == 0), "all PCs start at id 0");
+    }
+
+    #[test]
+    fn idempotent() {
+        let mut m = fig4a_module();
+        Sanitize.run(&mut m, &ctx()).unwrap();
+        let before = crate::ir::print_module(&m);
+        let out = Sanitize.run(&mut m, &ctx()).unwrap();
+        assert!(!out.changed);
+        assert_eq!(before, crate::ir::print_module(&m));
+    }
+
+    #[test]
+    fn internal_channels_get_no_pc() {
+        let mut b = DfgBuilder::new();
+        let x = b.channel(32, ParamType::Stream, 16);
+        let y = b.channel(32, ParamType::Stream, 16);
+        let z = b.channel(32, ParamType::Stream, 16);
+        b.kernel("k1", &[x], &[y], Default::default());
+        b.kernel("k2", &[y], &[z], Default::default());
+        let mut m = b.finish();
+        Sanitize.run(&mut m, &ctx()).unwrap();
+        let chans = ChannelView::all(&m);
+        assert_eq!(chans[0].pcs(&m).len(), 1); // x: memory read
+        assert_eq!(chans[1].pcs(&m).len(), 0); // y: internal
+        assert_eq!(chans[2].pcs(&m).len(), 1); // z: memory write
+    }
+
+    #[test]
+    fn complex_depth_is_bytes() {
+        let mut b = DfgBuilder::new();
+        let x = b.channel(64, ParamType::Complex, 1024); // 1024 bytes
+        b.kernel("k", &[x], &[], Default::default());
+        let mut m = b.finish();
+        Sanitize.run(&mut m, &ctx()).unwrap();
+        let l = ChannelView::all(&m)[0].layout(&m).unwrap();
+        assert_eq!(l.depth, 1024 * 8 / 64);
+    }
+
+    use crate::dialect::ParamType;
+}

@@ -1,0 +1,14 @@
+//! Platform models (paper §II-B, §V-B): memory channel specs + resource
+//! capacities for the FPGA cards Olympus targets.
+//!
+//! The paper's running target is the Xilinx Alveo U280; we also model the
+//! Alveo U50, the Intel Stratix 10 MX, and a DDR-only generic board to show
+//! platform-awareness (the same DFG optimizes differently per platform).
+//! Custom platforms load from JSON (the "FPGA platform details" input of
+//! paper Fig 3).
+
+mod registry;
+mod spec;
+
+pub use registry::{builtin, builtin_names};
+pub use spec::{MemKind, PcSpec, PlatformSpec};

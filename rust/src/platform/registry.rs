@@ -1,0 +1,132 @@
+//! Built-in platform models.
+//!
+//! Numbers are from public datasheets / the paper:
+//! * **Alveo U280** (paper §II-B): 32 HBM2 PCs × 256 bit @ 450 MHz
+//!   (14.4 GB/s each, 460.8 GB/s total), 2 × DDR4-2400 64-bit (19.2 GB/s
+//!   each ≈ the paper's 38 GB/s), XCU280 fabric: 2607k FF, 1304k LUT,
+//!   2016 BRAM36, 960 URAM, 9024 DSP.
+//! * **Alveo U50**: 32 HBM2 PCs (8 GB), no DDR; 1743k FF, 872k LUT,
+//!   1344 BRAM36, 640 URAM, 5952 DSP.
+//! * **Stratix 10 MX** (approximated onto the same resource classes):
+//!   32 HBM2 PCs × 256 bit @ 400 MHz (409.6 GB/s), ALM/M20K counts mapped
+//!   to lut/bram equivalents.
+//! * **generic-ddr**: a midrange board with 2 × DDR4-2400 only — the
+//!   baseline platform where HBM-oriented optimizations can't help.
+
+use crate::dialect::ResourceVec;
+
+use super::spec::{MemKind, PcSpec, PlatformSpec};
+
+fn hbm_pc(freq_mhz: f64, capacity_bytes: u64) -> PcSpec {
+    PcSpec { kind: MemKind::Hbm, width_bits: 256, freq_mhz, capacity_bytes }
+}
+
+fn ddr4_2400() -> PcSpec {
+    PcSpec { kind: MemKind::Ddr, width_bits: 64, freq_mhz: 2400.0, capacity_bytes: 16 << 30 }
+}
+
+/// Alveo U280 (the paper's example target).
+pub fn u280() -> PlatformSpec {
+    let mut pcs = vec![hbm_pc(450.0, 256 << 20); 32];
+    pcs.push(ddr4_2400());
+    pcs.push(ddr4_2400());
+    PlatformSpec {
+        name: "u280".into(),
+        pcs,
+        resources: ResourceVec::new(2_607_000, 1_304_000, 2_016, 960, 9_024),
+        util_limit: 0.8,
+        kernel_mhz: 300.0,
+    }
+}
+
+/// Alveo U50.
+pub fn u50() -> PlatformSpec {
+    PlatformSpec {
+        name: "u50".into(),
+        pcs: vec![hbm_pc(450.0, 256 << 20); 32],
+        resources: ResourceVec::new(1_743_000, 872_000, 1_344, 640, 5_952),
+        util_limit: 0.8,
+        kernel_mhz: 300.0,
+    }
+}
+
+/// Intel Stratix 10 MX (resource classes approximated).
+pub fn stratix10mx() -> PlatformSpec {
+    PlatformSpec {
+        name: "stratix10mx".into(),
+        pcs: vec![hbm_pc(400.0, 256 << 20); 32],
+        resources: ResourceVec::new(2_808_000, 702_720, 6_847, 0, 3_960),
+        util_limit: 0.8,
+        kernel_mhz: 300.0,
+    }
+}
+
+/// DDR-only generic board (baseline).
+pub fn generic_ddr() -> PlatformSpec {
+    PlatformSpec {
+        name: "generic-ddr".into(),
+        pcs: vec![ddr4_2400(), ddr4_2400()],
+        resources: ResourceVec::new(1_000_000, 500_000, 1_000, 0, 2_000),
+        util_limit: 0.8,
+        kernel_mhz: 300.0,
+    }
+}
+
+/// Look up a built-in platform by name.
+pub fn builtin(name: &str) -> Option<PlatformSpec> {
+    match name {
+        "u280" => Some(u280()),
+        "u50" => Some(u50()),
+        "stratix10mx" => Some(stratix10mx()),
+        "generic-ddr" => Some(generic_ddr()),
+        _ => None,
+    }
+}
+
+/// Names of all built-in platforms.
+pub fn builtin_names() -> &'static [&'static str] {
+    &["u280", "u50", "stratix10mx", "generic-ddr"]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn u280_matches_paper_claims() {
+        let p = u280();
+        let hbm: Vec<_> = p.pcs.iter().filter(|pc| pc.kind == MemKind::Hbm).collect();
+        assert_eq!(hbm.len(), 32, "paper: 32 pseudo-channels");
+        // per-PC 14.4 GB/s, total HBM 460.8 GB/s (paper §II-B)
+        assert!((hbm[0].bandwidth_gbs() - 14.4).abs() < 1e-9);
+        let hbm_total: f64 = hbm.iter().map(|pc| pc.bandwidth_gbs()).sum();
+        assert!((hbm_total - 460.8).abs() < 1e-6);
+        // 8 GB HBM total
+        let hbm_cap: u64 = hbm.iter().map(|pc| pc.capacity_bytes).sum();
+        assert_eq!(hbm_cap, 8 << 30);
+        // DDR ~38 GB/s total
+        let ddr_total: f64 = p
+            .pcs
+            .iter()
+            .filter(|pc| pc.kind == MemKind::Ddr)
+            .map(|pc| pc.bandwidth_gbs())
+            .sum();
+        assert!((ddr_total - 38.4).abs() < 0.5, "paper: ~38 GB/s, got {ddr_total}");
+    }
+
+    #[test]
+    fn builtins_resolve() {
+        for n in builtin_names() {
+            let p = builtin(n).unwrap();
+            assert_eq!(&p.name, n);
+            assert!(!p.pcs.is_empty());
+        }
+        assert!(builtin("nope").is_none());
+    }
+
+    #[test]
+    fn u50_has_no_ddr() {
+        assert!(u50().pc_ids(MemKind::Ddr).is_empty());
+        assert_eq!(u50().pc_ids(MemKind::Hbm).len(), 32);
+    }
+}

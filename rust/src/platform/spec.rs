@@ -1,0 +1,213 @@
+//! Platform specification types + JSON (de)serialization.
+
+use anyhow::{bail, Context, Result};
+
+use crate::dialect::ResourceVec;
+use crate::util::Json;
+
+/// Kind of off-chip memory behind a channel.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum MemKind {
+    /// HBM pseudo-channel.
+    Hbm,
+    /// DDR4 channel.
+    Ddr,
+}
+
+impl MemKind {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            MemKind::Hbm => "hbm",
+            MemKind::Ddr => "ddr",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<MemKind> {
+        match s {
+            "hbm" => Some(MemKind::Hbm),
+            "ddr" => Some(MemKind::Ddr),
+            _ => None,
+        }
+    }
+}
+
+/// One physical memory channel (HBM pseudo-channel or DDR channel).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PcSpec {
+    pub kind: MemKind,
+    /// Data width in bits.
+    pub width_bits: u32,
+    /// Effective transfer rate in MT/s (per-pin data rate × 1; for HBM PCs
+    /// the paper quotes the 450 MHz @ 256-bit figure directly).
+    pub freq_mhz: f64,
+    /// Capacity in bytes.
+    pub capacity_bytes: u64,
+}
+
+impl PcSpec {
+    /// Peak bandwidth in bytes/second.
+    pub fn bandwidth_bps(&self) -> f64 {
+        self.width_bits as f64 / 8.0 * self.freq_mhz * 1e6
+    }
+
+    /// Peak bandwidth in GB/s (decimal GB, as the paper quotes).
+    pub fn bandwidth_gbs(&self) -> f64 {
+        self.bandwidth_bps() / 1e9
+    }
+}
+
+/// A full platform description.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlatformSpec {
+    pub name: String,
+    /// Physical memory channels, index == `olympus.pc` id.
+    pub pcs: Vec<PcSpec>,
+    /// Total FPGA fabric resources.
+    pub resources: ResourceVec,
+    /// Default resource utilization limit (paper §V-B: default 80%).
+    pub util_limit: f64,
+    /// Kernel clock in MHz (the fabric clock kernels are compiled at).
+    pub kernel_mhz: f64,
+}
+
+impl PlatformSpec {
+    /// Aggregate peak bandwidth over all memory channels, GB/s.
+    pub fn total_bandwidth_gbs(&self) -> f64 {
+        self.pcs.iter().map(|p| p.bandwidth_gbs()).sum()
+    }
+
+    /// Ids of channels of `kind`.
+    pub fn pc_ids(&self, kind: MemKind) -> Vec<u32> {
+        self.pcs
+            .iter()
+            .enumerate()
+            .filter(|(_, p)| p.kind == kind)
+            .map(|(i, _)| i as u32)
+            .collect()
+    }
+
+    /// Number of memory channels.
+    pub fn num_pcs(&self) -> usize {
+        self.pcs.len()
+    }
+
+    // ---- JSON -----------------------------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        let pcs: Vec<Json> = self
+            .pcs
+            .iter()
+            .map(|p| {
+                Json::obj(vec![
+                    ("kind", p.kind.as_str().into()),
+                    ("width_bits", (p.width_bits as usize).into()),
+                    ("freq_mhz", p.freq_mhz.into()),
+                    ("capacity_bytes", (p.capacity_bytes as usize).into()),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("name", self.name.as_str().into()),
+            ("pcs", Json::Arr(pcs)),
+            (
+                "resources",
+                Json::obj(vec![
+                    ("ff", (self.resources.ff as usize).into()),
+                    ("lut", (self.resources.lut as usize).into()),
+                    ("bram", (self.resources.bram as usize).into()),
+                    ("uram", (self.resources.uram as usize).into()),
+                    ("dsp", (self.resources.dsp as usize).into()),
+                ]),
+            ),
+            ("util_limit", self.util_limit.into()),
+            ("kernel_mhz", self.kernel_mhz.into()),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<PlatformSpec> {
+        let name = v.get("name").as_str().context("platform: missing name")?.to_string();
+        let mut pcs = Vec::new();
+        for (i, p) in v.get("pcs").as_arr().context("platform: missing pcs")?.iter().enumerate() {
+            let kind = MemKind::parse(p.get("kind").as_str().unwrap_or(""))
+                .with_context(|| format!("pc {i}: bad kind"))?;
+            let width_bits = p.get("width_bits").as_usize().context("pc width_bits")? as u32;
+            let freq_mhz = p.get("freq_mhz").as_f64().context("pc freq_mhz")?;
+            let capacity_bytes = p.get("capacity_bytes").as_usize().unwrap_or(0) as u64;
+            if width_bits == 0 || freq_mhz <= 0.0 {
+                bail!("pc {i}: non-positive width/frequency");
+            }
+            pcs.push(PcSpec { kind, width_bits, freq_mhz, capacity_bytes });
+        }
+        if pcs.is_empty() {
+            bail!("platform '{name}' has no memory channels");
+        }
+        let r = v.get("resources");
+        let g = |k: &str| r.get(k).as_usize().unwrap_or(0) as u64;
+        Ok(PlatformSpec {
+            name,
+            pcs,
+            resources: ResourceVec::new(g("ff"), g("lut"), g("bram"), g("uram"), g("dsp")),
+            util_limit: v.get("util_limit").as_f64().unwrap_or(0.8),
+            kernel_mhz: v.get("kernel_mhz").as_f64().unwrap_or(300.0),
+        })
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<PlatformSpec> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read platform file {}", path.display()))?;
+        let v = Json::parse(&text).context("platform file is not valid JSON")?;
+        Self::from_json(&v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pc() -> PcSpec {
+        PcSpec { kind: MemKind::Hbm, width_bits: 256, freq_mhz: 450.0, capacity_bytes: 256 << 20 }
+    }
+
+    #[test]
+    fn hbm_pc_bandwidth_matches_paper() {
+        // paper §II-B: each 256-bit PC at 450 MHz = 14.4 GB/s
+        assert!((pc().bandwidth_gbs() - 14.4).abs() < 1e-9);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let spec = PlatformSpec {
+            name: "test".into(),
+            pcs: vec![pc(), PcSpec { kind: MemKind::Ddr, width_bits: 64, freq_mhz: 2400.0, capacity_bytes: 16 << 30 }],
+            resources: ResourceVec::new(1, 2, 3, 4, 5),
+            util_limit: 0.8,
+            kernel_mhz: 300.0,
+        };
+        let j = spec.to_json().to_string();
+        let back = PlatformSpec::from_json(&Json::parse(&j).unwrap()).unwrap();
+        assert_eq!(spec, back);
+    }
+
+    #[test]
+    fn rejects_empty_pcs() {
+        let j = Json::parse(r#"{"name": "x", "pcs": []}"#).unwrap();
+        assert!(PlatformSpec::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn pc_ids_by_kind() {
+        let spec = PlatformSpec {
+            name: "t".into(),
+            pcs: vec![
+                pc(),
+                PcSpec { kind: MemKind::Ddr, width_bits: 64, freq_mhz: 2400.0, capacity_bytes: 0 },
+                pc(),
+            ],
+            resources: ResourceVec::ZERO,
+            util_limit: 0.8,
+            kernel_mhz: 300.0,
+        };
+        assert_eq!(spec.pc_ids(MemKind::Hbm), vec![0, 2]);
+        assert_eq!(spec.pc_ids(MemKind::Ddr), vec![1]);
+    }
+}

@@ -1,0 +1,12 @@
+//! PJRT runtime: loads AOT-compiled HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the PJRT CPU client.
+//!
+//! This is the only place the `xla` crate is touched. Kernel compute units in
+//! the platform simulator call [`KernelRegistry::execute`] with the `callee`
+//! attribute of their `olympus.kernel` op; python never runs at this point.
+
+mod pjrt;
+mod registry;
+
+pub use pjrt::{CompiledKernel, PjrtRuntime};
+pub use registry::{KernelManifest, KernelRegistry, ManifestEntry};

@@ -1,0 +1,81 @@
+//! Thin wrapper over the `xla` crate: PJRT CPU client, HLO-text loading,
+//! compile-once/execute-many. Mirrors /opt/xla-example/load_hlo.rs.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Mutex;
+
+use anyhow::{Context, Result};
+
+/// A compiled, ready-to-run kernel executable.
+pub struct CompiledKernel {
+    exe: xla::PjRtLoadedExecutable,
+    /// Name the kernel was registered under (the `callee` attribute).
+    pub name: String,
+}
+
+impl CompiledKernel {
+    /// Execute with f32 input buffers; returns the flat f32 outputs.
+    ///
+    /// All our AOT artifacts are lowered with `return_tuple=True`, so the
+    /// single result literal is a tuple; each element is returned flattened.
+    pub fn execute_f32(&self, inputs: &[(&[f32], &[usize])]) -> Result<Vec<Vec<f32>>> {
+        let mut lits = Vec::with_capacity(inputs.len());
+        for (data, shape) in inputs {
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(data)
+                .reshape(&dims)
+                .with_context(|| format!("reshape input for kernel {}", self.name))?;
+            lits.push(lit);
+        }
+        let result = self.exe.execute::<xla::Literal>(&lits)?[0][0].to_literal_sync()?;
+        let elems = result.to_tuple()?;
+        let mut out = Vec::with_capacity(elems.len());
+        for e in elems {
+            out.push(e.to_vec::<f32>()?);
+        }
+        Ok(out)
+    }
+}
+
+/// PJRT CPU runtime holding the client and a cache of compiled executables.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    cache: Mutex<HashMap<String, std::sync::Arc<CompiledKernel>>>,
+}
+
+impl PjrtRuntime {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(Self { client, cache: Mutex::new(HashMap::new()) })
+    }
+
+    /// Human-readable platform string, e.g. `"cpu"`.
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an HLO-text artifact and compile it, caching by `name`.
+    pub fn load_hlo_text(
+        &self,
+        name: &str,
+        path: &Path,
+    ) -> Result<std::sync::Arc<CompiledKernel>> {
+        if let Some(k) = self.cache.lock().unwrap().get(name) {
+            return Ok(k.clone());
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not utf-8")?,
+        )
+        .with_context(|| format!("parse HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("PJRT compile kernel '{name}'"))?;
+        let k = std::sync::Arc::new(CompiledKernel { exe, name: name.to_string() });
+        self.cache.lock().unwrap().insert(name.to_string(), k.clone());
+        Ok(k)
+    }
+}

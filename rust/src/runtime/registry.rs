@@ -1,0 +1,176 @@
+//! Kernel registry: maps `callee` names from `olympus.kernel` ops to
+//! compiled PJRT executables, driven by `artifacts/manifest.json`.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::Json;
+
+use super::pjrt::{CompiledKernel, PjrtRuntime};
+
+/// One entry of `artifacts/manifest.json` (written by python/compile/aot.py).
+#[derive(Debug, Clone)]
+pub struct ManifestEntry {
+    /// Kernel name == the `callee` attribute value it serves.
+    pub name: String,
+    /// HLO text file, relative to the manifest's directory.
+    pub hlo: String,
+    /// Input shapes (row-major), one per operand.
+    pub input_shapes: Vec<Vec<usize>>,
+    /// Output shapes, one per result.
+    pub output_shapes: Vec<Vec<usize>>,
+    /// Element dtype (always "f32" in this build).
+    pub dtype: String,
+}
+
+impl ManifestEntry {
+    fn from_json(v: &Json) -> Result<Self> {
+        let shapes = |key: &str| -> Result<Vec<Vec<usize>>> {
+            v.get(key)
+                .as_arr()
+                .context("shapes not an array")?
+                .iter()
+                .map(|s| {
+                    s.as_arr()
+                        .context("shape not an array")?
+                        .iter()
+                        .map(|d| d.as_usize().context("dim not a usize"))
+                        .collect()
+                })
+                .collect()
+        };
+        Ok(ManifestEntry {
+            name: v.get("name").as_str().context("missing name")?.to_string(),
+            hlo: v.get("hlo").as_str().context("missing hlo")?.to_string(),
+            input_shapes: shapes("input_shapes")?,
+            output_shapes: shapes("output_shapes")?,
+            dtype: v.get("dtype").as_str().unwrap_or("f32").to_string(),
+        })
+    }
+
+    /// Total f32 element count of one input.
+    pub fn input_len(&self, i: usize) -> usize {
+        self.input_shapes[i].iter().product()
+    }
+
+    /// Total f32 element count of one output.
+    pub fn output_len(&self, i: usize) -> usize {
+        self.output_shapes[i].iter().product()
+    }
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone)]
+pub struct KernelManifest {
+    pub kernels: Vec<ManifestEntry>,
+}
+
+impl KernelManifest {
+    pub fn parse(text: &str) -> Result<Self> {
+        let v = Json::parse(text).context("manifest.json is not valid JSON")?;
+        let kernels = v
+            .get("kernels")
+            .as_arr()
+            .context("manifest.json missing 'kernels' array")?
+            .iter()
+            .map(ManifestEntry::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(KernelManifest { kernels })
+    }
+}
+
+/// Registry of AOT kernels, lazily compiled on first use.
+pub struct KernelRegistry {
+    runtime: Arc<PjrtRuntime>,
+    root: PathBuf,
+    entries: HashMap<String, ManifestEntry>,
+}
+
+impl KernelRegistry {
+    /// Load `manifest.json` from `root` (usually `artifacts/`).
+    pub fn load(runtime: Arc<PjrtRuntime>, root: &Path) -> Result<Self> {
+        let manifest_path = root.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("read {}", manifest_path.display()))?;
+        let manifest = KernelManifest::parse(&text)
+            .with_context(|| format!("parse {}", manifest_path.display()))?;
+        let mut entries = HashMap::new();
+        for e in manifest.kernels {
+            entries.insert(e.name.clone(), e);
+        }
+        Ok(Self { runtime, root: root.to_path_buf(), entries })
+    }
+
+    /// Kernel names available in the manifest.
+    pub fn names(&self) -> Vec<&str> {
+        self.entries.keys().map(|s| s.as_str()).collect()
+    }
+
+    /// Manifest metadata for `name`.
+    pub fn entry(&self, name: &str) -> Option<&ManifestEntry> {
+        self.entries.get(name)
+    }
+
+    /// Compile (or fetch cached) and return the executable for `name`.
+    pub fn get(&self, name: &str) -> Result<Arc<CompiledKernel>> {
+        let Some(e) = self.entries.get(name) else {
+            bail!("kernel '{name}' not in manifest (have: {:?})", self.names())
+        };
+        self.runtime.load_hlo_text(name, &self.root.join(&e.hlo))
+    }
+
+    /// Execute kernel `name` on flat f32 inputs using the manifest shapes.
+    pub fn execute(&self, name: &str, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        let e = self
+            .entries
+            .get(name)
+            .with_context(|| format!("kernel '{name}' not in manifest"))?
+            .clone();
+        if inputs.len() != e.input_shapes.len() {
+            bail!(
+                "kernel '{name}': got {} inputs, manifest expects {}",
+                inputs.len(),
+                e.input_shapes.len()
+            );
+        }
+        for (i, (data, shape)) in inputs.iter().zip(e.input_shapes.iter()).enumerate() {
+            let want: usize = shape.iter().product();
+            if data.len() != want {
+                bail!("kernel '{name}' input {i}: got {} elems, expected {want}", data.len());
+            }
+        }
+        let k = self.get(name)?;
+        let args: Vec<(&[f32], &[usize])> = inputs
+            .iter()
+            .zip(e.input_shapes.iter())
+            .map(|(d, s)| (*d, s.as_slice()))
+            .collect();
+        k.execute_f32(&args)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parses() {
+        let m = KernelManifest::parse(
+            r#"{"kernels": [{"name": "k", "hlo": "k.hlo.txt",
+                "input_shapes": [[4], [4]], "output_shapes": [[4]], "dtype": "f32"}]}"#,
+        )
+        .unwrap();
+        assert_eq!(m.kernels.len(), 1);
+        assert_eq!(m.kernels[0].name, "k");
+        assert_eq!(m.kernels[0].input_len(0), 4);
+    }
+
+    #[test]
+    fn manifest_rejects_malformed() {
+        assert!(KernelManifest::parse("{}").is_err());
+        assert!(KernelManifest::parse(r#"{"kernels": [{"name": "k"}]}"#).is_err());
+    }
+}

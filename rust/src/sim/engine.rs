@@ -1,0 +1,520 @@
+//! The simulation engine: functional data plane + timing accounting.
+
+use std::collections::{HashMap, VecDeque};
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::analysis::ResourceReport;
+use crate::lower::{Architecture, CuInst, Endpoint, MoverDir};
+use crate::runtime::KernelRegistry;
+
+use super::metrics::{CuMetrics, PcMetrics, SimMetrics};
+use super::timing::TimingModel;
+
+/// Result of one simulated app iteration.
+pub struct SimOutput {
+    /// Memory-write channel name -> produced data.
+    pub outputs: HashMap<String, Vec<f32>>,
+    pub metrics: SimMetrics,
+}
+
+/// The simulator. Borrows the architecture and the kernel registry; host
+/// buffers come in per run.
+pub struct Simulator<'a> {
+    pub arch: &'a Architecture,
+    pub registry: &'a KernelRegistry,
+    /// Apply the routing-congestion clock derate (on by default).
+    pub congestion_model: bool,
+    /// Resource utilization (from `analyze_resources`) for the derate.
+    pub utilization: f64,
+}
+
+/// Per-CU staged output when lanes share one FIFO (merged on drain).
+type LaneStage = HashMap<(usize, usize), Vec<f32>>; // (fifo idx, lane) -> data
+
+impl<'a> Simulator<'a> {
+    pub fn new(arch: &'a Architecture, registry: &'a KernelRegistry) -> Self {
+        Simulator { arch, registry, congestion_model: true, utilization: 0.0 }
+    }
+
+    pub fn with_resources(mut self, report: &ResourceReport) -> Self {
+        self.utilization = report.utilization;
+        self
+    }
+
+    /// Validate that every CU's callee exists in the manifest with matching
+    /// arity (the "load the correct implementation" step of paper §IV).
+    pub fn validate(&self) -> Result<()> {
+        for cu in &self.arch.cus {
+            let e = self
+                .registry
+                .entry(&cu.callee)
+                .with_context(|| format!("CU '{}': callee '{}' not in manifest", cu.name, cu.callee))?;
+            if e.input_shapes.len() != cu.inputs.len() {
+                bail!(
+                    "CU '{}': {} wired inputs but kernel '{}' takes {}",
+                    cu.name,
+                    cu.inputs.len(),
+                    cu.callee,
+                    e.input_shapes.len()
+                );
+            }
+            if e.output_shapes.len() != cu.outputs.len() {
+                bail!(
+                    "CU '{}': {} wired outputs but kernel '{}' yields {}",
+                    cu.name,
+                    cu.outputs.len(),
+                    cu.callee,
+                    e.output_shapes.len()
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Run one app iteration.
+    ///
+    /// `buffers` maps logical memory-channel names (the channel `name`
+    /// attributes) to host data. Read channels must be present; write
+    /// channels are produced into [`SimOutput::outputs`].
+    pub fn run(&self, buffers: &HashMap<String, Vec<f32>>) -> Result<SimOutput> {
+        let wall0 = Instant::now();
+        self.validate()?;
+        let a = self.arch;
+
+        // ---- functional: read movers fill on-chip endpoints -------------
+        let mut fifos: Vec<VecDeque<f32>> = vec![VecDeque::new(); a.fifos.len()];
+        let mut plms: Vec<Vec<f32>> = vec![Vec::new(); a.plms.len()];
+        let mut pc_beats: HashMap<u32, (u64, u64)> = HashMap::new(); // id -> (beats, useful bits)
+
+        for mv in &a.movers {
+            if mv.dir != MoverDir::Read {
+                continue;
+            }
+            // deliver each *base* field exactly once (split fields `x.0`,
+            // `x.1` are slots of the same logical array)
+            let mut delivered: Vec<&str> = Vec::new();
+            for (field, ep) in &mv.routes {
+                let base = field.split('.').next().unwrap_or(field);
+                if delivered.contains(&base) {
+                    continue;
+                }
+                delivered.push(base);
+                let data = buffers
+                    .get(base)
+                    .with_context(|| format!("missing host buffer for read channel '{base}'"))?;
+                match ep {
+                    Endpoint::Fifo(i) => fifos[*i].extend(data.iter().copied()),
+                    Endpoint::Plm(i) => plms[*i] = data.clone(),
+                    Endpoint::Axi(_) => {}
+                }
+            }
+            self.account_mover(mv, buffers, &mut pc_beats);
+        }
+        // AXI (complex) channels: kernels read host buffers directly
+        let mut axi_data: Vec<Vec<f32>> = vec![Vec::new(); a.axi_ports.len()];
+        for (i, ax) in a.axi_ports.iter().enumerate() {
+            if let Some(data) = buffers.get(&ax.name) {
+                axi_data[i] = data.clone();
+                let bits = data.len() as u64 * 32;
+                let spec = &a.platform.pcs[ax.pc_id as usize];
+                let e = pc_beats.entry(ax.pc_id).or_default();
+                e.0 += bits.div_ceil(spec.width_bits as u64);
+                e.1 += bits;
+            }
+        }
+
+        // ---- functional: fire CUs to quiescence --------------------------
+        let mut lane_stage: LaneStage = HashMap::new();
+        let mut cu_elems: Vec<u64> = vec![0; a.cus.len()];
+        let mut cu_firings: Vec<u64> = vec![0; a.cus.len()];
+        // lane CUs pre-slice their shared input FIFOs once
+        let mut lane_inputs: HashMap<(usize, usize), VecDeque<f32>> = HashMap::new();
+        for (ci, cu) in a.cus.iter().enumerate() {
+            if cu.lanes > 1 {
+                for ep in &cu.inputs {
+                    if let Endpoint::Fifo(fi) = ep {
+                        lane_inputs.entry((ci, *fi)).or_default();
+                    }
+                }
+            }
+        }
+        // slice shared FIFOs round-robin across lanes (Fig 7: element i of
+        // the original stream belongs to lane i % lanes)
+        {
+            let mut sliced: Vec<usize> = Vec::new();
+            for cu in a.cus.iter() {
+                if cu.lanes <= 1 {
+                    continue;
+                }
+                for ep in &cu.inputs {
+                    if let Endpoint::Fifo(fi) = ep {
+                        if sliced.contains(fi) {
+                            continue;
+                        }
+                        sliced.push(*fi);
+                        let data: Vec<f32> = fifos[*fi].drain(..).collect();
+                        // all lane CUs reading this fifo
+                        for (cj, cu2) in a.cus.iter().enumerate() {
+                            if cu2.lanes <= 1 || !cu2.inputs.contains(&Endpoint::Fifo(*fi)) {
+                                continue;
+                            }
+                            let q = lane_inputs.entry((cj, *fi)).or_default();
+                            for (k, v) in data.iter().enumerate() {
+                                if k as u32 % cu2.lanes == cu2.lane {
+                                    q.push_back(*v);
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+
+        let mut safety = 0u64;
+        loop {
+            // phase 1: fire on full chunks until quiescent
+            loop {
+                let mut progress = false;
+                for (ci, cu) in a.cus.iter().enumerate() {
+                    while self
+                        .can_fire(cu, ci, &fifos, &plms, &axi_data, &lane_inputs, cu_firings[ci])?
+                    {
+                        self.fire(
+                            cu,
+                            ci,
+                            false,
+                            &mut fifos,
+                            &mut plms,
+                            &axi_data,
+                            &mut lane_inputs,
+                            &mut lane_stage,
+                            &mut cu_elems,
+                            &mut cu_firings,
+                        )?;
+                        progress = true;
+                        safety += 1;
+                        if safety > 1_000_000 {
+                            bail!("simulation did not quiesce (1M firings)");
+                        }
+                    }
+                }
+                if !progress {
+                    break;
+                }
+            }
+            // phase 2: no producer can make progress — drain partial chunks
+            // (bus-widened lanes and stream tails: the monomorphic AOT kernel
+            // is fed a zero-padded chunk and its output truncated, exactly
+            // how a variable-length HLS stream kernel behaves)
+            let mut drained = false;
+            for (ci, cu) in a.cus.iter().enumerate() {
+                let has_partial = cu.inputs.iter().any(|ep| match ep {
+                    Endpoint::Fifo(i) => {
+                        let len = if cu.lanes > 1 {
+                            lane_inputs.get(&(ci, *i)).map(|q| q.len()).unwrap_or(0)
+                        } else {
+                            fifos[*i].len()
+                        };
+                        len > 0
+                    }
+                    _ => false,
+                });
+                if has_partial {
+                    self.fire(
+                        cu,
+                        ci,
+                        true,
+                        &mut fifos,
+                        &mut plms,
+                        &axi_data,
+                        &mut lane_inputs,
+                        &mut lane_stage,
+                        &mut cu_elems,
+                        &mut cu_firings,
+                    )?;
+                    drained = true;
+                    safety += 1;
+                    if safety > 1_000_000 {
+                        bail!("simulation did not quiesce in drain (1M firings)");
+                    }
+                }
+            }
+            if !drained {
+                break;
+            }
+        }
+
+        // merge lane output stages into their FIFOs (element i%L from lane i)
+        {
+            let mut by_fifo: HashMap<usize, Vec<(usize, Vec<f32>)>> = HashMap::new();
+            for ((fi, lane), data) in lane_stage.drain() {
+                by_fifo.entry(fi).or_default().push((lane, data));
+            }
+            for (fi, mut lanes) in by_fifo {
+                lanes.sort_by_key(|(l, _)| *l);
+                let n: usize = lanes.iter().map(|(_, d)| d.len()).sum();
+                let l = lanes.len();
+                for i in 0..n {
+                    let (lane, idx) = (i % l, i / l);
+                    if let Some(v) = lanes[lane].1.get(idx) {
+                        fifos[fi].push_back(*v);
+                    }
+                }
+            }
+        }
+
+        // ---- functional: write movers drain to outputs -------------------
+        let mut outputs = HashMap::new();
+        for mv in &a.movers {
+            if mv.dir != MoverDir::Write {
+                continue;
+            }
+            let mut drained: Vec<&str> = Vec::new();
+            for (field, ep) in &mv.routes {
+                let base = field.split('.').next().unwrap_or(field);
+                if drained.contains(&base) {
+                    continue;
+                }
+                drained.push(base);
+                let data: Vec<f32> = match ep {
+                    Endpoint::Fifo(i) => fifos[*i].drain(..).collect(),
+                    Endpoint::Plm(i) => plms[*i].clone(),
+                    Endpoint::Axi(i) => axi_data[*i].clone(),
+                };
+                outputs.insert(base.to_string(), data);
+            }
+            self.account_mover_out(mv, &outputs, &mut pc_beats);
+        }
+
+        // ---- timing -------------------------------------------------------
+        let timing = TimingModel::new(&a.platform, self.utilization, self.congestion_model);
+        let mut per_pc = Vec::new();
+        let mut mem_time: f64 = 0.0;
+        let mut total_bits = 0u64;
+        let mut cap_bits = 0u64;
+        let mut ids: Vec<u32> = pc_beats.keys().copied().collect();
+        ids.sort_unstable();
+        for id in ids {
+            let (beats, bits) = pc_beats[&id];
+            let spec = &a.platform.pcs[id as usize];
+            let time_s = timing.pc_time_s(&a.platform, id, beats);
+            mem_time = mem_time.max(time_s);
+            total_bits += bits;
+            cap_bits += beats * spec.width_bits as u64;
+            per_pc.push(PcMetrics {
+                pc_id: id,
+                beats,
+                useful_bytes: bits / 8,
+                efficiency: if beats == 0 {
+                    0.0
+                } else {
+                    bits as f64 / (beats * spec.width_bits as u64) as f64
+                },
+                time_s,
+            });
+        }
+        let mut per_cu = Vec::new();
+        let mut compute_time: f64 = 0.0;
+        for (ci, cu) in a.cus.iter().enumerate() {
+            let (cycles, time_s) = timing.cu_time_s(cu.latency, cu.ii, cu_elems[ci]);
+            compute_time = compute_time.max(time_s);
+            per_cu.push(CuMetrics {
+                name: cu.name.clone(),
+                callee: cu.callee.clone(),
+                firings: cu_firings[ci],
+                elems_in: cu_elems[ci],
+                cycles,
+                time_s,
+            });
+        }
+        // dataflow overlap: streams + compute pipeline concurrently; the
+        // longer side dominates, plus one kernel latency of pipeline fill
+        let fill = a
+            .cus
+            .iter()
+            .map(|c| c.latency as f64 / (timing.effective_mhz * 1e6))
+            .fold(0.0, f64::max);
+        let makespan = mem_time.max(compute_time) + fill;
+        let total_bytes = total_bits / 8;
+        let metrics = SimMetrics {
+            per_pc,
+            per_cu,
+            total_bytes,
+            mem_time_s: mem_time,
+            compute_time_s: compute_time,
+            makespan_s: makespan,
+            achieved_gbs: if makespan > 0.0 { total_bytes as f64 / makespan / 1e9 } else { 0.0 },
+            efficiency: if cap_bits == 0 { 0.0 } else { total_bits as f64 / cap_bits as f64 },
+            utilization: self.utilization,
+            effective_mhz: timing.effective_mhz,
+            sim_wall_s: wall0.elapsed().as_secs_f64(),
+        };
+        Ok(SimOutput { outputs, metrics })
+    }
+
+    /// Account a read mover's beats/bits against its PC.
+    fn account_mover(
+        &self,
+        mv: &crate::lower::MoverInst,
+        buffers: &HashMap<String, Vec<f32>>,
+        pc_beats: &mut HashMap<u32, (u64, u64)>,
+    ) {
+        let spec = &self.arch.platform.pcs[mv.pc_id as usize];
+        let beats_per_word = (mv.layout.word_bits as u64).div_ceil(spec.width_bits as u64);
+        let mut bases: Vec<&str> = Vec::new();
+        let mut bits = 0u64;
+        for (field, _) in &mv.routes {
+            let base = field.split('.').next().unwrap_or(field);
+            if bases.contains(&base) {
+                continue;
+            }
+            bases.push(base);
+            bits += buffers.get(base).map(|d| d.len() as u64 * 32).unwrap_or(0);
+        }
+        let e = pc_beats.entry(mv.pc_id).or_default();
+        e.0 += mv.layout.depth * beats_per_word;
+        e.1 += bits;
+    }
+
+    /// Account a write mover (same math, data from outputs).
+    fn account_mover_out(
+        &self,
+        mv: &crate::lower::MoverInst,
+        outputs: &HashMap<String, Vec<f32>>,
+        pc_beats: &mut HashMap<u32, (u64, u64)>,
+    ) {
+        let spec = &self.arch.platform.pcs[mv.pc_id as usize];
+        let beats_per_word = (mv.layout.word_bits as u64).div_ceil(spec.width_bits as u64);
+        let mut bases: Vec<&str> = Vec::new();
+        let mut bits = 0u64;
+        for (field, _) in &mv.routes {
+            let base = field.split('.').next().unwrap_or(field);
+            if bases.contains(&base) {
+                continue;
+            }
+            bases.push(base);
+            bits += outputs.get(base).map(|d| d.len() as u64 * 32).unwrap_or(0);
+        }
+        let e = pc_beats.entry(mv.pc_id).or_default();
+        e.0 += mv.layout.depth * beats_per_word;
+        e.1 += bits;
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn can_fire(
+        &self,
+        cu: &CuInst,
+        ci: usize,
+        fifos: &[VecDeque<f32>],
+        plms: &[Vec<f32>],
+        axi: &[Vec<f32>],
+        lane_inputs: &HashMap<(usize, usize), VecDeque<f32>>,
+        firings: u64,
+    ) -> Result<bool> {
+        let e = self.registry.entry(&cu.callee).context("validated")?;
+        for (k, ep) in cu.inputs.iter().enumerate() {
+            let need = e.input_len(k);
+            let have = match ep {
+                Endpoint::Fifo(i) => {
+                    if cu.lanes > 1 {
+                        lane_inputs.get(&(ci, *i)).map(|q| q.len()).unwrap_or(0)
+                    } else {
+                        fifos[*i].len()
+                    }
+                }
+                Endpoint::Plm(i) => plms[*i].len(),
+                Endpoint::Axi(i) => axi[*i].len().saturating_sub(firings as usize * need),
+            };
+            if have < need {
+                return Ok(false);
+            }
+        }
+        // CU with only PLM/AXI inputs fires exactly once per iteration
+        if cu.inputs.iter().all(|e| !matches!(e, Endpoint::Fifo(_))) && firings > 0 {
+            return Ok(false);
+        }
+        Ok(true)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn fire(
+        &self,
+        cu: &CuInst,
+        ci: usize,
+        allow_partial: bool,
+        fifos: &mut [VecDeque<f32>],
+        plms: &mut [Vec<f32>],
+        axi: &[Vec<f32>],
+        lane_inputs: &mut HashMap<(usize, usize), VecDeque<f32>>,
+        lane_stage: &mut LaneStage,
+        cu_elems: &mut [u64],
+        cu_firings: &mut [u64],
+    ) -> Result<()> {
+        let e = self.registry.entry(&cu.callee).context("validated")?.clone();
+        let mut args: Vec<Vec<f32>> = Vec::with_capacity(cu.inputs.len());
+        // fraction of a full chunk actually consumed (partial-drain firings)
+        let mut frac: f64 = 1.0;
+        for (k, ep) in cu.inputs.iter().enumerate() {
+            let need = e.input_len(k);
+            let mut data: Vec<f32> = match ep {
+                Endpoint::Fifo(i) => {
+                    let q = if cu.lanes > 1 {
+                        lane_inputs.get_mut(&(ci, *i)).unwrap()
+                    } else {
+                        &mut fifos[*i]
+                    };
+                    q.drain(..need.min(q.len())).collect()
+                }
+                Endpoint::Plm(i) => plms[*i].iter().take(need).copied().collect(),
+                Endpoint::Axi(i) => {
+                    let off = cu_firings[ci] as usize * need;
+                    axi[*i].iter().skip(off).take(need).copied().collect()
+                }
+            };
+            cu_elems[ci] += data.len() as u64;
+            if data.len() < need {
+                if !allow_partial && matches!(ep, Endpoint::Fifo(_)) {
+                    bail!("CU '{}' fired without a full chunk on input {k}", cu.name);
+                }
+                if matches!(ep, Endpoint::Fifo(_)) && need > 1 {
+                    frac = frac.min(data.len() as f64 / need as f64);
+                }
+                data.resize(need, 0.0); // zero padding
+            }
+            args.push(data);
+        }
+        let arg_refs: Vec<&[f32]> = args.iter().map(|d| d.as_slice()).collect();
+        let results = self
+            .registry
+            .execute(&cu.callee, &arg_refs)
+            .with_context(|| format!("executing kernel '{}' for CU '{}'", cu.callee, cu.name))?;
+        for (k, ep) in cu.outputs.iter().enumerate() {
+            let out_len = results[k].len();
+            // truncate proportionally on partial chunks (1:1 streaming map)
+            let take = if frac < 1.0 {
+                ((out_len as f64 * frac).round() as usize).max(1)
+            } else {
+                out_len
+            };
+            let data = &results[k][..take.min(out_len)];
+            match ep {
+                Endpoint::Fifo(i) => {
+                    if cu.lanes > 1 {
+                        lane_stage
+                            .entry((*i, cu.lane as usize))
+                            .or_default()
+                            .extend_from_slice(data);
+                    } else {
+                        fifos[*i].extend(data.iter().copied());
+                    }
+                }
+                Endpoint::Plm(i) => plms[*i] = data.to_vec(),
+                Endpoint::Axi(_) => {}
+            }
+        }
+        cu_firings[ci] += 1;
+        Ok(())
+    }
+}

@@ -1,0 +1,145 @@
+//! Simulation metrics.
+
+use std::fmt;
+
+/// Per-physical-memory-channel accounting.
+#[derive(Debug, Clone)]
+pub struct PcMetrics {
+    pub pc_id: u32,
+    /// Beats issued on this channel.
+    pub beats: u64,
+    /// Useful payload bytes moved.
+    pub useful_bytes: u64,
+    /// Bandwidth efficiency (useful bits / beats × width).
+    pub efficiency: f64,
+    /// Transfer time at peak beat rate (s).
+    pub time_s: f64,
+}
+
+/// Per-compute-unit accounting.
+#[derive(Debug, Clone)]
+pub struct CuMetrics {
+    pub name: String,
+    pub callee: String,
+    pub firings: u64,
+    pub elems_in: u64,
+    /// Pipeline cycles: latency + (elems - 1) × II.
+    pub cycles: u64,
+    /// Compute time at the (derated) kernel clock (s).
+    pub time_s: f64,
+}
+
+/// Whole-run metrics.
+#[derive(Debug, Clone)]
+pub struct SimMetrics {
+    pub per_pc: Vec<PcMetrics>,
+    pub per_cu: Vec<CuMetrics>,
+    /// Total useful bytes across PCs.
+    pub total_bytes: u64,
+    /// Memory-bound time: slowest PC (s).
+    pub mem_time_s: f64,
+    /// Compute-bound time: slowest CU (s).
+    pub compute_time_s: f64,
+    /// Dataflow makespan: max(mem, compute) + pipeline fill (s).
+    pub makespan_s: f64,
+    /// Useful bytes / makespan, GB/s.
+    pub achieved_gbs: f64,
+    /// Aggregate bandwidth efficiency across used PCs.
+    pub efficiency: f64,
+    /// Fabric utilization (binding resource class fraction).
+    pub utilization: f64,
+    /// Kernel clock after congestion derating (MHz).
+    pub effective_mhz: f64,
+    /// Wall-clock the simulator itself spent (s) — for §Perf.
+    pub sim_wall_s: f64,
+}
+
+impl fmt::Display for SimMetrics {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "== simulation report ==")?;
+        writeln!(
+            f,
+            "makespan {:.3} ms  (memory {:.3} ms, compute {:.3} ms)",
+            self.makespan_s * 1e3,
+            self.mem_time_s * 1e3,
+            self.compute_time_s * 1e3
+        )?;
+        writeln!(
+            f,
+            "moved {} useful bytes  ->  {:.2} GB/s achieved, {:.1}% bandwidth efficiency",
+            self.total_bytes,
+            self.achieved_gbs,
+            self.efficiency * 100.0
+        )?;
+        writeln!(
+            f,
+            "fabric utilization {:.1}%, kernel clock {:.0} MHz",
+            self.utilization * 100.0,
+            self.effective_mhz
+        )?;
+        writeln!(f, "-- memory channels --")?;
+        for pc in &self.per_pc {
+            writeln!(
+                f,
+                "  pc{:<3} beats {:<10} useful {:<12} eff {:>6.1}%  {:.3} ms",
+                pc.pc_id,
+                pc.beats,
+                pc.useful_bytes,
+                pc.efficiency * 100.0,
+                pc.time_s * 1e3
+            )?;
+        }
+        writeln!(f, "-- compute units --")?;
+        for cu in &self.per_cu {
+            writeln!(
+                f,
+                "  {:<28} firings {:<6} elems {:<10} cycles {:<12} {:.3} ms",
+                cu.name,
+                cu.firings,
+                cu.elems_in,
+                cu.cycles,
+                cu.time_s * 1e3
+            )?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_renders() {
+        let m = SimMetrics {
+            per_pc: vec![PcMetrics {
+                pc_id: 0,
+                beats: 100,
+                useful_bytes: 3200,
+                efficiency: 1.0,
+                time_s: 1e-6,
+            }],
+            per_cu: vec![CuMetrics {
+                name: "cu0".into(),
+                callee: "vecadd_1024".into(),
+                firings: 1,
+                elems_in: 1024,
+                cycles: 2083,
+                time_s: 7e-6,
+            }],
+            total_bytes: 3200,
+            mem_time_s: 1e-6,
+            compute_time_s: 7e-6,
+            makespan_s: 7.1e-6,
+            achieved_gbs: 0.45,
+            efficiency: 1.0,
+            utilization: 0.1,
+            effective_mhz: 300.0,
+            sim_wall_s: 0.01,
+        };
+        let s = m.to_string();
+        assert!(s.contains("makespan"));
+        assert!(s.contains("pc0"));
+        assert!(s.contains("cu0"));
+    }
+}

@@ -1,0 +1,21 @@
+//! Cycle-approximate platform simulator — the Alveo-card stand-in
+//! (DESIGN.md §2, substitution 1).
+//!
+//! Two planes:
+//! * **functional**: bytes actually move — host buffers stream through data
+//!   movers into FIFOs/PLMs, kernel compute units execute their AOT
+//!   HLO via PJRT ([`crate::runtime`]), results stream back. This proves
+//!   the generated architecture (incl. Iris routing and lane demuxing)
+//!   computes the right answer.
+//! * **timing**: beat/cycle accounting per physical memory channel and per
+//!   compute unit, with a dataflow-overlap makespan model and a routing-
+//!   congestion derate near full fabric utilization (paper §V-B,
+//!   replication caveat).
+
+mod engine;
+mod metrics;
+mod timing;
+
+pub use engine::{SimOutput, Simulator};
+pub use metrics::{CuMetrics, PcMetrics, SimMetrics};
+pub use timing::{congestion_derate, TimingModel};

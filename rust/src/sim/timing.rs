@@ -1,0 +1,98 @@
+//! Timing model: beat/cycle accounting + congestion derating.
+
+use crate::platform::PlatformSpec;
+
+/// Routing-congestion clock derate (paper §V-B: "a high degree of
+/// replication reaching near 100% utilization of a resource induces routing
+/// congestion and therefore a longer critical path").
+///
+/// Piecewise-linear: full clock up to 70% utilization, then a linear fall
+/// to 72% of the nominal clock at 100% — calibrated to the commonly
+/// reported 20–30% Fmax drop of near-full UltraScale+ designs.
+pub fn congestion_derate(utilization: f64) -> f64 {
+    const KNEE: f64 = 0.70;
+    const FLOOR: f64 = 0.72;
+    if utilization <= KNEE {
+        1.0
+    } else {
+        let t = ((utilization - KNEE) / (1.0 - KNEE)).min(1.0);
+        1.0 - t * (1.0 - FLOOR)
+    }
+}
+
+/// Analytic timing over a run's beat/cycle tallies.
+#[derive(Debug, Clone)]
+pub struct TimingModel {
+    pub kernel_mhz: f64,
+    pub effective_mhz: f64,
+}
+
+impl TimingModel {
+    pub fn new(plat: &PlatformSpec, utilization: f64, congestion: bool) -> Self {
+        let derate = if congestion { congestion_derate(utilization) } else { 1.0 };
+        TimingModel { kernel_mhz: plat.kernel_mhz, effective_mhz: plat.kernel_mhz * derate }
+    }
+
+    /// HLS pipeline time: latency + (elems-1) * II cycles at the effective
+    /// kernel clock.
+    pub fn cu_time_s(&self, latency: u64, ii: u64, elems: u64) -> (u64, f64) {
+        let cycles = latency + elems.saturating_sub(1) * ii;
+        (cycles, cycles as f64 / (self.effective_mhz * 1e6))
+    }
+
+    /// Memory channel transfer time for `beats` on channel `pc_id`.
+    pub fn pc_time_s(&self, plat: &PlatformSpec, pc_id: u32, beats: u64) -> f64 {
+        let spec = &plat.pcs[pc_id as usize];
+        beats as f64 / (spec.freq_mhz * 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::builtin;
+
+    #[test]
+    fn derate_is_flat_then_linear() {
+        assert_eq!(congestion_derate(0.0), 1.0);
+        assert_eq!(congestion_derate(0.7), 1.0);
+        assert!((congestion_derate(1.0) - 0.72).abs() < 1e-12);
+        let mid = congestion_derate(0.85);
+        assert!(mid < 1.0 && mid > 0.72);
+        // monotone non-increasing
+        let mut prev = 1.0;
+        for i in 0..=20 {
+            let d = congestion_derate(i as f64 / 20.0);
+            assert!(d <= prev + 1e-12);
+            prev = d;
+        }
+    }
+
+    #[test]
+    fn cu_time_matches_hls_formula() {
+        let plat = builtin("u280").unwrap();
+        let t = TimingModel::new(&plat, 0.1, true);
+        let (cycles, secs) = t.cu_time_s(100, 1, 1024);
+        assert_eq!(cycles, 100 + 1023);
+        assert!((secs - cycles as f64 / 300e6).abs() < 1e-15);
+    }
+
+    #[test]
+    fn congestion_slows_kernels() {
+        let plat = builtin("u280").unwrap();
+        let fast = TimingModel::new(&plat, 0.5, true);
+        let slow = TimingModel::new(&plat, 0.98, true);
+        assert!(slow.effective_mhz < fast.effective_mhz);
+        let off = TimingModel::new(&plat, 0.98, false);
+        assert_eq!(off.effective_mhz, off.kernel_mhz);
+    }
+
+    #[test]
+    fn pc_time_uses_channel_frequency() {
+        let plat = builtin("u280").unwrap();
+        let t = TimingModel::new(&plat, 0.1, true);
+        // 450e6 beats on an HBM PC = 1 second
+        let s = t.pc_time_s(&plat, 0, 450_000_000);
+        assert!((s - 1.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,152 @@
+//! Micro-benchmark harness (criterion is not vendored; see DESIGN.md §2).
+//!
+//! Each bench target is a plain binary (`harness = false`) that builds a
+//! [`Bench`], registers closures, and calls [`Bench::run`]. Reporting:
+//! median / p10 / p90 wall time over timed iterations after warmup, plus an
+//! optional derived throughput column. Output is both human-readable and
+//! machine-greppable (`BENCH\t<name>\t<median_ns>\t...`).
+
+use std::time::Instant;
+
+/// One benchmark result.
+#[derive(Debug, Clone)]
+pub struct Sample {
+    pub name: String,
+    pub median_ns: f64,
+    pub p10_ns: f64,
+    pub p90_ns: f64,
+    pub iters: usize,
+    /// Optional (value, unit) throughput, e.g. (12.3, "GB/s").
+    pub throughput: Option<(f64, String)>,
+}
+
+/// Bench harness configuration.
+pub struct Bench {
+    name: String,
+    warmup: usize,
+    iters: usize,
+    results: Vec<Sample>,
+}
+
+impl Bench {
+    pub fn new(name: &str) -> Self {
+        // Keep runs short: benches are regenerated for every paper figure.
+        let (warmup, iters) = match std::env::var("BENCH_FAST") {
+            Ok(_) => (1, 5),
+            Err(_) => (3, 15),
+        };
+        Self { name: name.to_string(), warmup, iters, results: Vec::new() }
+    }
+
+    pub fn with_iters(mut self, warmup: usize, iters: usize) -> Self {
+        self.warmup = warmup;
+        self.iters = iters;
+        self
+    }
+
+    /// Time `f`, which returns an optional throughput annotation computed
+    /// from its own work (e.g. bytes moved / simulated seconds).
+    pub fn bench_with_throughput<F>(&mut self, name: &str, mut f: F)
+    where
+        F: FnMut() -> Option<(f64, String)>,
+    {
+        let mut tp = None;
+        for _ in 0..self.warmup {
+            tp = f();
+        }
+        let mut times = Vec::with_capacity(self.iters);
+        for _ in 0..self.iters {
+            let t0 = Instant::now();
+            tp = f();
+            times.push(t0.elapsed().as_nanos() as f64);
+        }
+        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let q = |p: f64| times[((times.len() - 1) as f64 * p) as usize];
+        self.results.push(Sample {
+            name: name.to_string(),
+            median_ns: q(0.5),
+            p10_ns: q(0.1),
+            p90_ns: q(0.9),
+            iters: self.iters,
+            throughput: tp,
+        });
+    }
+
+    /// Time a plain closure.
+    pub fn bench<F, R>(&mut self, name: &str, mut f: F)
+    where
+        F: FnMut() -> R,
+    {
+        self.bench_with_throughput(name, || {
+            std::hint::black_box(f());
+            None
+        });
+    }
+
+    /// Print the report table and the grep-friendly lines.
+    pub fn run(self) {
+        println!("\n== bench: {} ==", self.name);
+        println!("{:<44} {:>12} {:>12} {:>12}  throughput", "case", "median", "p10", "p90");
+        for s in &self.results {
+            let tp = s
+                .throughput
+                .as_ref()
+                .map(|(v, u)| format!("{v:.2} {u}"))
+                .unwrap_or_default();
+            println!(
+                "{:<44} {:>12} {:>12} {:>12}  {}",
+                s.name,
+                fmt_ns(s.median_ns),
+                fmt_ns(s.p10_ns),
+                fmt_ns(s.p90_ns),
+                tp
+            );
+        }
+        for s in &self.results {
+            let (tv, tu) = s
+                .throughput
+                .as_ref()
+                .map(|(v, u)| (format!("{v}"), u.clone()))
+                .unwrap_or((String::new(), String::new()));
+            println!(
+                "BENCH\t{}\t{}\t{}\t{}\t{}\t{}\t{}",
+                self.name, s.name, s.median_ns, s.p10_ns, s.p90_ns, tv, tu
+            );
+        }
+    }
+}
+
+/// Pretty-print nanoseconds.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.2} s", ns / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_samples() {
+        let mut b = Bench::new("t").with_iters(1, 3);
+        b.bench("noop", || 1 + 1);
+        assert_eq!(b.results.len(), 1);
+        assert_eq!(b.results[0].iters, 3);
+        assert!(b.results[0].median_ns >= 0.0);
+    }
+
+    #[test]
+    fn fmt_ns_scales() {
+        assert_eq!(fmt_ns(500.0), "500 ns");
+        assert_eq!(fmt_ns(1500.0), "1.50 µs");
+        assert_eq!(fmt_ns(2.5e6), "2.50 ms");
+        assert_eq!(fmt_ns(3.2e9), "3.20 s");
+    }
+}

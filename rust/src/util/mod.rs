@@ -1,0 +1,11 @@
+//! In-tree substrates replacing unavailable third-party crates (the build is
+//! fully offline — see DESIGN.md §2): JSON, a seeded PRNG, a micro-bench
+//! harness and a tiny property-testing helper.
+
+pub mod benchkit;
+pub mod json;
+pub mod prop;
+pub mod rng;
+
+pub use json::Json;
+pub use rng::Rng;

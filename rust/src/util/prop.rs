@@ -1,0 +1,81 @@
+//! Tiny property-testing helper (proptest is not vendored).
+//!
+//! [`check`] runs a property over `n` seeded random cases; on failure it
+//! reports the failing seed so the case can be replayed deterministically,
+//! and performs a simple "shrink" by retrying the property with smaller
+//! size hints.
+
+use super::rng::Rng;
+
+/// Run `prop(rng, size)` for `n` cases with growing size hints (4..=max).
+/// `prop` returns `Err(msg)` to signal a failure.
+///
+/// Panics with the seed + size of the first failure (after shrinking to the
+/// smallest failing size for that seed).
+pub fn check<F>(name: &str, n: usize, max_size: usize, mut prop: F)
+where
+    F: FnMut(&mut Rng, usize) -> Result<(), String>,
+{
+    for case in 0..n {
+        let seed = 0xC0FFEE ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let size = 4 + (case * max_size.saturating_sub(4)) / n.max(1);
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng, size) {
+            // shrink: find the smallest failing size for this seed
+            let mut smallest = (size, msg);
+            let mut s = 4;
+            while s < smallest.0 {
+                let mut rng = Rng::new(seed);
+                if let Err(m) = prop(&mut rng, s) {
+                    smallest = (s, m);
+                    break;
+                }
+                s += 1 + s / 2;
+            }
+            panic!(
+                "property '{name}' failed (case {case}, seed {seed:#x}, size {}): {}",
+                smallest.0, smallest.1
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("add-commutes", 50, 100, |rng, size| {
+            let a = rng.range(0, size + 1) as i64;
+            let b = rng.range(0, size + 1) as i64;
+            if a + b == b + a {
+                Ok(())
+            } else {
+                Err("math broke".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn failing_property_panics_with_seed() {
+        check("always-fails", 5, 10, |_, _| Err("nope".into()));
+    }
+
+    #[test]
+    fn deterministic_replay() {
+        // same case index => same seed => same generated values
+        let mut first = Vec::new();
+        check("record", 3, 10, |rng, _| {
+            first.push(rng.next_u64());
+            Ok(())
+        });
+        let mut second = Vec::new();
+        check("record", 3, 10, |rng, _| {
+            second.push(rng.next_u64());
+            Ok(())
+        });
+        assert_eq!(first, second);
+    }
+}

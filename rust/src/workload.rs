@@ -1,0 +1,116 @@
+//! Synthetic workload generation: random-but-realistic Olympus DFGs for
+//! benches and property tests (the "many sources of input" of the paper's
+//! abstract — stand-ins for DSL front-ends).
+
+use crate::dialect::{DfgBuilder, KernelEst, ParamType, ResourceVec};
+use crate::ir::Module;
+use crate::util::Rng;
+
+/// Workload shape knobs.
+#[derive(Debug, Clone)]
+pub struct WorkloadSpec {
+    /// Number of kernel stages.
+    pub kernels: usize,
+    /// Elements per stream channel.
+    pub depth: u64,
+    /// Probability a kernel input comes from a previous kernel's output
+    /// (pipeline edge) rather than fresh from memory.
+    pub pipeline_p: f64,
+    /// Probability a memory channel is `small` (PLM-bound) instead of stream.
+    pub small_p: f64,
+    /// Element widths to draw from.
+    pub widths: Vec<u32>,
+}
+
+impl Default for WorkloadSpec {
+    fn default() -> Self {
+        WorkloadSpec {
+            kernels: 8,
+            depth: 1024,
+            pipeline_p: 0.35,
+            small_p: 0.15,
+            widths: vec![16, 32, 32, 32, 64],
+        }
+    }
+}
+
+/// Generate a random DFG. All kernels use the `vecadd_1024`-style estimate
+/// scaled by a size factor, with callees drawn from the AOT manifest names
+/// so generated designs stay simulatable.
+pub fn random_dfg(rng: &mut Rng, spec: &WorkloadSpec) -> Module {
+    let mut b = DfgBuilder::new();
+    let mut open_outputs: Vec<crate::ir::ValueId> = Vec::new();
+    for _ in 0..spec.kernels {
+        let n_in = rng.range(1, 3);
+        let mut ins = Vec::new();
+        for _ in 0..n_in {
+            if !open_outputs.is_empty() && rng.chance(spec.pipeline_p) {
+                let i = rng.range(0, open_outputs.len());
+                ins.push(open_outputs.swap_remove(i));
+            } else {
+                let pt = if rng.chance(spec.small_p) { ParamType::Small } else { ParamType::Stream };
+                let w = *rng.pick(&spec.widths);
+                ins.push(b.channel(w, pt, spec.depth));
+            }
+        }
+        let out = b.channel(32, ParamType::Stream, spec.depth);
+        let scale = rng.range(1, 6) as u64;
+        // match the AOT manifest signatures so generated designs simulate:
+        // 1 data input -> scale_offset (plus its two scalar PLM params),
+        // 2 data inputs -> vecadd.
+        let callee = if n_in == 1 { "scale_offset_1024" } else { "vecadd_1024" };
+        if n_in == 1 {
+            ins.push(b.channel(32, ParamType::Small, 1)); // scale
+            ins.push(b.channel(32, ParamType::Small, 1)); // offset
+        }
+        b.kernel(
+            callee,
+            &ins,
+            &[out],
+            KernelEst {
+                latency: 1000 + rng.range(0, 2000) as u64,
+                ii: rng.range(1, 4) as u64,
+                res: ResourceVec::new(4000, 5000, 2, 0, 4) * scale,
+            },
+        );
+        open_outputs.push(out);
+    }
+    b.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dialect::verify_dialect;
+    use crate::ir::verify_module;
+
+    #[test]
+    fn generated_dfgs_verify() {
+        let mut rng = Rng::new(5);
+        for k in [1usize, 4, 16, 64] {
+            let m = random_dfg(&mut rng, &WorkloadSpec { kernels: k, ..Default::default() });
+            assert!(verify_module(&m).is_empty());
+            assert!(verify_dialect(&m, false).is_empty());
+            assert!(m.num_ops() >= k);
+        }
+    }
+
+    #[test]
+    fn generated_dfgs_survive_full_pipeline() {
+        use crate::passes::manager::{parse_pipeline, PassContext};
+        use crate::platform::builtin;
+        let mut rng = Rng::new(9);
+        for seed in 0..5u64 {
+            let _ = seed;
+            let mut m = random_dfg(&mut rng, &Default::default());
+            let mut ctx = PassContext::new(builtin("u280").unwrap());
+            let pm = parse_pipeline(
+                "sanitize, plm-share, iris, replicate{factor=2}, channel-reassign, canonicalize",
+                &mut ctx,
+            )
+            .unwrap();
+            pm.run(&mut m, &ctx).unwrap();
+            assert!(verify_module(&m).is_empty());
+        }
+    }
+}

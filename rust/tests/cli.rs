@@ -1,0 +1,159 @@
+//! CLI integration: drive the `olympus` binary end-to-end like a user.
+
+use std::path::PathBuf;
+use std::process::Command;
+
+fn olympus() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_olympus"))
+}
+
+fn write_design(dir: &std::path::Path) -> PathBuf {
+    let path = dir.join("design.mlir");
+    std::fs::write(
+        &path,
+        r#"
+%a = "olympus.make_channel"() {encapsulatedType = i32, paramType = "stream", depth = 1024} : () -> (!olympus.channel<i32>)
+%b = "olympus.make_channel"() {encapsulatedType = i32, paramType = "stream", depth = 1024} : () -> (!olympus.channel<i32>)
+%c = "olympus.make_channel"() {encapsulatedType = i32, paramType = "stream", depth = 1024} : () -> (!olympus.channel<i32>)
+"olympus.kernel"(%a, %b, %c) {callee = "vecadd_1024", latency = 1060, ii = 1, ff = 4316, lut = 5373, bram = 2, uram = 0, dsp = 0, operand_segment_sizes = array<i32: 2, 1>} : (!olympus.channel<i32>, !olympus.channel<i32>, !olympus.channel<i32>) -> ()
+"#,
+    )
+    .unwrap();
+    path
+}
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("olympus_cli_{tag}_{}", std::process::id()));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+#[test]
+fn platforms_lists_builtins() {
+    let out = olympus().arg("platforms").output().unwrap();
+    assert!(out.status.success());
+    let s = String::from_utf8_lossy(&out.stdout);
+    for p in ["u280", "u50", "stratix10mx", "generic-ddr"] {
+        assert!(s.contains(p), "{s}");
+    }
+    assert!(s.contains("460.8"), "u280 total bandwidth: {s}");
+}
+
+#[test]
+fn opt_prints_transformed_ir() {
+    let dir = tmpdir("opt");
+    let design = write_design(&dir);
+    let out = olympus()
+        .args(["opt", design.to_str().unwrap(), "--pipeline", "sanitize, channel-reassign"])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let s = String::from_utf8_lossy(&out.stdout);
+    assert!(s.contains("olympus.pc"));
+    assert!(s.contains("layout"));
+}
+
+#[test]
+fn dse_prints_decision_table() {
+    let dir = tmpdir("dse");
+    let design = write_design(&dir);
+    let out = olympus().args(["dse", design.to_str().unwrap()]).output().unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let s = String::from_utf8_lossy(&out.stdout);
+    assert!(s.contains("baseline"));
+    assert!(s.contains("best: "));
+}
+
+#[test]
+fn lower_writes_artifacts() {
+    let dir = tmpdir("lower");
+    let design = write_design(&dir);
+    let out_dir = dir.join("out");
+    let out = olympus()
+        .args([
+            "lower",
+            design.to_str().unwrap(),
+            "--pipeline",
+            "sanitize, iris, channel-reassign",
+            "--out",
+            out_dir.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    for f in ["design.mlir", "link.cfg", "olympus_top.v", "host_driver.rs", "report.json"] {
+        assert!(out_dir.join(f).exists(), "missing {f}");
+    }
+    let cfg = std::fs::read_to_string(out_dir.join("link.cfg")).unwrap();
+    assert!(cfg.contains("[connectivity]"));
+    let report = std::fs::read_to_string(out_dir.join("report.json")).unwrap();
+    assert!(report.contains("\"aggregate_efficiency\""), "{report}");
+}
+
+#[test]
+fn run_simulates_with_artifacts() {
+    let dir = tmpdir("run");
+    let design = write_design(&dir);
+    let artifacts = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let out = olympus()
+        .args([
+            "run",
+            design.to_str().unwrap(),
+            "--pipeline",
+            "sanitize, iris, channel-reassign",
+            "--artifacts",
+            artifacts.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let s = String::from_utf8_lossy(&out.stdout);
+    assert!(s.contains("simulation report"), "{s}");
+    assert!(s.contains("output 'ch2'"), "{s}");
+}
+
+#[test]
+fn custom_platform_json_accepted() {
+    let dir = tmpdir("plat");
+    let design = write_design(&dir);
+    let plat = dir.join("tiny.json");
+    std::fs::write(
+        &plat,
+        r#"{"name": "tiny", "kernel_mhz": 200,
+            "pcs": [{"kind": "hbm", "width_bits": 128, "freq_mhz": 300, "capacity_bytes": 1048576},
+                    {"kind": "hbm", "width_bits": 128, "freq_mhz": 300, "capacity_bytes": 1048576}],
+            "resources": {"ff": 100000, "lut": 60000, "bram": 300, "uram": 0, "dsp": 100},
+            "util_limit": 0.8}"#,
+    )
+    .unwrap();
+    let out = olympus()
+        .args(["dse", design.to_str().unwrap(), "--platform", plat.to_str().unwrap()])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let s = String::from_utf8_lossy(&out.stdout);
+    assert!(s.contains("best: "), "{s}");
+}
+
+#[test]
+fn bad_ir_is_rejected_with_location() {
+    let dir = tmpdir("bad");
+    let path = dir.join("bad.mlir");
+    std::fs::write(&path, "%0 = \"olympus.make_channel\"() {depth = } : () -> (!olympus.channel<i32>)").unwrap();
+    let out = olympus().args(["opt", path.to_str().unwrap()]).output().unwrap();
+    assert!(!out.status.success());
+    let s = String::from_utf8_lossy(&out.stderr);
+    assert!(s.contains("parse error") || s.contains("expected"), "{s}");
+}
+
+#[test]
+fn unknown_pass_is_rejected() {
+    let dir = tmpdir("badpass");
+    let design = write_design(&dir);
+    let out = olympus()
+        .args(["opt", design.to_str().unwrap(), "--pipeline", "sanitize, frobnicate"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown pass"));
+}

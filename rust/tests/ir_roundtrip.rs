@@ -1,0 +1,127 @@
+//! Property tests: print → parse → print is a fixpoint for random modules,
+//! and parsing never panics on mutated inputs.
+
+use olympus::ir::{
+    parse_module, print_module, verify_module, Attribute, Module, OpBuilder, Type,
+};
+use olympus::util::{prop, Rng};
+
+/// Generate a random well-formed DFG-ish module.
+fn random_module(rng: &mut Rng, size: usize) -> Module {
+    let mut m = Module::new();
+    let mut b = OpBuilder::new(&mut m);
+    let widths = [8u32, 16, 32, 64, 128, 256];
+    let params = ["stream", "small", "complex"];
+    let mut channels: Vec<(olympus::ir::ValueId, Type)> = Vec::new();
+    let n_ch = 1 + rng.range(0, size.max(1));
+    for _ in 0..n_ch {
+        let w = *rng.pick(&widths);
+        let ty = Type::channel_of(Type::int(w));
+        let (_, res) = b
+            .op("olympus.make_channel")
+            .attr("encapsulatedType", Type::int(w))
+            .attr("paramType", *rng.pick(&params))
+            .attr("depth", rng.range(1, 4096) as i64)
+            .result(ty.clone())
+            .build();
+        channels.push((res[0], ty));
+    }
+    let n_k = rng.range(0, size / 2 + 1);
+    for ki in 0..n_k {
+        let n_in = rng.range(1, 4.min(channels.len() + 1));
+        let n_out = rng.range(0, 2.min(channels.len()));
+        let mut ops = Vec::new();
+        for _ in 0..(n_in + n_out) {
+            ops.push(channels[rng.range(0, channels.len())].0);
+        }
+        let mut ctor = b
+            .op("olympus.kernel")
+            .attr("callee", format!("k{ki}"))
+            .attr("latency", rng.range(1, 10_000) as i64)
+            .attr("ii", rng.range(1, 16) as i64)
+            .attr(
+                "operand_segment_sizes",
+                Attribute::DenseI32(vec![n_in as i32, n_out as i32]),
+            );
+        for v in &ops {
+            ctor = ctor.operand(*v);
+        }
+        ctor.build();
+    }
+    m
+}
+
+#[test]
+fn print_parse_roundtrip_is_fixpoint() {
+    prop::check("print-parse-fixpoint", 60, 40, |rng, size| {
+        let m = random_module(rng, size);
+        let errs = verify_module(&m);
+        if !errs.is_empty() {
+            return Err(format!("generator produced invalid module: {errs:?}"));
+        }
+        let t1 = print_module(&m);
+        let m2 = parse_module(&t1).map_err(|e| format!("reparse failed: {e}\n{t1}"))?;
+        let t2 = print_module(&m2);
+        if t1 != t2 {
+            return Err(format!("not a fixpoint:\n--- first\n{t1}\n--- second\n{t2}"));
+        }
+        let errs2 = verify_module(&m2);
+        if !errs2.is_empty() {
+            return Err(format!("reparsed module invalid: {errs2:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn parser_never_panics_on_mutations() {
+    prop::check("parser-total", 80, 30, |rng, size| {
+        let m = random_module(rng, size);
+        let mut text = print_module(&m).into_bytes();
+        // random byte mutations — parser must return Ok or Err, never panic
+        let n_mut = rng.range(1, 6);
+        for _ in 0..n_mut {
+            if text.is_empty() {
+                break;
+            }
+            let i = rng.range(0, text.len());
+            match rng.range(0, 3) {
+                0 => text[i] = b' ',
+                1 => text[i] = b"(){}%<>\",:=!"[rng.range(0, 12)],
+                _ => {
+                    text.remove(i);
+                }
+            }
+        }
+        if let Ok(s) = String::from_utf8(text) {
+            let _ = parse_module(&s); // must not panic
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn structural_equality_after_roundtrip() {
+    prop::check("structural-eq", 40, 30, |rng, size| {
+        let m = random_module(rng, size);
+        let m2 = parse_module(&print_module(&m)).map_err(|e| e.to_string())?;
+        if m.top.len() != m2.top.len() {
+            return Err("top-level op count changed".into());
+        }
+        for (&a, &b) in m.top.iter().zip(m2.top.iter()) {
+            let (oa, ob) = (m.op(a), m2.op(b));
+            if oa.name != ob.name || oa.attrs != ob.attrs {
+                return Err(format!("op mismatch: {} vs {}", oa.name, ob.name));
+            }
+            if oa.operands.len() != ob.operands.len() {
+                return Err("operand count changed".into());
+            }
+            for (&va, &vb) in oa.operands.iter().zip(ob.operands.iter()) {
+                if m.value_type(va) != m2.value_type(vb) {
+                    return Err("operand type changed".into());
+                }
+            }
+        }
+        Ok(())
+    });
+}

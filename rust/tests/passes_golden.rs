@@ -1,0 +1,167 @@
+//! Golden-IR tests mirroring the paper's Figures 4–8, plus pass-pipeline
+//! invariants under randomized workloads.
+
+use olympus::analysis::{analyze_bandwidth, analyze_resources, Dfg};
+use olympus::dialect::build::fig4a_module;
+use olympus::dialect::{verify_dialect, ChannelView, KernelView, PcView, OP_SUPER_NODE};
+use olympus::ir::{parse_module, print_module, verify_module};
+use olympus::passes::manager::{parse_pipeline, PassContext};
+use olympus::platform::builtin;
+use olympus::util::{prop, Rng};
+use olympus::workload::{random_dfg, WorkloadSpec};
+
+fn run(m: &olympus::ir::Module, pipeline: &str) -> olympus::ir::Module {
+    let mut m = m.clone();
+    let mut ctx = PassContext::new(builtin("u280").unwrap());
+    parse_pipeline(pipeline, &mut ctx).unwrap().run(&mut m, &ctx).unwrap();
+    m
+}
+
+#[test]
+fn fig4_sanitize_golden() {
+    let m = run(&fig4a_module(), "sanitize");
+    let text = print_module(&m);
+    // Fig 4b: three PC terminals, all id 0
+    assert_eq!(text.matches("\"olympus.pc\"").count(), 3);
+    assert_eq!(text.matches("id = 0").count(), 3);
+    // Fig 4c: per-channel scalar layout, 1 elem wide, depth = channel depth
+    for ch in ChannelView::all(&m) {
+        let l = ch.layout(&m).unwrap();
+        assert_eq!(l.word_bits, ch.elem_bits(&m));
+        assert_eq!(l.depth, 1024);
+        assert_eq!(l.fields.len(), 1);
+    }
+    // round-trips through the printer/parser
+    let m2 = parse_module(&text).unwrap();
+    assert_eq!(print_module(&m2), text);
+}
+
+#[test]
+fn fig5_reassign_golden() {
+    let m = run(&fig4a_module(), "sanitize, channel-reassign");
+    let ids: std::collections::BTreeSet<u32> =
+        PcView::all(&m).iter().map(|pc| pc.id(&m)).collect();
+    assert_eq!(ids.len(), 3, "each PC node has been given a different id (Fig 5)");
+}
+
+#[test]
+fn fig6_replicate_golden() {
+    let m = run(&fig4a_module(), "sanitize, replicate{factor=2}");
+    // "Each operator is replicated and given a new identifier."
+    assert_eq!(KernelView::all(&m).len(), 2);
+    assert_eq!(ChannelView::all(&m).len(), 6);
+    // "Each replicated PC node is given the same i.d."
+    let pcs = PcView::all(&m);
+    assert_eq!(pcs.len(), 6);
+    assert!(pcs.iter().all(|pc| pc.id(&m) == 0));
+}
+
+#[test]
+fn fig7_bus_widen_golden() {
+    let m = run(&fig4a_module(), "sanitize, bus-widen{width=128}");
+    // "Each data channel is made twice as wide ... two kernels instantiated"
+    // (at 128-bit bus with 32-bit data: 4 lanes)
+    let sns = m.top_ops_named(OP_SUPER_NODE);
+    assert_eq!(sns.len(), 1, "super-node encapsulating the kernels");
+    assert_eq!(m.op(sns[0]).regions[0].ops.len(), 4);
+    for ch in ChannelView::all(&m) {
+        let l = ch.layout(&m).unwrap();
+        assert_eq!(l.lanes, 4, "layout has the data replicated in parallel lanes");
+        assert_eq!(l.word_bits, 128);
+    }
+}
+
+#[test]
+fn fig8_iris_golden() {
+    let m = run(&fig4a_module(), "sanitize, iris{width=128}");
+    // "Iris combines the a and b channels ... into a 128-bit bus"
+    let buses: Vec<ChannelView> = ChannelView::all(&m)
+        .into_iter()
+        .filter(|ch| m.op(ch.op).attr("iris_members").is_some())
+        .collect();
+    let read_bus = buses
+        .iter()
+        .find(|ch| m.op(ch.op).str_attr("direction") == Some("read"))
+        .expect("a+b read bus");
+    let members = m.op(read_bus.op).attr("iris_members").unwrap().as_array().unwrap();
+    assert_eq!(members.len(), 2, "a and b combined");
+    let l = read_bus.layout(&m).unwrap();
+    // "the b array broken up to achieve the most compact result": with equal
+    // lengths both arrays get 2 of the 4 32-bit slots in the 128-bit word
+    assert_eq!(l.word_bits, 128);
+    assert!(l.fields.len() >= 2);
+    assert!((l.efficiency() - 1.0).abs() < 1e-9);
+}
+
+#[test]
+fn pipeline_preserves_invariants_on_random_dfgs() {
+    prop::check("pipeline-invariants", 25, 24, |rng: &mut Rng, size| {
+        let spec = WorkloadSpec { kernels: 1 + size / 2, ..Default::default() };
+        let m0 = random_dfg(rng, &spec);
+        let pipelines = [
+            "sanitize",
+            "sanitize, channel-reassign",
+            "sanitize, iris, channel-reassign",
+            "sanitize, plm-share, replicate{factor=2}, channel-reassign, canonicalize",
+        ];
+        let plat = builtin("u280").unwrap();
+        let base_payload: u64 = {
+            let m = run(&m0, "sanitize");
+            let dfg = Dfg::build(&m);
+            analyze_bandwidth(&m, &plat, &dfg).total_useful_bytes
+        };
+        for p in pipelines {
+            let m = run(&m0, p);
+            let errs = verify_module(&m);
+            if !errs.is_empty() {
+                return Err(format!("{p}: structural {errs:?}"));
+            }
+            let derrs = verify_dialect(&m, false);
+            if !derrs.is_empty() {
+                return Err(format!("{p}: dialect {derrs:?}"));
+            }
+            let dfg = Dfg::build(&m);
+            let bw = analyze_bandwidth(&m, &plat, &dfg);
+            let res = analyze_resources(&m, &plat, &dfg);
+            // bandwidth-claim soundness: efficiency is a fraction
+            if !(0.0..=1.0 + 1e-9).contains(&bw.aggregate_efficiency) {
+                return Err(format!("{p}: efficiency {}", bw.aggregate_efficiency));
+            }
+            // payload conservation for non-replicating pipelines
+            if !p.contains("replicate") && bw.total_useful_bytes != base_payload {
+                return Err(format!(
+                    "{p}: payload changed {} -> {}",
+                    base_payload, bw.total_useful_bytes
+                ));
+            }
+            // resource monotonicity: total >= kernels
+            let k = res.kernels;
+            let t = res.total;
+            if t.lut < k.lut || t.ff < k.ff {
+                return Err(format!("{p}: infra subtracted below kernel cost"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn reassign_never_worsens_makespan() {
+    prop::check("reassign-improves", 20, 16, |rng: &mut Rng, size| {
+        let spec = WorkloadSpec { kernels: 1 + size / 2, ..Default::default() };
+        let m0 = random_dfg(rng, &spec);
+        let plat = builtin("u280").unwrap();
+        let before = {
+            let m = run(&m0, "sanitize");
+            analyze_bandwidth(&m, &plat, &Dfg::build(&m)).makespan_s
+        };
+        let after = {
+            let m = run(&m0, "sanitize, channel-reassign");
+            analyze_bandwidth(&m, &plat, &Dfg::build(&m)).makespan_s
+        };
+        if after > before + 1e-12 {
+            return Err(format!("worse after reassign: {before} -> {after}"));
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,133 @@
+//! Integration: AOT artifacts (python/jax/pallas) load + execute via PJRT
+//! from rust, and the numerics match CPU-side oracles.
+//!
+//! Requires `make artifacts` to have populated `artifacts/` first.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use olympus::runtime::{KernelRegistry, PjrtRuntime};
+
+fn registry() -> KernelRegistry {
+    let rt = Arc::new(PjrtRuntime::cpu().expect("PJRT CPU client"));
+    KernelRegistry::load(rt, Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts").as_path())
+        .expect("load artifacts/manifest.json (run `make artifacts`)")
+}
+
+/// Deterministic pseudo-random f32s in [-1, 1).
+fn randf(seed: u64, n: usize) -> Vec<f32> {
+    let mut s = seed.wrapping_mul(0x9E3779B97F4A7C15).wrapping_add(1);
+    (0..n)
+        .map(|_| {
+            s ^= s << 13;
+            s ^= s >> 7;
+            s ^= s << 17;
+            ((s >> 11) as f64 / (1u64 << 53) as f64 * 2.0 - 1.0) as f32
+        })
+        .collect()
+}
+
+#[test]
+fn vecadd_1024_matches_oracle() {
+    let reg = registry();
+    let a = randf(1, 1024);
+    let b = randf(2, 1024);
+    let out = reg.execute("vecadd_1024", &[&a, &b]).unwrap();
+    assert_eq!(out.len(), 1);
+    for i in 0..1024 {
+        assert!((out[0][i] - (a[i] + b[i])).abs() < 1e-6, "mismatch at {i}");
+    }
+}
+
+#[test]
+fn saxpy_1024_matches_oracle() {
+    let reg = registry();
+    let alpha = vec![0.75f32];
+    let x = randf(3, 1024);
+    let y = randf(4, 1024);
+    let out = reg.execute("saxpy_1024", &[&alpha, &x, &y]).unwrap();
+    for i in 0..1024 {
+        let want = alpha[0] * x[i] + y[i];
+        assert!((out[0][i] - want).abs() < 1e-5, "mismatch at {i}");
+    }
+}
+
+#[test]
+fn dot_1024_matches_oracle() {
+    let reg = registry();
+    let a = randf(5, 1024);
+    let b = randf(6, 1024);
+    let out = reg.execute("dot_1024", &[&a, &b]).unwrap();
+    let want: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+    assert!((out[0][0] - want).abs() < 1e-2, "got {} want {}", out[0][0], want);
+}
+
+#[test]
+fn jacobi2d_64_matches_oracle() {
+    let reg = registry();
+    let n = 64usize;
+    let g = randf(7, n * n);
+    let out = reg.execute("jacobi2d_64", &[&g]).unwrap();
+    let o = &out[0];
+    // boundaries pass through
+    for j in 0..n {
+        assert_eq!(o[j], g[j]);
+        assert_eq!(o[(n - 1) * n + j], g[(n - 1) * n + j]);
+    }
+    // interior is the 5-point average
+    for i in 1..n - 1 {
+        for j in 1..n - 1 {
+            let want =
+                0.25 * (g[(i - 1) * n + j] + g[(i + 1) * n + j] + g[i * n + j - 1] + g[i * n + j + 1]);
+            assert!((o[i * n + j] - want).abs() < 1e-5, "mismatch at ({i},{j})");
+        }
+    }
+}
+
+#[test]
+fn filter_sum_1024_matches_oracle() {
+    let reg = registry();
+    let x = randf(8, 1024);
+    let t = vec![0.1f32];
+    let out = reg.execute("filter_sum_1024", &[&x, &t]).unwrap();
+    let want_s: f32 = x.iter().filter(|&&v| v > t[0]).sum();
+    let want_c = x.iter().filter(|&&v| v > t[0]).count() as f32;
+    assert!((out[0][0] - want_s).abs() < 1e-2);
+    assert_eq!(out[0][1], want_c);
+}
+
+#[test]
+fn matmul_128_matches_oracle_loosely() {
+    let reg = registry();
+    let m = 128usize;
+    let a = randf(9, m * m);
+    let b = randf(10, m * m);
+    let out = reg.execute("matmul_128", &[&a, &b]).unwrap();
+    // bf16 multiply in the kernel => loose tolerance
+    for i in (0..m).step_by(17) {
+        for j in (0..m).step_by(13) {
+            let want: f32 = (0..m).map(|k| a[i * m + k] * b[k * m + j]).sum();
+            let got = out[0][i * m + j];
+            assert!(
+                (got - want).abs() < 0.5 + 0.05 * want.abs(),
+                "({i},{j}): got {got} want {want}"
+            );
+        }
+    }
+}
+
+#[test]
+fn unknown_kernel_is_an_error() {
+    let reg = registry();
+    assert!(reg.execute("nope", &[]).is_err());
+}
+
+#[test]
+fn manifest_lists_all_variants() {
+    let reg = registry();
+    let mut names = reg.names();
+    names.sort();
+    assert!(names.contains(&"vecadd_1024"));
+    assert!(names.contains(&"jacobi2d_64_x4"));
+    assert!(names.len() >= 11, "expected >= 11 kernels, got {names:?}");
+}

@@ -1,0 +1,162 @@
+//! Simulator calibration vs closed-form expectations (claim C1 + timing
+//! model sanity), and conservation properties.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Arc;
+
+use olympus::coordinator::run_flow;
+use olympus::dialect::build::fig4a_module;
+use olympus::platform::builtin;
+use olympus::runtime::{KernelRegistry, PjrtRuntime};
+use olympus::sim::Simulator;
+use olympus::util::Rng;
+
+fn registry() -> KernelRegistry {
+    let rt = Arc::new(PjrtRuntime::cpu().expect("PJRT CPU client"));
+    KernelRegistry::load(rt, Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts").as_path())
+        .expect("artifacts")
+}
+
+fn run_sim(pipeline: &str) -> olympus::sim::SimOutput {
+    let plat = builtin("u280").unwrap();
+    let r = run_flow(fig4a_module(), &plat, Some(pipeline)).unwrap();
+    let reg = registry();
+    let sim = Simulator::new(&r.arch, &reg).with_resources(&r.resources);
+    let mut rng = Rng::new(3);
+    let mut buffers = HashMap::new();
+    buffers.insert("ch0".to_string(), rng.vecf32(1024));
+    buffers.insert("ch1".to_string(), rng.vecf32(1024));
+    sim.run(&buffers).unwrap()
+}
+
+#[test]
+fn naive_memory_time_matches_closed_form() {
+    let out = run_sim("sanitize");
+    // all three channels on PC 0; naive 32-bit words -> 1 beat/element
+    // 3 x 1024 beats at 450 MHz
+    let want = 3.0 * 1024.0 / 450e6;
+    let got = out.metrics.mem_time_s;
+    assert!((got - want).abs() / want < 1e-9, "got {got} want {want}");
+    // efficiency = 32/256
+    assert!((out.metrics.efficiency - 0.125).abs() < 1e-9);
+}
+
+#[test]
+fn reassigned_memory_time_is_one_channel() {
+    let out = run_sim("sanitize, channel-reassign");
+    let want = 1024.0 / 450e6; // each channel on its own PC
+    assert!((out.metrics.mem_time_s - want).abs() / want < 1e-9);
+    assert_eq!(out.metrics.per_pc.len(), 3);
+}
+
+#[test]
+fn iris_memory_time_matches_packed_words() {
+    let out = run_sim("sanitize, iris, channel-reassign");
+    // read bus: 2048 elems / 8 slots = 256 words; write bus: 1024/8 = 128
+    let want = 256.0 / 450e6;
+    assert!(
+        (out.metrics.mem_time_s - want).abs() / want < 1e-9,
+        "got {} want {want}",
+        out.metrics.mem_time_s
+    );
+    assert!(out.metrics.efficiency > 0.99);
+}
+
+#[test]
+fn compute_time_matches_hls_formula() {
+    let out = run_sim("sanitize");
+    // vecadd_1024: latency 1060, II 1, 2048 input elements consumed
+    let cu = &out.metrics.per_cu[0];
+    assert_eq!(cu.cycles, 1060 + (cu.elems_in - 1));
+    let want = cu.cycles as f64 / 300e6;
+    assert!((cu.time_s - want).abs() < 1e-12);
+}
+
+#[test]
+fn bytes_are_conserved() {
+    for pipeline in ["sanitize", "sanitize, iris, channel-reassign"] {
+        let out = run_sim(pipeline);
+        // in: 2 x 4096 B, out: 4096 B
+        assert_eq!(out.metrics.total_bytes, 3 * 4096, "{pipeline}");
+        assert_eq!(out.outputs["ch2"].len(), 1024, "{pipeline}");
+    }
+}
+
+#[test]
+fn simulation_is_deterministic() {
+    let a = run_sim("sanitize, iris, channel-reassign");
+    let b = run_sim("sanitize, iris, channel-reassign");
+    assert_eq!(a.outputs["ch2"], b.outputs["ch2"]);
+    assert_eq!(a.metrics.total_bytes, b.metrics.total_bytes);
+    assert!((a.metrics.makespan_s - b.metrics.makespan_s).abs() < 1e-15);
+}
+
+#[test]
+fn missing_buffer_is_a_clean_error() {
+    let plat = builtin("u280").unwrap();
+    let r = run_flow(fig4a_module(), &plat, Some("sanitize")).unwrap();
+    let reg = registry();
+    let sim = Simulator::new(&r.arch, &reg);
+    let mut buffers = HashMap::new();
+    buffers.insert("ch0".to_string(), vec![0.0; 1024]); // ch1 missing
+    let err = match sim.run(&buffers) {
+        Ok(_) => panic!("run with a missing buffer must fail"),
+        Err(e) => e.to_string(),
+    };
+    assert!(err.contains("ch1"), "{err}");
+}
+
+#[test]
+fn device_api_flow() {
+    use olympus::host::Device;
+    let plat = builtin("u280").unwrap();
+    let r = run_flow(fig4a_module(), &plat, Some("sanitize, channel-reassign")).unwrap();
+    let mut dev = Device::program(r.arch.clone(), registry()).unwrap();
+    dev.set_utilization(r.resources.utilization);
+    // write -> run -> read verbs
+    let mut rng = Rng::new(5);
+    let a = rng.vecf32(1024);
+    let b = rng.vecf32(1024);
+    dev.write_buffer("ch0", &a).unwrap();
+    dev.write_buffer("ch1", &b).unwrap();
+    assert!(dev.write_buffer("not_a_channel", &a).is_err());
+    assert!(dev.read_buffer("ch2").is_err(), "no output before run");
+    let metrics = dev.run().unwrap();
+    assert!(metrics.makespan_s > 0.0);
+    let c = dev.read_buffer("ch2").unwrap();
+    for i in 0..1024 {
+        assert!((c[i] - (a[i] + b[i])).abs() < 1e-5);
+    }
+    assert!(dev.metrics().is_some());
+}
+
+#[test]
+fn run_iterations_aggregates() {
+    use olympus::host::Device;
+    let plat = builtin("u280").unwrap();
+    let r = run_flow(fig4a_module(), &plat, Some("sanitize, channel-reassign")).unwrap();
+    let mut dev = Device::program(r.arch.clone(), registry()).unwrap();
+    let mut rng = Rng::new(17);
+    dev.write_buffer("ch0", &rng.vecf32(1024)).unwrap();
+    dev.write_buffer("ch1", &rng.vecf32(1024)).unwrap();
+    let one = dev.run().unwrap();
+    let ten = dev.run_iterations(10).unwrap();
+    assert!((ten.makespan_s / one.makespan_s - 10.0).abs() < 1e-6);
+    assert_eq!(ten.total_bytes, 10 * one.total_bytes);
+    // steady-state throughput equals single-iteration throughput
+    assert!((ten.achieved_gbs / one.achieved_gbs - 1.0).abs() < 1e-9);
+}
+
+#[test]
+fn validation_catches_unknown_callee() {
+    use olympus::dialect::{DfgBuilder, ParamType};
+    let plat = builtin("u280").unwrap();
+    let mut b = DfgBuilder::new();
+    let x = b.channel(32, ParamType::Stream, 16);
+    b.kernel("not_in_manifest", &[x], &[], Default::default());
+    let r = run_flow(b.finish(), &plat, Some("sanitize")).unwrap();
+    let reg = registry();
+    let err = Simulator::new(&r.arch, &reg).validate().unwrap_err().to_string();
+    assert!(err.contains("not_in_manifest"), "{err}");
+}
