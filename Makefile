@@ -1,0 +1,24 @@
+# Convenience targets. `cargo build/test` work without any of these: the
+# checked-in rust/artifacts/manifest.json drives the native kernel backend.
+#
+# `make artifacts` re-lowers the JAX/Pallas kernels to HLO text for the
+# opt-in `pjrt` cargo feature (requires a python env with jax installed).
+
+.PHONY: build test bench artifacts fmt
+
+build:
+	cargo build --release
+
+test:
+	cargo test -q
+
+bench:
+	for b in rust/benches/bench_*.rs; do \
+	  cargo bench --bench $$(basename $$b .rs); \
+	done
+
+artifacts:
+	cd python && python -m compile.aot --out-dir ../rust/artifacts
+
+fmt:
+	cargo fmt --check

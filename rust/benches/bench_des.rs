@@ -1,0 +1,86 @@
+//! §Perf: discrete-event simulator throughput.
+//!
+//! * raw event-calendar push/pop rate (events/sec);
+//! * full queueing-network replay rate on generated workloads;
+//! * DSE `des-score` wall time, 1 worker thread vs all cores.
+
+use std::time::Instant;
+
+use olympus::coordinator::run_flow;
+use olympus::des::{simulate, DesConfig, EventCalendar, TimePoint, WorkloadScenario};
+use olympus::passes::{run_dse_with, DseObjective, DseOptions};
+use olympus::platform::builtin;
+use olympus::util::benchkit::Bench;
+use olympus::util::Rng;
+use olympus::workload::{random_dfg, WorkloadSpec};
+
+fn main() {
+    let mut b = Bench::new("des");
+
+    // ---- raw calendar: heap push/pop at random times --------------------
+    const N: usize = 200_000;
+    b.bench_with_throughput("calendar_200k_events", || {
+        let t0 = Instant::now();
+        let mut cal: EventCalendar<u64> = EventCalendar::new();
+        let mut rng = Rng::new(1);
+        // half pre-loaded, half scheduled while draining (churn pattern)
+        for i in 0..(N / 2) as u64 {
+            cal.push(TimePoint::from_ps(rng.below(1 << 40)), i);
+        }
+        let mut popped = 0u64;
+        while let Some((now, _)) = cal.pop() {
+            popped += 1;
+            if popped <= (N / 2) as u64 {
+                cal.push(now + olympus::des::TimeSpan::from_ps(1 + rng.below(1 << 20)), popped);
+            }
+        }
+        let secs = t0.elapsed().as_secs_f64();
+        Some((N as f64 / secs, "events/s".to_string()))
+    });
+
+    // ---- network replay on generated workloads --------------------------
+    let plat = builtin("u280").unwrap();
+    for kernels in [4usize, 16] {
+        let mut rng = Rng::new(kernels as u64);
+        let spec = WorkloadSpec { kernels, small_p: 0.0, ..Default::default() };
+        let m = random_dfg(&mut rng, &spec);
+        let r = run_flow(m, &plat, Some("sanitize, channel-reassign")).expect("flow");
+        let arch = r.arch.clone();
+        let scenario = WorkloadScenario::closed_loop(4);
+        let cfg = DesConfig { utilization: r.resources.utilization, ..DesConfig::default() };
+        b.bench_with_throughput(&format!("replay_{kernels}_kernels_4_jobs"), || {
+            let t0 = Instant::now();
+            let rep = simulate(&arch, &scenario, &cfg).expect("simulate");
+            let secs = t0.elapsed().as_secs_f64();
+            Some((rep.events as f64 / secs, "events/s".to_string()))
+        });
+    }
+
+    // ---- des-score DSE: 1 thread vs all cores ---------------------------
+    let m = {
+        let mut rng = Rng::new(3);
+        random_dfg(&mut rng, &WorkloadSpec { kernels: 6, small_p: 0.0, ..Default::default() })
+    };
+    let cores = std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1);
+    for threads in [1usize, cores] {
+        let opts = DseOptions {
+            factors: vec![2, 4],
+            objective: DseObjective::des_score_with(
+                WorkloadScenario::closed_loop(2),
+                DesConfig::default(),
+            ),
+            threads,
+        };
+        b.bench_with_throughput(&format!("dse_des_score_{threads}_threads"), || {
+            let t0 = Instant::now();
+            let rep = run_dse_with(&m, &plat, &opts).expect("dse");
+            let secs = t0.elapsed().as_secs_f64();
+            Some((rep.candidates.len() as f64 / secs, "candidates/s".to_string()))
+        });
+        if cores == 1 {
+            break; // avoid a duplicate bench name on single-core machines
+        }
+    }
+
+    b.run();
+}

@@ -3,10 +3,11 @@
 use anyhow::Result;
 
 use crate::analysis::{analyze_bandwidth, analyze_resources, BandwidthReport, Dfg, ResourceReport};
+use crate::des::{simulate, DesConfig, DesReport, WorkloadScenario};
 use crate::ir::Module;
 use crate::lower::{build_architecture, emit_host_driver, emit_verilog, emit_vitis_cfg, Architecture};
 use crate::passes::manager::{parse_pipeline, PassContext, PassRecord};
-use crate::passes::{run_dse, DseReport};
+use crate::passes::{run_dse_with, DseObjective, DseOptions, DseReport as DseTable};
 use crate::platform::PlatformSpec;
 
 /// Flow configuration.
@@ -16,6 +17,13 @@ pub struct Flow {
     pub pipeline: Option<String>,
     /// Replication factors swept by the DSE (empty = defaults).
     pub dse_factors: Vec<u64>,
+    /// Objective for DSE mode (analytic or des-score).
+    pub objective: DseObjective,
+    /// When set, the final architecture is replayed through the
+    /// discrete-event simulator and the report lands in [`FlowResult::des`].
+    pub scenario: Option<WorkloadScenario>,
+    /// Engine knobs for that replay.
+    pub des_config: DesConfig,
 }
 
 /// Everything the flow produces (the purple boxes of Fig 3).
@@ -25,7 +33,7 @@ pub struct FlowResult {
     /// Per-pass execution records (explicit pipelines only).
     pub records: Vec<PassRecord>,
     /// DSE decision table (DSE mode only).
-    pub dse: Option<DseReport>,
+    pub dse: Option<DseTable>,
     /// Lowered architecture netlist.
     pub arch: Architecture,
     /// Vitis connectivity config.
@@ -37,11 +45,21 @@ pub struct FlowResult {
     /// Post-optimization analyses.
     pub bandwidth: BandwidthReport,
     pub resources: ResourceReport,
+    /// Discrete-event replay of the final architecture (when a scenario
+    /// was configured).
+    pub des: Option<DesReport>,
 }
 
 impl Flow {
     pub fn new(platform: PlatformSpec) -> Self {
-        Flow { platform, pipeline: None, dse_factors: Vec::new() }
+        Flow {
+            platform,
+            pipeline: None,
+            dse_factors: Vec::new(),
+            objective: DseObjective::Analytic,
+            scenario: None,
+            des_config: DesConfig::default(),
+        }
     }
 
     pub fn with_pipeline(mut self, pipeline: &str) -> Self {
@@ -49,7 +67,17 @@ impl Flow {
         self
     }
 
-    /// Run optimize -> analyze -> lower -> emit.
+    pub fn with_objective(mut self, objective: DseObjective) -> Self {
+        self.objective = objective;
+        self
+    }
+
+    pub fn with_scenario(mut self, scenario: WorkloadScenario) -> Self {
+        self.scenario = Some(scenario);
+        self
+    }
+
+    /// Run optimize -> analyze -> lower -> emit (-> simulate).
     pub fn run(&self, input: Module, app_name: &str) -> Result<FlowResult> {
         let mut module = input;
         let mut records = Vec::new();
@@ -61,7 +89,12 @@ impl Flow {
                 records = pm.run(&mut module, &ctx)?;
             }
             None => {
-                let rep = run_dse(&module, &self.platform, &self.dse_factors)?;
+                let opts = DseOptions {
+                    factors: self.dse_factors.clone(),
+                    objective: self.objective.clone(),
+                    threads: 0,
+                };
+                let rep = run_dse_with(&module, &self.platform, &opts)?;
                 module = rep.best.clone();
                 dse = Some(rep);
             }
@@ -73,7 +106,26 @@ impl Flow {
         let cfg = emit_vitis_cfg(&arch);
         let verilog = emit_verilog(&arch);
         let driver = emit_host_driver(&arch, app_name);
-        Ok(FlowResult { module, records, dse, arch, cfg, verilog, driver, bandwidth, resources })
+        let des = match &self.scenario {
+            Some(sc) => {
+                let mut dcfg = self.des_config.clone();
+                dcfg.utilization = resources.utilization;
+                Some(simulate(&arch, sc, &dcfg)?)
+            }
+            None => None,
+        };
+        Ok(FlowResult {
+            module,
+            records,
+            dse,
+            arch,
+            cfg,
+            verilog,
+            driver,
+            bandwidth,
+            resources,
+            des,
+        })
     }
 }
 
@@ -102,6 +154,7 @@ mod tests {
         .unwrap();
         assert_eq!(r.records.len(), 3);
         assert!(r.dse.is_none());
+        assert!(r.des.is_none());
         assert!(!r.cfg.is_empty());
         assert!(!r.verilog.is_empty());
         assert!(r.bandwidth.aggregate_efficiency > 0.9);
@@ -115,5 +168,39 @@ mod tests {
         assert!(dse.candidates.len() >= 6);
         assert_ne!(dse.best_strategy, "baseline");
         assert!(!r.arch.cus.is_empty());
+    }
+
+    #[test]
+    fn scenario_flow_attaches_des_report() {
+        use crate::des::WorkloadScenario;
+        let r = Flow::new(builtin("u280").unwrap())
+            .with_pipeline("sanitize, iris, channel-reassign")
+            .with_scenario(WorkloadScenario::closed_loop(2))
+            .run(fig4a_module(), "app")
+            .unwrap();
+        let des = r.des.expect("des report");
+        assert_eq!(des.jobs_completed, 2);
+        assert!(des.makespan_s > 0.0);
+        assert!(!des.nodes.is_empty());
+    }
+
+    #[test]
+    fn des_score_flow_end_to_end() {
+        use crate::des::{DesConfig, WorkloadScenario};
+        let r = Flow::new(builtin("u280").unwrap())
+            .with_objective(DseObjective::des_score_with(
+                WorkloadScenario::closed_loop(2),
+                DesConfig::default(),
+            ))
+            .with_scenario(WorkloadScenario::closed_loop(2))
+            .run(fig4a_module(), "app")
+            .unwrap();
+        let dse = r.dse.expect("dse table");
+        // every feasible candidate carries DES metrics
+        assert!(dse
+            .candidates
+            .iter()
+            .any(|c| c.des_makespan_s.is_some() && c.score.is_finite()));
+        assert!(r.des.is_some());
     }
 }

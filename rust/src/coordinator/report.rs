@@ -33,7 +33,7 @@ pub fn flow_report_json(r: &super::flow::FlowResult) -> Json {
             ])
         })
         .collect();
-    Json::obj(vec![
+    let mut fields: Vec<(&str, Json)> = vec![
         ("platform", r.arch.platform.name.as_str().into()),
         (
             "bandwidth",
@@ -66,19 +66,59 @@ pub fn flow_report_json(r: &super::flow::FlowResult) -> Json {
                 ("cus", Json::Arr(cus)),
             ]),
         ),
-    ])
+    ];
+    if let Some(des) = &r.des {
+        let nodes: Vec<Json> = des
+            .nodes
+            .iter()
+            .map(|n| {
+                Json::obj(vec![
+                    ("name", n.name.as_str().into()),
+                    ("kind", n.kind.as_str().into()),
+                    ("utilization", n.utilization.into()),
+                    ("mean_depth", n.mean_depth.into()),
+                    ("p99_depth", (n.p99_depth as usize).into()),
+                    ("mean_sojourn_s", n.mean_sojourn_s.into()),
+                    ("p99_sojourn_s", n.p99_sojourn_s.into()),
+                ])
+            })
+            .collect();
+        fields.push((
+            "des",
+            Json::obj(vec![
+                ("scenario", des.scenario.as_str().into()),
+                ("seed", (des.seed as usize).into()),
+                ("jobs_released", (des.jobs_released as usize).into()),
+                ("jobs_completed", (des.jobs_completed as usize).into()),
+                ("makespan_s", des.makespan_s.into()),
+                ("p50_job_latency_s", des.p50_job_latency_s.into()),
+                ("p99_job_latency_s", des.p99_job_latency_s.into()),
+                ("throughput_jobs_per_s", des.throughput_jobs_per_s.into()),
+                ("events", (des.events as usize).into()),
+                ("nodes", Json::Arr(nodes)),
+            ]),
+        ));
+    }
+    Json::obj(fields)
 }
 
-/// Render the DSE decision table (strategy × metrics).
+/// Render the DSE decision table (strategy × metrics). When the des-score
+/// objective ran, two extra columns show the simulated scenario makespan
+/// and p99 job latency.
 pub fn render_dse_table(rep: &DseReport) -> String {
+    let has_des = rep.candidates.iter().any(|c| c.des_makespan_s.is_some());
     let mut out = String::new();
     out.push_str(&format!(
-        "{:<16} {:>12} {:>12} {:>8} {:>8} {:>6} {:>5}\n",
+        "{:<16} {:>12} {:>12} {:>8} {:>8} {:>6} {:>5}",
         "strategy", "makespan", "GB/s", "bw-eff", "util", "CUs", "fits"
     ));
+    if has_des {
+        out.push_str(&format!(" {:>14} {:>14}", "des-makespan", "des-p99"));
+    }
+    out.push('\n');
     for c in &rep.candidates {
         out.push_str(&format!(
-            "{:<16} {:>10.3}us {:>12.2} {:>7.1}% {:>7.1}% {:>6} {:>5}\n",
+            "{:<16} {:>10.3}us {:>12.2} {:>7.1}% {:>7.1}% {:>6} {:>5}",
             c.strategy,
             c.makespan_s * 1e6,
             c.achieved_gbs,
@@ -87,6 +127,15 @@ pub fn render_dse_table(rep: &DseReport) -> String {
             c.compute_units,
             if c.fits { "yes" } else { "NO" }
         ));
+        if has_des {
+            match (c.des_makespan_s, c.des_p99_latency_s) {
+                (Some(mk), Some(p99)) => {
+                    out.push_str(&format!(" {:>12.3}us {:>12.3}us", mk * 1e6, p99 * 1e6));
+                }
+                _ => out.push_str(&format!(" {:>14} {:>14}", "-", "-")),
+            }
+        }
+        out.push('\n');
     }
     out.push_str(&format!("best: {}\n", rep.best_strategy));
     out
@@ -106,6 +155,26 @@ mod tests {
         assert!(t.contains("baseline"));
         assert!(t.contains("best: "));
         assert!(t.lines().count() >= rep.candidates.len() + 2);
+        // analytic mode: no DES columns
+        assert!(!t.contains("des-makespan"));
+    }
+
+    #[test]
+    fn table_grows_des_columns_under_des_score() {
+        use crate::des::{DesConfig, WorkloadScenario};
+        use crate::passes::{run_dse_with, DseObjective, DseOptions};
+        let opts = DseOptions {
+            factors: vec![2],
+            objective: DseObjective::des_score_with(
+                WorkloadScenario::closed_loop(2),
+                DesConfig::default(),
+            ),
+            threads: 1,
+        };
+        let rep = run_dse_with(&fig4a_module(), &builtin("u280").unwrap(), &opts).unwrap();
+        let t = render_dse_table(&rep);
+        assert!(t.contains("des-makespan"));
+        assert!(t.contains("des-p99"));
     }
 }
 
@@ -133,5 +202,21 @@ mod json_tests {
             parsed.get("architecture").get("cus").as_arr().unwrap().len(),
             r.arch.cus.len()
         );
+    }
+
+    #[test]
+    fn flow_report_includes_des_section_when_scenario_set() {
+        use crate::coordinator::Flow;
+        use crate::des::WorkloadScenario;
+        let r = Flow::new(builtin("u280").unwrap())
+            .with_pipeline("sanitize, channel-reassign")
+            .with_scenario(WorkloadScenario::closed_loop(2))
+            .run(fig4a_module(), "app")
+            .unwrap();
+        let j = flow_report_json(&r);
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(parsed.get("des").get("jobs_completed").as_usize(), Some(2));
+        assert!(parsed.get("des").get("nodes").as_arr().unwrap().len() >= 7);
+        assert!(parsed.get("des").get("makespan_s").as_f64().unwrap() > 0.0);
     }
 }

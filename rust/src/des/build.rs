@@ -1,0 +1,309 @@
+//! Lowered [`Architecture`] -> queueing-network description.
+//!
+//! Mapping (ISSUE: "model the lowered Architecture as a queueing network"):
+//!
+//! * each **CU** is a dedicated server — steady-state service rate II
+//!   cycles/elem at the (congestion-derated) kernel clock, one pipeline
+//!   fill charge per admitted job;
+//! * each **data mover** is a server on a *shared-rate* resource: all
+//!   movers concurrently transferring on one HBM pseudo-channel split its
+//!   beat rate fairly (and the channel derates to `sustained_frac` of peak
+//!   the moment it is shared — the arXiv 2010.08916 effect);
+//! * each **stream FIFO** is a finite queue: a full FIFO backpressures its
+//!   producer (mover stalls, CU cannot fire);
+//! * **PLM/AXI endpoints** carry scalars/config: their beats count against
+//!   the memory channel, but they do not flow-control kernels.
+
+use anyhow::{bail, Result};
+
+use crate::lower::{Architecture, Endpoint, MoverDir, MoverInst};
+use crate::platform::PlatformSpec;
+
+/// One logical array a mover carries (dedup'd Iris split fields).
+#[derive(Debug, Clone)]
+pub struct FlowSpec {
+    /// Logical array name (host-buffer binding).
+    pub base: String,
+    /// Target/source FIFO; `None` = PLM or AXI endpoint (no flow control).
+    pub fifo: Option<usize>,
+    /// Elements of this array per app iteration.
+    pub elems_per_job: u64,
+    /// Memory-channel beats consumed per element (fractional when several
+    /// arrays share a packed word).
+    pub beats_per_elem: f64,
+}
+
+/// A data mover (or AXI port stand-in) on a shared memory channel.
+#[derive(Debug, Clone)]
+pub struct MoverSpec {
+    pub name: String,
+    pub pc: usize,
+    pub read: bool,
+    pub flows: Vec<FlowSpec>,
+}
+
+impl MoverSpec {
+    /// Per-job elements that traverse FIFOs (job-completion accounting).
+    pub fn fifo_elems_per_job(&self) -> u64 {
+        self.flows.iter().filter(|f| f.fifo.is_some()).map(|f| f.elems_per_job).sum()
+    }
+}
+
+/// A finite stream queue.
+#[derive(Debug, Clone)]
+pub struct FifoSpec {
+    pub name: String,
+    pub cap_elems: u64,
+}
+
+/// A kernel compute-unit server.
+#[derive(Debug, Clone)]
+pub struct CuSpec {
+    pub name: String,
+    pub in_fifos: Vec<usize>,
+    pub out_fifos: Vec<usize>,
+    pub ii: u64,
+    pub latency: u64,
+    /// For CUs with no stream inputs (all-PLM params): how many output
+    /// elements one job produces.
+    pub out_elems_per_job: u64,
+}
+
+impl CuSpec {
+    pub fn source_like(&self) -> bool {
+        self.in_fifos.is_empty()
+    }
+}
+
+/// The whole network.
+#[derive(Debug, Clone)]
+pub struct DesNet {
+    pub platform: PlatformSpec,
+    pub fifos: Vec<FifoSpec>,
+    pub movers: Vec<MoverSpec>,
+    pub cus: Vec<CuSpec>,
+    /// Per-FIFO elems one job pushes through it (hint; cap when unknown).
+    pub fifo_job_elems: Vec<u64>,
+}
+
+/// f32 elements per physical word of `width_bits`.
+fn elems_per_word(width_bits: u32) -> u64 {
+    (width_bits as u64 / 32).max(1)
+}
+
+fn mover_flows(arch: &Architecture, mv: &MoverInst) -> Vec<FlowSpec> {
+    let spec = &arch.platform.pcs[mv.pc_id as usize];
+    let beats_per_word = (mv.layout.word_bits as u64).div_ceil(spec.width_bits as u64).max(1);
+    // total elems per word across all fields (Iris packs several arrays)
+    let mut total_elems_per_job = 0u64;
+    let mut per_base: Vec<(String, Option<usize>, u64)> = Vec::new();
+    for (field, ep) in &mv.routes {
+        let base = field.split('.').next().unwrap_or(field).to_string();
+        // count of this field's elems per word
+        let count: u64 = mv
+            .layout
+            .fields
+            .iter()
+            .filter(|f| f.array == *field)
+            .map(|f| f.count as u64)
+            .sum::<u64>()
+            .max(1);
+        let elems = count * mv.layout.depth;
+        total_elems_per_job += elems;
+        let fifo = match ep {
+            Endpoint::Fifo(i) => Some(*i),
+            _ => None,
+        };
+        if let Some(e) = per_base.iter_mut().find(|(b, _, _)| *b == base) {
+            e.2 += elems; // split fields (`b.0`, `b.1`) accumulate into the base
+        } else {
+            per_base.push((base, fifo, elems));
+        }
+    }
+    let total_beats = (mv.layout.depth * beats_per_word) as f64;
+    let beats_per_elem =
+        if total_elems_per_job == 0 { 1.0 } else { total_beats / total_elems_per_job as f64 };
+    per_base
+        .into_iter()
+        .map(|(base, fifo, elems)| FlowSpec {
+            base,
+            fifo,
+            elems_per_job: elems.max(1),
+            beats_per_elem,
+        })
+        .collect()
+}
+
+/// Build the queueing network for `arch`.
+pub fn build_network(arch: &Architecture) -> Result<DesNet> {
+    let mut fifos = Vec::with_capacity(arch.fifos.len());
+    for f in &arch.fifos {
+        fifos.push(FifoSpec {
+            name: f.name.clone(),
+            cap_elems: (f.depth_words * elems_per_word(f.width_bits)).max(1),
+        });
+    }
+
+    let mut movers = Vec::new();
+    for mv in &arch.movers {
+        if mv.pc_id as usize >= arch.platform.pcs.len() {
+            bail!("mover '{}': pc {} out of range", mv.name, mv.pc_id);
+        }
+        movers.push(MoverSpec {
+            name: mv.name.clone(),
+            pc: mv.pc_id as usize,
+            read: mv.dir == MoverDir::Read,
+            flows: mover_flows(arch, mv),
+        });
+    }
+    // complex channels: AXI masters contend for the channel like movers do
+    for ax in &arch.axi_ports {
+        let pc = ax.pc_id as usize;
+        if pc >= arch.platform.pcs.len() {
+            bail!("axi port '{}': pc {} out of range", ax.name, ax.pc_id);
+        }
+        let width = arch.platform.pcs[pc].width_bits;
+        movers.push(MoverSpec {
+            name: format!("axi_{}", ax.name),
+            pc,
+            read: true,
+            flows: vec![FlowSpec {
+                base: ax.name.clone(),
+                fifo: None,
+                elems_per_job: (ax.bytes / 4).max(1),
+                beats_per_elem: 32.0 / width as f64,
+            }],
+        });
+    }
+
+    // A FIFO gets exactly one read-side and one write-side mover: when a
+    // channel is bound to several PCs (hand-written IR can do that), the
+    // extra movers keep their beat accounting but stop carrying elements,
+    // so the element flow stays conserved.
+    let mut read_owner: Vec<bool> = vec![false; fifos.len()];
+    let mut write_owner: Vec<bool> = vec![false; fifos.len()];
+    for mv in movers.iter_mut() {
+        let owner = if mv.read { &mut read_owner } else { &mut write_owner };
+        for fl in mv.flows.iter_mut() {
+            if let Some(fi) = fl.fifo {
+                if owner[fi] {
+                    fl.fifo = None;
+                } else {
+                    owner[fi] = true;
+                }
+            }
+        }
+    }
+
+    // per-FIFO job payload: prefer the mover flow that touches it
+    let mut fifo_job_elems: Vec<u64> = fifos.iter().map(|f| f.cap_elems).collect();
+    for mv in &movers {
+        for fl in &mv.flows {
+            if let Some(fi) = fl.fifo {
+                fifo_job_elems[fi] = fl.elems_per_job;
+            }
+        }
+    }
+
+    let mut cus = Vec::with_capacity(arch.cus.len());
+    for cu in &arch.cus {
+        let pick = |eps: &[Endpoint]| -> Vec<usize> {
+            eps.iter()
+                .filter_map(|e| match e {
+                    Endpoint::Fifo(i) => Some(*i),
+                    _ => None,
+                })
+                .collect()
+        };
+        let in_fifos = pick(&cu.inputs);
+        let out_fifos = pick(&cu.outputs);
+        let out_elems_per_job =
+            out_fifos.first().map(|&f| fifo_job_elems[f]).unwrap_or(1).max(1);
+        cus.push(CuSpec {
+            name: cu.name.clone(),
+            in_fifos,
+            out_fifos,
+            ii: cu.ii.max(1),
+            latency: cu.latency,
+            out_elems_per_job,
+        });
+    }
+
+    Ok(DesNet {
+        platform: arch.platform.clone(),
+        fifos,
+        movers,
+        cus,
+        fifo_job_elems,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dialect::build::fig4a_module;
+    use crate::lower::build_architecture;
+    use crate::passes::manager::{parse_pipeline, PassContext};
+    use crate::platform::builtin;
+
+    fn net_for(pipeline: &str) -> DesNet {
+        let mut m = fig4a_module();
+        let plat = builtin("u280").unwrap();
+        let mut ctx = PassContext::new(plat.clone());
+        parse_pipeline(pipeline, &mut ctx).unwrap().run(&mut m, &ctx).unwrap();
+        let arch = build_architecture(&m, &plat).unwrap();
+        build_network(&arch).unwrap()
+    }
+
+    #[test]
+    fn baseline_vecadd_network_shape() {
+        let net = net_for("sanitize");
+        assert_eq!(net.fifos.len(), 3);
+        assert_eq!(net.movers.len(), 3);
+        assert_eq!(net.cus.len(), 1);
+        assert_eq!(net.cus[0].in_fifos.len(), 2);
+        assert_eq!(net.cus[0].out_fifos.len(), 1);
+        assert!(!net.cus[0].source_like());
+        // naive scalar words: 1 beat per elem, 1024 elems per job
+        for mv in &net.movers {
+            assert_eq!(mv.flows.len(), 1);
+            assert_eq!(mv.flows[0].elems_per_job, 1024);
+            assert!((mv.flows[0].beats_per_elem - 1.0).abs() < 1e-12);
+        }
+        let reads = net.movers.iter().filter(|m| m.read).count();
+        assert_eq!(reads, 2);
+    }
+
+    #[test]
+    fn iris_bus_splits_beats_across_arrays() {
+        let net = net_for("sanitize, iris, channel-reassign");
+        // one read bus carrying ch0+ch1, one write bus
+        assert_eq!(net.movers.len(), 2);
+        let read = net.movers.iter().find(|m| m.read).unwrap();
+        assert_eq!(read.flows.len(), 2);
+        let total_elems: u64 = read.flows.iter().map(|f| f.elems_per_job).sum();
+        assert_eq!(total_elems, 2048);
+        // 8 x 32-bit slots per 256-bit word: 1/8 beat per elem
+        for f in &read.flows {
+            assert!((f.beats_per_elem - 0.125).abs() < 1e-9, "{f:?}");
+            assert!(f.fifo.is_some());
+        }
+        assert_eq!(read.fifo_elems_per_job(), 2048);
+    }
+
+    #[test]
+    fn replication_multiplies_network_nodes() {
+        let net = net_for("sanitize, replicate{factor=2}, channel-reassign");
+        assert_eq!(net.cus.len(), 2);
+        assert_eq!(net.fifos.len(), 6);
+        assert_eq!(net.movers.len(), 6);
+    }
+
+    #[test]
+    fn fifo_capacity_accounts_for_word_packing() {
+        let net = net_for("sanitize");
+        for f in &net.fifos {
+            assert_eq!(f.cap_elems, 1024);
+        }
+    }
+}

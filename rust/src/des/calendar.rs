@@ -1,0 +1,162 @@
+//! The event calendar: a binary-heap priority queue over integer time.
+//!
+//! Determinism contract: events at equal timestamps pop in *insertion
+//! order* (a monotone sequence number breaks ties), so a simulation is a
+//! pure function of its inputs — no HashMap iteration order, no wall clock.
+
+use std::collections::BinaryHeap;
+
+use super::time::TimePoint;
+
+struct Entry<E> {
+    time: TimePoint,
+    seq: u64,
+    ev: E,
+}
+
+impl<E> PartialEq for Entry<E> {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+
+impl<E> Eq for Entry<E> {}
+
+impl<E> PartialOrd for Entry<E> {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl<E> Ord for Entry<E> {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // reversed: BinaryHeap is a max-heap, we want earliest-first
+        (other.time, other.seq).cmp(&(self.time, self.seq))
+    }
+}
+
+/// Min-heap event calendar with a monotone clock.
+pub struct EventCalendar<E> {
+    heap: BinaryHeap<Entry<E>>,
+    seq: u64,
+    now: TimePoint,
+    scheduled: u64,
+    dispatched: u64,
+}
+
+impl<E> Default for EventCalendar<E> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<E> EventCalendar<E> {
+    pub fn new() -> Self {
+        EventCalendar {
+            heap: BinaryHeap::new(),
+            seq: 0,
+            now: TimePoint::ZERO,
+            scheduled: 0,
+            dispatched: 0,
+        }
+    }
+
+    /// Current simulated time (the timestamp of the last popped event).
+    pub fn now(&self) -> TimePoint {
+        self.now
+    }
+
+    /// Schedule `ev` at absolute time `at`. Scheduling in the past is
+    /// clamped to `now` (the event fires immediately, after already-queued
+    /// same-time events).
+    pub fn push(&mut self, at: TimePoint, ev: E) {
+        let time = at.max(self.now);
+        self.heap.push(Entry { time, seq: self.seq, ev });
+        self.seq += 1;
+        self.scheduled += 1;
+    }
+
+    /// Pop the earliest event and advance the clock to it.
+    pub fn pop(&mut self) -> Option<(TimePoint, E)> {
+        let e = self.heap.pop()?;
+        debug_assert!(e.time >= self.now, "calendar time went backwards");
+        self.now = e.time;
+        self.dispatched += 1;
+        Some((e.time, e.ev))
+    }
+
+    pub fn peek_time(&self) -> Option<TimePoint> {
+        self.heap.peek().map(|e| e.time)
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Total events ever scheduled (for the events/sec bench + report).
+    pub fn scheduled(&self) -> u64 {
+        self.scheduled
+    }
+
+    /// Total events dispatched via [`pop`](Self::pop).
+    pub fn dispatched(&self) -> u64 {
+        self.dispatched
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::des::time::TimeSpan;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut c = EventCalendar::new();
+        c.push(TimePoint::from_ps(30), "c");
+        c.push(TimePoint::from_ps(10), "a");
+        c.push(TimePoint::from_ps(20), "b");
+        let order: Vec<&str> = std::iter::from_fn(|| c.pop().map(|(_, e)| e)).collect();
+        assert_eq!(order, vec!["a", "b", "c"]);
+    }
+
+    #[test]
+    fn equal_times_pop_in_insertion_order() {
+        let mut c = EventCalendar::new();
+        for i in 0..100 {
+            c.push(TimePoint::from_ps(5), i);
+        }
+        let order: Vec<i32> = std::iter::from_fn(|| c.pop().map(|(_, e)| e)).collect();
+        assert_eq!(order, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn clock_is_monotone_and_past_pushes_clamp() {
+        let mut c = EventCalendar::new();
+        c.push(TimePoint::from_ps(100), "later");
+        assert_eq!(c.pop().unwrap().0.ps(), 100);
+        assert_eq!(c.now().ps(), 100);
+        // schedule "in the past": fires at now, not before
+        c.push(TimePoint::from_ps(10), "past");
+        let (t, e) = c.pop().unwrap();
+        assert_eq!(t.ps(), 100);
+        assert_eq!(e, "past");
+        assert_eq!(c.now() + TimeSpan::ZERO, t);
+    }
+
+    #[test]
+    fn counters_track_throughput() {
+        let mut c = EventCalendar::new();
+        for i in 0..10u64 {
+            c.push(TimePoint::from_ps(i), i);
+        }
+        assert_eq!(c.scheduled(), 10);
+        while c.pop().is_some() {}
+        assert_eq!(c.dispatched(), 10);
+        assert!(c.is_empty());
+        assert_eq!(c.len(), 0);
+    }
+}

@@ -1,0 +1,255 @@
+//! DES output metrics + the time-weighted accumulators that produce them.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+use super::time::TimePoint;
+
+/// What kind of queueing-network node a metric row describes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NodeKind {
+    /// Kernel compute unit (dedicated server).
+    Cu,
+    /// Stream FIFO (finite queue).
+    Fifo,
+    /// Data mover (server on a shared-rate memory channel).
+    Mover,
+}
+
+impl NodeKind {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            NodeKind::Cu => "cu",
+            NodeKind::Fifo => "fifo",
+            NodeKind::Mover => "mover",
+        }
+    }
+}
+
+/// Per-node steady-state metrics.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NodeMetrics {
+    pub name: String,
+    pub kind: NodeKind,
+    /// Busy fraction (servers) / non-empty fraction (queues).
+    pub utilization: f64,
+    /// Time-weighted mean queue depth (elems for FIFOs, 0/1 for servers).
+    pub mean_depth: f64,
+    /// Time-weighted p99 queue depth.
+    pub p99_depth: u64,
+    pub max_depth: u64,
+    /// Mean sojourn (wait + service) through the node, seconds.
+    pub mean_sojourn_s: f64,
+    pub p99_sojourn_s: f64,
+    /// Chunks served (movers/FIFOs) or firings (CUs).
+    pub completions: u64,
+}
+
+/// Whole-run DES report. Everything here is a pure function of
+/// (architecture, scenario, config) — the deterministic-replay tests
+/// compare entire reports with `==`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DesReport {
+    pub scenario: String,
+    pub seed: u64,
+    pub nodes: Vec<NodeMetrics>,
+    pub jobs_released: u64,
+    pub jobs_completed: u64,
+    /// Completion time of the last job (s).
+    pub makespan_s: f64,
+    pub mean_job_latency_s: f64,
+    pub p50_job_latency_s: f64,
+    pub p99_job_latency_s: f64,
+    pub max_job_latency_s: f64,
+    /// Completed jobs per simulated second.
+    pub throughput_jobs_per_s: f64,
+    /// Events dispatched by the calendar.
+    pub events: u64,
+}
+
+impl DesReport {
+    /// Convenience: the worst p99 FIFO occupancy across the design (the
+    /// backpressure hot-spot).
+    pub fn worst_fifo_p99_depth(&self) -> u64 {
+        self.nodes
+            .iter()
+            .filter(|n| n.kind == NodeKind::Fifo)
+            .map(|n| n.p99_depth)
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Convenience: highest server utilization (the bottleneck node).
+    pub fn bottleneck(&self) -> Option<&NodeMetrics> {
+        self.nodes
+            .iter()
+            .filter(|n| n.kind != NodeKind::Fifo)
+            .max_by(|a, b| a.utilization.partial_cmp(&b.utilization).unwrap())
+    }
+}
+
+impl fmt::Display for DesReport {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "== des report: {} (seed {}) ==", self.scenario, self.seed)?;
+        writeln!(
+            f,
+            "jobs {}/{} completed, makespan {:.3} ms, throughput {:.1} jobs/s",
+            self.jobs_completed,
+            self.jobs_released,
+            self.makespan_s * 1e3,
+            self.throughput_jobs_per_s
+        )?;
+        writeln!(
+            f,
+            "job latency mean {:.3} ms  p50 {:.3} ms  p99 {:.3} ms  max {:.3} ms",
+            self.mean_job_latency_s * 1e3,
+            self.p50_job_latency_s * 1e3,
+            self.p99_job_latency_s * 1e3,
+            self.max_job_latency_s * 1e3
+        )?;
+        writeln!(f, "{} calendar events", self.events)?;
+        writeln!(
+            f,
+            "{:<30} {:>6} {:>7} {:>10} {:>9} {:>11} {:>11} {:>9}",
+            "node", "kind", "util", "mean-depth", "p99-depth", "mean-soj", "p99-soj", "chunks"
+        )?;
+        for n in &self.nodes {
+            writeln!(
+                f,
+                "{:<30} {:>6} {:>6.1}% {:>10.2} {:>9} {:>9.2}us {:>9.2}us {:>9}",
+                n.name,
+                n.kind.as_str(),
+                n.utilization * 100.0,
+                n.mean_depth,
+                n.p99_depth,
+                n.mean_sojourn_s * 1e6,
+                n.p99_sojourn_s * 1e6,
+                n.completions
+            )?;
+        }
+        Ok(())
+    }
+}
+
+// ---- accumulators ---------------------------------------------------------
+
+/// Time-weighted depth histogram: how long the node sat at each depth.
+#[derive(Debug, Clone, Default)]
+pub(crate) struct DepthTrack {
+    cur: u64,
+    max: u64,
+    last: TimePoint,
+    /// depth -> accumulated ps at that depth.
+    hist: BTreeMap<u64, u64>,
+}
+
+impl DepthTrack {
+    /// Record a depth change at `now`.
+    pub fn set(&mut self, now: TimePoint, depth: u64) {
+        let dt = (now - self.last).ps();
+        if dt > 0 {
+            *self.hist.entry(self.cur).or_insert(0) += dt;
+        }
+        self.last = now;
+        self.cur = depth;
+        self.max = self.max.max(depth);
+    }
+
+    pub fn add(&mut self, now: TimePoint, delta: i64) {
+        let d = if delta >= 0 {
+            self.cur.saturating_add(delta as u64)
+        } else {
+            self.cur.saturating_sub((-delta) as u64)
+        };
+        self.set(now, d);
+    }
+
+    pub fn depth(&self) -> u64 {
+        self.cur
+    }
+
+    /// Close the histogram at `end` and summarize.
+    pub fn finish(mut self, end: TimePoint) -> (f64, u64, u64, f64) {
+        self.set(end, self.cur);
+        let total: u64 = self.hist.values().sum();
+        if total == 0 {
+            return (0.0, 0, self.max, 0.0);
+        }
+        let mean = self
+            .hist
+            .iter()
+            .map(|(d, t)| *d as f64 * *t as f64)
+            .sum::<f64>()
+            / total as f64;
+        let p99_target = (total as f64 * 0.99).ceil() as u64;
+        let mut cum = 0u64;
+        let mut p99 = self.max;
+        for (d, t) in &self.hist {
+            cum += t;
+            if cum >= p99_target {
+                p99 = *d;
+                break;
+            }
+        }
+        let busy_ps = total - self.hist.get(&0).copied().unwrap_or(0);
+        let utilization = busy_ps as f64 / total as f64;
+        (mean, p99, self.max, utilization)
+    }
+}
+
+/// Percentile of an unsorted sample set (nearest-rank).
+pub(crate) fn percentile(samples: &mut [f64], p: f64) -> f64 {
+    if samples.is_empty() {
+        return 0.0;
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let idx = ((samples.len() as f64 * p).ceil() as usize).clamp(1, samples.len()) - 1;
+    samples[idx]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn depth_track_time_weighted_mean() {
+        let mut t = DepthTrack::default();
+        // depth 0 for 10ps, 4 for 30ps, 2 for 60ps
+        t.set(TimePoint::from_ps(10), 4);
+        t.set(TimePoint::from_ps(40), 2);
+        let (mean, p99, max, util) = t.finish(TimePoint::from_ps(100));
+        let want = (0.0 * 10.0 + 4.0 * 30.0 + 2.0 * 60.0) / 100.0;
+        assert!((mean - want).abs() < 1e-12, "mean {mean} want {want}");
+        assert_eq!(max, 4);
+        assert_eq!(p99, 4);
+        assert!((util - 0.9).abs() < 1e-12);
+    }
+
+    #[test]
+    fn depth_track_p99_picks_tail_depth() {
+        let mut t = DepthTrack::default();
+        // 99.5% of time at depth 1, 0.5% at depth 100
+        t.set(TimePoint::from_ps(0), 1);
+        t.set(TimePoint::from_ps(995), 100);
+        let (_, p99, max, _) = t.finish(TimePoint::from_ps(1000));
+        assert_eq!(max, 100);
+        assert_eq!(p99, 1, "p99 excludes the 0.5% tail");
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let mut xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&mut xs, 0.5), 50.0);
+        assert_eq!(percentile(&mut xs, 0.99), 99.0);
+        assert_eq!(percentile(&mut xs, 1.0), 100.0);
+        assert_eq!(percentile(&mut [], 0.5), 0.0);
+    }
+
+    #[test]
+    fn add_clamps_at_zero() {
+        let mut t = DepthTrack::default();
+        t.add(TimePoint::from_ps(5), 2);
+        t.add(TimePoint::from_ps(10), -5);
+        assert_eq!(t.depth(), 0);
+    }
+}

@@ -1,0 +1,705 @@
+//! The discrete-event engine: jobs flow through the queueing network built
+//! by [`super::build`], driven by a binary-heap event calendar.
+//!
+//! Event types:
+//! * `Arrival` — a job (one app iteration) enters: read movers enqueue
+//!   their chunk streams, source-like CUs gain work.
+//! * `PcWake` — a shared-rate memory channel re-evaluates its in-flight
+//!   transfers (the processor-sharing completion scan). Stale wakes are
+//!   filtered by an epoch counter, the standard event-invalidation trick.
+//! * `CuDone` — a compute unit finishes one chunk service.
+//!
+//! Progress guarantees (no simulated deadlock on the feed-forward DFGs the
+//! passes produce): chunk sizes are clamped to FIFO capacity, a CU fires
+//! with any partial chunk as long as every input has data and every output
+//! has space, and write movers drain any non-empty FIFO.
+
+use anyhow::{bail, Result};
+use std::collections::VecDeque;
+
+use crate::lower::Architecture;
+use crate::sim::TimingModel;
+use crate::util::Rng;
+
+use super::build::{build_network, DesNet};
+use super::calendar::EventCalendar;
+use super::metrics::{percentile, DepthTrack, DesReport, NodeKind, NodeMetrics};
+use super::scenario::WorkloadScenario;
+use super::time::{TimePoint, TimeSpan, PS_PER_S};
+
+/// Engine knobs (separate from the workload scenario).
+#[derive(Debug, Clone)]
+pub struct DesConfig {
+    /// RNG seed for the arrival process.
+    pub seed: u64,
+    /// Transfer/service granularity in elements. Smaller = finer-grained
+    /// contention modeling, more events.
+    pub burst_elems: u64,
+    /// Fabric utilization (from `analyze_resources`) for the congestion
+    /// clock derate.
+    pub utilization: f64,
+    /// Apply the routing-congestion derate to the kernel clock.
+    pub congestion_model: bool,
+    /// Hard cap on dispatched events (runaway guard).
+    pub max_events: u64,
+}
+
+impl Default for DesConfig {
+    fn default() -> Self {
+        DesConfig {
+            seed: 42,
+            burst_elems: 64,
+            utilization: 0.0,
+            congestion_model: true,
+            max_events: 20_000_000,
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+enum Ev {
+    Arrival { job: u64 },
+    PcWake { pc: usize, epoch: u64 },
+    CuDone { cu: usize, epoch: u64 },
+}
+
+/// Who to poke when a FIFO changes state.
+#[derive(Debug, Clone, Copy)]
+enum Node {
+    Mover(usize),
+    Cu(usize),
+}
+
+/// Below this many beats a transfer counts as finished (float PS math).
+const BEAT_EPS: f64 = 1e-6;
+
+#[derive(Debug, Clone, Copy)]
+struct Chunk {
+    flow: usize,
+    elems: u64,
+}
+
+#[derive(Default)]
+struct MoverRt {
+    /// Chunks waiting to start (read movers + flow-control-free flows).
+    queue: VecDeque<Chunk>,
+    active: Option<Chunk>,
+    remaining_beats: f64,
+    started: TimePoint,
+    busy: DepthTrack,
+    sojourns: Vec<f64>,
+    /// Write side: FIFO-fed elements delivered to memory (job completion).
+    delivered: u64,
+    chunks_done: u64,
+    /// Write side: round-robin start flow for the next pull.
+    rr: usize,
+}
+
+#[derive(Default)]
+struct FifoRt {
+    occ: u64,
+    reserved: u64,
+    /// (enqueue time, elems remaining of that batch) for sojourn samples.
+    enq: VecDeque<(TimePoint, u64)>,
+    depth: DepthTrack,
+    sojourns: Vec<f64>,
+    chunks_out: u64,
+    producers: Vec<Node>,
+    consumers: Vec<Node>,
+}
+
+#[derive(Default)]
+struct CuRt {
+    busy: bool,
+    epoch: u64,
+    /// Pipeline fill (`latency` cycles) is charged once per admitted job,
+    /// amortized: each firing with `fills_charged < released` charges one
+    /// fill, so the total fill cost equals the jobs admitted.
+    fills_charged: u64,
+    cur_n: u64,
+    started: TimePoint,
+    /// Source-like CUs: backlog of output elements to produce.
+    pending_src: u64,
+    busy_track: DepthTrack,
+    sojourns: Vec<f64>,
+    firings: u64,
+}
+
+struct PcRt {
+    active: Vec<usize>,
+    last: TimePoint,
+    epoch: u64,
+}
+
+struct Engine<'a> {
+    net: &'a DesNet,
+    cfg: &'a DesConfig,
+    cal: EventCalendar<Ev>,
+    movers: Vec<MoverRt>,
+    fifos: Vec<FifoRt>,
+    cus: Vec<CuRt>,
+    pcs: Vec<PcRt>,
+    /// Per-CU steady-state service cost, ps per element.
+    service_ps_per_elem: Vec<f64>,
+    /// Per-CU pipeline-fill charge, ps.
+    fill_ps: Vec<f64>,
+    arrivals: Vec<TimePoint>,
+    released: u64,
+    completed: u64,
+    job_latency: Vec<f64>,
+    last_completion: Option<TimePoint>,
+    /// (mover idx, fifo-fed elems per job) for write movers.
+    write_quota: Vec<(usize, u64)>,
+}
+
+/// Simulate `arch` under `scenario`. The report is a pure function of the
+/// arguments — identical seeds give identical reports.
+pub fn simulate(
+    arch: &Architecture,
+    scenario: &WorkloadScenario,
+    cfg: &DesConfig,
+) -> Result<DesReport> {
+    let net = build_network(arch)?;
+    simulate_network(&net, scenario, cfg)
+}
+
+/// Simulate a pre-built network (lets DSE reuse one build).
+pub fn simulate_network(
+    net: &DesNet,
+    scenario: &WorkloadScenario,
+    cfg: &DesConfig,
+) -> Result<DesReport> {
+    let mut rng = Rng::new(cfg.seed);
+    let arrivals = scenario.arrival_times(&mut rng);
+
+    let timing = TimingModel::new(&net.platform, cfg.utilization, cfg.congestion_model);
+    let service_ps_per_elem: Vec<f64> =
+        net.cus.iter().map(|c| timing.cu_service_s(c.ii, 1) * PS_PER_S).collect();
+    let fill_ps: Vec<f64> =
+        net.cus.iter().map(|c| timing.cu_fill_s(c.latency) * PS_PER_S).collect();
+
+    let mut fifos: Vec<FifoRt> = net.fifos.iter().map(|_| FifoRt::default()).collect();
+    // wire wake lists (deterministic: build order)
+    for (mi, mv) in net.movers.iter().enumerate() {
+        for fl in &mv.flows {
+            if let Some(f) = fl.fifo {
+                if mv.read {
+                    fifos[f].producers.push(Node::Mover(mi));
+                } else {
+                    fifos[f].consumers.push(Node::Mover(mi));
+                }
+            }
+        }
+    }
+    for (ci, cu) in net.cus.iter().enumerate() {
+        for &f in &cu.in_fifos {
+            fifos[f].consumers.push(Node::Cu(ci));
+        }
+        for &f in &cu.out_fifos {
+            fifos[f].producers.push(Node::Cu(ci));
+        }
+    }
+
+    let write_quota: Vec<(usize, u64)> = net
+        .movers
+        .iter()
+        .enumerate()
+        .filter(|(_, m)| !m.read)
+        .map(|(i, m)| (i, m.fifo_elems_per_job()))
+        .filter(|(_, q)| *q > 0)
+        .collect();
+
+    let mut eng = Engine {
+        net,
+        cfg,
+        cal: EventCalendar::new(),
+        movers: net.movers.iter().map(|_| MoverRt::default()).collect(),
+        fifos,
+        cus: net.cus.iter().map(|_| CuRt::default()).collect(),
+        pcs: net
+            .platform
+            .pcs
+            .iter()
+            .map(|_| PcRt { active: Vec::new(), last: TimePoint::ZERO, epoch: 0 })
+            .collect(),
+        service_ps_per_elem,
+        fill_ps,
+        arrivals,
+        released: 0,
+        completed: 0,
+        job_latency: Vec::new(),
+        last_completion: None,
+        write_quota,
+    };
+
+    for (j, t) in eng.arrivals.clone().iter().enumerate() {
+        eng.cal.push(*t, Ev::Arrival { job: j as u64 });
+    }
+
+    while let Some((now, ev)) = eng.cal.pop() {
+        if eng.cal.dispatched() > cfg.max_events {
+            bail!(
+                "des: event budget exhausted ({} events) — runaway simulation?",
+                cfg.max_events
+            );
+        }
+        match ev {
+            Ev::Arrival { job } => eng.on_arrival(job, now),
+            Ev::PcWake { pc, epoch } => {
+                if eng.pcs[pc].epoch == epoch {
+                    eng.on_pc_wake(pc, now);
+                }
+            }
+            Ev::CuDone { cu, epoch } => {
+                if eng.cus[cu].epoch == epoch && eng.cus[cu].busy {
+                    eng.on_cu_done(cu, now);
+                }
+            }
+        }
+    }
+
+    Ok(eng.finish(scenario))
+}
+
+impl<'a> Engine<'a> {
+    // ---- job admission ---------------------------------------------------
+
+    fn on_arrival(&mut self, _job: u64, now: TimePoint) {
+        self.released += 1;
+        for mi in 0..self.net.movers.len() {
+            let mv = &self.net.movers[mi];
+            // Chunk the job per flow, then interleave flows round-robin:
+            // an Iris bus word carries all member arrays at once, and
+            // interleaving is also what keeps a small FIFO from head-of-line
+            // blocking the sibling array's data forever.
+            let mut per_flow: Vec<VecDeque<Chunk>> = Vec::with_capacity(mv.flows.len());
+            for (fi, fl) in mv.flows.iter().enumerate() {
+                let mut q = VecDeque::new();
+                // read flows stream in; flow-control-free flows (PLM/AXI)
+                // are fire-and-forget beat accounting on either side
+                if !mv.read && fl.fifo.is_some() {
+                    per_flow.push(q);
+                    continue; // write side pulls from its FIFO instead
+                }
+                let cap = fl.fifo.map(|f| self.net.fifos[f].cap_elems).unwrap_or(u64::MAX);
+                let chunk = self.cfg.burst_elems.clamp(1, cap);
+                let mut left = fl.elems_per_job;
+                while left > 0 {
+                    let n = chunk.min(left);
+                    q.push_back(Chunk { flow: fi, elems: n });
+                    left -= n;
+                }
+                per_flow.push(q);
+            }
+            loop {
+                let mut pushed = false;
+                for q in per_flow.iter_mut() {
+                    if let Some(c) = q.pop_front() {
+                        self.movers[mi].queue.push_back(c);
+                        pushed = true;
+                    }
+                }
+                if !pushed {
+                    break;
+                }
+            }
+            self.try_start_mover(mi, now);
+        }
+        for ci in 0..self.net.cus.len() {
+            if self.net.cus[ci].source_like() {
+                self.cus[ci].pending_src += self.net.cus[ci].out_elems_per_job;
+                self.try_fire_cu(ci, now);
+            }
+        }
+    }
+
+    // ---- movers ----------------------------------------------------------
+
+    fn try_start_mover(&mut self, mi: usize, now: TimePoint) {
+        if self.movers[mi].active.is_some() {
+            return;
+        }
+        let read = self.net.movers[mi].read;
+        // queued chunks first (read streams + flow-control-free transfers)
+        if let Some(&head) = self.movers[mi].queue.front() {
+            let fl = &self.net.movers[mi].flows[head.flow];
+            if read {
+                if let Some(f) = fl.fifo {
+                    let fifo = &self.fifos[f];
+                    if fifo.occ + fifo.reserved + head.elems > self.net.fifos[f].cap_elems {
+                        return; // backpressure: wait for the consumer
+                    }
+                    self.fifos[f].reserved += head.elems;
+                }
+            }
+            let beats = head.elems as f64 * fl.beats_per_elem;
+            self.movers[mi].queue.pop_front();
+            self.begin_transfer(mi, head, beats, now);
+            return;
+        }
+        if read {
+            return;
+        }
+        // write mover: pull a chunk from the next non-empty source FIFO
+        // (rotating start index so multi-flow buses drain fairly)
+        let nflows = self.net.movers[mi].flows.len();
+        for k in 0..nflows {
+            let fi = (self.movers[mi].rr + k) % nflows;
+            // borrows the shared network description only — no engine-state
+            // conflict, no per-pull clone
+            let fl = &self.net.movers[mi].flows[fi];
+            let Some(f) = fl.fifo else { continue };
+            let avail = self.fifos[f].occ;
+            if avail == 0 {
+                continue;
+            }
+            let n = avail.min(self.cfg.burst_elems.max(1));
+            self.dequeue_elems(f, n, now);
+            self.wake_producers(f, now);
+            let beats = n as f64 * fl.beats_per_elem;
+            self.movers[mi].rr = (fi + 1) % nflows;
+            self.begin_transfer(mi, Chunk { flow: fi, elems: n }, beats, now);
+            return;
+        }
+    }
+
+    fn begin_transfer(&mut self, mi: usize, chunk: Chunk, beats: f64, now: TimePoint) {
+        let m = &mut self.movers[mi];
+        m.active = Some(chunk);
+        m.remaining_beats = beats.max(0.0);
+        m.started = now;
+        m.busy.set(now, 1);
+        let pc = self.net.movers[mi].pc;
+        self.pc_advance(pc, now);
+        self.pcs[pc].active.push(mi);
+        self.pc_reschedule(pc, now);
+    }
+
+    fn complete_transfer(&mut self, mi: usize, now: TimePoint) {
+        let chunk = self.movers[mi].active.take().expect("completing idle mover");
+        {
+            let m = &mut self.movers[mi];
+            m.busy.set(now, 0);
+            m.sojourns.push((now - m.started).as_secs_f64());
+            m.chunks_done += 1;
+        }
+        let mv = &self.net.movers[mi];
+        let fl = &mv.flows[chunk.flow];
+        if mv.read {
+            if let Some(f) = fl.fifo {
+                let r = self.fifos[f].reserved;
+                self.fifos[f].reserved = r.saturating_sub(chunk.elems);
+                self.enqueue_elems(f, chunk.elems, now);
+                self.wake_consumers(f, now);
+            }
+        } else if fl.fifo.is_some() {
+            self.movers[mi].delivered += chunk.elems;
+            self.check_job_completions(now);
+        }
+        self.try_start_mover(mi, now);
+    }
+
+    // ---- shared-rate memory channels ------------------------------------
+
+    /// Beats/ps each active transfer on `pc` currently receives.
+    fn pc_share(&self, pc: usize) -> f64 {
+        let n = self.pcs[pc].active.len();
+        if n == 0 {
+            return 0.0;
+        }
+        self.net.platform.pcs[pc].shared_beat_rate(n) / n as f64 / PS_PER_S
+    }
+
+    fn pc_advance(&mut self, pc: usize, now: TimePoint) {
+        let dt = (now - self.pcs[pc].last).ps();
+        self.pcs[pc].last = now;
+        if dt == 0 || self.pcs[pc].active.is_empty() {
+            return;
+        }
+        let share = self.pc_share(pc);
+        for k in 0..self.pcs[pc].active.len() {
+            let mi = self.pcs[pc].active[k];
+            let m = &mut self.movers[mi];
+            m.remaining_beats = (m.remaining_beats - share * dt as f64).max(0.0);
+        }
+    }
+
+    fn pc_reschedule(&mut self, pc: usize, now: TimePoint) {
+        self.pcs[pc].epoch += 1;
+        if self.pcs[pc].active.is_empty() {
+            return;
+        }
+        let share = self.pc_share(pc);
+        let min_rem = self
+            .pcs[pc]
+            .active
+            .iter()
+            .map(|&mi| self.movers[mi].remaining_beats)
+            .fold(f64::INFINITY, f64::min);
+        let dt_ps = if share > 0.0 { (min_rem / share).ceil() } else { 1.0 };
+        let span = TimeSpan::from_ps(dt_ps.clamp(1.0, 1e15) as u64);
+        let epoch = self.pcs[pc].epoch;
+        self.cal.push(now + span, Ev::PcWake { pc, epoch });
+    }
+
+    fn on_pc_wake(&mut self, pc: usize, now: TimePoint) {
+        self.pc_advance(pc, now);
+        let done: Vec<usize> = self
+            .pcs[pc]
+            .active
+            .iter()
+            .copied()
+            .filter(|&mi| self.movers[mi].remaining_beats <= BEAT_EPS)
+            .collect();
+        self.pcs[pc].active.retain(|mi| !done.contains(mi));
+        for mi in done {
+            self.complete_transfer(mi, now);
+        }
+        self.pc_reschedule(pc, now);
+    }
+
+    // ---- FIFOs -----------------------------------------------------------
+
+    fn enqueue_elems(&mut self, f: usize, n: u64, now: TimePoint) {
+        let q = &mut self.fifos[f];
+        q.occ += n;
+        q.enq.push_back((now, n));
+        let d = q.occ;
+        q.depth.set(now, d);
+    }
+
+    fn dequeue_elems(&mut self, f: usize, n: u64, now: TimePoint) {
+        let q = &mut self.fifos[f];
+        debug_assert!(q.occ >= n, "fifo underflow");
+        q.occ -= n;
+        let d = q.occ;
+        q.depth.set(now, d);
+        let mut left = n;
+        while left > 0 {
+            let Some(front) = q.enq.front_mut() else { break };
+            let take = front.1.min(left);
+            q.sojourns.push((now - front.0).as_secs_f64());
+            left -= take;
+            if front.1 > take {
+                front.1 -= take;
+            } else {
+                q.enq.pop_front();
+            }
+        }
+        q.chunks_out += 1;
+    }
+
+    fn wake_consumers(&mut self, f: usize, now: TimePoint) {
+        for k in 0..self.fifos[f].consumers.len() {
+            match self.fifos[f].consumers[k] {
+                Node::Cu(ci) => self.try_fire_cu(ci, now),
+                Node::Mover(mi) => self.try_start_mover(mi, now),
+            }
+        }
+    }
+
+    fn wake_producers(&mut self, f: usize, now: TimePoint) {
+        for k in 0..self.fifos[f].producers.len() {
+            match self.fifos[f].producers[k] {
+                Node::Cu(ci) => self.try_fire_cu(ci, now),
+                Node::Mover(mi) => self.try_start_mover(mi, now),
+            }
+        }
+    }
+
+    // ---- compute units ---------------------------------------------------
+
+    fn try_fire_cu(&mut self, ci: usize, now: TimePoint) {
+        if self.cus[ci].busy {
+            return;
+        }
+        let spec = &self.net.cus[ci];
+        let mut n = self.cfg.burst_elems.max(1);
+        if spec.source_like() {
+            n = n.min(self.cus[ci].pending_src);
+        } else {
+            for &f in &spec.in_fifos {
+                n = n.min(self.fifos[f].occ);
+            }
+        }
+        if n == 0 {
+            return;
+        }
+        // clamp to available output space; any progress beats a stall
+        for &f in &spec.out_fifos {
+            let free = self.net.fifos[f].cap_elems
+                - (self.fifos[f].occ + self.fifos[f].reserved).min(self.net.fifos[f].cap_elems);
+            n = n.min(free);
+        }
+        if n == 0 {
+            return; // output backpressure: retried when a consumer drains
+        }
+        // `spec` borrows the (shared) network description, not the engine
+        // state, so no clones are needed in this hot path
+        if spec.source_like() {
+            self.cus[ci].pending_src -= n;
+        } else {
+            for &f in &spec.in_fifos {
+                self.dequeue_elems(f, n, now);
+            }
+        }
+        for &f in &spec.out_fifos {
+            self.fifos[f].reserved += n;
+        }
+        let mut service_ps = n as f64 * self.service_ps_per_elem[ci];
+        if self.cus[ci].fills_charged < self.released {
+            service_ps += self.fill_ps[ci];
+            self.cus[ci].fills_charged += 1;
+        }
+        let cu = &mut self.cus[ci];
+        cu.busy = true;
+        cu.cur_n = n;
+        cu.started = now;
+        cu.busy_track.set(now, 1);
+        cu.epoch += 1;
+        let epoch = cu.epoch;
+        let span = TimeSpan::from_ps((service_ps.ceil() as u64).max(1));
+        self.cal.push(now + span, Ev::CuDone { cu: ci, epoch });
+        // freed input space: upstream movers may now resume
+        for k in 0..self.net.cus[ci].in_fifos.len() {
+            let f = self.net.cus[ci].in_fifos[k];
+            self.wake_producers(f, now);
+        }
+    }
+
+    fn on_cu_done(&mut self, ci: usize, now: TimePoint) {
+        let n = self.cus[ci].cur_n;
+        {
+            let cu = &mut self.cus[ci];
+            cu.busy = false;
+            cu.cur_n = 0;
+            cu.busy_track.set(now, 0);
+            cu.sojourns.push((now - cu.started).as_secs_f64());
+            cu.firings += 1;
+        }
+        for k in 0..self.net.cus[ci].out_fifos.len() {
+            let f = self.net.cus[ci].out_fifos[k];
+            let r = self.fifos[f].reserved;
+            self.fifos[f].reserved = r.saturating_sub(n);
+            self.enqueue_elems(f, n, now);
+            self.wake_consumers(f, now);
+        }
+        self.try_fire_cu(ci, now);
+    }
+
+    // ---- job accounting --------------------------------------------------
+
+    fn check_job_completions(&mut self, now: TimePoint) {
+        if self.write_quota.is_empty() {
+            return;
+        }
+        let done = self
+            .write_quota
+            .iter()
+            .map(|&(mi, quota)| self.movers[mi].delivered / quota)
+            .min()
+            .unwrap_or(0);
+        while self.completed < done.min(self.released) {
+            let job = self.completed as usize;
+            let lat = (now - self.arrivals[job]).as_secs_f64();
+            self.job_latency.push(lat);
+            self.completed += 1;
+            self.last_completion = Some(now);
+        }
+    }
+
+    // ---- report ----------------------------------------------------------
+
+    fn finish(mut self, scenario: &WorkloadScenario) -> DesReport {
+        let end = self.cal.now();
+        // degenerate nets (no FIFO-fed write movers): everything that was
+        // released counts as done when the calendar drains
+        if self.write_quota.is_empty() {
+            self.completed = self.released;
+            self.last_completion = Some(end);
+        }
+        let mut nodes = Vec::new();
+        for (ci, cu) in self.net.cus.iter().enumerate() {
+            let rt = std::mem::take(&mut self.cus[ci]);
+            let (mean, p99, max, util) = rt.busy_track.finish(end);
+            let mut soj = rt.sojourns;
+            let mean_soj =
+                if soj.is_empty() { 0.0 } else { soj.iter().sum::<f64>() / soj.len() as f64 };
+            nodes.push(NodeMetrics {
+                name: cu.name.clone(),
+                kind: NodeKind::Cu,
+                utilization: util,
+                mean_depth: mean,
+                p99_depth: p99,
+                max_depth: max,
+                mean_sojourn_s: mean_soj,
+                p99_sojourn_s: percentile(&mut soj, 0.99),
+                completions: rt.firings,
+            });
+        }
+        for (fi, f) in self.net.fifos.iter().enumerate() {
+            let rt = std::mem::take(&mut self.fifos[fi]);
+            let (mean, p99, max, util) = rt.depth.finish(end);
+            let mut soj = rt.sojourns;
+            let mean_soj =
+                if soj.is_empty() { 0.0 } else { soj.iter().sum::<f64>() / soj.len() as f64 };
+            nodes.push(NodeMetrics {
+                name: f.name.clone(),
+                kind: NodeKind::Fifo,
+                utilization: util,
+                mean_depth: mean,
+                p99_depth: p99,
+                max_depth: max,
+                mean_sojourn_s: mean_soj,
+                p99_sojourn_s: percentile(&mut soj, 0.99),
+                completions: rt.chunks_out,
+            });
+        }
+        for (mi, m) in self.net.movers.iter().enumerate() {
+            let rt = std::mem::take(&mut self.movers[mi]);
+            let (mean, p99, max, util) = rt.busy.finish(end);
+            let mut soj = rt.sojourns;
+            let mean_soj =
+                if soj.is_empty() { 0.0 } else { soj.iter().sum::<f64>() / soj.len() as f64 };
+            nodes.push(NodeMetrics {
+                name: m.name.clone(),
+                kind: NodeKind::Mover,
+                utilization: util,
+                mean_depth: mean,
+                p99_depth: p99,
+                max_depth: max,
+                mean_sojourn_s: mean_soj,
+                p99_sojourn_s: percentile(&mut soj, 0.99),
+                completions: rt.chunks_done,
+            });
+        }
+        let makespan_s = self
+            .last_completion
+            .map(|t| t.as_secs_f64())
+            .unwrap_or_else(|| end.as_secs_f64());
+        let mut lat = self.job_latency;
+        let mean_lat =
+            if lat.is_empty() { 0.0 } else { lat.iter().sum::<f64>() / lat.len() as f64 };
+        let p50 = percentile(&mut lat, 0.50);
+        let p99 = percentile(&mut lat, 0.99);
+        let max_lat = lat.last().copied().unwrap_or(0.0);
+        DesReport {
+            scenario: scenario.name.clone(),
+            seed: self.cfg.seed,
+            nodes,
+            jobs_released: self.released,
+            jobs_completed: self.completed,
+            makespan_s,
+            mean_job_latency_s: mean_lat,
+            p50_job_latency_s: p50,
+            p99_job_latency_s: p99,
+            max_job_latency_s: max_lat,
+            throughput_jobs_per_s: if makespan_s > 0.0 {
+                self.completed as f64 / makespan_s
+            } else {
+                0.0
+            },
+            events: self.cal.dispatched(),
+        }
+    }
+}

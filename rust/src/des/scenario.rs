@@ -1,0 +1,157 @@
+//! Workload scenarios: how app iterations ("jobs") arrive at the device.
+//!
+//! Three arrival processes cover the serving regimes the ROADMAP cares
+//! about: closed-loop batch (throughput benchmarking), open-loop Poisson
+//! (steady online traffic) and bursty on/off (diurnal / flash-crowd
+//! traffic, where p99 latency diverges hard from the mean).
+
+use crate::util::Rng;
+
+use super::time::{TimePoint, TimeSpan};
+
+/// How jobs enter the system.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ArrivalProcess {
+    /// `jobs` iterations all admitted at t=0 (a batch drained back-to-back;
+    /// the makespan is the batch completion time).
+    ClosedLoopBatch { jobs: u64 },
+    /// Open loop: exponential interarrivals at `rate_hz` jobs/second.
+    Poisson { rate_hz: f64, jobs: u64 },
+    /// On/off modulated Poisson: `rate_hz` arrivals during `on_s`-second
+    /// windows, silence for `off_s` seconds between them. Same *offered
+    /// load* as `Poisson` at `rate_hz * on/(on+off)`, very different tails.
+    BurstyOnOff { rate_hz: f64, on_s: f64, off_s: f64, jobs: u64 },
+}
+
+/// A named scenario = an arrival process (plus room to grow: per-scenario
+/// payload scaling, mixes, ...).
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkloadScenario {
+    pub name: String,
+    pub arrivals: ArrivalProcess,
+}
+
+impl WorkloadScenario {
+    pub fn closed_loop(jobs: u64) -> Self {
+        WorkloadScenario {
+            name: format!("closed-loop-{jobs}"),
+            arrivals: ArrivalProcess::ClosedLoopBatch { jobs: jobs.max(1) },
+        }
+    }
+
+    pub fn poisson(rate_hz: f64, jobs: u64) -> Self {
+        WorkloadScenario {
+            name: format!("poisson-{rate_hz:.0}hz-{jobs}"),
+            arrivals: ArrivalProcess::Poisson { rate_hz, jobs: jobs.max(1) },
+        }
+    }
+
+    pub fn bursty(rate_hz: f64, on_s: f64, off_s: f64, jobs: u64) -> Self {
+        WorkloadScenario {
+            name: format!("bursty-{rate_hz:.0}hz-{jobs}"),
+            arrivals: ArrivalProcess::BurstyOnOff { rate_hz, on_s, off_s, jobs: jobs.max(1) },
+        }
+    }
+
+    pub fn jobs(&self) -> u64 {
+        match self.arrivals {
+            ArrivalProcess::ClosedLoopBatch { jobs } => jobs,
+            ArrivalProcess::Poisson { jobs, .. } => jobs,
+            ArrivalProcess::BurstyOnOff { jobs, .. } => jobs,
+        }
+    }
+
+    /// Materialize the arrival instants (sorted, deterministic in `rng`).
+    pub fn arrival_times(&self, rng: &mut Rng) -> Vec<TimePoint> {
+        match self.arrivals {
+            ArrivalProcess::ClosedLoopBatch { jobs } => {
+                vec![TimePoint::ZERO; jobs as usize]
+            }
+            ArrivalProcess::Poisson { rate_hz, jobs } => {
+                let mut t = TimePoint::ZERO;
+                (0..jobs)
+                    .map(|_| {
+                        t += exp_span(rng, rate_hz);
+                        t
+                    })
+                    .collect()
+            }
+            ArrivalProcess::BurstyOnOff { rate_hz, on_s, off_s, jobs } => {
+                // Draw the process in "active time" (a plain Poisson stream),
+                // then stretch it onto the wall clock by inserting the off
+                // windows: active time a lands at wall time
+                //   floor(a/on) * (on + off) + a mod on.
+                let on = on_s.max(1e-9);
+                let off = off_s.max(0.0);
+                let mut active = 0.0f64;
+                (0..jobs)
+                    .map(|_| {
+                        active += exp_secs(rng, rate_hz);
+                        let periods = (active / on).floor();
+                        let wall = periods * (on + off) + (active - periods * on);
+                        TimePoint::ZERO + TimeSpan::from_secs_f64(wall)
+                    })
+                    .collect()
+            }
+        }
+    }
+}
+
+/// One exponential interarrival sample, in seconds.
+fn exp_secs(rng: &mut Rng, rate_hz: f64) -> f64 {
+    let rate = rate_hz.max(1e-9);
+    let u = rng.f64(); // [0, 1)
+    -(1.0 - u).ln() / rate
+}
+
+fn exp_span(rng: &mut Rng, rate_hz: f64) -> TimeSpan {
+    TimeSpan::from_secs_f64(exp_secs(rng, rate_hz))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn closed_loop_is_all_at_zero() {
+        let s = WorkloadScenario::closed_loop(5);
+        let mut rng = Rng::new(1);
+        let a = s.arrival_times(&mut rng);
+        assert_eq!(a.len(), 5);
+        assert!(a.iter().all(|t| *t == TimePoint::ZERO));
+    }
+
+    #[test]
+    fn poisson_mean_interarrival_matches_rate() {
+        let s = WorkloadScenario::poisson(1000.0, 4000);
+        let mut rng = Rng::new(7);
+        let a = s.arrival_times(&mut rng);
+        assert_eq!(a.len(), 4000);
+        assert!(a.windows(2).all(|w| w[0] <= w[1]), "sorted");
+        let span = a.last().unwrap().as_secs_f64();
+        let mean = span / 4000.0;
+        // 1/rate = 1 ms; law of large numbers within 10%
+        assert!((mean - 1e-3).abs() < 1e-4, "mean interarrival {mean}");
+    }
+
+    #[test]
+    fn bursty_avoids_off_windows() {
+        let s = WorkloadScenario::bursty(10_000.0, 0.001, 0.009, 500);
+        let mut rng = Rng::new(3);
+        let a = s.arrival_times(&mut rng);
+        assert!(a.windows(2).all(|w| w[0] <= w[1]), "sorted");
+        // every arrival must land inside an on-window of the 10 ms period
+        for t in &a {
+            let phase = t.as_secs_f64() % 0.010;
+            assert!(phase <= 0.001 + 1e-9, "arrival in off window at phase {phase}");
+        }
+    }
+
+    #[test]
+    fn same_seed_same_arrivals() {
+        let s = WorkloadScenario::bursty(500.0, 0.01, 0.02, 100);
+        let a = s.arrival_times(&mut Rng::new(9));
+        let b = s.arrival_times(&mut Rng::new(9));
+        assert_eq!(a, b);
+    }
+}

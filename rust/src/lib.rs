@@ -14,6 +14,9 @@
 //!   Vitis `.cfg`, Verilog stubs and a generated host API;
 //! * a cycle-approximate platform simulator ([`sim`]) standing in for the
 //!   Alveo card, plus a host runtime ([`host`]);
+//! * a deterministic discrete-event queueing simulator ([`des`]) scoring
+//!   architectures under contention + workload scenarios (the `des-score`
+//!   DSE objective);
 //! * a PJRT runtime ([`runtime`]) that loads AOT-compiled JAX/Pallas kernels
 //!   (HLO text in `artifacts/`) and executes them for kernel compute units.
 //!
@@ -21,6 +24,7 @@
 
 pub mod analysis;
 pub mod coordinator;
+pub mod des;
 pub mod dialect;
 pub mod host;
 pub mod ir;

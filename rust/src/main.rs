@@ -3,10 +3,15 @@
 //! ```text
 //! olympus platforms
 //! olympus opt   <file.mlir> [--platform u280] [--pipeline "sanitize,iris"]
-//! olympus dse   <file.mlir> [--platform u280]
+//! olympus dse   <file.mlir> [--platform u280] [--objective analytic|des-score]
+//! olympus des   <file.mlir> [--platform u280] [--pipeline ...] [--scenario SPEC] [--seed N]
 //! olympus lower <file.mlir> [--platform u280] [--pipeline ...] [--out DIR]
 //! olympus run   <file.mlir> [--platform u280] [--pipeline ...] [--artifacts DIR] [--seed N]
 //! ```
+//!
+//! `des` replays the lowered design through the discrete-event queueing
+//! simulator. `--scenario` specs: `closed:<jobs>`, `poisson:<hz>:<jobs>`,
+//! `bursty:<hz>:<on_s>:<off_s>:<jobs>` (default `closed:4`).
 //!
 //! `run` executes the lowered design on the platform simulator with seeded
 //! random host buffers and prints the simulation report. (clap is not
@@ -80,10 +85,44 @@ fn load_module(path: &str) -> Result<Module> {
 
 fn usage() -> ! {
     eprintln!(
-        "usage: olympus <platforms|opt|dse|lower|run> [input.mlir] \
-         [--platform NAME|file.json] [--pipeline P] [--out DIR] [--artifacts DIR] [--seed N]"
+        "usage: olympus <platforms|opt|dse|des|lower|run> [input.mlir] \
+         [--platform NAME|file.json] [--pipeline P] [--objective analytic|des-score] \
+         [--scenario closed:N|poisson:HZ:N|bursty:HZ:ON:OFF:N] [--out DIR] \
+         [--artifacts DIR] [--seed N]"
     );
     std::process::exit(2)
+}
+
+/// Parse a `--scenario` spec (see the crate docs above).
+fn parse_scenario(spec: &str) -> Result<olympus::des::WorkloadScenario> {
+    use olympus::des::WorkloadScenario;
+    let parts: Vec<&str> = spec.split(':').collect();
+    let num = |s: &str| -> Result<f64> {
+        s.parse::<f64>().with_context(|| format!("bad number '{s}' in scenario '{spec}'"))
+    };
+    match parts.as_slice() {
+        ["closed", n] => Ok(WorkloadScenario::closed_loop(num(n)? as u64)),
+        ["poisson", hz, n] => Ok(WorkloadScenario::poisson(num(hz)?, num(n)? as u64)),
+        ["bursty", hz, on, off, n] => {
+            Ok(WorkloadScenario::bursty(num(hz)?, num(on)?, num(off)?, num(n)? as u64))
+        }
+        _ => bail!("bad scenario '{spec}' (want closed:N | poisson:HZ:N | bursty:HZ:ON:OFF:N)"),
+    }
+}
+
+/// Shared `--scenario` / `--seed` handling for the DES-facing commands.
+fn scenario_and_config(
+    args: &Args,
+) -> Result<(olympus::des::WorkloadScenario, olympus::des::DesConfig)> {
+    let scenario = match args.flags.get("scenario") {
+        Some(s) => parse_scenario(s)?,
+        None => olympus::des::WorkloadScenario::closed_loop(4),
+    };
+    let mut cfg = olympus::des::DesConfig::default();
+    if let Some(seed) = args.flags.get("seed").and_then(|s| s.parse().ok()) {
+        cfg.seed = seed;
+    }
+    Ok((scenario, cfg))
 }
 
 fn main() -> Result<()> {
@@ -128,8 +167,40 @@ fn main() -> Result<()> {
             let input = args.positional.first().unwrap_or_else(|| usage());
             let m = load_module(input)?;
             let plat = load_platform(&args)?;
-            let r = run_flow(m, &plat, None)?;
+            let mut flow = olympus::coordinator::Flow::new(plat);
+            if args.flags.get("objective").map(|s| s.as_str()) == Some("des-score") {
+                let (scenario, cfg) = scenario_and_config(&args)?;
+                flow = flow
+                    .with_objective(olympus::passes::DseObjective::des_score_with(scenario, cfg));
+            }
+            let r = flow.run(m, "app")?;
             print!("{}", render_dse_table(r.dse.as_ref().unwrap()));
+            Ok(())
+        }
+        "des" => {
+            let input = args.positional.first().unwrap_or_else(|| usage());
+            let m = load_module(input)?;
+            let plat = load_platform(&args)?;
+            let pipeline = args.flags.get("pipeline").map(|s| s.as_str());
+            let (scenario, cfg) = scenario_and_config(&args)?;
+            let mut flow =
+                olympus::coordinator::Flow::new(plat).with_scenario(scenario.clone());
+            flow.des_config = cfg.clone();
+            match pipeline {
+                Some(p) => flow = flow.with_pipeline(p),
+                // no explicit pipeline: the DSE picks the design, and for a
+                // DES-centric command it scores candidates with the DES too
+                None => {
+                    flow = flow.with_objective(
+                        olympus::passes::DseObjective::des_score_with(scenario, cfg),
+                    );
+                }
+            }
+            let r = flow.run(m, "app")?;
+            if let Some(dse) = &r.dse {
+                print!("{}", render_dse_table(dse));
+            }
+            print!("{}", r.des.as_ref().expect("scenario was set"));
             Ok(())
         }
         "lower" => {

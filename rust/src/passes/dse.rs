@@ -1,9 +1,20 @@
 //! The Fig 3 iterative optimization loop ("Olympus-Opt" box): candidate
-//! strategies are applied to clones of the input, evaluated with the
-//! bandwidth + resource analyses, and the best design is returned.
+//! strategies are applied to clones of the input, evaluated with an
+//! objective, and the best design is returned.
 //!
-//! The objective is streaming makespan (seconds per app iteration over the
-//! bottleneck PC), tie-broken by resource use. Candidate pipelines:
+//! Two objectives are available:
+//!
+//! * **analytic** (default) — the static bandwidth + resource analyses:
+//!   streaming makespan (seconds per app iteration over the bottleneck PC),
+//!   tie-broken by resource use. Fast, but blind to compute time, HBM
+//!   pseudo-channel contention and FIFO backpressure.
+//! * **`des-score`** — every candidate is lowered to an [`Architecture`]
+//!   and replayed through the discrete-event queueing simulator
+//!   ([`crate::des`]) under a workload scenario; the score is the simulated
+//!   scenario makespan. Slower, so candidates are evaluated in parallel
+//!   (std threads, one cloned module per worker).
+//!
+//! Candidate pipelines:
 //!
 //! | strategy          | pipeline                                             |
 //! |-------------------|------------------------------------------------------|
@@ -14,13 +25,20 @@
 //! | `replicate`       | sanitize, plm-share, replicate, channel-reassign     |
 //! | `full`            | sanitize, plm-share, bus-widen, iris, replicate, channel-reassign |
 //!
-//! `replicate` factors are swept (1, 2, 4, …, headroom) inside the
-//! replication strategies.
+//! `replicate` factors are swept ({2, 4, 8, 16} by default, or
+//! [`DseOptions::factors`]) inside the replication strategies.
+//!
+//! [`Architecture`]: crate::lower::Architecture
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
 
 use anyhow::Result;
 
 use crate::analysis::{analyze_bandwidth, analyze_resources, Dfg};
+use crate::des::{simulate, DesConfig, WorkloadScenario};
 use crate::ir::Module;
+use crate::lower::build_architecture;
 use crate::platform::PlatformSpec;
 
 use super::manager::{parse_pipeline, PassContext};
@@ -36,6 +54,13 @@ pub struct DseCandidate {
     pub utilization: f64,
     pub fits: bool,
     pub compute_units: usize,
+    /// Simulated scenario makespan (des-score objective only).
+    pub des_makespan_s: Option<f64>,
+    /// Simulated p99 job latency (des-score objective only).
+    pub des_p99_latency_s: Option<f64>,
+    /// The value the winner was selected on (lower = better; infinite =
+    /// infeasible under the objective).
+    pub score: f64,
 }
 
 /// DSE outcome: the winning module + the full decision table.
@@ -43,6 +68,46 @@ pub struct DseReport {
     pub best: Module,
     pub best_strategy: String,
     pub candidates: Vec<DseCandidate>,
+}
+
+/// How candidates are scored.
+#[derive(Debug, Clone)]
+pub enum DseObjective {
+    /// Static analytic makespan (bandwidth analysis only).
+    Analytic,
+    /// Discrete-event simulation of `scenario` on each lowered candidate.
+    DesScore { scenario: WorkloadScenario, config: DesConfig },
+}
+
+impl Default for DseObjective {
+    fn default() -> Self {
+        DseObjective::Analytic
+    }
+}
+
+impl DseObjective {
+    /// The standard des-score setup: a 4-iteration closed-loop batch.
+    pub fn des_score() -> Self {
+        DseObjective::DesScore {
+            scenario: WorkloadScenario::closed_loop(4),
+            config: DesConfig::default(),
+        }
+    }
+
+    /// des-score under a caller-chosen scenario.
+    pub fn des_score_with(scenario: WorkloadScenario, config: DesConfig) -> Self {
+        DseObjective::DesScore { scenario, config }
+    }
+}
+
+/// DSE tuning knobs.
+#[derive(Debug, Clone, Default)]
+pub struct DseOptions {
+    /// Replication factors swept (empty = {2, 4, 8, 16}).
+    pub factors: Vec<u64>,
+    pub objective: DseObjective,
+    /// Worker threads for candidate evaluation (0 = all available cores).
+    pub threads: usize,
 }
 
 /// Strategy table (name, pipeline template).
@@ -72,6 +137,52 @@ fn evaluate(m: &Module, plat: &PlatformSpec) -> (f64, f64, f64, f64, bool, usize
         res.fits,
         dfg.compute_unit_count(m),
     )
+}
+
+/// Full candidate evaluation under `objective`; `strategy`/`pipeline` label
+/// the row.
+fn evaluate_candidate(
+    m: &Module,
+    plat: &PlatformSpec,
+    objective: &DseObjective,
+    strategy: String,
+    pipeline: String,
+) -> DseCandidate {
+    let (makespan, gbs, eff, util, fits, cus) = evaluate(m, plat);
+    let mut cand = DseCandidate {
+        strategy,
+        pipeline,
+        makespan_s: makespan,
+        achieved_gbs: gbs,
+        efficiency: eff,
+        utilization: util,
+        fits,
+        compute_units: cus,
+        des_makespan_s: None,
+        des_p99_latency_s: None,
+        score: if fits && makespan > 0.0 { makespan } else { f64::INFINITY },
+    };
+    if let DseObjective::DesScore { scenario, config } = objective {
+        let mut cfg = config.clone();
+        cfg.utilization = util;
+        let sim = build_architecture(m, plat).and_then(|arch| simulate(&arch, scenario, &cfg));
+        match sim {
+            Ok(rep) => {
+                cand.des_makespan_s = Some(rep.makespan_s);
+                cand.des_p99_latency_s = Some(rep.p99_job_latency_s);
+                cand.score = if fits
+                    && rep.makespan_s > 0.0
+                    && rep.jobs_completed == rep.jobs_released
+                {
+                    rep.makespan_s
+                } else {
+                    f64::INFINITY
+                };
+            }
+            Err(_) => cand.score = f64::INFINITY, // unlowerable / wedged candidate
+        }
+    }
+    cand
 }
 
 /// The paper's *iterative* optimize loop (Fig 3: "iterates over the
@@ -127,80 +238,120 @@ pub fn run_iterative(
     Ok((m, applied))
 }
 
-/// Run DSE over the strategy table. `factors` are the replication factors
-/// swept for the replication strategies (empty = {2, 4, 8}).
-pub fn run_dse(input: &Module, plat: &PlatformSpec, factors: &[u64]) -> Result<DseReport> {
+/// Run DSE over the strategy table with full control over factors,
+/// objective and parallelism. Candidate evaluation is deterministic
+/// regardless of thread count: results land in per-variant slots and the
+/// winner scan is sequential.
+pub fn run_dse_with(
+    input: &Module,
+    plat: &PlatformSpec,
+    opts: &DseOptions,
+) -> Result<DseReport> {
     let default_factors = [2u64, 4, 8, 16];
-    let factors = if factors.is_empty() { &default_factors[..] } else { factors };
+    let factors =
+        if opts.factors.is_empty() { &default_factors[..] } else { &opts.factors[..] };
+
+    // expand the strategy table into concrete (label, pipeline) variants
+    let mut variants: Vec<(String, String)> = Vec::new();
+    for (name, template) in strategies() {
+        if template.contains("FACTOR") {
+            for f in factors {
+                variants.push((
+                    format!("{name}(x{f})"),
+                    template.replace("FACTOR", &f.to_string()),
+                ));
+            }
+        } else {
+            variants.push((name.to_string(), template.to_string()));
+        }
+    }
+
+    let n = variants.len();
+    let threads = if opts.threads == 0 {
+        std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1)
+    } else {
+        opts.threads
+    }
+    .clamp(1, n);
+
+    let slots: Mutex<Vec<Option<(DseCandidate, Module)>>> =
+        Mutex::new((0..n).map(|_| None).collect());
+    let next = AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let (label, pipeline) = &variants[i];
+                let mut m = input.clone();
+                let mut ctx = PassContext::new(plat.clone());
+                let Ok(pm) = parse_pipeline(pipeline, &mut ctx) else { continue };
+                if pm.run(&mut m, &ctx).is_err() {
+                    continue; // infeasible candidate (verifier rejected)
+                }
+                let cand = evaluate_candidate(
+                    &m,
+                    plat,
+                    &opts.objective,
+                    label.clone(),
+                    pipeline.clone(),
+                );
+                slots.lock().unwrap()[i] = Some((cand, m));
+            });
+        }
+    });
+
     let mut candidates = Vec::new();
     let mut best: Option<(f64, Module, String)> = None;
-
-    for (name, template) in strategies() {
-        let variants: Vec<(String, String)> = if template.contains("FACTOR") {
-            factors
-                .iter()
-                .map(|f| {
-                    (format!("{name}(x{f})"), template.replace("FACTOR", &f.to_string()))
-                })
-                .collect()
-        } else {
-            vec![(name.to_string(), template.to_string())]
-        };
-        for (label, pipeline) in variants {
-            let mut m = input.clone();
-            let mut ctx = PassContext::new(plat.clone());
-            let pm = parse_pipeline(&pipeline, &mut ctx)?;
-            if pm.run(&mut m, &ctx).is_err() {
-                continue; // infeasible candidate (verifier rejected)
-            }
-            let (makespan, gbs, eff, util, fits, cus) = evaluate(&m, plat);
-            candidates.push(DseCandidate {
-                strategy: label.clone(),
-                pipeline: pipeline.clone(),
-                makespan_s: makespan,
-                achieved_gbs: gbs,
-                efficiency: eff,
-                utilization: util,
-                fits,
-                compute_units: cus,
-            });
-            if !fits || makespan <= 0.0 {
-                continue;
-            }
-            if best.as_ref().map(|(b, _, _)| makespan < *b).unwrap_or(true) {
-                best = Some((makespan, m, label));
-            }
+    for slot in slots.into_inner().unwrap() {
+        let Some((cand, m)) = slot else { continue };
+        if cand.score.is_finite()
+            && best.as_ref().map(|(b, _, _)| cand.score < *b).unwrap_or(true)
+        {
+            best = Some((cand.score, m, cand.strategy.clone()));
         }
+        candidates.push(cand);
     }
+
     // the Fig 3 iterative loop competes as its own candidate
     if let Ok((m, applied)) = run_iterative(input, plat, 8) {
-        let (makespan, gbs, eff, util, fits, cus) = evaluate(&m, plat);
-        candidates.push(DseCandidate {
-            strategy: "iterative".to_string(),
-            pipeline: applied.join("; "),
-            makespan_s: makespan,
-            achieved_gbs: gbs,
-            efficiency: eff,
-            utilization: util,
-            fits,
-            compute_units: cus,
-        });
-        if fits
-            && makespan > 0.0
-            && best.as_ref().map(|(b, _, _)| makespan < *b).unwrap_or(true)
+        let cand = evaluate_candidate(
+            &m,
+            plat,
+            &opts.objective,
+            "iterative".to_string(),
+            applied.join("; "),
+        );
+        if cand.score.is_finite()
+            && best.as_ref().map(|(b, _, _)| cand.score < *b).unwrap_or(true)
         {
-            best = Some((makespan, m, "iterative".to_string()));
+            best = Some((cand.score, m, cand.strategy.clone()));
         }
+        candidates.push(cand);
     }
+
     let (_, best_m, best_strategy) =
         best.ok_or_else(|| anyhow::anyhow!("no feasible DSE candidate"))?;
     Ok(DseReport { best: best_m, best_strategy, candidates })
+}
+
+/// Run DSE with the analytic objective. `factors` are the replication
+/// factors swept for the replication strategies (empty = {2, 4, 8, 16}).
+pub fn run_dse(input: &Module, plat: &PlatformSpec, factors: &[u64]) -> Result<DseReport> {
+    run_dse_with(
+        input,
+        plat,
+        &DseOptions { factors: factors.to_vec(), ..DseOptions::default() },
+    )
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::dialect::build::fig4a_module;
+    use crate::dialect::{DfgBuilder, KernelEst, ParamType, ResourceVec};
     use crate::platform::builtin;
 
     #[test]
@@ -240,6 +391,8 @@ mod tests {
                 "missing strategy {s}"
             );
         }
+        // analytic mode leaves the DES columns empty
+        assert!(rep.candidates.iter().all(|c| c.des_makespan_s.is_none()));
     }
 
     #[test]
@@ -277,5 +430,95 @@ mod tests {
         assert!(!rep.candidates.is_empty());
         // a feasible best exists even without HBM
         assert!(rep.candidates.iter().any(|c| c.fits));
+    }
+
+    /// A compute-heavy app: big streams, deeply pipelined kernel (II = 8).
+    /// The static objective only sees memory beats; the DES sees that the
+    /// single CU is the real bottleneck.
+    fn compute_heavy_module() -> crate::ir::Module {
+        let mut b = DfgBuilder::new();
+        let a = b.channel(32, ParamType::Stream, 8192);
+        let c = b.channel(32, ParamType::Stream, 8192);
+        let o = b.channel(32, ParamType::Stream, 8192);
+        b.kernel(
+            "vecadd_1024",
+            &[a, c],
+            &[o],
+            KernelEst {
+                latency: 4000,
+                ii: 8,
+                res: ResourceVec::new(4000, 5000, 2, 0, 4),
+            },
+        );
+        b.finish()
+    }
+
+    fn des_opts(threads: usize) -> DseOptions {
+        DseOptions {
+            factors: vec![2],
+            objective: DseObjective::des_score_with(
+                WorkloadScenario::closed_loop(2),
+                DesConfig::default(),
+            ),
+            threads,
+        }
+    }
+
+    #[test]
+    fn des_score_flips_winner_on_contention_heavy_input() {
+        // On a 2-channel DDR board the analytic objective ties widen with
+        // iris on beats and keeps iris (first in table order) — it cannot
+        // see that the II=8 kernel makes every candidate compute-bound.
+        // The DES sees lane-parallel compute and flips the winner.
+        let m = compute_heavy_module();
+        let plat = builtin("generic-ddr").unwrap();
+        let analytic = run_dse(&m, &plat, &[2]).unwrap();
+        let des = run_dse_with(&m, &plat, &des_opts(1)).unwrap();
+        assert_ne!(
+            analytic.best_strategy, des.best_strategy,
+            "objectives must disagree on this input (analytic {} vs des {})",
+            analytic.best_strategy, des.best_strategy
+        );
+        // the DES winner must be a compute-parallel strategy
+        assert!(
+            ["widen", "replicate", "full", "iterative"]
+                .iter()
+                .any(|s| des.best_strategy.starts_with(s)),
+            "des winner {} should parallelize compute",
+            des.best_strategy
+        );
+        // and the des columns are populated with finite values
+        let w = des.candidates.iter().find(|c| c.strategy == des.best_strategy).unwrap();
+        assert!(w.des_makespan_s.unwrap() > 0.0);
+        assert!(w.score.is_finite());
+        // compute dominance: the des makespan of the analytic winner is far
+        // worse than its own analytic makespan claims
+        let iris = des
+            .candidates
+            .iter()
+            .find(|c| c.strategy == analytic.best_strategy)
+            .expect("analytic winner scored under des too");
+        assert!(
+            iris.des_makespan_s.unwrap() > 5.0 * iris.makespan_s,
+            "contention/compute must dwarf the static estimate: des {} static {}",
+            iris.des_makespan_s.unwrap(),
+            iris.makespan_s
+        );
+    }
+
+    #[test]
+    fn des_score_is_deterministic_and_thread_invariant() {
+        let m = fig4a_module();
+        let plat = builtin("u280").unwrap();
+        let a = run_dse_with(&m, &plat, &des_opts(1)).unwrap();
+        let b = run_dse_with(&m, &plat, &des_opts(4)).unwrap();
+        assert_eq!(a.best_strategy, b.best_strategy);
+        assert_eq!(a.candidates.len(), b.candidates.len());
+        for (x, y) in a.candidates.iter().zip(&b.candidates) {
+            assert_eq!(x.strategy, y.strategy);
+            assert_eq!(x.score, y.score, "{}", x.strategy);
+            assert_eq!(x.des_makespan_s, y.des_makespan_s, "{}", x.strategy);
+            assert_eq!(x.des_p99_latency_s, y.des_p99_latency_s, "{}", x.strategy);
+        }
     }
 }

@@ -178,6 +178,9 @@ pub fn parse_pipeline(spec: &str, ctx: &mut PassContext) -> Result<PassManager> 
                 let (k, v) = kv
                     .split_once('=')
                     .ok_or_else(|| anyhow::anyhow!("bad option '{kv}' (want k=v)"))?;
+                if k.trim().is_empty() {
+                    bail!("bad option '{kv}' in pass '{name}': empty key");
+                }
                 ctx.opts.insert(format!("{name}.{}", k.trim()), v.trim().to_string());
             }
             rest = &rest[close + 1..];
@@ -230,6 +233,59 @@ mod tests {
         assert!(parse_pipeline("sanitize, nope", &mut ctx).is_err());
         assert!(parse_pipeline("replicate{factor}", &mut ctx).is_err());
         assert!(parse_pipeline("replicate{factor=2", &mut ctx).is_err());
+    }
+
+    #[test]
+    fn empty_pipeline_is_a_valid_noop() {
+        let mut ctx = PassContext::new(builtin("u280").unwrap());
+        let pm = parse_pipeline("", &mut ctx).unwrap();
+        assert!(pm.is_empty());
+        assert_eq!(pm.len(), 0);
+        let pm = parse_pipeline("   ", &mut ctx).unwrap();
+        assert!(pm.is_empty());
+        // an empty pipeline runs fine and records nothing
+        let mut m = crate::dialect::build::fig4a_module();
+        assert!(pm.run(&mut m, &ctx).unwrap().is_empty());
+    }
+
+    #[test]
+    fn unknown_pass_names_the_offender() {
+        let mut ctx = PassContext::new(builtin("u280").unwrap());
+        let err = parse_pipeline("sanitize, frobnicate{x=1}", &mut ctx).unwrap_err();
+        assert!(err.to_string().contains("frobnicate"), "{err}");
+        // unknown pass rejected even with valid options attached
+        assert!(make_pass("frobnicate").is_err());
+    }
+
+    #[test]
+    fn malformed_option_blocks() {
+        let mut ctx = PassContext::new(builtin("u280").unwrap());
+        // empty key
+        assert!(parse_pipeline("replicate{=2}", &mut ctx).is_err());
+        // leading '{' with no pass name
+        assert!(parse_pipeline("{factor=2}", &mut ctx).is_err());
+        // unclosed brace reported as such
+        let err = parse_pipeline("bus-widen{width=128", &mut ctx).unwrap_err();
+        assert!(err.to_string().contains("unclosed"), "{err}");
+        // empty option set and trailing commas are tolerated
+        let mut ctx2 = PassContext::new(builtin("u280").unwrap());
+        let pm = parse_pipeline("replicate{}, sanitize,", &mut ctx2).unwrap();
+        assert_eq!(pm.len(), 2);
+        // dangling comma-only entries are rejected as empty pass names
+        assert!(parse_pipeline(",", &mut ctx2).is_err());
+    }
+
+    #[test]
+    fn whitespace_and_duplicate_options() {
+        let mut ctx = PassContext::new(builtin("u280").unwrap());
+        let pm = parse_pipeline(
+            "  sanitize ,  replicate{ factor = 4 , factor = 8 }  ",
+            &mut ctx,
+        )
+        .unwrap();
+        assert_eq!(pm.len(), 2);
+        // last write wins, whitespace trimmed on both key and value
+        assert_eq!(ctx.opt_u64("replicate.factor", 0), 8);
     }
 
     #[test]

@@ -27,5 +27,7 @@ pub mod plm_share;
 pub mod replicate;
 pub mod sanitize;
 
-pub use dse::{run_dse, run_iterative, DseReport};
+pub use dse::{
+    run_dse, run_dse_with, run_iterative, DseCandidate, DseObjective, DseOptions, DseReport,
+};
 pub use manager::{make_pass, parse_pipeline, Pass, PassContext, PassManager, PassOutcome};

@@ -18,11 +18,25 @@ use crate::dialect::ResourceVec;
 use super::spec::{MemKind, PcSpec, PlatformSpec};
 
 fn hbm_pc(freq_mhz: f64, capacity_bytes: u64) -> PcSpec {
-    PcSpec { kind: MemKind::Hbm, width_bits: 256, freq_mhz, capacity_bytes }
+    // HBM pseudo-channels sustain well below peak once several AXI masters
+    // contend (arXiv 2010.08916 reports ~80-90% under mixed access).
+    PcSpec {
+        kind: MemKind::Hbm,
+        width_bits: 256,
+        freq_mhz,
+        capacity_bytes,
+        sustained_frac: 0.85,
+    }
 }
 
 fn ddr4_2400() -> PcSpec {
-    PcSpec { kind: MemKind::Ddr, width_bits: 64, freq_mhz: 2400.0, capacity_bytes: 16 << 30 }
+    PcSpec {
+        kind: MemKind::Ddr,
+        width_bits: 64,
+        freq_mhz: 2400.0,
+        capacity_bytes: 16 << 30,
+        sustained_frac: 0.95,
+    }
 }
 
 /// Alveo U280 (the paper's example target).

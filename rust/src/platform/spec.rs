@@ -42,6 +42,13 @@ pub struct PcSpec {
     pub freq_mhz: f64,
     /// Capacity in bytes.
     pub capacity_bytes: u64,
+    /// Fraction of the peak beat rate sustainable when several engines
+    /// contend for the channel concurrently (arXiv 2010.08916 measures HBM
+    /// pseudo-channels well below peak under multi-master access patterns).
+    /// `1.0` = contention costs nothing beyond the fair bandwidth split.
+    /// Only the discrete-event simulator ([`crate::des`]) consumes this; the
+    /// static analytic model intentionally ignores it.
+    pub sustained_frac: f64,
 }
 
 impl PcSpec {
@@ -53,6 +60,17 @@ impl PcSpec {
     /// Peak bandwidth in GB/s (decimal GB, as the paper quotes).
     pub fn bandwidth_gbs(&self) -> f64 {
         self.bandwidth_bps() / 1e9
+    }
+
+    /// Beat rate (beats/second) sustainable with `concurrent` engines
+    /// sharing the channel: peak when alone, derated fair share otherwise.
+    pub fn shared_beat_rate(&self, concurrent: usize) -> f64 {
+        let peak = self.freq_mhz * 1e6;
+        if concurrent <= 1 {
+            peak
+        } else {
+            peak * self.sustained_frac.clamp(0.0, 1.0)
+        }
     }
 }
 
@@ -103,6 +121,7 @@ impl PlatformSpec {
                     ("width_bits", (p.width_bits as usize).into()),
                     ("freq_mhz", p.freq_mhz.into()),
                     ("capacity_bytes", (p.capacity_bytes as usize).into()),
+                    ("sustained_frac", p.sustained_frac.into()),
                 ])
             })
             .collect();
@@ -133,10 +152,14 @@ impl PlatformSpec {
             let width_bits = p.get("width_bits").as_usize().context("pc width_bits")? as u32;
             let freq_mhz = p.get("freq_mhz").as_f64().context("pc freq_mhz")?;
             let capacity_bytes = p.get("capacity_bytes").as_usize().unwrap_or(0) as u64;
+            let sustained_frac = p.get("sustained_frac").as_f64().unwrap_or(1.0);
             if width_bits == 0 || freq_mhz <= 0.0 {
                 bail!("pc {i}: non-positive width/frequency");
             }
-            pcs.push(PcSpec { kind, width_bits, freq_mhz, capacity_bytes });
+            if !(0.0..=1.0).contains(&sustained_frac) {
+                bail!("pc {i}: sustained_frac must be in [0, 1]");
+            }
+            pcs.push(PcSpec { kind, width_bits, freq_mhz, capacity_bytes, sustained_frac });
         }
         if pcs.is_empty() {
             bail!("platform '{name}' has no memory channels");
@@ -165,7 +188,13 @@ mod tests {
     use super::*;
 
     fn pc() -> PcSpec {
-        PcSpec { kind: MemKind::Hbm, width_bits: 256, freq_mhz: 450.0, capacity_bytes: 256 << 20 }
+        PcSpec {
+            kind: MemKind::Hbm,
+            width_bits: 256,
+            freq_mhz: 450.0,
+            capacity_bytes: 256 << 20,
+            sustained_frac: 0.85,
+        }
     }
 
     #[test]
@@ -178,7 +207,16 @@ mod tests {
     fn json_roundtrip() {
         let spec = PlatformSpec {
             name: "test".into(),
-            pcs: vec![pc(), PcSpec { kind: MemKind::Ddr, width_bits: 64, freq_mhz: 2400.0, capacity_bytes: 16 << 30 }],
+            pcs: vec![
+                pc(),
+                PcSpec {
+                    kind: MemKind::Ddr,
+                    width_bits: 64,
+                    freq_mhz: 2400.0,
+                    capacity_bytes: 16 << 30,
+                    sustained_frac: 0.95,
+                },
+            ],
             resources: ResourceVec::new(1, 2, 3, 4, 5),
             util_limit: 0.8,
             kernel_mhz: 300.0,
@@ -186,6 +224,29 @@ mod tests {
         let j = spec.to_json().to_string();
         let back = PlatformSpec::from_json(&Json::parse(&j).unwrap()).unwrap();
         assert_eq!(spec, back);
+    }
+
+    #[test]
+    fn sustained_frac_defaults_and_derates() {
+        // absent in JSON -> 1.0 (no derate)
+        let j = Json::parse(
+            r#"{"name": "x", "pcs": [{"kind": "hbm", "width_bits": 256, "freq_mhz": 450.0}]}"#,
+        )
+        .unwrap();
+        let spec = PlatformSpec::from_json(&j).unwrap();
+        assert_eq!(spec.pcs[0].sustained_frac, 1.0);
+        assert_eq!(spec.pcs[0].shared_beat_rate(1), spec.pcs[0].shared_beat_rate(4));
+        // explicit derate only kicks in under contention
+        let p = pc();
+        assert!((p.shared_beat_rate(1) - 450e6).abs() < 1e-3);
+        assert!((p.shared_beat_rate(2) - 450e6 * 0.85).abs() < 1e-3);
+        // out-of-range rejected
+        let j = Json::parse(
+            r#"{"name": "x", "pcs": [{"kind": "hbm", "width_bits": 256,
+                "freq_mhz": 450.0, "sustained_frac": 1.5}]}"#,
+        )
+        .unwrap();
+        assert!(PlatformSpec::from_json(&j).is_err());
     }
 
     #[test]
@@ -200,7 +261,13 @@ mod tests {
             name: "t".into(),
             pcs: vec![
                 pc(),
-                PcSpec { kind: MemKind::Ddr, width_bits: 64, freq_mhz: 2400.0, capacity_bytes: 0 },
+                PcSpec {
+                    kind: MemKind::Ddr,
+                    width_bits: 64,
+                    freq_mhz: 2400.0,
+                    capacity_bytes: 0,
+                    sustained_frac: 1.0,
+                },
                 pc(),
             ],
             resources: ResourceVec::ZERO,

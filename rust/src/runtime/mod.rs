@@ -1,9 +1,13 @@
-//! PJRT runtime: loads AOT-compiled HLO-text artifacts produced by
-//! `python/compile/aot.py` and executes them on the PJRT CPU client.
+//! Kernel execution runtime, driven by `artifacts/manifest.json` (written
+//! by `python/compile/aot.py`).
 //!
-//! This is the only place the `xla` crate is touched. Kernel compute units in
-//! the platform simulator call [`KernelRegistry::execute`] with the `callee`
-//! attribute of their `olympus.kernel` op; python never runs at this point.
+//! Kernel compute units in the platform simulator call
+//! [`KernelRegistry::execute`] with the `callee` attribute of their
+//! `olympus.kernel` op; python never runs at this point. By default kernels
+//! execute on an in-tree native backend whose semantics mirror the
+//! pure-jnp oracles in `python/compile/kernels/ref.py`; the opt-in `pjrt`
+//! cargo feature swaps in the real PJRT CPU client, the only place the
+//! `xla` crate is touched.
 
 mod pjrt;
 mod registry;

@@ -1,81 +1,400 @@
-//! Thin wrapper over the `xla` crate: PJRT CPU client, HLO-text loading,
-//! compile-once/execute-many. Mirrors /opt/xla-example/load_hlo.rs.
+//! Kernel execution backends.
+//!
+//! Two interchangeable implementations behind one API:
+//!
+//! * **`pjrt` feature on** — thin wrapper over the `xla` crate: PJRT CPU
+//!   client, HLO-text loading, compile-once/execute-many. Requires the
+//!   un-vendored `xla` dependency plus `make artifacts`.
+//! * **default (offline)** — a native interpreter for the kernel families
+//!   shipped in `artifacts/manifest.json`. Semantics mirror the pure-jnp
+//!   oracles in `python/compile/kernels/ref.py` exactly, so the simulator's
+//!   functional plane stays a correctness signal without any foreign
+//!   runtime. Kernels are resolved by `callee` name (`vecadd_1024`,
+//!   `jacobi2d_64_x4`, ...); the HLO artifact files are not read.
 
-use std::collections::HashMap;
-use std::path::Path;
-use std::sync::Mutex;
+#[cfg(feature = "pjrt")]
+mod backend {
+    use std::collections::HashMap;
+    use std::path::Path;
+    use std::sync::Mutex;
 
-use anyhow::{Context, Result};
+    use anyhow::{Context, Result};
 
-/// A compiled, ready-to-run kernel executable.
-pub struct CompiledKernel {
-    exe: xla::PjRtLoadedExecutable,
-    /// Name the kernel was registered under (the `callee` attribute).
-    pub name: String,
-}
+    /// A compiled, ready-to-run kernel executable.
+    pub struct CompiledKernel {
+        exe: xla::PjRtLoadedExecutable,
+        /// Name the kernel was registered under (the `callee` attribute).
+        pub name: String,
+    }
 
-impl CompiledKernel {
-    /// Execute with f32 input buffers; returns the flat f32 outputs.
-    ///
-    /// All our AOT artifacts are lowered with `return_tuple=True`, so the
-    /// single result literal is a tuple; each element is returned flattened.
-    pub fn execute_f32(&self, inputs: &[(&[f32], &[usize])]) -> Result<Vec<Vec<f32>>> {
-        let mut lits = Vec::with_capacity(inputs.len());
-        for (data, shape) in inputs {
-            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
-            let lit = xla::Literal::vec1(data)
-                .reshape(&dims)
-                .with_context(|| format!("reshape input for kernel {}", self.name))?;
-            lits.push(lit);
+    impl CompiledKernel {
+        /// Execute with f32 input buffers; returns the flat f32 outputs.
+        ///
+        /// All our AOT artifacts are lowered with `return_tuple=True`, so the
+        /// single result literal is a tuple; each element is returned flattened.
+        pub fn execute_f32(&self, inputs: &[(&[f32], &[usize])]) -> Result<Vec<Vec<f32>>> {
+            let mut lits = Vec::with_capacity(inputs.len());
+            for (data, shape) in inputs {
+                let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                let lit = xla::Literal::vec1(data)
+                    .reshape(&dims)
+                    .with_context(|| format!("reshape input for kernel {}", self.name))?;
+                lits.push(lit);
+            }
+            let result = self.exe.execute::<xla::Literal>(&lits)?[0][0].to_literal_sync()?;
+            let elems = result.to_tuple()?;
+            let mut out = Vec::with_capacity(elems.len());
+            for e in elems {
+                out.push(e.to_vec::<f32>()?);
+            }
+            Ok(out)
         }
-        let result = self.exe.execute::<xla::Literal>(&lits)?[0][0].to_literal_sync()?;
-        let elems = result.to_tuple()?;
-        let mut out = Vec::with_capacity(elems.len());
-        for e in elems {
-            out.push(e.to_vec::<f32>()?);
+    }
+
+    /// PJRT CPU runtime holding the client and a cache of compiled executables.
+    pub struct PjrtRuntime {
+        client: xla::PjRtClient,
+        cache: Mutex<HashMap<String, std::sync::Arc<CompiledKernel>>>,
+    }
+
+    impl PjrtRuntime {
+        /// Create a CPU PJRT client.
+        pub fn cpu() -> Result<Self> {
+            let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+            Ok(Self { client, cache: Mutex::new(HashMap::new()) })
         }
-        Ok(out)
+
+        /// Human-readable platform string, e.g. `"cpu"`.
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Load an HLO-text artifact and compile it, caching by `name`.
+        pub fn load_hlo_text(
+            &self,
+            name: &str,
+            path: &Path,
+        ) -> Result<std::sync::Arc<CompiledKernel>> {
+            if let Some(k) = self.cache.lock().unwrap().get(name) {
+                return Ok(k.clone());
+            }
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("artifact path not utf-8")?,
+            )
+            .with_context(|| format!("parse HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("PJRT compile kernel '{name}'"))?;
+            let k = std::sync::Arc::new(CompiledKernel { exe, name: name.to_string() });
+            self.cache.lock().unwrap().insert(name.to_string(), k.clone());
+            Ok(k)
+        }
     }
 }
 
-/// PJRT CPU runtime holding the client and a cache of compiled executables.
-pub struct PjrtRuntime {
-    client: xla::PjRtClient,
-    cache: Mutex<HashMap<String, std::sync::Arc<CompiledKernel>>>,
+#[cfg(not(feature = "pjrt"))]
+mod backend {
+    use std::collections::HashMap;
+    use std::path::Path;
+    use std::sync::{Arc, Mutex};
+
+    use anyhow::{bail, Context, Result};
+
+    /// Kernel families the native backend understands (python/compile/model.py
+    /// VARIANTS, shape-polymorphic where PJRT executables are monomorphic).
+    #[derive(Debug, Clone, Copy, PartialEq, Eq)]
+    enum KernelKind {
+        /// `c = a + b`
+        VecAdd,
+        /// `y' = alpha[0] * x + y`
+        Saxpy,
+        /// `y = x * scale[0] + offset[0]`
+        ScaleOffset,
+        /// `[sum(a * b)]`
+        Dot,
+        /// `[sum(x where x > t[0]), count(x > t[0])]`
+        FilterSum,
+        /// 5-point Jacobi relaxation sweeps over an (N, N) grid.
+        Jacobi2d { sweeps: u32 },
+        /// `(M, K) x (K, N)` matmul, f32 accumulation.
+        MatMul,
+    }
+
+    fn resolve(name: &str) -> Result<KernelKind> {
+        let kind = if name.starts_with("vecadd") {
+            KernelKind::VecAdd
+        } else if name.starts_with("saxpy") {
+            KernelKind::Saxpy
+        } else if name.starts_with("scale_offset") {
+            KernelKind::ScaleOffset
+        } else if name.starts_with("dot") {
+            KernelKind::Dot
+        } else if name.starts_with("filter_sum") {
+            KernelKind::FilterSum
+        } else if name.starts_with("jacobi2d") {
+            // fused-sweep variants carry an `_x<N>` suffix (jacobi2d_64_x4)
+            let sweeps = name
+                .rsplit("_x")
+                .next()
+                .filter(|_| name.contains("_x"))
+                .and_then(|s| s.parse::<u32>().ok())
+                .unwrap_or(1);
+            KernelKind::Jacobi2d { sweeps }
+        } else if name.starts_with("matmul") {
+            KernelKind::MatMul
+        } else {
+            bail!("native kernel backend: unknown kernel family for '{name}'")
+        };
+        Ok(kind)
+    }
+
+    fn jacobi_sweep(grid: &[f32], n: usize) -> Vec<f32> {
+        let mut out = grid.to_vec();
+        for i in 1..n.saturating_sub(1) {
+            for j in 1..n - 1 {
+                out[i * n + j] = 0.25
+                    * (grid[(i - 1) * n + j]
+                        + grid[(i + 1) * n + j]
+                        + grid[i * n + j - 1]
+                        + grid[i * n + j + 1]);
+            }
+        }
+        out
+    }
+
+    /// A resolved, ready-to-run kernel (native interpreter).
+    pub struct CompiledKernel {
+        kind: KernelKind,
+        /// Name the kernel was registered under (the `callee` attribute).
+        pub name: String,
+    }
+
+    impl CompiledKernel {
+        /// Execute with f32 input buffers; returns the flat f32 outputs.
+        /// Matches the PJRT backend's contract: one `Vec<f32>` per result.
+        pub fn execute_f32(&self, inputs: &[(&[f32], &[usize])]) -> Result<Vec<Vec<f32>>> {
+            let need = |n: usize| -> Result<()> {
+                if inputs.len() != n {
+                    bail!("kernel '{}': got {} inputs, want {n}", self.name, inputs.len());
+                }
+                Ok(())
+            };
+            match self.kind {
+                KernelKind::VecAdd => {
+                    need(2)?;
+                    let (a, b) = (inputs[0].0, inputs[1].0);
+                    if a.len() != b.len() {
+                        bail!("kernel '{}': input length mismatch", self.name);
+                    }
+                    Ok(vec![a.iter().zip(b).map(|(x, y)| x + y).collect()])
+                }
+                KernelKind::Saxpy => {
+                    need(3)?;
+                    let alpha = *inputs[0].0.first().context("saxpy: empty alpha")?;
+                    let (x, y) = (inputs[1].0, inputs[2].0);
+                    if x.len() != y.len() {
+                        bail!("kernel '{}': input length mismatch", self.name);
+                    }
+                    Ok(vec![x.iter().zip(y).map(|(a, b)| alpha * a + b).collect()])
+                }
+                KernelKind::ScaleOffset => {
+                    need(3)?;
+                    let x = inputs[0].0;
+                    let s = *inputs[1].0.first().context("scale_offset: empty scale")?;
+                    let o = *inputs[2].0.first().context("scale_offset: empty offset")?;
+                    Ok(vec![x.iter().map(|v| v * s + o).collect()])
+                }
+                KernelKind::Dot => {
+                    need(2)?;
+                    let (a, b) = (inputs[0].0, inputs[1].0);
+                    if a.len() != b.len() {
+                        bail!("kernel '{}': input length mismatch", self.name);
+                    }
+                    let s: f32 = a.iter().zip(b).map(|(x, y)| x * y).sum();
+                    Ok(vec![vec![s]])
+                }
+                KernelKind::FilterSum => {
+                    need(2)?;
+                    let x = inputs[0].0;
+                    let t = *inputs[1].0.first().context("filter_sum: empty threshold")?;
+                    let mut s = 0.0f32;
+                    let mut c = 0.0f32;
+                    for &v in x {
+                        if v > t {
+                            s += v;
+                            c += 1.0;
+                        }
+                    }
+                    Ok(vec![vec![s, c]])
+                }
+                KernelKind::Jacobi2d { sweeps } => {
+                    need(1)?;
+                    let shape = inputs[0].1;
+                    let n = if shape.len() == 2 && shape[0] == shape[1] {
+                        shape[0]
+                    } else {
+                        // flat buffer: infer a square grid
+                        let n = (inputs[0].0.len() as f64).sqrt() as usize;
+                        if n * n != inputs[0].0.len() {
+                            bail!("kernel '{}': non-square grid", self.name);
+                        }
+                        n
+                    };
+                    let mut g = inputs[0].0.to_vec();
+                    for _ in 0..sweeps.max(1) {
+                        g = jacobi_sweep(&g, n);
+                    }
+                    Ok(vec![g])
+                }
+                KernelKind::MatMul => {
+                    need(2)?;
+                    let (a, sa) = inputs[0];
+                    let (b, sb) = inputs[1];
+                    let (m, k) = match sa {
+                        [m, k] => (*m, *k),
+                        _ => bail!("kernel '{}': lhs is not 2-D", self.name),
+                    };
+                    let (k2, n) = match sb {
+                        [k2, n] => (*k2, *n),
+                        _ => bail!("kernel '{}': rhs is not 2-D", self.name),
+                    };
+                    if k != k2 || a.len() != m * k || b.len() != k * n {
+                        bail!("kernel '{}': shape mismatch ({m}x{k}) x ({k2}x{n})", self.name);
+                    }
+                    let mut out = vec![0.0f32; m * n];
+                    for i in 0..m {
+                        for kk in 0..k {
+                            let av = a[i * k + kk];
+                            let row = &b[kk * n..(kk + 1) * n];
+                            let dst = &mut out[i * n..(i + 1) * n];
+                            for (d, bv) in dst.iter_mut().zip(row) {
+                                *d += av * bv;
+                            }
+                        }
+                    }
+                    Ok(vec![out])
+                }
+            }
+        }
+    }
+
+    /// Native stand-in for the PJRT CPU runtime: resolves kernels by name,
+    /// caching the resolution. The artifact path is accepted (same call
+    /// shape as the PJRT backend) but never read.
+    pub struct PjrtRuntime {
+        cache: Mutex<HashMap<String, Arc<CompiledKernel>>>,
+    }
+
+    impl PjrtRuntime {
+        /// Create the native CPU backend (infallible; kept `Result` for
+        /// call-site compatibility with the PJRT backend).
+        pub fn cpu() -> Result<Self> {
+            Ok(Self { cache: Mutex::new(HashMap::new()) })
+        }
+
+        /// Human-readable platform string.
+        pub fn platform(&self) -> String {
+            "native-cpu".to_string()
+        }
+
+        /// Resolve kernel `name` to a native implementation, caching by name.
+        pub fn load_hlo_text(&self, name: &str, _path: &Path) -> Result<Arc<CompiledKernel>> {
+            if let Some(k) = self.cache.lock().unwrap().get(name) {
+                return Ok(k.clone());
+            }
+            let kind = resolve(name)?;
+            let k = Arc::new(CompiledKernel { kind, name: name.to_string() });
+            self.cache.lock().unwrap().insert(name.to_string(), k.clone());
+            Ok(k)
+        }
+    }
 }
 
-impl PjrtRuntime {
-    /// Create a CPU PJRT client.
-    pub fn cpu() -> Result<Self> {
-        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
-        Ok(Self { client, cache: Mutex::new(HashMap::new()) })
+pub use backend::{CompiledKernel, PjrtRuntime};
+
+#[cfg(all(test, not(feature = "pjrt")))]
+mod tests {
+    use super::*;
+    use std::path::Path;
+
+    fn exec(name: &str, inputs: &[(&[f32], &[usize])]) -> Vec<Vec<f32>> {
+        let rt = PjrtRuntime::cpu().unwrap();
+        let k = rt.load_hlo_text(name, Path::new("unused")).unwrap();
+        k.execute_f32(inputs).unwrap()
     }
 
-    /// Human-readable platform string, e.g. `"cpu"`.
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
+    #[test]
+    fn vecadd_adds() {
+        let a = [1.0f32, 2.0, 3.0];
+        let b = [10.0f32, 20.0, 30.0];
+        let out = exec("vecadd_1024", &[(&a, &[3]), (&b, &[3])]);
+        assert_eq!(out, vec![vec![11.0, 22.0, 33.0]]);
     }
 
-    /// Load an HLO-text artifact and compile it, caching by `name`.
-    pub fn load_hlo_text(
-        &self,
-        name: &str,
-        path: &Path,
-    ) -> Result<std::sync::Arc<CompiledKernel>> {
-        if let Some(k) = self.cache.lock().unwrap().get(name) {
-            return Ok(k.clone());
+    #[test]
+    fn saxpy_and_scale_offset() {
+        let alpha = [2.0f32];
+        let x = [1.0f32, 2.0];
+        let y = [3.0f32, 4.0];
+        let out = exec("saxpy_1024", &[(&alpha, &[1]), (&x, &[2]), (&y, &[2])]);
+        assert_eq!(out[0], vec![5.0, 8.0]);
+        let s = [3.0f32];
+        let o = [1.0f32];
+        let out = exec("scale_offset_1024", &[(&x, &[2]), (&s, &[1]), (&o, &[1])]);
+        assert_eq!(out[0], vec![4.0, 7.0]);
+    }
+
+    #[test]
+    fn dot_and_filter_sum_reduce() {
+        let a = [1.0f32, 2.0, 3.0];
+        let b = [4.0f32, 5.0, 6.0];
+        assert_eq!(exec("dot_1024", &[(&a, &[3]), (&b, &[3])])[0], vec![32.0]);
+        let t = [1.5f32];
+        let out = exec("filter_sum_1024", &[(&a, &[3]), (&t, &[1])]);
+        assert_eq!(out[0], vec![5.0, 2.0]);
+    }
+
+    #[test]
+    fn jacobi_interior_average_boundary_passthrough() {
+        let n = 4usize;
+        let g: Vec<f32> = (0..n * n).map(|i| i as f32).collect();
+        let out = exec("jacobi2d_64", &[(&g, &[n, n])]);
+        let o = &out[0];
+        for j in 0..n {
+            assert_eq!(o[j], g[j]);
+            assert_eq!(o[(n - 1) * n + j], g[(n - 1) * n + j]);
         }
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().context("artifact path not utf-8")?,
-        )
-        .with_context(|| format!("parse HLO text {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("PJRT compile kernel '{name}'"))?;
-        let k = std::sync::Arc::new(CompiledKernel { exe, name: name.to_string() });
-        self.cache.lock().unwrap().insert(name.to_string(), k.clone());
-        Ok(k)
+        let want = 0.25 * (g[1] + g[9] + g[4] + g[6]);
+        assert!((o[5] - want).abs() < 1e-6);
+    }
+
+    #[test]
+    fn jacobi_x4_is_four_sweeps() {
+        let n = 4usize;
+        let g: Vec<f32> = (0..n * n).map(|i| (i as f32).sin()).collect();
+        let one = exec("jacobi2d_64", &[(&g, &[n, n])]);
+        let twice = exec("jacobi2d_64", &[(&one[0], &[n, n])]);
+        let thrice = exec("jacobi2d_64", &[(&twice[0], &[n, n])]);
+        let four = exec("jacobi2d_64", &[(&thrice[0], &[n, n])]);
+        let fused = exec("jacobi2d_64_x4", &[(&g, &[n, n])]);
+        for (a, b) in fused[0].iter().zip(&four[0]) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn matmul_matches_naive() {
+        let a = [1.0f32, 2.0, 3.0, 4.0]; // 2x2
+        let b = [5.0f32, 6.0, 7.0, 8.0];
+        let out = exec("matmul_128", &[(&a, &[2, 2]), (&b, &[2, 2])]);
+        assert_eq!(out[0], vec![19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn unknown_family_rejected() {
+        let rt = PjrtRuntime::cpu().unwrap();
+        assert!(rt.load_hlo_text("fancy_fft_1024", Path::new("unused")).is_err());
     }
 }

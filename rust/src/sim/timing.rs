@@ -45,6 +45,23 @@ impl TimingModel {
         let spec = &plat.pcs[pc_id as usize];
         beats as f64 / (spec.freq_mhz * 1e6)
     }
+
+    /// Seconds per kernel-clock cycle at the (derated) effective clock.
+    pub fn cycle_s(&self) -> f64 {
+        1.0 / (self.effective_mhz * 1e6)
+    }
+
+    /// Steady-state service time for one `elems`-element chunk through an
+    /// II-pipelined CU (no fill latency — that is charged once per job by
+    /// the discrete-event simulator).
+    pub fn cu_service_s(&self, ii: u64, elems: u64) -> f64 {
+        (ii.max(1) * elems) as f64 * self.cycle_s()
+    }
+
+    /// Pipeline-fill time: `latency` cycles at the effective clock.
+    pub fn cu_fill_s(&self, latency: u64) -> f64 {
+        latency as f64 * self.cycle_s()
+    }
 }
 
 #[cfg(test)]
@@ -85,6 +102,18 @@ mod tests {
         assert!(slow.effective_mhz < fast.effective_mhz);
         let off = TimingModel::new(&plat, 0.98, false);
         assert_eq!(off.effective_mhz, off.kernel_mhz);
+    }
+
+    #[test]
+    fn cu_service_helpers_match_cycle_math() {
+        let plat = builtin("u280").unwrap();
+        let t = TimingModel::new(&plat, 0.1, false);
+        assert!((t.cycle_s() - 1.0 / 300e6).abs() < 1e-18);
+        // II=2, 64 elems -> 128 cycles
+        assert!((t.cu_service_s(2, 64) - 128.0 / 300e6).abs() < 1e-15);
+        // II=0 clamps to 1
+        assert!((t.cu_service_s(0, 64) - 64.0 / 300e6).abs() < 1e-15);
+        assert!((t.cu_fill_s(300) - 1e-6).abs() < 1e-15);
     }
 
     #[test]

@@ -157,3 +157,60 @@ fn unknown_pass_is_rejected() {
     assert!(!out.status.success());
     assert!(String::from_utf8_lossy(&out.stderr).contains("unknown pass"));
 }
+
+#[test]
+fn des_replays_scenarios() {
+    let dir = tmpdir("des");
+    let design = write_design(&dir);
+    let out = olympus()
+        .args([
+            "des",
+            design.to_str().unwrap(),
+            "--pipeline",
+            "sanitize, iris, channel-reassign",
+            "--scenario",
+            "bursty:100000:0.0001:0.0004:8",
+            "--seed",
+            "7",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let s = String::from_utf8_lossy(&out.stdout);
+    assert!(s.contains("des report"), "{s}");
+    assert!(s.contains("jobs 8/8 completed"), "{s}");
+    assert!(s.contains("p99"), "{s}");
+}
+
+#[test]
+fn dse_with_des_score_objective_prints_des_columns() {
+    let dir = tmpdir("dse_des");
+    let design = write_design(&dir);
+    let out = olympus()
+        .args([
+            "dse",
+            design.to_str().unwrap(),
+            "--objective",
+            "des-score",
+            "--scenario",
+            "closed:2",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let s = String::from_utf8_lossy(&out.stdout);
+    assert!(s.contains("des-makespan"), "{s}");
+    assert!(s.contains("best: "), "{s}");
+}
+
+#[test]
+fn bad_scenario_spec_rejected() {
+    let dir = tmpdir("badsc");
+    let design = write_design(&dir);
+    let out = olympus()
+        .args(["des", design.to_str().unwrap(), "--scenario", "warp:9"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("bad scenario"));
+}
