@@ -70,6 +70,7 @@ fn main() {
                 DesConfig::default(),
             ),
             threads,
+            ..DseOptions::default()
         };
         b.bench_with_throughput(&format!("dse_des_score_{threads}_threads"), || {
             let t0 = Instant::now();

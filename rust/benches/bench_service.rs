@@ -1,0 +1,109 @@
+//! Service benchmarks: cold-vs-warm DSE request latency through the
+//! content-addressed cache, and sustained requests/sec with 8 concurrent
+//! clients hammering one daemon.
+//!
+//! Run: `cargo bench --bench bench_service` (BENCH_FAST=1 for a quick pass).
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+use olympus::dialect::build::fig4a_module;
+use olympus::ir::print_module;
+use olympus::service::{ServeOptions, Server};
+use olympus::util::benchkit::Bench;
+use olympus::util::Json;
+
+fn request_line(seed: u64) -> String {
+    Json::obj(vec![
+        ("cmd", "dse".into()),
+        ("ir", print_module(&fig4a_module()).into()),
+        ("platform", "u280".into()),
+        ("objective", "des-score".into()),
+        ("scenario", "closed:2".into()),
+        ("seed", seed.into()),
+        ("factors", vec![2u64, 4].into()),
+    ])
+    .to_string()
+}
+
+fn roundtrip(addr: SocketAddr, line: &str) -> Json {
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    stream.write_all(line.as_bytes()).unwrap();
+    stream.write_all(b"\n").unwrap();
+    stream.flush().unwrap();
+    let mut resp = String::new();
+    BufReader::new(stream).read_line(&mut resp).unwrap();
+    Json::parse(resp.trim()).expect("valid response")
+}
+
+fn main() {
+    let server = Server::bind(
+        "127.0.0.1:0",
+        ServeOptions { workers: 8, ..ServeOptions::default() },
+    )
+    .expect("bind test server");
+    let addr = server.addr();
+
+    let mut b = Bench::new("service");
+
+    // every iteration a fresh seed -> a fresh content address -> cold path
+    let cold_seed = AtomicU64::new(1_000);
+    b.bench("dse_request_cold", || {
+        let line = request_line(cold_seed.fetch_add(1, Ordering::Relaxed));
+        let v = roundtrip(addr, &line);
+        assert_eq!(v.get("cached"), &Json::Bool(false), "{v}");
+    });
+
+    // fixed seed, primed once -> every timed iteration is a cache hit
+    let warm_line = request_line(42);
+    roundtrip(addr, &warm_line);
+    b.bench("dse_request_warm", || {
+        let v = roundtrip(addr, &warm_line);
+        assert_eq!(v.get("cached"), &Json::Bool(true), "{v}");
+    });
+
+    // headline ratio for the acceptance criterion (medians are in the
+    // table; this is the direct A/B on one connection)
+    let t0 = Instant::now();
+    let cold = roundtrip(addr, &request_line(7_777_777));
+    let cold_t = t0.elapsed();
+    assert_eq!(cold.get("cached"), &Json::Bool(false));
+    let t1 = Instant::now();
+    let warm = roundtrip(addr, &request_line(7_777_777));
+    let warm_t = t1.elapsed();
+    assert_eq!(warm.get("cached"), &Json::Bool(true));
+    println!(
+        "COLD {:?} vs WARM {:?} -> {:.1}x speedup",
+        cold_t,
+        warm_t,
+        cold_t.as_secs_f64() / warm_t.as_secs_f64().max(1e-9)
+    );
+
+    // 8 concurrent clients, mixed 4-key warm working set: sustained rps
+    b.bench_with_throughput("8_clients_warm_rps", || {
+        const CLIENTS: usize = 8;
+        const PER_CLIENT: usize = 25;
+        // prime the working set
+        for seed in 0..4u64 {
+            roundtrip(addr, &request_line(seed));
+        }
+        let t0 = Instant::now();
+        std::thread::scope(|scope| {
+            for c in 0..CLIENTS {
+                scope.spawn(move || {
+                    for i in 0..PER_CLIENT {
+                        let v = roundtrip(addr, &request_line(((c + i) % 4) as u64));
+                        assert_eq!(v.get("ok"), &Json::Bool(true));
+                    }
+                });
+            }
+        });
+        let secs = t0.elapsed().as_secs_f64();
+        Some(((CLIENTS * PER_CLIENT) as f64 / secs, "req/s".to_string()))
+    });
+
+    b.run();
+    server.shutdown();
+}

@@ -1,14 +1,17 @@
 //! End-to-end flow (paper Fig 3).
 
+use std::sync::Arc;
+
 use anyhow::Result;
 
 use crate::analysis::{analyze_bandwidth, analyze_resources, BandwidthReport, Dfg, ResourceReport};
 use crate::des::{simulate, DesConfig, DesReport, WorkloadScenario};
-use crate::ir::Module;
+use crate::ir::{module_fingerprint, Module};
 use crate::lower::{build_architecture, emit_host_driver, emit_verilog, emit_vitis_cfg, Architecture};
 use crate::passes::manager::{parse_pipeline, PassContext, PassRecord};
-use crate::passes::{run_dse_with, DseObjective, DseOptions, DseReport as DseTable};
+use crate::passes::{run_dse_with, CandidateCache, DseObjective, DseOptions, DseReport as DseTable};
 use crate::platform::PlatformSpec;
+use crate::util::ContentHash;
 
 /// Flow configuration.
 pub struct Flow {
@@ -24,6 +27,13 @@ pub struct Flow {
     pub scenario: Option<WorkloadScenario>,
     /// Engine knobs for that replay.
     pub des_config: DesConfig,
+    /// Worker threads for DSE candidate evaluation (0 = all cores). The
+    /// result is bit-identical for any value; this only bounds parallelism
+    /// (`olympus dse --jobs N`, and the serving daemon pins it per job).
+    pub jobs: usize,
+    /// Content-addressed candidate-evaluation memo shared across flow runs
+    /// (wired in by the service; `None` = evaluate everything).
+    pub cache: Option<Arc<CandidateCache>>,
 }
 
 /// Everything the flow produces (the purple boxes of Fig 3).
@@ -59,6 +69,8 @@ impl Flow {
             objective: DseObjective::Analytic,
             scenario: None,
             des_config: DesConfig::default(),
+            jobs: 0,
+            cache: None,
         }
     }
 
@@ -77,6 +89,40 @@ impl Flow {
         self
     }
 
+    pub fn with_jobs(mut self, jobs: usize) -> Self {
+        self.jobs = jobs;
+        self
+    }
+
+    pub fn with_cache(mut self, cache: Arc<CandidateCache>) -> Self {
+        self.cache = Some(cache);
+        self
+    }
+
+    /// Content-addressed key of the *whole* flow result for `input`: covers
+    /// the module IR, platform spec, pipeline-or-objective, scenario and
+    /// engine seed — everything [`Flow::run`] output depends on, and nothing
+    /// it does not (worker/thread counts deliberately excluded: results are
+    /// bit-identical regardless). The service keys its response cache on
+    /// this.
+    pub fn cache_key(&self, input: &Module) -> ContentHash {
+        let route = match &self.pipeline {
+            Some(p) => format!("pipeline:{p}"),
+            None => format!("dse:{:?}:factors={:?}", self.objective, self.dse_factors),
+        };
+        let replay = match &self.scenario {
+            Some(sc) => format!("{sc:?}:{:?}", self.des_config),
+            None => String::new(),
+        };
+        ContentHash::of_parts(&[
+            "olympus-flow-v1",
+            &module_fingerprint(input),
+            &self.platform.fingerprint(),
+            &route,
+            &replay,
+        ])
+    }
+
     /// Run optimize -> analyze -> lower -> emit (-> simulate).
     pub fn run(&self, input: Module, app_name: &str) -> Result<FlowResult> {
         let mut module = input;
@@ -92,7 +138,8 @@ impl Flow {
                 let opts = DseOptions {
                     factors: self.dse_factors.clone(),
                     objective: self.objective.clone(),
-                    threads: 0,
+                    threads: self.jobs,
+                    cache: self.cache.clone(),
                 };
                 let rep = run_dse_with(&module, &self.platform, &opts)?;
                 module = rep.best.clone();

@@ -170,6 +170,7 @@ mod tests {
                 DesConfig::default(),
             ),
             threads: 1,
+            ..DseOptions::default()
         };
         let rep = run_dse_with(&fig4a_module(), &builtin("u280").unwrap(), &opts).unwrap();
         let t = render_dse_table(&rep);

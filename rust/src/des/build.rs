@@ -86,6 +86,73 @@ pub struct DesNet {
     pub fifo_job_elems: Vec<u64>,
 }
 
+/// Replica index encoded in a channel/array name by the replicate pass
+/// (`ch0#r2` -> 2; no `#r` suffix -> 0, the original).
+fn replica_index(name: &str) -> u64 {
+    match name.rfind("#r") {
+        Some(i) => {
+            let digits: String =
+                name[i + 2..].chars().take_while(|c| c.is_ascii_digit()).collect();
+            digits.parse().unwrap_or(0)
+        }
+        None => 0,
+    }
+}
+
+/// Replica `r`'s share of `total` job elements under `n` replicas (shares
+/// differ by at most one and sum to `total`).
+fn stripe_share(total: u64, r: u64, n: u64) -> u64 {
+    total / n + u64::from(r < total % n)
+}
+
+impl DesNet {
+    /// Replica-aware job striping: when the replicate pass cloned the DFG
+    /// (`#rN` channel suffixes), one arriving job is split across the
+    /// replicas instead of being processed in full by every copy — replica
+    /// `r` carries `1/N` of each FIFO-fed stream (PLM/AXI side traffic stays
+    /// full-size: every clone still loads its own configuration). This is
+    /// what credits `replicate` with *throughput* in `des-score` rather than
+    /// just charging it contention. Returns `None` when the net has no
+    /// replicas (nothing to stripe).
+    pub fn striped(&self) -> Option<DesNet> {
+        let n = self
+            .movers
+            .iter()
+            .flat_map(|m| m.flows.iter())
+            .filter(|f| f.fifo.is_some())
+            .map(|f| replica_index(&f.base))
+            .max()
+            .map(|max| max + 1)
+            .unwrap_or(1);
+        if n < 2 {
+            return None;
+        }
+        let mut net = self.clone();
+        for mv in net.movers.iter_mut() {
+            for fl in mv.flows.iter_mut() {
+                if fl.fifo.is_some() {
+                    fl.elems_per_job = stripe_share(fl.elems_per_job, replica_index(&fl.base), n);
+                }
+            }
+        }
+        // re-derive the per-FIFO job payload hints from the striped flows
+        net.fifo_job_elems = net.fifos.iter().map(|f| f.cap_elems).collect();
+        for mv in &net.movers {
+            for fl in &mv.flows {
+                if let Some(fi) = fl.fifo {
+                    net.fifo_job_elems[fi] = fl.elems_per_job;
+                }
+            }
+        }
+        for cu in net.cus.iter_mut() {
+            if let Some(&f) = cu.out_fifos.first() {
+                cu.out_elems_per_job = net.fifo_job_elems[f].max(1);
+            }
+        }
+        Some(net)
+    }
+}
+
 /// f32 elements per physical word of `width_bits`.
 fn elems_per_word(width_bits: u32) -> u64 {
     (width_bits as u64 / 32).max(1)
@@ -305,5 +372,63 @@ mod tests {
         for f in &net.fifos {
             assert_eq!(f.cap_elems, 1024);
         }
+    }
+
+    #[test]
+    fn replica_free_net_does_not_stripe() {
+        assert!(net_for("sanitize").striped().is_none());
+        assert!(net_for("sanitize, iris, channel-reassign").striped().is_none());
+    }
+
+    #[test]
+    fn striping_splits_job_elems_across_replicas_conserving_totals() {
+        let net = net_for("sanitize, replicate{factor=2}, channel-reassign");
+        let striped = net.striped().expect("2 replicas to stripe");
+        assert_eq!(striped.movers.len(), net.movers.len());
+        // every fifo-fed flow halves (1024 splits as 512 + 512)...
+        for (mv, smv) in net.movers.iter().zip(&striped.movers) {
+            for (fl, sfl) in mv.flows.iter().zip(&smv.flows) {
+                if fl.fifo.is_some() {
+                    assert_eq!(sfl.elems_per_job, 512, "{}", mv.name);
+                } else {
+                    assert_eq!(sfl.elems_per_job, fl.elems_per_job, "{}", mv.name);
+                }
+            }
+        }
+        // ...so per-replica-group totals are conserved
+        let total: u64 = net
+            .movers
+            .iter()
+            .filter(|m| m.read)
+            .map(|m| m.fifo_elems_per_job())
+            .sum();
+        let striped_total: u64 = striped
+            .movers
+            .iter()
+            .filter(|m| m.read)
+            .map(|m| m.fifo_elems_per_job())
+            .sum();
+        assert_eq!(striped_total * 2, total);
+    }
+
+    #[test]
+    fn stripe_shares_differ_by_at_most_one_and_sum() {
+        for total in [0u64, 1, 7, 1024, 1025] {
+            for n in [2u64, 3, 4, 16] {
+                let shares: Vec<u64> = (0..n).map(|r| stripe_share(total, r, n)).collect();
+                assert_eq!(shares.iter().sum::<u64>(), total, "total {total} n {n}");
+                let mx = *shares.iter().max().unwrap();
+                let mn = *shares.iter().min().unwrap();
+                assert!(mx - mn <= 1, "{shares:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn replica_index_parses_suffixes() {
+        assert_eq!(replica_index("ch0"), 0);
+        assert_eq!(replica_index("ch0#r1"), 1);
+        assert_eq!(replica_index("ch0#r12"), 12);
+        assert_eq!(replica_index("bus#r3"), 3);
     }
 }

@@ -27,10 +27,23 @@ use super::metrics::{percentile, DepthTrack, DesReport, NodeKind, NodeMetrics};
 use super::scenario::WorkloadScenario;
 use super::time::{TimePoint, TimeSpan, PS_PER_S};
 
+/// Per-chunk CU service-time distribution.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ServiceDist {
+    /// Exactly `II x elems` cycles per chunk (an HLS pipeline's steady
+    /// state; the default).
+    Deterministic,
+    /// Exponentially distributed with the deterministic value as its mean
+    /// (memoryless service — used by the M/M/1 calibration tests and for
+    /// modeling data-dependent kernels).
+    Exponential,
+}
+
 /// Engine knobs (separate from the workload scenario).
 #[derive(Debug, Clone)]
 pub struct DesConfig {
-    /// RNG seed for the arrival process.
+    /// RNG seed for the arrival process (and service draws, when the
+    /// service distribution is stochastic).
     pub seed: u64,
     /// Transfer/service granularity in elements. Smaller = finer-grained
     /// contention modeling, more events.
@@ -42,6 +55,13 @@ pub struct DesConfig {
     pub congestion_model: bool,
     /// Hard cap on dispatched events (runaway guard).
     pub max_events: u64,
+    /// Stripe each job's stream payload across DFG replicas
+    /// ([`DesNet::striped`]) instead of replaying the full job on every
+    /// copy. On by default: this is what makes `replicate` a throughput
+    /// play under `des-score`.
+    pub stripe_replicas: bool,
+    /// CU service-time distribution.
+    pub service_dist: ServiceDist,
 }
 
 impl Default for DesConfig {
@@ -52,6 +72,8 @@ impl Default for DesConfig {
             utilization: 0.0,
             congestion_model: true,
             max_events: 20_000_000,
+            stripe_replicas: true,
+            service_dist: ServiceDist::Deterministic,
         }
     }
 }
@@ -150,6 +172,9 @@ struct Engine<'a> {
     last_completion: Option<TimePoint>,
     /// (mover idx, fifo-fed elems per job) for write movers.
     write_quota: Vec<(usize, u64)>,
+    /// Service draws for stochastic distributions (decorrelated from the
+    /// arrival stream so scenario and service noise are independent).
+    service_rng: Rng,
 }
 
 /// Simulate `arch` under `scenario`. The report is a pure function of the
@@ -169,6 +194,20 @@ pub fn simulate_network(
     scenario: &WorkloadScenario,
     cfg: &DesConfig,
 ) -> Result<DesReport> {
+    // replica-aware job striping (no-op for replica-free nets)
+    let striped_net;
+    let net = if cfg.stripe_replicas {
+        match net.striped() {
+            Some(s) => {
+                striped_net = s;
+                &striped_net
+            }
+            None => net,
+        }
+    } else {
+        net
+    };
+
     let mut rng = Rng::new(cfg.seed);
     let arrivals = scenario.arrival_times(&mut rng);
 
@@ -230,6 +269,7 @@ pub fn simulate_network(
         job_latency: Vec::new(),
         last_completion: None,
         write_quota,
+        service_rng: Rng::new(cfg.seed.rotate_left(17) ^ 0xD15E_A5ED_5EED_C0DE),
     };
 
     for (j, t) in eng.arrivals.clone().iter().enumerate() {
@@ -547,6 +587,11 @@ impl<'a> Engine<'a> {
             self.fifos[f].reserved += n;
         }
         let mut service_ps = n as f64 * self.service_ps_per_elem[ci];
+        if self.cfg.service_dist == ServiceDist::Exponential {
+            // Exp(mean = deterministic service): -mean * ln(1 - U), U in [0,1)
+            let u = self.service_rng.f64();
+            service_ps *= -(1.0 - u).ln();
+        }
         if self.cus[ci].fills_charged < self.released {
             service_ps += self.fill_ps[ci];
             self.cus[ci].fills_charged += 1;

@@ -53,6 +53,25 @@ impl WorkloadScenario {
         }
     }
 
+    /// Parse a CLI/protocol scenario spec: `closed:N` | `poisson:HZ:N` |
+    /// `bursty:HZ:ON:OFF:N`.
+    pub fn parse(spec: &str) -> Result<WorkloadScenario, String> {
+        let parts: Vec<&str> = spec.split(':').collect();
+        let num = |s: &str| -> Result<f64, String> {
+            s.parse::<f64>().map_err(|_| format!("bad number '{s}' in scenario '{spec}'"))
+        };
+        match parts.as_slice() {
+            ["closed", n] => Ok(WorkloadScenario::closed_loop(num(n)? as u64)),
+            ["poisson", hz, n] => Ok(WorkloadScenario::poisson(num(hz)?, num(n)? as u64)),
+            ["bursty", hz, on, off, n] => {
+                Ok(WorkloadScenario::bursty(num(hz)?, num(on)?, num(off)?, num(n)? as u64))
+            }
+            _ => Err(format!(
+                "bad scenario '{spec}' (want closed:N | poisson:HZ:N | bursty:HZ:ON:OFF:N)"
+            )),
+        }
+    }
+
     pub fn jobs(&self) -> u64 {
         match self.arrivals {
             ArrivalProcess::ClosedLoopBatch { jobs } => jobs,
@@ -145,6 +164,22 @@ mod tests {
             let phase = t.as_secs_f64() % 0.010;
             assert!(phase <= 0.001 + 1e-9, "arrival in off window at phase {phase}");
         }
+    }
+
+    #[test]
+    fn parse_specs_round_trip() {
+        assert_eq!(WorkloadScenario::parse("closed:4").unwrap(), WorkloadScenario::closed_loop(4));
+        assert_eq!(
+            WorkloadScenario::parse("poisson:1000:20").unwrap(),
+            WorkloadScenario::poisson(1000.0, 20)
+        );
+        assert_eq!(
+            WorkloadScenario::parse("bursty:50000:0.0002:0.0008:20").unwrap(),
+            WorkloadScenario::bursty(50_000.0, 0.0002, 0.0008, 20)
+        );
+        assert!(WorkloadScenario::parse("closed").is_err());
+        assert!(WorkloadScenario::parse("poisson:x:20").is_err());
+        assert!(WorkloadScenario::parse("weird:1").is_err());
     }
 
     #[test]

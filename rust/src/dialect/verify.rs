@@ -1,6 +1,6 @@
 //! Olympus dialect verifier: rules beyond structural SSA validity.
 
-use thiserror::Error;
+use std::fmt;
 
 use crate::ir::{Module, OpId, Type};
 
@@ -8,33 +8,58 @@ use super::layout::Layout;
 use super::ops::{ChannelView, ParamType, PcView, OP_KERNEL, OP_MAKE_CHANNEL, OP_PC, OP_SUPER_NODE};
 
 /// Dialect-level diagnostic.
-#[derive(Debug, Error, PartialEq)]
+#[derive(Debug, PartialEq)]
 pub enum DialectError {
-    #[error("make_channel {0:?}: missing/invalid encapsulatedType (must be iN)")]
     BadEncapsulatedType(OpId),
-    #[error("make_channel {0:?}: paramType '{1}' is not stream|small|complex")]
     BadParamType(OpId, String),
-    #[error("make_channel {0:?}: depth must be >= 1")]
     BadDepth(OpId),
-    #[error("make_channel {0:?}: result type {1} disagrees with encapsulatedType {2}")]
     ChannelTypeMismatch(OpId, String, String),
-    #[error("make_channel {0:?}: layout attribute malformed or inconsistent")]
     BadLayout(OpId),
-    #[error("kernel {0:?}: missing callee")]
     MissingCallee(OpId),
-    #[error("kernel {0:?}: operand_segment_sizes does not cover all operands")]
     BadSegments(OpId),
-    #[error("kernel {0:?}: operand {1} is not a channel value")]
     NonChannelOperand(OpId, usize),
-    #[error("pc {0:?}: must have exactly one channel operand")]
     PcArity(OpId),
-    #[error("pc {0:?}: operand is not a global-memory channel")]
     PcOnInternalChannel(OpId),
-    #[error("pc {0:?}: negative id")]
     PcBadId(OpId),
-    #[error("unknown olympus op '{1}' ({0:?})")]
     UnknownOp(OpId, String),
 }
+
+impl fmt::Display for DialectError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        use DialectError::*;
+        match self {
+            BadEncapsulatedType(id) => {
+                write!(f, "make_channel {id:?}: missing/invalid encapsulatedType (must be iN)")
+            }
+            BadParamType(id, pt) => {
+                write!(f, "make_channel {id:?}: paramType '{pt}' is not stream|small|complex")
+            }
+            BadDepth(id) => write!(f, "make_channel {id:?}: depth must be >= 1"),
+            ChannelTypeMismatch(id, got, want) => write!(
+                f,
+                "make_channel {id:?}: result type {got} disagrees with encapsulatedType {want}"
+            ),
+            BadLayout(id) => {
+                write!(f, "make_channel {id:?}: layout attribute malformed or inconsistent")
+            }
+            MissingCallee(id) => write!(f, "kernel {id:?}: missing callee"),
+            BadSegments(id) => {
+                write!(f, "kernel {id:?}: operand_segment_sizes does not cover all operands")
+            }
+            NonChannelOperand(id, i) => {
+                write!(f, "kernel {id:?}: operand {i} is not a channel value")
+            }
+            PcArity(id) => write!(f, "pc {id:?}: must have exactly one channel operand"),
+            PcOnInternalChannel(id) => {
+                write!(f, "pc {id:?}: operand is not a global-memory channel")
+            }
+            PcBadId(id) => write!(f, "pc {id:?}: negative id"),
+            UnknownOp(id, name) => write!(f, "unknown olympus op '{name}' ({id:?})"),
+        }
+    }
+}
+
+impl std::error::Error for DialectError {}
 
 /// Check every Olympus op in `m`; returns all diagnostics (empty == ok).
 ///

@@ -31,7 +31,7 @@ pub use builder::OpBuilder;
 pub use module::{Module, OpId};
 pub use op::{Operation, Region};
 pub use parser::{parse_module, ParseError};
-pub use printer::print_module;
+pub use printer::{module_fingerprint, print_module};
 pub use types::{FloatKind, Type};
 pub use value::{ValueDef, ValueId, ValueInfo};
 pub use verifier::{verify_module, VerifyError};

@@ -18,8 +18,7 @@
 //! ```
 
 use std::collections::HashMap;
-
-use thiserror::Error;
+use std::fmt;
 
 use crate::ir::attr::{AttrMap, Attribute};
 use crate::ir::module::{Module, OpId};
@@ -30,13 +29,20 @@ use crate::ir::value::{ValueDef, ValueId};
 use super::lexer::{Lexer, Token, TokenKind};
 
 /// Parse error with location.
-#[derive(Debug, Error)]
-#[error("parse error at {line}:{col}: {msg}")]
+#[derive(Debug)]
 pub struct ParseError {
     pub line: usize,
     pub col: usize,
     pub msg: String,
 }
+
+impl fmt::Display for ParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "parse error at {}:{}: {}", self.line, self.col, self.msg)
+    }
+}
+
+impl std::error::Error for ParseError {}
 
 struct Parser<'a> {
     lx: Lexer<'a>,

@@ -90,6 +90,15 @@ pub fn print_module(m: &Module) -> String {
     p.out
 }
 
+/// Stable content fingerprint of a module: the printed canonical form
+/// (values renumbered in program order, attributes sorted) hashed with the
+/// process-independent [`crate::util::ContentHash`]. Structurally equal
+/// modules fingerprint identically; this is the module component of the
+/// service's content-addressed cache keys.
+pub fn module_fingerprint(m: &Module) -> String {
+    crate::util::ContentHash::of_parts(&["olympus-ir-v1", &print_module(m)]).to_hex()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -2,26 +2,42 @@
 //! dialect. Dialect-specific rules live in `dialect::verify`.
 
 use std::collections::HashSet;
-
-use thiserror::Error;
+use std::fmt;
 
 use super::module::{Module, OpId};
 use super::value::ValueDef;
 
 /// A verifier diagnostic.
-#[derive(Debug, Error, PartialEq)]
+#[derive(Debug, PartialEq)]
 pub enum VerifyError {
-    #[error("op {0:?} ('{1}') operand {2} refers to an erased/unknown defining op")]
     DanglingOperand(OpId, String, usize),
-    #[error("op {0:?} ('{1}') result {2} does not point back to the op")]
     BadResultDef(OpId, String, usize),
-    #[error("value {0} is detached (no defining op)")]
     DetachedValue(u32),
-    #[error("op {0:?} appears twice in op lists")]
     DuplicateOp(OpId),
-    #[error("op {0:?} ('{1}') uses value defined *after* it in program order")]
     UseBeforeDef(OpId, String),
 }
+
+impl fmt::Display for VerifyError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            VerifyError::DanglingOperand(id, name, i) => write!(
+                f,
+                "op {id:?} ('{name}') operand {i} refers to an erased/unknown defining op"
+            ),
+            VerifyError::BadResultDef(id, name, i) => {
+                write!(f, "op {id:?} ('{name}') result {i} does not point back to the op")
+            }
+            VerifyError::DetachedValue(v) => write!(f, "value {v} is detached (no defining op)"),
+            VerifyError::DuplicateOp(id) => write!(f, "op {id:?} appears twice in op lists"),
+            VerifyError::UseBeforeDef(id, name) => write!(
+                f,
+                "op {id:?} ('{name}') uses value defined *after* it in program order"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for VerifyError {}
 
 /// Verify structural invariants; returns all violations (empty == ok).
 pub fn verify_module(m: &Module) -> Vec<VerifyError> {

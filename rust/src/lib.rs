@@ -18,7 +18,10 @@
 //!   architectures under contention + workload scenarios (the `des-score`
 //!   DSE objective);
 //! * a PJRT runtime ([`runtime`]) that loads AOT-compiled JAX/Pallas kernels
-//!   (HLO text in `artifacts/`) and executes them for kernel compute units.
+//!   (HLO text in `artifacts/`) and executes them for kernel compute units;
+//! * a concurrent DSE job service ([`service`]): `olympus serve` daemon with
+//!   a newline-delimited-JSON TCP protocol, a std-thread worker pool and a
+//!   content-addressed single-flight evaluation cache.
 //!
 //! See `DESIGN.md` for the paper → module map.
 
@@ -34,6 +37,7 @@ pub mod mnemosyne;
 pub mod passes;
 pub mod platform;
 pub mod runtime;
+pub mod service;
 pub mod sim;
 pub mod util;
 pub mod workload;

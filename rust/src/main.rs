@@ -3,10 +3,13 @@
 //! ```text
 //! olympus platforms
 //! olympus opt   <file.mlir> [--platform u280] [--pipeline "sanitize,iris"]
-//! olympus dse   <file.mlir> [--platform u280] [--objective analytic|des-score]
+//! olympus dse   <file.mlir> [--platform u280] [--objective analytic|des-score] [--jobs N]
 //! olympus des   <file.mlir> [--platform u280] [--pipeline ...] [--scenario SPEC] [--seed N]
 //! olympus lower <file.mlir> [--platform u280] [--pipeline ...] [--out DIR]
 //! olympus run   <file.mlir> [--platform u280] [--pipeline ...] [--artifacts DIR] [--seed N]
+//! olympus serve [--addr 127.0.0.1:7878] [--jobs N] [--cache-capacity N]
+//! olympus submit <file.mlir> [--addr ...] [--cmd dse|des|flow] [--platform ...] [...]
+//! olympus cache-stats [--addr ...]
 //! ```
 //!
 //! `des` replays the lowered design through the discrete-event queueing
@@ -14,8 +17,12 @@
 //! `bursty:<hz>:<on_s>:<off_s>:<jobs>` (default `closed:4`).
 //!
 //! `run` executes the lowered design on the platform simulator with seeded
-//! random host buffers and prints the simulation report. (clap is not
-//! vendored in this offline build; argument parsing is hand-rolled.)
+//! random host buffers and prints the simulation report.
+//!
+//! `serve` runs the long-lived DSE job service (newline-delimited JSON over
+//! TCP, worker pool, content-addressed evaluation cache — see README
+//! "Running as a service"); `submit` is the matching thin client. (clap is
+//! not vendored in this offline build; argument parsing is hand-rolled.)
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
@@ -29,7 +36,7 @@ use olympus::host::Device;
 use olympus::ir::{parse_module, print_module, Module};
 use olympus::platform::{builtin, builtin_names, PlatformSpec};
 use olympus::runtime::{KernelRegistry, PjrtRuntime};
-use olympus::util::Rng;
+use olympus::util::{Json, Rng};
 
 struct Args {
     positional: Vec<String>,
@@ -85,29 +92,17 @@ fn load_module(path: &str) -> Result<Module> {
 
 fn usage() -> ! {
     eprintln!(
-        "usage: olympus <platforms|opt|dse|des|lower|run> [input.mlir] \
+        "usage: olympus <platforms|opt|dse|des|lower|run|serve|submit|cache-stats> [input.mlir] \
          [--platform NAME|file.json] [--pipeline P] [--objective analytic|des-score] \
          [--scenario closed:N|poisson:HZ:N|bursty:HZ:ON:OFF:N] [--out DIR] \
-         [--artifacts DIR] [--seed N]"
+         [--artifacts DIR] [--seed N] [--jobs N] [--addr HOST:PORT] [--factors 2,4]"
     );
     std::process::exit(2)
 }
 
 /// Parse a `--scenario` spec (see the crate docs above).
 fn parse_scenario(spec: &str) -> Result<olympus::des::WorkloadScenario> {
-    use olympus::des::WorkloadScenario;
-    let parts: Vec<&str> = spec.split(':').collect();
-    let num = |s: &str| -> Result<f64> {
-        s.parse::<f64>().with_context(|| format!("bad number '{s}' in scenario '{spec}'"))
-    };
-    match parts.as_slice() {
-        ["closed", n] => Ok(WorkloadScenario::closed_loop(num(n)? as u64)),
-        ["poisson", hz, n] => Ok(WorkloadScenario::poisson(num(hz)?, num(n)? as u64)),
-        ["bursty", hz, on, off, n] => {
-            Ok(WorkloadScenario::bursty(num(hz)?, num(on)?, num(off)?, num(n)? as u64))
-        }
-        _ => bail!("bad scenario '{spec}' (want closed:N | poisson:HZ:N | bursty:HZ:ON:OFF:N)"),
-    }
+    olympus::des::WorkloadScenario::parse(spec).map_err(|e| anyhow::anyhow!(e))
 }
 
 /// Shared `--scenario` / `--seed` handling for the DES-facing commands.
@@ -168,6 +163,15 @@ fn main() -> Result<()> {
             let m = load_module(input)?;
             let plat = load_platform(&args)?;
             let mut flow = olympus::coordinator::Flow::new(plat);
+            if let Some(jobs) = args.flags.get("jobs") {
+                flow = flow.with_jobs(jobs.parse().context("--jobs wants a thread count")?);
+            }
+            if let Some(fs) = args.flags.get("factors") {
+                flow.dse_factors = fs
+                    .split(',')
+                    .map(|s| s.trim().parse::<u64>().context("--factors wants e.g. 2,4"))
+                    .collect::<Result<_>>()?;
+            }
             if args.flags.get("objective").map(|s| s.as_str()) == Some("des-score") {
                 let (scenario, cfg) = scenario_and_config(&args)?;
                 flow = flow
@@ -285,6 +289,110 @@ fn main() -> Result<()> {
             }
             Ok(())
         }
+        "serve" => {
+            use olympus::service::{ServeOptions, Server};
+            let addr =
+                args.flags.get("addr").cloned().unwrap_or_else(|| "127.0.0.1:7878".to_string());
+            let parse_n = |key: &str, default: usize| -> Result<usize> {
+                match args.flags.get(key) {
+                    Some(v) => v.parse().with_context(|| format!("--{key} wants a number")),
+                    None => Ok(default),
+                }
+            };
+            let opts = ServeOptions {
+                workers: parse_n("jobs", 0)?,
+                cache_capacity: parse_n("cache-capacity", 0)?,
+                dse_threads: parse_n("dse-threads", 1)?,
+            };
+            let server = Server::bind(&addr, opts)?;
+            // the address line is the startup handshake scripts wait for
+            // (stdout is line-buffered, so it flushes even into a pipe)
+            println!("olympus-serve listening on {}", server.addr());
+            server.wait();
+            Ok(())
+        }
+        "submit" => {
+            let input = args.positional.first().unwrap_or_else(|| usage());
+            let ir = std::fs::read_to_string(input)
+                .with_context(|| format!("read input IR '{input}'"))?;
+            let cmd = args.flags.get("cmd").cloned().unwrap_or_else(|| "dse".to_string());
+            let mut fields: Vec<(&str, Json)> =
+                vec![("cmd", cmd.as_str().into()), ("ir", ir.into())];
+            if let Some(p) = args.flags.get("platform") {
+                if builtin(p).is_some() {
+                    fields.push(("platform", p.as_str().into()));
+                } else {
+                    // custom board: ship the full spec inline
+                    let spec = PlatformSpec::load(Path::new(p))?;
+                    fields.push(("platform_json", spec.to_json()));
+                }
+            }
+            for key in ["pipeline", "objective", "scenario"] {
+                if let Some(v) = args.flags.get(key) {
+                    fields.push((key, v.as_str().into()));
+                }
+            }
+            if let Some(seed) = args.flags.get("seed") {
+                let seed: u64 = seed.parse().context("--seed wants an integer")?;
+                fields.push(("seed", seed.into()));
+            }
+            if let Some(fs) = args.flags.get("factors") {
+                let factors: Vec<u64> = fs
+                    .split(',')
+                    .map(|s| s.trim().parse::<u64>().context("--factors wants e.g. 2,4"))
+                    .collect::<Result<_>>()?;
+                fields.push(("factors", factors.into()));
+            }
+            let v = roundtrip(&args, Json::obj(fields))?;
+            if args.flags.contains_key("raw") {
+                println!("{v}");
+                return Ok(());
+            }
+            let result = v.get("result");
+            if let Some(table) = result.get("table").as_str() {
+                print!("{table}");
+            }
+            if let Some(report) = result.get("des_report").as_str() {
+                print!("{report}");
+            }
+            if result.get("table").as_str().is_none() && result.get("des_report").as_str().is_none()
+            {
+                println!("{result}");
+            }
+            if v.get("cached") == &Json::Bool(true) {
+                eprintln!("(served from cache, key {})", v.get("key"));
+            }
+            Ok(())
+        }
+        "cache-stats" => {
+            let v = roundtrip(&args, Json::obj(vec![("cmd", "cache-stats".into())]))?;
+            println!("{}", v.get("result"));
+            Ok(())
+        }
         _ => usage(),
     }
+}
+
+/// Send one request line to the service and parse the response, failing
+/// loudly on protocol-level errors.
+fn roundtrip(args: &Args, request: Json) -> Result<Json> {
+    use std::io::{BufRead, BufReader, Write};
+    let addr = args.flags.get("addr").map(|s| s.as_str()).unwrap_or("127.0.0.1:7878");
+    let mut stream = std::net::TcpStream::connect(addr)
+        .with_context(|| format!("connect to olympus-serve at {addr}"))?;
+    stream.write_all(request.to_string().as_bytes())?;
+    stream.write_all(b"\n")?;
+    stream.flush()?;
+    let mut line = String::new();
+    BufReader::new(stream).read_line(&mut line).context("read response")?;
+    let v = Json::parse(line.trim())
+        .map_err(|e| anyhow::anyhow!("malformed response from service: {e}"))?;
+    if v.get("ok") != &Json::Bool(true) {
+        bail!(
+            "service error [{}]: {}",
+            v.get("error").get("code").as_str().unwrap_or("?"),
+            v.get("error").get("message").as_str().unwrap_or("?")
+        );
+    }
+    Ok(v)
 }

@@ -28,6 +28,7 @@ pub mod replicate;
 pub mod sanitize;
 
 pub use dse::{
-    run_dse, run_dse_with, run_iterative, DseCandidate, DseObjective, DseOptions, DseReport,
+    candidate_cache_key, evaluate_candidate, run_dse, run_dse_with, run_iterative, CandidateCache,
+    CandidateOutcome, DseCandidate, DseObjective, DseOptions, DseReport,
 };
 pub use manager::{make_pass, parse_pipeline, Pass, PassContext, PassManager, PassOutcome};

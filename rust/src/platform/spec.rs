@@ -109,6 +109,15 @@ impl PlatformSpec {
         self.pcs.len()
     }
 
+    /// Stable content fingerprint: the canonical JSON form (BTreeMap-backed,
+    /// so key order is deterministic) under [`crate::util::ContentHash`].
+    /// Two specs with equal fields fingerprint identically regardless of how
+    /// they were loaded (builtin vs JSON file vs inline request object).
+    pub fn fingerprint(&self) -> String {
+        crate::util::ContentHash::of_parts(&["olympus-platform-v1", &self.to_json().to_string()])
+            .to_hex()
+    }
+
     // ---- JSON -----------------------------------------------------------
 
     pub fn to_json(&self) -> Json {
@@ -247,6 +256,25 @@ mod tests {
         )
         .unwrap();
         assert!(PlatformSpec::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn fingerprint_tracks_content_not_provenance() {
+        let spec = PlatformSpec {
+            name: "test".into(),
+            pcs: vec![pc()],
+            resources: ResourceVec::new(1, 2, 3, 4, 5),
+            util_limit: 0.8,
+            kernel_mhz: 300.0,
+        };
+        // a JSON round-trip preserves the fingerprint...
+        let back =
+            PlatformSpec::from_json(&Json::parse(&spec.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(spec.fingerprint(), back.fingerprint());
+        // ...and any field change shifts it
+        let mut other = spec.clone();
+        other.kernel_mhz = 301.0;
+        assert_ne!(spec.fingerprint(), other.fingerprint());
     }
 
     #[test]

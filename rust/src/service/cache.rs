@@ -1,0 +1,276 @@
+//! Content-addressed, single-flight evaluation cache.
+//!
+//! The cache maps a [`ContentHash`] key — a stable hash of *everything the
+//! result depends on* (module IR, platform spec, pipeline/strategy,
+//! objective, scenario, seed) — to the evaluated value. Because every
+//! evaluation in Olympus is a pure function of those inputs, a cache entry
+//! is bit-identical to a fresh computation, and serving warm answers cannot
+//! change results, only latency.
+//!
+//! **Single-flight**: when several workers ask for the same key
+//! concurrently, exactly one computes; the rest block on a condvar and
+//! reuse the result. This is what makes 8 identical DSE submissions cost
+//! one evaluation instead of eight.
+
+use std::collections::HashMap;
+use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Condvar, Mutex};
+
+use crate::util::ContentHash;
+
+/// Counters exposed by `cache-stats`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct CacheStats {
+    /// Ready entries currently stored.
+    pub entries: u64,
+    /// Lookups answered from a stored entry.
+    pub hits: u64,
+    /// Lookups that computed (each is one real evaluation).
+    pub misses: u64,
+    /// Lookups that waited on a concurrent identical computation
+    /// (single-flight followers).
+    pub coalesced: u64,
+    /// Entries dropped by the capacity bound.
+    pub evicted: u64,
+}
+
+enum Slot<V> {
+    /// A computation for this key is running on some worker.
+    InFlight,
+    Ready(V),
+}
+
+/// See module docs. `V` is cloned out on every hit, so keep values
+/// cheaply-cloneable (or wrap them in `Arc`).
+pub struct EvalCache<V> {
+    inner: Mutex<Inner<V>>,
+    ready: Condvar,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    coalesced: AtomicU64,
+    evicted: AtomicU64,
+    /// Max Ready entries (0 = unbounded). Oldest-inserted evicts first.
+    capacity: usize,
+}
+
+struct Inner<V> {
+    map: HashMap<ContentHash, Slot<V>>,
+    /// Insertion order of Ready keys, for FIFO eviction.
+    order: std::collections::VecDeque<ContentHash>,
+}
+
+impl<V: Clone> Default for EvalCache<V> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<V: Clone> EvalCache<V> {
+    /// Unbounded cache.
+    pub fn new() -> Self {
+        Self::with_capacity(0)
+    }
+
+    /// Cache holding at most `capacity` ready entries (0 = unbounded).
+    pub fn with_capacity(capacity: usize) -> Self {
+        EvalCache {
+            inner: Mutex::new(Inner { map: HashMap::new(), order: std::collections::VecDeque::new() }),
+            ready: Condvar::new(),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            coalesced: AtomicU64::new(0),
+            evicted: AtomicU64::new(0),
+            capacity,
+        }
+    }
+
+    /// Look `key` up; on a miss, run `compute` (outside the lock) and store
+    /// the result. Concurrent callers with the same key wait for the one
+    /// in-flight computation instead of duplicating it. Returns the value
+    /// and whether it was served from cache (`true` for hits and coalesced
+    /// waiters, `false` for the caller that computed).
+    pub fn get_or_compute<F>(&self, key: ContentHash, compute: F) -> (V, bool)
+    where
+        F: FnOnce() -> V,
+    {
+        let mut waited = false;
+        let mut guard = self.inner.lock().unwrap();
+        loop {
+            match guard.map.get(&key) {
+                Some(Slot::Ready(v)) => {
+                    let v = v.clone();
+                    if waited {
+                        self.coalesced.fetch_add(1, Ordering::Relaxed);
+                    } else {
+                        self.hits.fetch_add(1, Ordering::Relaxed);
+                    }
+                    return (v, true);
+                }
+                Some(Slot::InFlight) => {
+                    waited = true;
+                    guard = self.ready.wait(guard).unwrap();
+                }
+                None => {
+                    guard.map.insert(key, Slot::InFlight);
+                    break;
+                }
+            }
+        }
+        drop(guard);
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        // If `compute` unwinds, clear the InFlight marker and wake waiters
+        // (they retry and one becomes the new computer) instead of leaving
+        // them blocked forever.
+        let mut flight = FlightGuard { cache: self, key, armed: true };
+        let value = compute();
+        flight.armed = false;
+        let mut guard = self.inner.lock().unwrap();
+        guard.map.insert(key, Slot::Ready(value.clone()));
+        guard.order.push_back(key);
+        if self.capacity > 0 {
+            while guard.order.len() > self.capacity {
+                // oldest-first; skip keys that were already evicted/replaced
+                let Some(old) = guard.order.pop_front() else { break };
+                if old == key {
+                    guard.order.push_back(old);
+                    continue;
+                }
+                if matches!(guard.map.get(&old), Some(Slot::Ready(_))) {
+                    guard.map.remove(&old);
+                    self.evicted.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        }
+        drop(guard);
+        self.ready.notify_all();
+        (value, false)
+    }
+
+    /// Peek without computing.
+    pub fn get(&self, key: ContentHash) -> Option<V> {
+        let guard = self.inner.lock().unwrap();
+        match guard.map.get(&key) {
+            Some(Slot::Ready(v)) => {
+                let v = v.clone();
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(v)
+            }
+            _ => None,
+        }
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        let guard = self.inner.lock().unwrap();
+        let entries =
+            guard.map.values().filter(|s| matches!(s, Slot::Ready(_))).count() as u64;
+        CacheStats {
+            entries,
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            coalesced: self.coalesced.load(Ordering::Relaxed),
+            evicted: self.evicted.load(Ordering::Relaxed),
+        }
+    }
+}
+
+struct FlightGuard<'a, V> {
+    cache: &'a EvalCache<V>,
+    key: ContentHash,
+    armed: bool,
+}
+
+impl<V> Drop for FlightGuard<'_, V> {
+    fn drop(&mut self) {
+        if !self.armed {
+            return;
+        }
+        if let Ok(mut guard) = self.cache.inner.lock() {
+            if matches!(guard.map.get(&self.key), Some(Slot::InFlight)) {
+                guard.map.remove(&self.key);
+            }
+        }
+        self.cache.ready.notify_all();
+    }
+}
+
+impl<V> fmt::Debug for EvalCache<V> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("EvalCache")
+            .field("hits", &self.hits.load(Ordering::Relaxed))
+            .field("misses", &self.misses.load(Ordering::Relaxed))
+            .field("coalesced", &self.coalesced.load(Ordering::Relaxed))
+            .field("capacity", &self.capacity)
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+    use std::sync::Arc;
+
+    fn key(s: &str) -> ContentHash {
+        ContentHash::of_parts(&[s])
+    }
+
+    #[test]
+    fn second_lookup_hits() {
+        let c = EvalCache::new();
+        let (v, cached) = c.get_or_compute(key("a"), || 41);
+        assert_eq!((v, cached), (41, false));
+        let (v, cached) = c.get_or_compute(key("a"), || panic!("must not recompute"));
+        assert_eq!((v, cached), (41, true));
+        let s = c.stats();
+        assert_eq!((s.entries, s.hits, s.misses), (1, 1, 1));
+    }
+
+    #[test]
+    fn concurrent_identical_keys_compute_once() {
+        let c = Arc::new(EvalCache::new());
+        let computations = Arc::new(AtomicUsize::new(0));
+        let mut handles = Vec::new();
+        for _ in 0..8 {
+            let c = c.clone();
+            let n = computations.clone();
+            handles.push(std::thread::spawn(move || {
+                c.get_or_compute(key("shared"), || {
+                    n.fetch_add(1, Ordering::SeqCst);
+                    // widen the race window so followers really coalesce
+                    std::thread::sleep(std::time::Duration::from_millis(50));
+                    7
+                })
+                .0
+            }));
+        }
+        for h in handles {
+            assert_eq!(h.join().unwrap(), 7);
+        }
+        assert_eq!(computations.load(Ordering::SeqCst), 1, "single-flight");
+        let s = c.stats();
+        assert_eq!(s.misses, 1);
+        assert_eq!(s.hits + s.coalesced, 7);
+    }
+
+    #[test]
+    fn capacity_evicts_oldest() {
+        let c = EvalCache::with_capacity(2);
+        c.get_or_compute(key("a"), || 1);
+        c.get_or_compute(key("b"), || 2);
+        c.get_or_compute(key("c"), || 3);
+        let s = c.stats();
+        assert_eq!(s.entries, 2);
+        assert_eq!(s.evicted, 1);
+        assert_eq!(c.get(key("a")), None, "oldest entry evicted");
+        assert_eq!(c.get(key("c")), Some(3));
+    }
+
+    #[test]
+    fn distinct_keys_do_not_collide() {
+        let c = EvalCache::new();
+        c.get_or_compute(key("x"), || 1);
+        let (v, cached) = c.get_or_compute(key("y"), || 2);
+        assert_eq!((v, cached), (2, false));
+    }
+}

@@ -1,0 +1,226 @@
+//! `service` — the concurrent DSE job service (`olympus serve`).
+//!
+//! The CLI is single-shot: every `olympus dse` re-evaluates every candidate
+//! from scratch. This subsystem turns the same flow machinery into a
+//! long-running daemon for the workloads the ROADMAP cares about — platform
+//! sweeps, replication-factor sweeps, CI re-runs — where requests repeat
+//! and overlap heavily:
+//!
+//! * **[`proto`]** — newline-delimited JSON over TCP; malformed input gets
+//!   structured errors, never a dropped connection;
+//! * **[`queue`]** — blocking MPMC queue feeding a std-thread worker pool
+//!   (`--jobs N`);
+//! * **[`cache`]** — content-addressed, single-flight evaluation cache.
+//!   Keys hash *what is being evaluated* (module IR, platform spec,
+//!   pipeline/strategy, objective, scenario, seed), so cache placement can
+//!   never change a result — only skip recomputing it;
+//! * **[`worker`]** — request execution through a two-level memo (whole
+//!   responses + individual DSE candidates).
+//!
+//! Determinism contract: a served result is bit-identical to the single-shot
+//! CLI output for the same inputs, whether it was computed cold, served
+//! warm, or raced by N workers. `rust/tests/service.rs` pins this.
+
+pub mod cache;
+pub mod proto;
+pub mod queue;
+pub mod worker;
+
+pub use cache::{CacheStats, EvalCache};
+pub use proto::{error_response, ok_response, parse_request, Command, ProtoError, Request};
+pub use queue::JobQueue;
+pub use worker::{execute_request, Job, Served, ServiceState};
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread::JoinHandle;
+
+use anyhow::{Context, Result};
+
+/// Daemon configuration.
+#[derive(Debug, Clone)]
+pub struct ServeOptions {
+    /// Worker threads evaluating jobs (0 = all available cores).
+    pub workers: usize,
+    /// Response-cache capacity in entries (0 = unbounded).
+    pub cache_capacity: usize,
+    /// DSE candidate-evaluation threads per job. The pool parallelizes
+    /// across jobs, so 1 avoids oversubscription; results are identical for
+    /// any value.
+    pub dse_threads: usize,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions { workers: 0, cache_capacity: 0, dse_threads: 1 }
+    }
+}
+
+/// A running service: accept loop + worker pool + shared caches.
+pub struct Server {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    queue: Arc<JobQueue<Job>>,
+    state: Arc<ServiceState>,
+    accept: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind `addr` (e.g. `127.0.0.1:7878`; port 0 picks a free port) and
+    /// start accepting. Returns once the listener is live — [`Server::addr`]
+    /// is immediately connectable.
+    pub fn bind(addr: &str, opts: ServeOptions) -> Result<Server> {
+        let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
+        let local = listener.local_addr().context("local_addr")?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let queue = Arc::new(JobQueue::new());
+        let state = Arc::new(ServiceState::new(opts.cache_capacity, opts.dse_threads));
+
+        let n_workers = if opts.workers == 0 {
+            std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1)
+        } else {
+            opts.workers
+        };
+        let workers = (0..n_workers)
+            .map(|_| {
+                let q = queue.clone();
+                let s = state.clone();
+                std::thread::spawn(move || worker::worker_loop(q, s))
+            })
+            .collect();
+
+        let accept = {
+            let stop = stop.clone();
+            let queue = queue.clone();
+            let state = state.clone();
+            std::thread::spawn(move || {
+                for conn in listener.incoming() {
+                    if stop.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    let Ok(stream) = conn else { continue };
+                    let stop = stop.clone();
+                    let queue = queue.clone();
+                    let state = state.clone();
+                    // connection threads are detached: they exit when the
+                    // client hangs up (read_line -> 0) or on shutdown
+                    std::thread::spawn(move || {
+                        handle_conn(stream, queue, state, stop, local);
+                    });
+                }
+            })
+        };
+
+        Ok(Server { addr: local, stop, queue, state, accept: Some(accept), workers })
+    }
+
+    /// The bound address (resolves port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Shared state (tests inspect cache stats without a socket roundtrip).
+    pub fn state(&self) -> &ServiceState {
+        &self.state
+    }
+
+    /// Block until a `shutdown` request stops the service, then join the
+    /// pool (the `olympus serve` foreground mode).
+    pub fn wait(mut self) {
+        self.join();
+    }
+
+    /// Stop from the owning thread: unblock the accept loop, drain queued
+    /// jobs, join everything.
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        self.queue.close();
+        let _ = TcpStream::connect(self.addr); // unblock accept()
+        self.join();
+    }
+
+    fn join(&mut self) {
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        // belt-and-braces for tests that panic before shutdown()
+        self.stop.store(true, Ordering::SeqCst);
+        self.queue.close();
+        let _ = TcpStream::connect(self.addr);
+        self.join();
+    }
+}
+
+/// Per-connection loop: read request lines, answer each on its own line.
+/// The connection survives malformed requests; only EOF, socket errors or
+/// `shutdown` end it.
+fn handle_conn(
+    stream: TcpStream,
+    queue: Arc<JobQueue<Job>>,
+    state: Arc<ServiceState>,
+    stop: Arc<AtomicBool>,
+    server_addr: SocketAddr,
+) {
+    let Ok(read_half) = stream.try_clone() else { return };
+    let mut reader = BufReader::new(read_half);
+    let mut writer = stream;
+    let mut line = String::new();
+    loop {
+        line.clear();
+        match reader.read_line(&mut line) {
+            Ok(0) | Err(_) => break, // client hung up
+            Ok(_) => {}
+        }
+        let trimmed = line.trim();
+        if trimmed.is_empty() {
+            continue;
+        }
+        let mut shutdown_after_reply = false;
+        let resp = match parse_request(trimmed) {
+            Err(e) => error_response(&e),
+            Ok(req) if req.cmd == Command::Shutdown => {
+                shutdown_after_reply = true;
+                execute_request(&state, &req)
+            }
+            Ok(req) if req.cmd.is_job() => {
+                let (tx, rx) = mpsc::channel();
+                if queue.push(Job { req, reply: tx }) {
+                    match rx.recv() {
+                        Ok(r) => r,
+                        Err(_) => error_response(&ProtoError::new(
+                            "internal",
+                            "worker pool shut down mid-job",
+                        )),
+                    }
+                } else {
+                    error_response(&ProtoError::new("shutting-down", "service is draining"))
+                }
+            }
+            // ping / cache-stats answer inline, bypassing the queue
+            Ok(req) => execute_request(&state, &req),
+        };
+        if writer.write_all(resp.as_bytes()).is_err()
+            || writer.write_all(b"\n").is_err()
+            || writer.flush().is_err()
+        {
+            break;
+        }
+        if shutdown_after_reply {
+            stop.store(true, Ordering::SeqCst);
+            queue.close();
+            let _ = TcpStream::connect(server_addr); // unblock accept()
+            break;
+        }
+    }
+}

@@ -1,0 +1,277 @@
+//! The `olympus serve` wire protocol: newline-delimited JSON over TCP.
+//!
+//! One request per line, one response line per request, in order. A
+//! malformed line gets a structured `{"ok": false, "error": {...}}` response
+//! and the connection stays open — clients never have to guess why a socket
+//! died.
+//!
+//! Requests:
+//!
+//! ```json
+//! {"cmd": "dse",  "ir": "<mlir>", "platform": "u280", "objective": "des-score",
+//!  "scenario": "closed:4", "seed": 42, "factors": [2, 4], "id": 1}
+//! {"cmd": "des",  "ir": "<mlir>", "pipeline": "sanitize, iris, channel-reassign",
+//!  "scenario": "poisson:1000:20", "seed": 7}
+//! {"cmd": "flow", "ir": "<mlir>", "platform": "u280"}
+//! {"cmd": "cache-stats"}
+//! {"cmd": "ping"}
+//! {"cmd": "shutdown"}
+//! ```
+//!
+//! `platform` is a builtin name; `platform_json` may carry a full inline
+//! platform spec object instead. `id` (any JSON value) is echoed back.
+//!
+//! Responses: `{"ok": true, "id": ..., "cached": bool, "key": "<32-hex>",
+//! "result": {...}}` — `key` is the content-address of the evaluation
+//! (stable across servers), `cached` whether this answer skipped
+//! evaluation.
+
+use crate::util::Json;
+
+/// What a request asks the service to do.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Command {
+    /// Full DSE over the strategy table; returns the decision table + best.
+    Dse,
+    /// Flow + discrete-event replay of a scenario.
+    Des,
+    /// Full flow report (analyses + architecture + emission summary).
+    Flow,
+    /// Evaluation-cache counters.
+    CacheStats,
+    /// Liveness probe.
+    Ping,
+    /// Stop accepting connections and drain.
+    Shutdown,
+}
+
+impl Command {
+    pub fn parse(s: &str) -> Option<Command> {
+        match s {
+            "dse" => Some(Command::Dse),
+            "des" => Some(Command::Des),
+            "flow" => Some(Command::Flow),
+            "cache-stats" => Some(Command::CacheStats),
+            "ping" => Some(Command::Ping),
+            "shutdown" => Some(Command::Shutdown),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Command::Dse => "dse",
+            Command::Des => "des",
+            Command::Flow => "flow",
+            Command::CacheStats => "cache-stats",
+            Command::Ping => "ping",
+            Command::Shutdown => "shutdown",
+        }
+    }
+
+    /// Does this command evaluate a design (and therefore go through the
+    /// job queue + cache)?
+    pub fn is_job(self) -> bool {
+        matches!(self, Command::Dse | Command::Des | Command::Flow)
+    }
+}
+
+/// A parsed request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub cmd: Command,
+    /// Echoed verbatim in the response (`Json::Null` when absent).
+    pub id: Json,
+    /// Olympus MLIR text (required for job commands).
+    pub ir: Option<String>,
+    /// Builtin platform name (default "u280").
+    pub platform: Option<String>,
+    /// Full inline platform spec (overrides `platform`).
+    pub platform_json: Option<Json>,
+    /// Explicit pass pipeline (skips DSE for `des`/`flow`).
+    pub pipeline: Option<String>,
+    /// "analytic" (default) or "des-score".
+    pub objective: Option<String>,
+    /// Workload scenario spec (`closed:N` | `poisson:HZ:N` |
+    /// `bursty:HZ:ON:OFF:N`).
+    pub scenario: Option<String>,
+    /// DES seed (engine default when absent).
+    pub seed: Option<u64>,
+    /// Replication factors for DSE (empty = defaults).
+    pub factors: Vec<u64>,
+}
+
+/// A protocol-level failure: structured error code + message, with the
+/// request id when one was recoverable from the line.
+#[derive(Debug, Clone)]
+pub struct ProtoError {
+    pub id: Json,
+    pub code: &'static str,
+    pub message: String,
+}
+
+impl ProtoError {
+    pub fn new(code: &'static str, message: impl Into<String>) -> ProtoError {
+        ProtoError { id: Json::Null, code, message: message.into() }
+    }
+
+    fn with_id(mut self, id: Json) -> ProtoError {
+        self.id = id;
+        self
+    }
+}
+
+/// Parse one request line. Never panics on hostile input; every failure
+/// mode maps to a [`ProtoError`] the caller turns into an error response.
+pub fn parse_request(line: &str) -> Result<Request, ProtoError> {
+    let v = Json::parse(line)
+        .map_err(|e| ProtoError::new("bad-json", format!("request is not valid JSON: {e}")))?;
+    if v.as_obj().is_none() {
+        return Err(ProtoError::new("bad-request", "request must be a JSON object"));
+    }
+    let id = v.get("id").clone();
+    let cmd_str = v
+        .get("cmd")
+        .as_str()
+        .ok_or_else(|| {
+            ProtoError::new("bad-request", "missing string field 'cmd'").with_id(id.clone())
+        })?;
+    let cmd = Command::parse(cmd_str).ok_or_else(|| {
+        ProtoError::new(
+            "bad-request",
+            format!("unknown cmd '{cmd_str}' (want dse|des|flow|cache-stats|ping|shutdown)"),
+        )
+        .with_id(id.clone())
+    })?;
+    let opt_str = |k: &str| v.get(k).as_str().map(|s| s.to_string());
+    let ir = opt_str("ir");
+    if cmd.is_job() && ir.is_none() {
+        return Err(ProtoError::new(
+            "bad-request",
+            format!("cmd '{cmd_str}' requires string field 'ir'"),
+        )
+        .with_id(id));
+    }
+    let seed = match v.get("seed") {
+        Json::Null => None,
+        j => Some(j.as_f64().filter(|n| *n >= 0.0 && n.fract() == 0.0).map(|n| n as u64).ok_or_else(
+            || {
+                ProtoError::new("bad-request", "'seed' must be a non-negative integer")
+                    .with_id(id.clone())
+            },
+        )?),
+    };
+    let factors = match v.get("factors") {
+        Json::Null => Vec::new(),
+        j => {
+            let arr = j.as_arr().ok_or_else(|| {
+                ProtoError::new("bad-request", "'factors' must be an array of integers")
+                    .with_id(id.clone())
+            })?;
+            let mut out = Vec::with_capacity(arr.len());
+            for f in arr {
+                let n = f.as_f64().filter(|n| *n >= 1.0 && n.fract() == 0.0).ok_or_else(|| {
+                    ProtoError::new("bad-request", "'factors' entries must be integers >= 1")
+                        .with_id(id.clone())
+                })?;
+                out.push(n as u64);
+            }
+            out
+        }
+    };
+    let platform_json = match v.get("platform_json") {
+        Json::Null => None,
+        j => Some(j.clone()),
+    };
+    Ok(Request {
+        cmd,
+        id,
+        ir,
+        platform: opt_str("platform"),
+        platform_json,
+        pipeline: opt_str("pipeline"),
+        objective: opt_str("objective"),
+        scenario: opt_str("scenario"),
+        seed,
+        factors,
+    })
+}
+
+/// Serialize a success response.
+pub fn ok_response(id: &Json, cmd: Command, cached: bool, key: Option<&str>, result: Json) -> String {
+    let mut fields = vec![
+        ("ok", Json::Bool(true)),
+        ("id", id.clone()),
+        ("cmd", cmd.as_str().into()),
+        ("cached", cached.into()),
+        ("result", result),
+    ];
+    if let Some(k) = key {
+        fields.push(("key", k.into()));
+    }
+    Json::obj(fields).to_string()
+}
+
+/// Serialize an error response.
+pub fn error_response(err: &ProtoError) -> String {
+    Json::obj(vec![
+        ("ok", Json::Bool(false)),
+        ("id", err.id.clone()),
+        (
+            "error",
+            Json::obj(vec![("code", err.code.into()), ("message", err.message.as_str().into())]),
+        ),
+    ])
+    .to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_minimal_dse_request() {
+        let r = parse_request(r#"{"cmd": "dse", "ir": "x", "id": 3}"#).unwrap();
+        assert_eq!(r.cmd, Command::Dse);
+        assert_eq!(r.ir.as_deref(), Some("x"));
+        assert_eq!(r.id, Json::Num(3.0));
+        assert!(r.factors.is_empty());
+        assert_eq!(r.seed, None);
+    }
+
+    #[test]
+    fn rejects_garbage_with_codes() {
+        assert_eq!(parse_request("not json").unwrap_err().code, "bad-json");
+        assert_eq!(parse_request("[1, 2]").unwrap_err().code, "bad-request");
+        assert_eq!(parse_request(r#"{"cmd": "frobnicate"}"#).unwrap_err().code, "bad-request");
+        // job commands require IR; the id still makes it into the error
+        let e = parse_request(r#"{"cmd": "dse", "id": "j1"}"#).unwrap_err();
+        assert_eq!(e.code, "bad-request");
+        assert_eq!(e.id, Json::Str("j1".into()));
+        // bad field types
+        assert!(parse_request(r#"{"cmd": "dse", "ir": "x", "seed": -1}"#).is_err());
+        assert!(parse_request(r#"{"cmd": "dse", "ir": "x", "factors": "two"}"#).is_err());
+    }
+
+    #[test]
+    fn responses_round_trip_as_json() {
+        let ok = ok_response(&Json::Num(1.0), Command::Ping, false, Some("abc"), Json::Null);
+        let v = Json::parse(&ok).unwrap();
+        assert_eq!(v.get("ok"), &Json::Bool(true));
+        assert_eq!(v.get("key").as_str(), Some("abc"));
+        let err = error_response(&ProtoError::new("bad-json", "nope"));
+        let v = Json::parse(&err).unwrap();
+        assert_eq!(v.get("ok"), &Json::Bool(false));
+        assert_eq!(v.get("error").get("code").as_str(), Some("bad-json"));
+        // single line (newline-delimited framing)
+        assert!(!ok.contains('\n') && !err.contains('\n'));
+    }
+
+    #[test]
+    fn non_job_commands_need_no_ir() {
+        for cmd in ["cache-stats", "ping", "shutdown"] {
+            let r = parse_request(&format!(r#"{{"cmd": "{cmd}"}}"#)).unwrap();
+            assert!(!r.cmd.is_job());
+        }
+    }
+}

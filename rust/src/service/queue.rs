@@ -1,0 +1,157 @@
+//! Blocking MPMC job queue for the worker pool (condvar over a `VecDeque`;
+//! no external crates, no lock-free cleverness — the queue holds whole DSE
+//! jobs, so it is never the hot path).
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+
+struct State<T> {
+    jobs: VecDeque<T>,
+    closed: bool,
+}
+
+/// See module docs.
+pub struct JobQueue<T> {
+    state: Mutex<State<T>>,
+    available: Condvar,
+}
+
+impl<T> Default for JobQueue<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> JobQueue<T> {
+    pub fn new() -> Self {
+        JobQueue {
+            state: Mutex::new(State { jobs: VecDeque::new(), closed: false }),
+            available: Condvar::new(),
+        }
+    }
+
+    /// Enqueue a job. Returns `false` (dropping the job) after [`close`].
+    ///
+    /// [`close`]: JobQueue::close
+    pub fn push(&self, job: T) -> bool {
+        let mut s = self.state.lock().unwrap();
+        if s.closed {
+            return false;
+        }
+        s.jobs.push_back(job);
+        drop(s);
+        self.available.notify_one();
+        true
+    }
+
+    /// Dequeue, blocking while the queue is open and empty. Returns `None`
+    /// once the queue is closed *and* drained — the worker-exit signal.
+    pub fn pop(&self) -> Option<T> {
+        let mut s = self.state.lock().unwrap();
+        loop {
+            if let Some(job) = s.jobs.pop_front() {
+                return Some(job);
+            }
+            if s.closed {
+                return None;
+            }
+            s = self.available.wait(s).unwrap();
+        }
+    }
+
+    /// Stop accepting jobs and wake every blocked worker. Queued jobs still
+    /// drain (graceful shutdown).
+    pub fn close(&self) {
+        self.state.lock().unwrap().closed = true;
+        self.available.notify_all();
+    }
+
+    pub fn len(&self) -> usize {
+        self.state.lock().unwrap().jobs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn fifo_order_single_thread() {
+        let q = JobQueue::new();
+        assert!(q.push(1));
+        assert!(q.push(2));
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), Some(2));
+    }
+
+    #[test]
+    fn close_drains_then_signals_exit() {
+        let q = JobQueue::new();
+        q.push("a");
+        q.close();
+        assert!(!q.push("b"), "closed queue rejects jobs");
+        assert_eq!(q.pop(), Some("a"), "queued jobs still drain");
+        assert_eq!(q.pop(), None, "then workers see the exit signal");
+    }
+
+    #[test]
+    fn blocked_workers_wake_on_close() {
+        let q = Arc::new(JobQueue::<u32>::new());
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let q = q.clone();
+            handles.push(std::thread::spawn(move || q.pop()));
+        }
+        // give the workers a moment to block, then close
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        q.close();
+        for h in handles {
+            assert_eq!(h.join().unwrap(), None);
+        }
+    }
+
+    #[test]
+    fn many_producers_many_consumers_conserve_jobs() {
+        let q = Arc::new(JobQueue::<u64>::new());
+        let mut producers = Vec::new();
+        for p in 0..4u64 {
+            let q = q.clone();
+            producers.push(std::thread::spawn(move || {
+                for i in 0..100 {
+                    assert!(q.push(p * 100 + i));
+                }
+            }));
+        }
+        let mut consumers = Vec::new();
+        for _ in 0..4 {
+            let q = q.clone();
+            consumers.push(std::thread::spawn(move || {
+                let mut sum = 0u64;
+                let mut count = 0u64;
+                while let Some(j) = q.pop() {
+                    sum += j;
+                    count += 1;
+                }
+                (sum, count)
+            }));
+        }
+        for p in producers {
+            p.join().unwrap();
+        }
+        q.close();
+        let (mut sum, mut count) = (0, 0);
+        for c in consumers {
+            let (s, n) = c.join().unwrap();
+            sum += s;
+            count += n;
+        }
+        assert_eq!(count, 400);
+        assert_eq!(sum, (0..400u64).sum::<u64>());
+    }
+}

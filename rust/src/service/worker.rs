@@ -1,0 +1,388 @@
+//! Job execution: turn a parsed [`Request`] into a response line, answering
+//! through the two-level content-addressed cache.
+//!
+//! * **Response cache** — keyed on [`Flow::cache_key`] (module IR, platform,
+//!   pipeline/objective, scenario, seed). A warm repeat of an identical
+//!   request skips *everything* and replays the stored payload, which is
+//!   bit-identical to a fresh run because every evaluation is deterministic.
+//! * **Candidate cache** — shared across jobs via
+//!   [`DseOptions::cache`](crate::passes::DseOptions): overlapping requests
+//!   (same module on another platform, a grown factor sweep, a different
+//!   scenario on the same candidates) reuse individual candidate
+//!   evaluations even when the response key differs.
+//!
+//! Workers are plain std threads popping a [`JobQueue`]; results travel
+//! back to the connection thread over the job's `mpsc` channel.
+
+use std::sync::mpsc;
+use std::sync::Arc;
+
+use crate::coordinator::{flow_report_json, render_dse_table, Flow};
+use crate::des::{DesConfig, WorkloadScenario};
+use crate::ir::{parse_module, Module};
+use crate::passes::{CandidateCache, DseObjective};
+use crate::platform::{builtin, builtin_names, PlatformSpec};
+use crate::util::Json;
+
+use super::cache::{CacheStats, EvalCache};
+use super::proto::{error_response, ok_response, Command, ProtoError, Request};
+use super::queue::JobQueue;
+
+/// One unit of work: a request plus the channel its response line goes back
+/// through (the connection thread blocks on the receiver).
+pub struct Job {
+    pub req: Request,
+    pub reply: mpsc::Sender<String>,
+}
+
+/// The outcome of evaluating a job request: the `result` payload, or a
+/// deterministic failure. Both are cached — recomputing a failure costs as
+/// much as recomputing a success.
+#[derive(Debug, Clone)]
+pub enum Served {
+    Ok(Json),
+    Failed(String),
+}
+
+/// Shared service state: the caches and per-job evaluation knobs.
+pub struct ServiceState {
+    /// Whole-response memo (single-flight).
+    pub responses: EvalCache<Served>,
+    /// Candidate-evaluation memo shared with the DSE.
+    pub candidates: Arc<CandidateCache>,
+    /// DSE candidate-evaluation threads *per job* (the pool already
+    /// parallelizes across jobs; keep this at 1 unless the pool is small).
+    pub dse_threads: usize,
+}
+
+impl ServiceState {
+    pub fn new(response_capacity: usize, dse_threads: usize) -> ServiceState {
+        // Candidate entries hold cloned Modules, so a bounded response cache
+        // implies a bounded candidate cache too (~a dozen candidates per
+        // response); 0 keeps both unbounded.
+        let candidate_capacity = response_capacity.saturating_mul(16);
+        ServiceState {
+            responses: EvalCache::with_capacity(response_capacity),
+            candidates: Arc::new(CandidateCache::with_capacity(candidate_capacity)),
+            dse_threads: dse_threads.max(1),
+        }
+    }
+
+    /// Counters for `cache-stats`.
+    pub fn stats(&self) -> (CacheStats, CacheStats) {
+        (self.responses.stats(), self.candidates.stats())
+    }
+}
+
+/// Worker thread body: drain the queue until it closes.
+pub fn worker_loop(queue: Arc<JobQueue<Job>>, state: Arc<ServiceState>) {
+    while let Some(job) = queue.pop() {
+        let resp = execute_request(&state, &job.req);
+        // a dropped receiver just means the client went away mid-job
+        let _ = job.reply.send(resp);
+    }
+}
+
+fn stats_json(s: &CacheStats) -> Json {
+    Json::obj(vec![
+        ("entries", s.entries.into()),
+        ("hits", s.hits.into()),
+        ("misses", s.misses.into()),
+        ("coalesced", s.coalesced.into()),
+        ("evicted", s.evicted.into()),
+    ])
+}
+
+/// Evaluate one request to a full response line. Pure up to cache effects:
+/// identical requests produce byte-identical `result` payloads regardless
+/// of worker count or cache temperature.
+pub fn execute_request(state: &ServiceState, req: &Request) -> String {
+    match req.cmd {
+        Command::Ping => ok_response(&req.id, req.cmd, false, None, Json::obj(vec![])),
+        Command::Shutdown => {
+            // the connection thread performs the actual shutdown; this arm
+            // only exists so a queued shutdown still gets a well-formed reply
+            ok_response(&req.id, req.cmd, false, None, Json::obj(vec![]))
+        }
+        Command::CacheStats => {
+            let (resp, cand) = state.stats();
+            ok_response(
+                &req.id,
+                req.cmd,
+                false,
+                None,
+                Json::obj(vec![
+                    ("responses", stats_json(&resp)),
+                    ("candidates", stats_json(&cand)),
+                ]),
+            )
+        }
+        Command::Dse | Command::Des | Command::Flow => match execute_job(state, req) {
+            Ok((key, payload, cached)) => match payload {
+                Served::Ok(result) => ok_response(&req.id, req.cmd, cached, Some(&key), result),
+                Served::Failed(msg) => {
+                    let mut e = ProtoError::new("eval-failed", msg);
+                    e.id = req.id.clone();
+                    error_response(&e)
+                }
+            },
+            Err(mut e) => {
+                e.id = req.id.clone();
+                error_response(&e)
+            }
+        },
+    }
+}
+
+/// Resolve + evaluate a job command through the response cache. Returns the
+/// content-address (hex), the served payload and whether it came from cache.
+fn execute_job(
+    state: &ServiceState,
+    req: &Request,
+) -> Result<(String, Served, bool), ProtoError> {
+    let module = load_module(req)?;
+    let platform = load_platform(req)?;
+    let flow = build_flow(state, req, platform)?;
+    let cmd = req.cmd;
+    // `dse` and `flow` can share a Flow::cache_key but render different
+    // payloads, so the command is part of the response address
+    let key = crate::util::ContentHash::of_parts(&[
+        "olympus-serve-v1",
+        cmd.as_str(),
+        &flow.cache_key(&module).to_hex(),
+    ]);
+    let (served, cached) = state.responses.get_or_compute(key, || {
+        match flow.run(module.clone(), "app") {
+            Ok(r) => Served::Ok(render_result(cmd, &r)),
+            Err(e) => Served::Failed(format!("{e:#}")),
+        }
+    });
+    Ok((key.to_hex(), served, cached))
+}
+
+fn load_module(req: &Request) -> Result<Module, ProtoError> {
+    let text = req.ir.as_deref().ok_or_else(|| ProtoError::new("bad-request", "missing 'ir'"))?;
+    let m = parse_module(text).map_err(|e| ProtoError::new("bad-ir", e.to_string()))?;
+    let errs = crate::ir::verify_module(&m);
+    if !errs.is_empty() {
+        return Err(ProtoError::new("bad-ir", format!("structural verification failed: {errs:?}")));
+    }
+    let derrs = crate::dialect::verify_dialect(&m, false);
+    if !derrs.is_empty() {
+        return Err(ProtoError::new("bad-ir", format!("dialect verification failed: {derrs:?}")));
+    }
+    Ok(m)
+}
+
+fn load_platform(req: &Request) -> Result<PlatformSpec, ProtoError> {
+    if let Some(j) = &req.platform_json {
+        return PlatformSpec::from_json(j)
+            .map_err(|e| ProtoError::new("bad-platform", format!("{e:#}")));
+    }
+    let name = req.platform.as_deref().unwrap_or("u280");
+    builtin(name).ok_or_else(|| {
+        ProtoError::new(
+            "bad-platform",
+            format!("unknown builtin platform '{name}' (have {:?}); pass platform_json for custom boards", builtin_names()),
+        )
+    })
+}
+
+/// Mirror the CLI's `dse`/`des`/`lower` flow construction so served results
+/// are bit-identical to single-shot runs.
+fn build_flow(
+    state: &ServiceState,
+    req: &Request,
+    platform: PlatformSpec,
+) -> Result<Flow, ProtoError> {
+    let scenario = match req.scenario.as_deref() {
+        Some(spec) => {
+            Some(WorkloadScenario::parse(spec).map_err(|e| ProtoError::new("bad-request", e))?)
+        }
+        None => None,
+    };
+    let mut cfg = DesConfig::default();
+    if let Some(seed) = req.seed {
+        cfg.seed = seed;
+    }
+    let mut flow = Flow::new(platform)
+        .with_jobs(state.dse_threads)
+        .with_cache(state.candidates.clone());
+    flow.dse_factors = req.factors.clone();
+    flow.des_config = cfg.clone();
+    match req.objective.as_deref() {
+        None | Some("analytic") => {}
+        Some("des-score") => {
+            let sc = scenario.clone().unwrap_or_else(|| WorkloadScenario::closed_loop(4));
+            flow = flow.with_objective(DseObjective::des_score_with(sc, cfg.clone()));
+        }
+        Some(other) => {
+            return Err(ProtoError::new(
+                "bad-request",
+                format!("unknown objective '{other}' (want analytic | des-score)"),
+            ));
+        }
+    }
+    match req.cmd {
+        Command::Dse => {
+            if let Some(p) = &req.pipeline {
+                return Err(ProtoError::new(
+                    "bad-request",
+                    format!("'dse' explores strategies itself; drop pipeline '{p}' or use cmd 'flow'"),
+                ));
+            }
+        }
+        Command::Des => {
+            let sc = scenario.clone().unwrap_or_else(|| WorkloadScenario::closed_loop(4));
+            flow = flow.with_scenario(sc.clone());
+            match &req.pipeline {
+                Some(p) => flow = flow.with_pipeline(p),
+                // no explicit pipeline: DSE picks the design, scored by the
+                // DES too (mirrors `olympus des`)
+                None => flow = flow.with_objective(DseObjective::des_score_with(sc, cfg)),
+            }
+        }
+        Command::Flow => {
+            if let Some(p) = &req.pipeline {
+                flow = flow.with_pipeline(p);
+            }
+            if let Some(sc) = scenario {
+                flow = flow.with_scenario(sc);
+            }
+        }
+        _ => {}
+    }
+    Ok(flow)
+}
+
+fn render_result(cmd: Command, r: &crate::coordinator::FlowResult) -> Json {
+    let mut fields: Vec<(&str, Json)> = Vec::new();
+    if let Some(dse) = &r.dse {
+        fields.push(("best_strategy", dse.best_strategy.as_str().into()));
+        fields.push(("table", render_dse_table(dse).into()));
+        let cands: Vec<Json> = dse
+            .candidates
+            .iter()
+            .map(|c| {
+                Json::obj(vec![
+                    ("strategy", c.strategy.as_str().into()),
+                    ("pipeline", c.pipeline.as_str().into()),
+                    // infinite = infeasible under the objective; null in JSON
+                    ("score", if c.score.is_finite() { c.score.into() } else { Json::Null }),
+                    ("makespan_s", c.makespan_s.into()),
+                    (
+                        "des_makespan_s",
+                        c.des_makespan_s.map(Json::Num).unwrap_or(Json::Null),
+                    ),
+                    ("fits", c.fits.into()),
+                ])
+            })
+            .collect();
+        fields.push(("candidates", Json::Arr(cands)));
+    }
+    match cmd {
+        Command::Dse => {
+            fields.push(("best_ir", crate::ir::print_module(&r.module).into()));
+        }
+        Command::Des => {
+            if let Some(des) = &r.des {
+                fields.push(("des_report", des.to_string().into()));
+                fields.push(("makespan_s", des.makespan_s.into()));
+                fields.push(("p99_job_latency_s", des.p99_job_latency_s.into()));
+                fields.push(("jobs_completed", des.jobs_completed.into()));
+            }
+        }
+        Command::Flow => {
+            fields.push(("report", flow_report_json(r)));
+        }
+        _ => {}
+    }
+    Json::obj(fields)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dialect::build::fig4a_module;
+    use crate::ir::print_module;
+    use crate::service::proto::parse_request;
+
+    fn request(extra: &str) -> Request {
+        let ir = print_module(&fig4a_module());
+        let line = Json::obj(vec![("cmd", "dse".into()), ("ir", ir.into())]).to_string();
+        // splice extra fields in via reparse to keep escaping correct
+        let mut v = Json::parse(&line).unwrap();
+        if !extra.is_empty() {
+            let add = Json::parse(extra).unwrap();
+            if let (Json::Obj(dst), Json::Obj(src)) = (&mut v, add) {
+                dst.extend(src);
+            }
+        }
+        parse_request(&v.to_string()).unwrap()
+    }
+
+    #[test]
+    fn dse_request_serves_table_and_caches_repeat() {
+        let state = ServiceState::new(0, 1);
+        let req = request(r#"{"factors": [2], "id": 1}"#);
+        let cold = execute_request(&state, &req);
+        let v = Json::parse(&cold).unwrap();
+        assert_eq!(v.get("ok"), &Json::Bool(true));
+        assert_eq!(v.get("cached"), &Json::Bool(false));
+        assert!(v.get("result").get("table").as_str().unwrap().contains("best: "));
+        assert_eq!(v.get("key").as_str().unwrap().len(), 32);
+
+        let warm = execute_request(&state, &req);
+        let w = Json::parse(&warm).unwrap();
+        assert_eq!(w.get("cached"), &Json::Bool(true));
+        // identical payload + key, only the `cached` flag differs
+        assert_eq!(w.get("result"), v.get("result"));
+        assert_eq!(w.get("key"), v.get("key"));
+        assert_eq!(state.responses.stats().misses, 1);
+    }
+
+    #[test]
+    fn bad_platform_and_bad_ir_fail_structured() {
+        let state = ServiceState::new(0, 1);
+        let req = request(r#"{"platform": "nonesuch"}"#);
+        let v = Json::parse(&execute_request(&state, &req)).unwrap();
+        assert_eq!(v.get("ok"), &Json::Bool(false));
+        assert_eq!(v.get("error").get("code").as_str(), Some("bad-platform"));
+
+        let req = parse_request(r#"{"cmd": "flow", "ir": "%0 = garbage"}"#).unwrap();
+        let v = Json::parse(&execute_request(&state, &req)).unwrap();
+        assert_eq!(v.get("error").get("code").as_str(), Some("bad-ir"));
+    }
+
+    #[test]
+    fn des_request_reports_scenario_replay() {
+        let state = ServiceState::new(0, 1);
+        let mut req = request(r#"{"scenario": "closed:2", "seed": 7}"#);
+        req.cmd = Command::Des;
+        req.pipeline = Some("sanitize, iris, channel-reassign".into());
+        let v = Json::parse(&execute_request(&state, &req)).unwrap();
+        assert_eq!(v.get("ok"), &Json::Bool(true), "{v}");
+        assert_eq!(v.get("result").get("jobs_completed").as_usize(), Some(2));
+        assert!(v.get("result").get("des_report").as_str().unwrap().contains("des report"));
+    }
+
+    #[test]
+    fn candidate_cache_spans_distinct_requests() {
+        let state = ServiceState::new(0, 1);
+        let a = request(r#"{"factors": [2]}"#);
+        execute_request(&state, &a);
+        let cand_misses = state.candidates.stats().misses;
+        assert!(cand_misses > 0);
+        // a *grown* sweep shares every already-evaluated candidate
+        let b = request(r#"{"factors": [2, 4]}"#);
+        let v = Json::parse(&execute_request(&state, &b)).unwrap();
+        assert_eq!(v.get("cached"), &Json::Bool(false), "different response key");
+        let after = state.candidates.stats();
+        assert!(
+            after.hits >= cand_misses - 2,
+            "overlapping candidates served from cache: {after:?}"
+        );
+        // only the two new replicate/full x4 variants (plus nothing else) evaluate
+        assert_eq!(after.misses, cand_misses + 2, "{after:?}");
+    }
+}

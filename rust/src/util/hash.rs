@@ -1,0 +1,114 @@
+//! Stable content hashing for the evaluation cache.
+//!
+//! `std::hash` is explicitly *not* stable across releases/platforms, and the
+//! service's content-addressed cache keys must mean the same thing in every
+//! process that computes them (a client may precompute a key, a disk dump may
+//! outlive a binary). FNV-1a is tiny, allocation-free and bit-stable; two
+//! independently seeded 64-bit lanes give a 128-bit key, which is plenty for
+//! a cache that only ever holds thousands of entries (not adversarial input).
+
+use std::fmt;
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+/// Arbitrary odd constant decorrelating the second lane from the first.
+const LANE2_SEED: u64 = 0x9e37_79b9_7f4a_7c15;
+
+/// Incremental FNV-1a over byte slices.
+#[derive(Debug, Clone, Copy)]
+pub struct Fnv64 {
+    state: u64,
+}
+
+impl Default for Fnv64 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Fnv64 {
+    pub fn new() -> Self {
+        Fnv64 { state: FNV_OFFSET }
+    }
+
+    pub fn with_seed(seed: u64) -> Self {
+        Fnv64 { state: FNV_OFFSET ^ seed }
+    }
+
+    pub fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.state ^= b as u64;
+            self.state = self.state.wrapping_mul(FNV_PRIME);
+        }
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.state
+    }
+}
+
+/// One-shot FNV-1a of a byte slice.
+pub fn fnv1a_64(bytes: &[u8]) -> u64 {
+    let mut h = Fnv64::new();
+    h.write(bytes);
+    h.finish()
+}
+
+/// A 128-bit stable content hash (two seeded FNV-1a lanes).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ContentHash(pub u128);
+
+impl ContentHash {
+    /// Hash a sequence of labeled parts. Each part is fed with a 0xFF
+    /// terminator so `["ab", "c"]` and `["a", "bc"]` cannot collide.
+    pub fn of_parts(parts: &[&str]) -> ContentHash {
+        let mut lo = Fnv64::new();
+        let mut hi = Fnv64::with_seed(LANE2_SEED);
+        for p in parts {
+            lo.write(p.as_bytes());
+            lo.write(&[0xFF]);
+            hi.write(p.as_bytes());
+            hi.write(&[0xFF]);
+        }
+        ContentHash(((hi.finish() as u128) << 64) | lo.finish() as u128)
+    }
+
+    /// 32-hex-digit rendering (the `key` field of service responses).
+    pub fn to_hex(self) -> String {
+        format!("{:032x}", self.0)
+    }
+}
+
+impl fmt::Display for ContentHash {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{:032x}", self.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fnv_matches_reference_vectors() {
+        // Published FNV-1a 64 test vectors.
+        assert_eq!(fnv1a_64(b""), 0xcbf29ce484222325);
+        assert_eq!(fnv1a_64(b"a"), 0xaf63dc4c8601ec8c);
+        assert_eq!(fnv1a_64(b"foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn parts_are_prefix_free() {
+        assert_ne!(ContentHash::of_parts(&["ab", "c"]), ContentHash::of_parts(&["a", "bc"]));
+        assert_ne!(ContentHash::of_parts(&["ab"]), ContentHash::of_parts(&["ab", ""]));
+        assert_eq!(ContentHash::of_parts(&["x", "y"]), ContentHash::of_parts(&["x", "y"]));
+    }
+
+    #[test]
+    fn hex_is_32_digits() {
+        let h = ContentHash::of_parts(&["hello"]);
+        let hex = h.to_hex();
+        assert_eq!(hex.len(), 32);
+        assert_eq!(hex, h.to_string());
+    }
+}

@@ -5,8 +5,6 @@
 use std::collections::BTreeMap;
 use std::fmt;
 
-use thiserror::Error;
-
 /// A JSON value. Objects use `BTreeMap` so serialization is deterministic.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
@@ -19,12 +17,19 @@ pub enum Json {
 }
 
 /// JSON parse error with byte offset.
-#[derive(Debug, Error)]
-#[error("json parse error at byte {at}: {msg}")]
+#[derive(Debug)]
 pub struct JsonError {
     pub at: usize,
     pub msg: String,
 }
+
+impl fmt::Display for JsonError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "json parse error at byte {}: {}", self.at, self.msg)
+    }
+}
+
+impl std::error::Error for JsonError {}
 
 impl Json {
     pub fn parse(text: &str) -> Result<Json, JsonError> {

@@ -3,9 +3,11 @@
 //! harness and a tiny property-testing helper.
 
 pub mod benchkit;
+pub mod hash;
 pub mod json;
 pub mod prop;
 pub mod rng;
 
+pub use hash::{fnv1a_64, ContentHash, Fnv64};
 pub use json::Json;
 pub use rng::Rng;

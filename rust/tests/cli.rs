@@ -214,3 +214,67 @@ fn bad_scenario_spec_rejected() {
     assert!(!out.status.success());
     assert!(String::from_utf8_lossy(&out.stderr).contains("bad scenario"));
 }
+
+#[test]
+fn dse_jobs_flag_is_bit_identical_across_worker_counts() {
+    let dir = tmpdir("dse_jobs");
+    let design = write_design(&dir);
+    let run = |jobs: &str| {
+        let out = olympus()
+            .args(["dse", design.to_str().unwrap(), "--jobs", jobs])
+            .output()
+            .unwrap();
+        assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+        String::from_utf8_lossy(&out.stdout).to_string()
+    };
+    let one = run("1");
+    let four = run("4");
+    assert!(one.contains("best: "), "{one}");
+    assert_eq!(one, four, "--jobs must not change the decision table");
+}
+
+#[test]
+fn serve_and_submit_round_trip_with_cache() {
+    use std::io::{BufRead, BufReader};
+    let dir = tmpdir("serve");
+    let design = write_design(&dir);
+    // port 0: the daemon prints the resolved address on its first line
+    let mut child = olympus()
+        .args(["serve", "--addr", "127.0.0.1:0", "--jobs", "2"])
+        .stdout(std::process::Stdio::piped())
+        .spawn()
+        .unwrap();
+    let mut first_line = String::new();
+    BufReader::new(child.stdout.as_mut().unwrap()).read_line(&mut first_line).unwrap();
+    let addr = first_line.trim().rsplit(' ').next().unwrap().to_string();
+    assert!(first_line.contains("listening"), "{first_line}");
+
+    let submit = |extra: &[&str]| {
+        let mut args =
+            vec!["submit", design.to_str().unwrap(), "--addr", addr.as_str(), "--factors", "2"];
+        args.extend_from_slice(extra);
+        olympus().args(&args).output().unwrap()
+    };
+    let cold = submit(&[]);
+    assert!(cold.status.success(), "{}", String::from_utf8_lossy(&cold.stderr));
+    let cold_out = String::from_utf8_lossy(&cold.stdout).to_string();
+    assert!(cold_out.contains("best: "), "{cold_out}");
+
+    // identical request again: answered from the content-addressed cache
+    let warm = submit(&[]);
+    assert!(warm.status.success());
+    assert_eq!(String::from_utf8_lossy(&warm.stdout), cold_out, "bit-identical");
+    assert!(
+        String::from_utf8_lossy(&warm.stderr).contains("served from cache"),
+        "{}",
+        String::from_utf8_lossy(&warm.stderr)
+    );
+
+    let stats = olympus().args(["cache-stats", "--addr", addr.as_str()]).output().unwrap();
+    assert!(stats.status.success(), "{}", String::from_utf8_lossy(&stats.stderr));
+    let s = String::from_utf8_lossy(&stats.stdout);
+    assert!(s.contains("\"hits\":1"), "{s}");
+
+    child.kill().unwrap();
+    let _ = child.wait();
+}

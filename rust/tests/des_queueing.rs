@@ -1,0 +1,143 @@
+//! Queueing-theory calibration of the discrete-event engine against
+//! closed-form results (M/M/1, M/D/1), plus replica-striping throughput.
+
+use olympus::coordinator::run_flow;
+use olympus::des::{
+    build_network, simulate_network, CuSpec, DesConfig, DesNet, FifoSpec, FlowSpec, MoverSpec,
+    ServiceDist, WorkloadScenario,
+};
+use olympus::dialect::build::fig4a_module;
+use olympus::platform::builtin;
+
+/// A single-server queue: fast 1-elem movers on separate channels feed a
+/// CU whose service dominates end-to-end latency. On `generic-ddr`
+/// (300 MHz kernel clock) II = 3000 gives a 10 us mean service per job,
+/// i.e. mu = 100_000 jobs/s.
+fn single_server_net() -> DesNet {
+    let plat = builtin("generic-ddr").unwrap();
+    let mover = |name: &str, pc: usize, read: bool, fifo: usize| MoverSpec {
+        name: name.to_string(),
+        pc,
+        read,
+        flows: vec![FlowSpec {
+            base: format!("b{fifo}"),
+            fifo: Some(fifo),
+            elems_per_job: 1,
+            beats_per_elem: 1.0,
+        }],
+    };
+    DesNet {
+        platform: plat,
+        fifos: vec![
+            // effectively infinite queues: no backpressure in the model
+            FifoSpec { name: "in".into(), cap_elems: 1_000_000 },
+            FifoSpec { name: "out".into(), cap_elems: 1_000_000 },
+        ],
+        movers: vec![mover("dm_in", 0, true, 0), mover("dm_out", 1, false, 1)],
+        cus: vec![CuSpec {
+            name: "srv".into(),
+            in_fifos: vec![0],
+            out_fifos: vec![1],
+            ii: 3000,
+            latency: 0,
+            out_elems_per_job: 1,
+        }],
+        fifo_job_elems: vec![1, 1],
+    }
+}
+
+const MU: f64 = 100_000.0; // 3000 cycles / 300 MHz = 10 us per job
+const LAMBDA: f64 = 50_000.0; // rho = 0.5
+const JOBS: u64 = 4000;
+
+fn config(dist: ServiceDist) -> DesConfig {
+    DesConfig {
+        seed: 11,
+        burst_elems: 1, // one element == one job == one service
+        service_dist: dist,
+        ..DesConfig::default()
+    }
+}
+
+/// M/M/1: Poisson arrivals, exponential service, one server. The mean
+/// sojourn (wait + service) must match the closed form W = 1/(mu - lambda).
+#[test]
+fn mm1_mean_sojourn_matches_closed_form() {
+    let net = single_server_net();
+    let sc = WorkloadScenario::poisson(LAMBDA, JOBS);
+    let r = simulate_network(&net, &sc, &config(ServiceDist::Exponential)).unwrap();
+    assert_eq!(r.jobs_completed, JOBS);
+    let want = 1.0 / (MU - LAMBDA); // 20 us at rho = 0.5
+    let got = r.mean_job_latency_s;
+    assert!(
+        (got - want).abs() / want < 0.20,
+        "M/M/1 sojourn: simulated {got:.3e} want {want:.3e} (+-20%)"
+    );
+}
+
+/// Same queue with deterministic service is M/D/1, whose sojourn
+/// W = 1/mu + rho / (2 mu (1 - rho)) is 25% below the M/M/1 value — the
+/// pair of tests pins that the service-distribution knob actually changes
+/// the queueing behavior, not just the label.
+#[test]
+fn md1_mean_sojourn_matches_pollaczek_khinchine() {
+    let net = single_server_net();
+    let sc = WorkloadScenario::poisson(LAMBDA, JOBS);
+    let r = simulate_network(&net, &sc, &config(ServiceDist::Deterministic)).unwrap();
+    assert_eq!(r.jobs_completed, JOBS);
+    let rho = LAMBDA / MU;
+    let want = 1.0 / MU + rho / (2.0 * MU * (1.0 - rho)); // 15 us
+    let got = r.mean_job_latency_s;
+    assert!(
+        (got - want).abs() / want < 0.15,
+        "M/D/1 sojourn: simulated {got:.3e} want {want:.3e} (+-15%)"
+    );
+    // directional: exponential service queues strictly worse
+    let exp = simulate_network(&net, &sc, &config(ServiceDist::Exponential)).unwrap();
+    assert!(exp.mean_job_latency_s > got, "Exp {} vs Det {got}", exp.mean_job_latency_s);
+}
+
+#[test]
+fn exponential_service_is_seed_deterministic() {
+    let net = single_server_net();
+    let sc = WorkloadScenario::poisson(LAMBDA, 200);
+    let a = simulate_network(&net, &sc, &config(ServiceDist::Exponential)).unwrap();
+    let b = simulate_network(&net, &sc, &config(ServiceDist::Exponential)).unwrap();
+    assert_eq!(a, b, "same seed, bit-identical report");
+    let other = DesConfig { seed: 12, ..config(ServiceDist::Exponential) };
+    let c = simulate_network(&net, &sc, &other).unwrap();
+    assert_ne!(a.mean_job_latency_s, c.mean_job_latency_s);
+}
+
+/// Replica-aware striping: a factor-2 replicated design finishes a batch
+/// roughly twice as fast when each job's payload is striped across the
+/// replicas instead of being replayed in full by both.
+#[test]
+fn striping_halves_replicated_batch_makespan() {
+    let plat = builtin("u280").unwrap();
+    let arch = run_flow(
+        fig4a_module(),
+        &plat,
+        Some("sanitize, replicate{factor=2}, channel-reassign"),
+    )
+    .unwrap()
+    .arch;
+    let net = build_network(&arch).unwrap();
+    let sc = WorkloadScenario::closed_loop(8);
+    let striped =
+        simulate_network(&net, &sc, &DesConfig::default()).unwrap();
+    let unstriped = simulate_network(
+        &net,
+        &sc,
+        &DesConfig { stripe_replicas: false, ..DesConfig::default() },
+    )
+    .unwrap();
+    assert_eq!(striped.jobs_completed, 8);
+    assert_eq!(unstriped.jobs_completed, 8);
+    assert!(
+        striped.makespan_s < 0.7 * unstriped.makespan_s,
+        "striping must credit replication with throughput: striped {} unstriped {}",
+        striped.makespan_s,
+        unstriped.makespan_s
+    );
+}

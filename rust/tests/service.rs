@@ -1,0 +1,226 @@
+//! `olympus serve` end-to-end: protocol robustness, cache single-flight,
+//! the warm-repeat speedup, and bit-identity of served results with the
+//! single-shot library path regardless of worker count.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::Instant;
+
+use olympus::des::{DesConfig, WorkloadScenario};
+use olympus::ir::parse_module;
+use olympus::passes::{run_dse_with, DseObjective, DseOptions};
+use olympus::platform::builtin;
+use olympus::service::{ServeOptions, Server};
+use olympus::util::Json;
+
+const DESIGN: &str = r#"
+%a = "olympus.make_channel"() {encapsulatedType = i32, paramType = "stream", depth = 1024} : () -> (!olympus.channel<i32>)
+%b = "olympus.make_channel"() {encapsulatedType = i32, paramType = "stream", depth = 1024} : () -> (!olympus.channel<i32>)
+%c = "olympus.make_channel"() {encapsulatedType = i32, paramType = "stream", depth = 1024} : () -> (!olympus.channel<i32>)
+"olympus.kernel"(%a, %b, %c) {callee = "vecadd_1024", latency = 1060, ii = 1, ff = 4316, lut = 5373, bram = 2, uram = 0, dsp = 0, operand_segment_sizes = array<i32: 2, 1>} : (!olympus.channel<i32>, !olympus.channel<i32>, !olympus.channel<i32>) -> ()
+"#;
+
+struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    fn connect(addr: SocketAddr) -> Client {
+        let stream = TcpStream::connect(addr).expect("connect to test server");
+        let reader = BufReader::new(stream.try_clone().unwrap());
+        Client { reader, writer: stream }
+    }
+
+    /// One request line -> parsed response.
+    fn call_raw(&mut self, line: &str) -> Json {
+        self.writer.write_all(line.as_bytes()).unwrap();
+        self.writer.write_all(b"\n").unwrap();
+        self.writer.flush().unwrap();
+        let mut resp = String::new();
+        self.reader.read_line(&mut resp).unwrap();
+        assert!(!resp.is_empty(), "server dropped the connection");
+        Json::parse(resp.trim()).expect("response is valid JSON")
+    }
+
+    fn call(&mut self, fields: Vec<(&str, Json)>) -> Json {
+        self.call_raw(&Json::obj(fields).to_string())
+    }
+}
+
+fn dse_request(seed: u64, factors: &[u64]) -> Vec<(&'static str, Json)> {
+    vec![
+        ("cmd", "dse".into()),
+        ("ir", DESIGN.into()),
+        ("platform", "u280".into()),
+        ("objective", "des-score".into()),
+        ("scenario", "closed:4".into()),
+        ("seed", seed.into()),
+        ("factors", factors.to_vec().into()),
+    ]
+}
+
+#[test]
+fn malformed_requests_get_structured_errors_and_connection_survives() {
+    let server = Server::bind("127.0.0.1:0", ServeOptions::default()).unwrap();
+    let mut c = Client::connect(server.addr());
+
+    // not JSON at all
+    let v = c.call_raw("this is not json");
+    assert_eq!(v.get("ok"), &Json::Bool(false));
+    assert_eq!(v.get("error").get("code").as_str(), Some("bad-json"));
+
+    // JSON, but not a request
+    let v = c.call_raw("[1, 2, 3]");
+    assert_eq!(v.get("error").get("code").as_str(), Some("bad-request"));
+
+    // unknown command, id still echoed
+    let v = c.call_raw(r#"{"cmd": "frobnicate", "id": 7}"#);
+    assert_eq!(v.get("error").get("code").as_str(), Some("bad-request"));
+    assert_eq!(v.get("id").as_f64(), Some(7.0));
+
+    // job command without IR
+    let v = c.call_raw(r#"{"cmd": "dse"}"#);
+    assert_eq!(v.get("ok"), &Json::Bool(false));
+
+    // bad IR inside a well-formed request
+    let v = c.call(vec![("cmd", "flow".into()), ("ir", "%0 = broken".into())]);
+    assert_eq!(v.get("error").get("code").as_str(), Some("bad-ir"));
+
+    // unknown platform
+    let v = c.call(vec![
+        ("cmd", "flow".into()),
+        ("ir", DESIGN.into()),
+        ("platform", "nonesuch".into()),
+    ]);
+    assert_eq!(v.get("error").get("code").as_str(), Some("bad-platform"));
+
+    // the same connection still serves good requests after all that
+    let v = c.call(vec![("cmd", "ping".into()), ("id", "still-alive".into())]);
+    assert_eq!(v.get("ok"), &Json::Bool(true));
+    assert_eq!(v.get("id").as_str(), Some("still-alive"));
+
+    server.shutdown();
+}
+
+#[test]
+fn concurrent_identical_submits_evaluate_once() {
+    let server = Server::bind(
+        "127.0.0.1:0",
+        ServeOptions { workers: 4, ..ServeOptions::default() },
+    )
+    .unwrap();
+    let addr = server.addr();
+    let line = Json::obj(dse_request(5, &[2])).to_string();
+
+    let mut handles = Vec::new();
+    for _ in 0..8 {
+        let line = line.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut c = Client::connect(addr);
+            c.call_raw(&line)
+        }));
+    }
+    let responses: Vec<Json> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+
+    let mut computed = 0;
+    for v in &responses {
+        assert_eq!(v.get("ok"), &Json::Bool(true), "{v}");
+        assert_eq!(v.get("result"), responses[0].get("result"), "payloads bit-identical");
+        assert_eq!(v.get("key"), responses[0].get("key"));
+        if v.get("cached") == &Json::Bool(false) {
+            computed += 1;
+        }
+    }
+    assert_eq!(computed, 1, "single-flight: exactly one request computed");
+
+    // the protocol view of the counters agrees
+    let mut c = Client::connect(addr);
+    let stats = c.call(vec![("cmd", "cache-stats".into())]);
+    let resp = stats.get("result").get("responses");
+    assert_eq!(resp.get("misses").as_usize(), Some(1), "{stats}");
+    assert_eq!(
+        resp.get("hits").as_usize().unwrap() + resp.get("coalesced").as_usize().unwrap(),
+        7,
+        "{stats}"
+    );
+    server.shutdown();
+}
+
+/// Acceptance: a warm-cache repeat of an identical DSE request is >= 10x
+/// faster than the cold evaluation.
+#[test]
+fn warm_repeat_is_at_least_10x_faster() {
+    let server = Server::bind("127.0.0.1:0", ServeOptions::default()).unwrap();
+    let mut c = Client::connect(server.addr());
+    let req = dse_request(42, &[2, 4]);
+
+    let t0 = Instant::now();
+    let cold = c.call(req.clone());
+    let cold_t = t0.elapsed();
+    assert_eq!(cold.get("cached"), &Json::Bool(false));
+
+    let t1 = Instant::now();
+    let warm = c.call(req);
+    let warm_t = t1.elapsed();
+    assert_eq!(warm.get("cached"), &Json::Bool(true));
+    assert_eq!(warm.get("result"), cold.get("result"), "warm result bit-identical");
+
+    // a des-score DSE costs tens of ms; a warm hit is a hash + lookup +
+    // one response line. The sub-ms escape hatch keeps loaded CI machines
+    // from flaking the ratio when the cold run happens to be fast.
+    assert!(
+        warm_t * 10 <= cold_t || warm_t.as_micros() < 1000,
+        "warm {warm_t:?} vs cold {cold_t:?}"
+    );
+    server.shutdown();
+}
+
+/// Acceptance: served results are bit-identical to the single-shot library
+/// path for the same seed, regardless of worker count.
+#[test]
+fn served_results_are_bit_identical_across_worker_counts_and_cli_path() {
+    let seed = 9;
+    let factors = [2u64, 4];
+
+    // the exact flow the service builds for this request, run in-process
+    let opts = DseOptions {
+        factors: factors.to_vec(),
+        objective: DseObjective::des_score_with(
+            WorkloadScenario::closed_loop(4),
+            DesConfig { seed, ..DesConfig::default() },
+        ),
+        threads: 3,
+        cache: None,
+    };
+    let m = parse_module(DESIGN).unwrap();
+    let direct = run_dse_with(&m, &builtin("u280").unwrap(), &opts).unwrap();
+    let direct_table = olympus::coordinator::render_dse_table(&direct);
+
+    let mut tables = Vec::new();
+    for workers in [1usize, 4] {
+        let server = Server::bind(
+            "127.0.0.1:0",
+            ServeOptions { workers, ..ServeOptions::default() },
+        )
+        .unwrap();
+        let mut c = Client::connect(server.addr());
+        let v = c.call(dse_request(seed, &factors));
+        assert_eq!(v.get("ok"), &Json::Bool(true), "{v}");
+        tables.push(v.get("result").get("table").as_str().unwrap().to_string());
+        server.shutdown();
+    }
+    assert_eq!(tables[0], tables[1], "worker count must not change results");
+    assert_eq!(tables[0], direct_table, "served == single-shot library output");
+}
+
+#[test]
+fn shutdown_request_stops_the_server() {
+    let server = Server::bind("127.0.0.1:0", ServeOptions::default()).unwrap();
+    let addr = server.addr();
+    let mut c = Client::connect(addr);
+    let v = c.call(vec![("cmd", "shutdown".into())]);
+    assert_eq!(v.get("ok"), &Json::Bool(true));
+    // wait() returns because the accept loop and workers exit
+    server.wait();
+}
