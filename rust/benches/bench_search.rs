@@ -1,0 +1,96 @@
+//! §Perf: search-driver cost comparison.
+//!
+//! Measures wall time per DSE run and — the number multi-fidelity search
+//! exists to shrink — full-fidelity (DES) evaluations per run, for:
+//!
+//! * `exhaustive` under the analytic and `des-score` objectives;
+//! * `successive-halving` under `des-score` (auto budget: a quarter of the
+//!   space), which screens all points analytically and promotes only the
+//!   top fraction to discrete-event simulation;
+//! * `random` under `des-score` with the same budget, as the no-screen
+//!   control.
+//!
+//! The throughput column reports DES evaluations per run, so the
+//! multi-fidelity saving is visible directly in the table. Run with
+//! `BENCH_FAST=1` for the CI smoke mode.
+
+use olympus::des::{DesConfig, WorkloadScenario};
+use olympus::dialect::build::fig4a_module;
+use olympus::passes::{run_dse_with, DseObjective, DseOptions, DseReport};
+use olympus::platform::builtin;
+use olympus::search::{DriverKind, SearchSpace, StrategyGrid};
+use olympus::util::benchkit::Bench;
+
+fn des_objective() -> DseObjective {
+    DseObjective::des_score_with(WorkloadScenario::closed_loop(2), DesConfig::default())
+}
+
+fn main() {
+    let mut b = Bench::new("search");
+    let m = fig4a_module();
+    let plat = builtin("u280").unwrap();
+    let factors = [2u64, 4];
+    let n = StrategyGrid::new(&factors).enumerate().len();
+
+    let opts = |driver: DriverKind, objective: DseObjective| DseOptions {
+        factors: factors.to_vec(),
+        objective,
+        threads: 1,
+        cache: None,
+        driver,
+    };
+
+    let cases: Vec<(&str, DseOptions)> = vec![
+        ("exhaustive_analytic", opts(DriverKind::Exhaustive, DseObjective::Analytic)),
+        ("exhaustive_des_score", opts(DriverKind::Exhaustive, des_objective())),
+        (
+            "successive_halving_des_score",
+            opts(DriverKind::SuccessiveHalving { budget: 0 }, des_objective()),
+        ),
+        (
+            "random_des_score",
+            opts(
+                DriverKind::Random { budget: n.div_ceil(4).max(2), seed: 42 },
+                des_objective(),
+            ),
+        ),
+    ];
+
+    let mut summaries: Vec<(String, DseReport)> = Vec::new();
+    for (name, o) in cases {
+        let mut last: Option<DseReport> = None;
+        b.bench_with_throughput(name, || {
+            let rep = run_dse_with(&m, &plat, &o).expect("dse");
+            let evals = rep.full_evals as f64;
+            last = Some(rep);
+            Some((evals, "full-evals".to_string()))
+        });
+        if let Some(rep) = last {
+            summaries.push((name.to_string(), rep));
+        }
+    }
+    b.run();
+
+    // the number this bench exists to show: DES runs per driver + winner
+    println!("\nspace: {n} points (factors {factors:?})");
+    for (name, rep) in &summaries {
+        println!(
+            "DRIVER\t{name}\tfull_evals={}\tscreened={}\tbest={}",
+            rep.full_evals, rep.screened, rep.best_strategy
+        );
+    }
+    if let (Some((_, ex)), Some((_, sh))) = (
+        summaries.iter().find(|(n, _)| n == "exhaustive_des_score"),
+        summaries.iter().find(|(n, _)| n == "successive_halving_des_score"),
+    ) {
+        println!(
+            "successive-halving spent {} DES evaluations vs exhaustive's {} ({}x cheaper), \
+             winner {} vs {}",
+            sh.full_evals,
+            ex.full_evals,
+            if sh.full_evals > 0 { ex.full_evals / sh.full_evals } else { 0 },
+            sh.best_strategy,
+            ex.best_strategy
+        );
+    }
+}

@@ -11,6 +11,7 @@ use crate::lower::{build_architecture, emit_host_driver, emit_verilog, emit_viti
 use crate::passes::manager::{parse_pipeline, PassContext, PassRecord};
 use crate::passes::{run_dse_with, CandidateCache, DseObjective, DseOptions, DseReport as DseTable};
 use crate::platform::PlatformSpec;
+use crate::search::DriverKind;
 use crate::util::ContentHash;
 
 /// Flow configuration.
@@ -20,6 +21,10 @@ pub struct Flow {
     pub pipeline: Option<String>,
     /// Replication factors swept by the DSE (empty = defaults).
     pub dse_factors: Vec<u64>,
+    /// Search policy for DSE mode (`olympus dse --driver/--budget`; part of
+    /// [`Flow::cache_key`] — two runs that search differently are different
+    /// evaluations).
+    pub driver: DriverKind,
     /// Objective for DSE mode (analytic or des-score).
     pub objective: DseObjective,
     /// When set, the final architecture is replayed through the
@@ -66,6 +71,7 @@ impl Flow {
             platform,
             pipeline: None,
             dse_factors: Vec::new(),
+            driver: DriverKind::Exhaustive,
             objective: DseObjective::Analytic,
             scenario: None,
             des_config: DesConfig::default(),
@@ -81,6 +87,11 @@ impl Flow {
 
     pub fn with_objective(mut self, objective: DseObjective) -> Self {
         self.objective = objective;
+        self
+    }
+
+    pub fn with_driver(mut self, driver: DriverKind) -> Self {
+        self.driver = driver;
         self
     }
 
@@ -106,16 +117,29 @@ impl Flow {
     /// bit-identical regardless). The service keys its response cache on
     /// this.
     pub fn cache_key(&self, input: &Module) -> ContentHash {
+        // v2: DSE routes carry the search driver (+ its budget/seed), so a
+        // budgeted search can never serve from — or poison — an exhaustive
+        // run's response entry. Factors are canonicalized here too, so
+        // library callers that skip the CLI/protocol normalization still
+        // share one address per search space ([4,2,2] keys like [2,4];
+        // invalid lists keep their raw spelling and fail at run time).
         let route = match &self.pipeline {
             Some(p) => format!("pipeline:{p}"),
-            None => format!("dse:{:?}:factors={:?}", self.objective, self.dse_factors),
+            None => {
+                let factors = crate::search::normalize_factors(&self.dse_factors)
+                    .unwrap_or_else(|_| self.dse_factors.clone());
+                format!(
+                    "dse:{:?}:factors={:?}:driver={:?}",
+                    self.objective, factors, self.driver
+                )
+            }
         };
         let replay = match &self.scenario {
             Some(sc) => format!("{sc:?}:{:?}", self.des_config),
             None => String::new(),
         };
         ContentHash::of_parts(&[
-            "olympus-flow-v1",
+            "olympus-flow-v2",
             &module_fingerprint(input),
             &self.platform.fingerprint(),
             &route,
@@ -140,6 +164,7 @@ impl Flow {
                     objective: self.objective.clone(),
                     threads: self.jobs,
                     cache: self.cache.clone(),
+                    driver: self.driver.clone(),
                 };
                 let rep = run_dse_with(&module, &self.platform, &opts)?;
                 module = rep.best.clone();
@@ -229,6 +254,51 @@ mod tests {
         assert_eq!(des.jobs_completed, 2);
         assert!(des.makespan_s > 0.0);
         assert!(!des.nodes.is_empty());
+    }
+
+    #[test]
+    fn cache_key_round_trips_driver_and_budget() {
+        use crate::search::DriverKind;
+        let m = fig4a_module();
+        let base = Flow::new(builtin("u280").unwrap());
+        let exhaustive = base.cache_key(&m);
+        let sh = Flow::new(builtin("u280").unwrap())
+            .with_driver(DriverKind::SuccessiveHalving { budget: 3 })
+            .cache_key(&m);
+        let sh4 = Flow::new(builtin("u280").unwrap())
+            .with_driver(DriverKind::SuccessiveHalving { budget: 4 })
+            .cache_key(&m);
+        assert_ne!(exhaustive, sh, "driver must be part of the response address");
+        assert_ne!(sh, sh4, "budget must be part of the response address");
+        // factor lists canonicalize inside the key, not just at the edges
+        let mut messy = Flow::new(builtin("u280").unwrap());
+        messy.dse_factors = vec![4, 2, 2];
+        let mut clean = Flow::new(builtin("u280").unwrap());
+        clean.dse_factors = vec![2, 4];
+        assert_eq!(messy.cache_key(&m), clean.cache_key(&m));
+        // explicit pipelines ignore the driver: same key either way
+        let p1 = Flow::new(builtin("u280").unwrap())
+            .with_pipeline("sanitize, iris, channel-reassign")
+            .cache_key(&m);
+        let p2 = Flow::new(builtin("u280").unwrap())
+            .with_pipeline("sanitize, iris, channel-reassign")
+            .with_driver(DriverKind::SuccessiveHalving { budget: 3 })
+            .cache_key(&m);
+        assert_eq!(p1, p2);
+    }
+
+    #[test]
+    fn sh_driver_flow_end_to_end() {
+        use crate::search::DriverKind;
+        let r = Flow::new(builtin("u280").unwrap())
+            .with_driver(DriverKind::SuccessiveHalving { budget: 3 })
+            .run(fig4a_module(), "app")
+            .unwrap();
+        let dse = r.dse.expect("dse table");
+        assert_eq!(dse.driver, "successive-halving");
+        assert_eq!(dse.full_evals, 3);
+        assert!(dse.screened >= dse.candidates.len());
+        assert!(!r.arch.cus.is_empty());
     }
 
     #[test]

@@ -42,7 +42,7 @@ pub enum ServiceDist {
 /// Engine knobs (separate from the workload scenario).
 #[derive(Debug, Clone)]
 pub struct DesConfig {
-    /// RNG seed for the arrival process (and service draws, when the
+    /// RNG seed for the arrival process (and service draws, when a
     /// service distribution is stochastic).
     pub seed: u64,
     /// Transfer/service granularity in elements. Smaller = finer-grained
@@ -60,8 +60,35 @@ pub struct DesConfig {
     /// copy. On by default: this is what makes `replicate` a throughput
     /// play under `des-score`.
     pub stripe_replicas: bool,
-    /// CU service-time distribution.
+    /// Default CU service-time distribution (per-CU overrides below win).
     pub service_dist: ServiceDist,
+    /// Per-CU service-distribution overrides: an entry matches a CU whose
+    /// name equals it, or extends it at a `_` separator — so `cu_k` covers
+    /// every replica/lane clone (`cu_k_0_r1_l0`, ...) the replicate and
+    /// bus-widen passes generate, without `s1` accidentally matching `s10`.
+    /// Lets a single data-dependent kernel go heavy-tailed while the rest
+    /// of the design stays deterministic; the last matching entry wins.
+    pub cu_service_dists: Vec<(String, ServiceDist)>,
+}
+
+impl DesConfig {
+    /// Effective service distribution for the CU named `cu_name` (see
+    /// [`DesConfig::cu_service_dists`] for the matching rule).
+    pub fn dist_for(&self, cu_name: &str) -> ServiceDist {
+        let matches = |name: &str| {
+            cu_name == name
+                || cu_name
+                    .strip_prefix(name)
+                    .map(|rest| rest.starts_with('_'))
+                    .unwrap_or(false)
+        };
+        self.cu_service_dists
+            .iter()
+            .rev()
+            .find(|(name, _)| matches(name))
+            .map(|(_, dist)| *dist)
+            .unwrap_or(self.service_dist)
+    }
 }
 
 impl Default for DesConfig {
@@ -74,6 +101,7 @@ impl Default for DesConfig {
             max_events: 20_000_000,
             stripe_replicas: true,
             service_dist: ServiceDist::Deterministic,
+            cu_service_dists: Vec::new(),
         }
     }
 }
@@ -165,6 +193,8 @@ struct Engine<'a> {
     service_ps_per_elem: Vec<f64>,
     /// Per-CU pipeline-fill charge, ps.
     fill_ps: Vec<f64>,
+    /// Per-CU effective service distribution (config default + overrides).
+    cu_dists: Vec<ServiceDist>,
     arrivals: Vec<TimePoint>,
     released: u64,
     completed: u64,
@@ -216,6 +246,7 @@ pub fn simulate_network(
         net.cus.iter().map(|c| timing.cu_service_s(c.ii, 1) * PS_PER_S).collect();
     let fill_ps: Vec<f64> =
         net.cus.iter().map(|c| timing.cu_fill_s(c.latency) * PS_PER_S).collect();
+    let cu_dists: Vec<ServiceDist> = net.cus.iter().map(|c| cfg.dist_for(&c.name)).collect();
 
     let mut fifos: Vec<FifoRt> = net.fifos.iter().map(|_| FifoRt::default()).collect();
     // wire wake lists (deterministic: build order)
@@ -263,6 +294,7 @@ pub fn simulate_network(
             .collect(),
         service_ps_per_elem,
         fill_ps,
+        cu_dists,
         arrivals,
         released: 0,
         completed: 0,
@@ -587,7 +619,7 @@ impl<'a> Engine<'a> {
             self.fifos[f].reserved += n;
         }
         let mut service_ps = n as f64 * self.service_ps_per_elem[ci];
-        if self.cfg.service_dist == ServiceDist::Exponential {
+        if self.cu_dists[ci] == ServiceDist::Exponential {
             // Exp(mean = deterministic service): -mean * ln(1 - U), U in [0,1)
             let u = self.service_rng.f64();
             service_ps *= -(1.0 - u).ln();

@@ -9,6 +9,10 @@
 //! * analyses ([`analysis`]) and transformation passes ([`passes`]) —
 //!   sanitize, channel reassignment, replication, bus widening, the Iris
 //!   bus optimization and Mnemosyne-style PLM sharing;
+//! * a pluggable design-space-search framework ([`search`]): search spaces
+//!   over pipeline schedules, two-fidelity evaluators and budgeted drivers
+//!   (exhaustive, seeded random, successive-halving multi-fidelity,
+//!   iterative greedy);
 //! * platform models ([`platform`]) for the Xilinx Alveo U280 and friends;
 //! * a hardware lowering ([`lower`]) producing an architecture netlist,
 //!   Vitis `.cfg`, Verilog stubs and a generated host API;
@@ -37,6 +41,7 @@ pub mod mnemosyne;
 pub mod passes;
 pub mod platform;
 pub mod runtime;
+pub mod search;
 pub mod service;
 pub mod sim;
 pub mod util;

@@ -4,6 +4,8 @@
 //! olympus platforms
 //! olympus opt   <file.mlir> [--platform u280] [--pipeline "sanitize,iris"]
 //! olympus dse   <file.mlir> [--platform u280] [--objective analytic|des-score] [--jobs N]
+//!               [--driver exhaustive|random|successive-halving|iterative]
+//!               [--budget N] [--search-seed N]
 //! olympus des   <file.mlir> [--platform u280] [--pipeline ...] [--scenario SPEC] [--seed N]
 //! olympus lower <file.mlir> [--platform u280] [--pipeline ...] [--out DIR]
 //! olympus run   <file.mlir> [--platform u280] [--pipeline ...] [--artifacts DIR] [--seed N]
@@ -94,10 +96,62 @@ fn usage() -> ! {
     eprintln!(
         "usage: olympus <platforms|opt|dse|des|lower|run|serve|submit|cache-stats> [input.mlir] \
          [--platform NAME|file.json] [--pipeline P] [--objective analytic|des-score] \
-         [--scenario closed:N|poisson:HZ:N|bursty:HZ:ON:OFF:N] [--out DIR] \
+         [--driver exhaustive|random|successive-halving|iterative] [--budget N] \
+         [--search-seed N] [--scenario closed:N|poisson:HZ:N|bursty:HZ:ON:OFF:N] [--out DIR] \
          [--artifacts DIR] [--seed N] [--jobs N] [--addr HOST:PORT] [--factors 2,4]"
     );
     std::process::exit(2)
+}
+
+/// Parse + validate `--factors`: entries must be integers >= 1, the list
+/// must not be empty, and it is normalized (sorted, deduplicated) so
+/// `--factors 4,2,2` addresses the same search space — and the same cache
+/// keys — as `--factors 2,4`. `None` when the flag is absent.
+fn factors_from_args(args: &Args) -> Result<Option<Vec<u64>>> {
+    let Some(fs) = args.flags.get("factors") else { return Ok(None) };
+    let mut factors = Vec::new();
+    for part in fs.split(',').map(|s| s.trim()).filter(|s| !s.is_empty()) {
+        factors.push(part.parse::<u64>().with_context(|| {
+            format!("--factors wants integers >= 1 (e.g. 2,4), got '{part}'")
+        })?);
+    }
+    if factors.is_empty() {
+        bail!("--factors was given but names no factors (e.g. --factors 2,4)");
+    }
+    let factors = olympus::search::normalize_factors(&factors).map_err(|e| anyhow::anyhow!(e))?;
+    Ok(Some(factors))
+}
+
+/// Flags that configure the design-space search. They only mean something
+/// to the searching commands (`dse`, and `des` without an explicit
+/// pipeline); anywhere else they would be silently dead, so
+/// [`reject_search_flags`] turns them into loud errors.
+const SEARCH_FLAGS: [&str; 4] = ["driver", "budget", "search-seed", "factors"];
+
+/// Reject any search flag present in `args`; `context` explains why the
+/// flags are dead here (e.g. which command, or "with an explicit
+/// --pipeline").
+fn reject_search_flags(args: &Args, context: &str) -> Result<()> {
+    for flag in SEARCH_FLAGS {
+        if args.flags.contains_key(flag) {
+            bail!("--{flag} configures the design-space search and is not supported {context}");
+        }
+    }
+    Ok(())
+}
+
+/// Build the search driver from `--driver` / `--budget` / `--search-seed`.
+fn driver_from_args(args: &Args) -> Result<olympus::search::DriverKind> {
+    let name = args.flags.get("driver").map(|s| s.as_str()).unwrap_or("exhaustive");
+    let budget = match args.flags.get("budget") {
+        Some(v) => Some(v.parse::<usize>().context("--budget wants a candidate count")?),
+        None => None,
+    };
+    let seed = match args.flags.get("search-seed") {
+        Some(v) => Some(v.parse::<u64>().context("--search-seed wants an integer")?),
+        None => None,
+    };
+    olympus::search::DriverKind::from_flags(name, budget, seed).map_err(|e| anyhow::anyhow!(e))
 }
 
 /// Parse a `--scenario` spec (see the crate docs above).
@@ -142,6 +196,7 @@ fn main() -> Result<()> {
             Ok(())
         }
         "opt" => {
+            reject_search_flags(&args, "by 'opt' (only 'dse' and 'des' search)")?;
             let input = args.positional.first().unwrap_or_else(|| usage());
             let m = load_module(input)?;
             let plat = load_platform(&args)?;
@@ -166,12 +221,10 @@ fn main() -> Result<()> {
             if let Some(jobs) = args.flags.get("jobs") {
                 flow = flow.with_jobs(jobs.parse().context("--jobs wants a thread count")?);
             }
-            if let Some(fs) = args.flags.get("factors") {
-                flow.dse_factors = fs
-                    .split(',')
-                    .map(|s| s.trim().parse::<u64>().context("--factors wants e.g. 2,4"))
-                    .collect::<Result<_>>()?;
+            if let Some(factors) = factors_from_args(&args)? {
+                flow.dse_factors = factors;
             }
+            flow = flow.with_driver(driver_from_args(&args)?);
             if args.flags.get("objective").map(|s| s.as_str()) == Some("des-score") {
                 let (scenario, cfg) = scenario_and_config(&args)?;
                 flow = flow
@@ -191,13 +244,26 @@ fn main() -> Result<()> {
                 olympus::coordinator::Flow::new(plat).with_scenario(scenario.clone());
             flow.des_config = cfg.clone();
             match pipeline {
-                Some(p) => flow = flow.with_pipeline(p),
+                Some(p) => {
+                    // an explicit pipeline skips the DSE entirely: search
+                    // flags would be silently dead, so reject them instead
+                    reject_search_flags(
+                        &args,
+                        "with an explicit --pipeline (drop --pipeline to search)",
+                    )?;
+                    flow = flow.with_pipeline(p);
+                }
                 // no explicit pipeline: the DSE picks the design, and for a
                 // DES-centric command it scores candidates with the DES too
                 None => {
-                    flow = flow.with_objective(
-                        olympus::passes::DseObjective::des_score_with(scenario, cfg),
-                    );
+                    if let Some(factors) = factors_from_args(&args)? {
+                        flow.dse_factors = factors;
+                    }
+                    flow = flow
+                        .with_objective(olympus::passes::DseObjective::des_score_with(
+                            scenario, cfg,
+                        ))
+                        .with_driver(driver_from_args(&args)?);
                 }
             }
             let r = flow.run(m, "app")?;
@@ -208,6 +274,7 @@ fn main() -> Result<()> {
             Ok(())
         }
         "lower" => {
+            reject_search_flags(&args, "by 'lower' (only 'dse' and 'des' search)")?;
             let input = args.positional.first().unwrap_or_else(|| usage());
             let m = load_module(input)?;
             let plat = load_platform(&args)?;
@@ -237,6 +304,7 @@ fn main() -> Result<()> {
             Ok(())
         }
         "run" => {
+            reject_search_flags(&args, "by 'run' (only 'dse' and 'des' search)")?;
             let input = args.positional.first().unwrap_or_else(|| usage());
             let m = load_module(input)?;
             let plat = load_platform(&args)?;
@@ -290,6 +358,9 @@ fn main() -> Result<()> {
             Ok(())
         }
         "serve" => {
+            // the daemon's search behavior comes from each request's
+            // fields, not from startup flags
+            reject_search_flags(&args, "by 'serve' (send driver/budget/factors per request)")?;
             use olympus::service::{ServeOptions, Server};
             let addr =
                 args.flags.get("addr").cloned().unwrap_or_else(|| "127.0.0.1:7878".to_string());
@@ -327,7 +398,7 @@ fn main() -> Result<()> {
                     fields.push(("platform_json", spec.to_json()));
                 }
             }
-            for key in ["pipeline", "objective", "scenario"] {
+            for key in ["pipeline", "objective", "scenario", "driver"] {
                 if let Some(v) = args.flags.get(key) {
                     fields.push((key, v.as_str().into()));
                 }
@@ -336,11 +407,15 @@ fn main() -> Result<()> {
                 let seed: u64 = seed.parse().context("--seed wants an integer")?;
                 fields.push(("seed", seed.into()));
             }
-            if let Some(fs) = args.flags.get("factors") {
-                let factors: Vec<u64> = fs
-                    .split(',')
-                    .map(|s| s.trim().parse::<u64>().context("--factors wants e.g. 2,4"))
-                    .collect::<Result<_>>()?;
+            if let Some(budget) = args.flags.get("budget") {
+                let budget: u64 = budget.parse().context("--budget wants a candidate count")?;
+                fields.push(("budget", budget.into()));
+            }
+            if let Some(seed) = args.flags.get("search-seed") {
+                let seed: u64 = seed.parse().context("--search-seed wants an integer")?;
+                fields.push(("search_seed", seed.into()));
+            }
+            if let Some(factors) = factors_from_args(&args)? {
                 fields.push(("factors", factors.into()));
             }
             let v = roundtrip(&args, Json::obj(fields))?;
@@ -365,6 +440,7 @@ fn main() -> Result<()> {
             Ok(())
         }
         "cache-stats" => {
+            reject_search_flags(&args, "by 'cache-stats'")?;
             let v = roundtrip(&args, Json::obj(vec![("cmd", "cache-stats".into())]))?;
             println!("{}", v.get("result"));
             Ok(())

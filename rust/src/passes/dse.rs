@@ -1,6 +1,17 @@
-//! The Fig 3 iterative optimization loop ("Olympus-Opt" box): candidate
-//! strategies are applied to clones of the input, evaluated with an
-//! objective, and the best design is returned.
+//! The Fig 3 optimization loop ("Olympus-Opt" box), built on the pluggable
+//! [`crate::search`] framework: a [`SearchSpace`](crate::search::SearchSpace)
+//! generates candidate pipeline schedules, an
+//! [`Evaluator`](crate::search::Evaluator) scores them (analytic or
+//! `des-score` fidelity), and a [`DriverKind`] policy decides which points
+//! get evaluated:
+//!
+//! * **`exhaustive`** (default) — every point, bit-identical to the classic
+//!   `olympus dse` walk;
+//! * **`random`** — a seeded sample under a candidate budget;
+//! * **`successive-halving`** — multi-fidelity: screen the whole space with
+//!   the cheap analytic objective, promote only the top fraction to full
+//!   (DES) evaluation;
+//! * **`iterative`** — the Fig 3 greedy loop as the sole candidate.
 //!
 //! Two objectives are available:
 //!
@@ -14,7 +25,8 @@
 //!   scenario makespan. Slower, so candidates are evaluated in parallel
 //!   (std threads, one cloned module per worker).
 //!
-//! Candidate pipelines:
+//! Candidate pipelines ([`strategies`], expanded by
+//! [`StrategyGrid`](crate::search::StrategyGrid)):
 //!
 //! | strategy          | pipeline                                             |
 //! |-------------------|------------------------------------------------------|
@@ -30,20 +42,20 @@
 //!
 //! [`Architecture`]: crate::lower::Architecture
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 
 use anyhow::Result;
 
 use crate::analysis::{analyze_bandwidth, analyze_resources, Dfg};
 use crate::des::{simulate, DesConfig, WorkloadScenario};
-use crate::ir::{module_fingerprint, Module};
+use crate::ir::Module;
 use crate::lower::build_architecture;
 use crate::platform::PlatformSpec;
+use crate::search::{
+    iterative_moves, normalize_factors, run_driver, DriverKind, ObjectiveEvaluator, StrategyGrid,
+};
 use crate::service::cache::EvalCache;
 use crate::util::ContentHash;
-
-use super::manager::{parse_pipeline, PassContext};
 
 /// One evaluated candidate.
 #[derive(Debug, Clone)]
@@ -65,11 +77,20 @@ pub struct DseCandidate {
     pub score: f64,
 }
 
-/// DSE outcome: the winning module + the full decision table.
+/// DSE outcome: the winning module + the full decision table, plus search
+/// provenance (which driver ran, how much it cost).
 pub struct DseReport {
     pub best: Module,
     pub best_strategy: String,
     pub candidates: Vec<DseCandidate>,
+    /// Driver that produced this report (`exhaustive`, `random`, ...).
+    pub driver: String,
+    /// Points ranked at the cheap screening fidelity (multi-fidelity
+    /// drivers only; 0 otherwise).
+    pub screened: usize,
+    /// Full-fidelity evaluations actually computed (cache hits excluded) —
+    /// under `des-score` each one is a discrete-event simulation.
+    pub full_evals: usize,
 }
 
 /// How candidates are scored.
@@ -120,7 +141,12 @@ pub type CandidateCache = EvalCache<CandidateOutcome>;
 /// Cache key for one candidate evaluation. `module_fp`/`platform_fp` are the
 /// stable fingerprints ([`module_fingerprint`],
 /// [`PlatformSpec::fingerprint`]); `objective_desc` is the objective's
-/// `Debug` rendering (covers scenario, seed and engine knobs).
+/// `Debug` rendering (covers scenario, seed and engine knobs). The driver is
+/// deliberately *not* part of this key: a candidate evaluation means the
+/// same thing whichever policy asked for it, which is what lets
+/// successive-halving reuse work an exhaustive run already paid for.
+///
+/// [`module_fingerprint`]: crate::ir::module_fingerprint
 pub fn candidate_cache_key(
     module_fp: &str,
     platform_fp: &str,
@@ -130,13 +156,11 @@ pub fn candidate_cache_key(
     ContentHash::of_parts(&["olympus-cand-v1", module_fp, platform_fp, pipeline, objective_desc])
 }
 
-/// Synthetic pipeline tag keying the Fig 3 iterative-loop candidate.
-const ITERATIVE_TAG: &str = "@iterative{max_rounds=8}";
-
 /// DSE tuning knobs.
 #[derive(Debug, Clone, Default)]
 pub struct DseOptions {
-    /// Replication factors swept (empty = {2, 4, 8, 16}).
+    /// Replication factors swept (empty = {2, 4, 8, 16}). Normalized
+    /// (sorted, deduplicated) before use; zero factors are rejected.
     pub factors: Vec<u64>,
     pub objective: DseObjective,
     /// Worker threads for candidate evaluation (0 = all available cores).
@@ -146,6 +170,8 @@ pub struct DseOptions {
     /// recomputation of candidates already evaluated under an identical
     /// (module, platform, pipeline, objective) key.
     pub cache: Option<Arc<CandidateCache>>,
+    /// Search policy (exhaustive | random | successive-halving | iterative).
+    pub driver: DriverKind,
 }
 
 /// Strategy table (name, pipeline template).
@@ -225,193 +251,40 @@ pub fn evaluate_candidate(
 }
 
 /// The paper's *iterative* optimize loop (Fig 3: "iterates over the
-/// Olympus-Opt analyses and transformations"): starting from sanitized IR,
-/// each round evaluates every applicable transformation with the analyses
-/// and keeps the single best-improving one; stops at a fixpoint (or after
-/// `max_rounds`). Returns the final module and the applied pass sequence.
+/// Olympus-Opt analyses and transformations"), ported onto the search
+/// framework: [`greedy_descent`](crate::search::greedy_descent) screens
+/// every move with the analytic fidelity each round and keeps the single
+/// best-improving one; stops at a fixpoint (or after `max_rounds`). Returns
+/// the final module and the applied pass sequence.
 pub fn run_iterative(
     input: &Module,
     plat: &PlatformSpec,
     max_rounds: usize,
 ) -> Result<(Module, Vec<String>)> {
-    let mut ctx = PassContext::new(plat.clone());
-    let mut m = input.clone();
-    parse_pipeline("sanitize", &mut ctx)?.run(&mut m, &ctx)?;
-    let mut applied = vec!["sanitize".to_string()];
-    let moves = [
-        "channel-reassign",
-        "iris, channel-reassign",
-        "bus-widen, channel-reassign",
-        "plm-share",
-        "fifo-sizing",
-        "replicate{factor=2}, channel-reassign",
-    ];
-    for _ in 0..max_rounds {
-        let (cur_makespan, _, _, cur_util, cur_fits, _) = evaluate(&m, plat);
-        let mut best: Option<(f64, Module, &str)> = None;
-        for mv in moves {
-            let mut trial = m.clone();
-            let mut tctx = PassContext::new(plat.clone());
-            let Ok(pm) = parse_pipeline(mv, &mut tctx) else { continue };
-            if pm.run(&mut trial, &tctx).is_err() {
-                continue;
-            }
-            let (mk, _, _, util, fits, _) = evaluate(&trial, plat);
-            // objective: makespan, but never trade feasibility away; prefer
-            // lower utilization on ties (plm-share/fifo-sizing enablers)
-            let improves = (fits || !cur_fits)
-                && (mk < cur_makespan * (1.0 - 1e-9)
-                    || (mk <= cur_makespan * (1.0 + 1e-9) && util < cur_util - 1e-9));
-            if improves && best.as_ref().map(|(b, _, _)| mk < *b).unwrap_or(true) {
-                best = Some((mk, trial, mv));
-            }
-        }
-        match best {
-            Some((_, next, mv)) => {
-                m = next;
-                applied.push(mv.to_string());
-            }
-            None => break, // fixpoint: no transformation helps
-        }
-    }
-    Ok((m, applied))
+    let objective = DseObjective::Analytic;
+    let evaluator = ObjectiveEvaluator::new(input, plat, &objective, 1, None);
+    crate::search::greedy_descent(&evaluator, &iterative_moves(), max_rounds)
 }
 
-/// Run DSE over the strategy table with full control over factors,
-/// objective and parallelism. Candidate evaluation is deterministic
-/// regardless of thread count: results land in per-variant slots and the
-/// winner scan is sequential.
+/// Run DSE over the strategy grid with full control over factors,
+/// objective, parallelism and search policy. Candidate evaluation is
+/// deterministic regardless of thread count: results land in per-point
+/// slots and the winner scan is sequential.
 pub fn run_dse_with(
     input: &Module,
     plat: &PlatformSpec,
     opts: &DseOptions,
 ) -> Result<DseReport> {
-    let default_factors = [2u64, 4, 8, 16];
-    let factors =
-        if opts.factors.is_empty() { &default_factors[..] } else { &opts.factors[..] };
-
-    // expand the strategy table into concrete (label, pipeline) variants
-    let mut variants: Vec<(String, String)> = Vec::new();
-    for (name, template) in strategies() {
-        if template.contains("FACTOR") {
-            for f in factors {
-                variants.push((
-                    format!("{name}(x{f})"),
-                    template.replace("FACTOR", &f.to_string()),
-                ));
-            }
-        } else {
-            variants.push((name.to_string(), template.to_string()));
-        }
-    }
-
-    let n = variants.len();
-    let threads = if opts.threads == 0 {
-        std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1)
-    } else {
-        opts.threads
-    }
-    .clamp(1, n);
-
-    // fingerprints are computed once per run; only cache-enabled runs pay
-    // for them when a variant actually needs a key
-    let module_fp = opts.cache.as_ref().map(|_| module_fingerprint(input));
-    let plat_fp = opts.cache.as_ref().map(|_| plat.fingerprint());
-    let obj_desc = format!("{:?}", opts.objective);
-
-    // Evaluate one (label, pipeline) variant from scratch.
-    let eval_variant = |label: &str, pipeline: &str| -> CandidateOutcome {
-        if pipeline == ITERATIVE_TAG {
-            // the Fig 3 iterative loop competes as its own candidate
-            return match run_iterative(input, plat, 8) {
-                Ok((m, applied)) => {
-                    let cand = evaluate_candidate(
-                        &m,
-                        plat,
-                        &opts.objective,
-                        "iterative".to_string(),
-                        applied.join("; "),
-                    );
-                    CandidateOutcome::Evaluated { cand, module: m }
-                }
-                Err(_) => CandidateOutcome::Infeasible,
-            };
-        }
-        let mut m = input.clone();
-        let mut ctx = PassContext::new(plat.clone());
-        let Ok(pm) = parse_pipeline(pipeline, &mut ctx) else {
-            return CandidateOutcome::Infeasible;
-        };
-        if pm.run(&mut m, &ctx).is_err() {
-            return CandidateOutcome::Infeasible; // verifier rejected
-        }
-        let cand =
-            evaluate_candidate(&m, plat, &opts.objective, label.to_string(), pipeline.to_string());
-        CandidateOutcome::Evaluated { cand, module: m }
-    };
-    // Same, answered through the content-addressed memo when one is wired
-    // in (single-flight: concurrent identical evaluations compute once).
-    let memoized = |label: &str, pipeline: &str| -> CandidateOutcome {
-        match &opts.cache {
-            Some(cache) => {
-                let key = candidate_cache_key(
-                    module_fp.as_deref().unwrap_or(""),
-                    plat_fp.as_deref().unwrap_or(""),
-                    pipeline,
-                    &obj_desc,
-                );
-                cache.get_or_compute(key, || eval_variant(label, pipeline)).0
-            }
-            None => eval_variant(label, pipeline),
-        }
-    };
-
-    let slots: Mutex<Vec<Option<(DseCandidate, Module)>>> =
-        Mutex::new((0..n).map(|_| None).collect());
-    let next = AtomicUsize::new(0);
-    std::thread::scope(|scope| {
-        for _ in 0..threads {
-            scope.spawn(|| loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= n {
-                    break;
-                }
-                let (label, pipeline) = &variants[i];
-                if let CandidateOutcome::Evaluated { cand, module } = memoized(label, pipeline) {
-                    slots.lock().unwrap()[i] = Some((cand, module));
-                }
-            });
-        }
-    });
-
-    let mut candidates = Vec::new();
-    let mut best: Option<(f64, Module, String)> = None;
-    for slot in slots.into_inner().unwrap() {
-        let Some((cand, m)) = slot else { continue };
-        if cand.score.is_finite()
-            && best.as_ref().map(|(b, _, _)| cand.score < *b).unwrap_or(true)
-        {
-            best = Some((cand.score, m, cand.strategy.clone()));
-        }
-        candidates.push(cand);
-    }
-
-    if let CandidateOutcome::Evaluated { cand, module } = memoized("iterative", ITERATIVE_TAG) {
-        if cand.score.is_finite()
-            && best.as_ref().map(|(b, _, _)| cand.score < *b).unwrap_or(true)
-        {
-            best = Some((cand.score, module, cand.strategy.clone()));
-        }
-        candidates.push(cand);
-    }
-
-    let (_, best_m, best_strategy) =
-        best.ok_or_else(|| anyhow::anyhow!("no feasible DSE candidate"))?;
-    Ok(DseReport { best: best_m, best_strategy, candidates })
+    let factors = normalize_factors(&opts.factors).map_err(|e| anyhow::anyhow!(e))?;
+    let space = StrategyGrid::new(&factors);
+    let evaluator =
+        ObjectiveEvaluator::new(input, plat, &opts.objective, opts.threads, opts.cache.clone());
+    run_driver(&opts.driver, &space, &evaluator)
 }
 
-/// Run DSE with the analytic objective. `factors` are the replication
-/// factors swept for the replication strategies (empty = {2, 4, 8, 16}).
+/// Run DSE with the analytic objective and the exhaustive driver. `factors`
+/// are the replication factors swept for the replication strategies
+/// (empty = {2, 4, 8, 16}).
 pub fn run_dse(input: &Module, plat: &PlatformSpec, factors: &[u64]) -> Result<DseReport> {
     run_dse_with(
         input,
@@ -425,6 +298,7 @@ mod tests {
     use super::*;
     use crate::dialect::build::fig4a_module;
     use crate::dialect::{DfgBuilder, KernelEst, ParamType, ResourceVec};
+    use crate::passes::manager::{parse_pipeline, PassContext};
     use crate::platform::builtin;
 
     #[test]
@@ -451,6 +325,7 @@ mod tests {
             best.strategy
         );
         assert_ne!(rep.best_strategy, "baseline");
+        assert_eq!(rep.driver, "exhaustive");
     }
 
     #[test]
@@ -466,6 +341,9 @@ mod tests {
         }
         // analytic mode leaves the DES columns empty
         assert!(rep.candidates.iter().all(|c| c.des_makespan_s.is_none()));
+        // exhaustive evaluated the whole grid (6 variants + iterative)
+        assert_eq!(rep.full_evals, 7);
+        assert_eq!(rep.screened, 0);
     }
 
     #[test]
@@ -493,6 +371,22 @@ mod tests {
     fn dse_table_includes_iterative() {
         let rep = run_dse(&fig4a_module(), &builtin("u280").unwrap(), &[2]).unwrap();
         assert!(rep.candidates.iter().any(|c| c.strategy == "iterative"));
+    }
+
+    #[test]
+    fn factors_are_deduplicated_and_sorted() {
+        let m = fig4a_module();
+        let plat = builtin("u280").unwrap();
+        let messy = run_dse(&m, &plat, &[4, 2, 2, 4]).unwrap();
+        let clean = run_dse(&m, &plat, &[2, 4]).unwrap();
+        assert_eq!(messy.candidates.len(), clean.candidates.len());
+        assert_eq!(messy.best_strategy, clean.best_strategy);
+        for (a, b) in messy.candidates.iter().zip(&clean.candidates) {
+            assert_eq!(a.strategy, b.strategy);
+            assert_eq!(a.score, b.score);
+        }
+        // zero factors are a structured error, not a silent no-op
+        assert!(run_dse(&m, &plat, &[0]).is_err());
     }
 
     #[test]
@@ -534,7 +428,7 @@ mod tests {
                 DesConfig::default(),
             ),
             threads,
-            cache: None,
+            ..DseOptions::default()
         }
     }
 
@@ -610,7 +504,7 @@ mod tests {
                 DesConfig { stripe_replicas: stripe, ..DesConfig::default() },
             ),
             threads: 1,
-            cache: None,
+            ..DseOptions::default()
         };
         let unstriped = run_dse_with(&m, &plat, &opts_with(false)).unwrap();
         let striped = run_dse_with(&m, &plat, &opts_with(true)).unwrap();
@@ -663,10 +557,12 @@ mod tests {
         // and evaluated exactly once, feasible or not
         assert_eq!(cold_misses, 7);
         assert!(cold.candidates.len() <= 7);
+        assert_eq!(cold.full_evals as u64, cold_misses);
         let warm = run_dse_with(&m, &plat, &opts).unwrap();
         let s = cache.stats();
         assert_eq!(s.misses, cold_misses, "warm run must not recompute anything");
         assert!(s.hits >= cold_misses, "warm run served from cache: {s:?}");
+        assert_eq!(warm.full_evals, 0, "warm run computes nothing at full fidelity");
         // cache answers are bit-identical to fresh evaluation
         let plain = run_dse_with(&m, &plat, &des_opts(1)).unwrap();
         for rep in [&warm, &plain] {

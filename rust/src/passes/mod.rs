@@ -13,8 +13,10 @@
 //! * [`fifo_sizing`] — double-buffer memory-facing FIFOs (BRAM saver).
 //! * [`plm_share`] — Mnemosyne-style PLM sharing for `small` channels.
 //! * [`canonicalize`] — cleanup: drop dead channels, dedup PC terminals.
-//! * [`dse`] — the Fig 3 iterative optimize loop: candidate strategies are
-//!   evaluated with the analyses and the best design is kept.
+//! * [`dse`] — the Fig 3 optimize loop, built on the pluggable
+//!   [`crate::search`] framework: a search driver (exhaustive | random |
+//!   successive-halving | iterative) picks which candidate pipeline
+//!   schedules get evaluated, and the best design is kept.
 
 pub mod bus_widen;
 pub mod canonicalize;

@@ -1,0 +1,279 @@
+//! Candidate evaluation: one interface over both scoring fidelities.
+//!
+//! An [`Evaluator`] turns [`CandidatePoint`]s into scored
+//! [`DseCandidate`]s. It exposes two fidelities:
+//!
+//! * **`screen`** — the static analytic objective (bandwidth + resource
+//!   analyses). Microseconds per ordinary point (the iterative grid point
+//!   runs its greedy descent at this fidelity, still analytic-only), never
+//!   memoized; multi-fidelity drivers use it to rank the whole space
+//!   cheaply.
+//! * **`evaluate`** — the run's configured objective (analytic or
+//!   `des-score`). This is the fidelity the decision table and the winner
+//!   are built from; it carries the content-addressed
+//!   [`CandidateCache`](crate::passes::CandidateCache) memoization and the
+//!   std-thread evaluation pool.
+//!
+//! [`ObjectiveEvaluator`] is the production implementation; tests stub the
+//! trait to drive the search policies deterministically.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::ir::{module_fingerprint, Module};
+use crate::passes::dse::{
+    candidate_cache_key, evaluate_candidate, run_iterative, CandidateCache, CandidateOutcome,
+    DseCandidate, DseObjective,
+};
+use crate::passes::manager::{parse_pipeline, PassContext};
+use crate::platform::PlatformSpec;
+
+use super::space::{parse_iterative_tag, CandidatePoint};
+
+/// Scores candidate points at two fidelities. `None` entries mark points
+/// whose pipeline the pass manager or verifier rejected.
+pub trait Evaluator: Sync {
+    /// Full-fidelity evaluation under the run's objective, in point order.
+    fn evaluate(&self, points: &[CandidatePoint]) -> Vec<Option<(DseCandidate, Module)>>;
+
+    /// Cheap screening fidelity (always the static analytic objective).
+    fn screen(&self, points: &[CandidatePoint]) -> Vec<Option<(DseCandidate, Module)>>;
+
+    /// Screen `pipeline` applied to `base` instead of the evaluator's own
+    /// input module — the incremental step local search is built from (one
+    /// move per call, not the whole schedule re-applied).
+    fn screen_from(&self, base: &Module, pipeline: &str) -> Option<(DseCandidate, Module)>;
+
+    /// Full-fidelity evaluations actually computed so far (cache hits and
+    /// screens excluded) — the cost figure multi-fidelity search minimizes.
+    fn full_evals(&self) -> usize;
+}
+
+/// The production evaluator: applies a point's pipeline to a clone of the
+/// input module and scores the result with [`evaluate_candidate`].
+/// Evaluation is deterministic regardless of thread count: results land in
+/// per-point slots, so the caller sees point order, not completion order.
+pub struct ObjectiveEvaluator<'a> {
+    input: &'a Module,
+    plat: &'a PlatformSpec,
+    objective: &'a DseObjective,
+    threads: usize,
+    cache: Option<Arc<CandidateCache>>,
+    module_fp: Option<String>,
+    plat_fp: Option<String>,
+    obj_desc: String,
+    full_evals: AtomicUsize,
+}
+
+impl<'a> ObjectiveEvaluator<'a> {
+    pub fn new(
+        input: &'a Module,
+        plat: &'a PlatformSpec,
+        objective: &'a DseObjective,
+        threads: usize,
+        cache: Option<Arc<CandidateCache>>,
+    ) -> ObjectiveEvaluator<'a> {
+        // fingerprints are computed once per evaluator; only cache-enabled
+        // runs pay for them
+        let module_fp = cache.as_ref().map(|_| module_fingerprint(input));
+        let plat_fp = cache.as_ref().map(|_| plat.fingerprint());
+        let obj_desc = format!("{objective:?}");
+        ObjectiveEvaluator {
+            input,
+            plat,
+            objective,
+            threads,
+            cache,
+            module_fp,
+            plat_fp,
+            obj_desc,
+            full_evals: AtomicUsize::new(0),
+        }
+    }
+
+    /// Evaluate one point from scratch under `objective`.
+    fn eval_point(&self, point: &CandidatePoint, objective: &DseObjective) -> CandidateOutcome {
+        if let Some(rounds) = parse_iterative_tag(&point.pipeline) {
+            // the Fig 3 iterative loop competes as its own candidate; the
+            // round bound travels in the tag (and thus the cache key)
+            return match run_iterative(self.input, self.plat, rounds) {
+                Ok((m, applied)) => {
+                    let cand = evaluate_candidate(
+                        &m,
+                        self.plat,
+                        objective,
+                        "iterative".to_string(),
+                        applied.join("; "),
+                    );
+                    CandidateOutcome::Evaluated { cand, module: m }
+                }
+                Err(_) => CandidateOutcome::Infeasible,
+            };
+        }
+        let mut m = self.input.clone();
+        let mut ctx = PassContext::new(self.plat.clone());
+        let Ok(pm) = parse_pipeline(&point.pipeline, &mut ctx) else {
+            return CandidateOutcome::Infeasible;
+        };
+        if pm.run(&mut m, &ctx).is_err() {
+            return CandidateOutcome::Infeasible; // verifier rejected
+        }
+        let cand = evaluate_candidate(
+            &m,
+            self.plat,
+            objective,
+            point.label.clone(),
+            point.pipeline.clone(),
+        );
+        CandidateOutcome::Evaluated { cand, module: m }
+    }
+
+    /// Evaluate, answered through the content-addressed memo when one is
+    /// wired in (single-flight: concurrent identical evaluations compute
+    /// once).
+    fn memoized(
+        &self,
+        point: &CandidatePoint,
+        objective: &DseObjective,
+        memoize: bool,
+        count: bool,
+    ) -> CandidateOutcome {
+        let compute = || {
+            if count {
+                self.full_evals.fetch_add(1, Ordering::Relaxed);
+            }
+            self.eval_point(point, objective)
+        };
+        match &self.cache {
+            Some(cache) if memoize => {
+                let key = candidate_cache_key(
+                    self.module_fp.as_deref().unwrap_or(""),
+                    self.plat_fp.as_deref().unwrap_or(""),
+                    &point.pipeline,
+                    &self.obj_desc,
+                );
+                cache.get_or_compute(key, compute).0
+            }
+            _ => compute(),
+        }
+    }
+
+    /// Slot-parallel evaluation of `points` (the old `run_dse_with` loop).
+    fn run_points(
+        &self,
+        points: &[CandidatePoint],
+        objective: &DseObjective,
+        memoize: bool,
+        count: bool,
+    ) -> Vec<Option<(DseCandidate, Module)>> {
+        let n = points.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        let threads = if self.threads == 0 {
+            std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1)
+        } else {
+            self.threads
+        }
+        .clamp(1, n);
+
+        let slots: Mutex<Vec<Option<(DseCandidate, Module)>>> =
+            Mutex::new((0..n).map(|_| None).collect());
+        let next = AtomicUsize::new(0);
+        std::thread::scope(|scope| {
+            for _ in 0..threads {
+                scope.spawn(|| loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    if let CandidateOutcome::Evaluated { cand, module } =
+                        self.memoized(&points[i], objective, memoize, count)
+                    {
+                        slots.lock().unwrap()[i] = Some((cand, module));
+                    }
+                });
+            }
+        });
+        slots.into_inner().unwrap()
+    }
+}
+
+impl Evaluator for ObjectiveEvaluator<'_> {
+    fn evaluate(&self, points: &[CandidatePoint]) -> Vec<Option<(DseCandidate, Module)>> {
+        self.run_points(points, self.objective, true, true)
+    }
+
+    fn screen(&self, points: &[CandidatePoint]) -> Vec<Option<(DseCandidate, Module)>> {
+        // screening is analytic-only and never memoized: it costs
+        // microseconds and must not perturb the full-fidelity miss counts
+        self.run_points(points, &DseObjective::Analytic, false, false)
+    }
+
+    fn screen_from(&self, base: &Module, pipeline: &str) -> Option<(DseCandidate, Module)> {
+        let mut m = base.clone();
+        let mut ctx = PassContext::new(self.plat.clone());
+        let pm = parse_pipeline(pipeline, &mut ctx).ok()?;
+        pm.run(&mut m, &ctx).ok()?;
+        let cand = evaluate_candidate(
+            &m,
+            self.plat,
+            &DseObjective::Analytic,
+            "iterative".to_string(),
+            pipeline.to_string(),
+        );
+        Some((cand, m))
+    }
+
+    fn full_evals(&self) -> usize {
+        self.full_evals.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dialect::build::fig4a_module;
+    use crate::platform::builtin;
+
+    #[test]
+    fn evaluate_counts_full_fidelity_only() {
+        let m = fig4a_module();
+        let plat = builtin("u280").unwrap();
+        let obj = DseObjective::Analytic;
+        let eval = ObjectiveEvaluator::new(&m, &plat, &obj, 1, None);
+        let pts = vec![
+            CandidatePoint::new("baseline", "sanitize"),
+            CandidatePoint::new("iris", "sanitize, iris, channel-reassign"),
+        ];
+        let screened = eval.screen(&pts);
+        assert_eq!(screened.len(), 2);
+        assert_eq!(eval.full_evals(), 0, "screens are not full evaluations");
+        let full = eval.evaluate(&pts);
+        assert_eq!(full.len(), 2);
+        assert_eq!(eval.full_evals(), 2);
+        // analytic objective: both fidelities agree bit-for-bit
+        for (s, f) in screened.iter().zip(&full) {
+            let (sc, _) = s.as_ref().unwrap();
+            let (fc, _) = f.as_ref().unwrap();
+            assert_eq!(sc.score, fc.score);
+            assert_eq!(sc.makespan_s, fc.makespan_s);
+        }
+    }
+
+    #[test]
+    fn bad_pipelines_yield_none_not_errors() {
+        let m = fig4a_module();
+        let plat = builtin("u280").unwrap();
+        let obj = DseObjective::Analytic;
+        let eval = ObjectiveEvaluator::new(&m, &plat, &obj, 1, None);
+        let pts = vec![
+            CandidatePoint::new("bogus", "sanitize, frobnicate"),
+            CandidatePoint::new("baseline", "sanitize"),
+        ];
+        let out = eval.evaluate(&pts);
+        assert!(out[0].is_none(), "unknown pass must be infeasible");
+        assert!(out[1].is_some());
+        assert_eq!(eval.full_evals(), 2, "failed evaluations still cost one attempt");
+    }
+}

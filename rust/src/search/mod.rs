@@ -1,0 +1,42 @@
+//! `search` — the pluggable design-space-exploration framework.
+//!
+//! The paper's core loop (Fig 3, "Olympus-Opt") explores platform-aware
+//! system architectures. This subsystem decomposes that exploration into
+//! three orthogonal traits so every layer (CLI, service, flow, DES) plugs
+//! into the same machinery and new policies never touch the evaluation
+//! code:
+//!
+//! * [`SearchSpace`] — generates candidates as composable pipeline
+//!   schedules. [`StrategyGrid`] is the classic strategy-table × factor
+//!   grid (plus the iterative loop); spaces support seeded random
+//!   sampling out of the box.
+//! * [`Evaluator`] — scores candidates at two fidelities: a cheap analytic
+//!   *screen* and the run's full objective (analytic or `des-score`).
+//!   [`ObjectiveEvaluator`] carries the content-addressed candidate memo
+//!   and the std-thread evaluation pool.
+//! * [`SearchDriver`] — the policy: [`ExhaustiveDriver`] (bit-identical to
+//!   the pre-refactor `olympus dse`), [`RandomDriver`] (seeded, budgeted),
+//!   [`SuccessiveHalvingDriver`] (multi-fidelity: screen everything,
+//!   promote the top fraction to full DES evaluation) and
+//!   [`IterativeDriver`] (the Fig 3 greedy loop).
+//!
+//! [`DriverKind`] is the serializable selector carried by `DseOptions`,
+//! `olympus dse --driver/--budget` and the serve protocol, and it is part
+//! of the flow cache key — two runs that search differently are different
+//! evaluations. Budgeted drivers evaluate a subset of the exhaustive
+//! point set with the same deterministic evaluator, so they can never
+//! *beat* `exhaustive` — only match it cheaper (`tests/search_drivers.rs`).
+
+pub mod driver;
+pub mod evaluate;
+pub mod space;
+
+pub use driver::{
+    greedy_descent, run_driver, DriverKind, ExhaustiveDriver, IterativeDriver, RandomDriver,
+    SearchDriver, SuccessiveHalvingDriver, DEFAULT_SEARCH_SEED,
+};
+pub use evaluate::{Evaluator, ObjectiveEvaluator};
+pub use space::{
+    iterative_moves, iterative_tag, normalize_factors, parse_iterative_tag, CandidatePoint,
+    SearchSpace, StrategyGrid, DEFAULT_FACTORS, ITERATIVE_TAG,
+};

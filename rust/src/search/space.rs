@@ -1,0 +1,208 @@
+//! Search spaces: what the DSE can choose between.
+//!
+//! A [`SearchSpace`] generates candidate designs as *pipeline schedules* —
+//! strings the pass manager can parse — so every driver, cache and service
+//! layer speaks the same currency. [`StrategyGrid`] reproduces the classic
+//! strategy-table × replication-factor grid (plus the Fig 3 iterative loop
+//! as its own candidate) and is the space `olympus dse` explores today;
+//! richer spaces (pass-permutation, parameter lattices) plug in behind the
+//! same trait.
+
+use crate::passes::dse::strategies;
+use crate::util::Rng;
+
+/// One point of a search space: a labeled pipeline schedule. `pipeline` is
+/// either a pass-manager pipeline string or the [`ITERATIVE_TAG`] sentinel
+/// for the Fig 3 greedy loop.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CandidatePoint {
+    /// Row label in the decision table (e.g. `replicate(x4)`).
+    pub label: String,
+    /// Pass pipeline evaluated for this point.
+    pub pipeline: String,
+}
+
+impl CandidatePoint {
+    pub fn new(label: impl Into<String>, pipeline: impl Into<String>) -> CandidatePoint {
+        CandidatePoint { label: label.into(), pipeline: pipeline.into() }
+    }
+}
+
+/// Synthetic pipeline tag keying the Fig 3 iterative-loop candidate with
+/// the default round bound ([`iterative_tag`]`(8)`). The evaluator expands
+/// it into [`crate::passes::run_iterative`].
+pub const ITERATIVE_TAG: &str = "@iterative{max_rounds=8}";
+
+/// The iterative-loop tag for a caller-chosen round bound. The bound is
+/// part of the candidate's pipeline string — and therefore of its cache
+/// key — so searches with different bounds never share an evaluation.
+pub fn iterative_tag(max_rounds: usize) -> String {
+    format!("@iterative{{max_rounds={max_rounds}}}")
+}
+
+/// Recover the round bound from an iterative tag (`None` for ordinary
+/// pass pipelines).
+pub fn parse_iterative_tag(pipeline: &str) -> Option<usize> {
+    pipeline.strip_prefix("@iterative{max_rounds=")?.strip_suffix('}')?.parse().ok()
+}
+
+/// Replication factors swept when the caller passes none.
+pub const DEFAULT_FACTORS: [u64; 4] = [2, 4, 8, 16];
+
+/// Moves available to the iterative greedy driver (each is itself a valid
+/// pipeline fragment, appended to the schedule applied so far).
+pub fn iterative_moves() -> Vec<String> {
+    [
+        "channel-reassign",
+        "iris, channel-reassign",
+        "bus-widen, channel-reassign",
+        "plm-share",
+        "fifo-sizing",
+        "replicate{factor=2}, channel-reassign",
+    ]
+    .iter()
+    .map(|s| s.to_string())
+    .collect()
+}
+
+/// Validate and canonicalize a replication-factor list: factors must be
+/// >= 1; duplicates collapse and order is normalized ascending so
+/// `[4, 2, 2]` and `[2, 4]` name the same search space (and the same cache
+/// keys). An empty list stays empty — it means "use the defaults".
+pub fn normalize_factors(factors: &[u64]) -> Result<Vec<u64>, String> {
+    let mut out = Vec::with_capacity(factors.len());
+    for &f in factors {
+        if f == 0 {
+            return Err("replication factors must be >= 1 (got 0)".to_string());
+        }
+        out.push(f);
+    }
+    out.sort_unstable();
+    out.dedup();
+    Ok(out)
+}
+
+/// A design space the drivers can enumerate or sample. Implementations must
+/// be deterministic: `enumerate` order is the exhaustive report's row order,
+/// and `sample(n, seed)` must return the same points for the same inputs.
+pub trait SearchSpace: Sync {
+    /// Full deterministic enumeration of the space.
+    fn enumerate(&self) -> Vec<CandidatePoint>;
+
+    /// Seeded sample of up to `n` distinct points (without replacement).
+    /// The default draws a partial Fisher–Yates shuffle over `enumerate`.
+    fn sample(&self, n: usize, seed: u64) -> Vec<CandidatePoint> {
+        let mut pts = self.enumerate();
+        let take = n.min(pts.len());
+        let mut rng = Rng::new(seed);
+        for i in 0..take {
+            let j = rng.range(i, pts.len());
+            pts.swap(i, j);
+        }
+        pts.truncate(take);
+        pts
+    }
+}
+
+/// The classic Olympus space: the strategy table crossed with replication
+/// factors, plus the Fig 3 iterative loop as a final candidate. This is
+/// exactly the grid the pre-refactor `run_dse` walked, in the same order.
+#[derive(Debug, Clone)]
+pub struct StrategyGrid {
+    /// Replication factors swept by the `FACTOR` strategies.
+    pub factors: Vec<u64>,
+    /// Append the iterative-loop candidate (on for `olympus dse` parity).
+    pub include_iterative: bool,
+}
+
+impl StrategyGrid {
+    /// Grid over `factors` (empty = [`DEFAULT_FACTORS`]), iterative included.
+    pub fn new(factors: &[u64]) -> StrategyGrid {
+        let factors =
+            if factors.is_empty() { DEFAULT_FACTORS.to_vec() } else { factors.to_vec() };
+        StrategyGrid { factors, include_iterative: true }
+    }
+}
+
+impl SearchSpace for StrategyGrid {
+    fn enumerate(&self) -> Vec<CandidatePoint> {
+        let mut points = Vec::new();
+        for (name, template) in strategies() {
+            if template.contains("FACTOR") {
+                for f in &self.factors {
+                    points.push(CandidatePoint::new(
+                        format!("{name}(x{f})"),
+                        template.replace("FACTOR", &f.to_string()),
+                    ));
+                }
+            } else {
+                points.push(CandidatePoint::new(name, template));
+            }
+        }
+        if self.include_iterative {
+            points.push(CandidatePoint::new("iterative", ITERATIVE_TAG));
+        }
+        points
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_enumerates_table_order_with_iterative_last() {
+        let pts = StrategyGrid::new(&[2]).enumerate();
+        let labels: Vec<&str> = pts.iter().map(|p| p.label.as_str()).collect();
+        assert_eq!(
+            labels,
+            ["baseline", "reassign", "iris", "widen", "replicate(x2)", "full(x2)", "iterative"]
+        );
+        assert_eq!(pts.last().unwrap().pipeline, ITERATIVE_TAG);
+    }
+
+    #[test]
+    fn empty_factors_fall_back_to_defaults() {
+        let pts = StrategyGrid::new(&[]).enumerate();
+        // 4 factor-free strategies + 2 factored x 4 defaults + iterative
+        assert_eq!(pts.len(), 4 + 2 * DEFAULT_FACTORS.len() + 1);
+        assert!(pts.iter().any(|p| p.label == "replicate(x16)"));
+    }
+
+    #[test]
+    fn sample_is_seeded_distinct_and_within_space() {
+        let grid = StrategyGrid::new(&[2, 4]);
+        let all = grid.enumerate();
+        let a = grid.sample(4, 7);
+        let b = grid.sample(4, 7);
+        assert_eq!(a, b, "same seed, same sample");
+        assert_eq!(a.len(), 4);
+        for p in &a {
+            assert!(all.contains(p), "sampled point outside the space: {p:?}");
+        }
+        // distinct points (sampling is without replacement)
+        for (i, p) in a.iter().enumerate() {
+            assert!(!a[i + 1..].contains(p), "duplicate sample {p:?}");
+        }
+        let c = grid.sample(4, 8);
+        assert_ne!(a, c, "different seed should shuffle differently");
+        // oversized budgets clamp to the whole space
+        assert_eq!(grid.sample(100, 1).len(), all.len());
+    }
+
+    #[test]
+    fn iterative_tag_round_trips_max_rounds() {
+        assert_eq!(iterative_tag(8), ITERATIVE_TAG);
+        assert_eq!(parse_iterative_tag(ITERATIVE_TAG), Some(8));
+        assert_eq!(parse_iterative_tag(&iterative_tag(20)), Some(20));
+        assert_eq!(parse_iterative_tag("sanitize, iris"), None);
+        assert_eq!(parse_iterative_tag("@iterative{max_rounds=x}"), None);
+    }
+
+    #[test]
+    fn factors_normalize_sorted_deduped() {
+        assert_eq!(normalize_factors(&[4, 2, 2, 8, 4]).unwrap(), vec![2, 4, 8]);
+        assert_eq!(normalize_factors(&[]).unwrap(), Vec::<u64>::new());
+        assert!(normalize_factors(&[2, 0]).is_err());
+    }
+}

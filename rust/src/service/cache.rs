@@ -11,8 +11,15 @@
 //! concurrently, exactly one computes; the rest block on a condvar and
 //! reuse the result. This is what makes 8 identical DSE submissions cost
 //! one evaluation instead of eight.
+//!
+//! **LRU eviction**: a bounded cache drops the least-recently-*used* entry,
+//! not the oldest-inserted one — an entry that keeps getting hit (the hot
+//! platform, the CI regression module) survives arbitrarily many inserts.
+//! Recency is tracked with a lazily-compacted access log: each touch
+//! appends a `(key, seq)` record; eviction pops stale records until it
+//! finds one whose sequence is still current.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::fmt;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Condvar, Mutex};
@@ -41,6 +48,34 @@ enum Slot<V> {
     Ready(V),
 }
 
+struct Inner<V> {
+    map: HashMap<ContentHash, Slot<V>>,
+    /// Access log: `(key, seq)` per touch; a record is current only while
+    /// `last_used[key] == seq`. Oldest-first pops find the LRU entry.
+    order: VecDeque<(ContentHash, u64)>,
+    /// Latest access sequence per Ready key.
+    last_used: HashMap<ContentHash, u64>,
+    /// Monotonic access counter.
+    counter: u64,
+    /// Number of Ready entries (InFlight markers excluded).
+    ready: usize,
+}
+
+impl<V> Inner<V> {
+    /// Record an access to a Ready `key` (bounded caches only). The log is
+    /// compacted in place once stale records dominate, so repeated hits on
+    /// a hot key cannot grow it without bound.
+    fn touch(&mut self, key: ContentHash) {
+        self.counter += 1;
+        self.last_used.insert(key, self.counter);
+        self.order.push_back((key, self.counter));
+        if self.order.len() > 2 * self.last_used.len() + 16 {
+            let last_used = &self.last_used;
+            self.order.retain(|(k, s)| last_used.get(k) == Some(s));
+        }
+    }
+}
+
 /// See module docs. `V` is cloned out on every hit, so keep values
 /// cheaply-cloneable (or wrap them in `Arc`).
 pub struct EvalCache<V> {
@@ -50,14 +85,8 @@ pub struct EvalCache<V> {
     misses: AtomicU64,
     coalesced: AtomicU64,
     evicted: AtomicU64,
-    /// Max Ready entries (0 = unbounded). Oldest-inserted evicts first.
+    /// Max Ready entries (0 = unbounded). Least-recently-used evicts first.
     capacity: usize,
-}
-
-struct Inner<V> {
-    map: HashMap<ContentHash, Slot<V>>,
-    /// Insertion order of Ready keys, for FIFO eviction.
-    order: std::collections::VecDeque<ContentHash>,
 }
 
 impl<V: Clone> Default for EvalCache<V> {
@@ -75,7 +104,13 @@ impl<V: Clone> EvalCache<V> {
     /// Cache holding at most `capacity` ready entries (0 = unbounded).
     pub fn with_capacity(capacity: usize) -> Self {
         EvalCache {
-            inner: Mutex::new(Inner { map: HashMap::new(), order: std::collections::VecDeque::new() }),
+            inner: Mutex::new(Inner {
+                map: HashMap::new(),
+                order: VecDeque::new(),
+                last_used: HashMap::new(),
+                counter: 0,
+                ready: 0,
+            }),
             ready: Condvar::new(),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
@@ -89,17 +124,30 @@ impl<V: Clone> EvalCache<V> {
     /// the result. Concurrent callers with the same key wait for the one
     /// in-flight computation instead of duplicating it. Returns the value
     /// and whether it was served from cache (`true` for hits and coalesced
-    /// waiters, `false` for the caller that computed).
+    /// waiters, `false` for the caller that computed). Hits refresh the
+    /// entry's recency.
     pub fn get_or_compute<F>(&self, key: ContentHash, compute: F) -> (V, bool)
     where
         F: FnOnce() -> V,
     {
+        enum Peek<V> {
+            Hit(V),
+            Wait,
+            Miss,
+        }
         let mut waited = false;
         let mut guard = self.inner.lock().unwrap();
         loop {
-            match guard.map.get(&key) {
-                Some(Slot::Ready(v)) => {
-                    let v = v.clone();
+            let peek = match guard.map.get(&key) {
+                Some(Slot::Ready(v)) => Peek::Hit(v.clone()),
+                Some(Slot::InFlight) => Peek::Wait,
+                None => Peek::Miss,
+            };
+            match peek {
+                Peek::Hit(v) => {
+                    if self.capacity > 0 {
+                        guard.touch(key);
+                    }
                     if waited {
                         self.coalesced.fetch_add(1, Ordering::Relaxed);
                     } else {
@@ -107,11 +155,11 @@ impl<V: Clone> EvalCache<V> {
                     }
                     return (v, true);
                 }
-                Some(Slot::InFlight) => {
+                Peek::Wait => {
                     waited = true;
                     guard = self.ready.wait(guard).unwrap();
                 }
-                None => {
+                Peek::Miss => {
                     guard.map.insert(key, Slot::InFlight);
                     break;
                 }
@@ -126,18 +174,23 @@ impl<V: Clone> EvalCache<V> {
         let value = compute();
         flight.armed = false;
         let mut guard = self.inner.lock().unwrap();
-        guard.map.insert(key, Slot::Ready(value.clone()));
-        guard.order.push_back(key);
+        let prev = guard.map.insert(key, Slot::Ready(value.clone()));
+        if !matches!(prev, Some(Slot::Ready(_))) {
+            guard.ready += 1;
+        }
         if self.capacity > 0 {
-            while guard.order.len() > self.capacity {
-                // oldest-first; skip keys that were already evicted/replaced
-                let Some(old) = guard.order.pop_front() else { break };
-                if old == key {
-                    guard.order.push_back(old);
+            guard.touch(key);
+            while guard.ready > self.capacity {
+                // pop access records oldest-first; stale ones (a newer touch
+                // exists) are skipped, the first current one is the LRU entry
+                let Some((old, seq)) = guard.order.pop_front() else { break };
+                if guard.last_used.get(&old) != Some(&seq) {
                     continue;
                 }
                 if matches!(guard.map.get(&old), Some(Slot::Ready(_))) {
                     guard.map.remove(&old);
+                    guard.last_used.remove(&old);
+                    guard.ready -= 1;
                     self.evicted.fetch_add(1, Ordering::Relaxed);
                 }
             }
@@ -147,25 +200,26 @@ impl<V: Clone> EvalCache<V> {
         (value, false)
     }
 
-    /// Peek without computing.
+    /// Peek without computing (refreshes recency on a hit).
     pub fn get(&self, key: ContentHash) -> Option<V> {
-        let guard = self.inner.lock().unwrap();
-        match guard.map.get(&key) {
-            Some(Slot::Ready(v)) => {
-                let v = v.clone();
-                self.hits.fetch_add(1, Ordering::Relaxed);
-                Some(v)
-            }
+        let mut guard = self.inner.lock().unwrap();
+        let value = match guard.map.get(&key) {
+            Some(Slot::Ready(v)) => Some(v.clone()),
             _ => None,
+        };
+        if value.is_some() {
+            if self.capacity > 0 {
+                guard.touch(key);
+            }
+            self.hits.fetch_add(1, Ordering::Relaxed);
         }
+        value
     }
 
     pub fn stats(&self) -> CacheStats {
         let guard = self.inner.lock().unwrap();
-        let entries =
-            guard.map.values().filter(|s| matches!(s, Slot::Ready(_))).count() as u64;
         CacheStats {
-            entries,
+            entries: guard.ready as u64,
             hits: self.hits.load(Ordering::Relaxed),
             misses: self.misses.load(Ordering::Relaxed),
             coalesced: self.coalesced.load(Ordering::Relaxed),
@@ -254,7 +308,7 @@ mod tests {
     }
 
     #[test]
-    fn capacity_evicts_oldest() {
+    fn capacity_evicts_least_recently_used() {
         let c = EvalCache::with_capacity(2);
         c.get_or_compute(key("a"), || 1);
         c.get_or_compute(key("b"), || 2);
@@ -262,8 +316,50 @@ mod tests {
         let s = c.stats();
         assert_eq!(s.entries, 2);
         assert_eq!(s.evicted, 1);
-        assert_eq!(c.get(key("a")), None, "oldest entry evicted");
+        assert_eq!(c.get(key("a")), None, "untouched oldest entry evicted");
         assert_eq!(c.get(key("c")), Some(3));
+    }
+
+    #[test]
+    fn rehit_entry_survives_eviction() {
+        let c = EvalCache::with_capacity(2);
+        c.get_or_compute(key("a"), || 1);
+        c.get_or_compute(key("b"), || 2);
+        // touch `a`: it becomes the most recently used entry...
+        assert_eq!(c.get_or_compute(key("a"), || panic!("cached")).0, 1);
+        // ...so inserting `c` evicts `b`, not `a` (FIFO would drop `a`)
+        c.get_or_compute(key("c"), || 3);
+        assert_eq!(c.get(key("b")), None, "LRU entry evicted");
+        assert_eq!(c.get(key("a")), Some(1), "re-hit entry survives");
+        assert_eq!(c.get(key("c")), Some(3));
+        assert_eq!(c.stats().evicted, 1);
+    }
+
+    #[test]
+    fn peek_refreshes_recency_too() {
+        let c = EvalCache::with_capacity(2);
+        c.get_or_compute(key("a"), || 1);
+        c.get_or_compute(key("b"), || 2);
+        assert_eq!(c.get(key("a")), Some(1));
+        c.get_or_compute(key("c"), || 3);
+        assert_eq!(c.get(key("a")), Some(1), "peeked entry survives");
+        assert_eq!(c.get(key("b")), None);
+    }
+
+    #[test]
+    fn hot_key_hammering_keeps_the_access_log_bounded() {
+        let c = EvalCache::with_capacity(2);
+        c.get_or_compute(key("a"), || 1);
+        c.get_or_compute(key("b"), || 2);
+        for _ in 0..10_000 {
+            c.get(key("a"));
+        }
+        let guard = c.inner.lock().unwrap();
+        assert!(
+            guard.order.len() <= 2 * guard.last_used.len() + 17,
+            "access log must compact: {} records",
+            guard.order.len()
+        );
     }
 
     #[test]

@@ -9,7 +9,8 @@
 //!
 //! ```json
 //! {"cmd": "dse",  "ir": "<mlir>", "platform": "u280", "objective": "des-score",
-//!  "scenario": "closed:4", "seed": 42, "factors": [2, 4], "id": 1}
+//!  "scenario": "closed:4", "seed": 42, "factors": [2, 4],
+//!  "driver": "successive-halving", "budget": 3, "id": 1}
 //! {"cmd": "des",  "ir": "<mlir>", "pipeline": "sanitize, iris, channel-reassign",
 //!  "scenario": "poisson:1000:20", "seed": 7}
 //! {"cmd": "flow", "ir": "<mlir>", "platform": "u280"}
@@ -20,6 +21,12 @@
 //!
 //! `platform` is a builtin name; `platform_json` may carry a full inline
 //! platform spec object instead. `id` (any JSON value) is echoed back.
+//! `driver` selects the search policy (`exhaustive` default | `random` |
+//! `successive-halving` | `iterative`) with `budget` / `search_seed` as its
+//! knobs; driver and budget are part of the response cache key, so a
+//! budgeted search never shares an address with an exhaustive one.
+//! `factors` must be a non-empty array of integers >= 1 when present; it is
+//! normalized (sorted, deduplicated) before evaluation and cache keying.
 //!
 //! Responses: `{"ok": true, "id": ..., "cached": bool, "key": "<32-hex>",
 //! "result": {...}}` — `key` is the content-address of the evaluation
@@ -97,8 +104,15 @@ pub struct Request {
     pub scenario: Option<String>,
     /// DES seed (engine default when absent).
     pub seed: Option<u64>,
-    /// Replication factors for DSE (empty = defaults).
-    pub factors: Vec<u64>,
+    /// Replication factors for DSE (absent = defaults). Normalized (sorted,
+    /// deduplicated); an explicitly empty array is rejected.
+    pub factors: Option<Vec<u64>>,
+    /// Search driver name (absent = "exhaustive").
+    pub driver: Option<String>,
+    /// Candidate budget for budgeted drivers.
+    pub budget: Option<u64>,
+    /// Sampling seed for the `random` driver.
+    pub search_seed: Option<u64>,
 }
 
 /// A protocol-level failure: structured error code + message, with the
@@ -152,22 +166,37 @@ pub fn parse_request(line: &str) -> Result<Request, ProtoError> {
         )
         .with_id(id));
     }
-    let seed = match v.get("seed") {
-        Json::Null => None,
-        j => Some(j.as_f64().filter(|n| *n >= 0.0 && n.fract() == 0.0).map(|n| n as u64).ok_or_else(
-            || {
-                ProtoError::new("bad-request", "'seed' must be a non-negative integer")
-                    .with_id(id.clone())
-            },
-        )?),
+    // non-negative integer fields share one parser ('seed', 'budget', ...)
+    let uint_field = |k: &'static str| -> Result<Option<u64>, ProtoError> {
+        match v.get(k) {
+            Json::Null => Ok(None),
+            j => j
+                .as_f64()
+                .filter(|n| *n >= 0.0 && n.fract() == 0.0)
+                .map(|n| Some(n as u64))
+                .ok_or_else(|| {
+                    ProtoError::new("bad-request", format!("'{k}' must be a non-negative integer"))
+                        .with_id(id.clone())
+                }),
+        }
     };
+    let seed = uint_field("seed")?;
+    let budget = uint_field("budget")?;
+    let search_seed = uint_field("search_seed")?;
     let factors = match v.get("factors") {
-        Json::Null => Vec::new(),
+        Json::Null => None,
         j => {
             let arr = j.as_arr().ok_or_else(|| {
                 ProtoError::new("bad-request", "'factors' must be an array of integers")
                     .with_id(id.clone())
             })?;
+            if arr.is_empty() {
+                return Err(ProtoError::new(
+                    "bad-request",
+                    "'factors' must not be empty (omit the field for the default sweep)",
+                )
+                .with_id(id));
+            }
             let mut out = Vec::with_capacity(arr.len());
             for f in arr {
                 let n = f.as_f64().filter(|n| *n >= 1.0 && n.fract() == 0.0).ok_or_else(|| {
@@ -176,7 +205,10 @@ pub fn parse_request(line: &str) -> Result<Request, ProtoError> {
                 })?;
                 out.push(n as u64);
             }
-            out
+            // dedupe/sort so [4, 2, 2] and [2, 4] share a cache address
+            let normalized = crate::search::normalize_factors(&out)
+                .map_err(|e| ProtoError::new("bad-request", e).with_id(id.clone()))?;
+            Some(normalized)
         }
     };
     let platform_json = match v.get("platform_json") {
@@ -194,6 +226,9 @@ pub fn parse_request(line: &str) -> Result<Request, ProtoError> {
         scenario: opt_str("scenario"),
         seed,
         factors,
+        driver: opt_str("driver"),
+        budget,
+        search_seed,
     })
 }
 
@@ -235,8 +270,40 @@ mod tests {
         assert_eq!(r.cmd, Command::Dse);
         assert_eq!(r.ir.as_deref(), Some("x"));
         assert_eq!(r.id, Json::Num(3.0));
-        assert!(r.factors.is_empty());
+        assert_eq!(r.factors, None);
         assert_eq!(r.seed, None);
+        assert_eq!(r.driver, None);
+        assert_eq!(r.budget, None);
+        assert_eq!(r.search_seed, None);
+    }
+
+    #[test]
+    fn driver_and_budget_fields_round_trip() {
+        let r = parse_request(
+            r#"{"cmd": "dse", "ir": "x", "driver": "successive-halving", "budget": 3,
+                "search_seed": 9, "factors": [4, 2, 2]}"#,
+        )
+        .unwrap();
+        assert_eq!(r.driver.as_deref(), Some("successive-halving"));
+        assert_eq!(r.budget, Some(3));
+        assert_eq!(r.search_seed, Some(9));
+        // factors arrive normalized: sorted, deduplicated
+        assert_eq!(r.factors, Some(vec![2, 4]));
+        // bad budget types are structured errors
+        let e = parse_request(r#"{"cmd": "dse", "ir": "x", "budget": -1}"#).unwrap_err();
+        assert_eq!(e.code, "bad-request");
+        assert!(e.message.contains("budget"), "{}", e.message);
+    }
+
+    #[test]
+    fn empty_factor_list_is_rejected() {
+        let e = parse_request(r#"{"cmd": "dse", "ir": "x", "factors": [], "id": 5}"#)
+            .unwrap_err();
+        assert_eq!(e.code, "bad-request");
+        assert!(e.message.contains("factors"), "{}", e.message);
+        assert_eq!(e.id, Json::Num(5.0), "id survives into the error");
+        // zero factors are rejected too
+        assert!(parse_request(r#"{"cmd": "dse", "ir": "x", "factors": [0]}"#).is_err());
     }
 
     #[test]

@@ -205,11 +205,33 @@ fn build_flow(
     if let Some(seed) = req.seed {
         cfg.seed = seed;
     }
+    // an explicit pipeline skips the DSE entirely, so search fields on the
+    // same request would be silently dead — reject, mirroring the CLI
+    if req.pipeline.is_some()
+        && (req.driver.is_some()
+            || req.budget.is_some()
+            || req.search_seed.is_some()
+            || req.factors.is_some())
+    {
+        return Err(ProtoError::new(
+            "bad-request",
+            "'driver'/'budget'/'search_seed'/'factors' configure the design-space search; \
+             drop 'pipeline' to search, or drop the search fields",
+        ));
+    }
     let mut flow = Flow::new(platform)
         .with_jobs(state.dse_threads)
         .with_cache(state.candidates.clone());
-    flow.dse_factors = req.factors.clone();
+    flow.dse_factors = req.factors.clone().unwrap_or_default();
     flow.des_config = cfg.clone();
+    // driver + budget round-trip into the flow (and thus the cache key)
+    let driver = crate::search::DriverKind::from_flags(
+        req.driver.as_deref().unwrap_or("exhaustive"),
+        req.budget.map(|b| b as usize),
+        req.search_seed,
+    )
+    .map_err(|e| ProtoError::new("bad-request", e))?;
+    flow = flow.with_driver(driver);
     match req.objective.as_deref() {
         None | Some("analytic") => {}
         Some("des-score") => {
@@ -259,6 +281,8 @@ fn render_result(cmd: Command, r: &crate::coordinator::FlowResult) -> Json {
     let mut fields: Vec<(&str, Json)> = Vec::new();
     if let Some(dse) = &r.dse {
         fields.push(("best_strategy", dse.best_strategy.as_str().into()));
+        fields.push(("driver", dse.driver.as_str().into()));
+        fields.push(("full_evals", dse.full_evals.into()));
         fields.push(("table", render_dse_table(dse).into()));
         let cands: Vec<Json> = dse
             .candidates
@@ -364,6 +388,39 @@ mod tests {
         assert_eq!(v.get("ok"), &Json::Bool(true), "{v}");
         assert_eq!(v.get("result").get("jobs_completed").as_usize(), Some(2));
         assert!(v.get("result").get("des_report").as_str().unwrap().contains("des report"));
+    }
+
+    #[test]
+    fn driver_and_budget_requests_serve_and_key_separately() {
+        let state = ServiceState::new(0, 1);
+        let exhaustive = request(r#"{"factors": [2]}"#);
+        let sh = request(r#"{"factors": [2], "driver": "successive-halving", "budget": 2}"#);
+        let e = Json::parse(&execute_request(&state, &exhaustive)).unwrap();
+        let s = Json::parse(&execute_request(&state, &sh)).unwrap();
+        assert_eq!(e.get("ok"), &Json::Bool(true), "{e}");
+        assert_eq!(s.get("ok"), &Json::Bool(true), "{s}");
+        assert_ne!(e.get("key"), s.get("key"), "driver+budget round-trip into the key");
+        assert_eq!(e.get("result").get("driver").as_str(), Some("exhaustive"));
+        assert_eq!(s.get("result").get("driver").as_str(), Some("successive-halving"));
+        // the shared candidate cache answers the promoted evaluations the
+        // exhaustive request already paid for: at most 2 fresh computes
+        assert!(s.get("result").get("full_evals").as_usize().unwrap() <= 2, "{s}");
+        // budgeted search can never beat the exhaustive best strategy set
+        assert!(e.get("result").get("table").as_str().unwrap().contains("best: "));
+        assert!(s.get("result").get("table").as_str().unwrap().contains("best: "));
+        // a bad driver/budget combination is a structured error
+        let bad = request(r#"{"driver": "random"}"#);
+        let b = Json::parse(&execute_request(&state, &bad)).unwrap();
+        assert_eq!(b.get("ok"), &Json::Bool(false));
+        assert_eq!(b.get("error").get("code").as_str(), Some("bad-request"));
+        // search fields alongside an explicit pipeline are dead, so the
+        // protocol rejects the combination just like the CLI does
+        let mut dead = request(r#"{"driver": "successive-halving", "budget": 2}"#);
+        dead.cmd = Command::Des;
+        dead.pipeline = Some("sanitize".into());
+        let d = Json::parse(&execute_request(&state, &dead)).unwrap();
+        assert_eq!(d.get("ok"), &Json::Bool(false));
+        assert_eq!(d.get("error").get("code").as_str(), Some("bad-request"));
     }
 
     #[test]

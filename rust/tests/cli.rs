@@ -215,6 +215,137 @@ fn bad_scenario_spec_rejected() {
     assert!(String::from_utf8_lossy(&out.stderr).contains("bad scenario"));
 }
 
+/// Golden: `--driver exhaustive` IS the default DSE — the refactor onto the
+/// search framework must not move a single byte of the decision table.
+#[test]
+fn dse_driver_exhaustive_is_bit_identical_to_default() {
+    let dir = tmpdir("dse_driver_golden");
+    let design = write_design(&dir);
+    let run = |extra: &[&str]| {
+        let mut args = vec!["dse", design.to_str().unwrap()];
+        args.extend_from_slice(extra);
+        let out = olympus().args(&args).output().unwrap();
+        assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+        String::from_utf8_lossy(&out.stdout).to_string()
+    };
+    let default = run(&[]);
+    let explicit = run(&["--driver", "exhaustive"]);
+    assert!(default.contains("best: "), "{default}");
+    assert_eq!(default, explicit, "--driver exhaustive must be the default, byte for byte");
+    // the des-score path too
+    let d1 = run(&["--objective", "des-score", "--scenario", "closed:2"]);
+    let d2 = run(&[
+        "--objective",
+        "des-score",
+        "--scenario",
+        "closed:2",
+        "--driver",
+        "exhaustive",
+    ]);
+    assert_eq!(d1, d2);
+}
+
+#[test]
+fn dse_budgeted_drivers_run_and_validate_flags() {
+    let dir = tmpdir("dse_budget");
+    let design = write_design(&dir);
+    // random without a budget is a structured flag error
+    let out = olympus()
+        .args(["dse", design.to_str().unwrap(), "--driver", "random"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(
+        String::from_utf8_lossy(&out.stderr).contains("budget"),
+        "{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    // with a budget it works, deterministically for a fixed seed
+    let run = |extra: &[&str]| {
+        let mut args = vec!["dse", design.to_str().unwrap()];
+        args.extend_from_slice(extra);
+        let out = olympus().args(&args).output().unwrap();
+        assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+        String::from_utf8_lossy(&out.stdout).to_string()
+    };
+    let a = run(&["--factors", "2", "--driver", "random", "--budget", "3", "--search-seed", "5"]);
+    let b = run(&["--factors", "2", "--driver", "random", "--budget", "3", "--search-seed", "5"]);
+    assert_eq!(a, b, "seeded random search is reproducible");
+    assert!(a.contains("best: "), "{a}");
+    // successive-halving: screen everything, promote a budgeted subset
+    let sh = run(&["--driver", "successive-halving", "--budget", "2"]);
+    assert!(sh.contains("best: "), "{sh}");
+    assert!(sh.lines().count() <= 4, "2 promoted rows + header + best line: {sh}");
+    // unknown drivers are rejected with the candidate list
+    let out = olympus()
+        .args(["dse", design.to_str().unwrap(), "--driver", "annealing"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(
+        String::from_utf8_lossy(&out.stderr).contains("unknown driver"),
+        "{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    // `des` with an explicit pipeline skips the DSE: search flags would be
+    // silently dead, so they are rejected instead of ignored
+    let out = olympus()
+        .args([
+            "des",
+            design.to_str().unwrap(),
+            "--pipeline",
+            "sanitize",
+            "--driver",
+            "successive-halving",
+        ])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(
+        String::from_utf8_lossy(&out.stderr).contains("--driver"),
+        "{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+}
+
+#[test]
+fn dse_factors_are_validated_and_normalized() {
+    let dir = tmpdir("dse_factors");
+    let design = write_design(&dir);
+    let run_ok = |factors: &str| {
+        let out = olympus()
+            .args(["dse", design.to_str().unwrap(), "--factors", factors])
+            .output()
+            .unwrap();
+        assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+        String::from_utf8_lossy(&out.stdout).to_string()
+    };
+    // duplicates and order collapse to one canonical sweep
+    assert_eq!(run_ok("4,2,2"), run_ok("2,4"));
+    // zero factors are rejected with a structured message
+    let out = olympus()
+        .args(["dse", design.to_str().unwrap(), "--factors", "0"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(
+        String::from_utf8_lossy(&out.stderr).contains(">= 1"),
+        "{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    // an empty list is rejected instead of silently evaluating nothing
+    let out = olympus()
+        .args(["dse", design.to_str().unwrap(), "--factors", ","])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(
+        String::from_utf8_lossy(&out.stderr).contains("factors"),
+        "{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+}
+
 #[test]
 fn dse_jobs_flag_is_bit_identical_across_worker_counts() {
     let dir = tmpdir("dse_jobs");

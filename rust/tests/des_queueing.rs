@@ -109,6 +109,119 @@ fn exponential_service_is_seed_deterministic() {
     assert_ne!(a.mean_job_latency_s, c.mean_job_latency_s);
 }
 
+/// Two servers in tandem: mover -> s0 -> mid FIFO -> s1 -> out. Same II on
+/// both, so with deterministic service the stages overlap perfectly.
+fn tandem_two_server_net() -> DesNet {
+    let plat = builtin("generic-ddr").unwrap();
+    let mover = |name: &str, pc: usize, read: bool, fifo: usize| MoverSpec {
+        name: name.to_string(),
+        pc,
+        read,
+        flows: vec![FlowSpec {
+            base: format!("b{fifo}"),
+            fifo: Some(fifo),
+            elems_per_job: 1,
+            beats_per_elem: 1.0,
+        }],
+    };
+    let server = |name: &str, inf: usize, outf: usize| CuSpec {
+        name: name.to_string(),
+        in_fifos: vec![inf],
+        out_fifos: vec![outf],
+        ii: 3000,
+        latency: 0,
+        out_elems_per_job: 1,
+    };
+    DesNet {
+        platform: plat,
+        fifos: vec![
+            FifoSpec { name: "in".into(), cap_elems: 1_000_000 },
+            FifoSpec { name: "mid".into(), cap_elems: 1_000_000 },
+            FifoSpec { name: "out".into(), cap_elems: 1_000_000 },
+        ],
+        movers: vec![mover("dm_in", 0, true, 0), mover("dm_out", 1, false, 2)],
+        cus: vec![server("s0", 0, 1), server("s1", 1, 2)],
+        fifo_job_elems: vec![1, 1, 1],
+    }
+}
+
+/// Per-CU service distributions (the knob used to be global): making only
+/// one of two tandem servers heavy-tailed must shift the p99 job latency,
+/// while the all-deterministic baseline stays put.
+#[test]
+fn single_slow_tail_cu_shifts_p99() {
+    let net = tandem_two_server_net();
+    let sc = WorkloadScenario::poisson(LAMBDA, 2000);
+    let base = simulate_network(&net, &sc, &config(ServiceDist::Deterministic)).unwrap();
+    let tail_cfg = DesConfig {
+        cu_service_dists: vec![("s1".to_string(), ServiceDist::Exponential)],
+        ..config(ServiceDist::Deterministic)
+    };
+    let tail = simulate_network(&net, &sc, &tail_cfg).unwrap();
+    assert_eq!(base.jobs_completed, 2000);
+    assert_eq!(tail.jobs_completed, 2000);
+    assert!(
+        tail.p99_job_latency_s > 1.25 * base.p99_job_latency_s,
+        "one heavy-tailed server must lift the tail: tail p99 {} base p99 {}",
+        tail.p99_job_latency_s,
+        base.p99_job_latency_s
+    );
+    // and the tail is attributable to s1: its sojourn tail grows, s0's not
+    let node = |r: &olympus::des::DesReport, n: &str| {
+        r.nodes.iter().find(|x| x.name == n).unwrap().p99_sojourn_s
+    };
+    assert!(node(&tail, "s1") > 1.25 * node(&base, "s1"));
+    assert!(node(&tail, "s0") < 1.25 * node(&base, "s0"));
+    // determinism: per-CU overrides replay bit-identically
+    let again = simulate_network(&net, &sc, &tail_cfg).unwrap();
+    assert_eq!(tail, again);
+}
+
+/// Override matching: exact name, or prefix at a `_` separator — so one
+/// entry covers every replica/lane clone a kernel's CUs expand into.
+#[test]
+fn cu_dist_overrides_match_replica_clones_by_prefix() {
+    let cfg = DesConfig {
+        cu_service_dists: vec![("cu_k".to_string(), ServiceDist::Exponential)],
+        ..DesConfig::default()
+    };
+    assert_eq!(cfg.dist_for("cu_k"), ServiceDist::Exponential);
+    assert_eq!(cfg.dist_for("cu_k_0_r1_l0"), ServiceDist::Exponential, "replica clone");
+    assert_eq!(cfg.dist_for("cu_k_3_r0_l2"), ServiceDist::Exponential, "lane clone");
+    // a bare prefix without the separator is a different CU
+    assert_eq!(cfg.dist_for("cu_kx"), ServiceDist::Deterministic);
+    assert_eq!(cfg.dist_for("other"), ServiceDist::Deterministic);
+}
+
+/// Naming every CU in the override list is exactly the global knob: the
+/// two spellings must replay bit-identically.
+#[test]
+fn per_cu_overrides_on_every_cu_match_the_global_knob() {
+    let net = tandem_two_server_net();
+    let sc = WorkloadScenario::poisson(LAMBDA, 500);
+    let global = simulate_network(&net, &sc, &config(ServiceDist::Exponential)).unwrap();
+    let per_cu = DesConfig {
+        cu_service_dists: vec![
+            ("s0".to_string(), ServiceDist::Exponential),
+            ("s1".to_string(), ServiceDist::Exponential),
+        ],
+        ..config(ServiceDist::Deterministic)
+    };
+    let overridden = simulate_network(&net, &sc, &per_cu).unwrap();
+    assert_eq!(global, overridden);
+    // last matching entry wins: a later Deterministic override un-tails s0
+    let shadowed = DesConfig {
+        cu_service_dists: vec![
+            ("s0".to_string(), ServiceDist::Exponential),
+            ("s0".to_string(), ServiceDist::Deterministic),
+        ],
+        ..config(ServiceDist::Deterministic)
+    };
+    let r = simulate_network(&net, &sc, &shadowed).unwrap();
+    let det = simulate_network(&net, &sc, &config(ServiceDist::Deterministic)).unwrap();
+    assert_eq!(r, det);
+}
+
 /// Replica-aware striping: a factor-2 replicated design finishes a batch
 /// roughly twice as fast when each job's payload is striped across the
 /// replicas instead of being replayed in full by both.

@@ -192,6 +192,7 @@ fn served_results_are_bit_identical_across_worker_counts_and_cli_path() {
         ),
         threads: 3,
         cache: None,
+        ..DseOptions::default()
     };
     let m = parse_module(DESIGN).unwrap();
     let direct = run_dse_with(&m, &builtin("u280").unwrap(), &opts).unwrap();
