@@ -1,6 +1,9 @@
 //! Service benchmarks: cold-vs-warm DSE request latency through the
-//! content-addressed cache, and sustained requests/sec with 8 concurrent
-//! clients hammering one daemon.
+//! content-addressed cache, sustained requests/sec with 8 concurrent
+//! clients hammering one daemon, and the warm-restart speedup of the
+//! persistent disk tier (`--cache-dir`): a rebooted daemon must answer a
+//! previously evaluated request from its journal >= 10x faster than the
+//! cold evaluation.
 //!
 //! Run: `cargo bench --bench bench_service` (BENCH_FAST=1 for a quick pass).
 
@@ -106,4 +109,37 @@ fn main() {
 
     b.run();
     server.shutdown();
+
+    // persistent tier: evaluate once into a --cache-dir, restart the
+    // daemon, serve the identical request from disk. The acceptance figure
+    // is the RESTART line: disk-warm must be >= 10x faster than cold.
+    let dir = std::env::temp_dir().join(format!("olympus_bench_persist_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let popts = || ServeOptions {
+        workers: 2,
+        cache_dir: Some(dir.clone()),
+        ..ServeOptions::default()
+    };
+    let first = Server::bind("127.0.0.1:0", popts()).expect("bind persistent server");
+    let line = request_line(424_242);
+    let t0 = Instant::now();
+    let cold = roundtrip(first.addr(), &line);
+    let cold_t = t0.elapsed();
+    assert_eq!(cold.get("cached"), &Json::Bool(false), "{cold}");
+    first.shutdown();
+
+    let second = Server::bind("127.0.0.1:0", popts()).expect("rebind persistent server");
+    let t1 = Instant::now();
+    let warm = roundtrip(second.addr(), &line);
+    let warm_t = t1.elapsed();
+    assert_eq!(warm.get("cached"), &Json::Bool(true), "restart must serve from disk: {warm}");
+    assert_eq!(warm.get("result"), cold.get("result"), "bit-identical across the restart");
+    println!(
+        "RESTART COLD {:?} vs DISK-WARM {:?} -> {:.1}x warm-restart speedup",
+        cold_t,
+        warm_t,
+        cold_t.as_secs_f64() / warm_t.as_secs_f64().max(1e-9)
+    );
+    second.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
 }

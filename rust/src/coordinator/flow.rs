@@ -1,5 +1,6 @@
 //! End-to-end flow (paper Fig 3).
 
+use std::path::Path;
 use std::sync::Arc;
 
 use anyhow::Result;
@@ -108,6 +109,18 @@ impl Flow {
     pub fn with_cache(mut self, cache: Arc<CandidateCache>) -> Self {
         self.cache = Some(cache);
         self
+    }
+
+    /// Attach a *persistent* candidate memo rooted at `dir` (`olympus
+    /// dse/des --cache-dir`): previously journaled evaluations are loaded
+    /// before the search runs and fresh ones are written through, so a
+    /// repeated single-shot run re-pays nothing. Uses the same journal
+    /// layout as `olympus serve --cache-dir`, so one warm store serves
+    /// both; if a daemon currently owns the dir's writer lock, this run
+    /// still warm-loads but skips writing (read-only).
+    pub fn with_cache_dir(self, dir: &Path) -> Result<Self> {
+        let (cache, _store) = crate::service::persist::open_candidate_cache(dir, 0)?;
+        Ok(self.with_cache(cache))
     }
 
     /// Content-addressed key of the *whole* flow result for `input`: covers
@@ -285,6 +298,42 @@ mod tests {
             .with_driver(DriverKind::SuccessiveHalving { budget: 3 })
             .cache_key(&m);
         assert_eq!(p1, p2);
+    }
+
+    #[test]
+    fn cache_dir_warm_starts_the_candidate_memo() {
+        let dir = std::env::temp_dir().join(format!(
+            "olympus_flow_cache_{}_{}",
+            std::process::id(),
+            std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .unwrap()
+                .as_nanos()
+        ));
+        let m = fig4a_module();
+        let cold = Flow::new(builtin("u280").unwrap())
+            .with_cache_dir(&dir)
+            .unwrap()
+            .run(m.clone(), "app")
+            .unwrap();
+        let cold_dse = cold.dse.as_ref().expect("dse table");
+        assert!(cold_dse.full_evals > 0);
+        // a brand-new Flow (what a fresh process is) over the same dir
+        // replays every candidate from the journal and computes nothing
+        let warm = Flow::new(builtin("u280").unwrap())
+            .with_cache_dir(&dir)
+            .unwrap()
+            .run(m, "app")
+            .unwrap();
+        let warm_dse = warm.dse.as_ref().expect("dse table");
+        assert_eq!(warm_dse.full_evals, 0, "warm start computes nothing");
+        assert_eq!(warm_dse.best_strategy, cold_dse.best_strategy);
+        assert_eq!(
+            crate::ir::print_module(&warm.module),
+            crate::ir::print_module(&cold.module),
+            "winning module bit-identical across the warm start"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -5,11 +5,12 @@
 //! olympus opt   <file.mlir> [--platform u280] [--pipeline "sanitize,iris"]
 //! olympus dse   <file.mlir> [--platform u280] [--objective analytic|des-score] [--jobs N]
 //!               [--driver exhaustive|random|successive-halving|iterative]
-//!               [--budget N] [--search-seed N]
+//!               [--budget N] [--search-seed N] [--cache-dir DIR]
 //! olympus des   <file.mlir> [--platform u280] [--pipeline ...] [--scenario SPEC] [--seed N]
+//!               [--cache-dir DIR]
 //! olympus lower <file.mlir> [--platform u280] [--pipeline ...] [--out DIR]
 //! olympus run   <file.mlir> [--platform u280] [--pipeline ...] [--artifacts DIR] [--seed N]
-//! olympus serve [--addr 127.0.0.1:7878] [--jobs N] [--cache-capacity N]
+//! olympus serve [--addr 127.0.0.1:7878] [--jobs N] [--cache-capacity N] [--cache-dir DIR]
 //! olympus submit <file.mlir> [--addr ...] [--cmd dse|des|flow] [--platform ...] [...]
 //! olympus cache-stats [--addr ...]
 //! ```
@@ -23,7 +24,10 @@
 //!
 //! `serve` runs the long-lived DSE job service (newline-delimited JSON over
 //! TCP, worker pool, content-addressed evaluation cache — see README
-//! "Running as a service"); `submit` is the matching thin client. (clap is
+//! "Running as a service"); `submit` is the matching thin client.
+//! `--cache-dir` persists the evaluation caches to disk: a restarted
+//! daemon (and repeated single-shot `dse`/`des` runs) answers previously
+//! evaluated work from the journal instead of recomputing it. (clap is
 //! not vendored in this offline build; argument parsing is hand-rolled.)
 
 use std::collections::HashMap;
@@ -98,7 +102,8 @@ fn usage() -> ! {
          [--platform NAME|file.json] [--pipeline P] [--objective analytic|des-score] \
          [--driver exhaustive|random|successive-halving|iterative] [--budget N] \
          [--search-seed N] [--scenario closed:N|poisson:HZ:N|bursty:HZ:ON:OFF:N] [--out DIR] \
-         [--artifacts DIR] [--seed N] [--jobs N] [--addr HOST:PORT] [--factors 2,4]"
+         [--artifacts DIR] [--seed N] [--jobs N] [--addr HOST:PORT] [--factors 2,4] \
+         [--cache-dir DIR]"
     );
     std::process::exit(2)
 }
@@ -159,6 +164,19 @@ fn parse_scenario(spec: &str) -> Result<olympus::des::WorkloadScenario> {
     olympus::des::WorkloadScenario::parse(spec).map_err(|e| anyhow::anyhow!(e))
 }
 
+/// Parse `--seed`: a bad value is a loud, contextual error — silently
+/// falling back to a default seed would make a run irreproducible without
+/// any hint why.
+fn seed_from_args(args: &Args) -> Result<Option<u64>> {
+    match args.flags.get("seed") {
+        Some(s) => s
+            .parse::<u64>()
+            .map(Some)
+            .with_context(|| format!("--seed wants a non-negative integer, got '{s}'")),
+        None => Ok(None),
+    }
+}
+
 /// Shared `--scenario` / `--seed` handling for the DES-facing commands.
 fn scenario_and_config(
     args: &Args,
@@ -168,7 +186,7 @@ fn scenario_and_config(
         None => olympus::des::WorkloadScenario::closed_loop(4),
     };
     let mut cfg = olympus::des::DesConfig::default();
-    if let Some(seed) = args.flags.get("seed").and_then(|s| s.parse().ok()) {
+    if let Some(seed) = seed_from_args(args)? {
         cfg.seed = seed;
     }
     Ok((scenario, cfg))
@@ -225,10 +243,29 @@ fn main() -> Result<()> {
                 flow.dse_factors = factors;
             }
             flow = flow.with_driver(driver_from_args(&args)?);
-            if args.flags.get("objective").map(|s| s.as_str()) == Some("des-score") {
-                let (scenario, cfg) = scenario_and_config(&args)?;
-                flow = flow
-                    .with_objective(olympus::passes::DseObjective::des_score_with(scenario, cfg));
+            match args.flags.get("objective").map(|s| s.as_str()) {
+                Some("des-score") => {
+                    let (scenario, cfg) = scenario_and_config(&args)?;
+                    flow = flow.with_objective(olympus::passes::DseObjective::des_score_with(
+                        scenario, cfg,
+                    ));
+                }
+                // the analytic objective has no scenario or seed: reject
+                // the flags instead of silently ignoring them
+                None | Some("analytic") => {
+                    for flag in ["scenario", "seed"] {
+                        if args.flags.contains_key(flag) {
+                            bail!(
+                                "--{flag} only configures the des-score objective; \
+                                 add --objective des-score or drop --{flag}"
+                            );
+                        }
+                    }
+                }
+                Some(other) => bail!("unknown objective '{other}' (want analytic | des-score)"),
+            }
+            if let Some(dir) = args.flags.get("cache-dir") {
+                flow = flow.with_cache_dir(Path::new(dir))?;
             }
             let r = flow.run(m, "app")?;
             print!("{}", render_dse_table(r.dse.as_ref().unwrap()));
@@ -236,6 +273,11 @@ fn main() -> Result<()> {
         }
         "des" => {
             let input = args.positional.first().unwrap_or_else(|| usage());
+            if args.flags.contains_key("objective") {
+                // the DES command always scores with the DES: an
+                // --objective here would be silently dead
+                bail!("--objective is fixed to des-score by 'des'; use 'dse --objective ...' to choose");
+            }
             let m = load_module(input)?;
             let plat = load_platform(&args)?;
             let pipeline = args.flags.get("pipeline").map(|s| s.as_str());
@@ -251,6 +293,12 @@ fn main() -> Result<()> {
                         &args,
                         "with an explicit --pipeline (drop --pipeline to search)",
                     )?;
+                    if args.flags.contains_key("cache-dir") {
+                        bail!(
+                            "--cache-dir warms the design-space search and is not supported \
+                             with an explicit --pipeline (drop --pipeline to search)"
+                        );
+                    }
                     flow = flow.with_pipeline(p);
                 }
                 // no explicit pipeline: the DSE picks the design, and for a
@@ -264,6 +312,9 @@ fn main() -> Result<()> {
                             scenario, cfg,
                         ))
                         .with_driver(driver_from_args(&args)?);
+                    if let Some(dir) = args.flags.get("cache-dir") {
+                        flow = flow.with_cache_dir(Path::new(dir))?;
+                    }
                 }
             }
             let r = flow.run(m, "app")?;
@@ -311,8 +362,7 @@ fn main() -> Result<()> {
             let pipeline = args.flags.get("pipeline").map(|s| s.as_str());
             let artifacts =
                 PathBuf::from(args.flags.get("artifacts").cloned().unwrap_or("artifacts".into()));
-            let seed: u64 =
-                args.flags.get("seed").and_then(|s| s.parse().ok()).unwrap_or(42);
+            let seed: u64 = seed_from_args(&args)?.unwrap_or(42);
 
             // channel payload sizes (for synthetic host buffers), pre-opt
             let mut sizes: Vec<(String, usize)> = Vec::new();
@@ -374,6 +424,7 @@ fn main() -> Result<()> {
                 workers: parse_n("jobs", 0)?,
                 cache_capacity: parse_n("cache-capacity", 0)?,
                 dse_threads: parse_n("dse-threads", 1)?,
+                cache_dir: args.flags.get("cache-dir").map(PathBuf::from),
             };
             let server = Server::bind(&addr, opts)?;
             // the address line is the startup handshake scripts wait for

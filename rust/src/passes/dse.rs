@@ -48,14 +48,14 @@ use anyhow::Result;
 
 use crate::analysis::{analyze_bandwidth, analyze_resources, Dfg};
 use crate::des::{simulate, DesConfig, WorkloadScenario};
-use crate::ir::Module;
+use crate::ir::{parse_module, print_module, Module};
 use crate::lower::build_architecture;
 use crate::platform::PlatformSpec;
 use crate::search::{
     iterative_moves, normalize_factors, run_driver, DriverKind, ObjectiveEvaluator, StrategyGrid,
 };
 use crate::service::cache::EvalCache;
-use crate::util::ContentHash;
+use crate::util::{ContentHash, Json};
 
 /// One evaluated candidate.
 #[derive(Debug, Clone)]
@@ -154,6 +154,79 @@ pub fn candidate_cache_key(
     objective_desc: &str,
 ) -> ContentHash {
     ContentHash::of_parts(&["olympus-cand-v1", module_fp, platform_fp, pipeline, objective_desc])
+}
+
+/// f64 as its raw bit pattern in hex: round-trips *bit-identically*,
+/// including the `inf` scores of infeasible candidates, which JSON numbers
+/// cannot carry.
+fn f64_bits(x: f64) -> Json {
+    Json::Str(format!("{:016x}", x.to_bits()))
+}
+
+fn f64_from_bits(j: &Json) -> Option<f64> {
+    let s = j.as_str()?;
+    u64::from_str_radix(s, 16).ok().map(f64::from_bits)
+}
+
+fn opt_f64_bits(x: Option<f64>) -> Json {
+    match x {
+        Some(v) => f64_bits(v),
+        None => Json::Null,
+    }
+}
+
+/// Serialize a cached outcome for the disk tier of the candidate cache
+/// (`--cache-dir`; see [`crate::service::persist`]). The module travels as
+/// its printed IR, floats as raw bit patterns, so a warm-started process
+/// reconstructs exactly the value a fresh evaluation would produce.
+pub fn outcome_to_json(o: &CandidateOutcome) -> Json {
+    match o {
+        CandidateOutcome::Infeasible => Json::obj(vec![("infeasible", true.into())]),
+        CandidateOutcome::Evaluated { cand, module } => Json::obj(vec![
+            ("strategy", cand.strategy.as_str().into()),
+            ("pipeline", cand.pipeline.as_str().into()),
+            ("makespan_s", f64_bits(cand.makespan_s)),
+            ("achieved_gbs", f64_bits(cand.achieved_gbs)),
+            ("efficiency", f64_bits(cand.efficiency)),
+            ("utilization", f64_bits(cand.utilization)),
+            ("fits", cand.fits.into()),
+            ("compute_units", cand.compute_units.into()),
+            ("des_makespan_s", opt_f64_bits(cand.des_makespan_s)),
+            ("des_p99_latency_s", opt_f64_bits(cand.des_p99_latency_s)),
+            ("score", f64_bits(cand.score)),
+            ("module", print_module(module).into()),
+        ]),
+    }
+}
+
+/// Inverse of [`outcome_to_json`]. `None` marks a record this build cannot
+/// decode (e.g. the stored IR no longer parses after a dialect change);
+/// callers count it as corrupt-skipped and re-evaluate — never an error.
+pub fn outcome_from_json(j: &Json) -> Option<CandidateOutcome> {
+    if j.get("infeasible") == &Json::Bool(true) {
+        return Some(CandidateOutcome::Infeasible);
+    }
+    let module = parse_module(j.get("module").as_str()?).ok()?;
+    let opt_f64 = |k: &str| -> Option<Option<f64>> {
+        match j.get(k) {
+            Json::Null => Some(None),
+            v => f64_from_bits(v).map(Some),
+        }
+    };
+    let cand = DseCandidate {
+        strategy: j.get("strategy").as_str()?.to_string(),
+        pipeline: j.get("pipeline").as_str()?.to_string(),
+        makespan_s: f64_from_bits(j.get("makespan_s"))?,
+        achieved_gbs: f64_from_bits(j.get("achieved_gbs"))?,
+        efficiency: f64_from_bits(j.get("efficiency"))?,
+        utilization: f64_from_bits(j.get("utilization"))?,
+        fits: j.get("fits") == &Json::Bool(true),
+        compute_units: j.get("compute_units").as_usize()?,
+        des_makespan_s: opt_f64("des_makespan_s")?,
+        des_p99_latency_s: opt_f64("des_p99_latency_s")?,
+        score: f64_from_bits(j.get("score"))?,
+    };
+    Some(CandidateOutcome::Evaluated { cand, module })
 }
 
 /// DSE tuning knobs.
@@ -574,6 +647,57 @@ mod tests {
                 assert_eq!(a.des_makespan_s, b.des_makespan_s, "{}", a.strategy);
             }
         }
+    }
+
+    #[test]
+    fn outcome_codec_round_trips_bit_identically() {
+        let m = fig4a_module();
+        let plat = builtin("u280").unwrap();
+        let mut opt = m.clone();
+        let mut ctx = PassContext::new(plat.clone());
+        parse_pipeline("sanitize, iris, channel-reassign", &mut ctx)
+            .unwrap()
+            .run(&mut opt, &ctx)
+            .unwrap();
+        let cand = evaluate_candidate(
+            &opt,
+            &plat,
+            &DseObjective::Analytic,
+            "iris".to_string(),
+            "sanitize, iris, channel-reassign".to_string(),
+        );
+        // an infinite score (infeasible under the objective) must survive
+        // the trip — JSON numbers cannot carry inf, the bit encoding can
+        let mut inf_cand = cand.clone();
+        inf_cand.score = f64::INFINITY;
+        for cand in [cand, inf_cand] {
+            let outcome = CandidateOutcome::Evaluated { cand, module: opt.clone() };
+            let text = outcome_to_json(&outcome).to_string();
+            let back = outcome_from_json(&Json::parse(&text).unwrap()).expect("decodes");
+            let (CandidateOutcome::Evaluated { cand: a, module: ma },
+                 CandidateOutcome::Evaluated { cand: b, module: mb }) = (&outcome, &back)
+            else {
+                panic!("variant changed in round trip");
+            };
+            assert_eq!(a.strategy, b.strategy);
+            assert_eq!(a.pipeline, b.pipeline);
+            assert_eq!(a.makespan_s.to_bits(), b.makespan_s.to_bits());
+            assert_eq!(a.achieved_gbs.to_bits(), b.achieved_gbs.to_bits());
+            assert_eq!(a.efficiency.to_bits(), b.efficiency.to_bits());
+            assert_eq!(a.utilization.to_bits(), b.utilization.to_bits());
+            assert_eq!(a.score.to_bits(), b.score.to_bits());
+            assert_eq!(a.des_makespan_s, b.des_makespan_s);
+            assert_eq!(a.des_p99_latency_s, b.des_p99_latency_s);
+            assert_eq!((a.fits, a.compute_units), (b.fits, b.compute_units));
+            assert_eq!(print_module(ma), print_module(mb), "module survives verbatim");
+        }
+        // the infeasible marker round-trips too, and garbage decodes to None
+        let infeasible = outcome_to_json(&CandidateOutcome::Infeasible).to_string();
+        assert!(matches!(
+            outcome_from_json(&Json::parse(&infeasible).unwrap()),
+            Some(CandidateOutcome::Infeasible)
+        ));
+        assert!(outcome_from_json(&Json::parse("{}").unwrap()).is_none());
     }
 
     #[test]

@@ -12,7 +12,10 @@
 //!   `des-score`). This is the fidelity the decision table and the winner
 //!   are built from; it carries the content-addressed
 //!   [`CandidateCache`](crate::passes::CandidateCache) memoization and the
-//!   std-thread evaluation pool.
+//!   std-thread evaluation pool. The memo may be disk-backed
+//!   (`--cache-dir`; [`crate::service::persist`]): keys are stable across
+//!   processes, so a warm-started run answers previously journaled points
+//!   without recomputing and `full_evals` counts only genuine computations.
 //!
 //! [`ObjectiveEvaluator`] is the production implementation; tests stub the
 //! trait to drive the search policies deterministically.

@@ -18,15 +18,25 @@
 //! Recency is tracked with a lazily-compacted access log: each touch
 //! appends a `(key, seq)` record; eviction pops stale records until it
 //! finds one whose sequence is still current.
+//!
+//! **Disk tier (optional)**: [`EvalCache::persist_to`] attaches an
+//! append-only journal ([`crate::service::persist`]); computed values write
+//! through on miss and [`EvalCache::warm_insert`] seeds entries back at
+//! startup, so a restarted process answers repeated keys without
+//! recomputing. Eviction only trims the in-memory tier — the journal keeps
+//! every record until its directory is deleted.
 
 use std::collections::{HashMap, VecDeque};
 use std::fmt;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 
 use crate::util::ContentHash;
 
-/// Counters exposed by `cache-stats`.
+use super::persist::DiskStore;
+
+/// Counters exposed by `cache-stats`. The `disk_*` fields mirror the
+/// attached [`DiskStore`] tier and stay zero for memory-only caches.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub struct CacheStats {
     /// Ready entries currently stored.
@@ -40,6 +50,13 @@ pub struct CacheStats {
     pub coalesced: u64,
     /// Entries dropped by the capacity bound.
     pub evicted: u64,
+    /// Records loaded from the disk journal at startup.
+    pub disk_loaded: u64,
+    /// Records written through to the disk journal by this process.
+    pub disk_persisted: u64,
+    /// Disk records dropped as corrupt/undecodable (torn tails, failed
+    /// checksums, values this build cannot parse).
+    pub disk_corrupt_skipped: u64,
 }
 
 enum Slot<V> {
@@ -87,6 +104,10 @@ pub struct EvalCache<V> {
     evicted: AtomicU64,
     /// Max Ready entries (0 = unbounded). Least-recently-used evicts first.
     capacity: usize,
+    /// Optional disk tier: every computed value the encoder accepts is
+    /// appended to the journal (write-through on miss; see
+    /// [`crate::service::persist`]).
+    disk: Option<(Arc<DiskStore>, Box<dyn Fn(&V) -> Option<Vec<u8>> + Send + Sync>)>,
 }
 
 impl<V: Clone> Default for EvalCache<V> {
@@ -117,6 +138,59 @@ impl<V: Clone> EvalCache<V> {
             coalesced: AtomicU64::new(0),
             evicted: AtomicU64::new(0),
             capacity,
+            disk: None,
+        }
+    }
+
+    /// Attach a disk tier: every value computed through
+    /// [`EvalCache::get_or_compute`] is encoded with `encode` and appended
+    /// to `store` (durability per the store's sync policy). `encode` may
+    /// decline (`None`) values that must not outlive the process (e.g.
+    /// possibly-transient failures). Warm-loaded and coalesced values are
+    /// never re-appended. Must be called before the cache is shared (takes
+    /// `&mut self`).
+    pub fn persist_to<F>(&mut self, store: Arc<DiskStore>, encode: F)
+    where
+        F: Fn(&V) -> Option<Vec<u8>> + Send + Sync + 'static,
+    {
+        self.disk = Some((store, Box::new(encode)));
+    }
+
+    /// Seed `key` from the disk tier at startup. Counts neither as a hit
+    /// nor a miss and never writes back through to disk. Returns `false`
+    /// (leaving the stored entry alone) when the key is already present.
+    pub fn warm_insert(&self, key: ContentHash, value: V) -> bool {
+        let mut guard = self.inner.lock().unwrap();
+        if guard.map.contains_key(&key) {
+            return false;
+        }
+        guard.map.insert(key, Slot::Ready(value));
+        guard.ready += 1;
+        if self.capacity > 0 {
+            guard.touch(key);
+            self.evict_to_capacity(&mut guard);
+        }
+        drop(guard);
+        self.ready.notify_all();
+        true
+    }
+
+    /// Drop least-recently-used Ready entries until the capacity bound
+    /// holds again (bounded caches only; the lock is already held).
+    fn evict_to_capacity(&self, guard: &mut Inner<V>) {
+        while guard.ready > self.capacity {
+            // pop access records oldest-first; stale ones (a newer touch
+            // exists) are skipped, the first current one is the LRU entry
+            let Some((old, seq)) = guard.order.pop_front() else { break };
+            if guard.last_used.get(&old) != Some(&seq) {
+                continue;
+            }
+            if matches!(guard.map.get(&old), Some(Slot::Ready(_))) {
+                guard.map.remove(&old);
+                guard.last_used.remove(&old);
+                guard.ready -= 1;
+                self.evicted.fetch_add(1, Ordering::Relaxed);
+            }
         }
     }
 
@@ -180,23 +254,17 @@ impl<V: Clone> EvalCache<V> {
         }
         if self.capacity > 0 {
             guard.touch(key);
-            while guard.ready > self.capacity {
-                // pop access records oldest-first; stale ones (a newer touch
-                // exists) are skipped, the first current one is the LRU entry
-                let Some((old, seq)) = guard.order.pop_front() else { break };
-                if guard.last_used.get(&old) != Some(&seq) {
-                    continue;
-                }
-                if matches!(guard.map.get(&old), Some(Slot::Ready(_))) {
-                    guard.map.remove(&old);
-                    guard.last_used.remove(&old);
-                    guard.ready -= 1;
-                    self.evicted.fetch_add(1, Ordering::Relaxed);
-                }
-            }
+            self.evict_to_capacity(&mut guard);
         }
         drop(guard);
         self.ready.notify_all();
+        // write-through to the disk tier, outside the lock: fsync latency
+        // must not serialize unrelated keys
+        if let Some((store, encode)) = &self.disk {
+            if let Some(bytes) = encode(&value) {
+                store.append(key, &bytes);
+            }
+        }
         (value, false)
     }
 
@@ -218,12 +286,16 @@ impl<V: Clone> EvalCache<V> {
 
     pub fn stats(&self) -> CacheStats {
         let guard = self.inner.lock().unwrap();
+        let disk = self.disk.as_ref().map(|(s, _)| s.stats()).unwrap_or_default();
         CacheStats {
             entries: guard.ready as u64,
             hits: self.hits.load(Ordering::Relaxed),
             misses: self.misses.load(Ordering::Relaxed),
             coalesced: self.coalesced.load(Ordering::Relaxed),
             evicted: self.evicted.load(Ordering::Relaxed),
+            disk_loaded: disk.loaded,
+            disk_persisted: disk.persisted,
+            disk_corrupt_skipped: disk.corrupt_skipped,
         }
     }
 }
@@ -360,6 +432,22 @@ mod tests {
             "access log must compact: {} records",
             guard.order.len()
         );
+    }
+
+    #[test]
+    fn warm_insert_serves_without_miss_and_respects_capacity() {
+        let c = EvalCache::with_capacity(2);
+        assert!(c.warm_insert(key("a"), 1));
+        assert!(!c.warm_insert(key("a"), 99), "first load wins");
+        let (v, cached) = c.get_or_compute(key("a"), || panic!("warm entry must hit"));
+        assert_eq!((v, cached), (1, true));
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses), (1, 0), "warm entries are hits, not misses");
+        assert_eq!((s.disk_loaded, s.disk_persisted), (0, 0), "no disk tier attached");
+        // warm inserts participate in the LRU bound like any other entry
+        assert!(c.warm_insert(key("b"), 2));
+        assert!(c.warm_insert(key("c"), 3));
+        assert_eq!(c.stats().entries, 2);
     }
 
     #[test]

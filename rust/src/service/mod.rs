@@ -14,6 +14,10 @@
 //!   Keys hash *what is being evaluated* (module IR, platform spec,
 //!   pipeline/strategy, objective, scenario, seed), so cache placement can
 //!   never change a result — only skip recomputing it;
+//! * **[`persist`]** — optional on-disk tier (`--cache-dir`): an
+//!   append-only, checksummed journal both cache levels load at startup and
+//!   write through on miss, so a killed-and-restarted daemon serves warm
+//!   answers without re-evaluating;
 //! * **[`worker`]** — request execution through a two-level memo (whole
 //!   responses + individual DSE candidates).
 //!
@@ -22,22 +26,31 @@
 //! warm, or raced by N workers. `rust/tests/service.rs` pins this.
 
 pub mod cache;
+pub mod persist;
 pub mod proto;
 pub mod queue;
 pub mod worker;
 
 pub use cache::{CacheStats, EvalCache};
+pub use persist::{DiskStats, DiskStore};
 pub use proto::{error_response, ok_response, parse_request, Command, ProtoError, Request};
 pub use queue::JobQueue;
 pub use worker::{execute_request, Job, Served, ServiceState};
 
-use std::io::{BufRead, BufReader, Write};
+use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc};
 use std::thread::JoinHandle;
 
 use anyhow::{Context, Result};
+
+/// Upper bound on one request line. Big enough for any real module IR
+/// (the largest builtin designs serialize to a few hundred KB), small
+/// enough that a hostile or broken client cannot balloon daemon memory by
+/// streaming a newline-less body.
+pub const MAX_REQUEST_BYTES: u64 = 16 * 1024 * 1024;
 
 /// Daemon configuration.
 #[derive(Debug, Clone)]
@@ -50,11 +63,14 @@ pub struct ServeOptions {
     /// across jobs, so 1 avoids oversubscription; results are identical for
     /// any value.
     pub dse_threads: usize,
+    /// Persist both cache tiers to this directory (`--cache-dir`); `None`
+    /// keeps the caches memory-only.
+    pub cache_dir: Option<PathBuf>,
 }
 
 impl Default for ServeOptions {
     fn default() -> Self {
-        ServeOptions { workers: 0, cache_capacity: 0, dse_threads: 1 }
+        ServeOptions { workers: 0, cache_capacity: 0, dse_threads: 1, cache_dir: None }
     }
 }
 
@@ -77,7 +93,11 @@ impl Server {
         let local = listener.local_addr().context("local_addr")?;
         let stop = Arc::new(AtomicBool::new(false));
         let queue = Arc::new(JobQueue::new());
-        let state = Arc::new(ServiceState::new(opts.cache_capacity, opts.dse_threads));
+        let state = Arc::new(ServiceState::with_cache_dir(
+            opts.cache_capacity,
+            opts.dse_threads,
+            opts.cache_dir.as_deref(),
+        )?);
 
         let n_workers = if opts.workers == 0 {
             std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1)
@@ -163,8 +183,9 @@ impl Drop for Server {
 }
 
 /// Per-connection loop: read request lines, answer each on its own line.
-/// The connection survives malformed requests; only EOF, socket errors or
-/// `shutdown` end it.
+/// The connection survives malformed requests — including oversized ones,
+/// whose bodies are drained without buffering after a `too-large` error —
+/// only EOF, socket errors or `shutdown` end it.
 fn handle_conn(
     stream: TcpStream,
     queue: Arc<JobQueue<Job>>,
@@ -175,14 +196,72 @@ fn handle_conn(
     let Ok(read_half) = stream.try_clone() else { return };
     let mut reader = BufReader::new(read_half);
     let mut writer = stream;
-    let mut line = String::new();
+    let mut line = Vec::new();
     loop {
         line.clear();
-        match reader.read_line(&mut line) {
+        // bound each line read: a client that streams a newline-less body
+        // must not grow `line` without limit. The +1 distinguishes "exactly
+        // at the cap" from "over it". Bytes, not read_line: the cap must
+        // not depend on where a multi-byte character happens to fall.
+        match (&mut reader).take(MAX_REQUEST_BYTES + 1).read_until(b'\n', &mut line) {
             Ok(0) | Err(_) => break, // client hung up
             Ok(_) => {}
         }
-        let trimmed = line.trim();
+        if !line.ends_with(b"\n") && line.len() as u64 > MAX_REQUEST_BYTES {
+            line.clear(); // drop the oversized prefix immediately
+            let resp = error_response(&ProtoError::new(
+                "too-large",
+                format!("request exceeds {MAX_REQUEST_BYTES} bytes; split the work or shrink the IR"),
+            ));
+            if writer.write_all(resp.as_bytes()).is_err()
+                || writer.write_all(b"\n").is_err()
+                || writer.flush().is_err()
+            {
+                break;
+            }
+            // discard the rest of the line chunk-by-chunk — never buffered —
+            // so the connection stays usable for the next request
+            let mut hangup = false;
+            loop {
+                let (consumed, at_line_end) = match reader.fill_buf() {
+                    Ok([]) | Err(_) => {
+                        hangup = true;
+                        (0, true)
+                    }
+                    Ok(buf) => match buf.iter().position(|&b| b == b'\n') {
+                        Some(pos) => (pos + 1, true),
+                        None => (buf.len(), false),
+                    },
+                };
+                reader.consume(consumed);
+                if at_line_end {
+                    break;
+                }
+            }
+            if hangup {
+                break;
+            }
+            continue;
+        }
+        // within bounds: now require UTF-8 (a structured error, not a
+        // dropped connection)
+        let text = match std::str::from_utf8(&line) {
+            Ok(t) => t,
+            Err(_) => {
+                let resp = error_response(&ProtoError::new(
+                    "bad-json",
+                    "request is not valid UTF-8",
+                ));
+                if writer.write_all(resp.as_bytes()).is_err()
+                    || writer.write_all(b"\n").is_err()
+                    || writer.flush().is_err()
+                {
+                    break;
+                }
+                continue;
+            }
+        };
+        let trimmed = text.trim();
         if trimmed.is_empty() {
             continue;
         }

@@ -1,0 +1,791 @@
+//! On-disk persistence for the evaluation caches: the third tier under the
+//! in-memory response/candidate memos.
+//!
+//! The store is an **append-only journal** of `(ContentHash, value bytes)`
+//! records. Cache keys are already process-independent (stable fingerprints
+//! hashed with [`ContentHash`]), so any process that opens the same
+//! `--cache-dir` computes the same addresses and can reuse every record —
+//! a killed-and-restarted daemon answers a repeated request from disk
+//! without re-evaluating anything.
+//!
+//! Format, designed so that *no* on-disk state can panic a reader:
+//!
+//! * a 16-byte **versioned header** (`b"olympus-jrnl"` + `u32` version).
+//!   A file with a different version or foreign magic is moved aside to
+//!   `*.incompatible` and a fresh journal is started — incompatible formats
+//!   are skipped, never misread;
+//! * each record is `u32` payload length + `u64` FNV-1a checksum + payload
+//!   (16-byte little-endian key, then the value bytes). A record that fails
+//!   its checksum but frames correctly (bit rot) is skipped alone; a tail
+//!   whose framing is broken (daemon killed mid-append) ends the replay.
+//!   Both are counted, never a panic or a wrong hit;
+//! * a key already journaled is never appended twice — an
+//!   evicted-then-recomputed entry has, by determinism, the same value;
+//! * **one writer at a time**, enforced with an advisory `*.lock` file
+//!   stamped with the owner's PID (a lock whose process is dead is stolen,
+//!   so a SIGKILLed daemon never wedges its cache dir). Non-owners open
+//!   **read-only**: they warm-load every valid record but never append and
+//!   never repair, so sharing a daemon's live dir with single-shot runs is
+//!   safe;
+//! * when damage is found at open, the **owner compacts**: valid records
+//!   are rewritten through a temp file and an atomic rename. Only the lock
+//!   owner does this, so no other writer's append handle can be orphaned.
+//!
+//! Startup replays the whole journal into memory before seeding the cache;
+//! journal size is bounded by deleting the dir (see README), not by the
+//! in-memory capacity bound.
+
+use std::collections::HashSet;
+use std::fs::{File, OpenOptions};
+use std::io::{Read, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{Context, Result};
+
+use crate::passes::{outcome_from_json, outcome_to_json, CandidateCache};
+use crate::util::{fnv1a_64, ContentHash, Json};
+
+use super::cache::EvalCache;
+use super::worker::Served;
+
+/// Journal magic; a file that does not start with this is not ours.
+const MAGIC: &[u8; 12] = b"olympus-jrnl";
+/// Bump whenever the record payload encoding changes; readers skip (move
+/// aside) journals written by another version instead of misreading them.
+const VERSION: u32 = 1;
+const HEADER_LEN: usize = 16;
+/// Length prefix + checksum preceding every payload.
+const RECORD_PREFIX: usize = 12;
+/// A payload is at least its 16-byte key.
+const MIN_PAYLOAD: u32 = 16;
+/// A response or candidate is at most a few MB of IR + JSON; a length
+/// beyond this is corruption, not data. [`DiskStore::append`] refuses (and
+/// counts) values the replay path would reject, so a writer can never
+/// poison its own journal.
+const MAX_PAYLOAD: u32 = 256 * 1024 * 1024;
+
+/// The whole-response journal inside a `--cache-dir`.
+pub const RESPONSES_JOURNAL: &str = "responses.jrnl";
+/// The per-candidate journal inside a `--cache-dir`.
+pub const CANDIDATES_JOURNAL: &str = "candidates.jrnl";
+
+/// Disk-tier counters surfaced through `cache-stats`.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct DiskStats {
+    /// Records decoded from the journal into the in-memory tier at open.
+    pub loaded: u64,
+    /// Records appended (durably) by this process.
+    pub persisted: u64,
+    /// Records dropped: torn tails, failed checksums, undecodable values,
+    /// and values too large for the record bound.
+    pub corrupt_skipped: u64,
+}
+
+/// One open journal: replay-at-open, append afterwards (lock owner only).
+pub struct DiskStore {
+    path: PathBuf,
+    file: Mutex<File>,
+    /// `Some(lock file)` when this store owns the advisory writer lock;
+    /// `None` = read-only (another live process is the writer).
+    lock: Option<PathBuf>,
+    /// fsync every append. The response journal wants this (a served answer
+    /// must survive a machine crash once the client saw it); the candidate
+    /// journal uses OS-buffered appends + fsync at drop instead — page
+    /// cache survives a SIGKILL, so only power loss can cost records, and
+    /// a lost candidate record only means one re-evaluation.
+    sync_every_append: bool,
+    /// Keys already present in the journal: appends dedupe against this so
+    /// an evicted-then-recomputed entry cannot grow the file unboundedly.
+    journaled: Mutex<HashSet<ContentHash>>,
+    loaded: AtomicU64,
+    persisted: AtomicU64,
+    corrupt: AtomicU64,
+}
+
+impl DiskStore {
+    /// Open with per-append fsync (see [`DiskStore::open_with`]).
+    pub fn open(path: &Path) -> Result<(DiskStore, Vec<(ContentHash, Vec<u8>)>)> {
+        Self::open_with(path, true)
+    }
+
+    /// Open (or create) the journal at `path` and replay every valid
+    /// record. Returns the store plus the raw `(key, value bytes)` entries;
+    /// the caller decodes values and seeds its in-memory cache. Corrupt
+    /// records are counted, dropped and (for the lock owner) compacted
+    /// away; an incompatible header moves the old file aside — neither is
+    /// an error. If another live process holds the writer lock, the store
+    /// opens read-only: it loads but never appends or repairs.
+    pub fn open_with(
+        path: &Path,
+        sync_every_append: bool,
+    ) -> Result<(DiskStore, Vec<(ContentHash, Vec<u8>)>)> {
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)
+                    .with_context(|| format!("create cache dir {}", parent.display()))?;
+            }
+        }
+        let lock = acquire_writer_lock(path);
+        if lock.is_none() {
+            eprintln!(
+                "olympus-cache: {} is being written by another process; opening read-only",
+                path.display()
+            );
+        }
+        let open_rw = || {
+            OpenOptions::new()
+                .read(true)
+                .append(true)
+                .create(true)
+                .open(path)
+                .with_context(|| format!("open journal {}", path.display()))
+        };
+        let mut file = open_rw()?;
+        let mut bytes = Vec::new();
+        file.read_to_end(&mut bytes)
+            .with_context(|| format!("read journal {}", path.display()))?;
+        let mut entries = Vec::new();
+        let mut corrupt = 0u64;
+        if bytes.is_empty() {
+            if lock.is_some() {
+                // fresh journal: the header goes through the same append
+                // handle (no rename, nothing to orphan)
+                file.write_all(&header_bytes()).context("write journal header")?;
+                file.sync_all().context("fsync journal header")?;
+            }
+        } else if !header_ok(&bytes) {
+            if lock.is_some() {
+                // foreign or future-format file: move it aside untouched so
+                // a downgrade never destroys data, then start fresh
+                let aside = path.with_extension("incompatible");
+                drop(file);
+                std::fs::rename(path, &aside)
+                    .with_context(|| format!("move incompatible journal {}", path.display()))?;
+                eprintln!(
+                    "olympus-cache: journal {} has an incompatible header; moved to {}",
+                    path.display(),
+                    aside.display()
+                );
+                file = open_rw()?;
+                file.write_all(&header_bytes()).context("write journal header")?;
+                file.sync_all().context("fsync journal header")?;
+            } else {
+                eprintln!(
+                    "olympus-cache: journal {} has an incompatible header; nothing loaded",
+                    path.display()
+                );
+            }
+        } else {
+            let (recs, bad) = replay(&bytes[HEADER_LEN..]);
+            entries = recs;
+            corrupt = bad;
+            if corrupt > 0 {
+                eprintln!(
+                    "olympus-cache: journal {}: dropped {corrupt} corrupt record(s) \
+                     ({} valid record(s) kept)",
+                    path.display(),
+                    entries.len()
+                );
+                if lock.is_some() {
+                    // compact: rewrite the valid records through a temp file
+                    // + atomic rename, then reopen our handle on the new
+                    // inode. Safe: the lock guarantees no other writer whose
+                    // append handle a rename could orphan.
+                    write_compacted(path, &entries)?;
+                    file = open_rw()?;
+                }
+            }
+        }
+        let journaled = entries.iter().map(|(k, _)| *k).collect();
+        Ok((
+            DiskStore {
+                path: path.to_path_buf(),
+                file: Mutex::new(file),
+                lock,
+                sync_every_append,
+                journaled: Mutex::new(journaled),
+                loaded: AtomicU64::new(0),
+                persisted: AtomicU64::new(0),
+                corrupt: AtomicU64::new(corrupt),
+            },
+            entries,
+        ))
+    }
+
+    /// Append one record (lock owner only; read-only stores skip). A key
+    /// already journaled is skipped (same key means same value — every
+    /// evaluation is deterministic), as is a value the replay path could
+    /// not accept. IO failures are logged, not fatal: the in-memory tier
+    /// keeps serving; only warm restarts lose the entry.
+    pub fn append(&self, key: ContentHash, value: &[u8]) {
+        if self.lock.is_none() {
+            return; // read-only: another process owns the journal
+        }
+        if 16 + value.len() > MAX_PAYLOAD as usize {
+            eprintln!(
+                "olympus-cache: value for {key} exceeds the {MAX_PAYLOAD}-byte record bound; \
+                 not persisted"
+            );
+            self.corrupt.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        if !self.journaled.lock().unwrap().insert(key) {
+            return; // already on disk (e.g. evicted from memory, recomputed)
+        }
+        let rec = encode_record(key, value);
+        let mut f = self.file.lock().unwrap();
+        let written = if self.sync_every_append {
+            f.write_all(&rec).and_then(|_| f.sync_data())
+        } else {
+            f.write_all(&rec)
+        };
+        match written {
+            Ok(()) => {
+                self.persisted.fetch_add(1, Ordering::Relaxed);
+            }
+            Err(e) => {
+                // un-mark the key so a later recompute can retry persisting
+                self.journaled.lock().unwrap().remove(&key);
+                eprintln!("olympus-cache: append to {} failed: {e}", self.path.display())
+            }
+        }
+    }
+
+    /// Count one record decoded into the in-memory tier.
+    pub fn note_loaded(&self) {
+        self.loaded.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count one record whose *value* this build could not decode (the
+    /// framing was valid but e.g. the stored IR no longer parses).
+    pub fn note_corrupt(&self) {
+        self.corrupt.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Does this store own the writer lock (false = read-only)?
+    pub fn is_writer(&self) -> bool {
+        self.lock.is_some()
+    }
+
+    pub fn stats(&self) -> DiskStats {
+        DiskStats {
+            loaded: self.loaded.load(Ordering::Relaxed),
+            persisted: self.persisted.load(Ordering::Relaxed),
+            corrupt_skipped: self.corrupt.load(Ordering::Relaxed),
+        }
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+impl Drop for DiskStore {
+    fn drop(&mut self) {
+        if let Some(lock) = &self.lock {
+            if !self.sync_every_append {
+                if let Ok(f) = self.file.lock() {
+                    let _ = f.sync_data(); // flush OS-buffered appends
+                }
+            }
+            let _ = std::fs::remove_file(lock);
+        }
+    }
+}
+
+/// Try to become the journal's writer: create `<journal>.lock` stamped with
+/// our PID. A lock whose process is no longer alive is stolen (a SIGKILLed
+/// daemon must not wedge its cache dir). Stealing is capture-and-inspect:
+/// the suspect lock is atomically renamed aside first, and only deleted
+/// after its *captured* contents confirm a dead holder — if a fresh owner
+/// raced in, their lock is restored with a no-replace `hard_link`. Two
+/// processes can therefore never both steal one stale lock; the locking
+/// stays advisory (best-effort) only against 3-way sub-millisecond races.
+/// Returns the lock path when owned.
+fn acquire_writer_lock(path: &Path) -> Option<PathBuf> {
+    let lock = path.with_extension("lock");
+    for _ in 0..2 {
+        match OpenOptions::new().write(true).create_new(true).open(&lock) {
+            Ok(mut f) => {
+                let _ = f.write_all(std::process::id().to_string().as_bytes());
+                let _ = f.sync_all();
+                return Some(lock);
+            }
+            Err(_) => {
+                let holder = std::fs::read_to_string(&lock)
+                    .ok()
+                    .and_then(|s| s.trim().parse::<u32>().ok());
+                if let Some(pid) = holder {
+                    if pid_alive(pid) {
+                        return None;
+                    }
+                }
+                // dead or unreadable holder: capture the lock aside (atomic
+                // rename — only one stealer can win it) and re-inspect
+                let stale = lock.with_extension(format!("stale-{}", std::process::id()));
+                if std::fs::rename(&lock, &stale).is_err() {
+                    continue; // someone else captured it first; retry create_new
+                }
+                let captured = std::fs::read_to_string(&stale)
+                    .ok()
+                    .and_then(|s| s.trim().parse::<u32>().ok());
+                match captured {
+                    Some(pid) if pid_alive(pid) => {
+                        // a fresh owner re-locked between our read and the
+                        // rename: give their lock back (no-replace, in case
+                        // yet another process locked meanwhile) and yield
+                        let _ = std::fs::hard_link(&stale, &lock);
+                        let _ = std::fs::remove_file(&stale);
+                        return None;
+                    }
+                    _ => {
+                        let _ = std::fs::remove_file(&stale);
+                        // confirmed stale and captured by us alone: retry
+                        // create_new for the now-absent lock
+                    }
+                }
+            }
+        }
+    }
+    None
+}
+
+/// Best-effort liveness check. On Linux `/proc/<pid>` exists for live
+/// processes; elsewhere the check conservatively reports "dead", degrading
+/// the lock to last-opener-wins (the pre-lock behavior).
+fn pid_alive(pid: u32) -> bool {
+    if pid == std::process::id() {
+        return true; // our own (e.g. a lingering handle in this process)
+    }
+    Path::new(&format!("/proc/{pid}")).exists()
+}
+
+fn header_bytes() -> Vec<u8> {
+    let mut header = Vec::with_capacity(HEADER_LEN);
+    header.extend_from_slice(MAGIC);
+    header.extend_from_slice(&VERSION.to_le_bytes());
+    header
+}
+
+fn header_ok(bytes: &[u8]) -> bool {
+    bytes.len() >= HEADER_LEN
+        && &bytes[..MAGIC.len()] == MAGIC
+        && u32::from_le_bytes(bytes[MAGIC.len()..HEADER_LEN].try_into().unwrap()) == VERSION
+}
+
+/// Walk the record stream. A record that frames correctly but fails its
+/// checksum (bit rot) is skipped alone — the length prefix still gives the
+/// next boundary. A record whose framing is implausible (length out of
+/// bounds, or extending past end-of-file: a torn tail) ends the replay,
+/// since no later boundary can be trusted. Returns the valid records and
+/// the number of records dropped.
+fn replay(b: &[u8]) -> (Vec<(ContentHash, Vec<u8>)>, u64) {
+    let mut out = Vec::new();
+    let mut corrupt = 0u64;
+    let mut pos = 0usize;
+    while pos < b.len() {
+        let rest = &b[pos..];
+        if rest.len() < RECORD_PREFIX {
+            return (out, corrupt + 1);
+        }
+        let len = u32::from_le_bytes(rest[0..4].try_into().unwrap());
+        let sum = u64::from_le_bytes(rest[4..12].try_into().unwrap());
+        if !(MIN_PAYLOAD..=MAX_PAYLOAD).contains(&len)
+            || rest.len() - RECORD_PREFIX < len as usize
+        {
+            return (out, corrupt + 1);
+        }
+        let payload = &rest[RECORD_PREFIX..RECORD_PREFIX + len as usize];
+        if fnv1a_64(payload) == sum {
+            let key = ContentHash(u128::from_le_bytes(payload[..16].try_into().unwrap()));
+            out.push((key, payload[16..].to_vec()));
+        } else {
+            corrupt += 1; // framed but rotten: skip just this record
+        }
+        pos += RECORD_PREFIX + len as usize;
+    }
+    (out, corrupt)
+}
+
+fn encode_record(key: ContentHash, value: &[u8]) -> Vec<u8> {
+    let mut rec = Vec::with_capacity(RECORD_PREFIX + 16 + value.len());
+    rec.extend_from_slice(&((16 + value.len()) as u32).to_le_bytes());
+    let mut payload = Vec::with_capacity(16 + value.len());
+    payload.extend_from_slice(&key.0.to_le_bytes());
+    payload.extend_from_slice(value);
+    rec.extend_from_slice(&fnv1a_64(&payload).to_le_bytes());
+    rec.extend_from_slice(&payload);
+    rec
+}
+
+/// Atomically replace the journal with header + `entries`: write a temp
+/// file, fsync it, rename over, fsync the directory. Caller must own the
+/// writer lock — a rename orphans any other open append handle.
+fn write_compacted(path: &Path, entries: &[(ContentHash, Vec<u8>)]) -> Result<()> {
+    let tmp = path.with_extension("tmp");
+    let mut buf = header_bytes();
+    for (key, value) in entries {
+        buf.extend_from_slice(&encode_record(*key, value));
+    }
+    let mut f = File::create(&tmp)
+        .with_context(|| format!("create compacted journal {}", tmp.display()))?;
+    f.write_all(&buf).context("write compacted journal")?;
+    f.sync_all().context("fsync compacted journal")?;
+    drop(f);
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("publish compacted journal {}", path.display()))?;
+    if let Some(parent) = path.parent() {
+        if let Ok(d) = File::open(parent) {
+            let _ = d.sync_all(); // make the rename itself durable
+        }
+    }
+    Ok(())
+}
+
+/// Open the journal at `path` and build a persistent cache over it: every
+/// decodable record seeds the in-memory tier, every fresh computation
+/// writes through. `encode` may decline (`None`) values that must not
+/// outlive the process; `decode` failures are counted as corrupt-skipped.
+pub fn open_persistent_cache<V, E, D>(
+    path: &Path,
+    capacity: usize,
+    sync_every_append: bool,
+    encode: E,
+    decode: D,
+) -> Result<(EvalCache<V>, Arc<DiskStore>)>
+where
+    V: Clone,
+    E: Fn(&V) -> Option<Vec<u8>> + Send + Sync + 'static,
+    D: Fn(&[u8]) -> Option<V>,
+{
+    let (store, entries) = DiskStore::open_with(path, sync_every_append)?;
+    let store = Arc::new(store);
+    let mut cache = EvalCache::with_capacity(capacity);
+    cache.persist_to(store.clone(), encode);
+    for (key, bytes) in entries {
+        match decode(&bytes) {
+            Some(v) => {
+                cache.warm_insert(key, v);
+                store.note_loaded();
+            }
+            None => store.note_corrupt(),
+        }
+    }
+    Ok((cache, store))
+}
+
+/// Serialize a [`Served`] response for the disk tier. The stored `Json` is
+/// re-serialized verbatim on a warm restart, so the encoding must (and
+/// does) round-trip bit-identically: object keys are ordered (`BTreeMap`)
+/// and finite numbers print in Rust's shortest round-trip form.
+/// [`Served::Failed`] is deliberately *not* persisted — a failure may be
+/// environment-dependent (resource pressure, thread limits), and a journal
+/// must never make one permanent across restarts.
+pub fn encode_served(v: &Served) -> Option<Vec<u8>> {
+    match v {
+        Served::Ok(result) => {
+            Some(Json::obj(vec![("ok", result.clone())]).to_string().into_bytes())
+        }
+        Served::Failed(_) => None,
+    }
+}
+
+/// Inverse of [`encode_served`]; `None` marks an undecodable record
+/// (counted as corrupt-skipped by the caller, never an error).
+pub fn decode_served(bytes: &[u8]) -> Option<Served> {
+    let text = std::str::from_utf8(bytes).ok()?;
+    let v = Json::parse(text).ok()?;
+    match v.get("ok") {
+        Json::Null => None,
+        j => Some(Served::Ok(j.clone())),
+    }
+}
+
+/// Open a persistent candidate cache rooted at `dir` — the layout both
+/// `olympus serve --cache-dir` and the single-shot `olympus dse/des
+/// --cache-dir` warm starts share. Candidate appends are OS-buffered
+/// (fsync at drop): losing one to a power cut only re-pays one evaluation.
+/// The returned store is also captured by the cache's write-through hook,
+/// so dropping the `Arc` only loses access to the counters, not
+/// persistence.
+pub fn open_candidate_cache(
+    dir: &Path,
+    capacity: usize,
+) -> Result<(Arc<CandidateCache>, Arc<DiskStore>)> {
+    let (cache, store) = open_persistent_cache(
+        &dir.join(CANDIDATES_JOURNAL),
+        capacity,
+        false,
+        |outcome| Some(outcome_to_json(outcome).to_string().into_bytes()),
+        |bytes| {
+            std::str::from_utf8(bytes)
+                .ok()
+                .and_then(|t| Json::parse(t).ok())
+                .and_then(|j| outcome_from_json(&j))
+        },
+    )?;
+    Ok((Arc::new(cache), store))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "olympus_persist_{tag}_{}_{}",
+            std::process::id(),
+            std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .unwrap()
+                .as_nanos()
+        ));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn key(n: u128) -> ContentHash {
+        ContentHash(n)
+    }
+
+    #[test]
+    fn round_trips_records_across_reopen() {
+        let dir = tmpdir("roundtrip");
+        let path = dir.join("t.jrnl");
+        let (store, entries) = DiskStore::open(&path).unwrap();
+        assert!(entries.is_empty());
+        assert!(store.is_writer());
+        store.append(key(1), b"alpha");
+        store.append(key(2), b"beta");
+        assert_eq!(store.stats().persisted, 2);
+        drop(store);
+        let (store, entries) = DiskStore::open(&path).unwrap();
+        assert_eq!(store.stats().corrupt_skipped, 0);
+        assert_eq!(entries.len(), 2);
+        assert_eq!(entries[0], (key(1), b"alpha".to_vec()));
+        assert_eq!(entries[1], (key(2), b"beta".to_vec()));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn duplicate_keys_are_appended_once() {
+        let dir = tmpdir("dedupe");
+        let path = dir.join("t.jrnl");
+        let (store, _) = DiskStore::open(&path).unwrap();
+        store.append(key(1), b"alpha");
+        store.append(key(1), b"alpha");
+        assert_eq!(store.stats().persisted, 1, "second append deduped");
+        drop(store);
+        let (store, entries) = DiskStore::open(&path).unwrap();
+        assert_eq!(entries.len(), 1);
+        // the dedupe set survives the reopen: still no second record
+        store.append(key(1), b"alpha");
+        assert_eq!(store.stats().persisted, 0);
+        drop(store);
+        let (_, entries) = DiskStore::open(&path).unwrap();
+        assert_eq!(entries.len(), 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// Satellite: a journal truncated at *every* byte offset of its last
+    /// record (daemon killed mid-append) loses exactly that record —
+    /// counted, compacted, never a panic or a wrong entry.
+    #[test]
+    fn truncated_tail_is_skipped_at_every_byte_offset() {
+        let dir = tmpdir("truncate");
+        let path = dir.join("t.jrnl");
+        let (store, _) = DiskStore::open(&path).unwrap();
+        store.append(key(10), b"alpha");
+        store.append(key(11), b"beta");
+        store.append(key(12), b"gamma");
+        drop(store);
+        let full = std::fs::read(&path).unwrap();
+        // the last record is prefix + 16-byte key + "gamma"
+        let rec3_len = RECORD_PREFIX + 16 + "gamma".len();
+        let rec3_start = full.len() - rec3_len;
+        for cut in rec3_start..full.len() {
+            let p = dir.join(format!("cut_{cut}.jrnl"));
+            std::fs::write(&p, &full[..cut]).unwrap();
+            let (s, entries) = DiskStore::open(&p).unwrap();
+            assert_eq!(entries.len(), 2, "cut at {cut}");
+            assert_eq!(entries[1], (key(11), b"beta".to_vec()), "cut at {cut}");
+            if cut == rec3_start {
+                assert_eq!(s.stats().corrupt_skipped, 0, "clean boundary at {cut}");
+            } else {
+                assert_eq!(s.stats().corrupt_skipped, 1, "torn record at {cut}");
+            }
+            // open compacted the torn bytes away: appending then reopening
+            // yields a clean 3-record journal
+            s.append(key(12), b"gamma");
+            drop(s);
+            let (s2, entries2) = DiskStore::open(&p).unwrap();
+            assert_eq!(entries2.len(), 3, "cut at {cut}");
+            assert_eq!(s2.stats().corrupt_skipped, 0, "cut at {cut}");
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn rotten_record_mid_file_is_skipped_alone() {
+        let dir = tmpdir("bitrot");
+        let path = dir.join("t.jrnl");
+        let (store, _) = DiskStore::open(&path).unwrap();
+        store.append(key(1), b"alpha");
+        store.append(key(2), b"beta");
+        store.append(key(3), b"gamma");
+        drop(store);
+        let mut bytes = std::fs::read(&path).unwrap();
+        // flip one payload byte inside the *middle* record ("beta")
+        let rec1_len = RECORD_PREFIX + 16 + "alpha".len();
+        let rec2_last = HEADER_LEN + rec1_len + RECORD_PREFIX + 16 + "beta".len() - 1;
+        bytes[rec2_last] ^= 0xFF;
+        std::fs::write(&path, &bytes).unwrap();
+        let (s, entries) = DiskStore::open(&path).unwrap();
+        // only the rotten record is lost; the one after it survives
+        assert_eq!(entries.len(), 2);
+        assert_eq!(entries[0].0, key(1));
+        assert_eq!(entries[1].0, key(3));
+        assert_eq!(s.stats().corrupt_skipped, 1);
+        // the compacted journal is clean on reopen
+        drop(s);
+        let (s2, entries2) = DiskStore::open(&path).unwrap();
+        assert_eq!(entries2.len(), 2);
+        assert_eq!(s2.stats().corrupt_skipped, 0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn incompatible_header_is_moved_aside_not_crashed() {
+        let dir = tmpdir("version");
+        let path = dir.join("t.jrnl");
+        // future version
+        let mut future = Vec::new();
+        future.extend_from_slice(MAGIC);
+        future.extend_from_slice(&(VERSION + 1).to_le_bytes());
+        future.extend_from_slice(b"opaque future records");
+        std::fs::write(&path, &future).unwrap();
+        let (store, entries) = DiskStore::open(&path).unwrap();
+        assert!(entries.is_empty());
+        let aside = path.with_extension("incompatible");
+        assert_eq!(std::fs::read(&aside).unwrap(), future, "old data preserved");
+        store.append(key(5), b"fresh");
+        drop(store);
+        let (_, entries) = DiskStore::open(&path).unwrap();
+        assert_eq!(entries.len(), 1);
+        // foreign magic too
+        let path2 = dir.join("t2.jrnl");
+        std::fs::write(&path2, b"not a journal at all").unwrap();
+        let (_, entries) = DiskStore::open(&path2).unwrap();
+        assert!(entries.is_empty());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn second_opener_is_read_only_while_lock_is_held() {
+        let dir = tmpdir("lock");
+        let path = dir.join("t.jrnl");
+        let (a, _) = DiskStore::open(&path).unwrap();
+        assert!(a.is_writer());
+        a.append(key(1), b"alpha");
+        // same pid holds the lock: the second open degrades to read-only
+        let (b, entries) = DiskStore::open(&path).unwrap();
+        assert!(!b.is_writer());
+        assert_eq!(entries.len(), 1, "read-only opens still warm-load");
+        b.append(key(2), b"beta");
+        assert_eq!(b.stats().persisted, 0, "read-only stores never append");
+        drop(b); // must not release a's lock
+        a.append(key(2), b"beta");
+        assert_eq!(a.stats().persisted, 2);
+        drop(a);
+        let (c, entries) = DiskStore::open(&path).unwrap();
+        assert!(c.is_writer(), "lock released at drop");
+        assert_eq!(entries.len(), 2);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn stale_writer_lock_is_stolen() {
+        let dir = tmpdir("stale");
+        let path = dir.join("t.jrnl");
+        // a SIGKILLed daemon leaves its lock behind; the pid is dead (or
+        // unreadable), so the next opener steals it
+        std::fs::write(path.with_extension("lock"), b"4294967294").unwrap();
+        let (store, _) = DiskStore::open(&path).unwrap();
+        assert!(store.is_writer(), "dead holder must not wedge the dir");
+        store.append(key(1), b"alpha");
+        assert_eq!(store.stats().persisted, 1);
+        drop(store);
+        std::fs::write(path.with_extension("lock"), b"not a pid").unwrap();
+        let (store, entries) = DiskStore::open(&path).unwrap();
+        assert!(store.is_writer());
+        assert_eq!(entries.len(), 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn unsynced_store_flushes_at_drop() {
+        let dir = tmpdir("unsynced");
+        let path = dir.join("t.jrnl");
+        let (store, _) = DiskStore::open_with(&path, false).unwrap();
+        store.append(key(1), b"alpha");
+        assert_eq!(store.stats().persisted, 1);
+        drop(store);
+        let (_, entries) = DiskStore::open(&path).unwrap();
+        assert_eq!(entries.len(), 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn served_codec_round_trips_ok_and_never_persists_failures() {
+        let payload = Json::obj(vec![
+            ("table", "best: full_x4".into()),
+            ("score", 0.12345678901234567.into()),
+            ("n", 42u64.into()),
+            ("nothing", Json::Null),
+        ]);
+        let ok = Served::Ok(payload.clone());
+        let decoded = decode_served(&encode_served(&ok).unwrap()).unwrap();
+        match decoded {
+            Served::Ok(j) => {
+                assert_eq!(j, payload);
+                assert_eq!(j.to_string(), payload.to_string(), "byte-identical reserialization");
+            }
+            other => panic!("wrong variant: {other:?}"),
+        }
+        // failures may be environment-dependent: never written to disk
+        assert!(encode_served(&Served::Failed("verifier rejected".into())).is_none());
+        assert!(decode_served(b"garbage").is_none());
+        assert!(decode_served(b"{}").is_none());
+    }
+
+    #[test]
+    fn persistent_cache_skips_declined_values_on_write_through() {
+        let dir = tmpdir("declined");
+        let path = dir.join("t.jrnl");
+        let open = || {
+            open_persistent_cache(
+                &path,
+                0,
+                true,
+                |v: &i64| if *v >= 0 { Some(v.to_le_bytes().to_vec()) } else { None },
+                |b| b.try_into().ok().map(i64::from_le_bytes),
+            )
+            .unwrap()
+        };
+        let (cache, store) = open();
+        cache.get_or_compute(key(1), || 7);
+        cache.get_or_compute(key(2), || -1); // declined by the encoder
+        assert_eq!(store.stats().persisted, 1);
+        drop((cache, store));
+        let (cache, store) = open();
+        assert_eq!(store.stats().loaded, 1);
+        let (v, cached) = cache.get_or_compute(key(1), || panic!("warm"));
+        assert_eq!((v, cached), (7, true));
+        // the declined key recomputes after a restart, as intended
+        let (v, cached) = cache.get_or_compute(key(2), || -1);
+        assert_eq!((v, cached), (-1, false));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

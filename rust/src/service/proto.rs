@@ -3,7 +3,10 @@
 //! One request per line, one response line per request, in order. A
 //! malformed line gets a structured `{"ok": false, "error": {...}}` response
 //! and the connection stays open — clients never have to guess why a socket
-//! died.
+//! died. A request line longer than
+//! [`MAX_REQUEST_BYTES`](crate::service::MAX_REQUEST_BYTES) is answered
+//! with a `too-large` error; the server drains (never buffers) the rest of
+//! the oversized line and the connection stays open.
 //!
 //! Requests:
 //!
@@ -31,7 +34,12 @@
 //! Responses: `{"ok": true, "id": ..., "cached": bool, "key": "<32-hex>",
 //! "result": {...}}` — `key` is the content-address of the evaluation
 //! (stable across servers), `cached` whether this answer skipped
-//! evaluation.
+//! evaluation (including answers replayed from a `--cache-dir` journal by
+//! a restarted daemon). `cache-stats` reports, per cache tier, the memory
+//! counters (`entries`/`hits`/`misses`/`coalesced`/`evicted`) plus the
+//! disk-tier counters `disk_loaded` (journal records decoded at startup),
+//! `disk_persisted` (records written through by this process) and
+//! `disk_corrupt_skipped` (torn or undecodable records dropped).
 
 use crate::util::Json;
 

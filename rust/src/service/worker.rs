@@ -14,8 +14,11 @@
 //! Workers are plain std threads popping a [`JobQueue`]; results travel
 //! back to the connection thread over the job's `mpsc` channel.
 
+use std::path::Path;
 use std::sync::mpsc;
 use std::sync::Arc;
+
+use anyhow::Result;
 
 use crate::coordinator::{flow_report_json, render_dse_table, Flow};
 use crate::des::{DesConfig, WorkloadScenario};
@@ -25,6 +28,7 @@ use crate::platform::{builtin, builtin_names, PlatformSpec};
 use crate::util::Json;
 
 use super::cache::{CacheStats, EvalCache};
+use super::persist::{decode_served, encode_served, open_candidate_cache, open_persistent_cache};
 use super::proto::{error_response, ok_response, Command, ProtoError, Request};
 use super::queue::JobQueue;
 
@@ -68,6 +72,34 @@ impl ServiceState {
         }
     }
 
+    /// Like [`ServiceState::new`], plus an optional on-disk persistence
+    /// dir (`olympus serve --cache-dir`): both cache tiers load every
+    /// decodable journal record at startup and write through on miss, so a
+    /// restarted daemon answers repeated requests from disk — bit-identical
+    /// and with zero evaluations (see [`crate::service::persist`]).
+    pub fn with_cache_dir(
+        response_capacity: usize,
+        dse_threads: usize,
+        cache_dir: Option<&Path>,
+    ) -> Result<ServiceState> {
+        let Some(dir) = cache_dir else {
+            return Ok(ServiceState::new(response_capacity, dse_threads));
+        };
+        let candidate_capacity = response_capacity.saturating_mul(16);
+        // responses fsync per append (a served answer must survive a crash
+        // once the client saw it); candidates are OS-buffered + fsync at
+        // drop — losing one to a power cut only re-pays one evaluation
+        let (responses, _rstore) = open_persistent_cache(
+            &dir.join(super::persist::RESPONSES_JOURNAL),
+            response_capacity,
+            true,
+            encode_served,
+            decode_served,
+        )?;
+        let (candidates, _cstore) = open_candidate_cache(dir, candidate_capacity)?;
+        Ok(ServiceState { responses, candidates, dse_threads: dse_threads.max(1) })
+    }
+
     /// Counters for `cache-stats`.
     pub fn stats(&self) -> (CacheStats, CacheStats) {
         (self.responses.stats(), self.candidates.stats())
@@ -90,6 +122,9 @@ fn stats_json(s: &CacheStats) -> Json {
         ("misses", s.misses.into()),
         ("coalesced", s.coalesced.into()),
         ("evicted", s.evicted.into()),
+        ("disk_loaded", s.disk_loaded.into()),
+        ("disk_persisted", s.disk_persisted.into()),
+        ("disk_corrupt_skipped", s.disk_corrupt_skipped.into()),
     ])
 }
 

@@ -364,6 +364,102 @@ fn dse_jobs_flag_is_bit_identical_across_worker_counts() {
     assert_eq!(one, four, "--jobs must not change the decision table");
 }
 
+/// Acceptance: invalid `--seed` values exit non-zero with a contextual
+/// error on `dse`, `des` and `run` — never a silent fallback to a default
+/// seed (which would make the run irreproducible without any hint why).
+#[test]
+fn invalid_seed_is_rejected_on_dse_des_and_run() {
+    let dir = tmpdir("badseed");
+    let design = write_design(&dir);
+    let d = design.to_str().unwrap();
+    let cases: Vec<Vec<&str>> = vec![
+        vec!["dse", d, "--objective", "des-score", "--seed", "nope"],
+        vec!["des", d, "--seed", "12monkeys"],
+        vec!["des", d, "--pipeline", "sanitize", "--seed", "0x2a"],
+        vec!["run", d, "--seed", "-3"],
+    ];
+    for args in cases {
+        let out = olympus().args(&args).output().unwrap();
+        assert!(!out.status.success(), "{args:?} must fail");
+        let s = String::from_utf8_lossy(&out.stderr);
+        assert!(s.contains("--seed"), "contextual error for {args:?}: {s}");
+    }
+    // valid seeds still work end-to-end (the strictness only bites bad input)
+    let out = olympus()
+        .args(["des", d, "--pipeline", "sanitize, iris, channel-reassign", "--seed", "7"])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+}
+
+/// Flags that would be silently dead are rejected, not ignored: --scenario
+/// and --seed mean nothing to the analytic objective, and an unknown
+/// --objective must not silently fall back to analytic.
+#[test]
+fn dse_rejects_dead_scenario_and_unknown_objective() {
+    let dir = tmpdir("deadflags");
+    let design = write_design(&dir);
+    let d = design.to_str().unwrap();
+    let out = olympus().args(["dse", d, "--scenario", "closed:2"]).output().unwrap();
+    assert!(!out.status.success());
+    assert!(
+        String::from_utf8_lossy(&out.stderr).contains("--scenario"),
+        "{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let out = olympus().args(["dse", d, "--seed", "7"]).output().unwrap();
+    assert!(!out.status.success());
+    assert!(
+        String::from_utf8_lossy(&out.stderr).contains("--seed"),
+        "{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let out = olympus().args(["dse", d, "--objective", "frobnicate"]).output().unwrap();
+    assert!(!out.status.success());
+    assert!(
+        String::from_utf8_lossy(&out.stderr).contains("unknown objective"),
+        "{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    // `des` always scores with the DES; an --objective there is dead too
+    let out = olympus().args(["des", d, "--objective", "analytic"]).output().unwrap();
+    assert!(!out.status.success());
+    assert!(
+        String::from_utf8_lossy(&out.stderr).contains("--objective"),
+        "{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+}
+
+/// `--cache-dir` gives single-shot runs a cross-process warm start: the
+/// second invocation replays the journal and prints a bit-identical table.
+#[test]
+fn dse_cache_dir_warm_start_is_bit_identical() {
+    let dir = tmpdir("cache_dir");
+    let design = write_design(&dir);
+    let cache = dir.join("cache");
+    let run = || {
+        let out = olympus()
+            .args([
+                "dse",
+                design.to_str().unwrap(),
+                "--factors",
+                "2",
+                "--cache-dir",
+                cache.to_str().unwrap(),
+            ])
+            .output()
+            .unwrap();
+        assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+        String::from_utf8_lossy(&out.stdout).to_string()
+    };
+    let cold = run();
+    assert!(cold.contains("best: "), "{cold}");
+    assert!(cache.join("candidates.jrnl").exists(), "journal created");
+    let warm = run();
+    assert_eq!(cold, warm, "warm start must not move a byte of the table");
+}
+
 #[test]
 fn serve_and_submit_round_trip_with_cache() {
     use std::io::{BufRead, BufReader};

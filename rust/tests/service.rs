@@ -1,9 +1,12 @@
 //! `olympus serve` end-to-end: protocol robustness, cache single-flight,
-//! the warm-repeat speedup, and bit-identity of served results with the
-//! single-shot library path regardless of worker count.
+//! the warm-repeat speedup, bit-identity of served results with the
+//! single-shot library path regardless of worker count, and the persistent
+//! disk tier (`--cache-dir`): a killed-and-restarted daemon must answer a
+//! repeated request from disk, bit-identically, with zero evaluations.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpStream};
+use std::path::PathBuf;
 use std::time::Instant;
 
 use olympus::des::{DesConfig, WorkloadScenario};
@@ -46,6 +49,32 @@ impl Client {
     fn call(&mut self, fields: Vec<(&str, Json)>) -> Json {
         self.call_raw(&Json::obj(fields).to_string())
     }
+}
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!(
+        "olympus_service_{tag}_{}_{}",
+        std::process::id(),
+        std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .unwrap()
+            .as_nanos()
+    ));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// Wait for a shut-down daemon's journal writer locks to clear. Lock
+/// release happens when the last `Arc<ServiceState>` drops, which can lag
+/// `shutdown()` by a detached connection thread noticing its client left.
+fn wait_for_lock_release(dir: &std::path::Path) {
+    for _ in 0..250 {
+        if !dir.join("responses.lock").exists() && !dir.join("candidates.lock").exists() {
+            return;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(20));
+    }
+    panic!("journal writer locks were not released after shutdown");
 }
 
 fn dse_request(seed: u64, factors: &[u64]) -> Vec<(&'static str, Json)> {
@@ -213,6 +242,132 @@ fn served_results_are_bit_identical_across_worker_counts_and_cli_path() {
     }
     assert_eq!(tables[0], tables[1], "worker count must not change results");
     assert_eq!(tables[0], direct_table, "served == single-shot library output");
+}
+
+/// Acceptance: a repeated request to a freshly restarted `olympus serve
+/// --cache-dir` is answered bit-identically from disk with zero candidate
+/// evaluations.
+#[test]
+fn restarted_server_answers_from_disk_without_reevaluating() {
+    let dir = tmpdir("restart");
+    let opts = || ServeOptions { cache_dir: Some(dir.clone()), ..ServeOptions::default() };
+
+    let server = Server::bind("127.0.0.1:0", opts()).unwrap();
+    let cold = {
+        // scope the client so its connection thread exits before shutdown
+        let mut c = Client::connect(server.addr());
+        let cold = c.call(dse_request(11, &[2]));
+        assert_eq!(cold.get("ok"), &Json::Bool(true), "{cold}");
+        assert_eq!(cold.get("cached"), &Json::Bool(false));
+        let (resp, cand) = (server.state().stats().0, server.state().stats().1);
+        assert!(resp.disk_persisted >= 1, "response written through: {resp:?}");
+        assert!(cand.disk_persisted >= 1, "candidates written through: {cand:?}");
+        cold
+    };
+    server.shutdown();
+    wait_for_lock_release(&dir);
+
+    // a brand-new daemon over the same --cache-dir: what a restart is
+    let server = Server::bind("127.0.0.1:0", opts()).unwrap();
+    let loaded = server.state().stats();
+    assert!(loaded.0.disk_loaded >= 1, "response journal replayed: {:?}", loaded.0);
+    assert!(loaded.1.disk_loaded >= 1, "candidate journal replayed: {:?}", loaded.1);
+    assert_eq!(loaded.0.disk_corrupt_skipped, 0, "{:?}", loaded.0);
+    let mut c = Client::connect(server.addr());
+    let warm = c.call(dse_request(11, &[2]));
+    assert_eq!(warm.get("cached"), &Json::Bool(true), "restart must serve from disk: {warm}");
+    assert_eq!(warm.get("result"), cold.get("result"), "bit-identical across the restart");
+    assert_eq!(warm.get("key"), cold.get("key"));
+    let after = server.state().stats();
+    assert_eq!(after.0.misses, 0, "zero response evaluations after restart: {:?}", after.0);
+    assert_eq!(after.1.misses, 0, "zero candidate evaluations after restart: {:?}", after.1);
+
+    // the protocol view of the disk tier agrees
+    let stats = c.call(vec![("cmd", "cache-stats".into())]);
+    let resp = stats.get("result").get("responses");
+    assert!(resp.get("disk_loaded").as_usize().unwrap() >= 1, "{stats}");
+    assert_eq!(resp.get("misses").as_usize(), Some(0), "{stats}");
+
+    // the restarted daemon re-acquired the writer lock: NEW work persists
+    // through it too (restart-then-append path)
+    let fresh = c.call(dse_request(12, &[2]));
+    assert_eq!(fresh.get("cached"), &Json::Bool(false), "{fresh}");
+    let after = server.state().stats();
+    assert!(after.0.disk_persisted >= 1, "restarted daemon persists new work: {:?}", after.0);
+    server.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Satellite: N concurrent clients writing through one `--cache-dir` leave
+/// no torn records — a second open replays every record cleanly and a
+/// restarted daemon answers each request from disk, bit-identically.
+#[test]
+fn concurrent_write_through_leaves_no_torn_records() {
+    use olympus::service::persist::{DiskStore, CANDIDATES_JOURNAL, RESPONSES_JOURNAL};
+    let dir = tmpdir("concurrent");
+    let opts = || ServeOptions {
+        workers: 4,
+        cache_dir: Some(dir.clone()),
+        ..ServeOptions::default()
+    };
+    let server = Server::bind("127.0.0.1:0", opts()).unwrap();
+    let addr = server.addr();
+    const N: u64 = 8;
+    let mut handles = Vec::new();
+    for seed in 0..N {
+        handles.push(std::thread::spawn(move || {
+            let mut c = Client::connect(addr);
+            (seed, c.call(dse_request(seed, &[2])))
+        }));
+    }
+    let firsts: Vec<(u64, Json)> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    for (seed, v) in &firsts {
+        assert_eq!(v.get("ok"), &Json::Bool(true), "seed {seed}: {v}");
+    }
+    server.shutdown();
+    wait_for_lock_release(&dir);
+
+    // a second process opening the same dir read-warm sees every record
+    let (rstore, rentries) = DiskStore::open(&dir.join(RESPONSES_JOURNAL)).unwrap();
+    assert_eq!(rstore.stats().corrupt_skipped, 0);
+    assert_eq!(rentries.len() as u64, N, "one response record per distinct seed");
+    let (cstore, centries) = DiskStore::open(&dir.join(CANDIDATES_JOURNAL)).unwrap();
+    assert_eq!(cstore.stats().corrupt_skipped, 0);
+    assert!(!centries.is_empty());
+    drop((rstore, cstore));
+
+    // ...and a restarted daemon serves all N from disk, bit-identically
+    let server = Server::bind("127.0.0.1:0", opts()).unwrap();
+    let mut c = Client::connect(server.addr());
+    for (seed, first) in &firsts {
+        let warm = c.call(dse_request(*seed, &[2]));
+        assert_eq!(warm.get("cached"), &Json::Bool(true), "seed {seed}: {warm}");
+        assert_eq!(warm.get("result"), first.get("result"), "seed {seed}");
+    }
+    assert_eq!(server.state().stats().1.misses, 0, "no candidate re-evaluation");
+    server.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Satellite: an oversized request gets a structured `too-large` error
+/// instead of ballooning daemon memory.
+#[test]
+fn oversized_request_is_rejected_with_protocol_error() {
+    use olympus::service::MAX_REQUEST_BYTES;
+    let server = Server::bind("127.0.0.1:0", ServeOptions::default()).unwrap();
+    let mut c = Client::connect(server.addr());
+    // a syntactically valid request line, just absurdly long: pad the IR
+    // field past the cap without allocating the whole thing at once server-side
+    let pad = "x".repeat((MAX_REQUEST_BYTES as usize) + 64);
+    let line = format!(r#"{{"cmd": "dse", "ir": "{pad}"}}"#);
+    let v = c.call_raw(&line);
+    assert_eq!(v.get("ok"), &Json::Bool(false), "{v}");
+    assert_eq!(v.get("error").get("code").as_str(), Some("too-large"));
+    // the same connection survives: the body was drained, not buffered
+    let v = c.call(vec![("cmd", "ping".into()), ("id", "after-too-large".into())]);
+    assert_eq!(v.get("ok"), &Json::Bool(true), "{v}");
+    assert_eq!(v.get("id").as_str(), Some("after-too-large"));
+    server.shutdown();
 }
 
 #[test]
