@@ -62,8 +62,9 @@ fn oracle(grid: &[f32], scale: f32, offset: f32) -> Vec<f32> {
         let mut next = g.clone();
         for i in 1..N - 1 {
             for j in 1..N - 1 {
-                next[i * N + j] = 0.25
-                    * (g[(i - 1) * N + j] + g[(i + 1) * N + j] + g[i * N + j - 1] + g[i * N + j + 1]);
+                let neighbors =
+                    g[(i - 1) * N + j] + g[(i + 1) * N + j] + g[i * N + j - 1] + g[i * N + j + 1];
+                next[i * N + j] = 0.25 * neighbors;
             }
         }
         g = next;

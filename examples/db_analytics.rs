@@ -53,7 +53,10 @@ fn query_module() -> Module {
     b.finish()
 }
 
-fn run_design(pipeline: &str, buffers: &HashMap<String, Vec<f32>>) -> anyhow::Result<(olympus::sim::SimMetrics, HashMap<String, Vec<f32>>)> {
+fn run_design(
+    pipeline: &str,
+    buffers: &HashMap<String, Vec<f32>>,
+) -> anyhow::Result<(olympus::sim::SimMetrics, HashMap<String, Vec<f32>>)> {
     let plat = builtin("u280").unwrap();
     let r = run_flow(query_module(), &plat, Some(pipeline))?;
     let rt = Arc::new(PjrtRuntime::cpu()?);

@@ -62,10 +62,12 @@ fn main() {
     let (bram_yes, cus_yes, util_yes) = evaluate(true);
     println!("{:<22} {:>10} {:>8} {:>8}", "design", "BRAM36", "CUs", "util");
     println!("{:<22} {:>10} {:>8} {:>7.1}%", "no sharing", bram_no, cus_no, util_no * 100.0);
-    println!("{:<22} {:>10} {:>8} {:>7.1}%", "mnemosyne sharing", bram_yes, cus_yes, util_yes * 100.0);
+    let shared = "mnemosyne sharing";
+    println!("{:<22} {:>10} {:>8} {:>7.1}%", shared, bram_yes, cus_yes, util_yes * 100.0);
     // replication is throughput: speedup == CU ratio on this stream app
     let speedup = cus_yes as f64 / cus_no as f64;
-    println!("\nextra replication from saved BRAM: {cus_no} -> {cus_yes} CUs ({speedup:.2}x throughput)");
+    println!();
+    println!("extra replication from saved BRAM: {cus_no} -> {cus_yes} CUs ({speedup:.2}x)");
     println!("BENCH\tbench_plm\tshared_cus\t0\t0\t0\t{speedup}\tthroughput-ratio");
     assert!(cus_yes > cus_no, "sharing must unlock extra replication");
 

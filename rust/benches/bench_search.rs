@@ -38,6 +38,7 @@ fn main() {
         threads: 1,
         cache: None,
         driver,
+        remote: None,
     };
 
     let cases: Vec<(&str, DseOptions)> = vec![

@@ -1,9 +1,11 @@
 //! Service benchmarks: cold-vs-warm DSE request latency through the
 //! content-addressed cache, sustained requests/sec with 8 concurrent
-//! clients hammering one daemon, and the warm-restart speedup of the
+//! clients hammering one daemon, the warm-restart speedup of the
 //! persistent disk tier (`--cache-dir`): a rebooted daemon must answer a
 //! previously evaluated request from its journal >= 10x faster than the
-//! cold evaluation.
+//! cold evaluation — and a 0-vs-2-worker A/B of distributed candidate
+//! evaluation over a multi-candidate DSE request (results byte-identical
+//! by assertion, latency in the table).
 //!
 //! Run: `cargo bench --bench bench_service` (BENCH_FAST=1 for a quick pass).
 
@@ -142,4 +144,47 @@ fn main() {
     );
     second.shutdown();
     let _ = std::fs::remove_dir_all(&dir);
+
+    // distributed tier: 0-vs-2-worker A/B over the same multi-candidate
+    // DSE request (9 candidates under des-score). Each fresh seed forces
+    // the cold path, so the table compares one-box evaluation against
+    // shard-routed remote evaluation; the fixed-seed A/B at the end pins
+    // byte-identity of the answers.
+    let w1 = Server::bind("127.0.0.1:0", ServeOptions::default()).expect("bind worker 1");
+    let w2 = Server::bind("127.0.0.1:0", ServeOptions::default()).expect("bind worker 2");
+    let solo = Server::bind("127.0.0.1:0", ServeOptions::default()).expect("bind solo server");
+    let dist = Server::bind(
+        "127.0.0.1:0",
+        ServeOptions {
+            remote_workers: vec![w1.addr().to_string(), w2.addr().to_string()],
+            ..ServeOptions::default()
+        },
+    )
+    .expect("bind coordinator");
+
+    let mut b = Bench::new("service_distributed");
+    let solo_seed = AtomicU64::new(5_000_000);
+    b.bench("dse_request_0_workers", || {
+        let v = roundtrip(solo.addr(), &request_line(solo_seed.fetch_add(1, Ordering::Relaxed)));
+        assert_eq!(v.get("cached"), &Json::Bool(false), "{v}");
+    });
+    let dist_seed = AtomicU64::new(6_000_000);
+    b.bench("dse_request_2_workers", || {
+        let v = roundtrip(dist.addr(), &request_line(dist_seed.fetch_add(1, Ordering::Relaxed)));
+        assert_eq!(v.get("cached"), &Json::Bool(false), "{v}");
+    });
+    b.run();
+
+    // the acceptance A/B: identical request, identical bytes back
+    let line = request_line(9_999_999);
+    let one_box = roundtrip(solo.addr(), &line);
+    let sharded = roundtrip(dist.addr(), &line);
+    assert_eq!(one_box.get("result"), sharded.get("result"), "2-worker answer byte-identical");
+    let stats =
+        roundtrip(dist.addr(), &Json::obj(vec![("cmd", "cache-stats".into())]).to_string());
+    println!("REMOTE counters: {}", stats.get("result").get("remote"));
+    dist.shutdown();
+    solo.shutdown();
+    w1.shutdown();
+    w2.shutdown();
 }

@@ -162,16 +162,16 @@ mod tests {
     #[test]
     fn headroom_shrinks_with_kernel_size() {
         let plat = builtin("u280").unwrap();
-        let small = analyze_resources(
-            &build(KernelEst { latency: 1, ii: 1, res: ResourceVec::new(10_000, 10_000, 10, 0, 10) }).0,
-            &plat,
-            &Dfg::build(&build(KernelEst { latency: 1, ii: 1, res: ResourceVec::new(10_000, 10_000, 10, 0, 10) }).0),
-        );
-        let big = analyze_resources(
-            &build(KernelEst { latency: 1, ii: 1, res: ResourceVec::new(1_000_000, 600_000, 900, 0, 4000) }).0,
-            &plat,
-            &Dfg::build(&build(KernelEst { latency: 1, ii: 1, res: ResourceVec::new(1_000_000, 600_000, 900, 0, 4000) }).0),
-        );
+        let small_est =
+            KernelEst { latency: 1, ii: 1, res: ResourceVec::new(10_000, 10_000, 10, 0, 10) };
+        let big_est = KernelEst {
+            latency: 1,
+            ii: 1,
+            res: ResourceVec::new(1_000_000, 600_000, 900, 0, 4000),
+        };
+        let small =
+            analyze_resources(&build(small_est).0, &plat, &Dfg::build(&build(small_est).0));
+        let big = analyze_resources(&build(big_est).0, &plat, &Dfg::build(&build(big_est).0));
         assert!(small.replication_headroom > big.replication_headroom);
         assert!(big.replication_headroom <= 2);
     }

@@ -8,11 +8,14 @@ use anyhow::Result;
 use crate::analysis::{analyze_bandwidth, analyze_resources, BandwidthReport, Dfg, ResourceReport};
 use crate::des::{simulate, DesConfig, DesReport, WorkloadScenario};
 use crate::ir::{module_fingerprint, Module};
-use crate::lower::{build_architecture, emit_host_driver, emit_verilog, emit_vitis_cfg, Architecture};
+use crate::lower::{
+    build_architecture, emit_host_driver, emit_verilog, emit_vitis_cfg, Architecture,
+};
 use crate::passes::manager::{parse_pipeline, PassContext, PassRecord};
 use crate::passes::{run_dse_with, CandidateCache, DseObjective, DseOptions, DseReport as DseTable};
 use crate::platform::PlatformSpec;
 use crate::search::DriverKind;
+use crate::service::remote::WorkerPool;
 use crate::util::ContentHash;
 
 /// Flow configuration.
@@ -40,6 +43,13 @@ pub struct Flow {
     /// Content-addressed candidate-evaluation memo shared across flow runs
     /// (wired in by the service; `None` = evaluate everything).
     pub cache: Option<Arc<CandidateCache>>,
+    /// Remote evaluation workers (`olympus serve --workers`): DSE candidate
+    /// evaluations route to the worker owning each key's consistent-hash
+    /// shard, failing over to local compute when one is unreachable.
+    /// Deliberately *not* part of [`Flow::cache_key`]: like `jobs`, the
+    /// pool only moves where a deterministic evaluation runs, never what
+    /// it produces.
+    pub remote: Option<Arc<WorkerPool>>,
 }
 
 /// Everything the flow produces (the purple boxes of Fig 3).
@@ -78,6 +88,7 @@ impl Flow {
             des_config: DesConfig::default(),
             jobs: 0,
             cache: None,
+            remote: None,
         }
     }
 
@@ -108,6 +119,14 @@ impl Flow {
 
     pub fn with_cache(mut self, cache: Arc<CandidateCache>) -> Self {
         self.cache = Some(cache);
+        self
+    }
+
+    /// Route DSE candidate evaluations through a remote worker pool (see
+    /// [`crate::service::remote`]). Results are bit-identical with or
+    /// without workers; only latency and *where* the evaluation runs change.
+    pub fn with_remote(mut self, pool: Arc<WorkerPool>) -> Self {
+        self.remote = Some(pool);
         self
     }
 
@@ -178,6 +197,7 @@ impl Flow {
                     threads: self.jobs,
                     cache: self.cache.clone(),
                     driver: self.driver.clone(),
+                    remote: self.remote.clone(),
                 };
                 let rep = run_dse_with(&module, &self.platform, &opts)?;
                 module = rep.best.clone();
@@ -215,7 +235,11 @@ impl Flow {
 }
 
 /// One-call convenience: pipeline `None` = DSE.
-pub fn run_flow(input: Module, platform: &PlatformSpec, pipeline: Option<&str>) -> Result<FlowResult> {
+pub fn run_flow(
+    input: Module,
+    platform: &PlatformSpec,
+    pipeline: Option<&str>,
+) -> Result<FlowResult> {
     let mut flow = Flow::new(platform.clone());
     if let Some(p) = pipeline {
         flow = flow.with_pipeline(p);

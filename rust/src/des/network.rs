@@ -19,7 +19,9 @@ use std::collections::VecDeque;
 
 use crate::lower::Architecture;
 use crate::sim::TimingModel;
-use crate::util::Rng;
+use crate::util::{
+    f64_from_bits_json, f64_to_bits_json, u64_from_str_json, u64_to_str_json, Json, Rng,
+};
 
 use super::build::{build_network, DesNet};
 use super::calendar::EventCalendar;
@@ -37,6 +39,25 @@ pub enum ServiceDist {
     /// (memoryless service — used by the M/M/1 calibration tests and for
     /// modeling data-dependent kernels).
     Exponential,
+}
+
+impl ServiceDist {
+    /// Wire name (see [`DesConfig::to_json`]).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ServiceDist::Deterministic => "deterministic",
+            ServiceDist::Exponential => "exponential",
+        }
+    }
+
+    /// Inverse of [`ServiceDist::as_str`].
+    pub fn parse(s: &str) -> Option<ServiceDist> {
+        match s {
+            "deterministic" => Some(ServiceDist::Deterministic),
+            "exponential" => Some(ServiceDist::Exponential),
+            _ => None,
+        }
+    }
 }
 
 /// Engine knobs (separate from the workload scenario).
@@ -88,6 +109,54 @@ impl DesConfig {
             .find(|(name, _)| matches(name))
             .map(|(_, dist)| *dist)
             .unwrap_or(self.service_dist)
+    }
+}
+
+impl DesConfig {
+    /// Wire codec for remote candidate evaluation (`olympus worker`):
+    /// every engine knob travels, floats as raw bit patterns, so the
+    /// config a worker reconstructs `Debug`-renders — and therefore cache-
+    /// keys — byte-identically to the coordinator's.
+    pub fn to_json(&self) -> Json {
+        let dists: Vec<Json> = self
+            .cu_service_dists
+            .iter()
+            .map(|(cu, dist)| {
+                Json::obj(vec![("cu", cu.as_str().into()), ("dist", dist.as_str().into())])
+            })
+            .collect();
+        Json::obj(vec![
+            ("seed", u64_to_str_json(self.seed)),
+            ("burst_elems", u64_to_str_json(self.burst_elems)),
+            ("utilization", f64_to_bits_json(self.utilization)),
+            ("congestion_model", self.congestion_model.into()),
+            ("max_events", u64_to_str_json(self.max_events)),
+            ("stripe_replicas", self.stripe_replicas.into()),
+            ("service_dist", self.service_dist.as_str().into()),
+            ("cu_service_dists", Json::Arr(dists)),
+        ])
+    }
+
+    /// Inverse of [`DesConfig::to_json`]; `None` marks a value this build
+    /// cannot decode.
+    pub fn from_json(j: &Json) -> Option<DesConfig> {
+        let mut cu_service_dists = Vec::new();
+        for e in j.get("cu_service_dists").as_arr()? {
+            cu_service_dists.push((
+                e.get("cu").as_str()?.to_string(),
+                ServiceDist::parse(e.get("dist").as_str()?)?,
+            ));
+        }
+        Some(DesConfig {
+            seed: u64_from_str_json(j.get("seed"))?,
+            burst_elems: u64_from_str_json(j.get("burst_elems"))?,
+            utilization: f64_from_bits_json(j.get("utilization"))?,
+            congestion_model: j.get("congestion_model").as_bool()?,
+            max_events: u64_from_str_json(j.get("max_events"))?,
+            stripe_replicas: j.get("stripe_replicas").as_bool()?,
+            service_dist: ServiceDist::parse(j.get("service_dist").as_str()?)?,
+            cu_service_dists,
+        })
     }
 }
 

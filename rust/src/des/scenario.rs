@@ -5,7 +5,9 @@
 //! (steady online traffic) and bursty on/off (diurnal / flash-crowd
 //! traffic, where p99 latency diverges hard from the mean).
 
-use crate::util::Rng;
+use crate::util::{
+    f64_from_bits_json, f64_to_bits_json, u64_from_str_json, u64_to_str_json, Json, Rng,
+};
 
 use super::time::{TimePoint, TimeSpan};
 
@@ -70,6 +72,56 @@ impl WorkloadScenario {
                 "bad scenario '{spec}' (want closed:N | poisson:HZ:N | bursty:HZ:ON:OFF:N)"
             )),
         }
+    }
+
+    /// Wire codec for remote candidate evaluation (`olympus worker`): the
+    /// scenario travels as JSON with floats as raw bit patterns, so the
+    /// value a worker reconstructs — and therefore the objective's
+    /// `Debug` rendering inside every candidate cache key — is
+    /// byte-identical to the coordinator's.
+    pub fn to_json(&self) -> Json {
+        let arrivals = match &self.arrivals {
+            ArrivalProcess::ClosedLoopBatch { jobs } => {
+                Json::obj(vec![("kind", "closed".into()), ("jobs", u64_to_str_json(*jobs))])
+            }
+            ArrivalProcess::Poisson { rate_hz, jobs } => Json::obj(vec![
+                ("kind", "poisson".into()),
+                ("rate_hz", f64_to_bits_json(*rate_hz)),
+                ("jobs", u64_to_str_json(*jobs)),
+            ]),
+            ArrivalProcess::BurstyOnOff { rate_hz, on_s, off_s, jobs } => Json::obj(vec![
+                ("kind", "bursty".into()),
+                ("rate_hz", f64_to_bits_json(*rate_hz)),
+                ("on_s", f64_to_bits_json(*on_s)),
+                ("off_s", f64_to_bits_json(*off_s)),
+                ("jobs", u64_to_str_json(*jobs)),
+            ]),
+        };
+        Json::obj(vec![("name", self.name.as_str().into()), ("arrivals", arrivals)])
+    }
+
+    /// Inverse of [`WorkloadScenario::to_json`]; `None` marks a value this
+    /// build cannot decode (callers fail structured, never panic).
+    pub fn from_json(j: &Json) -> Option<WorkloadScenario> {
+        let name = j.get("name").as_str()?.to_string();
+        let a = j.get("arrivals");
+        let arrivals = match a.get("kind").as_str()? {
+            "closed" => {
+                ArrivalProcess::ClosedLoopBatch { jobs: u64_from_str_json(a.get("jobs"))? }
+            }
+            "poisson" => ArrivalProcess::Poisson {
+                rate_hz: f64_from_bits_json(a.get("rate_hz"))?,
+                jobs: u64_from_str_json(a.get("jobs"))?,
+            },
+            "bursty" => ArrivalProcess::BurstyOnOff {
+                rate_hz: f64_from_bits_json(a.get("rate_hz"))?,
+                on_s: f64_from_bits_json(a.get("on_s"))?,
+                off_s: f64_from_bits_json(a.get("off_s"))?,
+                jobs: u64_from_str_json(a.get("jobs"))?,
+            },
+            _ => return None,
+        };
+        Some(WorkloadScenario { name, arrivals })
     }
 
     pub fn jobs(&self) -> u64 {
@@ -180,6 +232,24 @@ mod tests {
         assert!(WorkloadScenario::parse("closed").is_err());
         assert!(WorkloadScenario::parse("poisson:x:20").is_err());
         assert!(WorkloadScenario::parse("weird:1").is_err());
+    }
+
+    #[test]
+    fn json_codec_round_trips_debug_identically() {
+        for s in [
+            WorkloadScenario::closed_loop(4),
+            WorkloadScenario::poisson(1000.0, 20),
+            WorkloadScenario::bursty(50_000.0, 0.0002, 0.0008, 20),
+        ] {
+            let back =
+                WorkloadScenario::from_json(&Json::parse(&s.to_json().to_string()).unwrap())
+                    .expect("decodes");
+            assert_eq!(back, s);
+            // the Debug rendering is the cache-key slice: must match exactly
+            assert_eq!(format!("{back:?}"), format!("{s:?}"));
+        }
+        assert!(WorkloadScenario::from_json(&Json::parse("{}").unwrap()).is_none());
+        assert!(WorkloadScenario::from_json(&Json::parse(r#"{"name": "x"}"#).unwrap()).is_none());
     }
 
     #[test]

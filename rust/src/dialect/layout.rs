@@ -180,7 +180,12 @@ mod tests {
             word_bits: 32,
             depth: 1,
             lanes: 1,
-            fields: vec![LayoutField { array: "a".into(), elem_bits: 64, count: 1, offset_bits: 0 }],
+            fields: vec![LayoutField {
+                array: "a".into(),
+                elem_bits: 64,
+                count: 1,
+                offset_bits: 0,
+            }],
         };
         assert!(!l.is_valid());
     }
@@ -208,7 +213,12 @@ mod tests {
             word_bits: 256,
             depth: 10,
             lanes: 1,
-            fields: vec![LayoutField { array: "s".into(), elem_bits: 112, count: 1, offset_bits: 0 }],
+            fields: vec![LayoutField {
+                array: "s".into(),
+                elem_bits: 112,
+                count: 1,
+                offset_bits: 0,
+            }],
         };
         assert!((l.efficiency() - 0.4375).abs() < 1e-9);
     }

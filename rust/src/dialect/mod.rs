@@ -25,6 +25,8 @@ pub mod verify;
 
 pub use build::{DfgBuilder, KernelEst};
 pub use layout::{Layout, LayoutField};
-pub use ops::{ChannelView, KernelView, ParamType, PcView, OP_KERNEL, OP_MAKE_CHANNEL, OP_PC, OP_SUPER_NODE};
+pub use ops::{
+    ChannelView, KernelView, ParamType, PcView, OP_KERNEL, OP_MAKE_CHANNEL, OP_PC, OP_SUPER_NODE,
+};
 pub use resources::ResourceVec;
 pub use verify::{verify_dialect, DialectError};

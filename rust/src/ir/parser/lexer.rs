@@ -322,7 +322,8 @@ mod tests {
 
     #[test]
     fn lexes_fig1_line() {
-        let toks = kinds(r#"%2 = "olympus.make_channel"() {depth = 20} : () -> (!olympus.channel<i32>)"#);
+        let toks =
+            kinds(r#"%2 = "olympus.make_channel"() {depth = 20} : () -> (!olympus.channel<i32>)"#);
         assert_eq!(toks[0], TokenKind::Percent("2".into()));
         assert_eq!(toks[1], TokenKind::Equal);
         assert_eq!(toks[2], TokenKind::Str("olympus.make_channel".into()));

@@ -441,7 +441,8 @@ impl<'a> Parser<'a> {
         }
 
         // optional attr-dict
-        let attrs = if self.at(&TokenKind::LBrace) { self.parse_attr_dict()? } else { AttrMap::new() };
+        let attrs =
+            if self.at(&TokenKind::LBrace) { self.parse_attr_dict()? } else { AttrMap::new() };
 
         // `:` fn-type
         self.eat(&TokenKind::Colon)?;
@@ -578,7 +579,11 @@ mod tests {
 } : (!olympus.channel<i32>, !olympus.channel<i32>, !olympus.channel<i32>) -> ()
 "#;
         // NOTE: the funky `5admissible` would be a lex error — use the clean version:
-        let src = src.replace("ff = 4316, lut = 5admissible = 0", "ff = 4316, lut = 5373, bram = 2, uram = 0, dsp = 0, operand_segment_sizes = array<i32: 2, 1>");
+        let src = src.replace(
+            "ff = 4316, lut = 5admissible = 0",
+            "ff = 4316, lut = 5373, bram = 2, uram = 0, dsp = 0, \
+             operand_segment_sizes = array<i32: 2, 1>",
+        );
         let m = parse_module(&src).unwrap();
         let kernels = m.top_ops_named("olympus.kernel");
         assert_eq!(kernels.len(), 1);

@@ -24,8 +24,12 @@
 //! * a PJRT runtime ([`runtime`]) that loads AOT-compiled JAX/Pallas kernels
 //!   (HLO text in `artifacts/`) and executes them for kernel compute units;
 //! * a concurrent DSE job service ([`service`]): `olympus serve` daemon with
-//!   a newline-delimited-JSON TCP protocol, a std-thread worker pool and a
-//!   content-addressed single-flight evaluation cache.
+//!   a newline-delimited-JSON TCP protocol, a std-thread worker pool, a
+//!   content-addressed single-flight evaluation cache (memory + on-disk
+//!   journal tiers), and distributed evaluation — `olympus worker` daemons
+//!   each own a rendezvous-hash shard of the candidate key space and a
+//!   coordinator (`serve --workers`) routes evaluations to shard owners
+//!   with local failover ([`service::remote`]).
 //!
 //! See `DESIGN.md` for the paper → module map.
 

@@ -11,6 +11,8 @@
 //! olympus lower <file.mlir> [--platform u280] [--pipeline ...] [--out DIR]
 //! olympus run   <file.mlir> [--platform u280] [--pipeline ...] [--artifacts DIR] [--seed N]
 //! olympus serve [--addr 127.0.0.1:7878] [--jobs N] [--cache-capacity N] [--cache-dir DIR]
+//!               [--workers host:port,host:port,...]
+//! olympus worker [--addr 127.0.0.1:7900] [--jobs N] [--cache-capacity N] [--cache-dir DIR]
 //! olympus submit <file.mlir> [--addr ...] [--cmd dse|des|flow] [--platform ...] [...]
 //! olympus cache-stats [--addr ...]
 //! ```
@@ -27,8 +29,15 @@
 //! "Running as a service"); `submit` is the matching thin client.
 //! `--cache-dir` persists the evaluation caches to disk: a restarted
 //! daemon (and repeated single-shot `dse`/`des` runs) answers previously
-//! evaluated work from the journal instead of recomputing it. (clap is
-//! not vendored in this offline build; argument parsing is hand-rolled.)
+//! evaluated work from the journal instead of recomputing it.
+//!
+//! `worker` runs a remote evaluation daemon, and `serve --workers` turns a
+//! daemon into the coordinator of that fleet: each DSE candidate
+//! evaluation routes to the worker owning its consistent-hash key shard
+//! (answered from the worker's warm `--cache-dir` journal when possible),
+//! falling back to local evaluation when a worker is unreachable — see
+//! README "Distributed evaluation". (clap is not vendored in this offline
+//! build; argument parsing is hand-rolled.)
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
@@ -77,8 +86,12 @@ fn load_platform(args: &Args) -> Result<PlatformSpec> {
         return Ok(p);
     }
     // not a builtin: treat as a JSON platform file (Fig 3 "platform info")
-    PlatformSpec::load(Path::new(name))
-        .with_context(|| format!("'{name}' is neither a builtin ({builtin:?}) nor a readable platform file", builtin = builtin_names()))
+    PlatformSpec::load(Path::new(name)).with_context(|| {
+        format!(
+            "'{name}' is neither a builtin ({:?}) nor a readable platform file",
+            builtin_names()
+        )
+    })
 }
 
 fn load_module(path: &str) -> Result<Module> {
@@ -98,12 +111,13 @@ fn load_module(path: &str) -> Result<Module> {
 
 fn usage() -> ! {
     eprintln!(
-        "usage: olympus <platforms|opt|dse|des|lower|run|serve|submit|cache-stats> [input.mlir] \
-         [--platform NAME|file.json] [--pipeline P] [--objective analytic|des-score] \
+        "usage: olympus <platforms|opt|dse|des|lower|run|serve|worker|submit|cache-stats> \
+         [input.mlir] [--platform NAME|file.json] [--pipeline P] \
+         [--objective analytic|des-score] \
          [--driver exhaustive|random|successive-halving|iterative] [--budget N] \
          [--search-seed N] [--scenario closed:N|poisson:HZ:N|bursty:HZ:ON:OFF:N] [--out DIR] \
          [--artifacts DIR] [--seed N] [--jobs N] [--addr HOST:PORT] [--factors 2,4] \
-         [--cache-dir DIR]"
+         [--cache-dir DIR] [--workers HOST:PORT,...]"
     );
     std::process::exit(2)
 }
@@ -276,7 +290,10 @@ fn main() -> Result<()> {
             if args.flags.contains_key("objective") {
                 // the DES command always scores with the DES: an
                 // --objective here would be silently dead
-                bail!("--objective is fixed to des-score by 'des'; use 'dse --objective ...' to choose");
+                bail!(
+                    "--objective is fixed to des-score by 'des'; use 'dse --objective ...' \
+                     to choose"
+                );
             }
             let m = load_module(input)?;
             let plat = load_platform(&args)?;
@@ -407,17 +424,40 @@ fn main() -> Result<()> {
             }
             Ok(())
         }
-        "serve" => {
+        "serve" | "worker" => {
             // the daemon's search behavior comes from each request's
             // fields, not from startup flags
-            reject_search_flags(&args, "by 'serve' (send driver/budget/factors per request)")?;
+            reject_search_flags(
+                &args,
+                &format!("by '{cmd}' (send driver/budget/factors per request)"),
+            )?;
             use olympus::service::{ServeOptions, Server};
-            let addr =
-                args.flags.get("addr").cloned().unwrap_or_else(|| "127.0.0.1:7878".to_string());
+            // distinct defaults so a laptop coordinator + worker don't
+            // collide; both honor an explicit --addr
+            let default_addr = if cmd == "worker" { "127.0.0.1:7900" } else { "127.0.0.1:7878" };
+            let addr = args.flags.get("addr").cloned().unwrap_or_else(|| default_addr.into());
             let parse_n = |key: &str, default: usize| -> Result<usize> {
                 match args.flags.get(key) {
                     Some(v) => v.parse().with_context(|| format!("--{key} wants a number")),
                     None => Ok(default),
+                }
+            };
+            let remote_workers: Vec<String> = match args.flags.get("workers") {
+                None => Vec::new(),
+                Some(_) if cmd == "worker" => bail!(
+                    "--workers configures the coordinator ('olympus serve'); \
+                     a worker evaluates locally"
+                ),
+                Some(list) => {
+                    let addrs: Vec<String> = list
+                        .split(',')
+                        .map(|s| s.trim().to_string())
+                        .filter(|s| !s.is_empty())
+                        .collect();
+                    if addrs.is_empty() {
+                        bail!("--workers names no addresses (e.g. --workers h1:7900,h2:7900)");
+                    }
+                    addrs
                 }
             };
             let opts = ServeOptions {
@@ -425,11 +465,13 @@ fn main() -> Result<()> {
                 cache_capacity: parse_n("cache-capacity", 0)?,
                 dse_threads: parse_n("dse-threads", 1)?,
                 cache_dir: args.flags.get("cache-dir").map(PathBuf::from),
+                remote_workers,
             };
             let server = Server::bind(&addr, opts)?;
             // the address line is the startup handshake scripts wait for
             // (stdout is line-buffered, so it flushes even into a pipe)
-            println!("olympus-serve listening on {}", server.addr());
+            let banner = if cmd == "worker" { "olympus-worker" } else { "olympus-serve" };
+            println!("{banner} listening on {}", server.addr());
             server.wait();
             Ok(())
         }

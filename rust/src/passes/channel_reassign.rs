@@ -97,7 +97,9 @@ impl Pass for ChannelReassign {
         let used = load.iter().filter(|&&l| l > 0).count();
         let mut remarks = vec![format!("spread PC terminals over {used} physical channels")];
         if spilled > 0 {
-            remarks.push(format!("{spilled} buffer(s) spilled off their preferred memory kind (capacity)"));
+            remarks.push(format!(
+                "{spilled} buffer(s) spilled off their preferred memory kind (capacity)"
+            ));
         }
         Ok(PassOutcome { changed, remarks })
     }

@@ -55,7 +55,8 @@ use crate::search::{
     iterative_moves, normalize_factors, run_driver, DriverKind, ObjectiveEvaluator, StrategyGrid,
 };
 use crate::service::cache::EvalCache;
-use crate::util::{ContentHash, Json};
+use crate::service::remote::{RemoteEvaluator, WorkerPool};
+use crate::util::{f64_from_bits_json, f64_to_bits_json, ContentHash, Json};
 
 /// One evaluated candidate.
 #[derive(Debug, Clone)]
@@ -156,21 +157,9 @@ pub fn candidate_cache_key(
     ContentHash::of_parts(&["olympus-cand-v1", module_fp, platform_fp, pipeline, objective_desc])
 }
 
-/// f64 as its raw bit pattern in hex: round-trips *bit-identically*,
-/// including the `inf` scores of infeasible candidates, which JSON numbers
-/// cannot carry.
-fn f64_bits(x: f64) -> Json {
-    Json::Str(format!("{:016x}", x.to_bits()))
-}
-
-fn f64_from_bits(j: &Json) -> Option<f64> {
-    let s = j.as_str()?;
-    u64::from_str_radix(s, 16).ok().map(f64::from_bits)
-}
-
 fn opt_f64_bits(x: Option<f64>) -> Json {
     match x {
-        Some(v) => f64_bits(v),
+        Some(v) => f64_to_bits_json(v),
         None => Json::Null,
     }
 }
@@ -185,15 +174,15 @@ pub fn outcome_to_json(o: &CandidateOutcome) -> Json {
         CandidateOutcome::Evaluated { cand, module } => Json::obj(vec![
             ("strategy", cand.strategy.as_str().into()),
             ("pipeline", cand.pipeline.as_str().into()),
-            ("makespan_s", f64_bits(cand.makespan_s)),
-            ("achieved_gbs", f64_bits(cand.achieved_gbs)),
-            ("efficiency", f64_bits(cand.efficiency)),
-            ("utilization", f64_bits(cand.utilization)),
+            ("makespan_s", f64_to_bits_json(cand.makespan_s)),
+            ("achieved_gbs", f64_to_bits_json(cand.achieved_gbs)),
+            ("efficiency", f64_to_bits_json(cand.efficiency)),
+            ("utilization", f64_to_bits_json(cand.utilization)),
             ("fits", cand.fits.into()),
             ("compute_units", cand.compute_units.into()),
             ("des_makespan_s", opt_f64_bits(cand.des_makespan_s)),
             ("des_p99_latency_s", opt_f64_bits(cand.des_p99_latency_s)),
-            ("score", f64_bits(cand.score)),
+            ("score", f64_to_bits_json(cand.score)),
             ("module", print_module(module).into()),
         ]),
     }
@@ -210,23 +199,54 @@ pub fn outcome_from_json(j: &Json) -> Option<CandidateOutcome> {
     let opt_f64 = |k: &str| -> Option<Option<f64>> {
         match j.get(k) {
             Json::Null => Some(None),
-            v => f64_from_bits(v).map(Some),
+            v => f64_from_bits_json(v).map(Some),
         }
     };
     let cand = DseCandidate {
         strategy: j.get("strategy").as_str()?.to_string(),
         pipeline: j.get("pipeline").as_str()?.to_string(),
-        makespan_s: f64_from_bits(j.get("makespan_s"))?,
-        achieved_gbs: f64_from_bits(j.get("achieved_gbs"))?,
-        efficiency: f64_from_bits(j.get("efficiency"))?,
-        utilization: f64_from_bits(j.get("utilization"))?,
+        makespan_s: f64_from_bits_json(j.get("makespan_s"))?,
+        achieved_gbs: f64_from_bits_json(j.get("achieved_gbs"))?,
+        efficiency: f64_from_bits_json(j.get("efficiency"))?,
+        utilization: f64_from_bits_json(j.get("utilization"))?,
         fits: j.get("fits") == &Json::Bool(true),
         compute_units: j.get("compute_units").as_usize()?,
         des_makespan_s: opt_f64("des_makespan_s")?,
         des_p99_latency_s: opt_f64("des_p99_latency_s")?,
-        score: f64_from_bits(j.get("score"))?,
+        score: f64_from_bits_json(j.get("score"))?,
     };
     Some(CandidateOutcome::Evaluated { cand, module })
+}
+
+/// Wire codec for remote candidate evaluation (`olympus worker`): the
+/// objective travels as JSON (scenario + engine config, floats as raw bit
+/// patterns), so the value a worker reconstructs `Debug`-renders — and
+/// therefore computes [`candidate_cache_key`]s — byte-identically to the
+/// coordinator's. The worker cross-checks the key it derives against the
+/// one the coordinator routed by, so any codec skew fails structured
+/// instead of silently caching under the wrong address.
+pub fn objective_to_json(o: &DseObjective) -> Json {
+    match o {
+        DseObjective::Analytic => Json::obj(vec![("kind", "analytic".into())]),
+        DseObjective::DesScore { scenario, config } => Json::obj(vec![
+            ("kind", "des-score".into()),
+            ("scenario", scenario.to_json()),
+            ("config", config.to_json()),
+        ]),
+    }
+}
+
+/// Inverse of [`objective_to_json`]; `None` marks a value this build
+/// cannot decode (callers answer with a structured error, never panic).
+pub fn objective_from_json(j: &Json) -> Option<DseObjective> {
+    match j.get("kind").as_str()? {
+        "analytic" => Some(DseObjective::Analytic),
+        "des-score" => Some(DseObjective::DesScore {
+            scenario: WorkloadScenario::from_json(j.get("scenario"))?,
+            config: DesConfig::from_json(j.get("config"))?,
+        }),
+        _ => None,
+    }
 }
 
 /// DSE tuning knobs.
@@ -245,6 +265,13 @@ pub struct DseOptions {
     pub cache: Option<Arc<CandidateCache>>,
     /// Search policy (exhaustive | random | successive-halving | iterative).
     pub driver: DriverKind,
+    /// Remote evaluation pool (`olympus serve --workers`): full-fidelity
+    /// candidate evaluations route to the worker owning each key's
+    /// consistent-hash shard, falling back to local evaluation when a
+    /// worker is unreachable. `None` evaluates everything in-process.
+    /// Results are bit-identical either way — routing can only move *where*
+    /// a deterministic evaluation runs.
+    pub remote: Option<Arc<WorkerPool>>,
 }
 
 /// Strategy table (name, pipeline template).
@@ -254,7 +281,10 @@ pub fn strategies() -> Vec<(&'static str, &'static str)> {
         ("reassign", "sanitize, channel-reassign"),
         ("iris", "sanitize, iris, channel-reassign"),
         ("widen", "sanitize, bus-widen, channel-reassign"),
-        ("replicate", "sanitize, plm-share, fifo-sizing, replicate{factor=FACTOR}, channel-reassign"),
+        (
+            "replicate",
+            "sanitize, plm-share, fifo-sizing, replicate{factor=FACTOR}, channel-reassign",
+        ),
         (
             "full",
             "sanitize, plm-share, fifo-sizing, bus-widen, iris, replicate{factor=FACTOR}, channel-reassign",
@@ -350,6 +380,17 @@ pub fn run_dse_with(
 ) -> Result<DseReport> {
     let factors = normalize_factors(&opts.factors).map_err(|e| anyhow::anyhow!(e))?;
     let space = StrategyGrid::new(&factors);
+    if let Some(pool) = opts.remote.as_ref().filter(|p| !p.is_empty()) {
+        let evaluator = RemoteEvaluator::new(
+            pool.clone(),
+            input,
+            plat,
+            &opts.objective,
+            opts.threads,
+            opts.cache.clone(),
+        );
+        return run_driver(&opts.driver, &space, &evaluator);
+    }
     let evaluator =
         ObjectiveEvaluator::new(input, plat, &opts.objective, opts.threads, opts.cache.clone());
     run_driver(&opts.driver, &space, &evaluator)
@@ -698,6 +739,35 @@ mod tests {
             Some(CandidateOutcome::Infeasible)
         ));
         assert!(outcome_from_json(&Json::parse("{}").unwrap()).is_none());
+    }
+
+    #[test]
+    fn objective_codec_round_trips_debug_identically() {
+        use crate::des::ServiceDist;
+        let objectives = vec![
+            DseObjective::Analytic,
+            DseObjective::des_score(),
+            DseObjective::des_score_with(
+                WorkloadScenario::poisson(1000.0, 8),
+                DesConfig {
+                    // above 2^53: must survive the wire exactly (u64 fields
+                    // travel as decimal strings, not f64-backed numbers)
+                    seed: (1u64 << 60) + 3,
+                    service_dist: ServiceDist::Exponential,
+                    cu_service_dists: vec![("cu_k".to_string(), ServiceDist::Deterministic)],
+                    ..DesConfig::default()
+                },
+            ),
+        ];
+        for o in &objectives {
+            let text = objective_to_json(o).to_string();
+            let back = objective_from_json(&Json::parse(&text).unwrap()).expect("decodes");
+            // the Debug rendering is the objective slice of every candidate
+            // cache key: a worker must reproduce it byte-for-byte
+            assert_eq!(format!("{back:?}"), format!("{o:?}"));
+        }
+        assert!(objective_from_json(&Json::parse("{}").unwrap()).is_none());
+        assert!(objective_from_json(&Json::parse(r#"{"kind": "des-score"}"#).unwrap()).is_none());
     }
 
     #[test]

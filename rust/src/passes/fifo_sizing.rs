@@ -57,10 +57,8 @@ impl Pass for FifoSizing {
                 changed = true;
             }
         }
-        Ok(PassOutcome {
-            changed,
-            remarks: vec![format!("double-buffered {shrunk} memory-facing FIFOs at {burst}-word bursts")],
-        })
+        let remark = format!("double-buffered {shrunk} memory-facing FIFOs at {burst}-word bursts");
+        Ok(PassOutcome { changed, remarks: vec![remark] })
     }
 }
 

@@ -54,7 +54,8 @@ pub fn replicate_dfg(m: &mut Module, extra: u64) -> usize {
                         }
                     }
                     // Iris bus channels list their members by name.
-                    if let Some(Attribute::Array(members)) = clone.attrs.get("iris_members").cloned()
+                    if let Some(Attribute::Array(members)) =
+                        clone.attrs.get("iris_members").cloned()
                     {
                         let renamed = members
                             .into_iter()

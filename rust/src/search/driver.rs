@@ -76,8 +76,9 @@ impl DriverKind {
                 Ok(DriverKind::Exhaustive)
             }
             "random" => {
-                let budget = budget
-                    .ok_or_else(|| "driver 'random' needs a candidate budget (--budget N)".to_string())?;
+                let budget = budget.ok_or_else(|| {
+                    "driver 'random' needs a candidate budget (--budget N)".to_string()
+                })?;
                 if budget == 0 {
                     return Err("budget must be >= 1".to_string());
                 }

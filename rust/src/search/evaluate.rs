@@ -161,6 +161,16 @@ impl<'a> ObjectiveEvaluator<'a> {
         }
     }
 
+    /// Evaluate one point at full fidelity from scratch, bypassing both the
+    /// memo and the `full_evals` counter. This is the raw computation the
+    /// distributed layer wraps: `olympus worker` answers `eval-candidate`
+    /// requests with it (its own cache supplies the memo), and the
+    /// coordinator's [`RemoteEvaluator`](crate::service::remote::RemoteEvaluator)
+    /// uses it as the local-failover path (it counts evaluations itself).
+    pub fn compute_outcome(&self, point: &CandidatePoint) -> CandidateOutcome {
+        self.eval_point(point, self.objective)
+    }
+
     /// Slot-parallel evaluation of `points` (the old `run_dse_with` loop).
     fn run_points(
         &self,

@@ -25,6 +25,12 @@
 //! startup, so a restarted process answers repeated keys without
 //! recomputing. Eviction only trims the in-memory tier — the journal keeps
 //! every record until its directory is deleted.
+//!
+//! Because keys are process-independent, the same cache also serves as one
+//! shard of a *distributed* candidate store: an `olympus worker` answers
+//! `eval-candidate` requests straight out of this structure (memory, then
+//! journal), and a coordinator routes each key to the worker owning its
+//! consistent-hash shard ([`crate::service::remote`]).
 
 use std::collections::{HashMap, VecDeque};
 use std::fmt;

@@ -19,22 +19,35 @@
 //!   write through on miss, so a killed-and-restarted daemon serves warm
 //!   answers without re-evaluating;
 //! * **[`worker`]** — request execution through a two-level memo (whole
-//!   responses + individual DSE candidates).
+//!   responses + individual DSE candidates);
+//! * **[`remote`]** — horizontal scale-out: `olympus worker` daemons each
+//!   own a consistent-hash shard of the candidate key space, and a
+//!   coordinator started with `--workers host:port,...` routes every
+//!   candidate evaluation to its shard owner (warm journals answer without
+//!   recomputing), failing over to local evaluation when a worker dies.
 //!
 //! Determinism contract: a served result is bit-identical to the single-shot
 //! CLI output for the same inputs, whether it was computed cold, served
-//! warm, or raced by N workers. `rust/tests/service.rs` pins this.
+//! warm, raced by N workers, or evaluated on remote shards — and a worker
+//! dying mid-request cannot change the answer, only where it is computed.
+//! (Like the single-process warm start, the report's `full_evals` counter
+//! reflects genuine computations, so it credits warm caches wherever they
+//! live.) `rust/tests/service.rs` pins this.
 
 pub mod cache;
 pub mod persist;
 pub mod proto;
 pub mod queue;
+pub mod remote;
 pub mod worker;
 
 pub use cache::{CacheStats, EvalCache};
 pub use persist::{DiskStats, DiskStore};
-pub use proto::{error_response, ok_response, parse_request, Command, ProtoError, Request};
+pub use proto::{
+    error_response, ok_response, parse_request, Command, ProtoError, Request, PROTO_VERSION,
+};
 pub use queue::JobQueue;
+pub use remote::{shard_of, RemoteEvaluator, RemoteStats, WorkerPool};
 pub use worker::{execute_request, Job, Served, ServiceState};
 
 use std::io::{BufRead, BufReader, Read, Write};
@@ -66,11 +79,21 @@ pub struct ServeOptions {
     /// Persist both cache tiers to this directory (`--cache-dir`); `None`
     /// keeps the caches memory-only.
     pub cache_dir: Option<PathBuf>,
+    /// Remote evaluation workers (`--workers host:port,...`): DSE candidate
+    /// evaluations route to the `olympus worker` owning each key's
+    /// consistent-hash shard, with local failover. Empty = single-process.
+    pub remote_workers: Vec<String>,
 }
 
 impl Default for ServeOptions {
     fn default() -> Self {
-        ServeOptions { workers: 0, cache_capacity: 0, dse_threads: 1, cache_dir: None }
+        ServeOptions {
+            workers: 0,
+            cache_capacity: 0,
+            dse_threads: 1,
+            cache_dir: None,
+            remote_workers: Vec::new(),
+        }
     }
 }
 
@@ -93,11 +116,17 @@ impl Server {
         let local = listener.local_addr().context("local_addr")?;
         let stop = Arc::new(AtomicBool::new(false));
         let queue = Arc::new(JobQueue::new());
-        let state = Arc::new(ServiceState::with_cache_dir(
+        let mut state = ServiceState::with_cache_dir(
             opts.cache_capacity,
             opts.dse_threads,
             opts.cache_dir.as_deref(),
-        )?);
+        )?;
+        if !opts.remote_workers.is_empty() {
+            // eager handshakes: a version-skewed fleet fails the bind; a
+            // merely unreachable worker is retried per evaluation
+            state.remote = Some(Arc::new(remote::WorkerPool::connect(&opts.remote_workers)?));
+        }
+        let state = Arc::new(state);
 
         let n_workers = if opts.workers == 0 {
             std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1)

@@ -6,7 +6,11 @@
 //! hashed with [`ContentHash`]), so any process that opens the same
 //! `--cache-dir` computes the same addresses and can reuse every record —
 //! a killed-and-restarted daemon answers a repeated request from disk
-//! without re-evaluating anything.
+//! without re-evaluating anything. The same property is what lets an
+//! `olympus worker` serve any journal it holds to a coordinator: a
+//! candidate journal is one warm shard of the distributed candidate store
+//! ([`crate::service::remote`]), addressed by the identical keys every
+//! process derives.
 //!
 //! Format, designed so that *no* on-disk state can panic a reader:
 //!

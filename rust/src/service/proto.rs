@@ -17,10 +17,26 @@
 //! {"cmd": "des",  "ir": "<mlir>", "pipeline": "sanitize, iris, channel-reassign",
 //!  "scenario": "poisson:1000:20", "seed": 7}
 //! {"cmd": "flow", "ir": "<mlir>", "platform": "u280"}
+//! {"cmd": "handshake", "proto_version": 1,
+//!  "shard_map": {"index": 0, "total": 2, "workers": ["h1:7900", "h2:7900"]}}
+//! {"cmd": "eval-candidate", "ir": "<mlir>", "platform_json": {...},
+//!  "objective_json": {"kind": "analytic"}, "point_label": "full(x4)",
+//!  "point_pipeline": "sanitize, ...", "key": "<32-hex>"}
 //! {"cmd": "cache-stats"}
 //! {"cmd": "ping"}
 //! {"cmd": "shutdown"}
 //! ```
+//!
+//! `handshake` and `eval-candidate` are the distributed-evaluation verbs
+//! (see [`crate::service::remote`]): a coordinator handshakes each
+//! `olympus worker` with the protocol version and the worker's shard of
+//! the consistent-hash key space, then routes individual candidate
+//! evaluations to the shard owner. A version mismatch is a structured
+//! `proto-mismatch` error; a malformed or truncated shard map is a
+//! structured `bad-request` — never a dropped connection. `eval-candidate`
+//! carries the full inline platform/objective specs (not names), so the
+//! worker recomputes the same content-addressed candidate key and
+//! cross-checks it against `key` (`key-mismatch` on skew).
 //!
 //! `platform` is a builtin name; `platform_json` may carry a full inline
 //! platform spec object instead. `id` (any JSON value) is echoed back.
@@ -43,6 +59,13 @@
 
 use crate::util::Json;
 
+/// Version of the distributed-evaluation protocol. A coordinator announces
+/// it in every `handshake`; a worker built from a different version answers
+/// `proto-mismatch` instead of silently computing keys the coordinator
+/// would disagree with. Bump whenever the handshake, the `eval-candidate`
+/// fields, or any wire codec they carry changes shape.
+pub const PROTO_VERSION: u64 = 1;
+
 /// What a request asks the service to do.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Command {
@@ -52,6 +75,11 @@ pub enum Command {
     Des,
     /// Full flow report (analyses + architecture + emission summary).
     Flow,
+    /// Coordinator -> worker: version check + shard assignment.
+    Handshake,
+    /// Coordinator -> worker: evaluate one DSE candidate, answered through
+    /// the worker's candidate cache (memory + `--cache-dir` journal).
+    EvalCandidate,
     /// Evaluation-cache counters.
     CacheStats,
     /// Liveness probe.
@@ -66,6 +94,8 @@ impl Command {
             "dse" => Some(Command::Dse),
             "des" => Some(Command::Des),
             "flow" => Some(Command::Flow),
+            "handshake" => Some(Command::Handshake),
+            "eval-candidate" => Some(Command::EvalCandidate),
             "cache-stats" => Some(Command::CacheStats),
             "ping" => Some(Command::Ping),
             "shutdown" => Some(Command::Shutdown),
@@ -78,6 +108,8 @@ impl Command {
             Command::Dse => "dse",
             Command::Des => "des",
             Command::Flow => "flow",
+            Command::Handshake => "handshake",
+            Command::EvalCandidate => "eval-candidate",
             Command::CacheStats => "cache-stats",
             Command::Ping => "ping",
             Command::Shutdown => "shutdown",
@@ -87,7 +119,7 @@ impl Command {
     /// Does this command evaluate a design (and therefore go through the
     /// job queue + cache)?
     pub fn is_job(self) -> bool {
-        matches!(self, Command::Dse | Command::Des | Command::Flow)
+        matches!(self, Command::Dse | Command::Des | Command::Flow | Command::EvalCandidate)
     }
 }
 
@@ -121,6 +153,21 @@ pub struct Request {
     pub budget: Option<u64>,
     /// Sampling seed for the `random` driver.
     pub search_seed: Option<u64>,
+    /// Distributed-protocol version announced by a `handshake`.
+    pub proto_version: Option<u64>,
+    /// Raw shard-map object of a `handshake` (validated by the executor so
+    /// malformed maps answer structured errors, not parse panics).
+    pub shard_map: Option<Json>,
+    /// Expected candidate key (32 hex digits) of an `eval-candidate`; the
+    /// worker cross-checks it against the key it derives itself.
+    pub key: Option<String>,
+    /// Decision-table label of an `eval-candidate` point.
+    pub point_label: Option<String>,
+    /// Pass pipeline (or iterative tag) of an `eval-candidate` point.
+    pub point_pipeline: Option<String>,
+    /// Full objective spec of an `eval-candidate`
+    /// ([`crate::passes::objective_to_json`]).
+    pub objective_json: Option<Json>,
 }
 
 /// A protocol-level failure: structured error code + message, with the
@@ -161,7 +208,10 @@ pub fn parse_request(line: &str) -> Result<Request, ProtoError> {
     let cmd = Command::parse(cmd_str).ok_or_else(|| {
         ProtoError::new(
             "bad-request",
-            format!("unknown cmd '{cmd_str}' (want dse|des|flow|cache-stats|ping|shutdown)"),
+            format!(
+                "unknown cmd '{cmd_str}' (want dse|des|flow|handshake|eval-candidate|\
+                 cache-stats|ping|shutdown)"
+            ),
         )
         .with_id(id.clone())
     })?;
@@ -191,6 +241,22 @@ pub fn parse_request(line: &str) -> Result<Request, ProtoError> {
     let seed = uint_field("seed")?;
     let budget = uint_field("budget")?;
     let search_seed = uint_field("search_seed")?;
+    let proto_version = uint_field("proto_version")?;
+    if cmd == Command::EvalCandidate && v.get("point_pipeline").as_str().is_none() {
+        return Err(ProtoError::new(
+            "bad-request",
+            "'eval-candidate' requires string field 'point_pipeline'",
+        )
+        .with_id(id));
+    }
+    let shard_map = match v.get("shard_map") {
+        Json::Null => None,
+        j => Some(j.clone()),
+    };
+    let objective_json = match v.get("objective_json") {
+        Json::Null => None,
+        j => Some(j.clone()),
+    };
     let factors = match v.get("factors") {
         Json::Null => None,
         j => {
@@ -237,11 +303,23 @@ pub fn parse_request(line: &str) -> Result<Request, ProtoError> {
         driver: opt_str("driver"),
         budget,
         search_seed,
+        proto_version,
+        shard_map,
+        key: opt_str("key"),
+        point_label: opt_str("point_label"),
+        point_pipeline: opt_str("point_pipeline"),
+        objective_json,
     })
 }
 
 /// Serialize a success response.
-pub fn ok_response(id: &Json, cmd: Command, cached: bool, key: Option<&str>, result: Json) -> String {
+pub fn ok_response(
+    id: &Json,
+    cmd: Command,
+    cached: bool,
+    key: Option<&str>,
+    result: Json,
+) -> String {
     let mut fields = vec![
         ("ok", Json::Bool(true)),
         ("id", id.clone()),
@@ -344,9 +422,42 @@ mod tests {
 
     #[test]
     fn non_job_commands_need_no_ir() {
-        for cmd in ["cache-stats", "ping", "shutdown"] {
+        for cmd in ["cache-stats", "ping", "shutdown", "handshake"] {
             let r = parse_request(&format!(r#"{{"cmd": "{cmd}"}}"#)).unwrap();
             assert!(!r.cmd.is_job());
         }
+    }
+
+    #[test]
+    fn handshake_and_eval_candidate_fields_parse() {
+        let r = parse_request(
+            r#"{"cmd": "handshake", "proto_version": 1,
+                "shard_map": {"index": 0, "total": 2}}"#,
+        )
+        .unwrap();
+        assert_eq!(r.cmd, Command::Handshake);
+        assert_eq!(r.proto_version, Some(1));
+        assert!(r.shard_map.is_some());
+
+        let r = parse_request(
+            r#"{"cmd": "eval-candidate", "ir": "x", "point_label": "full(x2)",
+                "point_pipeline": "sanitize", "key": "00ff",
+                "objective_json": {"kind": "analytic"}}"#,
+        )
+        .unwrap();
+        assert!(r.cmd.is_job(), "eval-candidate goes through the job queue");
+        assert_eq!(r.point_label.as_deref(), Some("full(x2)"));
+        assert_eq!(r.point_pipeline.as_deref(), Some("sanitize"));
+        assert_eq!(r.key.as_deref(), Some("00ff"));
+        let obj = r.objective_json.as_ref().expect("objective_json parsed");
+        assert_eq!(obj.get("kind").as_str(), Some("analytic"));
+
+        // a missing point_pipeline is a structured parse error, id intact
+        let e = parse_request(r#"{"cmd": "eval-candidate", "ir": "x", "id": 4}"#).unwrap_err();
+        assert_eq!(e.code, "bad-request");
+        assert_eq!(e.id, Json::Num(4.0));
+        // ...and so is a missing ir (eval-candidate is a job command)
+        let e = parse_request(r#"{"cmd": "eval-candidate", "point_pipeline": "x"}"#).unwrap_err();
+        assert_eq!(e.code, "bad-request");
     }
 }

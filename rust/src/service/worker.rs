@@ -16,21 +16,25 @@
 
 use std::path::Path;
 use std::sync::mpsc;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use anyhow::Result;
 
 use crate::coordinator::{flow_report_json, render_dse_table, Flow};
 use crate::des::{DesConfig, WorkloadScenario};
-use crate::ir::{parse_module, Module};
-use crate::passes::{CandidateCache, DseObjective};
+use crate::ir::{module_fingerprint, parse_module, Module};
+use crate::passes::{
+    candidate_cache_key, objective_from_json, outcome_to_json, CandidateCache, DseObjective,
+};
 use crate::platform::{builtin, builtin_names, PlatformSpec};
+use crate::search::{CandidatePoint, ObjectiveEvaluator};
 use crate::util::Json;
 
 use super::cache::{CacheStats, EvalCache};
 use super::persist::{decode_served, encode_served, open_candidate_cache, open_persistent_cache};
-use super::proto::{error_response, ok_response, Command, ProtoError, Request};
+use super::proto::{error_response, ok_response, Command, ProtoError, Request, PROTO_VERSION};
 use super::queue::JobQueue;
+use super::remote::WorkerPool;
 
 /// One unit of work: a request plus the channel its response line goes back
 /// through (the connection thread blocks on the receiver).
@@ -57,6 +61,12 @@ pub struct ServiceState {
     /// DSE candidate-evaluation threads *per job* (the pool already
     /// parallelizes across jobs; keep this at 1 unless the pool is small).
     pub dse_threads: usize,
+    /// Remote evaluation pool (`olympus serve --workers`); `None`
+    /// evaluates every candidate in-process.
+    pub remote: Option<Arc<WorkerPool>>,
+    /// Shard assignment announced by a coordinator's `handshake` (worker
+    /// daemons only); echoed by `cache-stats`.
+    pub shard: Mutex<Option<(u64, u64)>>,
 }
 
 impl ServiceState {
@@ -69,6 +79,8 @@ impl ServiceState {
             responses: EvalCache::with_capacity(response_capacity),
             candidates: Arc::new(CandidateCache::with_capacity(candidate_capacity)),
             dse_threads: dse_threads.max(1),
+            remote: None,
+            shard: Mutex::new(None),
         }
     }
 
@@ -97,7 +109,13 @@ impl ServiceState {
             decode_served,
         )?;
         let (candidates, _cstore) = open_candidate_cache(dir, candidate_capacity)?;
-        Ok(ServiceState { responses, candidates, dse_threads: dse_threads.max(1) })
+        Ok(ServiceState {
+            responses,
+            candidates,
+            dse_threads: dse_threads.max(1),
+            remote: None,
+            shard: Mutex::new(None),
+        })
     }
 
     /// Counters for `cache-stats`.
@@ -141,17 +159,35 @@ pub fn execute_request(state: &ServiceState, req: &Request) -> String {
         }
         Command::CacheStats => {
             let (resp, cand) = state.stats();
-            ok_response(
-                &req.id,
-                req.cmd,
-                false,
-                None,
-                Json::obj(vec![
-                    ("responses", stats_json(&resp)),
-                    ("candidates", stats_json(&cand)),
-                ]),
-            )
+            let remote = state.remote.as_ref().map(|p| p.stats()).unwrap_or_default();
+            let workers = state.remote.as_ref().map(|p| p.len()).unwrap_or(0);
+            let mut fields = vec![
+                ("responses", stats_json(&resp)),
+                ("candidates", stats_json(&cand)),
+                (
+                    "remote",
+                    Json::obj(vec![
+                        ("workers", workers.into()),
+                        ("remote_hits", remote.remote_hits.into()),
+                        ("remote_evals", remote.remote_evals.into()),
+                        ("remote_failovers", remote.remote_failovers.into()),
+                    ]),
+                ),
+            ];
+            if let Some((index, total)) = *state.shard.lock().unwrap() {
+                let shard = Json::obj(vec![("index", index.into()), ("total", total.into())]);
+                fields.push(("shard", shard));
+            }
+            ok_response(&req.id, req.cmd, false, None, Json::obj(fields))
         }
+        Command::Handshake => execute_handshake(state, req),
+        Command::EvalCandidate => match execute_eval_candidate(state, req) {
+            Ok(resp) => resp,
+            Err(mut e) => {
+                e.id = req.id.clone();
+                error_response(&e)
+            }
+        },
         Command::Dse | Command::Des | Command::Flow => match execute_job(state, req) {
             Ok((key, payload, cached)) => match payload {
                 Served::Ok(result) => ok_response(&req.id, req.cmd, cached, Some(&key), result),
@@ -167,6 +203,130 @@ pub fn execute_request(state: &ServiceState, req: &Request) -> String {
             }
         },
     }
+}
+
+/// Validate a coordinator's `handshake`: exact protocol version, then a
+/// well-formed shard map. Every failure mode — malformed registration,
+/// version skew, truncated shard map — is a structured error on a live
+/// connection, never a drop or a panic.
+fn execute_handshake(state: &ServiceState, req: &Request) -> String {
+    let fail = |code: &'static str, msg: String| {
+        let mut e = ProtoError::new(code, msg);
+        e.id = req.id.clone();
+        error_response(&e)
+    };
+    let Some(version) = req.proto_version else {
+        return fail("bad-request", "handshake requires integer field 'proto_version'".into());
+    };
+    if version != PROTO_VERSION {
+        return fail(
+            "proto-mismatch",
+            format!("coordinator speaks protocol {version}, this worker speaks {PROTO_VERSION}"),
+        );
+    }
+    let Some(map) = &req.shard_map else {
+        return fail("bad-request", "handshake requires object field 'shard_map'".into());
+    };
+    match parse_shard_map(map) {
+        Err(msg) => fail("bad-request", msg),
+        Ok((index, total)) => {
+            *state.shard.lock().unwrap() = Some((index, total));
+            ok_response(
+                &req.id,
+                req.cmd,
+                false,
+                None,
+                Json::obj(vec![
+                    ("proto_version", PROTO_VERSION.into()),
+                    ("shard", Json::obj(vec![("index", index.into()), ("total", total.into())])),
+                ]),
+            )
+        }
+    }
+}
+
+/// Well-formedness of a handshake `shard_map`: an object with
+/// `index < total`, `total >= 1` and — when present — exactly `total`
+/// string entries in `workers`. Error messages name the offending field so
+/// a truncated map is diagnosable from the coordinator side.
+fn parse_shard_map(map: &Json) -> Result<(u64, u64), String> {
+    if map.as_obj().is_none() {
+        return Err("'shard_map' must be an object".to_string());
+    }
+    let total = map
+        .get("total")
+        .as_u64()
+        .ok_or_else(|| "'shard_map.total' must be an integer >= 1".to_string())?;
+    if total == 0 {
+        return Err("'shard_map.total' must be >= 1".to_string());
+    }
+    let index = map
+        .get("index")
+        .as_u64()
+        .ok_or_else(|| "'shard_map.index' must be a non-negative integer".to_string())?;
+    if index >= total {
+        return Err(format!("'shard_map.index' {index} out of range for total {total}"));
+    }
+    if map.get("workers") != &Json::Null {
+        let arr = map
+            .get("workers")
+            .as_arr()
+            .ok_or_else(|| "'shard_map.workers' must be an array of addresses".to_string())?;
+        if arr.len() as u64 != total {
+            return Err(format!(
+                "'shard_map.workers' names {} workers but total is {total} (truncated map?)",
+                arr.len()
+            ));
+        }
+        if arr.iter().any(|w| w.as_str().is_none()) {
+            return Err("'shard_map.workers' entries must be strings".to_string());
+        }
+    }
+    Ok((index, total))
+}
+
+/// Evaluate one DSE candidate for a coordinator (`eval-candidate`),
+/// answered through this process's candidate cache — memory tier plus the
+/// optional `--cache-dir` journal, written through on miss. The outcome
+/// travels in the bit-exact journal codec ([`outcome_to_json`]), so the
+/// coordinator reconstructs exactly what a local evaluation would have
+/// produced; the derived key is cross-checked against the routed one so
+/// codec skew fails structured instead of caching under a wrong address.
+fn execute_eval_candidate(state: &ServiceState, req: &Request) -> Result<String, ProtoError> {
+    let module = load_module(req)?;
+    let platform = load_platform(req)?;
+    let objective = match &req.objective_json {
+        Some(j) => objective_from_json(j).ok_or_else(|| {
+            ProtoError::new("bad-request", "undecodable 'objective_json' (version skew?)")
+        })?,
+        None => DseObjective::Analytic,
+    };
+    let pipeline = req.point_pipeline.as_deref().ok_or_else(|| {
+        ProtoError::new("bad-request", "'eval-candidate' requires string field 'point_pipeline'")
+    })?;
+    let point = CandidatePoint::new(req.point_label.as_deref().unwrap_or("remote"), pipeline);
+    let key = candidate_cache_key(
+        &module_fingerprint(&module),
+        &platform.fingerprint(),
+        &point.pipeline,
+        &format!("{objective:?}"),
+    );
+    if let Some(expected) = &req.key {
+        if *expected != key.to_hex() {
+            return Err(ProtoError::new(
+                "key-mismatch",
+                format!(
+                    "coordinator routed key {expected} but this worker derives {}; \
+                     refusing to answer under a disputed address (version skew?)",
+                    key.to_hex()
+                ),
+            ));
+        }
+    }
+    let evaluator = ObjectiveEvaluator::new(&module, &platform, &objective, 1, None);
+    let (outcome, cached) =
+        state.candidates.get_or_compute(key, || evaluator.compute_outcome(&point));
+    Ok(ok_response(&req.id, req.cmd, cached, Some(&key.to_hex()), outcome_to_json(&outcome)))
 }
 
 /// Resolve + evaluate a job command through the response cache. Returns the
@@ -218,7 +378,11 @@ fn load_platform(req: &Request) -> Result<PlatformSpec, ProtoError> {
     builtin(name).ok_or_else(|| {
         ProtoError::new(
             "bad-platform",
-            format!("unknown builtin platform '{name}' (have {:?}); pass platform_json for custom boards", builtin_names()),
+            format!(
+                "unknown builtin platform '{name}' (have {:?}); pass platform_json for \
+                 custom boards",
+                builtin_names()
+            ),
         )
     })
 }
@@ -257,6 +421,12 @@ fn build_flow(
     let mut flow = Flow::new(platform)
         .with_jobs(state.dse_threads)
         .with_cache(state.candidates.clone());
+    if let Some(pool) = &state.remote {
+        // full-fidelity candidate evaluations route to the shard owners;
+        // the response stays bit-identical, so the pool is deliberately
+        // NOT part of any cache key
+        flow = flow.with_remote(pool.clone());
+    }
     flow.dse_factors = req.factors.clone().unwrap_or_default();
     flow.des_config = cfg.clone();
     // driver + budget round-trip into the flow (and thus the cache key)

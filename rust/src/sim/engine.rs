@@ -47,10 +47,9 @@ impl<'a> Simulator<'a> {
     /// arity (the "load the correct implementation" step of paper §IV).
     pub fn validate(&self) -> Result<()> {
         for cu in &self.arch.cus {
-            let e = self
-                .registry
-                .entry(&cu.callee)
-                .with_context(|| format!("CU '{}': callee '{}' not in manifest", cu.name, cu.callee))?;
+            let e = self.registry.entry(&cu.callee).with_context(|| {
+                format!("CU '{}': callee '{}' not in manifest", cu.name, cu.callee)
+            })?;
             if e.input_shapes.len() != cu.inputs.len() {
                 bail!(
                     "CU '{}': {} wired inputs but kernel '{}' takes {}",

@@ -61,6 +61,17 @@ impl Json {
         self.as_f64().filter(|n| *n >= 0.0 && n.fract() == 0.0).map(|n| n as usize)
     }
 
+    pub fn as_u64(&self) -> Option<u64> {
+        self.as_f64().filter(|n| *n >= 0.0 && n.fract() == 0.0).map(|n| n as u64)
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(a) => Some(a),
@@ -84,6 +95,34 @@ impl Json {
     pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
         Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
     }
+}
+
+/// An `f64` as its raw bit pattern in 16 hex digits: round-trips
+/// *bit-identically* through JSON, including the infinities (infeasible
+/// scores) and signed zeros plain JSON numbers cannot carry. Used by every
+/// wire/disk codec whose decoded value must hash — or `Debug`-render —
+/// byte-identically on another process.
+pub fn f64_to_bits_json(x: f64) -> Json {
+    Json::Str(format!("{:016x}", x.to_bits()))
+}
+
+/// Inverse of [`f64_to_bits_json`]; `None` marks an undecodable value.
+pub fn f64_from_bits_json(j: &Json) -> Option<f64> {
+    let s = j.as_str()?;
+    u64::from_str_radix(s, 16).ok().map(f64::from_bits)
+}
+
+/// A `u64` as a decimal string: JSON numbers are f64-backed here, so values
+/// above 2^53 would silently round — unacceptable for wire codecs whose
+/// decoded value must hash byte-identically on another process (a DES seed
+/// is a full u64).
+pub fn u64_to_str_json(x: u64) -> Json {
+    Json::Str(x.to_string())
+}
+
+/// Inverse of [`u64_to_str_json`]; `None` marks an undecodable value.
+pub fn u64_from_str_json(j: &Json) -> Option<u64> {
+    j.as_str()?.parse().ok()
 }
 
 impl From<&str> for Json {

@@ -9,5 +9,5 @@ pub mod prop;
 pub mod rng;
 
 pub use hash::{fnv1a_64, ContentHash, Fnv64};
-pub use json::Json;
+pub use json::{f64_from_bits_json, f64_to_bits_json, u64_from_str_json, u64_to_str_json, Json};
 pub use rng::Rng;

@@ -48,7 +48,8 @@ pub fn random_dfg(rng: &mut Rng, spec: &WorkloadSpec) -> Module {
                 let i = rng.range(0, open_outputs.len());
                 ins.push(open_outputs.swap_remove(i));
             } else {
-                let pt = if rng.chance(spec.small_p) { ParamType::Small } else { ParamType::Stream };
+                let pt =
+                    if rng.chance(spec.small_p) { ParamType::Small } else { ParamType::Stream };
                 let w = *rng.pick(&spec.widths);
                 ins.push(b.channel(w, pt, spec.depth));
             }

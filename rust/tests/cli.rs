@@ -139,7 +139,11 @@ fn custom_platform_json_accepted() {
 fn bad_ir_is_rejected_with_location() {
     let dir = tmpdir("bad");
     let path = dir.join("bad.mlir");
-    std::fs::write(&path, "%0 = \"olympus.make_channel\"() {depth = } : () -> (!olympus.channel<i32>)").unwrap();
+    std::fs::write(
+        &path,
+        "%0 = \"olympus.make_channel\"() {depth = } : () -> (!olympus.channel<i32>)",
+    )
+    .unwrap();
     let out = olympus().args(["opt", path.to_str().unwrap()]).output().unwrap();
     assert!(!out.status.success());
     let s = String::from_utf8_lossy(&out.stderr);

@@ -89,10 +89,9 @@ fn check_vecadd_numerics(pipeline: Option<&str>) {
         if let Some(suffix) = n.strip_prefix("ch2") {
             let a = &buffers[&format!("ch0{suffix}")];
             let b = &buffers[&format!("ch1{suffix}")];
-            let got = out
-                .outputs
-                .get(n)
-                .unwrap_or_else(|| panic!("no output '{n}' ({pipeline:?}); have {:?}", out.outputs.keys()));
+            let got = out.outputs.get(n).unwrap_or_else(|| {
+                panic!("no output '{n}' ({pipeline:?}); have {:?}", out.outputs.keys())
+            });
             assert_eq!(got.len(), 1024, "{n} ({pipeline:?})");
             for i in 0..1024 {
                 let want = a[i] + b[i];

@@ -77,8 +77,9 @@ fn jacobi2d_64_matches_oracle() {
     // interior is the 5-point average
     for i in 1..n - 1 {
         for j in 1..n - 1 {
-            let want =
-                0.25 * (g[(i - 1) * n + j] + g[(i + 1) * n + j] + g[i * n + j - 1] + g[i * n + j + 1]);
+            let neighbors =
+                g[(i - 1) * n + j] + g[(i + 1) * n + j] + g[i * n + j - 1] + g[i * n + j + 1];
+            let want = 0.25 * neighbors;
             assert!((o[i * n + j] - want).abs() < 1e-5, "mismatch at ({i},{j})");
         }
     }

@@ -17,6 +17,7 @@ fn opts(driver: DriverKind, factors: &[u64], objective: DseObjective) -> DseOpti
         threads: 2,
         cache: None,
         driver,
+        remote: None,
     }
 }
 

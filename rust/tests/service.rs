@@ -370,6 +370,185 @@ fn oversized_request_is_rejected_with_protocol_error() {
     server.shutdown();
 }
 
+/// Satellite: protocol-handshake robustness. Malformed worker
+/// registrations, protocol-version mismatches and truncated shard maps
+/// must produce structured errors — never a dropped connection or a panic.
+#[test]
+fn handshake_validates_version_and_shard_map() {
+    use olympus::service::PROTO_VERSION;
+    let server = Server::bind("127.0.0.1:0", ServeOptions::default()).unwrap();
+    let mut c = Client::connect(server.addr());
+
+    // well-formed handshake: ok + echoed version + shard assignment
+    let v = c.call_raw(&format!(
+        r#"{{"cmd": "handshake", "proto_version": {PROTO_VERSION}, "shard_map": {{"index": 1, "total": 2, "workers": ["a:1", "b:2"]}}}}"#
+    ));
+    assert_eq!(v.get("ok"), &Json::Bool(true), "{v}");
+    assert_eq!(v.get("result").get("proto_version").as_u64(), Some(PROTO_VERSION));
+    assert_eq!(v.get("result").get("shard").get("index").as_u64(), Some(1));
+    // cache-stats echoes the assignment back
+    let stats = c.call(vec![("cmd", "cache-stats".into())]);
+    assert_eq!(stats.get("result").get("shard").get("total").as_u64(), Some(2), "{stats}");
+
+    // protocol-version mismatch is its own structured code
+    let v = c.call_raw(&format!(
+        r#"{{"cmd": "handshake", "proto_version": {}, "shard_map": {{"index": 0, "total": 1}}}}"#,
+        PROTO_VERSION + 1
+    ));
+    assert_eq!(v.get("error").get("code").as_str(), Some("proto-mismatch"), "{v}");
+
+    // missing proto_version / missing shard_map
+    let v = c.call_raw(r#"{"cmd": "handshake"}"#);
+    assert_eq!(v.get("error").get("code").as_str(), Some("bad-request"), "{v}");
+    let v = c.call_raw(&format!(r#"{{"cmd": "handshake", "proto_version": {PROTO_VERSION}}}"#));
+    assert_eq!(v.get("error").get("code").as_str(), Some("bad-request"), "{v}");
+
+    // malformed shard maps: wrong type, index out of range, zero total,
+    // truncated workers list, non-string workers, type-confused index
+    for bad in [
+        r#""not an object""#,
+        r#"{"index": 2, "total": 2}"#,
+        r#"{"index": 0, "total": 0}"#,
+        r#"{"index": 0, "total": 3, "workers": ["a:1"]}"#,
+        r#"{"index": 0, "total": 1, "workers": [42]}"#,
+        r#"{"index": "x", "total": 2}"#,
+    ] {
+        let v = c.call_raw(&format!(
+            r#"{{"cmd": "handshake", "proto_version": {PROTO_VERSION}, "shard_map": {bad}}}"#
+        ));
+        assert_eq!(v.get("ok"), &Json::Bool(false), "shard_map {bad} must fail: {v}");
+        assert_eq!(v.get("error").get("code").as_str(), Some("bad-request"), "{bad}: {v}");
+    }
+
+    // a handshake line truncated mid-JSON is a structured bad-json
+    let v = c.call_raw(r#"{"cmd": "handshake", "proto_version": 1, "shard_map": {"index"#);
+    assert_eq!(v.get("error").get("code").as_str(), Some("bad-json"), "{v}");
+
+    // ...and the same connection still serves requests after all of it
+    let v = c.call(vec![("cmd", "ping".into()), ("id", "post-handshake".into())]);
+    assert_eq!(v.get("ok"), &Json::Bool(true));
+    assert_eq!(v.get("id").as_str(), Some("post-handshake"));
+    server.shutdown();
+}
+
+/// The worker-side evaluation verb: outcomes decode bit-identically to a
+/// local evaluation, repeats answer from the worker's cache, and a routed
+/// key the worker disagrees with is refused structured.
+#[test]
+fn eval_candidate_serves_bit_identical_outcomes_and_checks_keys() {
+    use olympus::passes::{
+        evaluate_candidate, outcome_from_json, outcome_to_json, parse_pipeline, CandidateOutcome,
+        PassContext,
+    };
+    let server = Server::bind("127.0.0.1:0", ServeOptions::default()).unwrap();
+    let mut c = Client::connect(server.addr());
+    let plat = builtin("u280").unwrap();
+    let pipeline = "sanitize, iris, channel-reassign";
+    let fields = |key: Option<&str>| {
+        let mut f: Vec<(&str, Json)> = vec![
+            ("cmd", "eval-candidate".into()),
+            ("ir", DESIGN.into()),
+            ("platform_json", plat.to_json()),
+            ("objective_json", olympus::passes::objective_to_json(&DseObjective::Analytic)),
+            ("point_label", "iris".into()),
+            ("point_pipeline", pipeline.into()),
+        ];
+        if let Some(k) = key {
+            f.push(("key", k.into()));
+        }
+        f
+    };
+
+    let cold = c.call(fields(None));
+    assert_eq!(cold.get("ok"), &Json::Bool(true), "{cold}");
+    assert_eq!(cold.get("cached"), &Json::Bool(false));
+    assert!(outcome_from_json(cold.get("result")).is_some(), "decodable outcome: {cold}");
+
+    // the served payload is byte-identical to evaluating locally
+    let m = parse_module(DESIGN).unwrap();
+    let mut opt = m.clone();
+    let mut ctx = PassContext::new(plat.clone());
+    parse_pipeline(pipeline, &mut ctx).unwrap().run(&mut opt, &ctx).unwrap();
+    let cand = evaluate_candidate(
+        &opt,
+        &plat,
+        &DseObjective::Analytic,
+        "iris".to_string(),
+        pipeline.to_string(),
+    );
+    let local = outcome_to_json(&CandidateOutcome::Evaluated { cand, module: opt });
+    assert_eq!(cold.get("result"), &local, "worker outcome == local evaluation");
+
+    // a repeat with the server-derived key is a cache hit, same payload
+    let warm = c.call(fields(cold.get("key").as_str()));
+    assert_eq!(warm.get("cached"), &Json::Bool(true), "{warm}");
+    assert_eq!(warm.get("result"), cold.get("result"));
+    assert_eq!(server.state().stats().1.misses, 1, "one candidate evaluation total");
+
+    // a key this worker does not derive is refused, never mis-cached
+    let bad = c.call(fields(Some("00000000000000000000000000000000")));
+    assert_eq!(bad.get("ok"), &Json::Bool(false), "{bad}");
+    assert_eq!(bad.get("error").get("code").as_str(), Some("key-mismatch"));
+    server.shutdown();
+}
+
+/// Acceptance: a DSE request served by a coordinator with two remote
+/// workers returns bytes identical to the same request served
+/// single-process (cold and warm), and killing a worker mid-fleet degrades
+/// to local evaluation without changing the answer.
+#[test]
+fn distributed_dse_is_bit_identical_and_fails_over() {
+    let w1 = Server::bind("127.0.0.1:0", ServeOptions::default()).unwrap();
+    let w2 = Server::bind("127.0.0.1:0", ServeOptions::default()).unwrap();
+    let coord = Server::bind(
+        "127.0.0.1:0",
+        ServeOptions {
+            remote_workers: vec![w1.addr().to_string(), w2.addr().to_string()],
+            ..ServeOptions::default()
+        },
+    )
+    .unwrap();
+    let single = Server::bind("127.0.0.1:0", ServeOptions::default()).unwrap();
+    let mut cs = Client::connect(single.addr());
+    let mut cc = Client::connect(coord.addr());
+
+    // cold: every candidate evaluates, routed across the two shards
+    let cold_single = cs.call(dse_request(21, &[2, 4]));
+    let cold_dist = cc.call(dse_request(21, &[2, 4]));
+    assert_eq!(cold_single.get("ok"), &Json::Bool(true), "{cold_single}");
+    assert_eq!(cold_dist.get("result"), cold_single.get("result"), "cold distributed == single");
+    assert_eq!(cold_dist.get("key"), cold_single.get("key"));
+
+    // warm: the coordinator's response cache answers, still identical
+    let warm_dist = cc.call(dse_request(21, &[2, 4]));
+    assert_eq!(warm_dist.get("cached"), &Json::Bool(true));
+    assert_eq!(warm_dist.get("result"), cold_single.get("result"), "warm distributed == single");
+
+    // the evaluations really went remote, and both shards saw work
+    let stats = cc.call(vec![("cmd", "cache-stats".into())]);
+    let remote = stats.get("result").get("remote");
+    assert_eq!(remote.get("workers").as_usize(), Some(2), "{stats}");
+    assert!(remote.get("remote_evals").as_u64().unwrap() >= 1, "{stats}");
+    assert_eq!(remote.get("remote_failovers").as_u64(), Some(0), "{stats}");
+    let (w1_miss, w2_miss) = (w1.state().stats().1.misses, w2.state().stats().1.misses);
+    assert!(w1_miss + w2_miss >= 1, "workers computed candidates: {w1_miss}/{w2_miss}");
+
+    // kill one worker: a fresh request fails over to local evaluation and
+    // the answer still matches the single-process run bit-for-bit
+    w2.shutdown();
+    let ref2 = cs.call(dse_request(22, &[2, 4]));
+    let dist2 = cc.call(dse_request(22, &[2, 4]));
+    assert_eq!(dist2.get("ok"), &Json::Bool(true), "{dist2}");
+    assert_eq!(dist2.get("result"), ref2.get("result"), "failover must not change the answer");
+    let stats = cc.call(vec![("cmd", "cache-stats".into())]);
+    let remote = stats.get("result").get("remote");
+    assert!(remote.get("remote_failovers").as_u64().unwrap() >= 1, "{stats}");
+
+    coord.shutdown();
+    single.shutdown();
+    w1.shutdown();
+}
+
 #[test]
 fn shutdown_request_stops_the_server() {
     let server = Server::bind("127.0.0.1:0", ServeOptions::default()).unwrap();

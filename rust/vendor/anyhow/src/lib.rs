@@ -1,0 +1,257 @@
+//! Vendored minimal subset of the `anyhow` error-handling API.
+//!
+//! Olympus builds offline and reproducibly: the workspace checks in a
+//! `Cargo.lock` and CI builds with `--locked`, which a registry dependency
+//! would tie to whatever crates.io snapshot the build host happens to carry.
+//! This crate replaces the one remaining external dependency with the exact
+//! slice of the `anyhow` API the tree uses (the same move PR 2 made for
+//! `thiserror`):
+//!
+//! * [`Error`] — an opaque error value carrying a context chain. `{e}`
+//!   prints the outermost context, `{e:#}` the whole chain joined with
+//!   `": "`, and `{e:?}` a multi-line report — matching the upstream
+//!   renderings the service's `eval-failed` payloads and CLI diagnostics
+//!   rely on.
+//! * [`Result`] — `Result<T, Error>` with the error type defaulted.
+//! * [`Context`] — `.context(...)` / `.with_context(...)` on both
+//!   `Result<T, E: std::error::Error>` (and `Result<T, Error>` itself) and
+//!   `Option<T>`.
+//! * [`anyhow!`] / [`bail!`] — ad-hoc error construction, including inline
+//!   format captures.
+//!
+//! Not carried over (and not used anywhere in the tree): downcasting,
+//! backtraces, `ensure!`, and wrapping arbitrary non-`Display` payloads.
+
+use std::convert::Infallible;
+use std::fmt;
+
+/// `Result<T, Error>` with the error type defaulted, like `anyhow::Result`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// An opaque error: a chain of context strings, outermost first. Built from
+/// any `std::error::Error` (capturing its `source()` chain) or from a
+/// message via [`Error::msg`] / [`anyhow!`].
+pub struct Error {
+    /// `chain[0]` is the outermost context; later entries are causes.
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Error from a plain message (what [`anyhow!`] expands to).
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    /// Wrap this error with an outer context layer.
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The context chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(|s| s.as_str())
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(err: E) -> Error {
+        let mut chain = vec![err.to_string()];
+        let mut source = err.source();
+        while let Some(cause) = source {
+            chain.push(cause.to_string());
+            source = cause.source();
+        }
+        Error { chain }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{e:#}`: the whole chain, `outer: cause: root`
+            f.write_str(&self.chain.join(": "))
+        } else {
+            f.write_str(&self.chain[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.chain[0])?;
+        if self.chain.len() > 1 {
+            f.write_str("\n\nCaused by:")?;
+            if self.chain.len() == 2 {
+                write!(f, "\n    {}", self.chain[1])?;
+            } else {
+                for (i, cause) in self.chain[1..].iter().enumerate() {
+                    write!(f, "\n    {i}: {cause}")?;
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// `.context(...)` / `.with_context(...)` on fallible values.
+pub trait Context<T, E> {
+    /// Attach `context` as the new outermost error layer.
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static;
+
+    /// Like [`Context::context`], evaluating the message lazily (only on
+    /// the error path).
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E> Context<T, E> for Result<T, E>
+where
+    E: Into<Error>,
+{
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        match self {
+            Ok(v) => Ok(v),
+            Err(e) => Err(e.into().context(context)),
+        }
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        match self {
+            Ok(v) => Ok(v),
+            Err(e) => Err(e.into().context(f())),
+        }
+    }
+}
+
+impl<T> Context<T, Infallible> for Option<T> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        match self {
+            Some(v) => Ok(v),
+            None => Err(Error::msg(context)),
+        }
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        match self {
+            Some(v) => Ok(v),
+            None => Err(Error::msg(f())),
+        }
+    }
+}
+
+/// Construct an [`Error`] from a format string (inline captures included)
+/// or any `Display` value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(::std::format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// `return Err(anyhow!(...))`.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "no such file")
+    }
+
+    #[test]
+    fn display_shows_outermost_alternate_shows_chain() {
+        let e: Error = io_err().into();
+        let e = e.context("read journal");
+        assert_eq!(format!("{e}"), "read journal");
+        assert_eq!(format!("{e:#}"), "read journal: no such file");
+    }
+
+    #[test]
+    fn context_works_on_results_options_and_error_results() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("open").unwrap_err();
+        assert_eq!(format!("{e:#}"), "open: no such file");
+
+        let o: Option<u32> = None;
+        let e = o.with_context(|| format!("missing {}", "field")).unwrap_err();
+        assert_eq!(format!("{e}"), "missing field");
+
+        // re-contexting an already-anyhow Result stacks layers
+        let r: Result<()> = Err(anyhow!("inner"));
+        let e = r.context("outer").unwrap_err();
+        assert_eq!(format!("{e:#}"), "outer: inner");
+    }
+
+    #[test]
+    fn macros_build_errors_from_literals_formats_and_values() {
+        let path = "a.mlir";
+        assert_eq!(format!("{}", anyhow!("{path}: bad")), "a.mlir: bad");
+        assert_eq!(format!("{}", anyhow!("{}: bad", path)), "a.mlir: bad");
+        assert_eq!(format!("{}", anyhow!(String::from("plain"))), "plain");
+        assert_eq!(format!("{}", anyhow!("unclosed '{{'")), "unclosed '{'");
+
+        fn fails() -> Result<()> {
+            bail!("nope {}", 7);
+        }
+        assert_eq!(format!("{}", fails().unwrap_err()), "nope 7");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors_and_keeps_sources() {
+        #[derive(Debug)]
+        struct Outer;
+        impl fmt::Display for Outer {
+            fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+                f.write_str("outer failed")
+            }
+        }
+        impl std::error::Error for Outer {
+            fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+                // a 'static leaked source keeps the test dependency-free
+                Some(Box::leak(Box::new(io_err())))
+            }
+        }
+        fn fails() -> Result<()> {
+            Err(Outer)?;
+            Ok(())
+        }
+        let e = fails().unwrap_err();
+        assert_eq!(format!("{e:#}"), "outer failed: no such file");
+        let debug = format!("{e:?}");
+        assert!(debug.contains("Caused by:"), "{debug}");
+    }
+}
