@@ -4,7 +4,7 @@
 # `make artifacts` re-lowers the JAX/Pallas kernels to HLO text for the
 # opt-in `pjrt` cargo feature (requires a python env with jax installed).
 
-.PHONY: build test bench artifacts fmt
+.PHONY: build test bench bench-snapshot artifacts fmt
 
 build:
 	cargo build --release
@@ -16,6 +16,12 @@ bench:
 	for b in rust/benches/bench_*.rs; do \
 	  cargo bench --bench $$(basename $$b .rs); \
 	done
+
+# Refresh the checked-in perf trajectory (BENCH_DES.json): DES events/sec,
+# cold/warm DSE wall, and 0-vs-2-worker serve latency. Commit the updated
+# snapshot alongside perf-relevant changes.
+bench-snapshot:
+	BENCH_SNAPSHOT_OUT=$(CURDIR)/BENCH_DES.json cargo bench --bench bench_snapshot
 
 artifacts:
 	cd python && python -m compile.aot --out-dir ../rust/artifacts

@@ -1,0 +1,136 @@
+//! §Perf trajectory (ROADMAP open item 3): the numbers `make
+//! bench-snapshot` records into the checked-in `BENCH_DES.json`.
+//!
+//! Four tracked figures:
+//!
+//! * DES replay throughput (events/sec) on a generated workload;
+//! * cold DSE wall time (fresh candidate memo every run);
+//! * warm DSE wall time (memo pre-filled — the warm-start path);
+//! * served request latency, single-process vs a 2-worker fleet.
+//!
+//! The binary prints the usual benchkit table, then serializes the samples
+//! to `$BENCH_SNAPSHOT_OUT` (default `BENCH_DES.json` in the working
+//! directory). Snapshots are compared by eye / scripts across commits, so
+//! the JSON schema is versioned and append-friendly.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::SocketAddr;
+use std::sync::Arc;
+use std::time::Instant;
+
+use olympus::coordinator::run_flow;
+use olympus::des::{simulate, DesConfig, WorkloadScenario};
+use olympus::dialect::build::fig4a_module;
+use olympus::ir::print_module;
+use olympus::passes::{run_dse_with, CandidateCache, DseOptions};
+use olympus::platform::builtin;
+use olympus::service::{ServeOptions, Server};
+use olympus::util::benchkit::Bench;
+use olympus::util::{Json, Rng};
+use olympus::workload::{random_dfg, WorkloadSpec};
+
+/// One request line -> one response line against an in-process server.
+fn roundtrip(addr: SocketAddr, line: &str) -> String {
+    let mut s = std::net::TcpStream::connect(addr).expect("connect");
+    s.write_all(line.as_bytes()).unwrap();
+    s.write_all(b"\n").unwrap();
+    s.flush().unwrap();
+    let mut r = String::new();
+    BufReader::new(s).read_line(&mut r).expect("read response");
+    r
+}
+
+fn main() {
+    let mut b = Bench::new("des_snapshot");
+    let plat = builtin("u280").unwrap();
+
+    // ---- DES replay throughput ------------------------------------------
+    let replay = {
+        let mut rng = Rng::new(8);
+        let spec = WorkloadSpec { kernels: 8, small_p: 0.0, ..Default::default() };
+        let m = random_dfg(&mut rng, &spec);
+        run_flow(m, &plat, Some("sanitize, channel-reassign")).expect("flow")
+    };
+    let scenario = WorkloadScenario::closed_loop(4);
+    let dcfg = DesConfig { utilization: replay.resources.utilization, ..DesConfig::default() };
+    b.bench_with_throughput("des_replay_8_kernels_4_jobs", || {
+        let t0 = Instant::now();
+        let rep = simulate(&replay.arch, &scenario, &dcfg).expect("simulate");
+        let secs = t0.elapsed().as_secs_f64();
+        Some((rep.events as f64 / secs, "events/s".to_string()))
+    });
+
+    // ---- cold vs warm DSE wall ------------------------------------------
+    let m = {
+        let mut rng = Rng::new(3);
+        random_dfg(&mut rng, &WorkloadSpec { kernels: 6, small_p: 0.0, ..Default::default() })
+    };
+    let opts_with = |cache: Arc<CandidateCache>| DseOptions {
+        factors: vec![2, 4],
+        cache: Some(cache),
+        ..DseOptions::default()
+    };
+    b.bench("dse_cold_wall", || {
+        // a fresh memo every iteration: every candidate is computed
+        run_dse_with(&m, &plat, &opts_with(Arc::new(CandidateCache::new()))).expect("dse")
+    });
+    let warm = Arc::new(CandidateCache::new());
+    run_dse_with(&m, &plat, &opts_with(warm.clone())).expect("warm fill");
+    b.bench("dse_warm_wall", || {
+        // the shared memo answers everything: measures the warm-start floor
+        run_dse_with(&m, &plat, &opts_with(warm.clone())).expect("dse")
+    });
+
+    // ---- served request latency: single-process vs 2-worker fleet -------
+    let ir = print_module(&fig4a_module());
+    let req = Json::obj(vec![("cmd", "dse".into()), ("ir", ir.as_str().into())]).to_string();
+    let solo = Server::bind("127.0.0.1:0", ServeOptions::default()).expect("solo server");
+    roundtrip(solo.addr(), &req); // prime the response cache
+    b.bench("serve_roundtrip_0_workers", || roundtrip(solo.addr(), &req));
+    solo.shutdown();
+
+    let w1 = Server::bind("127.0.0.1:0", ServeOptions::default()).expect("worker 1");
+    let w2 = Server::bind("127.0.0.1:0", ServeOptions::default()).expect("worker 2");
+    let coord = Server::bind(
+        "127.0.0.1:0",
+        ServeOptions {
+            remote_workers: vec![w1.addr().to_string(), w2.addr().to_string()],
+            ..ServeOptions::default()
+        },
+    )
+    .expect("coordinator");
+    roundtrip(coord.addr(), &req); // prime: candidate evals route to workers
+    b.bench("serve_roundtrip_2_workers", || roundtrip(coord.addr(), &req));
+    coord.shutdown();
+    w1.shutdown();
+    w2.shutdown();
+
+    // ---- serialize the snapshot -----------------------------------------
+    let samples = b.finish();
+    let out =
+        std::env::var("BENCH_SNAPSHOT_OUT").unwrap_or_else(|_| "BENCH_DES.json".to_string());
+    let rows: Vec<Json> = samples
+        .iter()
+        .map(|s| {
+            let mut fields = vec![
+                ("name", s.name.as_str().into()),
+                ("median_ns", s.median_ns.into()),
+                ("p10_ns", s.p10_ns.into()),
+                ("p90_ns", s.p90_ns.into()),
+                ("iters", s.iters.into()),
+            ];
+            if let Some((v, unit)) = &s.throughput {
+                fields.push(("throughput", (*v).into()));
+                fields.push(("throughput_unit", unit.as_str().into()));
+            }
+            Json::obj(fields)
+        })
+        .collect();
+    let doc = Json::obj(vec![
+        ("schema", "olympus-bench-snapshot-v1".into()),
+        ("bench", "des_snapshot".into()),
+        ("samples", Json::Arr(rows)),
+    ]);
+    std::fs::write(&out, format!("{doc}\n")).expect("write snapshot");
+    println!("wrote {out}");
+}

@@ -1,16 +1,17 @@
 //! End-to-end flow (paper Fig 3).
 
-use std::path::Path;
+use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
 use anyhow::Result;
 
 use crate::analysis::{analyze_bandwidth, analyze_resources, BandwidthReport, Dfg, ResourceReport};
-use crate::des::{simulate, DesConfig, DesReport, WorkloadScenario};
+use crate::des::{simulate_traced, DesConfig, DesReport, WorkloadScenario};
 use crate::ir::{module_fingerprint, Module};
 use crate::lower::{
     build_architecture, emit_host_driver, emit_verilog, emit_vitis_cfg, Architecture,
 };
+use crate::obs::TraceSink;
 use crate::passes::manager::{parse_pipeline, PassContext, PassRecord};
 use crate::passes::{run_dse_with, CandidateCache, DseObjective, DseOptions, DseReport as DseTable};
 use crate::platform::PlatformSpec;
@@ -50,6 +51,12 @@ pub struct Flow {
     /// pool only moves where a deterministic evaluation runs, never what
     /// it produces.
     pub remote: Option<Arc<WorkerPool>>,
+    /// Export the DES replay's timeline as Chrome trace-event JSON to this
+    /// path (`olympus des --trace FILE`). Pure observability — the sink
+    /// watches state transitions the engine performs anyway — so it is
+    /// deliberately *not* part of [`Flow::cache_key`] and cannot perturb
+    /// any result. Ignored when no scenario is configured.
+    pub trace_path: Option<PathBuf>,
 }
 
 /// Everything the flow produces (the purple boxes of Fig 3).
@@ -89,6 +96,7 @@ impl Flow {
             jobs: 0,
             cache: None,
             remote: None,
+            trace_path: None,
         }
     }
 
@@ -127,6 +135,14 @@ impl Flow {
     /// without workers; only latency and *where* the evaluation runs change.
     pub fn with_remote(mut self, pool: Arc<WorkerPool>) -> Self {
         self.remote = Some(pool);
+        self
+    }
+
+    /// Write the DES replay's timeline to `path` as Chrome trace-event JSON
+    /// (viewable in Perfetto / `chrome://tracing`). Zero-perturbation: the
+    /// simulated results are bit-identical with or without the trace.
+    pub fn with_trace(mut self, path: &Path) -> Self {
+        self.trace_path = Some(path.to_path_buf());
         self
     }
 
@@ -215,7 +231,19 @@ impl Flow {
             Some(sc) => {
                 let mut dcfg = self.des_config.clone();
                 dcfg.utilization = resources.utilization;
-                Some(simulate(&arch, sc, &dcfg)?)
+                let mut sink = self.trace_path.as_deref().map(|_| TraceSink::new());
+                let report = simulate_traced(&arch, sc, &dcfg, sink.as_mut())?;
+                if let (Some(path), Some(sink)) = (self.trace_path.as_deref(), &sink) {
+                    sink.write_to(path)?;
+                    crate::obs::info(
+                        "des-trace-written",
+                        &[
+                            ("path", path.display().to_string().into()),
+                            ("events", sink.len().into()),
+                        ],
+                    );
+                }
+                Some(report)
             }
             None => None,
         };

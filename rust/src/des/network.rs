@@ -18,6 +18,7 @@ use anyhow::{bail, Result};
 use std::collections::VecDeque;
 
 use crate::lower::Architecture;
+use crate::obs::TraceSink;
 use crate::sim::TimingModel;
 use crate::util::{
     f64_from_bits_json, f64_to_bits_json, u64_from_str_json, u64_to_str_json, Json, Rng,
@@ -274,6 +275,9 @@ struct Engine<'a> {
     /// Service draws for stochastic distributions (decorrelated from the
     /// arrival stream so scenario and service noise are independent).
     service_rng: Rng,
+    /// Optional Chrome-trace observer. Zero-perturbation: hooks only read
+    /// state the engine computed anyway and never feed anything back.
+    trace: Option<&'a mut TraceSink>,
 }
 
 /// Simulate `arch` under `scenario`. The report is a pure function of the
@@ -283,8 +287,19 @@ pub fn simulate(
     scenario: &WorkloadScenario,
     cfg: &DesConfig,
 ) -> Result<DesReport> {
+    simulate_traced(arch, scenario, cfg, None)
+}
+
+/// [`simulate`] with an optional Chrome-trace observer (`olympus des
+/// --trace`). The report is bit-identical with or without the sink.
+pub fn simulate_traced(
+    arch: &Architecture,
+    scenario: &WorkloadScenario,
+    cfg: &DesConfig,
+    trace: Option<&mut TraceSink>,
+) -> Result<DesReport> {
     let net = build_network(arch)?;
-    simulate_network(&net, scenario, cfg)
+    simulate_network_traced(&net, scenario, cfg, trace)
 }
 
 /// Simulate a pre-built network (lets DSE reuse one build).
@@ -292,6 +307,16 @@ pub fn simulate_network(
     net: &DesNet,
     scenario: &WorkloadScenario,
     cfg: &DesConfig,
+) -> Result<DesReport> {
+    simulate_network_traced(net, scenario, cfg, None)
+}
+
+/// [`simulate_network`] with an optional trace observer.
+pub fn simulate_network_traced(
+    net: &DesNet,
+    scenario: &WorkloadScenario,
+    cfg: &DesConfig,
+    trace: Option<&mut TraceSink>,
 ) -> Result<DesReport> {
     // replica-aware job striping (no-op for replica-free nets)
     let striped_net;
@@ -371,12 +396,25 @@ pub fn simulate_network(
         last_completion: None,
         write_quota,
         service_rng: Rng::new(cfg.seed.rotate_left(17) ^ 0xD15E_A5ED_5EED_C0DE),
+        trace,
     };
+
+    // Name the trace lanes up front (tid 0 is the counter-track lane).
+    if let Some(t) = eng.trace.as_deref_mut() {
+        t.thread_name(0, "fifo depths");
+        for (ci, cu) in net.cus.iter().enumerate() {
+            t.thread_name(1 + ci as u64, &format!("cu {}", cu.name));
+        }
+        for (mi, m) in net.movers.iter().enumerate() {
+            t.thread_name((1 + net.cus.len() + mi) as u64, &format!("mover {}", m.name));
+        }
+    }
 
     for (j, t) in eng.arrivals.clone().iter().enumerate() {
         eng.cal.push(*t, Ev::Arrival { job: j as u64 });
     }
 
+    let wall_start = std::time::Instant::now();
     while let Some((now, ev)) = eng.cal.pop() {
         if eng.cal.dispatched() > cfg.max_events {
             bail!(
@@ -398,6 +436,7 @@ pub fn simulate_network(
             }
         }
     }
+    crate::obs::metrics().record_des_run(eng.cal.dispatched(), wall_start.elapsed());
 
     Ok(eng.finish(scenario))
 }
@@ -510,6 +549,11 @@ impl<'a> Engine<'a> {
         m.remaining_beats = beats.max(0.0);
         m.started = now;
         m.busy.set(now, 1);
+        let net = self.net;
+        let tid = (1 + net.cus.len() + mi) as u64;
+        if let Some(t) = self.trace.as_deref_mut() {
+            t.begin(tid, &net.movers[mi].name, now.ps());
+        }
         let pc = self.net.movers[mi].pc;
         self.pc_advance(pc, now);
         self.pcs[pc].active.push(mi);
@@ -523,6 +567,10 @@ impl<'a> Engine<'a> {
             m.busy.set(now, 0);
             m.sojourns.push((now - m.started).as_secs_f64());
             m.chunks_done += 1;
+        }
+        let tid = (1 + self.net.cus.len() + mi) as u64;
+        if let Some(t) = self.trace.as_deref_mut() {
+            t.end(tid, now.ps());
         }
         let mv = &self.net.movers[mi];
         let fl = &mv.flows[chunk.flow];
@@ -607,6 +655,10 @@ impl<'a> Engine<'a> {
         q.enq.push_back((now, n));
         let d = q.occ;
         q.depth.set(now, d);
+        let net = self.net;
+        if let Some(t) = self.trace.as_deref_mut() {
+            t.counter(&net.fifos[f].name, now.ps(), "elems", d);
+        }
     }
 
     fn dequeue_elems(&mut self, f: usize, n: u64, now: TimePoint) {
@@ -628,6 +680,10 @@ impl<'a> Engine<'a> {
             }
         }
         q.chunks_out += 1;
+        let net = self.net;
+        if let Some(t) = self.trace.as_deref_mut() {
+            t.counter(&net.fifos[f].name, now.ps(), "elems", d);
+        }
     }
 
     fn wake_consumers(&mut self, f: usize, now: TimePoint) {
@@ -706,6 +762,10 @@ impl<'a> Engine<'a> {
         let epoch = cu.epoch;
         let span = TimeSpan::from_ps((service_ps.ceil() as u64).max(1));
         self.cal.push(now + span, Ev::CuDone { cu: ci, epoch });
+        let net = self.net;
+        if let Some(t) = self.trace.as_deref_mut() {
+            t.begin(1 + ci as u64, &net.cus[ci].name, now.ps());
+        }
         // freed input space: upstream movers may now resume
         for k in 0..self.net.cus[ci].in_fifos.len() {
             let f = self.net.cus[ci].in_fifos[k];
@@ -722,6 +782,9 @@ impl<'a> Engine<'a> {
             cu.busy_track.set(now, 0);
             cu.sojourns.push((now - cu.started).as_secs_f64());
             cu.firings += 1;
+        }
+        if let Some(t) = self.trace.as_deref_mut() {
+            t.end(1 + ci as u64, now.ps());
         }
         for k in 0..self.net.cus[ci].out_fifos.len() {
             let f = self.net.cus[ci].out_fifos[k];

@@ -29,7 +29,12 @@
 //!   journal tiers), and distributed evaluation — `olympus worker` daemons
 //!   each own a rendezvous-hash shard of the candidate key space and a
 //!   coordinator (`serve --workers`) routes evaluations to shard owners
-//!   with local failover ([`service::remote`]).
+//!   with local failover ([`service::remote`]);
+//! * observability ([`obs`]): a leveled structured JSON logger, a
+//!   process-wide metrics registry (latency histograms, per-verb counters,
+//!   DES throughput) behind the `metrics` proto verb / `olympus stats`, and
+//!   Chrome-trace export of DES timelines (`olympus des --trace`) — all
+//!   zero-perturbation: results are bit-identical with it on or off.
 //!
 //! See `DESIGN.md` for the paper → module map.
 
@@ -42,6 +47,7 @@ pub mod ir;
 pub mod iris;
 pub mod lower;
 pub mod mnemosyne;
+pub mod obs;
 pub mod passes;
 pub mod platform;
 pub mod runtime;

@@ -7,7 +7,7 @@
 //!               [--driver exhaustive|random|successive-halving|iterative]
 //!               [--budget N] [--search-seed N] [--cache-dir DIR]
 //! olympus des   <file.mlir> [--platform u280] [--pipeline ...] [--scenario SPEC] [--seed N]
-//!               [--cache-dir DIR]
+//!               [--cache-dir DIR] [--trace trace.json]
 //! olympus lower <file.mlir> [--platform u280] [--pipeline ...] [--out DIR]
 //! olympus run   <file.mlir> [--platform u280] [--pipeline ...] [--artifacts DIR] [--seed N]
 //! olympus serve [--addr 127.0.0.1:7878] [--jobs N] [--cache-capacity N] [--cache-dir DIR]
@@ -15,7 +15,13 @@
 //! olympus worker [--addr 127.0.0.1:7900] [--jobs N] [--cache-capacity N] [--cache-dir DIR]
 //! olympus submit <file.mlir> [--addr ...] [--cmd dse|des|flow] [--platform ...] [...]
 //! olympus cache-stats [--addr ...]
+//! olympus stats [host:port] [--raw]
 //! ```
+//!
+//! Every subcommand accepts `--log-level off|error|warn|info|debug`
+//! (default `info`, or the `OLYMPUS_LOG` env var): structured JSON event
+//! lines on stderr. Logging is pure observability — results are
+//! bit-identical at every level.
 //!
 //! `des` replays the lowered design through the discrete-event queueing
 //! simulator. `--scenario` specs: `closed:<jobs>`, `poisson:<hz>:<jobs>`,
@@ -30,6 +36,12 @@
 //! `--cache-dir` persists the evaluation caches to disk: a restarted
 //! daemon (and repeated single-shot `dse`/`des` runs) answers previously
 //! evaluated work from the journal instead of recomputing it.
+//!
+//! `stats` queries a daemon's `metrics` verb and renders one fleet-wide
+//! table: the coordinator plus every remote worker it is configured with
+//! (`--raw` prints the aggregated JSON instead, for scripts and CI).
+//! `des --trace FILE` additionally exports the DES timeline as Chrome
+//! trace-event JSON, viewable in Perfetto — see README "Observability".
 //!
 //! `worker` runs a remote evaluation daemon, and `serve --workers` turns a
 //! daemon into the coordinator of that fleet: each DSE candidate
@@ -111,13 +123,14 @@ fn load_module(path: &str) -> Result<Module> {
 
 fn usage() -> ! {
     eprintln!(
-        "usage: olympus <platforms|opt|dse|des|lower|run|serve|worker|submit|cache-stats> \
+        "usage: olympus <platforms|opt|dse|des|lower|run|serve|worker|submit|cache-stats|stats> \
          [input.mlir] [--platform NAME|file.json] [--pipeline P] \
          [--objective analytic|des-score] \
          [--driver exhaustive|random|successive-halving|iterative] [--budget N] \
          [--search-seed N] [--scenario closed:N|poisson:HZ:N|bursty:HZ:ON:OFF:N] [--out DIR] \
          [--artifacts DIR] [--seed N] [--jobs N] [--addr HOST:PORT] [--factors 2,4] \
-         [--cache-dir DIR] [--workers HOST:PORT,...]"
+         [--cache-dir DIR] [--workers HOST:PORT,...] [--trace FILE] \
+         [--log-level off|error|warn|info|debug]"
     );
     std::process::exit(2)
 }
@@ -213,6 +226,12 @@ fn main() -> Result<()> {
     }
     let cmd = argv[0].clone();
     let args = parse_args(&argv[1..]);
+    if let Some(spec) = args.flags.get("log-level") {
+        match olympus::obs::Level::parse(spec) {
+            Some(l) => olympus::obs::set_level(l),
+            None => bail!("--log-level wants off|error|warn|info|debug, got '{spec}'"),
+        }
+    }
     match cmd.as_str() {
         "platforms" => {
             for n in builtin_names() {
@@ -235,11 +254,15 @@ fn main() -> Result<()> {
             let pipeline = args.flags.get("pipeline").map(|s| s.as_str());
             let r = run_flow(m, &plat, pipeline)?;
             for rec in &r.records {
-                eprintln!(
-                    "[{}] {}{}",
-                    rec.name,
-                    if rec.changed { "changed" } else { "no-op" },
-                    rec.remarks.iter().map(|s| format!("; {s}")).collect::<String>()
+                let remarks: Vec<Json> =
+                    rec.remarks.iter().map(|m| m.as_str().into()).collect();
+                olympus::obs::info(
+                    "pass",
+                    &[
+                        ("name", rec.name.into()),
+                        ("changed", rec.changed.into()),
+                        ("remarks", Json::Arr(remarks)),
+                    ],
                 );
             }
             print!("{}", print_module(&r.module));
@@ -333,6 +356,9 @@ fn main() -> Result<()> {
                         flow = flow.with_cache_dir(Path::new(dir))?;
                     }
                 }
+            }
+            if let Some(f) = args.flags.get("trace") {
+                flow = flow.with_trace(Path::new(f));
             }
             let r = flow.run(m, "app")?;
             if let Some(dse) = &r.dse {
@@ -528,7 +554,7 @@ fn main() -> Result<()> {
                 println!("{result}");
             }
             if v.get("cached") == &Json::Bool(true) {
-                eprintln!("(served from cache, key {})", v.get("key"));
+                olympus::obs::info("served-from-cache", &[("key", v.get("key").clone())]);
             }
             Ok(())
         }
@@ -538,15 +564,25 @@ fn main() -> Result<()> {
             println!("{}", v.get("result"));
             Ok(())
         }
+        "stats" => {
+            reject_search_flags(&args, "by 'stats'")?;
+            run_stats(&args)
+        }
         _ => usage(),
     }
 }
 
-/// Send one request line to the service and parse the response, failing
-/// loudly on protocol-level errors.
+/// Send one request line to the service named by `--addr` (default
+/// coordinator port) and parse the response.
 fn roundtrip(args: &Args, request: Json) -> Result<Json> {
-    use std::io::{BufRead, BufReader, Write};
     let addr = args.flags.get("addr").map(|s| s.as_str()).unwrap_or("127.0.0.1:7878");
+    roundtrip_addr(addr, request)
+}
+
+/// Send one request line to the service at `addr` and parse the response,
+/// failing loudly on protocol-level errors.
+fn roundtrip_addr(addr: &str, request: Json) -> Result<Json> {
+    use std::io::{BufRead, BufReader, Write};
     let mut stream = std::net::TcpStream::connect(addr)
         .with_context(|| format!("connect to olympus-serve at {addr}"))?;
     stream.write_all(request.to_string().as_bytes())?;
@@ -564,4 +600,87 @@ fn roundtrip(args: &Args, request: Json) -> Result<Json> {
         );
     }
     Ok(v)
+}
+
+/// `olympus stats [host:port] [--raw]`: query the coordinator's `metrics`
+/// verb, fan out to every remote worker it reports, and render one
+/// fleet-wide table (or, with `--raw`, the aggregated JSON for scripts).
+fn run_stats(args: &Args) -> Result<()> {
+    let addr = args
+        .positional
+        .first()
+        .cloned()
+        .or_else(|| args.flags.get("addr").cloned())
+        .unwrap_or_else(|| "127.0.0.1:7878".to_string());
+    let metrics_req = || Json::obj(vec![("cmd", "metrics".into())]);
+    let coord = roundtrip_addr(&addr, metrics_req())?.get("result").clone();
+    let worker_addrs: Vec<String> = coord
+        .get("remote")
+        .get("workers")
+        .as_arr()
+        .map(|ws| ws.iter().filter_map(|w| w.as_str().map(str::to_string)).collect())
+        .unwrap_or_default();
+    // an unreachable worker gets a row, not an error: stats must describe
+    // a degraded fleet, not fail with it
+    let workers: Vec<(String, Option<Json>)> = worker_addrs
+        .iter()
+        .map(|w| {
+            let m = roundtrip_addr(w, metrics_req()).ok().map(|v| v.get("result").clone());
+            (w.clone(), m)
+        })
+        .collect();
+    if args.flags.contains_key("raw") {
+        let rows: Vec<Json> = workers
+            .iter()
+            .map(|(a, m)| {
+                Json::obj(vec![
+                    ("addr", a.as_str().into()),
+                    ("metrics", m.clone().unwrap_or(Json::Null)),
+                ])
+            })
+            .collect();
+        println!("{}", Json::obj(vec![("coordinator", coord), ("workers", Json::Arr(rows))]));
+        return Ok(());
+    }
+    println!(
+        "{:<28} {:>8} {:>7} {:>7} {:>7} {:>7} {:>9} {:>9} {:>9} {:>11}",
+        "node", "uptime_s", "reqs", "local", "remote", "hits", "p50", "p95", "p99", "des ev/s"
+    );
+    print_stats_row(&format!("{addr} (coordinator)"), Some(&coord));
+    for (w, m) in &workers {
+        print_stats_row(w, m.as_ref());
+    }
+    Ok(())
+}
+
+/// One `olympus stats` table row from a node's `metrics` result.
+fn print_stats_row(node: &str, m: Option<&Json>) {
+    use olympus::util::benchkit::fmt_ns;
+    let Some(m) = m else {
+        println!("{node:<28} {:>8}", "unreachable");
+        return;
+    };
+    let uptime_s = m.get("uptime_ms").as_u64().unwrap_or(0) / 1000;
+    let reqs: u64 = m
+        .get("requests")
+        .as_obj()
+        .map(|o| o.values().filter_map(Json::as_u64).sum())
+        .unwrap_or(0);
+    let h = m.get("histograms");
+    let count = |name: &str| h.get(name).get("count").as_u64().unwrap_or(0);
+    let lat = h.get("request_latency");
+    let q = |key: &str| match lat.get(key).as_f64() {
+        Some(ns) if lat.get("count").as_u64().unwrap_or(0) > 0 => fmt_ns(ns),
+        _ => "-".to_string(),
+    };
+    let evs = m.get("des").get("last_events_per_sec").as_f64().unwrap_or(0.0);
+    println!(
+        "{node:<28} {uptime_s:>8} {reqs:>7} {:>7} {:>7} {:>7} {:>9} {:>9} {:>9} {evs:>11.0}",
+        count("eval_local"),
+        count("eval_remote"),
+        count("eval_cache_hit"),
+        q("p50_ns"),
+        q("p95_ns"),
+        q("p99_ns"),
+    );
 }

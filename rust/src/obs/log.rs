@@ -1,0 +1,198 @@
+//! Leveled, structured JSON event logger.
+//!
+//! Every event is one self-contained JSON object on its own stderr line,
+//! written with a single locked `write` so concurrent worker threads can
+//! never tear or interleave lines (the failure mode of the bare `eprintln!`
+//! calls this replaces). Timestamps are monotonic microseconds since the
+//! first logger touch in the process — wall-clock-free, so log output never
+//! perturbs or depends on anything a cache key could see.
+//!
+//! The level comes from `--log-level` (explicit, wins) or the `OLYMPUS_LOG`
+//! environment variable, defaulting to `info`. `off` silences everything.
+
+use crate::util::Json;
+use std::io::Write;
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+use std::sync::OnceLock;
+use std::time::Instant;
+
+/// Log severity. Ordered so that `event_level <= configured_level` means
+/// "emit": `Error = 1` always passes at any non-off setting, `Debug = 4`
+/// only when everything is wanted.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    Off = 0,
+    Error = 1,
+    Warn = 2,
+    Info = 3,
+    Debug = 4,
+}
+
+impl Level {
+    pub fn parse(s: &str) -> Option<Level> {
+        match s {
+            "off" => Some(Level::Off),
+            "error" => Some(Level::Error),
+            "warn" => Some(Level::Warn),
+            "info" => Some(Level::Info),
+            "debug" => Some(Level::Debug),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Level::Off => "off",
+            Level::Error => "error",
+            Level::Warn => "warn",
+            Level::Info => "info",
+            Level::Debug => "debug",
+        }
+    }
+
+    fn from_u8(v: u8) -> Level {
+        match v {
+            0 => Level::Off,
+            1 => Level::Error,
+            2 => Level::Warn,
+            3 => Level::Info,
+            _ => Level::Debug,
+        }
+    }
+}
+
+/// `u8::MAX` = "not yet initialized"; first read resolves `OLYMPUS_LOG`.
+static LEVEL: AtomicU8 = AtomicU8::new(u8::MAX);
+
+/// Monotonic epoch for `ts_us`, pinned on first use.
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+
+/// Span-id allocator; 0 is reserved for "no span".
+static NEXT_SPAN: AtomicU64 = AtomicU64::new(1);
+
+fn default_level() -> Level {
+    std::env::var("OLYMPUS_LOG")
+        .ok()
+        .as_deref()
+        .and_then(Level::parse)
+        .unwrap_or(Level::Info)
+}
+
+/// The currently configured level.
+pub fn level() -> Level {
+    let v = LEVEL.load(Ordering::Relaxed);
+    if v != u8::MAX {
+        return Level::from_u8(v);
+    }
+    let l = default_level();
+    // Benign race: both contenders resolve the same environment.
+    LEVEL.store(l as u8, Ordering::Relaxed);
+    l
+}
+
+/// Set the level explicitly (`--log-level` beats `OLYMPUS_LOG`).
+pub fn set_level(l: Level) {
+    LEVEL.store(l as u8, Ordering::Relaxed);
+}
+
+/// Would an event at `l` currently be emitted?
+pub fn enabled(l: Level) -> bool {
+    l != Level::Off && l <= level()
+}
+
+/// Microseconds since the process's first logger touch.
+pub fn ts_us() -> f64 {
+    let epoch = EPOCH.get_or_init(Instant::now);
+    epoch.elapsed().as_secs_f64() * 1e6
+}
+
+/// Allocate a fresh span id for correlating the events of one
+/// request/job/candidate lifecycle.
+pub fn next_span() -> u64 {
+    NEXT_SPAN.fetch_add(1, Ordering::Relaxed)
+}
+
+/// Emit one structured event: a single JSON line on stderr carrying
+/// `ts_us`, `level`, `event` and the caller's fields.
+pub fn log(l: Level, event: &str, fields: &[(&str, Json)]) {
+    if !enabled(l) {
+        return;
+    }
+    let mut pairs = Vec::with_capacity(fields.len() + 3);
+    pairs.push(("ts_us", Json::Num((ts_us() * 10.0).round() / 10.0)));
+    pairs.push(("level", l.as_str().into()));
+    pairs.push(("event", event.into()));
+    for (k, v) in fields {
+        pairs.push((k, v.clone()));
+    }
+    let mut line = Json::obj(pairs).to_string();
+    line.push('\n');
+    // One write per line: concurrent threads interleave whole events, never
+    // fragments.
+    let mut err = std::io::stderr().lock();
+    let _ = err.write_all(line.as_bytes());
+}
+
+pub fn error(event: &str, fields: &[(&str, Json)]) {
+    log(Level::Error, event, fields);
+}
+
+pub fn warn(event: &str, fields: &[(&str, Json)]) {
+    log(Level::Warn, event, fields);
+}
+
+pub fn info(event: &str, fields: &[(&str, Json)]) {
+    log(Level::Info, event, fields);
+}
+
+pub fn debug(event: &str, fields: &[(&str, Json)]) {
+    log(Level::Debug, event, fields);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_parse_round_trips() {
+        for l in [Level::Off, Level::Error, Level::Warn, Level::Info, Level::Debug] {
+            assert_eq!(Level::parse(l.as_str()), Some(l));
+        }
+        assert_eq!(Level::parse("verbose"), None);
+        assert_eq!(Level::parse(""), None);
+    }
+
+    #[test]
+    fn level_ordering_gates_emission() {
+        assert!(Level::Error < Level::Warn);
+        assert!(Level::Warn < Level::Info);
+        assert!(Level::Info < Level::Debug);
+        // `off` emits nothing, not even errors.
+        set_level(Level::Off);
+        assert!(!enabled(Level::Error));
+        set_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        set_level(Level::Debug);
+        assert!(enabled(Level::Debug));
+        // Restore the default so parallel tests see the usual state.
+        set_level(Level::Info);
+    }
+
+    #[test]
+    fn span_ids_are_unique_and_nonzero() {
+        let a = next_span();
+        let b = next_span();
+        assert_ne!(a, 0);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn timestamps_are_monotonic() {
+        let a = ts_us();
+        let b = ts_us();
+        assert!(b >= a);
+    }
+}

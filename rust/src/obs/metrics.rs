@@ -1,0 +1,459 @@
+//! Process-wide metrics registry: counters, gauges and fixed-bucket
+//! log-scale latency histograms with p50/p95/p99 extraction.
+//!
+//! Everything is lock-free atomics (one `Mutex` guards the per-verb request
+//! map, touched once per request) and **write-only with respect to
+//! results**: nothing on a compute path ever reads a metric, so recording
+//! can never perturb an answer. The registry is global — one daemon process
+//! is one registry — and snapshots serialize deterministically through
+//! `util::Json`'s ordered objects.
+//!
+//! ## Histogram bucketing
+//!
+//! Values (nanoseconds) land in log-linear buckets: each power-of-two
+//! octave splits into [`SUB`] linear sub-buckets, so the bucket width is
+//! always ≤ 1/4 of the value — quantiles are exact for values `< 2·SUB`
+//! and carry at most ~25 % relative error above that. Values at or beyond
+//! 2^[`MAX_MSB`] ns (~18 minutes) share one overflow bucket. Snapshots
+//! merge by bucket-wise addition, which is associative and commutative —
+//! exactly what `olympus stats` needs to aggregate a fleet.
+
+use crate::util::Json;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::{Duration, Instant};
+
+/// Sub-buckets per power-of-two octave (must be a power of two).
+const SUB_BITS: u32 = 2;
+const SUB: usize = 1 << SUB_BITS;
+/// Values with their most significant bit at or above this overflow.
+const MAX_MSB: u32 = 40;
+/// Index of the overflow bucket (always the last): one past the largest
+/// normal index, `(MAX_MSB-1 - SUB_BITS)*SUB + (SUB-1) + SUB`.
+const OVERFLOW: usize = (MAX_MSB - SUB_BITS) as usize * SUB + SUB;
+/// Total bucket count, overflow included.
+pub const BUCKETS: usize = OVERFLOW + 1;
+
+/// Bucket index for a value. Monotone: `a <= b` implies
+/// `bucket_index(a) <= bucket_index(b)`.
+fn bucket_index(v: u64) -> usize {
+    if v < SUB as u64 {
+        return v as usize;
+    }
+    let msb = 63 - v.leading_zeros();
+    if msb >= MAX_MSB {
+        return OVERFLOW;
+    }
+    let shift = msb - SUB_BITS;
+    (shift as usize) * SUB + ((v >> shift) & (SUB as u64 - 1)) as usize + SUB
+}
+
+/// Smallest value mapping to bucket `idx` (the quantile representative).
+fn bucket_lo(idx: usize) -> u64 {
+    if idx < SUB {
+        return idx as u64;
+    }
+    if idx >= OVERFLOW {
+        return 1u64 << MAX_MSB;
+    }
+    let octave = (idx - SUB) / SUB;
+    let sub = (idx - SUB) % SUB;
+    ((SUB + sub) as u64) << octave
+}
+
+/// Monotonically increasing counter.
+#[derive(Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub const fn new() -> Self {
+        Counter(AtomicU64::new(0))
+    }
+
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-write-wins gauge holding an `f64` (stored as raw bits).
+#[derive(Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    pub const fn new() -> Self {
+        Gauge(AtomicU64::new(0))
+    }
+
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+/// Concurrent fixed-bucket log-scale histogram (values in nanoseconds).
+pub struct Histogram {
+    buckets: [AtomicU64; BUCKETS],
+    count: AtomicU64,
+    sum: AtomicU64,
+    max: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Histogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            max: AtomicU64::new(0),
+        }
+    }
+
+    pub fn record(&self, v: u64) {
+        self.buckets[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+    }
+
+    pub fn record_duration(&self, d: Duration) {
+        self.record(d.as_nanos().min(u64::MAX as u128) as u64);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// A consistent-enough point-in-time copy (recordings racing the
+    /// snapshot may straddle it; totals are never off by more than the
+    /// in-flight records).
+    pub fn snapshot(&self) -> HistSnapshot {
+        HistSnapshot {
+            buckets: self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect(),
+            count: self.count.load(Ordering::Relaxed),
+            sum: self.sum.load(Ordering::Relaxed),
+            max: self.max.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// An owned histogram snapshot: quantile extraction and fleet-wide merging.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct HistSnapshot {
+    pub buckets: Vec<u64>,
+    pub count: u64,
+    pub sum: u64,
+    pub max: u64,
+}
+
+impl HistSnapshot {
+    /// Nearest-rank quantile, reported as the lower bound of the bucket the
+    /// rank falls in (≤ the true value, within one sub-bucket width).
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut cum = 0u64;
+        for (i, n) in self.buckets.iter().enumerate() {
+            cum += n;
+            if cum >= rank {
+                return bucket_lo(i).min(self.max);
+            }
+        }
+        self.max
+    }
+
+    /// Bucket-wise merge: associative and commutative, so any aggregation
+    /// order over a fleet yields the same combined histogram.
+    pub fn merge(&mut self, other: &HistSnapshot) {
+        if self.buckets.is_empty() {
+            self.buckets = vec![0; other.buckets.len().max(BUCKETS)];
+        }
+        for (i, n) in other.buckets.iter().enumerate() {
+            if i < self.buckets.len() {
+                self.buckets[i] += n;
+            }
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.max = self.max.max(other.max);
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("count", self.count.into()),
+            ("sum_ns", self.sum.into()),
+            ("max_ns", self.max.into()),
+            ("p50_ns", self.quantile(0.50).into()),
+            ("p95_ns", self.quantile(0.95).into()),
+            ("p99_ns", self.quantile(0.99).into()),
+        ])
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+}
+
+/// The process-wide registry. One per daemon process; reachable anywhere
+/// via [`metrics()`].
+pub struct Metrics {
+    start: Instant,
+    /// Wall time of `execute_request`, every verb.
+    pub request_latency: Histogram,
+    /// Job time spent queued before a service worker picked it up.
+    pub queue_wait: Histogram,
+    /// Full-fidelity candidate evaluations computed in-process.
+    pub eval_local: Histogram,
+    /// Candidate evaluations answered by a remote worker (round trip incl.).
+    pub eval_remote: Histogram,
+    /// Candidate evaluations answered from a warm cache tier.
+    pub eval_cache_hit: Histogram,
+    /// Remote worker wire round-trip time (successful calls).
+    pub remote_rtt: Histogram,
+    /// Disk journal open+replay time per journal.
+    pub journal_replay: Histogram,
+    /// Calendar events dispatched across all DES runs.
+    pub des_events: Counter,
+    /// Wall nanoseconds spent inside the DES main loop.
+    pub des_wall_ns: Counter,
+    /// Events/sec of the most recent DES run.
+    pub des_last_events_per_sec: Gauge,
+    requests: Mutex<BTreeMap<&'static str, u64>>,
+}
+
+impl Metrics {
+    fn new() -> Self {
+        Metrics {
+            start: Instant::now(),
+            request_latency: Histogram::new(),
+            queue_wait: Histogram::new(),
+            eval_local: Histogram::new(),
+            eval_remote: Histogram::new(),
+            eval_cache_hit: Histogram::new(),
+            remote_rtt: Histogram::new(),
+            journal_replay: Histogram::new(),
+            des_events: Counter::new(),
+            des_wall_ns: Counter::new(),
+            des_last_events_per_sec: Gauge::new(),
+            requests: Mutex::new(BTreeMap::new()),
+        }
+    }
+
+    pub fn uptime_ms(&self) -> u64 {
+        self.start.elapsed().as_millis().min(u64::MAX as u128) as u64
+    }
+
+    /// Count one request of the given verb (`Command::as_str` output).
+    pub fn count_request(&self, verb: &'static str) {
+        *self.requests.lock().unwrap().entry(verb).or_insert(0) += 1;
+    }
+
+    /// Per-verb request counters as a JSON object.
+    pub fn requests_json(&self) -> Json {
+        Json::Obj(
+            self.requests
+                .lock()
+                .unwrap()
+                .iter()
+                .map(|(k, v)| (k.to_string(), (*v).into()))
+                .collect(),
+        )
+    }
+
+    /// Every histogram's summary, keyed by metric name.
+    pub fn histograms_json(&self) -> Json {
+        Json::obj(vec![
+            ("request_latency", self.request_latency.snapshot().to_json()),
+            ("queue_wait", self.queue_wait.snapshot().to_json()),
+            ("eval_local", self.eval_local.snapshot().to_json()),
+            ("eval_remote", self.eval_remote.snapshot().to_json()),
+            ("eval_cache_hit", self.eval_cache_hit.snapshot().to_json()),
+            ("remote_rtt", self.remote_rtt.snapshot().to_json()),
+            ("journal_replay", self.journal_replay.snapshot().to_json()),
+        ])
+    }
+
+    /// DES throughput block.
+    pub fn des_json(&self) -> Json {
+        let events = self.des_events.get();
+        let wall_ns = self.des_wall_ns.get();
+        let cumulative = if wall_ns > 0 { events as f64 / (wall_ns as f64 / 1e9) } else { 0.0 };
+        Json::obj(vec![
+            ("events", events.into()),
+            ("wall_ns", wall_ns.into()),
+            ("events_per_sec", cumulative.into()),
+            ("last_events_per_sec", self.des_last_events_per_sec.get().into()),
+        ])
+    }
+
+    /// Record one finished DES run (event count + main-loop wall time).
+    pub fn record_des_run(&self, events: u64, wall: Duration) {
+        let ns = wall.as_nanos().min(u64::MAX as u128) as u64;
+        self.des_events.add(events);
+        self.des_wall_ns.add(ns);
+        if ns > 0 {
+            self.des_last_events_per_sec.set(events as f64 / (ns as f64 / 1e9));
+        }
+    }
+}
+
+static REGISTRY: OnceLock<Metrics> = OnceLock::new();
+
+/// The process-wide registry (created, and its uptime epoch pinned, on
+/// first touch — daemons touch it at startup).
+pub fn metrics() -> &'static Metrics {
+    REGISTRY.get_or_init(Metrics::new)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buckets_are_monotone_and_exact_for_small_values() {
+        let mut prev = 0;
+        for v in 0..4096u64 {
+            let i = bucket_index(v);
+            assert!(i >= prev, "bucket_index must be monotone at v={v}");
+            prev = i;
+            assert!(bucket_lo(i) <= v, "lower bound exceeds value at v={v}");
+        }
+        // Below 2*SUB every value owns its bucket: quantiles are exact.
+        for v in 0..(2 * SUB as u64) {
+            assert_eq!(bucket_lo(bucket_index(v)), v);
+        }
+    }
+
+    #[test]
+    fn quantiles_on_known_distributions() {
+        // Exact small values: every recorded value below 8 is its own bucket.
+        let h = Histogram::new();
+        for _ in 0..100 {
+            h.record(5);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.quantile(0.5), 5);
+        assert_eq!(s.quantile(0.99), 5);
+        assert_eq!(s.max, 5);
+
+        // Uniform 1..=1000: nearest-rank p50 = 500, p99 = 990; the bucket
+        // lower bound may undershoot by at most one sub-bucket (≤ 25 %).
+        let h = Histogram::new();
+        for v in 1..=1000u64 {
+            h.record(v);
+        }
+        let s = h.snapshot();
+        for (q, exact) in [(0.5, 500.0), (0.95, 950.0), (0.99, 990.0)] {
+            let got = s.quantile(q) as f64;
+            assert!(got <= exact, "quantile is a lower bound: q={q} got={got}");
+            assert!(
+                (exact - got) / exact <= 0.25,
+                "q={q}: got {got}, want within 25% of {exact}"
+            );
+        }
+        assert_eq!(s.count, 1000);
+        assert_eq!(s.sum, 500_500);
+    }
+
+    #[test]
+    fn merge_is_associative_and_commutative() {
+        let mk = |vals: &[u64]| {
+            let h = Histogram::new();
+            for &v in vals {
+                h.record(v);
+            }
+            h.snapshot()
+        };
+        let a = mk(&[1, 10, 100]);
+        let b = mk(&[7, 7, 7, 1_000_000]);
+        let c = mk(&[0, u64::MAX, 42]);
+
+        let mut ab_c = a.clone();
+        ab_c.merge(&b);
+        ab_c.merge(&c);
+
+        let mut bc = b.clone();
+        bc.merge(&c);
+        let mut a_bc = a.clone();
+        a_bc.merge(&bc);
+
+        assert_eq!(ab_c, a_bc, "merge must be associative");
+
+        let mut ba = b.clone();
+        ba.merge(&a);
+        let mut ab = a.clone();
+        ab.merge(&b);
+        assert_eq!(ab, ba, "merge must be commutative");
+        assert_eq!(ab.count, a.count + b.count);
+        // Wrapping note: sums of u64::MAX-scale values are unrealistic for
+        // nanosecond latencies; the overflow *bucket* is the defense tested
+        // below.
+    }
+
+    #[test]
+    fn overflow_bucket_catches_huge_values() {
+        let h = Histogram::new();
+        let huge = 1u64 << 50; // ~13 days in ns, far past MAX_MSB
+        h.record(huge);
+        h.record(u64::MAX);
+        h.record(1u64 << MAX_MSB); // exactly at the boundary
+        let s = h.snapshot();
+        assert_eq!(s.buckets[OVERFLOW], 3);
+        assert_eq!(s.count, 3);
+        // Quantiles report the overflow bucket's lower bound.
+        assert_eq!(s.quantile(0.5), 1u64 << MAX_MSB);
+        // One tick below the boundary still lands in a regular bucket.
+        let h2 = Histogram::new();
+        h2.record((1u64 << MAX_MSB) - 1);
+        assert_eq!(h2.snapshot().buckets[OVERFLOW], 0);
+    }
+
+    #[test]
+    fn counter_and_gauge_basics() {
+        let c = Counter::new();
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+        let g = Gauge::new();
+        g.set(1.5e6);
+        assert_eq!(g.get(), 1.5e6);
+    }
+
+    #[test]
+    fn registry_snapshot_shape() {
+        let m = Metrics::new();
+        m.count_request("dse");
+        m.count_request("dse");
+        m.count_request("ping");
+        m.request_latency.record(1_000);
+        m.record_des_run(5_000, Duration::from_millis(2));
+        let req = m.requests_json();
+        assert_eq!(req.get("dse").as_u64(), Some(2));
+        assert_eq!(req.get("ping").as_u64(), Some(1));
+        let h = m.histograms_json();
+        assert_eq!(h.get("request_latency").get("count").as_u64(), Some(1));
+        assert_eq!(h.get("eval_local").get("count").as_u64(), Some(0));
+        let des = m.des_json();
+        assert_eq!(des.get("events").as_u64(), Some(5_000));
+        assert!(des.get("events_per_sec").as_f64().unwrap() > 0.0);
+    }
+}

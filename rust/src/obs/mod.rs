@@ -1,0 +1,29 @@
+//! Observability: structured logging, a process-wide metrics registry and
+//! Chrome trace-event export for the discrete-event simulator.
+//!
+//! The subsystem's hard invariant is **zero perturbation**: nothing here may
+//! change a computed result. Loggers write only to stderr (stdout carries
+//! command output), metrics are lock-free counters read by nobody on the
+//! result path, and the DES trace sink is a passive observer of state
+//! transitions the engine performs anyway. None of the knobs (`--log-level`,
+//! `OLYMPUS_LOG`, `--trace`) enter any cache key, so a cached answer can
+//! never depend on how closely it was watched — asserted by the determinism
+//! tests in `rust/tests/cli.rs` and `rust/tests/service.rs`.
+//!
+//! * [`log`] — leveled, structured JSON event logger: one self-contained
+//!   JSON line per event on stderr (single `write` — no torn lines from
+//!   concurrent worker threads), monotonic timestamps, span ids for
+//!   correlating request/job/candidate lifecycles.
+//! * [`metrics`] — counters, gauges and fixed-bucket log-scale latency
+//!   histograms (p50/p95/p99), exposed over the wire by the `metrics` proto
+//!   verb and rendered fleet-wide by `olympus stats`.
+//! * [`trace`] — Chrome trace-event JSON writer (`olympus des --trace f`):
+//!   spans per CU/mover, counter tracks per FIFO, viewable in Perfetto.
+
+pub mod log;
+pub mod metrics;
+pub mod trace;
+
+pub use log::{debug, error, info, level, next_span, set_level, warn, Level};
+pub use metrics::{metrics, Counter, Gauge, HistSnapshot, Histogram, Metrics};
+pub use trace::TraceSink;

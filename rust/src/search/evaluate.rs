@@ -147,6 +147,9 @@ impl<'a> ObjectiveEvaluator<'a> {
             }
             self.eval_point(point, objective)
         };
+        // Timings feed the metrics registry only when `count` is set (full
+        // fidelity): analytic screens run in microseconds and would drown
+        // the eval histograms in noise.
         match &self.cache {
             Some(cache) if memoize => {
                 let key = candidate_cache_key(
@@ -155,7 +158,24 @@ impl<'a> ObjectiveEvaluator<'a> {
                     &point.pipeline,
                     &self.obj_desc,
                 );
-                cache.get_or_compute(key, compute).0
+                if !count {
+                    return cache.get_or_compute(key, compute).0;
+                }
+                let started = std::time::Instant::now();
+                let (outcome, cached) = cache.get_or_compute(key, compute);
+                let m = crate::obs::metrics();
+                if cached {
+                    m.eval_cache_hit.record_duration(started.elapsed());
+                } else {
+                    m.eval_local.record_duration(started.elapsed());
+                }
+                outcome
+            }
+            _ if count => {
+                let started = std::time::Instant::now();
+                let outcome = compute();
+                crate::obs::metrics().eval_local.record_duration(started.elapsed());
+                outcome
             }
             _ => compute(),
         }

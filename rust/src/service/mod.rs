@@ -127,6 +127,13 @@ impl Server {
             state.remote = Some(Arc::new(remote::WorkerPool::connect(&opts.remote_workers)?));
         }
         let state = Arc::new(state);
+        crate::obs::info(
+            "service-start",
+            &[
+                ("addr", local.to_string().into()),
+                ("remote_workers", opts.remote_workers.len().into()),
+            ],
+        );
 
         let n_workers = if opts.workers == 0 {
             std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1)
@@ -303,7 +310,7 @@ fn handle_conn(
             }
             Ok(req) if req.cmd.is_job() => {
                 let (tx, rx) = mpsc::channel();
-                if queue.push(Job { req, reply: tx }) {
+                if queue.push(Job { req, reply: tx, enqueued: std::time::Instant::now() }) {
                     match rx.recv() {
                         Ok(r) => r,
                         Err(_) => error_response(&ProtoError::new(

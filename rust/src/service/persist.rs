@@ -133,11 +133,15 @@ impl DiskStore {
         }
         let lock = acquire_writer_lock(path);
         if lock.is_none() {
-            eprintln!(
-                "olympus-cache: {} is being written by another process; opening read-only",
-                path.display()
+            crate::obs::warn(
+                "cache-read-only",
+                &[
+                    ("journal", path.display().to_string().into()),
+                    ("reason", "another process holds the writer lock".into()),
+                ],
             );
         }
+        let replay_start = std::time::Instant::now();
         let open_rw = || {
             OpenOptions::new()
                 .read(true)
@@ -167,18 +171,23 @@ impl DiskStore {
                 drop(file);
                 std::fs::rename(path, &aside)
                     .with_context(|| format!("move incompatible journal {}", path.display()))?;
-                eprintln!(
-                    "olympus-cache: journal {} has an incompatible header; moved to {}",
-                    path.display(),
-                    aside.display()
+                crate::obs::warn(
+                    "cache-journal-incompatible",
+                    &[
+                        ("journal", path.display().to_string().into()),
+                        ("moved_to", aside.display().to_string().into()),
+                    ],
                 );
                 file = open_rw()?;
                 file.write_all(&header_bytes()).context("write journal header")?;
                 file.sync_all().context("fsync journal header")?;
             } else {
-                eprintln!(
-                    "olympus-cache: journal {} has an incompatible header; nothing loaded",
-                    path.display()
+                crate::obs::warn(
+                    "cache-journal-incompatible",
+                    &[
+                        ("journal", path.display().to_string().into()),
+                        ("moved_to", Json::Null),
+                    ],
                 );
             }
         } else {
@@ -186,11 +195,13 @@ impl DiskStore {
             entries = recs;
             corrupt = bad;
             if corrupt > 0 {
-                eprintln!(
-                    "olympus-cache: journal {}: dropped {corrupt} corrupt record(s) \
-                     ({} valid record(s) kept)",
-                    path.display(),
-                    entries.len()
+                crate::obs::warn(
+                    "cache-journal-corrupt",
+                    &[
+                        ("journal", path.display().to_string().into()),
+                        ("dropped", corrupt.into()),
+                        ("kept", entries.len().into()),
+                    ],
                 );
                 if lock.is_some() {
                     // compact: rewrite the valid records through a temp file
@@ -202,6 +213,17 @@ impl DiskStore {
                 }
             }
         }
+        let replay_elapsed = replay_start.elapsed();
+        crate::obs::metrics().journal_replay.record_duration(replay_elapsed);
+        crate::obs::debug(
+            "cache-journal-replayed",
+            &[
+                ("journal", path.display().to_string().into()),
+                ("records", entries.len().into()),
+                ("dropped", corrupt.into()),
+                ("ms", Json::Num(replay_elapsed.as_secs_f64() * 1e3)),
+            ],
+        );
         let journaled = entries.iter().map(|(k, _)| *k).collect();
         Ok((
             DiskStore {
@@ -228,9 +250,13 @@ impl DiskStore {
             return; // read-only: another process owns the journal
         }
         if 16 + value.len() > MAX_PAYLOAD as usize {
-            eprintln!(
-                "olympus-cache: value for {key} exceeds the {MAX_PAYLOAD}-byte record bound; \
-                 not persisted"
+            crate::obs::warn(
+                "cache-value-too-large",
+                &[
+                    ("key", format!("{key}").into()),
+                    ("bytes", (16 + value.len()).into()),
+                    ("bound", (MAX_PAYLOAD as usize).into()),
+                ],
             );
             self.corrupt.fetch_add(1, Ordering::Relaxed);
             return;
@@ -252,7 +278,13 @@ impl DiskStore {
             Err(e) => {
                 // un-mark the key so a later recompute can retry persisting
                 self.journaled.lock().unwrap().remove(&key);
-                eprintln!("olympus-cache: append to {} failed: {e}", self.path.display())
+                crate::obs::error(
+                    "cache-append-failed",
+                    &[
+                        ("journal", self.path.display().to_string().into()),
+                        ("error", e.to_string().into()),
+                    ],
+                );
             }
         }
     }

@@ -82,6 +82,9 @@ pub enum Command {
     EvalCandidate,
     /// Evaluation-cache counters.
     CacheStats,
+    /// Observability snapshot: per-verb request counters, latency
+    /// histograms, DES throughput (`olympus stats` fans this out).
+    Metrics,
     /// Liveness probe.
     Ping,
     /// Stop accepting connections and drain.
@@ -97,6 +100,7 @@ impl Command {
             "handshake" => Some(Command::Handshake),
             "eval-candidate" => Some(Command::EvalCandidate),
             "cache-stats" => Some(Command::CacheStats),
+            "metrics" => Some(Command::Metrics),
             "ping" => Some(Command::Ping),
             "shutdown" => Some(Command::Shutdown),
             _ => None,
@@ -111,6 +115,7 @@ impl Command {
             Command::Handshake => "handshake",
             Command::EvalCandidate => "eval-candidate",
             Command::CacheStats => "cache-stats",
+            Command::Metrics => "metrics",
             Command::Ping => "ping",
             Command::Shutdown => "shutdown",
         }
@@ -210,7 +215,7 @@ pub fn parse_request(line: &str) -> Result<Request, ProtoError> {
             "bad-request",
             format!(
                 "unknown cmd '{cmd_str}' (want dse|des|flow|handshake|eval-candidate|\
-                 cache-stats|ping|shutdown)"
+                 cache-stats|metrics|ping|shutdown)"
             ),
         )
         .with_id(id.clone())
@@ -422,7 +427,7 @@ mod tests {
 
     #[test]
     fn non_job_commands_need_no_ir() {
-        for cmd in ["cache-stats", "ping", "shutdown", "handshake"] {
+        for cmd in ["cache-stats", "metrics", "ping", "shutdown", "handshake"] {
             let r = parse_request(&format!(r#"{{"cmd": "{cmd}"}}"#)).unwrap();
             assert!(!r.cmd.is_job());
         }

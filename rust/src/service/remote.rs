@@ -170,9 +170,9 @@ impl WorkerPool {
             match pool.establish(index) {
                 Ok(conn) => *pool.workers[index].conn.lock().unwrap() = Some(conn),
                 Err(RemoteError::Protocol(msg)) => bail!("worker {addr}: {msg}"),
-                Err(RemoteError::Transport(msg)) => eprintln!(
-                    "olympus-remote: worker {addr} unreachable at startup ({msg}); \
-                     evaluations will retry it and fail over locally"
+                Err(RemoteError::Transport(msg)) => crate::obs::warn(
+                    "remote-worker-unreachable",
+                    &[("worker", addr.as_str().into()), ("error", msg.as_str().into())],
                 ),
             }
         }
@@ -185,6 +185,11 @@ impl WorkerPool {
 
     pub fn is_empty(&self) -> bool {
         self.workers.is_empty()
+    }
+
+    /// The configured worker addresses, in shard-index order.
+    pub fn addrs(&self) -> Vec<String> {
+        self.workers.iter().map(|w| w.addr.clone()).collect()
     }
 
     pub fn stats(&self) -> RemoteStats {
@@ -271,8 +276,12 @@ impl WorkerPool {
                     }
                 }
             }
+            let started = std::time::Instant::now();
             match roundtrip(guard.as_mut().expect("connection just ensured"), line) {
-                Ok(v) => return Ok(v),
+                Ok(v) => {
+                    crate::obs::metrics().remote_rtt.record_duration(started.elapsed());
+                    return Ok(v);
+                }
                 Err(msg) => {
                     *guard = None; // poisoned half-stream: never reuse
                     last = msg;
@@ -377,12 +386,20 @@ impl<'a> RemoteEvaluator<'a> {
             candidate_cache_key(&self.module_fp, &self.plat_fp, &point.pipeline, &self.obj_desc);
         let compute = || self.remote_or_local(key, point);
         match &self.cache {
-            Some(cache) => cache.get_or_compute(key, compute).0,
+            Some(cache) => {
+                let started = std::time::Instant::now();
+                let (outcome, cached) = cache.get_or_compute(key, compute);
+                if cached {
+                    crate::obs::metrics().eval_cache_hit.record_duration(started.elapsed());
+                }
+                outcome
+            }
             None => compute(),
         }
     }
 
     fn remote_or_local(&self, key: ContentHash, point: &CandidatePoint) -> CandidateOutcome {
+        let started = std::time::Instant::now();
         let sent = self.pool.eval_candidate(
             key,
             &self.ir_text,
@@ -392,6 +409,7 @@ impl<'a> RemoteEvaluator<'a> {
         );
         match sent {
             Ok((outcome, computed)) => {
+                crate::obs::metrics().eval_remote.record_duration(started.elapsed());
                 if computed {
                     self.full_evals.fetch_add(1, Ordering::Relaxed);
                 }
@@ -402,9 +420,18 @@ impl<'a> RemoteEvaluator<'a> {
                 // locally — deterministic, so bit-identical to what the
                 // worker would have said
                 self.pool.note_failover();
-                eprintln!("olympus-remote: {msg}; evaluating '{}' locally", point.label);
+                crate::obs::warn(
+                    "remote-failover",
+                    &[
+                        ("candidate", point.label.as_str().into()),
+                        ("error", msg.as_str().into()),
+                    ],
+                );
                 self.full_evals.fetch_add(1, Ordering::Relaxed);
-                self.local.compute_outcome(point)
+                let local_start = std::time::Instant::now();
+                let outcome = self.local.compute_outcome(point);
+                crate::obs::metrics().eval_local.record_duration(local_start.elapsed());
+                outcome
             }
         }
     }

@@ -41,6 +41,8 @@ use super::remote::WorkerPool;
 pub struct Job {
     pub req: Request,
     pub reply: mpsc::Sender<String>,
+    /// When the connection thread enqueued it (queue-wait metric).
+    pub enqueued: std::time::Instant,
 }
 
 /// The outcome of evaluating a job request: the `result` payload, or a
@@ -67,6 +69,8 @@ pub struct ServiceState {
     /// Shard assignment announced by a coordinator's `handshake` (worker
     /// daemons only); echoed by `cache-stats`.
     pub shard: Mutex<Option<(u64, u64)>>,
+    /// Daemon start time (`uptime_ms` in `cache-stats`/`metrics`).
+    pub started: std::time::Instant,
 }
 
 impl ServiceState {
@@ -75,12 +79,16 @@ impl ServiceState {
         // implies a bounded candidate cache too (~a dozen candidates per
         // response); 0 keeps both unbounded.
         let candidate_capacity = response_capacity.saturating_mul(16);
+        // Touch the registry so the process uptime epoch is pinned at
+        // daemon construction, not at the first request.
+        let _ = crate::obs::metrics();
         ServiceState {
             responses: EvalCache::with_capacity(response_capacity),
             candidates: Arc::new(CandidateCache::with_capacity(candidate_capacity)),
             dse_threads: dse_threads.max(1),
             remote: None,
             shard: Mutex::new(None),
+            started: std::time::Instant::now(),
         }
     }
 
@@ -115,6 +123,7 @@ impl ServiceState {
             dse_threads: dse_threads.max(1),
             remote: None,
             shard: Mutex::new(None),
+            started: std::time::Instant::now(),
         })
     }
 
@@ -127,6 +136,7 @@ impl ServiceState {
 /// Worker thread body: drain the queue until it closes.
 pub fn worker_loop(queue: Arc<JobQueue<Job>>, state: Arc<ServiceState>) {
     while let Some(job) = queue.pop() {
+        crate::obs::metrics().queue_wait.record_duration(job.enqueued.elapsed());
         let resp = execute_request(&state, &job.req);
         // a dropped receiver just means the client went away mid-job
         let _ = job.reply.send(resp);
@@ -148,8 +158,30 @@ fn stats_json(s: &CacheStats) -> Json {
 
 /// Evaluate one request to a full response line. Pure up to cache effects:
 /// identical requests produce byte-identical `result` payloads regardless
-/// of worker count or cache temperature.
+/// of worker count or cache temperature. Observability (the span log + the
+/// verb counter + the latency histogram) is recorded around the dispatch
+/// and never touches the payload.
 pub fn execute_request(state: &ServiceState, req: &Request) -> String {
+    let metrics = crate::obs::metrics();
+    metrics.count_request(req.cmd.as_str());
+    let span = crate::obs::next_span();
+    crate::obs::debug("request", &[("span", span.into()), ("cmd", req.cmd.as_str().into())]);
+    let t0 = std::time::Instant::now();
+    let resp = execute_request_inner(state, req);
+    let dt = t0.elapsed();
+    metrics.request_latency.record_duration(dt);
+    crate::obs::debug(
+        "request-done",
+        &[
+            ("span", span.into()),
+            ("cmd", req.cmd.as_str().into()),
+            ("ms", (dt.as_secs_f64() * 1e3).into()),
+        ],
+    );
+    resp
+}
+
+fn execute_request_inner(state: &ServiceState, req: &Request) -> String {
     match req.cmd {
         Command::Ping => ok_response(&req.id, req.cmd, false, None, Json::obj(vec![])),
         Command::Shutdown => {
@@ -174,12 +206,15 @@ pub fn execute_request(state: &ServiceState, req: &Request) -> String {
                     ]),
                 ),
             ];
+            fields.push(("uptime_ms", uptime_ms(state).into()));
+            fields.push(("requests", crate::obs::metrics().requests_json()));
             if let Some((index, total)) = *state.shard.lock().unwrap() {
                 let shard = Json::obj(vec![("index", index.into()), ("total", total.into())]);
                 fields.push(("shard", shard));
             }
             ok_response(&req.id, req.cmd, false, None, Json::obj(fields))
         }
+        Command::Metrics => execute_metrics(state, req),
         Command::Handshake => execute_handshake(state, req),
         Command::EvalCandidate => match execute_eval_candidate(state, req) {
             Ok(resp) => resp,
@@ -203,6 +238,41 @@ pub fn execute_request(state: &ServiceState, req: &Request) -> String {
             }
         },
     }
+}
+
+fn uptime_ms(state: &ServiceState) -> u64 {
+    state.started.elapsed().as_millis().min(u64::MAX as u128) as u64
+}
+
+/// The `metrics` verb: the process-wide registry as one JSON object —
+/// per-verb request counters, latency histogram summaries, DES throughput —
+/// plus (on a coordinator) the remote counters and worker addresses
+/// `olympus stats` fans out to, and (on a worker) the shard assignment.
+fn execute_metrics(state: &ServiceState, req: &Request) -> String {
+    let m = crate::obs::metrics();
+    let mut fields = vec![
+        ("uptime_ms", uptime_ms(state).into()),
+        ("requests", m.requests_json()),
+        ("histograms", m.histograms_json()),
+        ("des", m.des_json()),
+    ];
+    if let Some(pool) = &state.remote {
+        let rs = pool.stats();
+        let workers: Vec<Json> = pool.addrs().iter().map(|a| a.as_str().into()).collect();
+        fields.push((
+            "remote",
+            Json::obj(vec![
+                ("workers", Json::Arr(workers)),
+                ("remote_hits", rs.remote_hits.into()),
+                ("remote_evals", rs.remote_evals.into()),
+                ("remote_failovers", rs.remote_failovers.into()),
+            ]),
+        ));
+    }
+    if let Some((index, total)) = *state.shard.lock().unwrap() {
+        fields.push(("shard", Json::obj(vec![("index", index.into()), ("total", total.into())])));
+    }
+    ok_response(&req.id, req.cmd, false, None, Json::obj(fields))
 }
 
 /// Validate a coordinator's `handshake`: exact protocol version, then a
@@ -324,8 +394,15 @@ fn execute_eval_candidate(state: &ServiceState, req: &Request) -> Result<String,
         }
     }
     let evaluator = ObjectiveEvaluator::new(&module, &platform, &objective, 1, None);
+    let t0 = std::time::Instant::now();
     let (outcome, cached) =
         state.candidates.get_or_compute(key, || evaluator.compute_outcome(&point));
+    let m = crate::obs::metrics();
+    if cached {
+        m.eval_cache_hit.record_duration(t0.elapsed());
+    } else {
+        m.eval_local.record_duration(t0.elapsed());
+    }
     Ok(ok_response(&req.id, req.cmd, cached, Some(&key.to_hex()), outcome_to_json(&outcome)))
 }
 

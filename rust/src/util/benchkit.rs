@@ -85,6 +85,13 @@ impl Bench {
 
     /// Print the report table and the grep-friendly lines.
     pub fn run(self) {
+        let _ = self.finish();
+    }
+
+    /// Like [`Bench::run`], but hand the recorded samples back to the
+    /// caller — the `bench_snapshot` target serializes them into the
+    /// checked-in `BENCH_DES.json` perf trajectory.
+    pub fn finish(self) -> Vec<Sample> {
         println!("\n== bench: {} ==", self.name);
         println!("{:<44} {:>12} {:>12} {:>12}  throughput", "case", "median", "p10", "p90");
         for s in &self.results {
@@ -113,6 +120,7 @@ impl Bench {
                 self.name, s.name, s.median_ns, s.p10_ns, s.p90_ns, tv, tu
             );
         }
+        self.results
     }
 }
 

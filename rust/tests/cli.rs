@@ -495,8 +495,9 @@ fn serve_and_submit_round_trip_with_cache() {
     let warm = submit(&[]);
     assert!(warm.status.success());
     assert_eq!(String::from_utf8_lossy(&warm.stdout), cold_out, "bit-identical");
+    // cache hits surface as a structured `served-from-cache` event
     assert!(
-        String::from_utf8_lossy(&warm.stderr).contains("served from cache"),
+        String::from_utf8_lossy(&warm.stderr).contains("served-from-cache"),
         "{}",
         String::from_utf8_lossy(&warm.stderr)
     );
@@ -508,4 +509,80 @@ fn serve_and_submit_round_trip_with_cache() {
 
     child.kill().unwrap();
     let _ = child.wait();
+}
+
+/// `des --trace` exports a Chrome trace-event JSON file (the Perfetto
+/// format): valid JSON, a non-empty `traceEvents` array, `pid`/`tid`/`ts`
+/// on every event, and — because the DES calendar dispatches in
+/// non-decreasing time order — monotone timestamps.
+#[test]
+fn des_trace_exports_valid_chrome_trace() {
+    let dir = tmpdir("trace");
+    let design = write_design(&dir);
+    let trace = dir.join("trace.json");
+    let out = olympus()
+        .args([
+            "des",
+            design.to_str().unwrap(),
+            "--pipeline",
+            "sanitize, iris, channel-reassign",
+            "--trace",
+            trace.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = std::fs::read_to_string(&trace).unwrap();
+    let j = olympus::util::Json::parse(&text).expect("trace file is valid JSON");
+    let events = j.get("traceEvents").as_arr().expect("traceEvents array");
+    assert!(!events.is_empty(), "trace has events");
+    let mut last_ts = 0.0f64;
+    for e in events {
+        assert!(e.get("pid").as_u64().is_some(), "pid missing: {e}");
+        assert!(e.get("tid").as_u64().is_some(), "tid missing: {e}");
+        let ts = e.get("ts").as_f64().expect("ts present");
+        // metadata records pin ts 0; simulation events are time-ordered
+        if e.get("ph").as_str() != Some("M") {
+            assert!(ts >= last_ts, "ts must be monotone: {ts} < {last_ts}");
+            last_ts = ts;
+        }
+    }
+    // spans for compute units / movers, counter samples for FIFO depths
+    assert!(events.iter().any(|e| e.get("ph").as_str() == Some("B")), "no spans");
+    assert!(events.iter().any(|e| e.get("ph").as_str() == Some("C")), "no counters");
+}
+
+/// Zero-perturbation acceptance: observability must not move a byte of any
+/// result. `--log-level off` vs `debug` and `--trace` on vs off produce
+/// identical stdout for both `dse` and `des`.
+#[test]
+fn observability_is_zero_perturbation() {
+    let dir = tmpdir("zeroperturb");
+    let design = write_design(&dir);
+    let d = design.to_str().unwrap();
+    let run = |args: &[&str]| {
+        let out = olympus().args(args).output().unwrap();
+        assert!(out.status.success(), "{args:?}: {}", String::from_utf8_lossy(&out.stderr));
+        String::from_utf8_lossy(&out.stdout).to_string()
+    };
+    let dse_off = run(&["dse", d, "--factors", "2", "--log-level", "off"]);
+    let dse_dbg = run(&["dse", d, "--factors", "2", "--log-level", "debug"]);
+    assert!(dse_off.contains("best: "), "{dse_off}");
+    assert_eq!(dse_off, dse_dbg, "dse output must not depend on the log level");
+    let des = ["des", d, "--pipeline", "sanitize, iris, channel-reassign", "--seed", "7"];
+    let des_off = run(&[&des[..], &["--log-level", "off"][..]].concat());
+    let des_dbg = run(&[&des[..], &["--log-level", "debug"][..]].concat());
+    assert!(des_off.contains("des report"), "{des_off}");
+    assert_eq!(des_off, des_dbg, "des output must not depend on the log level");
+    let trace = dir.join("zp_trace.json");
+    let des_traced = run(&[&des[..], &["--trace", trace.to_str().unwrap()][..]].concat());
+    assert_eq!(des_off, des_traced, "--trace must not perturb the des report");
+    // a bad level is a loud error, never a silent fallback
+    let out = olympus().args(["dse", d, "--log-level", "loud"]).output().unwrap();
+    assert!(!out.status.success());
+    assert!(
+        String::from_utf8_lossy(&out.stderr).contains("--log-level"),
+        "{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
 }

@@ -559,3 +559,104 @@ fn shutdown_request_stops_the_server() {
     // wait() returns because the accept loop and workers exit
     server.wait();
 }
+
+/// The `metrics` verb on a scripted workload: per-verb request counters,
+/// ordered latency quantiles, and the queue/eval histograms all report.
+/// The registry is process-wide (shared by every in-process server in this
+/// test binary), so counts are asserted as lower bounds, never exact.
+#[test]
+fn metrics_verb_reports_latency_histograms_and_request_counters() {
+    let server = Server::bind("127.0.0.1:0", ServeOptions::default()).unwrap();
+    let mut c = Client::connect(server.addr());
+    for _ in 0..3 {
+        assert_eq!(c.call(vec![("cmd", "ping".into())]).get("ok"), &Json::Bool(true));
+    }
+    let cold = c.call(dse_request(31, &[2]));
+    assert_eq!(cold.get("ok"), &Json::Bool(true), "{cold}");
+    let warm = c.call(dse_request(31, &[2]));
+    assert_eq!(warm.get("cached"), &Json::Bool(true), "{warm}");
+    let v = c.call(vec![("cmd", "metrics".into())]);
+    assert_eq!(v.get("ok"), &Json::Bool(true), "{v}");
+    let r = v.get("result");
+    assert!(r.get("uptime_ms").as_u64().is_some(), "{v}");
+    assert!(r.get("requests").get("ping").as_u64().unwrap() >= 3, "{v}");
+    assert!(r.get("requests").get("dse").as_u64().unwrap() >= 2, "{v}");
+    let lat = r.get("histograms").get("request_latency");
+    assert!(lat.get("count").as_u64().unwrap() >= 5, "{v}");
+    let p50 = lat.get("p50_ns").as_f64().unwrap();
+    let p95 = lat.get("p95_ns").as_f64().unwrap();
+    let p99 = lat.get("p99_ns").as_f64().unwrap();
+    assert!(p50 > 0.0 && p50 <= p95 && p95 <= p99, "quantiles ordered: {v}");
+    // the dse job went through the queue and the local candidate evaluator
+    assert!(r.get("histograms").get("queue_wait").get("count").as_u64().unwrap() >= 1, "{v}");
+    assert!(r.get("histograms").get("eval_local").get("count").as_u64().unwrap() >= 1, "{v}");
+    server.shutdown();
+}
+
+/// Satellite: `cache-stats` now reports daemon uptime and the per-verb
+/// request counters alongside the cache tiers.
+#[test]
+fn cache_stats_reports_uptime_and_request_counters() {
+    let server = Server::bind("127.0.0.1:0", ServeOptions::default()).unwrap();
+    let mut c = Client::connect(server.addr());
+    assert_eq!(c.call(vec![("cmd", "ping".into())]).get("ok"), &Json::Bool(true));
+    let v = c.call(vec![("cmd", "cache-stats".into())]);
+    assert_eq!(v.get("ok"), &Json::Bool(true), "{v}");
+    let r = v.get("result");
+    assert!(r.get("uptime_ms").as_u64().is_some(), "{v}");
+    assert!(r.get("requests").get("ping").as_u64().unwrap() >= 1, "{v}");
+    server.shutdown();
+}
+
+/// Acceptance: `olympus stats` renders one fleet-wide table — the
+/// coordinator plus both remote workers, one row each — and `--raw` emits
+/// the aggregated JSON that scripts and CI scrape.
+#[test]
+fn stats_cli_aggregates_a_two_worker_fleet() {
+    let w1 = Server::bind("127.0.0.1:0", ServeOptions::default()).unwrap();
+    let w2 = Server::bind("127.0.0.1:0", ServeOptions::default()).unwrap();
+    let coord = Server::bind(
+        "127.0.0.1:0",
+        ServeOptions {
+            remote_workers: vec![w1.addr().to_string(), w2.addr().to_string()],
+            ..ServeOptions::default()
+        },
+    )
+    .unwrap();
+    let mut cc = Client::connect(coord.addr());
+    let cold = cc.call(dse_request(41, &[2, 4]));
+    assert_eq!(cold.get("ok"), &Json::Bool(true), "{cold}");
+
+    let stats = |extra: &[&str]| {
+        let coord_addr = coord.addr().to_string();
+        let mut args = vec!["stats", coord_addr.as_str()];
+        args.extend_from_slice(extra);
+        let out = std::process::Command::new(env!("CARGO_BIN_EXE_olympus"))
+            .args(&args)
+            .output()
+            .unwrap();
+        assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+        String::from_utf8_lossy(&out.stdout).to_string()
+    };
+
+    let table = stats(&[]);
+    assert!(table.contains("node"), "{table}");
+    assert!(table.contains("(coordinator)"), "{table}");
+    assert!(table.contains(&w1.addr().to_string()), "worker 1 row: {table}");
+    assert!(table.contains(&w2.addr().to_string()), "worker 2 row: {table}");
+    assert_eq!(table.lines().count(), 4, "header + 3 rows: {table}");
+
+    let raw = Json::parse(stats(&["--raw"]).trim()).expect("--raw emits valid JSON");
+    let coord_m = raw.get("coordinator");
+    assert!(coord_m.get("uptime_ms").as_u64().is_some(), "{raw}");
+    assert!(coord_m.get("remote").get("remote_evals").as_u64().unwrap() >= 1, "{raw}");
+    assert!(
+        coord_m.get("histograms").get("request_latency").get("count").as_u64().unwrap() >= 1,
+        "{raw}"
+    );
+    assert_eq!(raw.get("workers").as_arr().unwrap().len(), 2, "{raw}");
+
+    coord.shutdown();
+    w1.shutdown();
+    w2.shutdown();
+}
