@@ -45,6 +45,33 @@ pub struct NodeMetrics {
     pub completions: u64,
 }
 
+/// Per-traffic-class latency and deadline accounting (one row per class in
+/// the scenario's plan; synthetic scenarios have a single `default` class).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClassStats {
+    pub class: String,
+    /// Jobs of this class completed.
+    pub jobs: u64,
+    pub mean_latency_s: f64,
+    pub p99_latency_s: f64,
+    /// Completed jobs of this class that carried a deadline.
+    pub deadline_jobs: u64,
+    /// Of those, how many finished after it.
+    pub deadline_misses: u64,
+}
+
+impl ClassStats {
+    /// Fraction of deadline-carrying jobs that missed (0.0 when none
+    /// carried one).
+    pub fn deadline_miss_rate(&self) -> f64 {
+        if self.deadline_jobs == 0 {
+            0.0
+        } else {
+            self.deadline_misses as f64 / self.deadline_jobs as f64
+        }
+    }
+}
+
 /// Whole-run DES report. Everything here is a pure function of
 /// (architecture, scenario, config) — the deterministic-replay tests
 /// compare entire reports with `==`.
@@ -65,6 +92,8 @@ pub struct DesReport {
     pub throughput_jobs_per_s: f64,
     /// Events dispatched by the calendar.
     pub events: u64,
+    /// Per-class latency/deadline stats, in class-plan order.
+    pub classes: Vec<ClassStats>,
 }
 
 impl DesReport {
@@ -108,6 +137,29 @@ impl fmt::Display for DesReport {
             self.max_job_latency_s * 1e3
         )?;
         writeln!(f, "{} calendar events", self.events)?;
+        // per-class rows earn their space only when there is class structure
+        if self.classes.len() > 1 || self.classes.iter().any(|c| c.deadline_jobs > 0) {
+            for c in &self.classes {
+                write!(
+                    f,
+                    "class {:<16} {:>6} jobs  mean {:.3} ms  p99 {:.3} ms",
+                    c.class,
+                    c.jobs,
+                    c.mean_latency_s * 1e3,
+                    c.p99_latency_s * 1e3
+                )?;
+                if c.deadline_jobs > 0 {
+                    write!(
+                        f,
+                        "  deadline-miss {}/{} ({:.1}%)",
+                        c.deadline_misses,
+                        c.deadline_jobs,
+                        c.deadline_miss_rate() * 100.0
+                    )?;
+                }
+                writeln!(f)?;
+            }
+        }
         writeln!(
             f,
             "{:<30} {:>6} {:>7} {:>10} {:>9} {:>11} {:>11} {:>9}",

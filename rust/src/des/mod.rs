@@ -28,11 +28,11 @@ mod time;
 
 pub use build::{build_network, CuSpec, DesNet, FifoSpec, FlowSpec, MoverSpec};
 pub use calendar::EventCalendar;
-pub use metrics::{DesReport, NodeKind, NodeMetrics};
+pub use metrics::{ClassStats, DesReport, NodeKind, NodeMetrics};
 pub use network::{
     simulate, simulate_network, simulate_network_traced, simulate_traced, DesConfig, ServiceDist,
 };
-pub use scenario::{ArrivalProcess, WorkloadScenario};
+pub use scenario::{ArrivalPlan, ArrivalProcess, WorkloadScenario};
 pub use time::{TimePoint, TimeSpan, PS_PER_S};
 
 #[cfg(test)]

@@ -15,11 +15,12 @@
 //! has space, and write movers drain any non-empty FIFO.
 
 use anyhow::{bail, Result};
-use std::collections::VecDeque;
+use std::collections::{BinaryHeap, VecDeque};
 
 use crate::lower::Architecture;
 use crate::obs::TraceSink;
 use crate::sim::TimingModel;
+use crate::traffic::AutoscalePolicy;
 use crate::util::{
     f64_from_bits_json, f64_to_bits_json, u64_from_str_json, u64_to_str_json, Json, Rng,
 };
@@ -30,8 +31,12 @@ use super::metrics::{percentile, DepthTrack, DesReport, NodeKind, NodeMetrics};
 use super::scenario::WorkloadScenario;
 use super::time::{TimePoint, TimeSpan, PS_PER_S};
 
-/// Per-chunk CU service-time distribution.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+/// Per-chunk CU service-time distribution. Every stochastic variant is
+/// normalized to **unit mean** and scaled by the deterministic service
+/// time, so swapping distributions changes the *shape* of service noise
+/// without moving the offered load `rho` — exactly what the M/G/1
+/// calibration tests need to compare tails at matched throughput.
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub enum ServiceDist {
     /// Exactly `II x elems` cycles per chunk (an HLS pipeline's steady
     /// state; the default).
@@ -40,23 +45,82 @@ pub enum ServiceDist {
     /// (memoryless service — used by the M/M/1 calibration tests and for
     /// modeling data-dependent kernels).
     Exponential,
+    /// Log-normal with unit mean and log-scale `sigma` (> 0): moderate
+    /// heavy tail, the classic fit for data-dependent kernel runtimes.
+    LogNormal { sigma: f64 },
+    /// Pareto with unit mean and shape `alpha` (> 1, else the mean
+    /// diverges): power-law tail; `alpha` near 1 is pathological,
+    /// `alpha >= 2` has finite variance.
+    Pareto { alpha: f64 },
 }
 
 impl ServiceDist {
-    /// Wire name (see [`DesConfig::to_json`]).
-    pub fn as_str(self) -> &'static str {
+    /// Wire spec (see [`DesConfig::to_json`]); parameters print with
+    /// Rust's shortest-round-trip float formatting, so
+    /// `parse(spec()) == self` bit-for-bit.
+    pub fn spec(self) -> String {
         match self {
-            ServiceDist::Deterministic => "deterministic",
-            ServiceDist::Exponential => "exponential",
+            ServiceDist::Deterministic => "deterministic".to_string(),
+            ServiceDist::Exponential => "exponential".to_string(),
+            ServiceDist::LogNormal { sigma } => format!("lognormal:{sigma}"),
+            ServiceDist::Pareto { alpha } => format!("pareto:{alpha}"),
         }
     }
 
-    /// Inverse of [`ServiceDist::as_str`].
-    pub fn parse(s: &str) -> Option<ServiceDist> {
-        match s {
-            "deterministic" => Some(ServiceDist::Deterministic),
-            "exponential" => Some(ServiceDist::Exponential),
-            _ => None,
+    /// Inverse of [`ServiceDist::spec`]. Rejects malformed, non-finite or
+    /// out-of-range parameters with an error listing the accepted forms.
+    pub fn parse(s: &str) -> std::result::Result<ServiceDist, String> {
+        let forms = "deterministic | exponential | lognormal:SIGMA | pareto:ALPHA";
+        let bad = |why: &str| format!("bad service dist '{s}': {why} (want {forms})");
+        let param = |v: &str, name: &str| -> std::result::Result<f64, String> {
+            let x: f64 =
+                v.parse().map_err(|_| bad(&format!("{name} '{v}' is not a number")))?;
+            if !x.is_finite() {
+                return Err(bad(&format!("{name} must be finite")));
+            }
+            Ok(x)
+        };
+        match s.split_once(':') {
+            None => match s {
+                "deterministic" => Ok(ServiceDist::Deterministic),
+                "exponential" => Ok(ServiceDist::Exponential),
+                _ => Err(bad("unknown distribution")),
+            },
+            Some(("lognormal", v)) => {
+                let sigma = param(v, "sigma")?;
+                if sigma <= 0.0 {
+                    return Err(bad("sigma must be > 0"));
+                }
+                Ok(ServiceDist::LogNormal { sigma })
+            }
+            Some(("pareto", v)) => {
+                let alpha = param(v, "alpha")?;
+                if alpha <= 1.0 {
+                    return Err(bad("alpha must be > 1 for a finite mean"));
+                }
+                Ok(ServiceDist::Pareto { alpha })
+            }
+            Some(_) => Err(bad("unknown distribution")),
+        }
+    }
+
+    /// Draw a unit-mean service multiplier.
+    fn sample(self, rng: &mut Rng) -> f64 {
+        match self {
+            ServiceDist::Deterministic => 1.0,
+            ServiceDist::Exponential => {
+                // Exp(1): -ln(1 - U), U in [0,1)
+                -(1.0 - rng.f64()).ln()
+            }
+            ServiceDist::LogNormal { sigma } => {
+                // exp(sigma Z - sigma^2/2) has mean exactly 1
+                (sigma * rng.gaussian() - 0.5 * sigma * sigma).exp()
+            }
+            ServiceDist::Pareto { alpha } => {
+                // scale x_m = (alpha-1)/alpha gives mean x_m alpha/(alpha-1) = 1
+                let u = 1.0 - rng.f64(); // (0, 1]
+                ((alpha - 1.0) / alpha) * u.powf(-1.0 / alpha)
+            }
         }
     }
 }
@@ -91,6 +155,11 @@ pub struct DesConfig {
     /// Lets a single data-dependent kernel go heavy-tailed while the rest
     /// of the design stays deterministic; the last matching entry wins.
     pub cu_service_dists: Vec<(String, ServiceDist)>,
+    /// Elastic replicas: run an autoscaler controller inside the
+    /// simulation, clocking each CU's active replica count between the
+    /// policy's bounds from observed backlog (`--autoscale`). `None` =
+    /// static capacity.
+    pub autoscale: Option<AutoscalePolicy>,
 }
 
 impl DesConfig {
@@ -123,19 +192,23 @@ impl DesConfig {
             .cu_service_dists
             .iter()
             .map(|(cu, dist)| {
-                Json::obj(vec![("cu", cu.as_str().into()), ("dist", dist.as_str().into())])
+                Json::obj(vec![("cu", cu.as_str().into()), ("dist", dist.spec().into())])
             })
             .collect();
-        Json::obj(vec![
+        let mut fields = vec![
             ("seed", u64_to_str_json(self.seed)),
             ("burst_elems", u64_to_str_json(self.burst_elems)),
             ("utilization", f64_to_bits_json(self.utilization)),
             ("congestion_model", self.congestion_model.into()),
             ("max_events", u64_to_str_json(self.max_events)),
             ("stripe_replicas", self.stripe_replicas.into()),
-            ("service_dist", self.service_dist.as_str().into()),
+            ("service_dist", self.service_dist.spec().into()),
             ("cu_service_dists", Json::Arr(dists)),
-        ])
+        ];
+        if let Some(p) = &self.autoscale {
+            fields.push(("autoscale", p.to_json()));
+        }
+        Json::obj(fields)
     }
 
     /// Inverse of [`DesConfig::to_json`]; `None` marks a value this build
@@ -145,9 +218,13 @@ impl DesConfig {
         for e in j.get("cu_service_dists").as_arr()? {
             cu_service_dists.push((
                 e.get("cu").as_str()?.to_string(),
-                ServiceDist::parse(e.get("dist").as_str()?)?,
+                ServiceDist::parse(e.get("dist").as_str()?).ok()?,
             ));
         }
+        let autoscale = match j.get("autoscale") {
+            Json::Null => None,
+            p => Some(AutoscalePolicy::from_json(p)?),
+        };
         Some(DesConfig {
             seed: u64_from_str_json(j.get("seed"))?,
             burst_elems: u64_from_str_json(j.get("burst_elems"))?,
@@ -155,8 +232,9 @@ impl DesConfig {
             congestion_model: j.get("congestion_model").as_bool()?,
             max_events: u64_from_str_json(j.get("max_events"))?,
             stripe_replicas: j.get("stripe_replicas").as_bool()?,
-            service_dist: ServiceDist::parse(j.get("service_dist").as_str()?)?,
+            service_dist: ServiceDist::parse(j.get("service_dist").as_str()?).ok()?,
             cu_service_dists,
+            autoscale,
         })
     }
 }
@@ -172,6 +250,7 @@ impl Default for DesConfig {
             stripe_replicas: true,
             service_dist: ServiceDist::Deterministic,
             cu_service_dists: Vec::new(),
+            autoscale: None,
         }
     }
 }
@@ -181,6 +260,9 @@ enum Ev {
     Arrival { job: u64 },
     PcWake { pc: usize, epoch: u64 },
     CuDone { cu: usize, epoch: u64 },
+    /// Autoscaler controller tick (at most one in flight; self-reschedules
+    /// while jobs remain outstanding).
+    Autoscale,
 }
 
 /// Who to poke when a FIFO changes state.
@@ -197,6 +279,32 @@ const BEAT_EPS: f64 = 1e-6;
 struct Chunk {
     flow: usize,
     elems: u64,
+    /// Admission priority of the job this chunk belongs to: queued chunks
+    /// of a higher-priority job are started before lower-priority ones
+    /// (FIFO within a level; the in-flight transfer is never preempted).
+    prio: u32,
+}
+
+/// Released-but-incomplete job, ordered for completion attribution:
+/// highest priority first, then earliest arrival. With uniform priorities
+/// this is exactly arrival order — the pre-priority behavior.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+struct ReadyJob {
+    prio: u32,
+    idx: u64,
+}
+
+impl Ord for ReadyJob {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // max-heap: higher prio wins, then the *smaller* index
+        self.prio.cmp(&other.prio).then(other.idx.cmp(&self.idx))
+    }
+}
+
+impl PartialOrd for ReadyJob {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
 }
 
 #[derive(Default)]
@@ -266,9 +374,25 @@ struct Engine<'a> {
     /// Per-CU effective service distribution (config default + overrides).
     cu_dists: Vec<ServiceDist>,
     arrivals: Vec<TimePoint>,
+    /// Per-job traffic tags from the scenario plan (class index, optional
+    /// deadline, admission priority), indexed like `arrivals`.
+    classes: Vec<u32>,
+    deadlines: Vec<Option<TimeSpan>>,
+    prios: Vec<u32>,
+    class_names: Vec<String>,
     released: u64,
     completed: u64,
     job_latency: Vec<f64>,
+    /// Released, not yet completed; completions are attributed highest-
+    /// priority-first (see [`ReadyJob`]).
+    ready: BinaryHeap<ReadyJob>,
+    /// Per-class latency samples / deadline accounting, indexed by class.
+    class_lat: Vec<Vec<f64>>,
+    class_deadline_jobs: Vec<u64>,
+    class_deadline_misses: Vec<u64>,
+    /// Active replicas per CU (all 1 without an autoscale policy); service
+    /// rate scales linearly with it.
+    replicas: Vec<u32>,
     last_completion: Option<TimePoint>,
     /// (mover idx, fifo-fed elems per job) for write movers.
     write_quota: Vec<(usize, u64)>,
@@ -333,7 +457,7 @@ pub fn simulate_network_traced(
     };
 
     let mut rng = Rng::new(cfg.seed);
-    let arrivals = scenario.arrival_times(&mut rng);
+    let plan = scenario.plan(&mut rng);
 
     let timing = TimingModel::new(&net.platform, cfg.utilization, cfg.congestion_model);
     let service_ps_per_elem: Vec<f64> =
@@ -389,10 +513,22 @@ pub fn simulate_network_traced(
         service_ps_per_elem,
         fill_ps,
         cu_dists,
-        arrivals,
+        arrivals: plan.times,
+        classes: plan.class_of,
+        deadlines: plan.deadlines,
+        prios: plan.prios,
         released: 0,
         completed: 0,
         job_latency: Vec::new(),
+        ready: BinaryHeap::new(),
+        class_lat: plan.class_names.iter().map(|_| Vec::new()).collect(),
+        class_deadline_jobs: vec![0; plan.class_names.len()],
+        class_deadline_misses: vec![0; plan.class_names.len()],
+        class_names: plan.class_names,
+        replicas: vec![
+            cfg.autoscale.map(|p| p.min_replicas).unwrap_or(1).max(1);
+            net.cus.len()
+        ],
         last_completion: None,
         write_quota,
         service_rng: Rng::new(cfg.seed.rotate_left(17) ^ 0xD15E_A5ED_5EED_C0DE),
@@ -412,6 +548,14 @@ pub fn simulate_network_traced(
 
     for (j, t) in eng.arrivals.clone().iter().enumerate() {
         eng.cal.push(*t, Ev::Arrival { job: j as u64 });
+    }
+    if let Some(p) = &cfg.autoscale {
+        // degenerate nets never complete jobs mid-run, so a self-
+        // rescheduling tick would spin to the event budget — skip them
+        if !eng.write_quota.is_empty() {
+            eng.cal
+                .push(TimePoint::ZERO + TimeSpan::from_secs_f64(p.interval_s), Ev::Autoscale);
+        }
     }
 
     let wall_start = std::time::Instant::now();
@@ -434,6 +578,7 @@ pub fn simulate_network_traced(
                     eng.on_cu_done(cu, now);
                 }
             }
+            Ev::Autoscale => eng.on_autoscale(now),
         }
     }
     crate::obs::metrics().record_des_run(eng.cal.dispatched(), wall_start.elapsed());
@@ -444,8 +589,10 @@ pub fn simulate_network_traced(
 impl<'a> Engine<'a> {
     // ---- job admission ---------------------------------------------------
 
-    fn on_arrival(&mut self, _job: u64, now: TimePoint) {
+    fn on_arrival(&mut self, job: u64, now: TimePoint) {
         self.released += 1;
+        let prio = self.prios.get(job as usize).copied().unwrap_or(0);
+        self.ready.push(ReadyJob { prio, idx: job });
         for mi in 0..self.net.movers.len() {
             let mv = &self.net.movers[mi];
             // Chunk the job per flow, then interleave flows round-robin:
@@ -466,7 +613,7 @@ impl<'a> Engine<'a> {
                 let mut left = fl.elems_per_job;
                 while left > 0 {
                     let n = chunk.min(left);
-                    q.push_back(Chunk { flow: fi, elems: n });
+                    q.push_back(Chunk { flow: fi, elems: n, prio });
                     left -= n;
                 }
                 per_flow.push(q);
@@ -475,7 +622,7 @@ impl<'a> Engine<'a> {
                 let mut pushed = false;
                 for q in per_flow.iter_mut() {
                     if let Some(c) = q.pop_front() {
-                        self.movers[mi].queue.push_back(c);
+                        Self::enqueue_chunk(&mut self.movers[mi].queue, c);
                         pushed = true;
                     }
                 }
@@ -494,6 +641,18 @@ impl<'a> Engine<'a> {
     }
 
     // ---- movers ----------------------------------------------------------
+
+    /// Priority insertion into a mover's pending-chunk queue: a chunk goes
+    /// ahead of every strictly-lower-priority chunk, behind equal ones. The
+    /// all-equal-priority common case appends in O(1), keeping synthetic
+    /// scenarios bit-identical to the pre-priority engine.
+    fn enqueue_chunk(queue: &mut VecDeque<Chunk>, c: Chunk) {
+        let mut pos = queue.len();
+        while pos > 0 && queue[pos - 1].prio < c.prio {
+            pos -= 1;
+        }
+        queue.insert(pos, c);
+    }
 
     fn try_start_mover(&mut self, mi: usize, now: TimePoint) {
         if self.movers[mi].active.is_some() {
@@ -538,7 +697,7 @@ impl<'a> Engine<'a> {
             self.wake_producers(f, now);
             let beats = n as f64 * fl.beats_per_elem;
             self.movers[mi].rr = (fi + 1) % nflows;
-            self.begin_transfer(mi, Chunk { flow: fi, elems: n }, beats, now);
+            self.begin_transfer(mi, Chunk { flow: fi, elems: n, prio: 0 }, beats, now);
             return;
         }
     }
@@ -743,12 +902,13 @@ impl<'a> Engine<'a> {
         for &f in &spec.out_fifos {
             self.fifos[f].reserved += n;
         }
-        let mut service_ps = n as f64 * self.service_ps_per_elem[ci];
-        if self.cu_dists[ci] == ServiceDist::Exponential {
-            // Exp(mean = deterministic service): -mean * ln(1 - U), U in [0,1)
-            let u = self.service_rng.f64();
-            service_ps *= -(1.0 - u).ln();
-        }
+        // active replicas serve a chunk proportionally faster (elastic
+        // capacity; `replicas` stays 1 without an autoscale policy)
+        let mut service_ps =
+            n as f64 * self.service_ps_per_elem[ci] / self.replicas[ci] as f64;
+        // unit-mean multiplier keeps the offered load at the deterministic
+        // value; Deterministic draws nothing (multiplies by exactly 1.0)
+        service_ps *= self.cu_dists[ci].sample(&mut self.service_rng);
         if self.cus[ci].fills_charged < self.released {
             service_ps += self.fill_ps[ci];
             self.cus[ci].fills_charged += 1;
@@ -796,6 +956,32 @@ impl<'a> Engine<'a> {
         self.try_fire_cu(ci, now);
     }
 
+    // ---- autoscaler ------------------------------------------------------
+
+    /// One controller tick: scale each CU's active replicas one step from
+    /// observed backlog (input-FIFO occupancy; pending output elements for
+    /// source-like CUs), then reschedule while jobs remain outstanding.
+    fn on_autoscale(&mut self, now: TimePoint) {
+        let Some(p) = self.cfg.autoscale else { return };
+        for ci in 0..self.net.cus.len() {
+            let spec = &self.net.cus[ci];
+            let backlog: u64 = if spec.source_like() {
+                self.cus[ci].pending_src
+            } else {
+                spec.in_fifos.iter().map(|&f| self.fifos[f].occ).sum()
+            };
+            let r = self.replicas[ci];
+            if backlog >= p.scale_up_backlog && r < p.max_replicas {
+                self.replicas[ci] = r + 1;
+            } else if backlog <= p.scale_down_backlog && r > p.min_replicas {
+                self.replicas[ci] = r - 1;
+            }
+        }
+        if self.completed < self.arrivals.len() as u64 {
+            self.cal.push(now + TimeSpan::from_secs_f64(p.interval_s), Ev::Autoscale);
+        }
+    }
+
     // ---- job accounting --------------------------------------------------
 
     fn check_job_completions(&mut self, now: TimePoint) {
@@ -809,9 +995,20 @@ impl<'a> Engine<'a> {
             .min()
             .unwrap_or(0);
         while self.completed < done.min(self.released) {
-            let job = self.completed as usize;
+            // completions are attributed highest-priority-first among the
+            // released jobs (arrival order when priorities are uniform),
+            // matching the admission order `enqueue_chunk` imposes
+            let job = self.ready.pop().map(|r| r.idx).unwrap_or(self.completed) as usize;
             let lat = (now - self.arrivals[job]).as_secs_f64();
             self.job_latency.push(lat);
+            let class = self.classes.get(job).copied().unwrap_or(0) as usize;
+            self.class_lat[class].push(lat);
+            if let Some(deadline) = self.deadlines.get(job).copied().flatten() {
+                self.class_deadline_jobs[class] += 1;
+                if now - self.arrivals[job] > deadline {
+                    self.class_deadline_misses[class] += 1;
+                }
+            }
             self.completed += 1;
             self.last_completion = Some(now);
         }
@@ -886,6 +1083,27 @@ impl<'a> Engine<'a> {
             .last_completion
             .map(|t| t.as_secs_f64())
             .unwrap_or_else(|| end.as_secs_f64());
+        let classes: Vec<super::metrics::ClassStats> = self
+            .class_names
+            .iter()
+            .enumerate()
+            .map(|(i, name)| {
+                let mut samples = std::mem::take(&mut self.class_lat[i]);
+                let mean = if samples.is_empty() {
+                    0.0
+                } else {
+                    samples.iter().sum::<f64>() / samples.len() as f64
+                };
+                super::metrics::ClassStats {
+                    class: name.clone(),
+                    jobs: samples.len() as u64,
+                    mean_latency_s: mean,
+                    p99_latency_s: percentile(&mut samples, 0.99),
+                    deadline_jobs: self.class_deadline_jobs[i],
+                    deadline_misses: self.class_deadline_misses[i],
+                }
+            })
+            .collect();
         let mut lat = self.job_latency;
         let mean_lat =
             if lat.is_empty() { 0.0 } else { lat.iter().sum::<f64>() / lat.len() as f64 };
@@ -909,6 +1127,7 @@ impl<'a> Engine<'a> {
                 0.0
             },
             events: self.cal.dispatched(),
+            classes,
         }
     }
 }

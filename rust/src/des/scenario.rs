@@ -1,10 +1,13 @@
 //! Workload scenarios: how app iterations ("jobs") arrive at the device.
 //!
-//! Three arrival processes cover the serving regimes the ROADMAP cares
+//! Five arrival processes cover the serving regimes the ROADMAP cares
 //! about: closed-loop batch (throughput benchmarking), open-loop Poisson
-//! (steady online traffic) and bursty on/off (diurnal / flash-crowd
-//! traffic, where p99 latency diverges hard from the mean).
+//! (steady online traffic), bursty on/off (flash-crowd traffic, where p99
+//! latency diverges hard from the mean), a sinusoidally modulated diurnal
+//! curve, and verbatim trace replay ([`crate::traffic::trace`]) carrying
+//! per-job classes, deadlines and priorities.
 
+use crate::traffic::TraceJob;
 use crate::util::{
     f64_from_bits_json, f64_to_bits_json, u64_from_str_json, u64_to_str_json, Json, Rng,
 };
@@ -23,6 +26,14 @@ pub enum ArrivalProcess {
     /// windows, silence for `off_s` seconds between them. Same *offered
     /// load* as `Poisson` at `rate_hz * on/(on+off)`, very different tails.
     BurstyOnOff { rate_hz: f64, on_s: f64, off_s: f64, jobs: u64 },
+    /// Diurnal curve: non-homogeneous Poisson with rate
+    /// `base_hz * (1 + amplitude * sin(2*pi*t / period_s))` — the slow
+    /// load swell/ebb of day-night serving traffic, compressed to
+    /// simulated-friendly periods. `amplitude` in [0, 1].
+    Diurnal { base_hz: f64, amplitude: f64, period_s: f64, jobs: u64 },
+    /// Verbatim replay of a recorded trace: every arrival instant, class,
+    /// deadline and priority is given, nothing is drawn from the RNG.
+    Trace { jobs: Vec<TraceJob> },
 }
 
 /// A named scenario = an arrival process (plus room to grow: per-scenario
@@ -55,22 +66,77 @@ impl WorkloadScenario {
         }
     }
 
+    pub fn diurnal(base_hz: f64, amplitude: f64, period_s: f64, jobs: u64) -> Self {
+        WorkloadScenario {
+            name: format!("diurnal-{base_hz:.0}hz-{jobs}"),
+            arrivals: ArrivalProcess::Diurnal { base_hz, amplitude, period_s, jobs: jobs.max(1) },
+        }
+    }
+
     /// Parse a CLI/protocol scenario spec: `closed:N` | `poisson:HZ:N` |
-    /// `bursty:HZ:ON:OFF:N`.
+    /// `bursty:HZ:ON:OFF:N` | `diurnal:HZ:AMPL:PERIOD:N`. Every rate and
+    /// duration is validated (finite, positive where required) — bad floats
+    /// fail here with the accepted forms, never inside the simulator. This
+    /// parser is pure; the `trace:<file>` spec form reads the filesystem
+    /// and therefore lives in [`crate::traffic::scenario_from_spec`].
     pub fn parse(spec: &str) -> Result<WorkloadScenario, String> {
+        let forms = "closed:N | poisson:HZ:N | bursty:HZ:ON:OFF:N | \
+                     diurnal:HZ:AMPL:PERIOD:N | trace:<file>";
+        let bad = |why: String| format!("bad scenario '{spec}': {why} (want {forms})");
         let parts: Vec<&str> = spec.split(':').collect();
-        let num = |s: &str| -> Result<f64, String> {
-            s.parse::<f64>().map_err(|_| format!("bad number '{s}' in scenario '{spec}'"))
+        let pos = |s: &str, what: &str| -> Result<f64, String> {
+            let x: f64 =
+                s.parse().map_err(|_| bad(format!("{what} '{s}' is not a number")))?;
+            if !x.is_finite() || x <= 0.0 {
+                return Err(bad(format!("{what} must be finite and > 0, got '{s}'")));
+            }
+            Ok(x)
+        };
+        let jobs = |s: &str| -> Result<u64, String> {
+            let n: u64 = s
+                .parse()
+                .map_err(|_| bad(format!("job count '{s}' is not a positive integer")))?;
+            if n == 0 {
+                return Err(bad("job count must be >= 1".to_string()));
+            }
+            Ok(n)
         };
         match parts.as_slice() {
-            ["closed", n] => Ok(WorkloadScenario::closed_loop(num(n)? as u64)),
-            ["poisson", hz, n] => Ok(WorkloadScenario::poisson(num(hz)?, num(n)? as u64)),
+            ["closed", n] => Ok(WorkloadScenario::closed_loop(jobs(n)?)),
+            ["poisson", hz, n] => Ok(WorkloadScenario::poisson(pos(hz, "rate")?, jobs(n)?)),
             ["bursty", hz, on, off, n] => {
-                Ok(WorkloadScenario::bursty(num(hz)?, num(on)?, num(off)?, num(n)? as u64))
+                let off_s: f64 =
+                    off.parse().map_err(|_| bad(format!("off window '{off}' is not a number")))?;
+                if !off_s.is_finite() || off_s < 0.0 {
+                    return Err(bad(format!("off window must be finite and >= 0, got '{off}'")));
+                }
+                Ok(WorkloadScenario::bursty(
+                    pos(hz, "rate")?,
+                    pos(on, "on window")?,
+                    off_s,
+                    jobs(n)?,
+                ))
             }
-            _ => Err(format!(
-                "bad scenario '{spec}' (want closed:N | poisson:HZ:N | bursty:HZ:ON:OFF:N)"
+            ["diurnal", hz, ampl, period, n] => {
+                let amplitude: f64 = ampl
+                    .parse()
+                    .map_err(|_| bad(format!("amplitude '{ampl}' is not a number")))?;
+                if !(0.0..=1.0).contains(&amplitude) {
+                    return Err(bad(format!("amplitude must be in [0, 1], got '{ampl}'")));
+                }
+                Ok(WorkloadScenario::diurnal(
+                    pos(hz, "base rate")?,
+                    amplitude,
+                    pos(period, "period")?,
+                    jobs(n)?,
+                ))
+            }
+            ["trace", ..] => Err(bad(
+                "trace scenarios read a file; resolve the spec through \
+                 traffic::scenario_from_spec (the CLI and submit do)"
+                    .to_string(),
             )),
+            _ => Err(bad("unrecognized form".to_string())),
         }
     }
 
@@ -96,6 +162,33 @@ impl WorkloadScenario {
                 ("off_s", f64_to_bits_json(*off_s)),
                 ("jobs", u64_to_str_json(*jobs)),
             ]),
+            ArrivalProcess::Diurnal { base_hz, amplitude, period_s, jobs } => Json::obj(vec![
+                ("kind", "diurnal".into()),
+                ("base_hz", f64_to_bits_json(*base_hz)),
+                ("amplitude", f64_to_bits_json(*amplitude)),
+                ("period_s", f64_to_bits_json(*period_s)),
+                ("jobs", u64_to_str_json(*jobs)),
+            ]),
+            ArrivalProcess::Trace { jobs } => {
+                // trace jobs travel inline (integer ps, no floats): a
+                // worker reconstructs the exact scenario, so trace-driven
+                // cache keys never depend on which process computed them
+                let arr: Vec<Json> = jobs
+                    .iter()
+                    .map(|j| {
+                        let mut fields = vec![
+                            ("at_ps", u64_to_str_json(j.at_ps)),
+                            ("class", j.class.as_str().into()),
+                            ("prio", u64_to_str_json(j.prio as u64)),
+                        ];
+                        if let Some(d) = j.deadline_ps {
+                            fields.push(("deadline_ps", u64_to_str_json(d)));
+                        }
+                        Json::obj(fields)
+                    })
+                    .collect();
+                Json::obj(vec![("kind", "trace".into()), ("jobs", Json::Arr(arr))])
+            }
         };
         Json::obj(vec![("name", self.name.as_str().into()), ("arrivals", arrivals)])
     }
@@ -119,30 +212,62 @@ impl WorkloadScenario {
                 off_s: f64_from_bits_json(a.get("off_s"))?,
                 jobs: u64_from_str_json(a.get("jobs"))?,
             },
+            "diurnal" => ArrivalProcess::Diurnal {
+                base_hz: f64_from_bits_json(a.get("base_hz"))?,
+                amplitude: f64_from_bits_json(a.get("amplitude"))?,
+                period_s: f64_from_bits_json(a.get("period_s"))?,
+                jobs: u64_from_str_json(a.get("jobs"))?,
+            },
+            "trace" => {
+                let mut jobs = Vec::new();
+                for e in a.get("jobs").as_arr()? {
+                    let deadline_ps = match e.get("deadline_ps") {
+                        Json::Null => None,
+                        d => Some(u64_from_str_json(d)?),
+                    };
+                    jobs.push(TraceJob {
+                        at_ps: u64_from_str_json(e.get("at_ps"))?,
+                        class: e.get("class").as_str()?.to_string(),
+                        deadline_ps,
+                        prio: u64_from_str_json(e.get("prio"))? as u32,
+                    });
+                }
+                ArrivalProcess::Trace { jobs }
+            }
             _ => return None,
         };
         Some(WorkloadScenario { name, arrivals })
     }
 
     pub fn jobs(&self) -> u64 {
-        match self.arrivals {
-            ArrivalProcess::ClosedLoopBatch { jobs } => jobs,
-            ArrivalProcess::Poisson { jobs, .. } => jobs,
-            ArrivalProcess::BurstyOnOff { jobs, .. } => jobs,
+        match &self.arrivals {
+            ArrivalProcess::ClosedLoopBatch { jobs } => *jobs,
+            ArrivalProcess::Poisson { jobs, .. } => *jobs,
+            ArrivalProcess::BurstyOnOff { jobs, .. } => *jobs,
+            ArrivalProcess::Diurnal { jobs, .. } => *jobs,
+            ArrivalProcess::Trace { jobs } => jobs.len() as u64,
         }
     }
 
     /// Materialize the arrival instants (sorted, deterministic in `rng`).
     pub fn arrival_times(&self, rng: &mut Rng) -> Vec<TimePoint> {
-        match self.arrivals {
+        self.plan(rng).times
+    }
+
+    /// Materialize the full arrival plan: instants plus the per-job class,
+    /// deadline and priority the engine threads through to per-class
+    /// reporting. Synthetic scenarios are one anonymous `default` class;
+    /// traces carry their own tags.
+    pub fn plan(&self, rng: &mut Rng) -> ArrivalPlan {
+        let times = match &self.arrivals {
             ArrivalProcess::ClosedLoopBatch { jobs } => {
-                vec![TimePoint::ZERO; jobs as usize]
+                vec![TimePoint::ZERO; *jobs as usize]
             }
             ArrivalProcess::Poisson { rate_hz, jobs } => {
                 let mut t = TimePoint::ZERO;
-                (0..jobs)
+                (0..*jobs)
                     .map(|_| {
-                        t += exp_span(rng, rate_hz);
+                        t += exp_span(rng, *rate_hz);
                         t
                     })
                     .collect()
@@ -155,17 +280,91 @@ impl WorkloadScenario {
                 let on = on_s.max(1e-9);
                 let off = off_s.max(0.0);
                 let mut active = 0.0f64;
-                (0..jobs)
+                (0..*jobs)
                     .map(|_| {
-                        active += exp_secs(rng, rate_hz);
+                        active += exp_secs(rng, *rate_hz);
                         let periods = (active / on).floor();
                         let wall = periods * (on + off) + (active - periods * on);
                         TimePoint::ZERO + TimeSpan::from_secs_f64(wall)
                     })
                     .collect()
             }
+            ArrivalProcess::Diurnal { base_hz, amplitude, period_s, jobs } => {
+                // Lewis-Shedler thinning of a homogeneous Poisson stream at
+                // the peak rate: accept a candidate at time t with
+                // probability rate(t)/peak.
+                let peak = base_hz * (1.0 + amplitude);
+                let period = period_s.max(1e-9);
+                let mut t = 0.0f64;
+                let mut out = Vec::with_capacity(*jobs as usize);
+                while out.len() < *jobs as usize {
+                    t += exp_secs(rng, peak);
+                    let rate = base_hz
+                        * (1.0 + amplitude * (std::f64::consts::TAU * t / period).sin());
+                    if rng.f64() * peak < rate {
+                        out.push(TimePoint::ZERO + TimeSpan::from_secs_f64(t));
+                    }
+                }
+                out
+            }
+            ArrivalProcess::Trace { jobs } => {
+                let mut ts: Vec<TimePoint> =
+                    jobs.iter().map(|j| TimePoint::from_ps(j.at_ps)).collect();
+                ts.sort();
+                ts
+            }
+        };
+        let n = times.len();
+        if let ArrivalProcess::Trace { jobs } = &self.arrivals {
+            let mut sorted: Vec<&TraceJob> = jobs.iter().collect();
+            sorted.sort_by_key(|j| j.at_ps);
+            let mut class_names: Vec<String> = Vec::new();
+            let mut class_of = Vec::with_capacity(n);
+            for j in &sorted {
+                let idx = match class_names.iter().position(|c| *c == j.class) {
+                    Some(i) => i,
+                    None => {
+                        class_names.push(j.class.clone());
+                        class_names.len() - 1
+                    }
+                };
+                class_of.push(idx as u32);
+            }
+            ArrivalPlan {
+                times,
+                class_of,
+                deadlines: sorted
+                    .iter()
+                    .map(|j| j.deadline_ps.map(TimeSpan::from_ps))
+                    .collect(),
+                prios: sorted.iter().map(|j| j.prio).collect(),
+                class_names,
+            }
+        } else {
+            ArrivalPlan {
+                times,
+                class_of: vec![0; n],
+                deadlines: vec![None; n],
+                prios: vec![0; n],
+                class_names: vec!["default".to_string()],
+            }
         }
     }
+}
+
+/// A materialized scenario: per-job arrival instants plus the traffic tags
+/// the engine carries end-to-end. All vectors are indexed by job in
+/// arrival-time order.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArrivalPlan {
+    pub times: Vec<TimePoint>,
+    /// Index into `class_names`, per job.
+    pub class_of: Vec<u32>,
+    /// Optional completion deadline relative to arrival, per job.
+    pub deadlines: Vec<Option<TimeSpan>>,
+    /// Admission priority (higher = first under backlog), per job.
+    pub prios: Vec<u32>,
+    pub class_names: Vec<String>,
 }
 
 /// One exponential interarrival sample, in seconds.
@@ -229,17 +428,115 @@ mod tests {
             WorkloadScenario::parse("bursty:50000:0.0002:0.0008:20").unwrap(),
             WorkloadScenario::bursty(50_000.0, 0.0002, 0.0008, 20)
         );
+        assert_eq!(
+            WorkloadScenario::parse("diurnal:1000:0.8:0.01:50").unwrap(),
+            WorkloadScenario::diurnal(1000.0, 0.8, 0.01, 50)
+        );
         assert!(WorkloadScenario::parse("closed").is_err());
         assert!(WorkloadScenario::parse("poisson:x:20").is_err());
         assert!(WorkloadScenario::parse("weird:1").is_err());
     }
 
     #[test]
+    fn parse_rejects_nonfinite_zero_and_negative_values() {
+        for bad in [
+            "poisson:inf:20",
+            "poisson:nan:20",
+            "poisson:0:20",
+            "poisson:-5:20",
+            "poisson:1000:0",
+            "poisson:1000:-3",
+            "poisson:1000:2.5",
+            "bursty:1000:inf:0.1:20",
+            "bursty:1000:0:0.1:20",
+            "bursty:1000:0.1:-1:20",
+            "diurnal:1000:1.5:0.01:20",
+            "diurnal:1000:nan:0.01:20",
+            "diurnal:1000:0.5:0:20",
+            "closed:0",
+        ] {
+            let err = WorkloadScenario::parse(bad).unwrap_err();
+            assert!(err.contains("want closed:N"), "'{bad}' -> {err}");
+        }
+        // trace specs point at a file parser that lives off the pure path
+        assert!(WorkloadScenario::parse("trace:/tmp/x").unwrap_err().contains("trace"));
+    }
+
+    #[test]
+    fn diurnal_modulates_the_rate() {
+        // amplitude 1: rate peaks at t = T/4, hits zero at t = 3T/4
+        let s = WorkloadScenario::diurnal(10_000.0, 1.0, 0.01, 2000);
+        let mut rng = Rng::new(5);
+        let plan = s.plan(&mut rng);
+        assert!(plan.times.windows(2).all(|w| w[0] <= w[1]), "sorted");
+        let (mut rising, mut falling) = (0u64, 0u64);
+        for t in &plan.times {
+            let phase = t.as_secs_f64() % 0.01 / 0.01;
+            if phase < 0.5 {
+                rising += 1;
+            } else {
+                falling += 1;
+            }
+        }
+        // the sin-heavy half-period must carry well over half the arrivals
+        assert!(
+            rising > falling * 2,
+            "diurnal skew missing: {rising} rising vs {falling} falling"
+        );
+    }
+
+    #[test]
+    fn synthetic_plans_are_one_default_class() {
+        let s = WorkloadScenario::poisson(1000.0, 10);
+        let plan = s.plan(&mut Rng::new(1));
+        assert_eq!(plan.class_names, vec!["default".to_string()]);
+        assert!(plan.class_of.iter().all(|&c| c == 0));
+        assert!(plan.deadlines.iter().all(|d| d.is_none()));
+        assert!(plan.prios.iter().all(|&p| p == 0));
+    }
+
+    #[test]
+    fn trace_plans_carry_tags_in_arrival_order() {
+        use crate::traffic::TraceJob;
+        let s = WorkloadScenario {
+            name: "t".into(),
+            arrivals: ArrivalProcess::Trace {
+                jobs: vec![
+                    TraceJob { at_ps: 500, class: "b".into(), deadline_ps: None, prio: 0 },
+                    TraceJob { at_ps: 100, class: "a".into(), deadline_ps: Some(900), prio: 3 },
+                ],
+            },
+        };
+        let plan = s.plan(&mut Rng::new(1));
+        assert_eq!(plan.times, vec![TimePoint::from_ps(100), TimePoint::from_ps(500)]);
+        assert_eq!(plan.class_names, vec!["a".to_string(), "b".to_string()]);
+        assert_eq!(plan.class_of, vec![0, 1]);
+        assert_eq!(plan.deadlines, vec![Some(TimeSpan::from_ps(900)), None]);
+        assert_eq!(plan.prios, vec![3, 0]);
+    }
+
+    #[test]
     fn json_codec_round_trips_debug_identically() {
+        use crate::traffic::TraceJob;
         for s in [
             WorkloadScenario::closed_loop(4),
             WorkloadScenario::poisson(1000.0, 20),
             WorkloadScenario::bursty(50_000.0, 0.0002, 0.0008, 20),
+            WorkloadScenario::diurnal(1000.0, 0.8, 0.01, 50),
+            WorkloadScenario {
+                name: "trace-2job-abc".into(),
+                arrivals: ArrivalProcess::Trace {
+                    jobs: vec![
+                        TraceJob {
+                            at_ps: 0,
+                            class: "interactive".into(),
+                            deadline_ps: Some(5_000_000),
+                            prio: 2,
+                        },
+                        TraceJob { at_ps: 77, class: "batch".into(), deadline_ps: None, prio: 0 },
+                    ],
+                },
+            },
         ] {
             let back =
                 WorkloadScenario::from_json(&Json::parse(&s.to_json().to_string()).unwrap())

@@ -21,6 +21,10 @@
 //! * a deterministic discrete-event queueing simulator ([`des`]) scoring
 //!   architectures under contention + workload scenarios (the `des-score`
 //!   DSE objective);
+//! * production traffic modeling ([`traffic`]): heavy-tailed service +
+//!   diurnal arrivals, checksummed trace replay with priority classes and
+//!   deadlines, per-class p99 / deadline-miss reporting, an in-DES elastic
+//!   replica autoscaler, and the SLO-aware `slo-score` DSE objective;
 //! * a PJRT runtime ([`runtime`]) that loads AOT-compiled JAX/Pallas kernels
 //!   (HLO text in `artifacts/`) and executes them for kernel compute units;
 //! * a concurrent DSE job service ([`service`]): `olympus serve` daemon with
@@ -54,5 +58,6 @@ pub mod runtime;
 pub mod search;
 pub mod service;
 pub mod sim;
+pub mod traffic;
 pub mod util;
 pub mod workload;

@@ -3,17 +3,20 @@
 //! ```text
 //! olympus platforms
 //! olympus opt   <file.mlir> [--platform u280] [--pipeline "sanitize,iris"]
-//! olympus dse   <file.mlir> [--platform u280] [--objective analytic|des-score] [--jobs N]
+//! olympus dse   <file.mlir> [--platform u280] [--objective analytic|des-score|slo-score]
+//!               [--slo "CLASS=p99<MS,..."] [--jobs N]
 //!               [--driver exhaustive|random|successive-halving|iterative]
 //!               [--budget N] [--search-seed N] [--cache-dir DIR]
 //! olympus des   <file.mlir> [--platform u280] [--pipeline ...] [--scenario SPEC] [--seed N]
-//!               [--cache-dir DIR] [--trace trace.json]
+//!               [--slo "CLASS=p99<MS,..."] [--autoscale IV:UP:DOWN:MIN:MAX]
+//!               [--service-dist DIST] [--cache-dir DIR] [--trace trace.json]
 //! olympus lower <file.mlir> [--platform u280] [--pipeline ...] [--out DIR]
 //! olympus run   <file.mlir> [--platform u280] [--pipeline ...] [--artifacts DIR] [--seed N]
 //! olympus serve [--addr 127.0.0.1:7878] [--jobs N] [--cache-capacity N] [--cache-dir DIR]
 //!               [--workers host:port,host:port,...]
 //! olympus worker [--addr 127.0.0.1:7900] [--jobs N] [--cache-capacity N] [--cache-dir DIR]
-//! olympus submit <file.mlir> [--addr ...] [--cmd dse|des|flow] [--platform ...] [...]
+//! olympus submit <file.mlir> [--addr ...] [--cmd dse|des|flow] [--platform ...]
+//!               [--priority N] [--deadline-ms N] [...]
 //! olympus cache-stats [--addr ...]
 //! olympus stats [host:port] [--raw]
 //! ```
@@ -25,7 +28,15 @@
 //!
 //! `des` replays the lowered design through the discrete-event queueing
 //! simulator. `--scenario` specs: `closed:<jobs>`, `poisson:<hz>:<jobs>`,
-//! `bursty:<hz>:<on_s>:<off_s>:<jobs>` (default `closed:4`).
+//! `bursty:<hz>:<on_s>:<off_s>:<jobs>`,
+//! `diurnal:<hz>:<amplitude>:<period_s>:<jobs>`, or `trace:<file>` to
+//! replay a recorded production trace with per-job classes, priorities and
+//! deadlines (default `closed:4`). `--service-dist` picks the CU service
+//! distribution (`deterministic | exponential | lognormal:SIGMA |
+//! pareto:ALPHA`); `--autoscale` runs an elastic-replica controller inside
+//! the simulation; `--slo` scores design-space candidates by SLO
+//! violations (p99 targets + deadline misses) instead of raw makespan —
+//! see README "Production traffic & SLOs".
 //!
 //! `run` executes the lowered design on the platform simulator with seeded
 //! random host buffers and prints the simulation report.
@@ -125,9 +136,12 @@ fn usage() -> ! {
     eprintln!(
         "usage: olympus <platforms|opt|dse|des|lower|run|serve|worker|submit|cache-stats|stats> \
          [input.mlir] [--platform NAME|file.json] [--pipeline P] \
-         [--objective analytic|des-score] \
+         [--objective analytic|des-score|slo-score] [--slo CLASS=p99<MS,...] \
          [--driver exhaustive|random|successive-halving|iterative] [--budget N] \
-         [--search-seed N] [--scenario closed:N|poisson:HZ:N|bursty:HZ:ON:OFF:N] [--out DIR] \
+         [--search-seed N] \
+         [--scenario closed:N|poisson:HZ:N|bursty:HZ:ON:OFF:N|diurnal:HZ:AMP:PERIOD:N|trace:FILE] \
+         [--service-dist deterministic|exponential|lognormal:SIGMA|pareto:ALPHA] \
+         [--autoscale INTERVAL_S:UP:DOWN:MIN:MAX] [--priority N] [--deadline-ms N] [--out DIR] \
          [--artifacts DIR] [--seed N] [--jobs N] [--addr HOST:PORT] [--factors 2,4] \
          [--cache-dir DIR] [--workers HOST:PORT,...] [--trace FILE] \
          [--log-level off|error|warn|info|debug]"
@@ -186,9 +200,18 @@ fn driver_from_args(args: &Args) -> Result<olympus::search::DriverKind> {
     olympus::search::DriverKind::from_flags(name, budget, seed).map_err(|e| anyhow::anyhow!(e))
 }
 
-/// Parse a `--scenario` spec (see the crate docs above).
+/// Parse a `--scenario` spec (see the crate docs above). `trace:<file>`
+/// specs resolve against the local filesystem.
 fn parse_scenario(spec: &str) -> Result<olympus::des::WorkloadScenario> {
-    olympus::des::WorkloadScenario::parse(spec).map_err(|e| anyhow::anyhow!(e))
+    olympus::traffic::scenario_from_spec(spec).map_err(|e| anyhow::anyhow!(e))
+}
+
+/// Parse `--slo` when present.
+fn slo_from_args(args: &Args) -> Result<Option<olympus::traffic::SloSpec>> {
+    match args.flags.get("slo") {
+        Some(s) => olympus::traffic::SloSpec::parse(s).map(Some).map_err(|e| anyhow::anyhow!(e)),
+        None => Ok(None),
+    }
 }
 
 /// Parse `--seed`: a bad value is a loud, contextual error — silently
@@ -215,6 +238,15 @@ fn scenario_and_config(
     let mut cfg = olympus::des::DesConfig::default();
     if let Some(seed) = seed_from_args(args)? {
         cfg.seed = seed;
+    }
+    if let Some(spec) = args.flags.get("service-dist") {
+        cfg.service_dist =
+            olympus::des::ServiceDist::parse(spec).map_err(|e| anyhow::anyhow!(e))?;
+    }
+    if let Some(spec) = args.flags.get("autoscale") {
+        cfg.autoscale = Some(
+            olympus::traffic::AutoscalePolicy::parse(spec).map_err(|e| anyhow::anyhow!(e))?,
+        );
     }
     Ok((scenario, cfg))
 }
@@ -282,24 +314,41 @@ fn main() -> Result<()> {
             flow = flow.with_driver(driver_from_args(&args)?);
             match args.flags.get("objective").map(|s| s.as_str()) {
                 Some("des-score") => {
+                    if args.flags.contains_key("slo") {
+                        bail!("--slo only scores under --objective slo-score");
+                    }
                     let (scenario, cfg) = scenario_and_config(&args)?;
                     flow = flow.with_objective(olympus::passes::DseObjective::des_score_with(
                         scenario, cfg,
                     ));
                 }
-                // the analytic objective has no scenario or seed: reject
-                // the flags instead of silently ignoring them
+                Some("slo-score") => {
+                    let (scenario, cfg) = scenario_and_config(&args)?;
+                    let slo = slo_from_args(&args)?.ok_or_else(|| {
+                        anyhow::anyhow!(
+                            "--objective slo-score requires --slo \"CLASS=p99<MS[,...]\" \
+                             (`*` targets all classes)"
+                        )
+                    })?;
+                    flow = flow.with_objective(olympus::passes::DseObjective::slo_score_with(
+                        scenario, cfg, slo,
+                    ));
+                }
+                // the analytic objective replays nothing: reject the DES
+                // flags instead of silently ignoring them
                 None | Some("analytic") => {
-                    for flag in ["scenario", "seed"] {
+                    for flag in ["scenario", "seed", "slo", "autoscale", "service-dist"] {
                         if args.flags.contains_key(flag) {
                             bail!(
-                                "--{flag} only configures the des-score objective; \
-                                 add --objective des-score or drop --{flag}"
+                                "--{flag} only configures the des-score/slo-score objectives; \
+                                 add --objective des-score|slo-score or drop --{flag}"
                             );
                         }
                     }
                 }
-                Some(other) => bail!("unknown objective '{other}' (want analytic | des-score)"),
+                Some(other) => {
+                    bail!("unknown objective '{other}' (want analytic | des-score | slo-score)")
+                }
             }
             if let Some(dir) = args.flags.get("cache-dir") {
                 flow = flow.with_cache_dir(Path::new(dir))?;
@@ -311,17 +360,18 @@ fn main() -> Result<()> {
         "des" => {
             let input = args.positional.first().unwrap_or_else(|| usage());
             if args.flags.contains_key("objective") {
-                // the DES command always scores with the DES: an
-                // --objective here would be silently dead
+                // the DES command always scores with the DES (or its SLO
+                // penalty): an --objective here would be silently dead
                 bail!(
-                    "--objective is fixed to des-score by 'des'; use 'dse --objective ...' \
-                     to choose"
+                    "--objective is fixed by 'des' (des-score, or slo-score with --slo); \
+                     use 'dse --objective ...' to choose"
                 );
             }
             let m = load_module(input)?;
             let plat = load_platform(&args)?;
             let pipeline = args.flags.get("pipeline").map(|s| s.as_str());
             let (scenario, cfg) = scenario_and_config(&args)?;
+            let slo = slo_from_args(&args)?;
             let mut flow =
                 olympus::coordinator::Flow::new(plat).with_scenario(scenario.clone());
             flow.des_config = cfg.clone();
@@ -339,19 +389,28 @@ fn main() -> Result<()> {
                              with an explicit --pipeline (drop --pipeline to search)"
                         );
                     }
+                    if slo.is_some() {
+                        bail!(
+                            "--slo scores design-space candidates; drop --pipeline to search \
+                             (the replay report prints per-class latency either way)"
+                        );
+                    }
                     flow = flow.with_pipeline(p);
                 }
                 // no explicit pipeline: the DSE picks the design, and for a
                 // DES-centric command it scores candidates with the DES too
+                // (by SLO violations instead of makespan when --slo is given)
                 None => {
                     if let Some(factors) = factors_from_args(&args)? {
                         flow.dse_factors = factors;
                     }
-                    flow = flow
-                        .with_objective(olympus::passes::DseObjective::des_score_with(
-                            scenario, cfg,
-                        ))
-                        .with_driver(driver_from_args(&args)?);
+                    let objective = match slo {
+                        Some(slo) => olympus::passes::DseObjective::slo_score_with(
+                            scenario, cfg, slo,
+                        ),
+                        None => olympus::passes::DseObjective::des_score_with(scenario, cfg),
+                    };
+                    flow = flow.with_objective(objective).with_driver(driver_from_args(&args)?);
                     if let Some(dir) = args.flags.get("cache-dir") {
                         flow = flow.with_cache_dir(Path::new(dir))?;
                     }
@@ -517,10 +576,29 @@ fn main() -> Result<()> {
                     fields.push(("platform_json", spec.to_json()));
                 }
             }
-            for key in ["pipeline", "objective", "scenario", "driver"] {
+            for key in ["pipeline", "objective", "driver", "slo", "autoscale"] {
                 if let Some(v) = args.flags.get(key) {
                     fields.push((key, v.as_str().into()));
                 }
+            }
+            if let Some(spec) = args.flags.get("scenario") {
+                if spec.starts_with("trace:") {
+                    // resolve the trace against the *client's* filesystem and
+                    // ship the jobs inline; the daemon never sees the file,
+                    // and the response key depends only on trace content
+                    let sc = parse_scenario(spec)?;
+                    fields.push(("scenario_json", sc.to_json()));
+                } else {
+                    fields.push(("scenario", spec.as_str().into()));
+                }
+            }
+            if let Some(p) = args.flags.get("priority") {
+                let p: u64 = p.parse().context("--priority wants a non-negative integer")?;
+                fields.push(("priority", p.into()));
+            }
+            if let Some(d) = args.flags.get("deadline-ms") {
+                let d: u64 = d.parse().context("--deadline-ms wants milliseconds")?;
+                fields.push(("deadline_ms", d.into()));
             }
             if let Some(seed) = args.flags.get("seed") {
                 let seed: u64 = seed.parse().context("--seed wants an integer")?;

@@ -21,7 +21,7 @@
 use crate::util::Json;
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Mutex, OnceLock};
+use std::sync::{Arc, Mutex, OnceLock};
 use std::time::{Duration, Instant};
 
 /// Sub-buckets per power-of-two octave (must be a power of two).
@@ -238,6 +238,10 @@ pub struct Metrics {
     /// Events/sec of the most recent DES run.
     pub des_last_events_per_sec: Gauge,
     requests: Mutex<BTreeMap<&'static str, u64>>,
+    /// Queue wait broken out by scheduling class (`p{prio}`), created on
+    /// first touch. The map lock guards only lookup/insert; recording goes
+    /// through the returned `Arc<Histogram>` and stays lock-free.
+    class_queue_wait: Mutex<BTreeMap<String, Arc<Histogram>>>,
 }
 
 impl Metrics {
@@ -255,7 +259,15 @@ impl Metrics {
             des_wall_ns: Counter::new(),
             des_last_events_per_sec: Gauge::new(),
             requests: Mutex::new(BTreeMap::new()),
+            class_queue_wait: Mutex::new(BTreeMap::new()),
         }
+    }
+
+    /// The queue-wait histogram for one scheduling class (conventionally
+    /// `p{prio}`), created on first touch.
+    pub fn class_queue_wait(&self, class: &str) -> Arc<Histogram> {
+        let mut m = self.class_queue_wait.lock().unwrap();
+        m.entry(class.to_string()).or_insert_with(|| Arc::new(Histogram::new())).clone()
     }
 
     pub fn uptime_ms(&self) -> u64 {
@@ -279,17 +291,23 @@ impl Metrics {
         )
     }
 
-    /// Every histogram's summary, keyed by metric name.
+    /// Every histogram's summary, keyed by metric name. Per-class
+    /// queue-wait histograms follow the fixed set as `queue_wait_{class}`
+    /// rows (BTreeMap order keeps the snapshot deterministic).
     pub fn histograms_json(&self) -> Json {
-        Json::obj(vec![
-            ("request_latency", self.request_latency.snapshot().to_json()),
-            ("queue_wait", self.queue_wait.snapshot().to_json()),
-            ("eval_local", self.eval_local.snapshot().to_json()),
-            ("eval_remote", self.eval_remote.snapshot().to_json()),
-            ("eval_cache_hit", self.eval_cache_hit.snapshot().to_json()),
-            ("remote_rtt", self.remote_rtt.snapshot().to_json()),
-            ("journal_replay", self.journal_replay.snapshot().to_json()),
-        ])
+        let mut rows: Vec<(String, Json)> = vec![
+            ("request_latency".into(), self.request_latency.snapshot().to_json()),
+            ("queue_wait".into(), self.queue_wait.snapshot().to_json()),
+            ("eval_local".into(), self.eval_local.snapshot().to_json()),
+            ("eval_remote".into(), self.eval_remote.snapshot().to_json()),
+            ("eval_cache_hit".into(), self.eval_cache_hit.snapshot().to_json()),
+            ("remote_rtt".into(), self.remote_rtt.snapshot().to_json()),
+            ("journal_replay".into(), self.journal_replay.snapshot().to_json()),
+        ];
+        for (class, h) in self.class_queue_wait.lock().unwrap().iter() {
+            rows.push((format!("queue_wait_{class}"), h.snapshot().to_json()));
+        }
+        Json::Obj(rows)
     }
 
     /// DES throughput block.
@@ -455,5 +473,18 @@ mod tests {
         let des = m.des_json();
         assert_eq!(des.get("events").as_u64(), Some(5_000));
         assert!(des.get("events_per_sec").as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn class_queue_wait_histograms_appear_in_snapshot() {
+        let m = Metrics::new();
+        assert_eq!(m.histograms_json().get("queue_wait_p0"), &Json::Null);
+        m.class_queue_wait("p0").record(100);
+        m.class_queue_wait("p9").record(200);
+        m.class_queue_wait("p0").record(300); // same Arc: accumulates
+        let h = m.histograms_json();
+        assert_eq!(h.get("queue_wait_p0").get("count").as_u64(), Some(2));
+        assert_eq!(h.get("queue_wait_p9").get("count").as_u64(), Some(1));
+        assert_eq!(h.get("queue_wait_p9").get("max_ns").as_u64(), Some(200));
     }
 }

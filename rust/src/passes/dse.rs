@@ -13,7 +13,7 @@
 //!   (DES) evaluation;
 //! * **`iterative`** — the Fig 3 greedy loop as the sole candidate.
 //!
-//! Two objectives are available:
+//! Three objectives are available:
 //!
 //! * **analytic** (default) — the static bandwidth + resource analyses:
 //!   streaming makespan (seconds per app iteration over the bottleneck PC),
@@ -24,6 +24,11 @@
 //!   ([`crate::des`]) under a workload scenario; the score is the simulated
 //!   scenario makespan. Slower, so candidates are evaluated in parallel
 //!   (std threads, one cloned module per worker).
+//! * **`slo-score`** — des-score plus an SLO penalty
+//!   ([`crate::traffic::SloSpec`], `--slo "class=p99<MS"`): per-class p99
+//!   overshoot and trace deadline misses add penalties that dominate any
+//!   makespan, so the winner is the cheapest candidate that *meets the
+//!   tail* — which can differ from the raw-throughput winner.
 //!
 //! Candidate pipelines ([`strategies`], expanded by
 //! [`StrategyGrid`](crate::search::StrategyGrid)):
@@ -56,6 +61,7 @@ use crate::search::{
 };
 use crate::service::cache::EvalCache;
 use crate::service::remote::{RemoteEvaluator, WorkerPool};
+use crate::traffic::SloSpec;
 use crate::util::{f64_from_bits_json, f64_to_bits_json, ContentHash, Json};
 
 /// One evaluated candidate.
@@ -101,6 +107,11 @@ pub enum DseObjective {
     Analytic,
     /// Discrete-event simulation of `scenario` on each lowered candidate.
     DesScore { scenario: WorkloadScenario, config: DesConfig },
+    /// SLO-aware DES: the simulated makespan plus a penalty that dominates
+    /// it whenever a per-class p99 target ([`SloSpec`]) is violated or a
+    /// trace deadline missed — so the winner is the architecture that
+    /// *meets the tail*, not the one that merely drains the batch fastest.
+    SloScore { scenario: WorkloadScenario, config: DesConfig, slo: SloSpec },
 }
 
 impl Default for DseObjective {
@@ -121,6 +132,11 @@ impl DseObjective {
     /// des-score under a caller-chosen scenario.
     pub fn des_score_with(scenario: WorkloadScenario, config: DesConfig) -> Self {
         DseObjective::DesScore { scenario, config }
+    }
+
+    /// slo-score: des-score plus SLO violation / deadline-miss penalties.
+    pub fn slo_score_with(scenario: WorkloadScenario, config: DesConfig, slo: SloSpec) -> Self {
+        DseObjective::SloScore { scenario, config, slo }
     }
 }
 
@@ -233,6 +249,14 @@ pub fn objective_to_json(o: &DseObjective) -> Json {
             ("scenario", scenario.to_json()),
             ("config", config.to_json()),
         ]),
+        DseObjective::SloScore { scenario, config, slo } => Json::obj(vec![
+            ("kind", "slo-score".into()),
+            ("scenario", scenario.to_json()),
+            ("config", config.to_json()),
+            // the spec grammar round-trips floats shortest-form, so the
+            // reconstructed SloSpec Debug-renders byte-identically
+            ("slo", slo.spec().into()),
+        ]),
     }
 }
 
@@ -244,6 +268,11 @@ pub fn objective_from_json(j: &Json) -> Option<DseObjective> {
         "des-score" => Some(DseObjective::DesScore {
             scenario: WorkloadScenario::from_json(j.get("scenario"))?,
             config: DesConfig::from_json(j.get("config"))?,
+        }),
+        "slo-score" => Some(DseObjective::SloScore {
+            scenario: WorkloadScenario::from_json(j.get("scenario"))?,
+            config: DesConfig::from_json(j.get("config"))?,
+            slo: SloSpec::parse(j.get("slo").as_str()?).ok()?,
         }),
         _ => None,
     }
@@ -330,25 +359,31 @@ pub fn evaluate_candidate(
         des_p99_latency_s: None,
         score: if fits && makespan > 0.0 { makespan } else { f64::INFINITY },
     };
-    if let DseObjective::DesScore { scenario, config } = objective {
-        let mut cfg = config.clone();
-        cfg.utilization = util;
-        let sim = build_architecture(m, plat).and_then(|arch| simulate(&arch, scenario, &cfg));
-        match sim {
-            Ok(rep) => {
-                cand.des_makespan_s = Some(rep.makespan_s);
-                cand.des_p99_latency_s = Some(rep.p99_job_latency_s);
-                cand.score = if fits
-                    && rep.makespan_s > 0.0
-                    && rep.jobs_completed == rep.jobs_released
-                {
-                    rep.makespan_s
-                } else {
-                    f64::INFINITY
-                };
-            }
-            Err(_) => cand.score = f64::INFINITY, // unlowerable / wedged candidate
+    let (scenario, config, slo) = match objective {
+        DseObjective::Analytic => return cand,
+        DseObjective::DesScore { scenario, config } => (scenario, config, None),
+        DseObjective::SloScore { scenario, config, slo } => (scenario, config, Some(slo)),
+    };
+    let mut cfg = config.clone();
+    cfg.utilization = util;
+    let sim = build_architecture(m, plat).and_then(|arch| simulate(&arch, scenario, &cfg));
+    match sim {
+        Ok(rep) => {
+            cand.des_makespan_s = Some(rep.makespan_s);
+            cand.des_p99_latency_s = Some(rep.p99_job_latency_s);
+            cand.score = if fits
+                && rep.makespan_s > 0.0
+                && rep.jobs_completed == rep.jobs_released
+            {
+                // slo-score: any violated target or missed deadline adds a
+                // penalty that dominates every makespan, so a compliant
+                // candidate always outranks a violating one
+                rep.makespan_s + slo.map(|s| s.penalty(&rep)).unwrap_or(0.0)
+            } else {
+                f64::INFINITY
+            };
         }
+        Err(_) => cand.score = f64::INFINITY, // unlowerable / wedged candidate
     }
     cand
 }
@@ -656,6 +691,86 @@ mod tests {
             best_striped.des_makespan_s.unwrap(),
             best_unstriped.des_makespan_s.unwrap()
         );
+    }
+
+    /// The acceptance pin for `slo-score`: a DSE space where the candidate
+    /// that drains the batch fastest does *not* have the tightest tail, so
+    /// the two objectives crown different winners. Heavy-tailed (Pareto)
+    /// service makes the p99 and makespan orderings disagree on many seeds;
+    /// the test walks a pinned seed range, finds the first disagreement, and
+    /// places the SLO bound between the two tails — from there the outcome
+    /// is structural: the rival complies (score = its makespan, milliseconds)
+    /// while the throughput winner pays the 1e6/s overshoot penalty.
+    #[test]
+    fn slo_score_picks_a_different_winner_than_des_score() {
+        use crate::des::ServiceDist;
+        let m = replication_only_module();
+        let plat = builtin("generic-ddr").unwrap();
+        // calibrate the offered load off the single-CU design: one
+        // closed-loop iteration under deterministic service measures the
+        // per-job service time, so the rate overloads factor 1 (~2x) while
+        // factor 4 runs at half load — the replicated designs contend, the
+        // flat ones drown, and the interesting ordering is among replicas
+        let mut base = m.clone();
+        let mut ctx = PassContext::new(plat.clone());
+        parse_pipeline("sanitize", &mut ctx).unwrap().run(&mut base, &ctx).unwrap();
+        let arch = build_architecture(&base, &plat).unwrap();
+        let cal =
+            simulate(&arch, &WorkloadScenario::closed_loop(1), &DesConfig::default()).unwrap();
+        let scenario = WorkloadScenario::poisson(2.0 / cal.makespan_s, 120);
+        let opts = |seed: u64, slo: Option<SloSpec>| {
+            let config = DesConfig {
+                seed,
+                burst_elems: 512,
+                service_dist: ServiceDist::Pareto { alpha: 1.4 },
+                ..DesConfig::default()
+            };
+            let objective = match slo {
+                Some(s) => DseObjective::slo_score_with(scenario.clone(), config, s),
+                None => DseObjective::des_score_with(scenario.clone(), config),
+            };
+            DseOptions { factors: vec![2, 3, 4], objective, threads: 2, ..DseOptions::default() }
+        };
+        let mut diverged = false;
+        for seed in 0..64_u64 {
+            let des = run_dse_with(&m, &plat, &opts(seed, None)).unwrap();
+            let w =
+                des.candidates.iter().find(|c| c.strategy == des.best_strategy).unwrap();
+            let (Some(w_mk), Some(w_p99)) = (w.des_makespan_s, w.des_p99_latency_s) else {
+                panic!("des-score winner must carry DES columns")
+            };
+            // the tightest tail among the losers; a clear (>20%) gap below
+            // the winner's tail leaves room to pin an SLO bound between them
+            let Some(rival) = des
+                .candidates
+                .iter()
+                .filter(|c| c.score.is_finite() && c.strategy != des.best_strategy)
+                .filter(|c| c.des_p99_latency_s.is_some())
+                .min_by(|a, b| a.des_p99_latency_s.partial_cmp(&b.des_p99_latency_s).unwrap())
+            else {
+                continue;
+            };
+            let r_p99 = rival.des_p99_latency_s.unwrap();
+            if r_p99 >= 0.8 * w_p99 {
+                continue;
+            }
+            let t_ms = 0.5 * (r_p99 + w_p99) * 1e3;
+            let slo = SloSpec::parse(&format!("*=p99<{t_ms}")).unwrap();
+            let rep = run_dse_with(&m, &plat, &opts(seed, Some(slo))).unwrap();
+            assert_ne!(
+                rep.best_strategy, des.best_strategy,
+                "seed {seed}: slo-score must dethrone the makespan winner \
+                 (winner p99 {w_p99} vs rival p99 {r_p99}, bound {t_ms} ms)"
+            );
+            let sw =
+                rep.candidates.iter().find(|c| c.strategy == rep.best_strategy).unwrap();
+            // the slo winner trades raw throughput for the tail
+            assert!(sw.des_p99_latency_s.unwrap() < w_p99);
+            assert!(sw.des_makespan_s.unwrap() >= w_mk);
+            diverged = true;
+            break;
+        }
+        assert!(diverged, "no seed in 0..64 produced a latency/throughput tension");
     }
 
     #[test]

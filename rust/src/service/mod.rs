@@ -9,7 +9,9 @@
 //! * **[`proto`]** — newline-delimited JSON over TCP; malformed input gets
 //!   structured errors, never a dropped connection;
 //! * **[`queue`]** — blocking MPMC queue feeding a std-thread worker pool
-//!   (`--jobs N`);
+//!   (`--jobs N`); priority-aware, so a request carrying `priority` jumps
+//!   queued lower-priority work, and one carrying `deadline_ms` is shed
+//!   with a `deadline-expired` error instead of executing late;
 //! * **[`cache`]** — content-addressed, single-flight evaluation cache.
 //!   Keys hash *what is being evaluated* (module IR, platform spec,
 //!   pipeline/strategy, objective, scenario, seed), so cache placement can
@@ -310,7 +312,11 @@ fn handle_conn(
             }
             Ok(req) if req.cmd.is_job() => {
                 let (tx, rx) = mpsc::channel();
-                if queue.push(Job { req, reply: tx, enqueued: std::time::Instant::now() }) {
+                // requests carrying `priority` jump ahead of lower-priority
+                // queued jobs; absent = 0, the back of the line
+                let prio = req.priority.unwrap_or(0).min(u32::MAX as u64) as u32;
+                let job = Job { req, reply: tx, enqueued: std::time::Instant::now() };
+                if queue.push_prio(job, prio) {
                     match rx.recv() {
                         Ok(r) => r,
                         Err(_) => error_response(&ProtoError::new(

@@ -14,10 +14,14 @@
 //! {"cmd": "dse",  "ir": "<mlir>", "platform": "u280", "objective": "des-score",
 //!  "scenario": "closed:4", "seed": 42, "factors": [2, 4],
 //!  "driver": "successive-halving", "budget": 3, "id": 1}
+//! {"cmd": "dse",  "ir": "<mlir>", "objective": "slo-score",
+//!  "slo": "interactive=p99<5", "autoscale": "0.001:256:16:1:4",
+//!  "scenario_json": {"name": "trace-3job-...", "arrivals": {...}},
+//!  "priority": 2, "deadline_ms": 5000}
 //! {"cmd": "des",  "ir": "<mlir>", "pipeline": "sanitize, iris, channel-reassign",
 //!  "scenario": "poisson:1000:20", "seed": 7}
 //! {"cmd": "flow", "ir": "<mlir>", "platform": "u280"}
-//! {"cmd": "handshake", "proto_version": 1,
+//! {"cmd": "handshake", "proto_version": 2,
 //!  "shard_map": {"index": 0, "total": 2, "workers": ["h1:7900", "h2:7900"]}}
 //! {"cmd": "eval-candidate", "ir": "<mlir>", "platform_json": {...},
 //!  "objective_json": {"kind": "analytic"}, "point_label": "full(x4)",
@@ -47,6 +51,17 @@
 //! `factors` must be a non-empty array of integers >= 1 when present; it is
 //! normalized (sorted, deduplicated) before evaluation and cache keying.
 //!
+//! Traffic fields: `scenario_json` carries a full inline scenario
+//! ([`crate::des::WorkloadScenario::to_json`]) — the way `submit` ships a
+//! local `trace:<file>` to a daemon that cannot see the file; it overrides
+//! `scenario`. `slo` (an SLO spec, job commands) selects the `slo-score`
+//! objective's targets; `autoscale` (a policy spec) turns on elastic
+//! replicas inside the DES. `priority` (integer, default 0) orders the
+//! request in the serve queue ahead of lower-priority jobs; `deadline_ms`
+//! sheds it with a `deadline-expired` error if it is still queued when the
+//! deadline lapses. Per-priority queue-wait histograms land in the
+//! `metrics` verb (`olympus stats --raw`).
+//!
 //! Responses: `{"ok": true, "id": ..., "cached": bool, "key": "<32-hex>",
 //! "result": {...}}` — `key` is the content-address of the evaluation
 //! (stable across servers), `cached` whether this answer skipped
@@ -64,7 +79,11 @@ use crate::util::Json;
 /// `proto-mismatch` instead of silently computing keys the coordinator
 /// would disagree with. Bump whenever the handshake, the `eval-candidate`
 /// fields, or any wire codec they carry changes shape.
-pub const PROTO_VERSION: u64 = 1;
+///
+/// v2: traffic fields (`scenario_json`, `slo`, `autoscale`, `priority`,
+/// `deadline_ms`), the `slo-score` objective and the trace/diurnal
+/// scenario codecs.
+pub const PROTO_VERSION: u64 = 2;
 
 /// What a request asks the service to do.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -142,11 +161,26 @@ pub struct Request {
     pub platform_json: Option<Json>,
     /// Explicit pass pipeline (skips DSE for `des`/`flow`).
     pub pipeline: Option<String>,
-    /// "analytic" (default) or "des-score".
+    /// "analytic" (default), "des-score" or "slo-score".
     pub objective: Option<String>,
     /// Workload scenario spec (`closed:N` | `poisson:HZ:N` |
-    /// `bursty:HZ:ON:OFF:N`).
+    /// `bursty:HZ:ON:OFF:N` | `diurnal:HZ:AMPL:PERIOD:N`).
     pub scenario: Option<String>,
+    /// Full inline scenario ([`crate::des::WorkloadScenario::to_json`]);
+    /// overrides `scenario`. How `submit` ships a local `trace:<file>` to a
+    /// daemon without a shared filesystem.
+    pub scenario_json: Option<Json>,
+    /// SLO spec (`CLASS=p99<MS[,...]`) for the `slo-score` objective.
+    pub slo: Option<String>,
+    /// Autoscale policy spec (`INTERVAL_S:UP:DOWN:MIN:MAX`) enabling
+    /// elastic replicas inside the DES.
+    pub autoscale: Option<String>,
+    /// Serve-queue priority of this request (default 0; higher jumps
+    /// ahead of lower-priority queued jobs).
+    pub priority: Option<u64>,
+    /// Queue deadline, ms: a job still waiting when it lapses is answered
+    /// with a `deadline-expired` error instead of evaluated.
+    pub deadline_ms: Option<u64>,
     /// DES seed (engine default when absent).
     pub seed: Option<u64>,
     /// Replication factors for DSE (absent = defaults). Normalized (sorted,
@@ -247,6 +281,8 @@ pub fn parse_request(line: &str) -> Result<Request, ProtoError> {
     let budget = uint_field("budget")?;
     let search_seed = uint_field("search_seed")?;
     let proto_version = uint_field("proto_version")?;
+    let priority = uint_field("priority")?;
+    let deadline_ms = uint_field("deadline_ms")?;
     if cmd == Command::EvalCandidate && v.get("point_pipeline").as_str().is_none() {
         return Err(ProtoError::new(
             "bad-request",
@@ -294,6 +330,10 @@ pub fn parse_request(line: &str) -> Result<Request, ProtoError> {
         Json::Null => None,
         j => Some(j.clone()),
     };
+    let scenario_json = match v.get("scenario_json") {
+        Json::Null => None,
+        j => Some(j.clone()),
+    };
     Ok(Request {
         cmd,
         id,
@@ -303,6 +343,11 @@ pub fn parse_request(line: &str) -> Result<Request, ProtoError> {
         pipeline: opt_str("pipeline"),
         objective: opt_str("objective"),
         scenario: opt_str("scenario"),
+        scenario_json,
+        slo: opt_str("slo"),
+        autoscale: opt_str("autoscale"),
+        priority,
+        deadline_ms,
         seed,
         factors,
         driver: opt_str("driver"),
@@ -423,6 +468,31 @@ mod tests {
         assert_eq!(v.get("error").get("code").as_str(), Some("bad-json"));
         // single line (newline-delimited framing)
         assert!(!ok.contains('\n') && !err.contains('\n'));
+    }
+
+    #[test]
+    fn traffic_fields_parse_and_validate() {
+        let r = parse_request(
+            r#"{"cmd": "dse", "ir": "x", "objective": "slo-score",
+                "slo": "interactive=p99<5", "autoscale": "0.001:256:16:1:4",
+                "priority": 3, "deadline_ms": 5000,
+                "scenario_json": {"name": "t", "arrivals": {"kind": "closed", "jobs": "4"}}}"#,
+        )
+        .unwrap();
+        assert_eq!(r.slo.as_deref(), Some("interactive=p99<5"));
+        assert_eq!(r.autoscale.as_deref(), Some("0.001:256:16:1:4"));
+        assert_eq!(r.priority, Some(3));
+        assert_eq!(r.deadline_ms, Some(5000));
+        let sj = r.scenario_json.as_ref().expect("scenario_json parsed");
+        assert_eq!(sj.get("arrivals").get("kind").as_str(), Some("closed"));
+        // absent fields default to None; bad types are structured errors
+        let r = parse_request(r#"{"cmd": "ping"}"#).unwrap();
+        assert_eq!((r.priority, r.deadline_ms), (None, None));
+        assert!(r.slo.is_none() && r.autoscale.is_none() && r.scenario_json.is_none());
+        let e = parse_request(r#"{"cmd": "dse", "ir": "x", "priority": -2}"#).unwrap_err();
+        assert_eq!(e.code, "bad-request");
+        assert!(e.message.contains("priority"), "{}", e.message);
+        assert!(parse_request(r#"{"cmd": "dse", "ir": "x", "deadline_ms": 0.5}"#).is_err());
     }
 
     #[test]

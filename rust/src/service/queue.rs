@@ -1,12 +1,21 @@
 //! Blocking MPMC job queue for the worker pool (condvar over a `VecDeque`;
 //! no external crates, no lock-free cleverness — the queue holds whole DSE
 //! jobs, so it is never the hot path).
+//!
+//! Jobs carry a scheduling priority: [`push_prio`] inserts ahead of every
+//! strictly-lower-priority job already queued, while jobs of equal priority
+//! stay FIFO. Plain [`push`] is priority 0, so a queue that never sees an
+//! elevated priority behaves exactly like the original FIFO.
+//!
+//! [`push`]: JobQueue::push
+//! [`push_prio`]: JobQueue::push_prio
 
 use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
 
 struct State<T> {
-    jobs: VecDeque<T>,
+    /// Kept sorted by (priority desc, arrival order asc).
+    jobs: VecDeque<(u32, T)>,
     closed: bool,
 }
 
@@ -30,15 +39,32 @@ impl<T> JobQueue<T> {
         }
     }
 
-    /// Enqueue a job. Returns `false` (dropping the job) after [`close`].
+    /// Enqueue a job at priority 0. Returns `false` (dropping the job)
+    /// after [`close`].
     ///
     /// [`close`]: JobQueue::close
     pub fn push(&self, job: T) -> bool {
+        self.push_prio(job, 0)
+    }
+
+    /// Enqueue a job ahead of every strictly-lower-priority job already
+    /// queued; equal-priority jobs stay FIFO. Returns `false` (dropping the
+    /// job) after [`close`].
+    ///
+    /// [`close`]: JobQueue::close
+    pub fn push_prio(&self, job: T, prio: u32) -> bool {
         let mut s = self.state.lock().unwrap();
         if s.closed {
             return false;
         }
-        s.jobs.push_back(job);
+        // Insertion point: just past the last entry at `>=` this priority.
+        // With uniform priorities that is always the back, so the common
+        // case stays O(1) push_back.
+        let at = match s.jobs.back() {
+            Some((p, _)) if *p >= prio => s.jobs.len(),
+            _ => s.jobs.iter().rposition(|(p, _)| *p >= prio).map_or(0, |i| i + 1),
+        };
+        s.jobs.insert(at, (prio, job));
         drop(s);
         self.available.notify_one();
         true
@@ -49,7 +75,7 @@ impl<T> JobQueue<T> {
     pub fn pop(&self) -> Option<T> {
         let mut s = self.state.lock().unwrap();
         loop {
-            if let Some(job) = s.jobs.pop_front() {
+            if let Some((_, job)) = s.jobs.pop_front() {
                 return Some(job);
             }
             if s.closed {
@@ -88,6 +114,20 @@ mod tests {
         assert_eq!(q.len(), 2);
         assert_eq!(q.pop(), Some(1));
         assert_eq!(q.pop(), Some(2));
+    }
+
+    #[test]
+    fn priority_jumps_queue_but_equal_priorities_stay_fifo() {
+        let q = JobQueue::new();
+        assert!(q.push(1)); // prio 0
+        assert!(q.push(2)); // prio 0
+        assert!(q.push_prio(10, 5));
+        assert!(q.push_prio(11, 5)); // same prio: behind 10
+        assert!(q.push_prio(20, 9)); // highest: front of everything
+        assert!(q.push(3)); // prio 0: back of the line
+        for want in [20, 10, 11, 1, 2, 3] {
+            assert_eq!(q.pop(), Some(want));
+        }
     }
 
     #[test]

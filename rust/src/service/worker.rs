@@ -28,6 +28,7 @@ use crate::passes::{
 };
 use crate::platform::{builtin, builtin_names, PlatformSpec};
 use crate::search::{CandidatePoint, ObjectiveEvaluator};
+use crate::traffic::{AutoscalePolicy, SloSpec};
 use crate::util::Json;
 
 use super::cache::{CacheStats, EvalCache};
@@ -133,10 +134,32 @@ impl ServiceState {
     }
 }
 
-/// Worker thread body: drain the queue until it closes.
+/// Worker thread body: drain the queue until it closes. Queue wait is
+/// recorded overall and per scheduling class (`p{prio}`); a job whose
+/// `deadline_ms` expired while it sat queued is shed with a structured
+/// `deadline-expired` error instead of burning an evaluation on an answer
+/// the client no longer wants.
 pub fn worker_loop(queue: Arc<JobQueue<Job>>, state: Arc<ServiceState>) {
     while let Some(job) = queue.pop() {
-        crate::obs::metrics().queue_wait.record_duration(job.enqueued.elapsed());
+        let m = crate::obs::metrics();
+        let waited = job.enqueued.elapsed();
+        m.queue_wait.record_duration(waited);
+        m.class_queue_wait(&format!("p{}", job.req.priority.unwrap_or(0)))
+            .record_duration(waited);
+        if let Some(limit) = job.req.deadline_ms {
+            if waited.as_millis() > u128::from(limit) {
+                let mut e = ProtoError::new(
+                    "deadline-expired",
+                    format!(
+                        "job queued {} ms, past its {limit} ms deadline",
+                        waited.as_millis()
+                    ),
+                );
+                e.id = job.req.id.clone();
+                let _ = job.reply.send(error_response(&e));
+                continue;
+            }
+        }
         let resp = execute_request(&state, &job.req);
         // a dropped receiver just means the client went away mid-job
         let _ = job.reply.send(resp);
@@ -471,15 +494,38 @@ fn build_flow(
     req: &Request,
     platform: PlatformSpec,
 ) -> Result<Flow, ProtoError> {
-    let scenario = match req.scenario.as_deref() {
-        Some(spec) => {
-            Some(WorkloadScenario::parse(spec).map_err(|e| ProtoError::new("bad-request", e))?)
-        }
-        None => None,
+    // a pre-resolved `scenario_json` (how the CLI ships trace files, so the
+    // daemon never needs the client's filesystem) wins over the spec string;
+    // the string form still resolves `trace:` against the daemon's own disk
+    let scenario = match (&req.scenario_json, req.scenario.as_deref()) {
+        (Some(j), _) => Some(WorkloadScenario::from_json(j).ok_or_else(|| {
+            ProtoError::new("bad-request", "undecodable 'scenario_json' (version skew?)")
+        })?),
+        (None, Some(spec)) => Some(
+            crate::traffic::scenario_from_spec(spec)
+                .map_err(|e| ProtoError::new("bad-request", e))?,
+        ),
+        (None, None) => None,
     };
     let mut cfg = DesConfig::default();
     if let Some(seed) = req.seed {
         cfg.seed = seed;
+    }
+    if let Some(spec) = req.autoscale.as_deref() {
+        cfg.autoscale =
+            Some(AutoscalePolicy::parse(spec).map_err(|e| ProtoError::new("bad-request", e))?);
+    }
+    let slo = match req.slo.as_deref() {
+        Some(spec) => Some(SloSpec::parse(spec).map_err(|e| ProtoError::new("bad-request", e))?),
+        None => None,
+    };
+    // an SLO only scores under the slo-score objective; alongside an
+    // explicit analytic/des-score objective it would be silently dead
+    if slo.is_some() && matches!(req.objective.as_deref(), Some("analytic") | Some("des-score")) {
+        return Err(ProtoError::new(
+            "bad-request",
+            "'slo' only scores under objective 'slo-score'; drop it or switch objective",
+        ));
     }
     // an explicit pipeline skips the DSE entirely, so search fields on the
     // same request would be silently dead — reject, mirroring the CLI
@@ -514,16 +560,27 @@ fn build_flow(
     )
     .map_err(|e| ProtoError::new("bad-request", e))?;
     flow = flow.with_driver(driver);
-    match req.objective.as_deref() {
-        None | Some("analytic") => {}
-        Some("des-score") => {
+    match (req.objective.as_deref(), &slo) {
+        (None, None) | (Some("analytic"), _) => {}
+        // a bare `slo` implies the slo-score objective
+        (None, Some(sl)) | (Some("slo-score"), Some(sl)) => {
+            let sc = scenario.clone().unwrap_or_else(|| WorkloadScenario::closed_loop(4));
+            flow = flow.with_objective(DseObjective::slo_score_with(sc, cfg.clone(), sl.clone()));
+        }
+        (Some("slo-score"), None) => {
+            return Err(ProtoError::new(
+                "bad-request",
+                "objective 'slo-score' requires string field 'slo' (CLASS=p99<MS[,...])",
+            ));
+        }
+        (Some("des-score"), _) => {
             let sc = scenario.clone().unwrap_or_else(|| WorkloadScenario::closed_loop(4));
             flow = flow.with_objective(DseObjective::des_score_with(sc, cfg.clone()));
         }
-        Some(other) => {
+        (Some(other), _) => {
             return Err(ProtoError::new(
                 "bad-request",
-                format!("unknown objective '{other}' (want analytic | des-score)"),
+                format!("unknown objective '{other}' (want analytic | des-score | slo-score)"),
             ));
         }
     }
@@ -542,8 +599,13 @@ fn build_flow(
             match &req.pipeline {
                 Some(p) => flow = flow.with_pipeline(p),
                 // no explicit pipeline: DSE picks the design, scored by the
-                // DES too (mirrors `olympus des`)
-                None => flow = flow.with_objective(DseObjective::des_score_with(sc, cfg)),
+                // DES too (mirrors `olympus des`) — unless an slo-score
+                // objective is already in charge
+                None => {
+                    if slo.is_none() && req.objective.as_deref() != Some("slo-score") {
+                        flow = flow.with_objective(DseObjective::des_score_with(sc, cfg));
+                    }
+                }
             }
         }
         Command::Flow => {
@@ -703,6 +765,83 @@ mod tests {
         let d = Json::parse(&execute_request(&state, &dead)).unwrap();
         assert_eq!(d.get("ok"), &Json::Bool(false));
         assert_eq!(d.get("error").get("code").as_str(), Some("bad-request"));
+    }
+
+    #[test]
+    fn slo_objective_serves_and_keys_apart_from_des_score() {
+        let state = ServiceState::new(0, 1);
+        // slo-score without the slo field is a structured error
+        let missing = request(r#"{"objective": "slo-score", "factors": [2]}"#);
+        let v = Json::parse(&execute_request(&state, &missing)).unwrap();
+        assert_eq!(v.get("ok"), &Json::Bool(false));
+        assert_eq!(v.get("error").get("code").as_str(), Some("bad-request"));
+        assert!(v.get("error").get("message").as_str().unwrap().contains("'slo'"), "{v}");
+        // an slo that can never score (wrong objective) is dead: rejected
+        let dead = request(r#"{"objective": "des-score", "slo": "*=p99<5", "factors": [2]}"#);
+        let d = Json::parse(&execute_request(&state, &dead)).unwrap();
+        assert_eq!(d.get("error").get("code").as_str(), Some("bad-request"));
+        // slo-score serves, and its response key differs from des-score on
+        // the otherwise-identical request (the objective rides the key)
+        let base = r#""factors": [2], "scenario": "closed:2", "seed": 3"#;
+        let slo = request(&format!(
+            r#"{{"objective": "slo-score", "slo": "*=p99<0.0001", {base}}}"#
+        ));
+        let des = request(&format!(r#"{{"objective": "des-score", {base}}}"#));
+        let s = Json::parse(&execute_request(&state, &slo)).unwrap();
+        let e = Json::parse(&execute_request(&state, &des)).unwrap();
+        assert_eq!(s.get("ok"), &Json::Bool(true), "{s}");
+        assert_eq!(e.get("ok"), &Json::Bool(true), "{e}");
+        assert_ne!(s.get("key"), e.get("key"), "slo must ride the response key");
+        assert!(s.get("result").get("table").as_str().unwrap().contains("best: "));
+    }
+
+    #[test]
+    fn autoscale_and_scenario_json_ride_the_response_key() {
+        let state = ServiceState::new(0, 1);
+        let mk = |extra: &str| {
+            let mut r = request(extra);
+            r.cmd = Command::Des;
+            r.pipeline = Some("sanitize".into());
+            r
+        };
+        let plain = mk(r#"{"scenario": "closed:2", "seed": 7}"#);
+        let scaled = mk(r#"{"scenario": "closed:2", "seed": 7, "autoscale": "0.001:4:0:1:4"}"#);
+        let p = Json::parse(&execute_request(&state, &plain)).unwrap();
+        let s = Json::parse(&execute_request(&state, &scaled)).unwrap();
+        assert_eq!(p.get("ok"), &Json::Bool(true), "{p}");
+        assert_eq!(s.get("ok"), &Json::Bool(true), "{s}");
+        assert_ne!(p.get("key"), s.get("key"), "autoscale policy must ride the key");
+        // a scenario shipped pre-resolved as JSON keys identically to the
+        // same scenario named by spec string
+        let sc = WorkloadScenario::closed_loop(2);
+        let mut by_json = mk(r#"{"seed": 7}"#);
+        by_json.scenario = None;
+        by_json.scenario_json = Some(sc.to_json());
+        let j = Json::parse(&execute_request(&state, &by_json)).unwrap();
+        assert_eq!(j.get("ok"), &Json::Bool(true), "{j}");
+        assert_eq!(j.get("key"), p.get("key"), "resolved scenario keys like its spec");
+        assert_eq!(j.get("cached"), &Json::Bool(true), "and replays the cached payload");
+        // a malformed autoscale spec fails structured
+        let bad = mk(r#"{"scenario": "closed:2", "autoscale": "nope"}"#);
+        let b = Json::parse(&execute_request(&state, &bad)).unwrap();
+        assert_eq!(b.get("error").get("code").as_str(), Some("bad-request"));
+    }
+
+    #[test]
+    fn expired_deadline_sheds_job_from_the_queue() {
+        let state = Arc::new(ServiceState::new(0, 1));
+        let queue = Arc::new(JobQueue::new());
+        let (tx, rx) = mpsc::channel();
+        let mut req = request("{}");
+        req.deadline_ms = Some(0);
+        // enqueued in the past, so any deadline has expired by pickup
+        let enqueued = std::time::Instant::now() - std::time::Duration::from_millis(50);
+        queue.push(Job { req, reply: tx, enqueued });
+        queue.close();
+        worker_loop(queue, state);
+        let resp = Json::parse(&rx.recv().unwrap()).unwrap();
+        assert_eq!(resp.get("ok"), &Json::Bool(false));
+        assert_eq!(resp.get("error").get("code").as_str(), Some("deadline-expired"));
     }
 
     #[test]

@@ -1,0 +1,138 @@
+//! Elastic replicas: an autoscaler controller that runs *inside* the DES,
+//! adjusting each CU's active replica count from observed backlog — the
+//! `replicate` pass as a runtime knob instead of a static design choice.
+//!
+//! The model is activation, not re-layout: the fabric provisions
+//! `max_replicas` copies, the controller clocks between `min_replicas` and
+//! `max_replicas` of them, and an active count of `r` serves chunks `r`
+//! times faster (perfect striping, no migration cost). Coarse, but it
+//! answers the DSE question that matters: does a smaller always-on design
+//! plus elasticity meet the tail, or does the workload need static width?
+
+use crate::util::{
+    f64_from_bits_json, f64_to_bits_json, u64_from_str_json, u64_to_str_json, Json,
+};
+
+/// Controller policy (see the module docs). Evaluated on a fixed simulated-
+/// time interval per CU; one step up or down per tick.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AutoscalePolicy {
+    /// Controller period, simulated seconds.
+    pub interval_s: f64,
+    /// Scale up when a CU's input backlog (elems; pending output elems for
+    /// source-like CUs) reaches this.
+    pub scale_up_backlog: u64,
+    /// Scale down when backlog is at or below this.
+    pub scale_down_backlog: u64,
+    /// Active-replica floor (>= 1).
+    pub min_replicas: u32,
+    /// Active-replica ceiling (>= min).
+    pub max_replicas: u32,
+}
+
+impl AutoscalePolicy {
+    /// Parse `INTERVAL_S:UP:DOWN:MIN:MAX` (the `--autoscale` flag).
+    pub fn parse(spec: &str) -> Result<AutoscalePolicy, String> {
+        let form = "INTERVAL_S:UP_BACKLOG:DOWN_BACKLOG:MIN_REPLICAS:MAX_REPLICAS";
+        let bad = |why: String| format!("bad autoscale spec '{spec}': {why} (want {form})");
+        let parts: Vec<&str> = spec.split(':').collect();
+        let [iv, up, down, min, max] = parts.as_slice() else {
+            return Err(bad(format!("{} fields", parts.len())));
+        };
+        let interval_s: f64 =
+            iv.parse().map_err(|_| bad(format!("interval '{iv}' is not a number")))?;
+        if !interval_s.is_finite() || interval_s <= 0.0 {
+            return Err(bad("interval must be finite and > 0".to_string()));
+        }
+        let uint = |s: &str, what: &str| -> Result<u64, String> {
+            s.parse().map_err(|_| bad(format!("{what} '{s}' is not a non-negative integer")))
+        };
+        let scale_up_backlog = uint(up, "up threshold")?;
+        let scale_down_backlog = uint(down, "down threshold")?;
+        if scale_down_backlog >= scale_up_backlog {
+            return Err(bad("down threshold must be below up threshold".to_string()));
+        }
+        let min_replicas = uint(min, "min replicas")? as u32;
+        let max_replicas = uint(max, "max replicas")? as u32;
+        if min_replicas == 0 || max_replicas < min_replicas {
+            return Err(bad("need 1 <= min <= max replicas".to_string()));
+        }
+        Ok(AutoscalePolicy {
+            interval_s,
+            scale_up_backlog,
+            scale_down_backlog,
+            min_replicas,
+            max_replicas,
+        })
+    }
+
+    /// Render back to the [`AutoscalePolicy::parse`] form
+    /// (shortest-round-trip float, so `parse(spec()) == self` bit-for-bit).
+    pub fn spec(&self) -> String {
+        format!(
+            "{}:{}:{}:{}:{}",
+            self.interval_s,
+            self.scale_up_backlog,
+            self.scale_down_backlog,
+            self.min_replicas,
+            self.max_replicas
+        )
+    }
+
+    /// Wire codec (travels inside [`crate::des::DesConfig::to_json`];
+    /// floats as raw bit patterns so reconstructed values `Debug`-render —
+    /// and therefore cache-key — byte-identically).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("interval_s", f64_to_bits_json(self.interval_s)),
+            ("scale_up_backlog", u64_to_str_json(self.scale_up_backlog)),
+            ("scale_down_backlog", u64_to_str_json(self.scale_down_backlog)),
+            ("min_replicas", u64_to_str_json(self.min_replicas as u64)),
+            ("max_replicas", u64_to_str_json(self.max_replicas as u64)),
+        ])
+    }
+
+    /// Inverse of [`AutoscalePolicy::to_json`].
+    pub fn from_json(j: &Json) -> Option<AutoscalePolicy> {
+        Some(AutoscalePolicy {
+            interval_s: f64_from_bits_json(j.get("interval_s"))?,
+            scale_up_backlog: u64_from_str_json(j.get("scale_up_backlog"))?,
+            scale_down_backlog: u64_from_str_json(j.get("scale_down_backlog"))?,
+            min_replicas: u64_from_str_json(j.get("min_replicas"))? as u32,
+            max_replicas: u64_from_str_json(j.get("max_replicas"))? as u32,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_spec_round_trips() {
+        let p = AutoscalePolicy::parse("0.0005:256:16:1:4").unwrap();
+        assert_eq!(p.min_replicas, 1);
+        assert_eq!(p.max_replicas, 4);
+        assert_eq!(AutoscalePolicy::parse(&p.spec()).unwrap(), p);
+    }
+
+    #[test]
+    fn bad_specs_are_rejected_with_the_form() {
+        for bad in [
+            "", "1:2:3", "x:256:16:1:4", "inf:256:16:1:4", "0:256:16:1:4", "0.1:16:256:1:4",
+            "0.1:256:16:0:4", "0.1:256:16:4:1", "0.1:256:16:1:x",
+        ] {
+            let err = AutoscalePolicy::parse(bad).unwrap_err();
+            assert!(err.contains("INTERVAL_S"), "'{bad}' -> {err}");
+        }
+    }
+
+    #[test]
+    fn json_codec_round_trips_debug_identically() {
+        let p = AutoscalePolicy::parse("0.001:128:8:2:6").unwrap();
+        let back = AutoscalePolicy::from_json(&Json::parse(&p.to_json().to_string()).unwrap())
+            .expect("decodes");
+        assert_eq!(back, p);
+        assert_eq!(format!("{back:?}"), format!("{p:?}"));
+    }
+}

@@ -1,0 +1,35 @@
+//! `traffic` — production traffic modeling and SLO-aware optimization.
+//!
+//! The DES started life as a throughput benchmark: toy arrival shapes,
+//! deterministic or exponential service, one anonymous job class, scored by
+//! makespan. Production serving traffic is none of those things — service
+//! times are heavy-tailed, load is diurnal, requests carry priorities and
+//! deadlines, and the number that matters is a per-class p99, not a mean.
+//! This subsystem closes that gap:
+//!
+//! * **[`trace`]** — trace-driven replay: `--scenario trace:<file>` parses
+//!   a checksummed file of timestamped, class-tagged, deadline-tagged jobs
+//!   ([`TraceJob`]); scenario identity is content-hashed, so cache keys are
+//!   path- and process-independent.
+//! * **[`slo`]** — [`SloSpec`] (`--slo "interactive=p99<5"`): per-class
+//!   tail targets that the `slo-score` DSE objective scores against, so
+//!   `olympus dse` can pick the architecture that *meets the tail* over
+//!   the one that merely drains the batch fastest.
+//! * **[`autoscale`]** — [`AutoscalePolicy`] (`--autoscale`): an elastic-
+//!   replica controller inside the DES, turning the `replicate` pass into
+//!   a runtime knob.
+//!
+//! Heavy-tailed service itself lives on
+//! [`crate::des::ServiceDist`] (`LogNormal`/`Pareto`), and per-class
+//! latency/deadline accounting on [`crate::des::DesReport`]; this module
+//! holds the traffic-shaping vocabulary those consume.
+
+pub mod autoscale;
+pub mod slo;
+pub mod trace;
+
+pub use autoscale::AutoscalePolicy;
+pub use slo::{SloSpec, SloTarget};
+pub use trace::{
+    load_trace_scenario, parse_trace, render_trace, scenario_from_spec, trace_scenario, TraceJob,
+};

@@ -1,0 +1,171 @@
+//! SLO specs: per-class tail-latency targets the `slo-score` DSE objective
+//! optimizes against (`--slo "interactive=p99<5,batch=p99<50"`).
+
+use crate::des::DesReport;
+
+/// One target: class `class` must keep p99 job latency under `p99_ms`.
+/// Class `*` targets the whole-run p99 across every class.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SloTarget {
+    pub class: String,
+    pub p99_ms: f64,
+}
+
+/// A parsed `--slo` spec: a conjunction of per-class targets.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SloSpec {
+    pub targets: Vec<SloTarget>,
+}
+
+/// Violations are scaled by this per second of p99 overshoot, so any
+/// violated candidate scores worse than any compliant one (makespans are
+/// milliseconds) while staying continuous — ties among violators still
+/// break toward the least-violating architecture.
+const VIOLATION_PER_S: f64 = 1e6;
+/// Deadline misses (from trace deadlines) are penalized per missed-rate
+/// unit on the same scale.
+const MISS_RATE_PENALTY: f64 = 1e3;
+
+impl SloSpec {
+    /// Parse `class=p99<MS[,class=p99<MS...]`. Rejects non-finite or
+    /// non-positive bounds, duplicate classes, and malformed clauses with
+    /// an error naming the accepted grammar.
+    pub fn parse(spec: &str) -> Result<SloSpec, String> {
+        let grammar = "CLASS=p99<MS[,CLASS=p99<MS...] (CLASS '*' = all classes)";
+        let bad = |why: String| format!("bad slo spec '{spec}': {why} (want {grammar})");
+        let mut targets: Vec<SloTarget> = Vec::new();
+        for clause in spec.split(',') {
+            let clause = clause.trim();
+            if clause.is_empty() {
+                return Err(bad("empty clause".to_string()));
+            }
+            let (class, bound) = clause
+                .split_once('=')
+                .ok_or_else(|| bad(format!("clause '{clause}' has no '='")))?;
+            let ms_str = bound
+                .strip_prefix("p99<")
+                .ok_or_else(|| bad(format!("bound '{bound}' must be 'p99<MS'")))?;
+            let p99_ms: f64 = ms_str
+                .parse()
+                .map_err(|_| bad(format!("'{ms_str}' is not a number")))?;
+            if !p99_ms.is_finite() || p99_ms <= 0.0 {
+                return Err(bad(format!("target must be finite and > 0 ms, got '{ms_str}'")));
+            }
+            let class = class.trim();
+            if class.is_empty() {
+                return Err(bad(format!("clause '{clause}' has an empty class")));
+            }
+            if targets.iter().any(|t| t.class == class) {
+                return Err(bad(format!("class '{class}' appears twice")));
+            }
+            targets.push(SloTarget { class: class.to_string(), p99_ms });
+        }
+        Ok(SloSpec { targets })
+    }
+
+    /// Render back to the spec grammar. Parameters print with shortest-
+    /// round-trip float formatting, so `parse(spec()) == self` bit-for-bit
+    /// (the wire codecs ship this string).
+    pub fn spec(&self) -> String {
+        self.targets
+            .iter()
+            .map(|t| format!("{}=p99<{}", t.class, t.p99_ms))
+            .collect::<Vec<_>>()
+            .join(",")
+    }
+
+    /// SLO penalty for a DES report: 0.0 when every target holds and no
+    /// deadline was missed, else a continuous positive penalty that
+    /// dominates any makespan. Targets naming a class the report never saw
+    /// contribute nothing (an absent class has no tail to violate).
+    pub fn penalty(&self, rep: &DesReport) -> f64 {
+        let mut p = 0.0;
+        for t in &self.targets {
+            let target_s = t.p99_ms * 1e-3;
+            if t.class == "*" {
+                p += (rep.p99_job_latency_s - target_s).max(0.0) * VIOLATION_PER_S;
+                continue;
+            }
+            for c in &rep.classes {
+                if c.class == t.class && c.jobs > 0 {
+                    p += (c.p99_latency_s - target_s).max(0.0) * VIOLATION_PER_S;
+                }
+            }
+        }
+        let deadline_jobs: u64 = rep.classes.iter().map(|c| c.deadline_jobs).sum();
+        if deadline_jobs > 0 {
+            let misses: u64 = rep.classes.iter().map(|c| c.deadline_misses).sum();
+            p += misses as f64 / deadline_jobs as f64 * MISS_RATE_PENALTY;
+        }
+        p
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::des::ClassStats;
+
+    fn report(classes: Vec<ClassStats>, p99: f64) -> DesReport {
+        DesReport {
+            scenario: "t".into(),
+            seed: 0,
+            nodes: Vec::new(),
+            jobs_released: 4,
+            jobs_completed: 4,
+            makespan_s: 0.01,
+            mean_job_latency_s: 0.0,
+            p50_job_latency_s: 0.0,
+            p99_job_latency_s: p99,
+            max_job_latency_s: p99,
+            throughput_jobs_per_s: 0.0,
+            events: 0,
+            classes,
+        }
+    }
+
+    fn class(name: &str, p99_s: f64, dj: u64, dm: u64) -> ClassStats {
+        ClassStats {
+            class: name.into(),
+            jobs: 2,
+            mean_latency_s: p99_s,
+            p99_latency_s: p99_s,
+            deadline_jobs: dj,
+            deadline_misses: dm,
+        }
+    }
+
+    #[test]
+    fn parse_round_trips_and_validates() {
+        let s = SloSpec::parse("interactive=p99<5,batch=p99<50.5").unwrap();
+        assert_eq!(s.targets.len(), 2);
+        assert_eq!(SloSpec::parse(&s.spec()).unwrap(), s);
+        for bad in [
+            "", "x", "a=p99<", "a=p99<nan", "a=p99<-1", "a=p99<0", "a=p50<5", "=p99<5",
+            "a=p99<5,a=p99<9",
+        ] {
+            assert!(SloSpec::parse(bad).is_err(), "'{bad}' must be rejected");
+        }
+    }
+
+    #[test]
+    fn penalty_zero_when_met_positive_when_violated() {
+        let slo = SloSpec::parse("fast=p99<1").unwrap();
+        let ok = report(vec![class("fast", 0.0005, 0, 0)], 0.0005);
+        assert_eq!(slo.penalty(&ok), 0.0);
+        let bad = report(vec![class("fast", 0.0030, 0, 0)], 0.0030);
+        assert!(slo.penalty(&bad) > 1e3, "2 ms overshoot must dominate a makespan");
+        // star targets the overall tail
+        let star = SloSpec::parse("*=p99<1").unwrap();
+        assert!(star.penalty(&bad) > 0.0);
+        assert_eq!(star.penalty(&ok), 0.0);
+    }
+
+    #[test]
+    fn deadline_misses_penalize_even_without_targets_hit() {
+        let slo = SloSpec::parse("fast=p99<100").unwrap();
+        let missed = report(vec![class("fast", 0.0005, 4, 1)], 0.0005);
+        let clean = report(vec![class("fast", 0.0005, 4, 0)], 0.0005);
+        assert!(slo.penalty(&missed) > slo.penalty(&clean));
+    }
+}

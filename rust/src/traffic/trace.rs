@@ -1,0 +1,261 @@
+//! Trace-driven replay: a checksummed text file of timestamped,
+//! class-tagged, deadline-tagged jobs that the DES replays verbatim.
+//!
+//! Format (`olympus des --scenario trace:<file>`):
+//!
+//! ```text
+//! olympus-trace v1 crc=7d4a1f0e9c2b5a63
+//! # comments and blank lines are ignored
+//! # AT_S CLASS [DEADLINE_MS|-] [PRIO]
+//! 0.000  interactive  5    2
+//! 0.0004 batch        -
+//! 0.0010 interactive  5    2
+//! ```
+//!
+//! * `AT_S` — arrival instant in seconds (rounded to integer picoseconds).
+//! * `CLASS` — free-form class name; per-class p99 / deadline-miss stats
+//!   are reported under it.
+//! * `DEADLINE_MS` — optional completion deadline in milliseconds (`-` =
+//!   none).
+//! * `PRIO` — optional integer priority (default 0, higher = more urgent):
+//!   a backlogged job's data is admitted ahead of lower-priority data.
+//!
+//! The `crc=` header is FNV-1a 64 over everything after the first newline,
+//! byte-for-byte. A stale checksum fails parsing with the expected value in
+//! the error, so authoring by hand is a two-step paste. The resulting
+//! scenario's identity (name, `Debug` rendering, and therefore every cache
+//! key it reaches) is derived from the *content*, never the path — two
+//! copies of the same trace hit the same cache entry.
+
+use std::path::Path;
+
+use crate::des::{ArrivalProcess, WorkloadScenario, PS_PER_S};
+use crate::util::{fnv1a_64, ContentHash};
+
+/// One replayed job. Times are integer picoseconds so traces hash, compare
+/// and `Debug`-render without float-formatting ambiguity.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TraceJob {
+    /// Arrival instant, ps.
+    pub at_ps: u64,
+    /// Traffic class (per-class stats key).
+    pub class: String,
+    /// Optional completion deadline (relative to arrival), ps.
+    pub deadline_ps: Option<u64>,
+    /// Priority (higher = admitted first under backlog).
+    pub prio: u32,
+}
+
+/// Parse trace text (see the module docs for the format). Validates the
+/// header, the checksum, and every field; jobs come back sorted by arrival.
+pub fn parse_trace(text: &str) -> Result<Vec<TraceJob>, String> {
+    let (header, body) = text
+        .split_once('\n')
+        .ok_or_else(|| "trace is empty (want an 'olympus-trace v1 crc=<hex>' header)".to_string())?;
+    let header = header.trim_end_matches('\r');
+    let crc_hex = header
+        .strip_prefix("olympus-trace v1 crc=")
+        .ok_or_else(|| format!("bad trace header '{header}' (want 'olympus-trace v1 crc=<hex>')"))?;
+    let want = u64::from_str_radix(crc_hex.trim(), 16)
+        .map_err(|_| format!("bad trace crc '{crc_hex}' (want 16 hex digits)"))?;
+    let got = fnv1a_64(body.as_bytes());
+    if got != want {
+        return Err(format!(
+            "trace checksum mismatch: header says {want:016x}, body hashes to {got:016x} \
+             (update the header after editing)"
+        ));
+    }
+
+    let mut jobs = Vec::new();
+    for (i, raw) in body.lines().enumerate() {
+        let lineno = i + 2; // 1-based, after the header
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let fields: Vec<&str> = line.split_whitespace().collect();
+        let bad = |why: String| {
+            format!("trace line {lineno} '{line}': {why} (want AT_S CLASS [DEADLINE_MS|-] [PRIO])")
+        };
+        if fields.len() < 2 || fields.len() > 4 {
+            return Err(bad(format!("{} fields", fields.len())));
+        }
+        let at_s: f64 = fields[0]
+            .parse()
+            .map_err(|_| bad(format!("arrival '{}' is not a number", fields[0])))?;
+        if !at_s.is_finite() || at_s < 0.0 {
+            return Err(bad("arrival must be finite and >= 0".to_string()));
+        }
+        let class = fields[1].to_string();
+        let deadline_ps = match fields.get(2) {
+            None | Some(&"-") => None,
+            Some(d) => {
+                let ms: f64 =
+                    d.parse().map_err(|_| bad(format!("deadline '{d}' is not a number")))?;
+                if !ms.is_finite() || ms <= 0.0 {
+                    return Err(bad("deadline must be finite and > 0 ms".to_string()));
+                }
+                Some((ms * 1e-3 * PS_PER_S).round() as u64)
+            }
+        };
+        let prio = match fields.get(3) {
+            None => 0u32,
+            Some(p) => p
+                .parse()
+                .map_err(|_| bad(format!("priority '{p}' is not a small non-negative integer")))?,
+        };
+        jobs.push(TraceJob { at_ps: (at_s * PS_PER_S).round() as u64, class, deadline_ps, prio });
+    }
+    if jobs.is_empty() {
+        return Err("trace has no jobs".to_string());
+    }
+    jobs.sort_by_key(|j| j.at_ps);
+    Ok(jobs)
+}
+
+/// Render `jobs` back to the checksummed file format (the inverse of
+/// [`parse_trace`] up to comments/ordering) — used to author traces
+/// programmatically in tests and tools.
+pub fn render_trace(jobs: &[TraceJob]) -> String {
+    let mut body = String::new();
+    for j in jobs {
+        let at_s = j.at_ps as f64 / PS_PER_S;
+        body.push_str(&format!("{at_s} {}", j.class));
+        match j.deadline_ps {
+            Some(d) => body.push_str(&format!(" {}", d as f64 / PS_PER_S * 1e3)),
+            None => body.push_str(" -"),
+        }
+        if j.prio != 0 {
+            body.push_str(&format!(" {}", j.prio));
+        }
+        body.push('\n');
+    }
+    format!("olympus-trace v1 crc={:016x}\n{body}", fnv1a_64(body.as_bytes()))
+}
+
+/// Wrap parsed jobs as a [`WorkloadScenario`]. The name embeds a content
+/// hash of the jobs, so identity is path-independent: identical content on
+/// two paths is one scenario (and one cache key).
+pub fn trace_scenario(mut jobs: Vec<TraceJob>) -> WorkloadScenario {
+    jobs.sort_by_key(|j| j.at_ps);
+    let parts: Vec<String> = jobs
+        .iter()
+        .map(|j| {
+            format!(
+                "{}:{}:{}:{}",
+                j.at_ps,
+                j.class,
+                j.deadline_ps.map(|d| d.to_string()).unwrap_or_default(),
+                j.prio
+            )
+        })
+        .collect();
+    let refs: Vec<&str> = parts.iter().map(String::as_str).collect();
+    let hex = ContentHash::of_parts(&refs).to_hex();
+    WorkloadScenario {
+        name: format!("trace-{}job-{}", jobs.len(), &hex[..12]),
+        arrivals: ArrivalProcess::Trace { jobs },
+    }
+}
+
+/// Load a trace file into a scenario.
+pub fn load_trace_scenario(path: &Path) -> Result<WorkloadScenario, String> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| format!("read trace '{}': {e}", path.display()))?;
+    parse_trace(&text).map(trace_scenario)
+}
+
+/// Resolve a CLI/protocol scenario spec, including `trace:<file>` (the one
+/// spec form that touches the filesystem — [`WorkloadScenario::parse`]
+/// itself stays pure).
+pub fn scenario_from_spec(spec: &str) -> Result<WorkloadScenario, String> {
+    match spec.strip_prefix("trace:") {
+        Some(path) => load_trace_scenario(Path::new(path)),
+        None => WorkloadScenario::parse(spec),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> String {
+        render_trace(&[
+            TraceJob {
+                at_ps: 0,
+                class: "interactive".into(),
+                deadline_ps: Some(5_000_000),
+                prio: 2,
+            },
+            TraceJob { at_ps: 400_000, class: "batch".into(), deadline_ps: None, prio: 0 },
+            TraceJob {
+                at_ps: 1_000_000,
+                class: "interactive".into(),
+                deadline_ps: Some(5_000_000),
+                prio: 2,
+            },
+        ])
+    }
+
+    #[test]
+    fn render_parse_round_trips() {
+        let text = sample();
+        let jobs = parse_trace(&text).expect("parses");
+        assert_eq!(jobs.len(), 3);
+        assert_eq!(jobs[0].class, "interactive");
+        assert_eq!(jobs[0].deadline_ps, Some(5_000_000));
+        assert_eq!(jobs[0].prio, 2);
+        assert_eq!(jobs[1].deadline_ps, None);
+        assert_eq!(render_trace(&jobs), text);
+    }
+
+    #[test]
+    fn checksum_mismatch_is_rejected_with_expected_value() {
+        let text = sample().replace("interactive", "interactivx");
+        let err = parse_trace(&text).unwrap_err();
+        assert!(err.contains("checksum mismatch"), "{err}");
+        assert!(err.contains("body hashes to"), "{err}");
+    }
+
+    #[test]
+    fn bad_fields_fail_structured() {
+        let mk = |body: &str| {
+            format!("olympus-trace v1 crc={:016x}\n{body}", fnv1a_64(body.as_bytes()))
+        };
+        for (body, want) in [
+            ("x cls\n", "not a number"),
+            ("-1 cls\n", ">= 0"),
+            ("0.1 cls nan\n", "deadline"),
+            ("0.1 cls 0\n", "> 0 ms"),
+            ("0.1 cls - -3\n", "priority"),
+            ("0.1\n", "fields"),
+            ("# only comments\n", "no jobs"),
+        ] {
+            let err = parse_trace(&mk(body)).unwrap_err();
+            assert!(err.contains(want), "body {body:?} -> {err}");
+        }
+        assert!(parse_trace("nonsense\n0 a\n").unwrap_err().contains("header"));
+    }
+
+    #[test]
+    fn scenario_identity_is_content_based() {
+        let a = trace_scenario(parse_trace(&sample()).unwrap());
+        let b = trace_scenario(parse_trace(&sample()).unwrap());
+        assert_eq!(a, b);
+        assert_eq!(format!("{a:?}"), format!("{b:?}"));
+        // flipping one job's deadline changes the name (and thus every key)
+        let mut jobs = parse_trace(&sample()).unwrap();
+        jobs[1].deadline_ps = Some(1_000_000);
+        let c = trace_scenario(jobs);
+        assert_ne!(a.name, c.name);
+    }
+
+    #[test]
+    fn jobs_come_back_sorted() {
+        let body = "0.002 b\n0.001 a\n";
+        let text = format!("olympus-trace v1 crc={:016x}\n{body}", fnv1a_64(body.as_bytes()));
+        let jobs = parse_trace(&text).unwrap();
+        assert!(jobs.windows(2).all(|w| w[0].at_ps <= w[1].at_ps));
+        assert_eq!(jobs[0].class, "a");
+    }
+}

@@ -63,6 +63,16 @@ impl Rng {
         (self.f64() * 2.0 - 1.0) as f32
     }
 
+    /// Standard normal N(0, 1) via Box-Muller (one draw per call; the
+    /// sibling variate is discarded so the stream stays a pure function of
+    /// call count, which keeps replays bit-identical under refactors).
+    pub fn gaussian(&mut self) -> f64 {
+        // u1 in (0, 1]: flip the [0,1) draw so ln never sees zero
+        let u1 = 1.0 - self.f64();
+        let u2 = self.f64();
+        (-2.0 * u1.ln()).sqrt() * (std::f64::consts::TAU * u2).cos()
+    }
+
     /// Bernoulli(p).
     pub fn chance(&mut self, p: f64) -> bool {
         self.f64() < p
@@ -109,6 +119,22 @@ mod tests {
             seen[r.below(10) as usize] = true;
         }
         assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn gaussian_moments() {
+        let mut r = Rng::new(9);
+        let n = 20_000;
+        let (mut sum, mut sq) = (0.0, 0.0);
+        for _ in 0..n {
+            let z = r.gaussian();
+            sum += z;
+            sq += z * z;
+        }
+        let mean = sum / n as f64;
+        let var = sq / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.03, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
     }
 
     #[test]

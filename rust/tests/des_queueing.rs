@@ -1,5 +1,7 @@
 //! Queueing-theory calibration of the discrete-event engine against
-//! closed-form results (M/M/1, M/D/1), plus replica-striping throughput.
+//! closed-form results (M/M/1, M/D/1), heavy-tailed service distributions,
+//! trace replay with per-class deadline accounting, elastic replicas, and
+//! replica-striping throughput.
 
 use olympus::coordinator::run_flow;
 use olympus::des::{
@@ -8,6 +10,7 @@ use olympus::des::{
 };
 use olympus::dialect::build::fig4a_module;
 use olympus::platform::builtin;
+use olympus::traffic::{trace_scenario, AutoscalePolicy, TraceJob};
 
 /// A single-server queue: fast 1-elem movers on separate channels feed a
 /// CU whose service dominates end-to-end latency. On `generic-ddr`
@@ -107,6 +110,129 @@ fn exponential_service_is_seed_deterministic() {
     let other = DesConfig { seed: 12, ..config(ServiceDist::Exponential) };
     let c = simulate_network(&net, &sc, &other).unwrap();
     assert_ne!(a.mean_job_latency_s, c.mean_job_latency_s);
+}
+
+/// Heavy-tailed service at *matched mean*: every distribution draws a
+/// unit-mean multiplier, so utilization stays at rho = lambda/mu and only
+/// the shape of the tail changes. LogNormal and Pareto must push the p99
+/// sojourn strictly above Exponential's — the property the slo-score
+/// objective exists to expose.
+#[test]
+fn heavy_tails_lift_p99_above_exponential_at_matched_mean() {
+    let net = single_server_net();
+    let sc = WorkloadScenario::poisson(LAMBDA, JOBS);
+    let exp = simulate_network(&net, &sc, &config(ServiceDist::Exponential)).unwrap();
+    let logn =
+        simulate_network(&net, &sc, &config(ServiceDist::LogNormal { sigma: 1.5 })).unwrap();
+    let pareto =
+        simulate_network(&net, &sc, &config(ServiceDist::Pareto { alpha: 1.4 })).unwrap();
+    for r in [&exp, &logn, &pareto] {
+        assert_eq!(r.jobs_completed, JOBS);
+        assert!(r.mean_job_latency_s.is_finite() && r.mean_job_latency_s > 0.0);
+    }
+    assert!(
+        logn.p99_job_latency_s > exp.p99_job_latency_s,
+        "lognormal(1.5) p99 {} must beat exponential p99 {}",
+        logn.p99_job_latency_s,
+        exp.p99_job_latency_s
+    );
+    assert!(
+        pareto.p99_job_latency_s > exp.p99_job_latency_s,
+        "pareto(1.4) p99 {} must beat exponential p99 {}",
+        pareto.p99_job_latency_s,
+        exp.p99_job_latency_s
+    );
+    // matched mean: the server's busy fraction stays near rho for the
+    // light-tailed pair (Pareto's sample mean converges too slowly to pin)
+    for r in [&exp, &logn] {
+        let srv = r.nodes.iter().find(|n| n.name == "srv").unwrap();
+        assert!(
+            (srv.utilization - 0.5).abs() < 0.1,
+            "matched-mean service must keep rho ~ 0.5, got {}",
+            srv.utilization
+        );
+    }
+    // and the heavy tails replay bit-identically
+    let again =
+        simulate_network(&net, &sc, &config(ServiceDist::Pareto { alpha: 1.4 })).unwrap();
+    assert_eq!(pareto, again);
+}
+
+/// A small two-class trace: interactive jobs carry tight deadlines and a
+/// priority, batch jobs carry neither. The report must account classes
+/// separately, count deadline outcomes, and replay bit-identically.
+#[test]
+fn trace_replay_reports_per_class_stats_and_is_deterministic() {
+    let net = single_server_net();
+    let mut jobs = Vec::new();
+    // 40 interactive arrivals every 50 us with a 1 ms deadline, 20 batch
+    // arrivals every 100 us; interleaved so both classes queue
+    for i in 0..40u64 {
+        jobs.push(TraceJob {
+            at_ps: i * 50_000_000,
+            class: "interactive".into(),
+            deadline_ps: Some(1_000_000_000), // 1 ms
+            prio: 2,
+        });
+    }
+    for i in 0..20u64 {
+        jobs.push(TraceJob {
+            at_ps: i * 100_000_000 + 10_000_000,
+            class: "batch".into(),
+            deadline_ps: None,
+            prio: 0,
+        });
+    }
+    let sc = trace_scenario(jobs);
+    let cfg = config(ServiceDist::Deterministic);
+    let a = simulate_network(&net, &sc, &cfg).unwrap();
+    let b = simulate_network(&net, &sc, &cfg).unwrap();
+    assert_eq!(a, b, "trace replay must be bit-identical");
+    assert_eq!(a.jobs_completed, 60);
+    assert_eq!(a.classes.len(), 2, "{:?}", a.classes);
+    // classes come back in first-appearance order
+    assert_eq!(a.classes[0].class, "interactive");
+    assert_eq!(a.classes[1].class, "batch");
+    assert_eq!(a.classes[0].jobs, 40);
+    assert_eq!(a.classes[1].jobs, 20);
+    // only the interactive class carried deadlines, and at 10 us service
+    // against a 1 ms deadline none should miss
+    assert_eq!(a.classes[0].deadline_jobs, 40);
+    assert_eq!(a.classes[0].deadline_misses, 0);
+    assert_eq!(a.classes[1].deadline_jobs, 0);
+    // per-class rows render in the report text
+    let text = a.to_string();
+    assert!(text.contains("interactive"), "{text}");
+    assert!(text.contains("batch"), "{text}");
+}
+
+/// Elastic replicas: under overload, an autoscaler that can activate up to
+/// 4 replicas must finish the batch strictly faster than the static
+/// single-replica run — and the elastic run must itself replay
+/// bit-identically.
+#[test]
+fn autoscaler_beats_static_capacity_under_overload() {
+    let net = single_server_net();
+    // offered rate 3x the single-replica service rate
+    let sc = WorkloadScenario::poisson(3.0 * MU, 600);
+    let static_cfg = config(ServiceDist::Deterministic);
+    let elastic_cfg = DesConfig {
+        autoscale: Some(AutoscalePolicy::parse("0.0001:8:1:1:4").unwrap()),
+        ..config(ServiceDist::Deterministic)
+    };
+    let fixed = simulate_network(&net, &sc, &static_cfg).unwrap();
+    let elastic = simulate_network(&net, &sc, &elastic_cfg).unwrap();
+    assert_eq!(fixed.jobs_completed, 600);
+    assert_eq!(elastic.jobs_completed, 600);
+    assert!(
+        elastic.makespan_s < fixed.makespan_s,
+        "elastic {} must beat static {}",
+        elastic.makespan_s,
+        fixed.makespan_s
+    );
+    assert_ne!(fixed, elastic, "the policy must actually change the replay");
+    let again = simulate_network(&net, &sc, &elastic_cfg).unwrap();
+    assert_eq!(elastic, again, "elastic replay must be bit-identical");
 }
 
 /// Two servers in tandem: mover -> s0 -> mid FIFO -> s1 -> out. Same II on
@@ -253,4 +379,34 @@ fn striping_halves_replicated_batch_makespan() {
         striped.makespan_s,
         unstriped.makespan_s
     );
+}
+
+/// The checked-in sample trace (also replayed by the CI traffic smoke)
+/// must keep parsing: the crc header covers the body, so any edit without
+/// a checksum refresh fails here, not in the smoke script.
+#[test]
+fn checked_in_sample_trace_parses_and_replays() {
+    use olympus::des::ArrivalProcess;
+    use olympus::traffic::load_trace_scenario;
+    let path = std::path::Path::new("tests/data/sample.trace");
+    let sc = load_trace_scenario(path).expect("checked-in trace parses (crc must match body)");
+    assert!(sc.name.starts_with("trace-12job-"), "content-addressed name: {}", sc.name);
+    let ArrivalProcess::Trace { jobs } = &sc.arrivals else {
+        panic!("trace spec must build a trace scenario")
+    };
+    assert_eq!(jobs.len(), 12);
+    assert!(jobs
+        .iter()
+        .any(|j| j.class == "interactive" && j.prio == 2 && j.deadline_ps.is_some()));
+    assert!(jobs.iter().any(|j| j.class == "batch" && j.prio == 0 && j.deadline_ps.is_none()));
+
+    // and it replays end to end with per-class deadline accounting
+    let net = single_server_net();
+    let rep = simulate_network(&net, &sc, &config(ServiceDist::Deterministic)).unwrap();
+    assert_eq!(rep.jobs_completed, 12);
+    let classes: Vec<&str> = rep.classes.iter().map(|c| c.class.as_str()).collect();
+    assert_eq!(classes, ["interactive", "batch"], "first-appearance order");
+    assert_eq!(rep.classes[0].deadline_jobs, 6);
+    assert_eq!(rep.classes[0].deadline_misses, 0, "5 ms deadlines vs ~10 us service");
+    assert_eq!(rep.classes[1].deadline_jobs, 0);
 }

@@ -3,6 +3,12 @@
 //! single-shot library path regardless of worker count, and the persistent
 //! disk tier (`--cache-dir`): a killed-and-restarted daemon must answer a
 //! repeated request from disk, bit-identically, with zero evaluations.
+//!
+//! Traffic-scenario key hygiene rides along: trace replays key by *content*
+//! (the same trace at two paths is one cache entry; flipping a class or a
+//! deadline is a different key), and the new scenario kinds (trace, diurnal,
+//! slo-score, autoscale) serve byte-identically across worker count and
+//! cache temperature.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpStream};
@@ -606,6 +612,148 @@ fn cache_stats_reports_uptime_and_request_counters() {
     assert!(r.get("uptime_ms").as_u64().is_some(), "{v}");
     assert!(r.get("requests").get("ping").as_u64().unwrap() >= 1, "{v}");
     server.shutdown();
+}
+
+/// Satellite: trace scenarios are cached by *content*. The same jobs
+/// written to two different paths land on one cache entry (the scenario's
+/// identity is a content hash, never a path), while flipping a single job's
+/// class or deadline re-keys the request and forces a fresh evaluation.
+#[test]
+fn trace_requests_key_by_content_and_rekey_on_class_or_deadline() {
+    use olympus::traffic::{render_trace, TraceJob};
+    let dir = tmpdir("trace_keys");
+    std::fs::create_dir_all(dir.join("copy")).unwrap();
+    let jobs = vec![
+        TraceJob {
+            at_ps: 0,
+            class: "interactive".into(),
+            deadline_ps: Some(2_000_000_000),
+            prio: 2,
+        },
+        TraceJob { at_ps: 50_000_000, class: "batch".into(), deadline_ps: None, prio: 0 },
+        TraceJob {
+            at_ps: 100_000_000,
+            class: "interactive".into(),
+            deadline_ps: Some(2_000_000_000),
+            prio: 2,
+        },
+    ];
+    let write = |name: &str, jobs: &[TraceJob]| {
+        let p = dir.join(name);
+        std::fs::write(&p, render_trace(jobs)).unwrap();
+        p
+    };
+    let req = |path: &std::path::Path| {
+        Json::obj(vec![
+            ("cmd", "dse".into()),
+            ("ir", DESIGN.into()),
+            ("platform", "u280".into()),
+            ("objective", "des-score".into()),
+            ("scenario", format!("trace:{}", path.display()).into()),
+            ("seed", 7u64.into()),
+            ("factors", vec![2u64].into()),
+        ])
+        .to_string()
+    };
+
+    let a = write("a.trace", &jobs);
+    let b = write("copy/b.trace", &jobs);
+    let server = Server::bind("127.0.0.1:0", ServeOptions::default()).unwrap();
+    let mut c = Client::connect(server.addr());
+
+    let cold = c.call_raw(&req(&a));
+    assert_eq!(cold.get("ok"), &Json::Bool(true), "{cold}");
+    assert_eq!(cold.get("cached"), &Json::Bool(false));
+
+    // identical content at a different path: same key, served from cache
+    let same = c.call_raw(&req(&b));
+    assert_eq!(same.get("cached"), &Json::Bool(true), "content-keyed: {same}");
+    assert_eq!(same.get("key"), cold.get("key"), "path must not reach the key");
+    assert_eq!(same.get("result"), cold.get("result"));
+
+    // one job's class flips: different key, fresh evaluation
+    let mut by_class = jobs.clone();
+    by_class[1].class = "bulk".into();
+    let flipped_class = c.call_raw(&req(&write("class_flip.trace", &by_class)));
+    assert_eq!(flipped_class.get("ok"), &Json::Bool(true), "{flipped_class}");
+    assert_eq!(flipped_class.get("cached"), &Json::Bool(false));
+    assert_ne!(flipped_class.get("key"), cold.get("key"), "class is key material");
+
+    // one job's deadline flips: different key again
+    let mut by_deadline = jobs.clone();
+    by_deadline[0].deadline_ps = Some(1_000_000_000);
+    let flipped_deadline = c.call_raw(&req(&write("deadline_flip.trace", &by_deadline)));
+    assert_eq!(flipped_deadline.get("cached"), &Json::Bool(false));
+    assert_ne!(flipped_deadline.get("key"), cold.get("key"), "deadline is key material");
+    assert_ne!(flipped_deadline.get("key"), flipped_class.get("key"));
+
+    server.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Acceptance: the new scenario kinds — diurnal arrivals, trace replay
+/// scored against an SLO with elastic replicas — serve byte-identically
+/// across worker count and cache temperature, like every other request.
+#[test]
+fn traffic_scenarios_serve_bit_identically_across_workers_and_temperature() {
+    use olympus::traffic::{render_trace, TraceJob};
+    let dir = tmpdir("traffic_identity");
+    let jobs: Vec<TraceJob> = (0..20u64)
+        .map(|i| TraceJob {
+            at_ps: i * 20_000_000,
+            class: if i % 3 == 0 { "interactive".into() } else { "batch".into() },
+            deadline_ps: if i % 3 == 0 { Some(5_000_000_000) } else { None },
+            prio: if i % 3 == 0 { 2 } else { 0 },
+        })
+        .collect();
+    let trace = dir.join("mix.trace");
+    std::fs::write(&trace, render_trace(&jobs)).unwrap();
+
+    let diurnal = Json::obj(vec![
+        ("cmd", "dse".into()),
+        ("ir", DESIGN.into()),
+        ("platform", "u280".into()),
+        ("objective", "des-score".into()),
+        ("scenario", "diurnal:20000:0.5:0.002:30".into()),
+        ("seed", 3u64.into()),
+        ("factors", vec![2u64].into()),
+    ])
+    .to_string();
+    let slo_trace = Json::obj(vec![
+        ("cmd", "dse".into()),
+        ("ir", DESIGN.into()),
+        ("platform", "u280".into()),
+        ("objective", "slo-score".into()),
+        ("slo", "interactive=p99<50,*=p99<200".into()),
+        ("scenario", format!("trace:{}", trace.display()).into()),
+        ("autoscale", "0.0001:4:0:1:4".into()),
+        ("seed", 3u64.into()),
+        ("factors", vec![2u64].into()),
+    ])
+    .to_string();
+
+    for line in [diurnal, slo_trace] {
+        let mut outcomes = Vec::new();
+        for workers in [1usize, 3] {
+            let server = Server::bind(
+                "127.0.0.1:0",
+                ServeOptions { workers, ..ServeOptions::default() },
+            )
+            .unwrap();
+            let mut c = Client::connect(server.addr());
+            let cold = c.call_raw(&line);
+            assert_eq!(cold.get("ok"), &Json::Bool(true), "{line} -> {cold}");
+            assert_eq!(cold.get("cached"), &Json::Bool(false));
+            let warm = c.call_raw(&line);
+            assert_eq!(warm.get("cached"), &Json::Bool(true), "{warm}");
+            assert_eq!(warm.get("result"), cold.get("result"), "warm == cold bytes");
+            assert_eq!(warm.get("key"), cold.get("key"));
+            outcomes.push((cold.get("key").to_string(), cold.get("result").to_string()));
+            server.shutdown();
+        }
+        assert_eq!(outcomes[0], outcomes[1], "worker count must not change key or bytes");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
 }
 
 /// Acceptance: `olympus stats` renders one fleet-wide table — the
