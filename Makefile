@@ -4,7 +4,7 @@
 # `make artifacts` re-lowers the JAX/Pallas kernels to HLO text for the
 # opt-in `pjrt` cargo feature (requires a python env with jax installed).
 
-.PHONY: build test bench bench-snapshot artifacts fmt
+.PHONY: build test bench bench-snapshot perf-smoke artifacts fmt
 
 build:
 	cargo build --release
@@ -22,6 +22,12 @@ bench:
 # snapshot alongside perf-relevant changes.
 bench-snapshot:
 	BENCH_SNAPSHOT_OUT=$(CURDIR)/BENCH_DES.json cargo bench --bench bench_snapshot
+
+# Fast regression gate: rerun the DES replay figures and fail if any drops
+# below 70% of the committed BENCH_DES.json (what CI runs on every push).
+perf-smoke:
+	BENCH_FAST=1 BENCH_GATE=$(CURDIR)/BENCH_DES.json \
+	BENCH_SNAPSHOT_OUT=/tmp/bench_smoke.json cargo bench --bench bench_snapshot
 
 artifacts:
 	cd python && python -m compile.aot --out-dir ../rust/artifacts

@@ -7,7 +7,7 @@
 use std::time::Instant;
 
 use olympus::coordinator::run_flow;
-use olympus::des::{simulate, DesConfig, EventCalendar, TimePoint, WorkloadScenario};
+use olympus::des::{simulate, Calendar, CalendarKind, DesConfig, TimePoint, WorkloadScenario};
 use olympus::passes::{run_dse_with, DseObjective, DseOptions};
 use olympus::platform::builtin;
 use olympus::util::benchkit::Bench;
@@ -17,26 +17,31 @@ use olympus::workload::{random_dfg, WorkloadSpec};
 fn main() {
     let mut b = Bench::new("des");
 
-    // ---- raw calendar: heap push/pop at random times --------------------
+    // ---- raw calendar: push/pop at random times, both implementations ---
     const N: usize = 200_000;
-    b.bench_with_throughput("calendar_200k_events", || {
-        let t0 = Instant::now();
-        let mut cal: EventCalendar<u64> = EventCalendar::new();
-        let mut rng = Rng::new(1);
-        // half pre-loaded, half scheduled while draining (churn pattern)
-        for i in 0..(N / 2) as u64 {
-            cal.push(TimePoint::from_ps(rng.below(1 << 40)), i);
-        }
-        let mut popped = 0u64;
-        while let Some((now, _)) = cal.pop() {
-            popped += 1;
-            if popped <= (N / 2) as u64 {
-                cal.push(now + olympus::des::TimeSpan::from_ps(1 + rng.below(1 << 20)), popped);
+    for kind in [CalendarKind::Heap, CalendarKind::Wheel] {
+        b.bench_with_throughput(&format!("calendar_200k_events_{}", kind.as_str()), || {
+            let t0 = Instant::now();
+            let mut cal: Calendar<u64> = Calendar::new(kind);
+            let mut rng = Rng::new(1);
+            // half pre-loaded, half scheduled while draining (churn pattern)
+            for i in 0..(N / 2) as u64 {
+                cal.push(TimePoint::from_ps(rng.below(1 << 40)), i);
             }
-        }
-        let secs = t0.elapsed().as_secs_f64();
-        Some((N as f64 / secs, "events/s".to_string()))
-    });
+            let mut popped = 0u64;
+            while let Some((now, _)) = cal.pop() {
+                popped += 1;
+                if popped <= (N / 2) as u64 {
+                    cal.push(
+                        now + olympus::des::TimeSpan::from_ps(1 + rng.below(1 << 20)),
+                        popped,
+                    );
+                }
+            }
+            let secs = t0.elapsed().as_secs_f64();
+            Some((N as f64 / secs, "events/s".to_string()))
+        });
+    }
 
     // ---- network replay on generated workloads --------------------------
     let plat = builtin("u280").unwrap();

@@ -25,6 +25,7 @@ use olympus::ir::print_module;
 use olympus::passes::{run_dse_with, CandidateCache, DseOptions};
 use olympus::platform::builtin;
 use olympus::service::{ServeOptions, Server};
+use olympus::traffic::scenario_from_spec;
 use olympus::util::benchkit::Bench;
 use olympus::util::{Json, Rng};
 use olympus::workload::{random_dfg, WorkloadSpec};
@@ -56,6 +57,17 @@ fn main() {
     b.bench_with_throughput("des_replay_8_kernels_4_jobs", || {
         let t0 = Instant::now();
         let rep = simulate(&replay.arch, &scenario, &dcfg).expect("simulate");
+        let secs = t0.elapsed().as_secs_f64();
+        Some((rep.events as f64 / secs, "events/s".to_string()))
+    });
+
+    // ---- DES replay of the checked-in trace (the CI perf-smoke figure) --
+    let trace_path = concat!(env!("CARGO_MANIFEST_DIR"), "/tests/data/sample.trace");
+    let trace_scenario =
+        scenario_from_spec(&format!("trace:{trace_path}")).expect("checked-in trace");
+    b.bench_with_throughput("des_replay_trace", || {
+        let t0 = Instant::now();
+        let rep = simulate(&replay.arch, &trace_scenario, &dcfg).expect("simulate trace");
         let secs = t0.elapsed().as_secs_f64();
         Some((rep.events as f64 / secs, "events/s".to_string()))
     });
@@ -133,4 +145,52 @@ fn main() {
     ]);
     std::fs::write(&out, format!("{doc}\n")).expect("write snapshot");
     println!("wrote {out}");
+
+    gate_against_baseline(&samples);
+}
+
+/// CI perf smoke (ISSUE 8 satellite): when `$BENCH_GATE` names a committed
+/// snapshot, fail the run if any `des_replay*` throughput drops below 70%
+/// of that baseline. `$BENCH_GATE_SKIP` opts out (slow shared runners).
+/// The margin is deliberately loose — it catches structural regressions
+/// (an accidental O(n²) or a reverted calendar), not runner noise.
+fn gate_against_baseline(samples: &[olympus::util::benchkit::Sample]) {
+    if std::env::var("BENCH_GATE_SKIP").is_ok() {
+        println!("perf gate: skipped (BENCH_GATE_SKIP set)");
+        return;
+    }
+    let Ok(path) = std::env::var("BENCH_GATE") else { return };
+    let text = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("perf gate: read {path}: {e}"));
+    let base = Json::parse(&text).unwrap_or_else(|e| panic!("perf gate: parse {path}: {e}"));
+    let mut failed = false;
+    for row in base.get("samples").as_arr().unwrap_or_default() {
+        let name = row.get("name").as_str().unwrap_or_default();
+        if !name.starts_with("des_replay") {
+            continue;
+        }
+        let Some(want) = row.get("throughput").as_f64() else { continue };
+        let got = samples
+            .iter()
+            .find(|s| s.name == name)
+            .and_then(|s| s.throughput.as_ref().map(|(v, _)| *v));
+        match got {
+            Some(got) if got < want * 0.7 => {
+                println!(
+                    "perf gate: FAIL {name}: {got:.0} events/s < 70% of baseline {want:.0}"
+                );
+                failed = true;
+            }
+            Some(got) => {
+                println!("perf gate: ok {name}: {got:.0} events/s (baseline {want:.0})");
+            }
+            None => {
+                println!("perf gate: FAIL {name}: baseline row missing from this run");
+                failed = true;
+            }
+        }
+    }
+    if failed {
+        std::process::exit(1);
+    }
 }

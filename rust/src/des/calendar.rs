@@ -1,12 +1,63 @@
-//! The event calendar: a binary-heap priority queue over integer time.
+//! The event calendar: the scheduling core of the DES.
 //!
-//! Determinism contract: events at equal timestamps pop in *insertion
-//! order* (a monotone sequence number breaks ties), so a simulation is a
-//! pure function of its inputs — no HashMap iteration order, no wall clock.
+//! Two implementations behind one [`Calendar`] front:
+//!
+//! * [`EventCalendar`] — the original binary-heap priority queue. O(log n)
+//!   push/pop, pointer-chasing sift on every operation. Kept as the
+//!   *reference implementation*: simple enough to be obviously correct.
+//! * [`WheelCalendar`] — a hierarchical timing wheel (the classic calendar-
+//!   queue speedup for simulators): 11 levels of 64 slots each cover the
+//!   full 64-bit picosecond range, an event lands at the level where its
+//!   time first diverges from the cursor's radix-64 digits, and popping is
+//!   bitmap scans plus occasional cascades. Amortized O(1) per event for
+//!   the near-future-heavy schedules a queueing simulation produces. This
+//!   is the default engine.
+//!
+//! Determinism contract (upheld *identically* by both): events at equal
+//! timestamps pop in *insertion order* (a monotone sequence number breaks
+//! ties), scheduling in the past clamps to `now`, and the
+//! `scheduled`/`dispatched` counters tick exactly once per push/pop — so a
+//! simulation is a pure function of its inputs — no HashMap iteration
+//! order, no wall clock, and no dependence on which calendar ran it. The
+//! seeded property test at the bottom drives both with randomized
+//! interleaved schedules and asserts identical pop sequences.
 
-use std::collections::BinaryHeap;
+use std::collections::{BinaryHeap, VecDeque};
 
 use super::time::TimePoint;
+
+/// Which calendar implementation a run schedules on. Deliberately **not**
+/// part of any cache key or wire codec: both produce byte-identical
+/// reports, so the knob is pure mechanism ([`crate::des::DesConfig`]'s
+/// manual `Debug` impl omits it for exactly this reason).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum CalendarKind {
+    /// Hierarchical timing wheel (the default).
+    #[default]
+    Wheel,
+    /// Binary-heap reference implementation.
+    Heap,
+}
+
+impl CalendarKind {
+    /// Parse a `--calendar` value; the error names the accepted forms.
+    pub fn parse(s: &str) -> Result<CalendarKind, String> {
+        match s {
+            "wheel" => Ok(CalendarKind::Wheel),
+            "heap" => Ok(CalendarKind::Heap),
+            _ => Err(format!("bad calendar '{s}': want wheel | heap")),
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            CalendarKind::Wheel => "wheel",
+            CalendarKind::Heap => "heap",
+        }
+    }
+}
+
+// ---- binary-heap reference implementation ---------------------------------
 
 struct Entry<E> {
     time: TimePoint,
@@ -35,7 +86,8 @@ impl<E> Ord for Entry<E> {
     }
 }
 
-/// Min-heap event calendar with a monotone clock.
+/// Min-heap event calendar with a monotone clock (the reference
+/// implementation; see [`WheelCalendar`] for the default fast path).
 pub struct EventCalendar<E> {
     heap: BinaryHeap<Entry<E>>,
     seq: u64,
@@ -106,57 +158,480 @@ impl<E> EventCalendar<E> {
     pub fn dispatched(&self) -> u64 {
         self.dispatched
     }
+
+    /// Empty the calendar and rewind the clock, keeping the heap's
+    /// allocation (arena reuse across warm-started simulations).
+    pub fn reset(&mut self) {
+        self.heap.clear();
+        self.seq = 0;
+        self.now = TimePoint::ZERO;
+        self.scheduled = 0;
+        self.dispatched = 0;
+    }
+}
+
+// ---- hierarchical timing wheel --------------------------------------------
+
+/// Radix bits per wheel level: 64 slots, so one `u64` occupancy bitmap per
+/// level and `trailing_zeros` finds the next slot in one instruction.
+const LEVEL_BITS: u32 = 6;
+const SLOTS: usize = 1 << LEVEL_BITS;
+/// `ceil(64 / LEVEL_BITS)` levels cover every 64-bit picosecond timestamp.
+const LEVELS: usize = 11;
+
+/// Hierarchical timing-wheel calendar.
+///
+/// Geometry: level `l` is a 64-slot wheel whose slot `s` holds events whose
+/// picosecond timestamps share every radix-64 digit above `l` with the
+/// internal cursor and have digit `s` at level `l`. An event is filed at
+/// the *highest* level where its time diverges from the cursor (level 0 if
+/// equal), which makes three invariants fall out:
+///
+/// * a level-0 slot holds events of exactly one timestamp, so FIFO order
+///   within the slot *is* (time, seq) order;
+/// * the lowest nonempty slot of the lowest nonempty level holds the
+///   globally earliest event (levels are strictly time-ordered);
+/// * cascading a higher-level slot only ever redistributes into *empty*
+///   lower levels, so every slot's deque stays seq-sorted without sorting.
+///
+/// Popping scans bitmaps for that slot; if it is above level 0 the cursor
+/// advances to the slot's base time and the slot cascades down. Each event
+/// cascades at most `LEVELS - 1` times, and the common near-future case is
+/// a straight level-0 `pop_front`.
+pub struct WheelCalendar<E> {
+    /// `LEVELS * SLOTS` deques, level-major. Deques (not Vecs): pops come
+    /// off the front while pushes append, and capacity survives `reset`.
+    slots: Vec<VecDeque<(u64, u64, E)>>,
+    /// Per-level slot-occupancy bitmaps.
+    occ: [u64; LEVELS],
+    len: usize,
+    seq: u64,
+    now: TimePoint,
+    /// Hashing origin: every queued event time is `>= cursor`, and
+    /// `cursor <= now` between pops. Advances to slot bases on cascades.
+    cursor: u64,
+    scheduled: u64,
+    dispatched: u64,
+}
+
+impl<E> Default for WheelCalendar<E> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<E> WheelCalendar<E> {
+    pub fn new() -> Self {
+        WheelCalendar {
+            slots: (0..LEVELS * SLOTS).map(|_| VecDeque::new()).collect(),
+            occ: [0; LEVELS],
+            len: 0,
+            seq: 0,
+            now: TimePoint::ZERO,
+            cursor: 0,
+            scheduled: 0,
+            dispatched: 0,
+        }
+    }
+
+    /// Level where `t` first diverges from the cursor's radix-64 digits.
+    #[inline]
+    fn level_of(&self, t: u64) -> usize {
+        let d = t ^ self.cursor;
+        if d == 0 {
+            0
+        } else {
+            ((63 - d.leading_zeros()) / LEVEL_BITS) as usize
+        }
+    }
+
+    #[inline]
+    fn slot_of(t: u64, level: usize) -> usize {
+        ((t >> (LEVEL_BITS as usize * level)) & (SLOTS as u64 - 1)) as usize
+    }
+
+    #[inline]
+    fn file(&mut self, t: u64, seq: u64, ev: E) {
+        let level = self.level_of(t);
+        let slot = Self::slot_of(t, level);
+        self.slots[level * SLOTS + slot].push_back((t, seq, ev));
+        self.occ[level] |= 1 << slot;
+    }
+
+    /// Lowest nonempty (level, slot), i.e. where the earliest event lives.
+    #[inline]
+    fn earliest_slot(&self) -> Option<(usize, usize)> {
+        for level in 0..LEVELS {
+            if self.occ[level] != 0 {
+                return Some((level, self.occ[level].trailing_zeros() as usize));
+            }
+        }
+        None
+    }
+
+    /// See [`EventCalendar::now`].
+    pub fn now(&self) -> TimePoint {
+        self.now
+    }
+
+    /// See [`EventCalendar::push`]: past times clamp to `now`, equal times
+    /// preserve insertion order via the monotone sequence number.
+    pub fn push(&mut self, at: TimePoint, ev: E) {
+        let t = at.max(self.now).ps();
+        debug_assert!(t >= self.cursor, "event filed behind the wheel cursor");
+        let seq = self.seq;
+        self.seq += 1;
+        self.scheduled += 1;
+        self.len += 1;
+        self.file(t, seq, ev);
+    }
+
+    /// See [`EventCalendar::pop`]. Cascades higher-level slots down until
+    /// the earliest event sits in a level-0 slot, then pops its front.
+    pub fn pop(&mut self) -> Option<(TimePoint, E)> {
+        loop {
+            let (level, slot) = self.earliest_slot()?;
+            let idx = level * SLOTS + slot;
+            if level == 0 {
+                let (t, _seq, ev) = self.slots[idx].pop_front().expect("occupied bit lied");
+                if self.slots[idx].is_empty() {
+                    self.occ[0] &= !(1 << slot);
+                }
+                self.len -= 1;
+                self.dispatched += 1;
+                debug_assert!(t >= self.now.ps(), "calendar time went backwards");
+                self.now = TimePoint::from_ps(t);
+                self.cursor = t;
+                return Some((self.now, ev));
+            }
+            // Cascade: advance the cursor to the slot's base time (its
+            // digit at `level`, zeros below — never past any queued event)
+            // and redistribute; every entry re-files strictly below `level`.
+            let shift = LEVEL_BITS as usize * level;
+            let above = u64::MAX.checked_shl((shift as u32) + LEVEL_BITS).unwrap_or(0);
+            self.cursor = (self.cursor & above) | ((slot as u64) << shift);
+            self.occ[level] &= !(1 << slot);
+            let mut q = std::mem::take(&mut self.slots[idx]);
+            for (t, seq, ev) in q.drain(..) {
+                self.file(t, seq, ev);
+            }
+            // hand the emptied deque back so its capacity is reused
+            self.slots[idx] = q;
+        }
+    }
+
+    /// See [`EventCalendar::peek_time`]. Non-destructive: higher-level
+    /// slots are min-scanned instead of cascaded.
+    pub fn peek_time(&self) -> Option<TimePoint> {
+        let (level, slot) = self.earliest_slot()?;
+        let q = &self.slots[level * SLOTS + slot];
+        if level == 0 {
+            // single-timestamp slot: the front is the earliest
+            return q.front().map(|&(t, _, _)| TimePoint::from_ps(t));
+        }
+        q.iter().map(|&(t, _, _)| TimePoint::from_ps(t)).min()
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// See [`EventCalendar::scheduled`].
+    pub fn scheduled(&self) -> u64 {
+        self.scheduled
+    }
+
+    /// See [`EventCalendar::dispatched`].
+    pub fn dispatched(&self) -> u64 {
+        self.dispatched
+    }
+
+    /// See [`EventCalendar::reset`]: empties every occupied slot (bitmap-
+    /// guided, so a drained calendar resets in 11 loads) keeping all slot
+    /// allocations for the next warm-started run.
+    pub fn reset(&mut self) {
+        for level in 0..LEVELS {
+            let mut bits = self.occ[level];
+            while bits != 0 {
+                let slot = bits.trailing_zeros() as usize;
+                bits &= bits - 1;
+                self.slots[level * SLOTS + slot].clear();
+            }
+            self.occ[level] = 0;
+        }
+        self.len = 0;
+        self.seq = 0;
+        self.now = TimePoint::ZERO;
+        self.cursor = 0;
+        self.scheduled = 0;
+        self.dispatched = 0;
+    }
+}
+
+// ---- the dispatching front ------------------------------------------------
+
+/// The calendar the engine schedules on: one of the two implementations,
+/// chosen by [`CalendarKind`]. Static enum dispatch (not a trait object):
+/// the hot loop's push/pop stay monomorphized and inlinable.
+pub enum Calendar<E> {
+    Heap(EventCalendar<E>),
+    Wheel(WheelCalendar<E>),
+}
+
+impl<E> Calendar<E> {
+    pub fn new(kind: CalendarKind) -> Self {
+        match kind {
+            CalendarKind::Heap => Calendar::Heap(EventCalendar::new()),
+            CalendarKind::Wheel => Calendar::Wheel(WheelCalendar::new()),
+        }
+    }
+
+    pub fn kind(&self) -> CalendarKind {
+        match self {
+            Calendar::Heap(_) => CalendarKind::Heap,
+            Calendar::Wheel(_) => CalendarKind::Wheel,
+        }
+    }
+
+    pub fn now(&self) -> TimePoint {
+        match self {
+            Calendar::Heap(c) => c.now(),
+            Calendar::Wheel(c) => c.now(),
+        }
+    }
+
+    #[inline]
+    pub fn push(&mut self, at: TimePoint, ev: E) {
+        match self {
+            Calendar::Heap(c) => c.push(at, ev),
+            Calendar::Wheel(c) => c.push(at, ev),
+        }
+    }
+
+    #[inline]
+    pub fn pop(&mut self) -> Option<(TimePoint, E)> {
+        match self {
+            Calendar::Heap(c) => c.pop(),
+            Calendar::Wheel(c) => c.pop(),
+        }
+    }
+
+    pub fn peek_time(&self) -> Option<TimePoint> {
+        match self {
+            Calendar::Heap(c) => c.peek_time(),
+            Calendar::Wheel(c) => c.peek_time(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            Calendar::Heap(c) => c.len(),
+            Calendar::Wheel(c) => c.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn scheduled(&self) -> u64 {
+        match self {
+            Calendar::Heap(c) => c.scheduled(),
+            Calendar::Wheel(c) => c.scheduled(),
+        }
+    }
+
+    pub fn dispatched(&self) -> u64 {
+        match self {
+            Calendar::Heap(c) => c.dispatched(),
+            Calendar::Wheel(c) => c.dispatched(),
+        }
+    }
+
+    /// Empty and rewind, keeping allocations (see the per-impl `reset`s).
+    pub fn reset(&mut self) {
+        match self {
+            Calendar::Heap(c) => c.reset(),
+            Calendar::Wheel(c) => c.reset(),
+        }
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::des::time::TimeSpan;
+    use crate::util::Rng;
+
+    /// Every semantics test runs against both implementations.
+    fn both() -> Vec<Calendar<&'static str>> {
+        vec![Calendar::new(CalendarKind::Heap), Calendar::new(CalendarKind::Wheel)]
+    }
 
     #[test]
     fn pops_in_time_order() {
-        let mut c = EventCalendar::new();
-        c.push(TimePoint::from_ps(30), "c");
-        c.push(TimePoint::from_ps(10), "a");
-        c.push(TimePoint::from_ps(20), "b");
-        let order: Vec<&str> = std::iter::from_fn(|| c.pop().map(|(_, e)| e)).collect();
-        assert_eq!(order, vec!["a", "b", "c"]);
+        for mut c in both() {
+            c.push(TimePoint::from_ps(30), "c");
+            c.push(TimePoint::from_ps(10), "a");
+            c.push(TimePoint::from_ps(20), "b");
+            let order: Vec<&str> = std::iter::from_fn(|| c.pop().map(|(_, e)| e)).collect();
+            assert_eq!(order, vec!["a", "b", "c"], "{:?}", c.kind());
+        }
     }
 
     #[test]
     fn equal_times_pop_in_insertion_order() {
-        let mut c = EventCalendar::new();
-        for i in 0..100 {
-            c.push(TimePoint::from_ps(5), i);
+        for kind in [CalendarKind::Heap, CalendarKind::Wheel] {
+            let mut c = Calendar::new(kind);
+            for i in 0..100 {
+                c.push(TimePoint::from_ps(5), i);
+            }
+            let order: Vec<i32> = std::iter::from_fn(|| c.pop().map(|(_, e)| e)).collect();
+            assert_eq!(order, (0..100).collect::<Vec<_>>(), "{kind:?}");
         }
-        let order: Vec<i32> = std::iter::from_fn(|| c.pop().map(|(_, e)| e)).collect();
-        assert_eq!(order, (0..100).collect::<Vec<_>>());
     }
 
     #[test]
     fn clock_is_monotone_and_past_pushes_clamp() {
-        let mut c = EventCalendar::new();
-        c.push(TimePoint::from_ps(100), "later");
-        assert_eq!(c.pop().unwrap().0.ps(), 100);
-        assert_eq!(c.now().ps(), 100);
-        // schedule "in the past": fires at now, not before
-        c.push(TimePoint::from_ps(10), "past");
-        let (t, e) = c.pop().unwrap();
-        assert_eq!(t.ps(), 100);
-        assert_eq!(e, "past");
-        assert_eq!(c.now() + TimeSpan::ZERO, t);
+        for mut c in both() {
+            c.push(TimePoint::from_ps(100), "later");
+            assert_eq!(c.pop().unwrap().0.ps(), 100);
+            assert_eq!(c.now().ps(), 100);
+            // schedule "in the past": fires at now, not before
+            c.push(TimePoint::from_ps(10), "past");
+            let (t, e) = c.pop().unwrap();
+            assert_eq!(t.ps(), 100, "{:?}", c.kind());
+            assert_eq!(e, "past");
+            assert_eq!(c.now() + TimeSpan::ZERO, t);
+        }
     }
 
     #[test]
     fn counters_track_throughput() {
-        let mut c = EventCalendar::new();
-        for i in 0..10u64 {
-            c.push(TimePoint::from_ps(i), i);
+        for kind in [CalendarKind::Heap, CalendarKind::Wheel] {
+            let mut c = Calendar::new(kind);
+            for i in 0..10u64 {
+                c.push(TimePoint::from_ps(i), i);
+            }
+            assert_eq!(c.scheduled(), 10, "{kind:?}");
+            while c.pop().is_some() {}
+            assert_eq!(c.dispatched(), 10, "{kind:?}");
+            assert!(c.is_empty());
+            assert_eq!(c.len(), 0);
         }
-        assert_eq!(c.scheduled(), 10);
-        while c.pop().is_some() {}
-        assert_eq!(c.dispatched(), 10);
-        assert!(c.is_empty());
-        assert_eq!(c.len(), 0);
+    }
+
+    #[test]
+    fn peek_time_coherent_after_past_clamp() {
+        // A push "into the past" clamps to `now`; peek_time must report the
+        // clamped (fireable) time, not the stale requested one — on both
+        // implementations, including when the wheel clamps across levels.
+        for mut c in both() {
+            let kind = c.kind();
+            c.push(TimePoint::from_ps(5_000), "later");
+            assert_eq!(c.pop().unwrap().0.ps(), 5_000);
+            c.push(TimePoint::from_ps(7), "past");
+            assert_eq!(
+                c.peek_time(),
+                Some(TimePoint::from_ps(5_000)),
+                "{kind:?}: peek must show the clamp-to-now time"
+            );
+            // popping agrees with the peek, and the clock never rewinds
+            let (t, e) = c.pop().unwrap();
+            assert_eq!((t.ps(), e), (5_000, "past"), "{kind:?}");
+            assert_eq!(c.now().ps(), 5_000);
+            assert_eq!(c.peek_time(), None);
+        }
+    }
+
+    #[test]
+    fn wheel_cascades_across_levels() {
+        // events far enough apart to land on different wheel levels, pushed
+        // out of order, interleaved with pops that force cascades
+        let mut c = WheelCalendar::new();
+        let times =
+            [1u64 << 40, 3, (1 << 40) + 77, 1 << 18, (1 << 18) + 1, 64, 65, 63, 1 << 59];
+        for (i, &t) in times.iter().enumerate() {
+            c.push(TimePoint::from_ps(t), i);
+        }
+        let mut sorted: Vec<u64> = times.to_vec();
+        sorted.sort_unstable();
+        let popped: Vec<u64> = std::iter::from_fn(|| c.pop().map(|(t, _)| t.ps())).collect();
+        assert_eq!(popped, sorted);
+        assert_eq!(c.dispatched(), times.len() as u64);
+    }
+
+    /// The determinism contract, adversarially: seeded random interleaved
+    /// push/pop schedules — equal-time bursts, past-time clamps, near and
+    /// far horizons (to exercise every wheel level) — must produce
+    /// *identical* pop sequences, peeks and counters on both calendars.
+    #[test]
+    fn randomized_schedules_pop_identically_on_both_calendars() {
+        for seed in 0..8u64 {
+            let mut rng = Rng::new(0xCA1E_0000 + seed);
+            let mut heap: Calendar<u32> = Calendar::new(CalendarKind::Heap);
+            let mut wheel: Calendar<u32> = Calendar::new(CalendarKind::Wheel);
+            let mut payload = 0u32;
+            for _ in 0..4_000 {
+                let roll = rng.next_u64() % 100;
+                if roll < 60 {
+                    // push: horizon spans sub-slot to multi-level jumps
+                    let base = heap.now().ps();
+                    let dt = match rng.next_u64() % 5 {
+                        0 => 0,                                  // equal-time burst
+                        1 => rng.next_u64() % 64,                     // level 0
+                        2 => rng.next_u64() % 4_096,                  // level 1
+                        3 => rng.next_u64() % (1 << 30),              // mid levels
+                        _ => rng.next_u64() % (1 << 50),              // far future
+                    };
+                    // ~1 in 8 pushes aims into the past (clamps to now)
+                    let at = if rng.next_u64() % 8 == 0 {
+                        TimePoint::from_ps(base / 2)
+                    } else {
+                        TimePoint::from_ps(base.saturating_add(dt))
+                    };
+                    heap.push(at, payload);
+                    wheel.push(at, payload);
+                    payload += 1;
+                } else {
+                    assert_eq!(heap.peek_time(), wheel.peek_time(), "seed {seed}");
+                    assert_eq!(heap.pop(), wheel.pop(), "seed {seed}");
+                }
+            }
+            // drain: the full remaining sequences must match too
+            loop {
+                let (h, w) = (heap.pop(), wheel.pop());
+                assert_eq!(h, w, "seed {seed}");
+                if h.is_none() {
+                    break;
+                }
+            }
+            assert_eq!(heap.scheduled(), wheel.scheduled(), "seed {seed}");
+            assert_eq!(heap.dispatched(), wheel.dispatched(), "seed {seed}");
+            assert_eq!(heap.now(), wheel.now(), "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn reset_reuses_without_leaking_state() {
+        for mut c in both() {
+            c.push(TimePoint::from_ps(999), "x");
+            c.push(TimePoint::from_ps(1), "y");
+            let _ = c.pop();
+            c.reset();
+            assert!(c.is_empty());
+            assert_eq!((c.scheduled(), c.dispatched()), (0, 0));
+            assert_eq!(c.now(), TimePoint::ZERO);
+            assert_eq!(c.peek_time(), None);
+            // a fresh schedule behaves exactly like a new calendar
+            c.push(TimePoint::from_ps(2), "b");
+            c.push(TimePoint::from_ps(2), "c");
+            assert_eq!(c.pop(), Some((TimePoint::from_ps(2), "b")));
+            assert_eq!(c.pop(), Some((TimePoint::from_ps(2), "c")));
+        }
     }
 }

@@ -220,8 +220,17 @@ impl DepthTrack {
         self.cur
     }
 
-    /// Close the histogram at `end` and summarize.
-    pub fn finish(mut self, end: TimePoint) -> (f64, u64, u64, f64) {
+    /// Back to a fresh track, keeping the histogram's node allocations.
+    pub fn reset(&mut self) {
+        self.cur = 0;
+        self.max = 0;
+        self.last = TimePoint::ZERO;
+        self.hist.clear();
+    }
+
+    /// Close the histogram at `end` and summarize. Non-consuming so pooled
+    /// engine arenas can reuse the track; callers reset before the next run.
+    pub fn finish(&mut self, end: TimePoint) -> (f64, u64, u64, f64) {
         self.set(end, self.cur);
         let total: u64 = self.hist.values().sum();
         if total == 0 {

@@ -27,10 +27,11 @@ mod scenario;
 mod time;
 
 pub use build::{build_network, CuSpec, DesNet, FifoSpec, FlowSpec, MoverSpec};
-pub use calendar::EventCalendar;
+pub use calendar::{Calendar, CalendarKind, EventCalendar, WheelCalendar};
 pub use metrics::{ClassStats, DesReport, NodeKind, NodeMetrics};
 pub use network::{
-    simulate, simulate_network, simulate_network_traced, simulate_traced, DesConfig, ServiceDist,
+    simulate, simulate_arena, simulate_network, simulate_network_arena, simulate_network_traced,
+    simulate_traced, DesConfig, EngineArena, ServiceDist,
 };
 pub use scenario::{ArrivalPlan, ArrivalProcess, WorkloadScenario};
 pub use time::{TimePoint, TimeSpan, PS_PER_S};
@@ -211,6 +212,64 @@ mod tests {
         // queue-depth maxima never exceed FIFO capacity
         for n in r.nodes.iter().filter(|n| n.kind == NodeKind::Fifo) {
             assert!(n.max_depth <= 1024, "{n:?}");
+        }
+    }
+
+    /// Tentpole acceptance: the timing wheel and the binary heap are the
+    /// same simulator. Full [`DesReport`] equality — node tables, class
+    /// stats, event counts — on both a built architecture and a raw net.
+    #[test]
+    fn wheel_and_heap_reports_are_identical() {
+        let arch = arch_for("sanitize, iris, channel-reassign");
+        let sc = WorkloadScenario::bursty(50_000.0, 0.0002, 0.0008, 20);
+        let wheel =
+            DesConfig { seed: 7, calendar: CalendarKind::Wheel, ..DesConfig::default() };
+        let heap = DesConfig { calendar: CalendarKind::Heap, ..wheel.clone() };
+        assert_eq!(
+            simulate(&arch, &sc, &wheel).unwrap(),
+            simulate(&arch, &sc, &heap).unwrap(),
+            "calendar choice must not change the report"
+        );
+        let sc = WorkloadScenario::closed_loop(3);
+        assert_eq!(
+            simulate_network(&tandem_net(64, 8), &sc, &wheel).unwrap(),
+            simulate_network(&tandem_net(64, 8), &sc, &heap).unwrap(),
+            "raw-net replay too"
+        );
+    }
+
+    /// The calendar is an engine knob, not a modeling knob: it must stay
+    /// out of the `Debug` rendering (which feeds every DSE cache key) and
+    /// out of the wire codec, so a wheel coordinator and a heap worker
+    /// share one cache namespace.
+    #[test]
+    fn calendar_is_excluded_from_cache_keys_and_wire() {
+        let wheel = DesConfig { calendar: CalendarKind::Wheel, ..DesConfig::default() };
+        let heap = DesConfig { calendar: CalendarKind::Heap, ..DesConfig::default() };
+        assert_eq!(format!("{wheel:?}"), format!("{heap:?}"), "Debug feeds cache keys");
+        assert!(!format!("{wheel:?}").contains("calendar"));
+        assert_eq!(wheel.to_json().to_string(), heap.to_json().to_string());
+        let back = DesConfig::from_json(&heap.to_json()).unwrap();
+        assert_eq!(back.calendar, CalendarKind::Wheel, "wire decode takes the default");
+    }
+
+    /// Warm-start acceptance: one [`EngineArena`] reused across different
+    /// nets and scenarios replays each bit-identically to a fresh engine —
+    /// leftover capacity must never leak into results.
+    #[test]
+    fn arena_reuse_is_bit_identical_across_nets() {
+        let cfg = DesConfig::default();
+        let mut arena = EngineArena::new();
+        let runs: Vec<(DesNet, WorkloadScenario)> = vec![
+            (tandem_net(64, 8), WorkloadScenario::closed_loop(2)),
+            (two_mover_net(true), WorkloadScenario::closed_loop(1)),
+            (tandem_net(256, 2), WorkloadScenario::poisson(1_000_000.0, 6)),
+            (two_mover_net(false), WorkloadScenario::closed_loop(3)),
+        ];
+        for (net, sc) in &runs {
+            let fresh = simulate_network(net, sc, &cfg).unwrap();
+            let reused = simulate_network_arena(net, sc, &cfg, &mut arena).unwrap();
+            assert_eq!(fresh, reused, "arena reuse must not move a byte");
         }
     }
 

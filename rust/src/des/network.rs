@@ -16,6 +16,7 @@
 
 use anyhow::{bail, Result};
 use std::collections::{BinaryHeap, VecDeque};
+use std::fmt;
 
 use crate::lower::Architecture;
 use crate::obs::TraceSink;
@@ -26,9 +27,9 @@ use crate::util::{
 };
 
 use super::build::{build_network, DesNet};
-use super::calendar::EventCalendar;
+use super::calendar::{Calendar, CalendarKind};
 use super::metrics::{percentile, DepthTrack, DesReport, NodeKind, NodeMetrics};
-use super::scenario::WorkloadScenario;
+use super::scenario::{ArrivalPlan, WorkloadScenario};
 use super::time::{TimePoint, TimeSpan, PS_PER_S};
 
 /// Per-chunk CU service-time distribution. Every stochastic variant is
@@ -126,7 +127,7 @@ impl ServiceDist {
 }
 
 /// Engine knobs (separate from the workload scenario).
-#[derive(Debug, Clone)]
+#[derive(Clone)]
 pub struct DesConfig {
     /// RNG seed for the arrival process (and service draws, when a
     /// service distribution is stochastic).
@@ -160,6 +161,34 @@ pub struct DesConfig {
     /// policy's bounds from observed backlog (`--autoscale`). `None` =
     /// static capacity.
     pub autoscale: Option<AutoscalePolicy>,
+    /// Which event-calendar implementation schedules the run
+    /// (`--calendar`). Pure mechanism: both calendars produce byte-
+    /// identical reports, so this knob is deliberately **excluded** from
+    /// the manual `Debug` impl below (whose rendering feeds every
+    /// content-addressed cache key) and from the wire codec — a cached or
+    /// remotely-evaluated answer is valid under either engine.
+    pub calendar: CalendarKind,
+}
+
+/// Hand-rolled to keep [`DesConfig::calendar`] out of the rendering:
+/// `format!("{config:?}")` is embedded in candidate cache keys and in the
+/// coordinator/worker key-parity check, and the calendar choice must never
+/// split those caches. Field order and style match what `derive(Debug)`
+/// produced before the knob existed, so on-disk journals stay warm.
+impl fmt::Debug for DesConfig {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("DesConfig")
+            .field("seed", &self.seed)
+            .field("burst_elems", &self.burst_elems)
+            .field("utilization", &self.utilization)
+            .field("congestion_model", &self.congestion_model)
+            .field("max_events", &self.max_events)
+            .field("stripe_replicas", &self.stripe_replicas)
+            .field("service_dist", &self.service_dist)
+            .field("cu_service_dists", &self.cu_service_dists)
+            .field("autoscale", &self.autoscale)
+            .finish()
+    }
 }
 
 impl DesConfig {
@@ -235,6 +264,9 @@ impl DesConfig {
             service_dist: ServiceDist::parse(j.get("service_dist").as_str()?).ok()?,
             cu_service_dists,
             autoscale,
+            // deliberately not on the wire: results are calendar-invariant,
+            // so the receiving process schedules on its own default
+            calendar: CalendarKind::default(),
         })
     }
 }
@@ -251,6 +283,7 @@ impl Default for DesConfig {
             service_dist: ServiceDist::Deterministic,
             cu_service_dists: Vec::new(),
             autoscale: None,
+            calendar: CalendarKind::default(),
         }
     }
 }
@@ -323,6 +356,21 @@ struct MoverRt {
     rr: usize,
 }
 
+impl MoverRt {
+    /// Back to pre-run state, keeping queue/sojourn allocations.
+    fn reset(&mut self) {
+        self.queue.clear();
+        self.active = None;
+        self.remaining_beats = 0.0;
+        self.started = TimePoint::ZERO;
+        self.busy.reset();
+        self.sojourns.clear();
+        self.delivered = 0;
+        self.chunks_done = 0;
+        self.rr = 0;
+    }
+}
+
 #[derive(Default)]
 struct FifoRt {
     occ: u64,
@@ -334,6 +382,19 @@ struct FifoRt {
     chunks_out: u64,
     producers: Vec<Node>,
     consumers: Vec<Node>,
+}
+
+impl FifoRt {
+    fn reset(&mut self) {
+        self.occ = 0;
+        self.reserved = 0;
+        self.enq.clear();
+        self.depth.reset();
+        self.sojourns.clear();
+        self.chunks_out = 0;
+        self.producers.clear();
+        self.consumers.clear();
+    }
 }
 
 #[derive(Default)]
@@ -353,16 +414,62 @@ struct CuRt {
     firings: u64,
 }
 
+impl CuRt {
+    fn reset(&mut self) {
+        self.busy = false;
+        self.epoch = 0;
+        self.fills_charged = 0;
+        self.cur_n = 0;
+        self.started = TimePoint::ZERO;
+        self.pending_src = 0;
+        self.busy_track.reset();
+        self.sojourns.clear();
+        self.firings = 0;
+    }
+}
+
 struct PcRt {
     active: Vec<usize>,
     last: TimePoint,
     epoch: u64,
 }
 
-struct Engine<'a> {
-    net: &'a DesNet,
-    cfg: &'a DesConfig,
-    cal: EventCalendar<Ev>,
+impl Default for PcRt {
+    fn default() -> Self {
+        PcRt { active: Vec::new(), last: TimePoint::ZERO, epoch: 0 }
+    }
+}
+
+impl PcRt {
+    fn reset(&mut self) {
+        self.active.clear();
+        self.last = TimePoint::ZERO;
+        self.epoch = 0;
+    }
+}
+
+/// Shrink-or-grow `v` to `n` entries, resetting survivors in place so
+/// their heap allocations (queues, sojourn buffers, depth histograms)
+/// carry over to the next run.
+fn resize_reset<T: Default>(v: &mut Vec<T>, n: usize, reset: impl Fn(&mut T)) {
+    v.truncate(n);
+    for x in v.iter_mut() {
+        reset(x);
+    }
+    v.resize_with(n, T::default);
+}
+
+/// Every piece of engine state that survives across runs: the calendar,
+/// per-node runtimes, sample buffers, and scratch. [`simulate_network_arena`]
+/// lets a caller own one of these and thread it through thousands of
+/// candidate simulations — a DSE sweep then reuses one warm allocation set
+/// instead of re-growing every queue and histogram from empty per point.
+///
+/// A fresh arena and a reused one produce **byte-identical** reports:
+/// `reset_for` restores every field to its pre-run state; only spare
+/// capacity carries over.
+pub struct EngineArena {
+    cal: Calendar<Ev>,
     movers: Vec<MoverRt>,
     fifos: Vec<FifoRt>,
     cus: Vec<CuRt>,
@@ -373,6 +480,164 @@ struct Engine<'a> {
     fill_ps: Vec<f64>,
     /// Per-CU effective service distribution (config default + overrides).
     cu_dists: Vec<ServiceDist>,
+    /// Released, not yet completed; completions are attributed highest-
+    /// priority-first (see [`ReadyJob`]).
+    ready: BinaryHeap<ReadyJob>,
+    job_latency: Vec<f64>,
+    /// Per-class latency samples / deadline accounting, indexed by class.
+    class_lat: Vec<Vec<f64>>,
+    class_deadline_jobs: Vec<u64>,
+    class_deadline_misses: Vec<u64>,
+    /// Active replicas per CU (all 1 without an autoscale policy); service
+    /// rate scales linearly with it.
+    replicas: Vec<u32>,
+    /// (mover idx, fifo-fed elems per job) for write movers.
+    write_quota: Vec<(usize, u64)>,
+    /// Finished-transfer indices collected during a `PcWake` scan (reused
+    /// so the completion sweep never allocates).
+    pc_done_scratch: Vec<usize>,
+}
+
+impl Default for EngineArena {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl EngineArena {
+    pub fn new() -> Self {
+        EngineArena {
+            cal: Calendar::new(CalendarKind::default()),
+            movers: Vec::new(),
+            fifos: Vec::new(),
+            cus: Vec::new(),
+            pcs: Vec::new(),
+            service_ps_per_elem: Vec::new(),
+            fill_ps: Vec::new(),
+            cu_dists: Vec::new(),
+            ready: BinaryHeap::new(),
+            job_latency: Vec::new(),
+            class_lat: Vec::new(),
+            class_deadline_jobs: Vec::new(),
+            class_deadline_misses: Vec::new(),
+            replicas: Vec::new(),
+            write_quota: Vec::new(),
+            pc_done_scratch: Vec::new(),
+        }
+    }
+
+    /// Restore pre-run state for a simulation of `net` under `plan`,
+    /// keeping every surviving allocation's capacity.
+    fn reset_for(
+        &mut self,
+        net: &DesNet,
+        cfg: &DesConfig,
+        plan: &ArrivalPlan,
+        timing: &TimingModel,
+    ) {
+        // The calendar is rebuilt only when the configured kind changes
+        // (arena pools outlive individual configs); otherwise reset keeps
+        // its slot/heap storage warm.
+        if self.cal.kind() != cfg.calendar {
+            self.cal = Calendar::new(cfg.calendar);
+        } else {
+            self.cal.reset();
+        }
+        resize_reset(&mut self.movers, net.movers.len(), MoverRt::reset);
+        resize_reset(&mut self.fifos, net.fifos.len(), FifoRt::reset);
+        resize_reset(&mut self.cus, net.cus.len(), CuRt::reset);
+        resize_reset(&mut self.pcs, net.platform.pcs.len(), PcRt::reset);
+
+        self.service_ps_per_elem.clear();
+        self.service_ps_per_elem
+            .extend(net.cus.iter().map(|c| timing.cu_service_s(c.ii, 1) * PS_PER_S));
+        self.fill_ps.clear();
+        self.fill_ps.extend(net.cus.iter().map(|c| timing.cu_fill_s(c.latency) * PS_PER_S));
+        self.cu_dists.clear();
+        self.cu_dists.extend(net.cus.iter().map(|c| cfg.dist_for(&c.name)));
+
+        // wire wake lists (deterministic: build order)
+        for (mi, mv) in net.movers.iter().enumerate() {
+            for fl in &mv.flows {
+                if let Some(f) = fl.fifo {
+                    if mv.read {
+                        self.fifos[f].producers.push(Node::Mover(mi));
+                    } else {
+                        self.fifos[f].consumers.push(Node::Mover(mi));
+                    }
+                }
+            }
+        }
+        for (ci, cu) in net.cus.iter().enumerate() {
+            for &f in &cu.in_fifos {
+                self.fifos[f].consumers.push(Node::Cu(ci));
+            }
+            for &f in &cu.out_fifos {
+                self.fifos[f].producers.push(Node::Cu(ci));
+            }
+        }
+
+        self.write_quota.clear();
+        self.write_quota.extend(
+            net.movers
+                .iter()
+                .enumerate()
+                .filter(|(_, m)| !m.read)
+                .map(|(i, m)| (i, m.fifo_elems_per_job()))
+                .filter(|(_, q)| *q > 0),
+        );
+
+        let nclasses = plan.class_names.len();
+        self.class_lat.truncate(nclasses);
+        for v in self.class_lat.iter_mut() {
+            v.clear();
+        }
+        self.class_lat.resize_with(nclasses, Vec::new);
+        self.class_deadline_jobs.clear();
+        self.class_deadline_jobs.resize(nclasses, 0);
+        self.class_deadline_misses.clear();
+        self.class_deadline_misses.resize(nclasses, 0);
+
+        self.replicas.clear();
+        self.replicas.resize(
+            net.cus.len(),
+            cfg.autoscale.map(|p| p.min_replicas).unwrap_or(1).max(1),
+        );
+
+        self.ready.clear();
+        self.job_latency.clear();
+        self.pc_done_scratch.clear();
+
+        // Presize sample buffers from the scenario so steady-state runs
+        // never grow them mid-simulation. Clamped: a pathological plan
+        // must not pin gigabytes of capacity in a pooled arena.
+        const PRESIZE_CAP: u64 = 65_536;
+        let jobs = plan.times.len() as u64;
+        self.job_latency.reserve(jobs.min(PRESIZE_CAP) as usize);
+        let burst = cfg.burst_elems.max(1);
+        for (mi, mv) in net.movers.iter().enumerate() {
+            let chunks: u64 = mv
+                .flows
+                .iter()
+                .map(|fl| fl.elems_per_job / burst + u64::from(fl.elems_per_job % burst != 0))
+                .sum();
+            let want = chunks.saturating_mul(jobs).min(PRESIZE_CAP) as usize;
+            self.movers[mi].sojourns.reserve(want);
+        }
+        for (ci, cu) in net.cus.iter().enumerate() {
+            let firings = cu.out_elems_per_job / burst + 1;
+            let want = firings.saturating_mul(jobs).min(PRESIZE_CAP) as usize;
+            self.cus[ci].sojourns.reserve(want);
+        }
+    }
+}
+
+struct Engine<'a> {
+    net: &'a DesNet,
+    cfg: &'a DesConfig,
+    /// All reusable state — calendar, node runtimes, sample buffers —
+    /// lives in the arena (named `a` for brevity in the hot path).
+    a: &'a mut EngineArena,
     arrivals: Vec<TimePoint>,
     /// Per-job traffic tags from the scenario plan (class index, optional
     /// deadline, admission priority), indexed like `arrivals`.
@@ -382,20 +647,7 @@ struct Engine<'a> {
     class_names: Vec<String>,
     released: u64,
     completed: u64,
-    job_latency: Vec<f64>,
-    /// Released, not yet completed; completions are attributed highest-
-    /// priority-first (see [`ReadyJob`]).
-    ready: BinaryHeap<ReadyJob>,
-    /// Per-class latency samples / deadline accounting, indexed by class.
-    class_lat: Vec<Vec<f64>>,
-    class_deadline_jobs: Vec<u64>,
-    class_deadline_misses: Vec<u64>,
-    /// Active replicas per CU (all 1 without an autoscale policy); service
-    /// rate scales linearly with it.
-    replicas: Vec<u32>,
     last_completion: Option<TimePoint>,
-    /// (mover idx, fifo-fed elems per job) for write movers.
-    write_quota: Vec<(usize, u64)>,
     /// Service draws for stochastic distributions (decorrelated from the
     /// arrival stream so scenario and service noise are independent).
     service_rng: Rng,
@@ -426,6 +678,18 @@ pub fn simulate_traced(
     simulate_network_traced(&net, scenario, cfg, trace)
 }
 
+/// [`simulate`] against a caller-owned [`EngineArena`] — the warm-start
+/// entry point for candidate sweeps.
+pub fn simulate_arena(
+    arch: &Architecture,
+    scenario: &WorkloadScenario,
+    cfg: &DesConfig,
+    arena: &mut EngineArena,
+) -> Result<DesReport> {
+    let net = build_network(arch)?;
+    simulate_network_in(&net, scenario, cfg, None, arena)
+}
+
 /// Simulate a pre-built network (lets DSE reuse one build).
 pub fn simulate_network(
     net: &DesNet,
@@ -441,6 +705,27 @@ pub fn simulate_network_traced(
     scenario: &WorkloadScenario,
     cfg: &DesConfig,
     trace: Option<&mut TraceSink>,
+) -> Result<DesReport> {
+    simulate_network_in(net, scenario, cfg, trace, &mut EngineArena::new())
+}
+
+/// [`simulate_network`] reusing `arena`'s allocations across calls. The
+/// report is byte-identical to a fresh-arena run (see [`EngineArena`]).
+pub fn simulate_network_arena(
+    net: &DesNet,
+    scenario: &WorkloadScenario,
+    cfg: &DesConfig,
+    arena: &mut EngineArena,
+) -> Result<DesReport> {
+    simulate_network_in(net, scenario, cfg, None, arena)
+}
+
+fn simulate_network_in(
+    net: &DesNet,
+    scenario: &WorkloadScenario,
+    cfg: &DesConfig,
+    trace: Option<&mut TraceSink>,
+    arena: &mut EngineArena,
 ) -> Result<DesReport> {
     // replica-aware job striping (no-op for replica-free nets)
     let striped_net;
@@ -460,77 +745,20 @@ pub fn simulate_network_traced(
     let plan = scenario.plan(&mut rng);
 
     let timing = TimingModel::new(&net.platform, cfg.utilization, cfg.congestion_model);
-    let service_ps_per_elem: Vec<f64> =
-        net.cus.iter().map(|c| timing.cu_service_s(c.ii, 1) * PS_PER_S).collect();
-    let fill_ps: Vec<f64> =
-        net.cus.iter().map(|c| timing.cu_fill_s(c.latency) * PS_PER_S).collect();
-    let cu_dists: Vec<ServiceDist> = net.cus.iter().map(|c| cfg.dist_for(&c.name)).collect();
-
-    let mut fifos: Vec<FifoRt> = net.fifos.iter().map(|_| FifoRt::default()).collect();
-    // wire wake lists (deterministic: build order)
-    for (mi, mv) in net.movers.iter().enumerate() {
-        for fl in &mv.flows {
-            if let Some(f) = fl.fifo {
-                if mv.read {
-                    fifos[f].producers.push(Node::Mover(mi));
-                } else {
-                    fifos[f].consumers.push(Node::Mover(mi));
-                }
-            }
-        }
-    }
-    for (ci, cu) in net.cus.iter().enumerate() {
-        for &f in &cu.in_fifos {
-            fifos[f].consumers.push(Node::Cu(ci));
-        }
-        for &f in &cu.out_fifos {
-            fifos[f].producers.push(Node::Cu(ci));
-        }
-    }
-
-    let write_quota: Vec<(usize, u64)> = net
-        .movers
-        .iter()
-        .enumerate()
-        .filter(|(_, m)| !m.read)
-        .map(|(i, m)| (i, m.fifo_elems_per_job()))
-        .filter(|(_, q)| *q > 0)
-        .collect();
+    arena.reset_for(net, cfg, &plan, &timing);
 
     let mut eng = Engine {
         net,
         cfg,
-        cal: EventCalendar::new(),
-        movers: net.movers.iter().map(|_| MoverRt::default()).collect(),
-        fifos,
-        cus: net.cus.iter().map(|_| CuRt::default()).collect(),
-        pcs: net
-            .platform
-            .pcs
-            .iter()
-            .map(|_| PcRt { active: Vec::new(), last: TimePoint::ZERO, epoch: 0 })
-            .collect(),
-        service_ps_per_elem,
-        fill_ps,
-        cu_dists,
+        a: arena,
         arrivals: plan.times,
         classes: plan.class_of,
         deadlines: plan.deadlines,
         prios: plan.prios,
+        class_names: plan.class_names,
         released: 0,
         completed: 0,
-        job_latency: Vec::new(),
-        ready: BinaryHeap::new(),
-        class_lat: plan.class_names.iter().map(|_| Vec::new()).collect(),
-        class_deadline_jobs: vec![0; plan.class_names.len()],
-        class_deadline_misses: vec![0; plan.class_names.len()],
-        class_names: plan.class_names,
-        replicas: vec![
-            cfg.autoscale.map(|p| p.min_replicas).unwrap_or(1).max(1);
-            net.cus.len()
-        ],
         last_completion: None,
-        write_quota,
         service_rng: Rng::new(cfg.seed.rotate_left(17) ^ 0xD15E_A5ED_5EED_C0DE),
         trace,
     };
@@ -546,21 +774,23 @@ pub fn simulate_network_traced(
         }
     }
 
-    for (j, t) in eng.arrivals.clone().iter().enumerate() {
-        eng.cal.push(*t, Ev::Arrival { job: j as u64 });
+    for j in 0..eng.arrivals.len() {
+        let t = eng.arrivals[j];
+        eng.a.cal.push(t, Ev::Arrival { job: j as u64 });
     }
     if let Some(p) = &cfg.autoscale {
         // degenerate nets never complete jobs mid-run, so a self-
         // rescheduling tick would spin to the event budget — skip them
-        if !eng.write_quota.is_empty() {
-            eng.cal
+        if !eng.a.write_quota.is_empty() {
+            eng.a
+                .cal
                 .push(TimePoint::ZERO + TimeSpan::from_secs_f64(p.interval_s), Ev::Autoscale);
         }
     }
 
     let wall_start = std::time::Instant::now();
-    while let Some((now, ev)) = eng.cal.pop() {
-        if eng.cal.dispatched() > cfg.max_events {
+    while let Some((now, ev)) = eng.a.cal.pop() {
+        if eng.a.cal.dispatched() > cfg.max_events {
             bail!(
                 "des: event budget exhausted ({} events) — runaway simulation?",
                 cfg.max_events
@@ -569,19 +799,23 @@ pub fn simulate_network_traced(
         match ev {
             Ev::Arrival { job } => eng.on_arrival(job, now),
             Ev::PcWake { pc, epoch } => {
-                if eng.pcs[pc].epoch == epoch {
+                if eng.a.pcs[pc].epoch == epoch {
                     eng.on_pc_wake(pc, now);
                 }
             }
             Ev::CuDone { cu, epoch } => {
-                if eng.cus[cu].epoch == epoch && eng.cus[cu].busy {
+                if eng.a.cus[cu].epoch == epoch && eng.a.cus[cu].busy {
                     eng.on_cu_done(cu, now);
                 }
             }
             Ev::Autoscale => eng.on_autoscale(now),
         }
     }
-    crate::obs::metrics().record_des_run(eng.cal.dispatched(), wall_start.elapsed());
+    crate::obs::metrics().record_des_run(
+        eng.a.cal.dispatched(),
+        wall_start.elapsed(),
+        cfg.calendar.as_str(),
+    );
 
     Ok(eng.finish(scenario))
 }
@@ -592,49 +826,50 @@ impl<'a> Engine<'a> {
     fn on_arrival(&mut self, job: u64, now: TimePoint) {
         self.released += 1;
         let prio = self.prios.get(job as usize).copied().unwrap_or(0);
-        self.ready.push(ReadyJob { prio, idx: job });
+        self.a.ready.push(ReadyJob { prio, idx: job });
         for mi in 0..self.net.movers.len() {
             let mv = &self.net.movers[mi];
-            // Chunk the job per flow, then interleave flows round-robin:
-            // an Iris bus word carries all member arrays at once, and
+            // Chunk the job per flow, interleaving flows round-robin: an
+            // Iris bus word carries all member arrays at once, and
             // interleaving is also what keeps a small FIFO from head-of-line
-            // blocking the sibling array's data forever.
-            let mut per_flow: Vec<VecDeque<Chunk>> = Vec::with_capacity(mv.flows.len());
-            for (fi, fl) in mv.flows.iter().enumerate() {
-                let mut q = VecDeque::new();
-                // read flows stream in; flow-control-free flows (PLM/AXI)
-                // are fire-and-forget beat accounting on either side
-                if !mv.read && fl.fifo.is_some() {
-                    per_flow.push(q);
-                    continue; // write side pulls from its FIFO instead
-                }
-                let cap = fl.fifo.map(|f| self.net.fifos[f].cap_elems).unwrap_or(u64::MAX);
-                let chunk = self.cfg.burst_elems.clamp(1, cap);
-                let mut left = fl.elems_per_job;
-                while left > 0 {
-                    let n = chunk.min(left);
-                    q.push_back(Chunk { flow: fi, elems: n, prio });
-                    left -= n;
-                }
-                per_flow.push(q);
-            }
+            // blocking the sibling array's data forever. Chunks are
+            // generated round-major straight off the flow arithmetic —
+            // round r of flow fi covers elements [r*chunk, r*chunk+n) —
+            // which emits the exact sequence the old materialize-then-
+            // interleave code produced without allocating per-flow queues.
+            let mut round = 0u64;
             loop {
                 let mut pushed = false;
-                for q in per_flow.iter_mut() {
-                    if let Some(c) = q.pop_front() {
-                        Self::enqueue_chunk(&mut self.movers[mi].queue, c);
+                for (fi, fl) in mv.flows.iter().enumerate() {
+                    // read flows stream in; flow-control-free flows
+                    // (PLM/AXI) are fire-and-forget beat accounting on
+                    // either side
+                    if !mv.read && fl.fifo.is_some() {
+                        continue; // write side pulls from its FIFO instead
+                    }
+                    let cap =
+                        fl.fifo.map(|f| self.net.fifos[f].cap_elems).unwrap_or(u64::MAX);
+                    let chunk = self.cfg.burst_elems.clamp(1, cap);
+                    let off = round.saturating_mul(chunk);
+                    if off < fl.elems_per_job {
+                        let n = chunk.min(fl.elems_per_job - off);
+                        Self::enqueue_chunk(
+                            &mut self.a.movers[mi].queue,
+                            Chunk { flow: fi, elems: n, prio },
+                        );
                         pushed = true;
                     }
                 }
                 if !pushed {
                     break;
                 }
+                round += 1;
             }
             self.try_start_mover(mi, now);
         }
         for ci in 0..self.net.cus.len() {
             if self.net.cus[ci].source_like() {
-                self.cus[ci].pending_src += self.net.cus[ci].out_elems_per_job;
+                self.a.cus[ci].pending_src += self.net.cus[ci].out_elems_per_job;
                 self.try_fire_cu(ci, now);
             }
         }
@@ -655,24 +890,24 @@ impl<'a> Engine<'a> {
     }
 
     fn try_start_mover(&mut self, mi: usize, now: TimePoint) {
-        if self.movers[mi].active.is_some() {
+        if self.a.movers[mi].active.is_some() {
             return;
         }
         let read = self.net.movers[mi].read;
         // queued chunks first (read streams + flow-control-free transfers)
-        if let Some(&head) = self.movers[mi].queue.front() {
+        if let Some(&head) = self.a.movers[mi].queue.front() {
             let fl = &self.net.movers[mi].flows[head.flow];
             if read {
                 if let Some(f) = fl.fifo {
-                    let fifo = &self.fifos[f];
+                    let fifo = &self.a.fifos[f];
                     if fifo.occ + fifo.reserved + head.elems > self.net.fifos[f].cap_elems {
                         return; // backpressure: wait for the consumer
                     }
-                    self.fifos[f].reserved += head.elems;
+                    self.a.fifos[f].reserved += head.elems;
                 }
             }
             let beats = head.elems as f64 * fl.beats_per_elem;
-            self.movers[mi].queue.pop_front();
+            self.a.movers[mi].queue.pop_front();
             self.begin_transfer(mi, head, beats, now);
             return;
         }
@@ -683,12 +918,12 @@ impl<'a> Engine<'a> {
         // (rotating start index so multi-flow buses drain fairly)
         let nflows = self.net.movers[mi].flows.len();
         for k in 0..nflows {
-            let fi = (self.movers[mi].rr + k) % nflows;
+            let fi = (self.a.movers[mi].rr + k) % nflows;
             // borrows the shared network description only — no engine-state
             // conflict, no per-pull clone
             let fl = &self.net.movers[mi].flows[fi];
             let Some(f) = fl.fifo else { continue };
-            let avail = self.fifos[f].occ;
+            let avail = self.a.fifos[f].occ;
             if avail == 0 {
                 continue;
             }
@@ -696,14 +931,14 @@ impl<'a> Engine<'a> {
             self.dequeue_elems(f, n, now);
             self.wake_producers(f, now);
             let beats = n as f64 * fl.beats_per_elem;
-            self.movers[mi].rr = (fi + 1) % nflows;
+            self.a.movers[mi].rr = (fi + 1) % nflows;
             self.begin_transfer(mi, Chunk { flow: fi, elems: n, prio: 0 }, beats, now);
             return;
         }
     }
 
     fn begin_transfer(&mut self, mi: usize, chunk: Chunk, beats: f64, now: TimePoint) {
-        let m = &mut self.movers[mi];
+        let m = &mut self.a.movers[mi];
         m.active = Some(chunk);
         m.remaining_beats = beats.max(0.0);
         m.started = now;
@@ -715,14 +950,14 @@ impl<'a> Engine<'a> {
         }
         let pc = self.net.movers[mi].pc;
         self.pc_advance(pc, now);
-        self.pcs[pc].active.push(mi);
+        self.a.pcs[pc].active.push(mi);
         self.pc_reschedule(pc, now);
     }
 
     fn complete_transfer(&mut self, mi: usize, now: TimePoint) {
-        let chunk = self.movers[mi].active.take().expect("completing idle mover");
+        let chunk = self.a.movers[mi].active.take().expect("completing idle mover");
         {
-            let m = &mut self.movers[mi];
+            let m = &mut self.a.movers[mi];
             m.busy.set(now, 0);
             m.sojourns.push((now - m.started).as_secs_f64());
             m.chunks_done += 1;
@@ -735,13 +970,13 @@ impl<'a> Engine<'a> {
         let fl = &mv.flows[chunk.flow];
         if mv.read {
             if let Some(f) = fl.fifo {
-                let r = self.fifos[f].reserved;
-                self.fifos[f].reserved = r.saturating_sub(chunk.elems);
+                let r = self.a.fifos[f].reserved;
+                self.a.fifos[f].reserved = r.saturating_sub(chunk.elems);
                 self.enqueue_elems(f, chunk.elems, now);
                 self.wake_consumers(f, now);
             }
         } else if fl.fifo.is_some() {
-            self.movers[mi].delivered += chunk.elems;
+            self.a.movers[mi].delivered += chunk.elems;
             self.check_job_completions(now);
         }
         self.try_start_mover(mi, now);
@@ -751,7 +986,7 @@ impl<'a> Engine<'a> {
 
     /// Beats/ps each active transfer on `pc` currently receives.
     fn pc_share(&self, pc: usize) -> f64 {
-        let n = self.pcs[pc].active.len();
+        let n = self.a.pcs[pc].active.len();
         if n == 0 {
             return 0.0;
         }
@@ -759,48 +994,58 @@ impl<'a> Engine<'a> {
     }
 
     fn pc_advance(&mut self, pc: usize, now: TimePoint) {
-        let dt = (now - self.pcs[pc].last).ps();
-        self.pcs[pc].last = now;
-        if dt == 0 || self.pcs[pc].active.is_empty() {
+        let dt = (now - self.a.pcs[pc].last).ps();
+        self.a.pcs[pc].last = now;
+        if dt == 0 || self.a.pcs[pc].active.is_empty() {
             return;
         }
         let share = self.pc_share(pc);
-        for k in 0..self.pcs[pc].active.len() {
-            let mi = self.pcs[pc].active[k];
-            let m = &mut self.movers[mi];
+        for k in 0..self.a.pcs[pc].active.len() {
+            let mi = self.a.pcs[pc].active[k];
+            let m = &mut self.a.movers[mi];
             m.remaining_beats = (m.remaining_beats - share * dt as f64).max(0.0);
         }
     }
 
     fn pc_reschedule(&mut self, pc: usize, now: TimePoint) {
-        self.pcs[pc].epoch += 1;
-        if self.pcs[pc].active.is_empty() {
+        self.a.pcs[pc].epoch += 1;
+        if self.a.pcs[pc].active.is_empty() {
             return;
         }
         let share = self.pc_share(pc);
-        let min_rem = self
-            .pcs[pc]
+        let min_rem = self.a.pcs[pc]
             .active
             .iter()
-            .map(|&mi| self.movers[mi].remaining_beats)
+            .map(|&mi| self.a.movers[mi].remaining_beats)
             .fold(f64::INFINITY, f64::min);
         let dt_ps = if share > 0.0 { (min_rem / share).ceil() } else { 1.0 };
         let span = TimeSpan::from_ps(dt_ps.clamp(1.0, 1e15) as u64);
-        let epoch = self.pcs[pc].epoch;
-        self.cal.push(now + span, Ev::PcWake { pc, epoch });
+        let epoch = self.a.pcs[pc].epoch;
+        self.a.cal.push(now + span, Ev::PcWake { pc, epoch });
     }
 
     fn on_pc_wake(&mut self, pc: usize, now: TimePoint) {
         self.pc_advance(pc, now);
-        let done: Vec<usize> = self
-            .pcs[pc]
-            .active
-            .iter()
-            .copied()
-            .filter(|&mi| self.movers[mi].remaining_beats <= BEAT_EPS)
-            .collect();
-        self.pcs[pc].active.retain(|mi| !done.contains(mi));
-        for mi in done {
+        // One retain pass splits finished from still-running transfers:
+        // finished indices land in the arena scratch (in `active` order,
+        // matching the old filter-then-retain pair) with no per-wake
+        // allocation and no quadratic `contains` scan.
+        {
+            let a = &mut *self.a;
+            a.pc_done_scratch.clear();
+            let movers = &a.movers;
+            let scratch = &mut a.pc_done_scratch;
+            a.pcs[pc].active.retain(|&mi| {
+                if movers[mi].remaining_beats <= BEAT_EPS {
+                    scratch.push(mi);
+                    false
+                } else {
+                    true
+                }
+            });
+        }
+        for k in 0..self.a.pc_done_scratch.len() {
+            let mi = self.a.pc_done_scratch[k];
             self.complete_transfer(mi, now);
         }
         self.pc_reschedule(pc, now);
@@ -809,7 +1054,7 @@ impl<'a> Engine<'a> {
     // ---- FIFOs -----------------------------------------------------------
 
     fn enqueue_elems(&mut self, f: usize, n: u64, now: TimePoint) {
-        let q = &mut self.fifos[f];
+        let q = &mut self.a.fifos[f];
         q.occ += n;
         q.enq.push_back((now, n));
         let d = q.occ;
@@ -821,7 +1066,7 @@ impl<'a> Engine<'a> {
     }
 
     fn dequeue_elems(&mut self, f: usize, n: u64, now: TimePoint) {
-        let q = &mut self.fifos[f];
+        let q = &mut self.a.fifos[f];
         debug_assert!(q.occ >= n, "fifo underflow");
         q.occ -= n;
         let d = q.occ;
@@ -846,8 +1091,8 @@ impl<'a> Engine<'a> {
     }
 
     fn wake_consumers(&mut self, f: usize, now: TimePoint) {
-        for k in 0..self.fifos[f].consumers.len() {
-            match self.fifos[f].consumers[k] {
+        for k in 0..self.a.fifos[f].consumers.len() {
+            match self.a.fifos[f].consumers[k] {
                 Node::Cu(ci) => self.try_fire_cu(ci, now),
                 Node::Mover(mi) => self.try_start_mover(mi, now),
             }
@@ -855,8 +1100,8 @@ impl<'a> Engine<'a> {
     }
 
     fn wake_producers(&mut self, f: usize, now: TimePoint) {
-        for k in 0..self.fifos[f].producers.len() {
-            match self.fifos[f].producers[k] {
+        for k in 0..self.a.fifos[f].producers.len() {
+            match self.a.fifos[f].producers[k] {
                 Node::Cu(ci) => self.try_fire_cu(ci, now),
                 Node::Mover(mi) => self.try_start_mover(mi, now),
             }
@@ -866,16 +1111,16 @@ impl<'a> Engine<'a> {
     // ---- compute units ---------------------------------------------------
 
     fn try_fire_cu(&mut self, ci: usize, now: TimePoint) {
-        if self.cus[ci].busy {
+        if self.a.cus[ci].busy {
             return;
         }
         let spec = &self.net.cus[ci];
         let mut n = self.cfg.burst_elems.max(1);
         if spec.source_like() {
-            n = n.min(self.cus[ci].pending_src);
+            n = n.min(self.a.cus[ci].pending_src);
         } else {
             for &f in &spec.in_fifos {
-                n = n.min(self.fifos[f].occ);
+                n = n.min(self.a.fifos[f].occ);
             }
         }
         if n == 0 {
@@ -884,7 +1129,7 @@ impl<'a> Engine<'a> {
         // clamp to available output space; any progress beats a stall
         for &f in &spec.out_fifos {
             let free = self.net.fifos[f].cap_elems
-                - (self.fifos[f].occ + self.fifos[f].reserved).min(self.net.fifos[f].cap_elems);
+                - (self.a.fifos[f].occ + self.a.fifos[f].reserved).min(self.net.fifos[f].cap_elems);
             n = n.min(free);
         }
         if n == 0 {
@@ -893,27 +1138,27 @@ impl<'a> Engine<'a> {
         // `spec` borrows the (shared) network description, not the engine
         // state, so no clones are needed in this hot path
         if spec.source_like() {
-            self.cus[ci].pending_src -= n;
+            self.a.cus[ci].pending_src -= n;
         } else {
             for &f in &spec.in_fifos {
                 self.dequeue_elems(f, n, now);
             }
         }
         for &f in &spec.out_fifos {
-            self.fifos[f].reserved += n;
+            self.a.fifos[f].reserved += n;
         }
         // active replicas serve a chunk proportionally faster (elastic
         // capacity; `replicas` stays 1 without an autoscale policy)
         let mut service_ps =
-            n as f64 * self.service_ps_per_elem[ci] / self.replicas[ci] as f64;
+            n as f64 * self.a.service_ps_per_elem[ci] / self.a.replicas[ci] as f64;
         // unit-mean multiplier keeps the offered load at the deterministic
         // value; Deterministic draws nothing (multiplies by exactly 1.0)
-        service_ps *= self.cu_dists[ci].sample(&mut self.service_rng);
-        if self.cus[ci].fills_charged < self.released {
-            service_ps += self.fill_ps[ci];
-            self.cus[ci].fills_charged += 1;
+        service_ps *= self.a.cu_dists[ci].sample(&mut self.service_rng);
+        if self.a.cus[ci].fills_charged < self.released {
+            service_ps += self.a.fill_ps[ci];
+            self.a.cus[ci].fills_charged += 1;
         }
-        let cu = &mut self.cus[ci];
+        let cu = &mut self.a.cus[ci];
         cu.busy = true;
         cu.cur_n = n;
         cu.started = now;
@@ -921,7 +1166,7 @@ impl<'a> Engine<'a> {
         cu.epoch += 1;
         let epoch = cu.epoch;
         let span = TimeSpan::from_ps((service_ps.ceil() as u64).max(1));
-        self.cal.push(now + span, Ev::CuDone { cu: ci, epoch });
+        self.a.cal.push(now + span, Ev::CuDone { cu: ci, epoch });
         let net = self.net;
         if let Some(t) = self.trace.as_deref_mut() {
             t.begin(1 + ci as u64, &net.cus[ci].name, now.ps());
@@ -934,9 +1179,9 @@ impl<'a> Engine<'a> {
     }
 
     fn on_cu_done(&mut self, ci: usize, now: TimePoint) {
-        let n = self.cus[ci].cur_n;
+        let n = self.a.cus[ci].cur_n;
         {
-            let cu = &mut self.cus[ci];
+            let cu = &mut self.a.cus[ci];
             cu.busy = false;
             cu.cur_n = 0;
             cu.busy_track.set(now, 0);
@@ -948,8 +1193,8 @@ impl<'a> Engine<'a> {
         }
         for k in 0..self.net.cus[ci].out_fifos.len() {
             let f = self.net.cus[ci].out_fifos[k];
-            let r = self.fifos[f].reserved;
-            self.fifos[f].reserved = r.saturating_sub(n);
+            let r = self.a.fifos[f].reserved;
+            self.a.fifos[f].reserved = r.saturating_sub(n);
             self.enqueue_elems(f, n, now);
             self.wake_consumers(f, now);
         }
@@ -966,47 +1211,48 @@ impl<'a> Engine<'a> {
         for ci in 0..self.net.cus.len() {
             let spec = &self.net.cus[ci];
             let backlog: u64 = if spec.source_like() {
-                self.cus[ci].pending_src
+                self.a.cus[ci].pending_src
             } else {
-                spec.in_fifos.iter().map(|&f| self.fifos[f].occ).sum()
+                spec.in_fifos.iter().map(|&f| self.a.fifos[f].occ).sum()
             };
-            let r = self.replicas[ci];
+            let r = self.a.replicas[ci];
             if backlog >= p.scale_up_backlog && r < p.max_replicas {
-                self.replicas[ci] = r + 1;
+                self.a.replicas[ci] = r + 1;
             } else if backlog <= p.scale_down_backlog && r > p.min_replicas {
-                self.replicas[ci] = r - 1;
+                self.a.replicas[ci] = r - 1;
             }
         }
         if self.completed < self.arrivals.len() as u64 {
-            self.cal.push(now + TimeSpan::from_secs_f64(p.interval_s), Ev::Autoscale);
+            self.a.cal.push(now + TimeSpan::from_secs_f64(p.interval_s), Ev::Autoscale);
         }
     }
 
     // ---- job accounting --------------------------------------------------
 
     fn check_job_completions(&mut self, now: TimePoint) {
-        if self.write_quota.is_empty() {
+        if self.a.write_quota.is_empty() {
             return;
         }
         let done = self
+            .a
             .write_quota
             .iter()
-            .map(|&(mi, quota)| self.movers[mi].delivered / quota)
+            .map(|&(mi, quota)| self.a.movers[mi].delivered / quota)
             .min()
             .unwrap_or(0);
         while self.completed < done.min(self.released) {
             // completions are attributed highest-priority-first among the
             // released jobs (arrival order when priorities are uniform),
             // matching the admission order `enqueue_chunk` imposes
-            let job = self.ready.pop().map(|r| r.idx).unwrap_or(self.completed) as usize;
+            let job = self.a.ready.pop().map(|r| r.idx).unwrap_or(self.completed) as usize;
             let lat = (now - self.arrivals[job]).as_secs_f64();
-            self.job_latency.push(lat);
+            self.a.job_latency.push(lat);
             let class = self.classes.get(job).copied().unwrap_or(0) as usize;
-            self.class_lat[class].push(lat);
+            self.a.class_lat[class].push(lat);
             if let Some(deadline) = self.deadlines.get(job).copied().flatten() {
-                self.class_deadline_jobs[class] += 1;
+                self.a.class_deadline_jobs[class] += 1;
                 if now - self.arrivals[job] > deadline {
-                    self.class_deadline_misses[class] += 1;
+                    self.a.class_deadline_misses[class] += 1;
                 }
             }
             self.completed += 1;
@@ -1016,19 +1262,24 @@ impl<'a> Engine<'a> {
 
     // ---- report ----------------------------------------------------------
 
-    fn finish(mut self, scenario: &WorkloadScenario) -> DesReport {
-        let end = self.cal.now();
+    /// Fold per-node samples into the report. Borrows the arena in place
+    /// (sorting sojourn buffers where percentiles need it) — the next
+    /// `reset_for` clears everything, so nothing is consumed.
+    fn finish(&mut self, scenario: &WorkloadScenario) -> DesReport {
+        let end = self.a.cal.now();
         // degenerate nets (no FIFO-fed write movers): everything that was
         // released counts as done when the calendar drains
-        if self.write_quota.is_empty() {
+        if self.a.write_quota.is_empty() {
             self.completed = self.released;
             self.last_completion = Some(end);
         }
-        let mut nodes = Vec::new();
+        let mut nodes = Vec::with_capacity(
+            self.net.cus.len() + self.net.fifos.len() + self.net.movers.len(),
+        );
         for (ci, cu) in self.net.cus.iter().enumerate() {
-            let rt = std::mem::take(&mut self.cus[ci]);
+            let rt = &mut self.a.cus[ci];
             let (mean, p99, max, util) = rt.busy_track.finish(end);
-            let mut soj = rt.sojourns;
+            let soj = &mut rt.sojourns;
             let mean_soj =
                 if soj.is_empty() { 0.0 } else { soj.iter().sum::<f64>() / soj.len() as f64 };
             nodes.push(NodeMetrics {
@@ -1039,14 +1290,14 @@ impl<'a> Engine<'a> {
                 p99_depth: p99,
                 max_depth: max,
                 mean_sojourn_s: mean_soj,
-                p99_sojourn_s: percentile(&mut soj, 0.99),
+                p99_sojourn_s: percentile(soj, 0.99),
                 completions: rt.firings,
             });
         }
         for (fi, f) in self.net.fifos.iter().enumerate() {
-            let rt = std::mem::take(&mut self.fifos[fi]);
+            let rt = &mut self.a.fifos[fi];
             let (mean, p99, max, util) = rt.depth.finish(end);
-            let mut soj = rt.sojourns;
+            let soj = &mut rt.sojourns;
             let mean_soj =
                 if soj.is_empty() { 0.0 } else { soj.iter().sum::<f64>() / soj.len() as f64 };
             nodes.push(NodeMetrics {
@@ -1057,14 +1308,14 @@ impl<'a> Engine<'a> {
                 p99_depth: p99,
                 max_depth: max,
                 mean_sojourn_s: mean_soj,
-                p99_sojourn_s: percentile(&mut soj, 0.99),
+                p99_sojourn_s: percentile(soj, 0.99),
                 completions: rt.chunks_out,
             });
         }
         for (mi, m) in self.net.movers.iter().enumerate() {
-            let rt = std::mem::take(&mut self.movers[mi]);
+            let rt = &mut self.a.movers[mi];
             let (mean, p99, max, util) = rt.busy.finish(end);
-            let mut soj = rt.sojourns;
+            let soj = &mut rt.sojourns;
             let mean_soj =
                 if soj.is_empty() { 0.0 } else { soj.iter().sum::<f64>() / soj.len() as f64 };
             nodes.push(NodeMetrics {
@@ -1075,7 +1326,7 @@ impl<'a> Engine<'a> {
                 p99_depth: p99,
                 max_depth: max,
                 mean_sojourn_s: mean_soj,
-                p99_sojourn_s: percentile(&mut soj, 0.99),
+                p99_sojourn_s: percentile(soj, 0.99),
                 completions: rt.chunks_done,
             });
         }
@@ -1083,32 +1334,28 @@ impl<'a> Engine<'a> {
             .last_completion
             .map(|t| t.as_secs_f64())
             .unwrap_or_else(|| end.as_secs_f64());
-        let classes: Vec<super::metrics::ClassStats> = self
-            .class_names
-            .iter()
-            .enumerate()
-            .map(|(i, name)| {
-                let mut samples = std::mem::take(&mut self.class_lat[i]);
-                let mean = if samples.is_empty() {
-                    0.0
-                } else {
-                    samples.iter().sum::<f64>() / samples.len() as f64
-                };
-                super::metrics::ClassStats {
-                    class: name.clone(),
-                    jobs: samples.len() as u64,
-                    mean_latency_s: mean,
-                    p99_latency_s: percentile(&mut samples, 0.99),
-                    deadline_jobs: self.class_deadline_jobs[i],
-                    deadline_misses: self.class_deadline_misses[i],
-                }
-            })
-            .collect();
-        let mut lat = self.job_latency;
+        let mut classes = Vec::with_capacity(self.class_names.len());
+        for (i, name) in self.class_names.iter().enumerate() {
+            let samples = &mut self.a.class_lat[i];
+            let mean = if samples.is_empty() {
+                0.0
+            } else {
+                samples.iter().sum::<f64>() / samples.len() as f64
+            };
+            classes.push(super::metrics::ClassStats {
+                class: name.clone(),
+                jobs: samples.len() as u64,
+                mean_latency_s: mean,
+                p99_latency_s: percentile(samples, 0.99),
+                deadline_jobs: self.a.class_deadline_jobs[i],
+                deadline_misses: self.a.class_deadline_misses[i],
+            });
+        }
+        let lat = &mut self.a.job_latency;
         let mean_lat =
             if lat.is_empty() { 0.0 } else { lat.iter().sum::<f64>() / lat.len() as f64 };
-        let p50 = percentile(&mut lat, 0.50);
-        let p99 = percentile(&mut lat, 0.99);
+        let p50 = percentile(lat, 0.50);
+        let p99 = percentile(lat, 0.99);
         let max_lat = lat.last().copied().unwrap_or(0.0);
         DesReport {
             scenario: scenario.name.clone(),
@@ -1126,7 +1373,7 @@ impl<'a> Engine<'a> {
             } else {
                 0.0
             },
-            events: self.cal.dispatched(),
+            events: self.a.cal.dispatched(),
             classes,
         }
     }

@@ -141,6 +141,7 @@ fn usage() -> ! {
          [--search-seed N] \
          [--scenario closed:N|poisson:HZ:N|bursty:HZ:ON:OFF:N|diurnal:HZ:AMP:PERIOD:N|trace:FILE] \
          [--service-dist deterministic|exponential|lognormal:SIGMA|pareto:ALPHA] \
+         [--calendar wheel|heap] \
          [--autoscale INTERVAL_S:UP:DOWN:MIN:MAX] [--priority N] [--deadline-ms N] [--out DIR] \
          [--artifacts DIR] [--seed N] [--jobs N] [--addr HOST:PORT] [--factors 2,4] \
          [--cache-dir DIR] [--workers HOST:PORT,...] [--trace FILE] \
@@ -248,6 +249,9 @@ fn scenario_and_config(
             olympus::traffic::AutoscalePolicy::parse(spec).map_err(|e| anyhow::anyhow!(e))?,
         );
     }
+    if let Some(spec) = args.flags.get("calendar") {
+        cfg.calendar = olympus::des::CalendarKind::parse(spec).map_err(|e| anyhow::anyhow!(e))?;
+    }
     Ok((scenario, cfg))
 }
 
@@ -337,7 +341,8 @@ fn main() -> Result<()> {
                 // the analytic objective replays nothing: reject the DES
                 // flags instead of silently ignoring them
                 None | Some("analytic") => {
-                    for flag in ["scenario", "seed", "slo", "autoscale", "service-dist"] {
+                    for flag in ["scenario", "seed", "slo", "autoscale", "service-dist", "calendar"]
+                    {
                         if args.flags.contains_key(flag) {
                             bail!(
                                 "--{flag} only configures the des-score/slo-score objectives; \
@@ -721,8 +726,9 @@ fn run_stats(args: &Args) -> Result<()> {
         return Ok(());
     }
     println!(
-        "{:<28} {:>8} {:>7} {:>7} {:>7} {:>7} {:>9} {:>9} {:>9} {:>11}",
-        "node", "uptime_s", "reqs", "local", "remote", "hits", "p50", "p95", "p99", "des ev/s"
+        "{:<28} {:>8} {:>7} {:>7} {:>7} {:>7} {:>9} {:>9} {:>9} {:>11} {:>6}",
+        "node", "uptime_s", "reqs", "local", "remote", "hits", "p50", "p95", "p99", "des ev/s",
+        "cal"
     );
     print_stats_row(&format!("{addr} (coordinator)"), Some(&coord));
     for (w, m) in &workers {
@@ -752,8 +758,10 @@ fn print_stats_row(node: &str, m: Option<&Json>) {
         _ => "-".to_string(),
     };
     let evs = m.get("des").get("last_events_per_sec").as_f64().unwrap_or(0.0);
+    let cal = m.get("des").get("calendar").as_str().unwrap_or("-");
     println!(
-        "{node:<28} {uptime_s:>8} {reqs:>7} {:>7} {:>7} {:>7} {:>9} {:>9} {:>9} {evs:>11.0}",
+        "{node:<28} {uptime_s:>8} {reqs:>7} {:>7} {:>7} {:>7} {:>9} {:>9} {:>9} {evs:>11.0} \
+         {cal:>6}",
         count("eval_local"),
         count("eval_remote"),
         count("eval_cache_hit"),

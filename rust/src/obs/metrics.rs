@@ -237,6 +237,10 @@ pub struct Metrics {
     pub des_wall_ns: Counter,
     /// Events/sec of the most recent DES run.
     pub des_last_events_per_sec: Gauge,
+    /// Calendar implementation of the most recent DES run ("-" until one
+    /// runs); labels the throughput numbers so a fleet operator can see
+    /// which scheduling engine produced them.
+    des_calendar: Mutex<&'static str>,
     requests: Mutex<BTreeMap<&'static str, u64>>,
     /// Queue wait broken out by scheduling class (`p{prio}`), created on
     /// first touch. The map lock guards only lookup/insert; recording goes
@@ -258,6 +262,7 @@ impl Metrics {
             des_events: Counter::new(),
             des_wall_ns: Counter::new(),
             des_last_events_per_sec: Gauge::new(),
+            des_calendar: Mutex::new("-"),
             requests: Mutex::new(BTreeMap::new()),
             class_queue_wait: Mutex::new(BTreeMap::new()),
         }
@@ -320,17 +325,20 @@ impl Metrics {
             ("wall_ns", wall_ns.into()),
             ("events_per_sec", cumulative.into()),
             ("last_events_per_sec", self.des_last_events_per_sec.get().into()),
+            ("calendar", (*self.des_calendar.lock().unwrap()).into()),
         ])
     }
 
-    /// Record one finished DES run (event count + main-loop wall time).
-    pub fn record_des_run(&self, events: u64, wall: Duration) {
+    /// Record one finished DES run (event count + main-loop wall time +
+    /// the calendar implementation that scheduled it).
+    pub fn record_des_run(&self, events: u64, wall: Duration, calendar: &'static str) {
         let ns = wall.as_nanos().min(u64::MAX as u128) as u64;
         self.des_events.add(events);
         self.des_wall_ns.add(ns);
         if ns > 0 {
             self.des_last_events_per_sec.set(events as f64 / (ns as f64 / 1e9));
         }
+        *self.des_calendar.lock().unwrap() = calendar;
     }
 }
 
@@ -463,7 +471,7 @@ mod tests {
         m.count_request("dse");
         m.count_request("ping");
         m.request_latency.record(1_000);
-        m.record_des_run(5_000, Duration::from_millis(2));
+        m.record_des_run(5_000, Duration::from_millis(2), "wheel");
         let req = m.requests_json();
         assert_eq!(req.get("dse").as_u64(), Some(2));
         assert_eq!(req.get("ping").as_u64(), Some(1));
@@ -473,6 +481,13 @@ mod tests {
         let des = m.des_json();
         assert_eq!(des.get("events").as_u64(), Some(5_000));
         assert!(des.get("events_per_sec").as_f64().unwrap() > 0.0);
+        assert_eq!(des.get("calendar").as_str(), Some("wheel"));
+    }
+
+    #[test]
+    fn des_calendar_label_defaults_to_dash() {
+        let m = Metrics::new();
+        assert_eq!(m.des_json().get("calendar").as_str(), Some("-"));
     }
 
     #[test]

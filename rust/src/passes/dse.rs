@@ -52,7 +52,7 @@ use std::sync::Arc;
 use anyhow::Result;
 
 use crate::analysis::{analyze_bandwidth, analyze_resources, Dfg};
-use crate::des::{simulate, DesConfig, WorkloadScenario};
+use crate::des::{simulate, simulate_arena, DesConfig, EngineArena, WorkloadScenario};
 use crate::ir::{parse_module, print_module, Module};
 use crate::lower::build_architecture;
 use crate::platform::PlatformSpec;
@@ -345,6 +345,21 @@ pub fn evaluate_candidate(
     strategy: String,
     pipeline: String,
 ) -> DseCandidate {
+    evaluate_candidate_arena(m, plat, objective, strategy, pipeline, &mut EngineArena::new())
+}
+
+/// [`evaluate_candidate`] against a caller-owned DES arena, so a sweep's
+/// thousands of simulations reuse one warm allocation set
+/// ([`ObjectiveEvaluator`](crate::search::ObjectiveEvaluator) pools them).
+/// Bit-identical to the fresh-arena path.
+pub fn evaluate_candidate_arena(
+    m: &Module,
+    plat: &PlatformSpec,
+    objective: &DseObjective,
+    strategy: String,
+    pipeline: String,
+    arena: &mut EngineArena,
+) -> DseCandidate {
     let (makespan, gbs, eff, util, fits, cus) = evaluate(m, plat);
     let mut cand = DseCandidate {
         strategy,
@@ -366,7 +381,8 @@ pub fn evaluate_candidate(
     };
     let mut cfg = config.clone();
     cfg.utilization = util;
-    let sim = build_architecture(m, plat).and_then(|arch| simulate(&arch, scenario, &cfg));
+    let sim =
+        build_architecture(m, plat).and_then(|arch| simulate_arena(&arch, scenario, &cfg, arena));
     match sim {
         Ok(rep) => {
             cand.des_makespan_s = Some(rep.makespan_s);

@@ -23,10 +23,11 @@
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
+use crate::des::EngineArena;
 use crate::ir::{module_fingerprint, Module};
 use crate::passes::dse::{
-    candidate_cache_key, evaluate_candidate, run_iterative, CandidateCache, CandidateOutcome,
-    DseCandidate, DseObjective,
+    candidate_cache_key, evaluate_candidate, evaluate_candidate_arena, run_iterative,
+    CandidateCache, CandidateOutcome, DseCandidate, DseObjective,
 };
 use crate::passes::manager::{parse_pipeline, PassContext};
 use crate::platform::PlatformSpec;
@@ -66,6 +67,12 @@ pub struct ObjectiveEvaluator<'a> {
     plat_fp: Option<String>,
     obj_desc: String,
     full_evals: AtomicUsize,
+    /// Warm-start pool of DES engine arenas: each evaluation checks one
+    /// out, simulates against it, and returns it, so a sweep's thousands
+    /// of candidate runs reuse at most `threads` allocation sets instead
+    /// of growing a fresh calendar/queue/histogram set per point. Reports
+    /// are bit-identical either way ([`EngineArena`]).
+    arenas: Mutex<Vec<EngineArena>>,
 }
 
 impl<'a> ObjectiveEvaluator<'a> {
@@ -91,22 +98,39 @@ impl<'a> ObjectiveEvaluator<'a> {
             plat_fp,
             obj_desc,
             full_evals: AtomicUsize::new(0),
+            arenas: Mutex::new(Vec::new()),
         }
     }
 
-    /// Evaluate one point from scratch under `objective`.
+    /// Evaluate one point from scratch under `objective`, simulating
+    /// against a pooled engine arena (checked out for the duration of the
+    /// call; the pool lock is never held across the evaluation itself).
     fn eval_point(&self, point: &CandidatePoint, objective: &DseObjective) -> CandidateOutcome {
+        let mut arena =
+            self.arenas.lock().unwrap().pop().unwrap_or_else(EngineArena::new);
+        let outcome = self.eval_point_in(point, objective, &mut arena);
+        self.arenas.lock().unwrap().push(arena);
+        outcome
+    }
+
+    fn eval_point_in(
+        &self,
+        point: &CandidatePoint,
+        objective: &DseObjective,
+        arena: &mut EngineArena,
+    ) -> CandidateOutcome {
         if let Some(rounds) = parse_iterative_tag(&point.pipeline) {
             // the Fig 3 iterative loop competes as its own candidate; the
             // round bound travels in the tag (and thus the cache key)
             return match run_iterative(self.input, self.plat, rounds) {
                 Ok((m, applied)) => {
-                    let cand = evaluate_candidate(
+                    let cand = evaluate_candidate_arena(
                         &m,
                         self.plat,
                         objective,
                         "iterative".to_string(),
                         applied.join("; "),
+                        arena,
                     );
                     CandidateOutcome::Evaluated { cand, module: m }
                 }
@@ -121,12 +145,13 @@ impl<'a> ObjectiveEvaluator<'a> {
         if pm.run(&mut m, &ctx).is_err() {
             return CandidateOutcome::Infeasible; // verifier rejected
         }
-        let cand = evaluate_candidate(
+        let cand = evaluate_candidate_arena(
             &m,
             self.plat,
             objective,
             point.label.clone(),
             point.pipeline.clone(),
+            arena,
         );
         CandidateOutcome::Evaluated { cand, module: m }
     }

@@ -32,10 +32,12 @@
 //! journal), and a coordinator routes each key to the worker owning its
 //! consistent-hash shard ([`crate::service::remote`]).
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::VecDeque;
 use std::fmt;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
+
+use fxhash::FxHashMap;
 
 use crate::util::ContentHash;
 
@@ -72,12 +74,14 @@ enum Slot<V> {
 }
 
 struct Inner<V> {
-    map: HashMap<ContentHash, Slot<V>>,
+    /// Keyed by already-uniform content hashes, so the keyless [`fxhash`]
+    /// hasher is safe and keeps the per-candidate probe cheap.
+    map: FxHashMap<ContentHash, Slot<V>>,
     /// Access log: `(key, seq)` per touch; a record is current only while
     /// `last_used[key] == seq`. Oldest-first pops find the LRU entry.
     order: VecDeque<(ContentHash, u64)>,
     /// Latest access sequence per Ready key.
-    last_used: HashMap<ContentHash, u64>,
+    last_used: FxHashMap<ContentHash, u64>,
     /// Monotonic access counter.
     counter: u64,
     /// Number of Ready entries (InFlight markers excluded).
@@ -132,9 +136,9 @@ impl<V: Clone> EvalCache<V> {
     pub fn with_capacity(capacity: usize) -> Self {
         EvalCache {
             inner: Mutex::new(Inner {
-                map: HashMap::new(),
+                map: FxHashMap::default(),
                 order: VecDeque::new(),
-                last_used: HashMap::new(),
+                last_used: FxHashMap::default(),
                 counter: 0,
                 ready: 0,
             }),

@@ -4,6 +4,7 @@ use std::collections::{HashMap, VecDeque};
 use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
+use fxhash::FxHashMap;
 
 use crate::analysis::ResourceReport;
 use crate::lower::{Architecture, CuInst, Endpoint, MoverDir};
@@ -31,7 +32,10 @@ pub struct Simulator<'a> {
 }
 
 /// Per-CU staged output when lanes share one FIFO (merged on drain).
-type LaneStage = HashMap<(usize, usize), Vec<f32>>; // (fifo idx, lane) -> data
+/// Keyed by internal indices, hashed with the keyless [`fxhash`] hasher:
+/// the firing loop probes these maps per chunk, and nothing iterates them
+/// without sorting first.
+type LaneStage = FxHashMap<(usize, usize), Vec<f32>>; // (fifo idx, lane) -> data
 
 impl<'a> Simulator<'a> {
     pub fn new(arch: &'a Architecture, registry: &'a KernelRegistry) -> Self {
@@ -85,7 +89,7 @@ impl<'a> Simulator<'a> {
         // ---- functional: read movers fill on-chip endpoints -------------
         let mut fifos: Vec<VecDeque<f32>> = vec![VecDeque::new(); a.fifos.len()];
         let mut plms: Vec<Vec<f32>> = vec![Vec::new(); a.plms.len()];
-        let mut pc_beats: HashMap<u32, (u64, u64)> = HashMap::new(); // id -> (beats, useful bits)
+        let mut pc_beats: FxHashMap<u32, (u64, u64)> = FxHashMap::default(); // id -> (beats, useful bits)
 
         for mv in &a.movers {
             if mv.dir != MoverDir::Read {
@@ -125,11 +129,11 @@ impl<'a> Simulator<'a> {
         }
 
         // ---- functional: fire CUs to quiescence --------------------------
-        let mut lane_stage: LaneStage = HashMap::new();
+        let mut lane_stage: LaneStage = LaneStage::default();
         let mut cu_elems: Vec<u64> = vec![0; a.cus.len()];
         let mut cu_firings: Vec<u64> = vec![0; a.cus.len()];
         // lane CUs pre-slice their shared input FIFOs once
-        let mut lane_inputs: HashMap<(usize, usize), VecDeque<f32>> = HashMap::new();
+        let mut lane_inputs: FxHashMap<(usize, usize), VecDeque<f32>> = FxHashMap::default();
         for (ci, cu) in a.cus.iter().enumerate() {
             if cu.lanes > 1 {
                 for ep in &cu.inputs {
@@ -247,7 +251,9 @@ impl<'a> Simulator<'a> {
 
         // merge lane output stages into their FIFOs (element i%L from lane i)
         {
-            let mut by_fifo: HashMap<usize, Vec<(usize, Vec<f32>)>> = HashMap::new();
+            // grouping only — each fifo's lanes are sorted below, and
+            // distinct fifos' outputs are independent, so map order is moot
+            let mut by_fifo: FxHashMap<usize, Vec<(usize, Vec<f32>)>> = FxHashMap::default();
             for ((fi, lane), data) in lane_stage.drain() {
                 by_fifo.entry(fi).or_default().push((lane, data));
             }
@@ -358,7 +364,7 @@ impl<'a> Simulator<'a> {
         &self,
         mv: &crate::lower::MoverInst,
         buffers: &HashMap<String, Vec<f32>>,
-        pc_beats: &mut HashMap<u32, (u64, u64)>,
+        pc_beats: &mut FxHashMap<u32, (u64, u64)>,
     ) {
         let spec = &self.arch.platform.pcs[mv.pc_id as usize];
         let beats_per_word = (mv.layout.word_bits as u64).div_ceil(spec.width_bits as u64);
@@ -382,7 +388,7 @@ impl<'a> Simulator<'a> {
         &self,
         mv: &crate::lower::MoverInst,
         outputs: &HashMap<String, Vec<f32>>,
-        pc_beats: &mut HashMap<u32, (u64, u64)>,
+        pc_beats: &mut FxHashMap<u32, (u64, u64)>,
     ) {
         let spec = &self.arch.platform.pcs[mv.pc_id as usize];
         let beats_per_word = (mv.layout.word_bits as u64).div_ceil(spec.width_bits as u64);
@@ -409,7 +415,7 @@ impl<'a> Simulator<'a> {
         fifos: &[VecDeque<f32>],
         plms: &[Vec<f32>],
         axi: &[Vec<f32>],
-        lane_inputs: &HashMap<(usize, usize), VecDeque<f32>>,
+        lane_inputs: &FxHashMap<(usize, usize), VecDeque<f32>>,
         firings: u64,
     ) -> Result<bool> {
         let e = self.registry.entry(&cu.callee).context("validated")?;
@@ -446,7 +452,7 @@ impl<'a> Simulator<'a> {
         fifos: &mut [VecDeque<f32>],
         plms: &mut [Vec<f32>],
         axi: &[Vec<f32>],
-        lane_inputs: &mut HashMap<(usize, usize), VecDeque<f32>>,
+        lane_inputs: &mut FxHashMap<(usize, usize), VecDeque<f32>>,
         lane_stage: &mut LaneStage,
         cu_elems: &mut [u64],
         cu_firings: &mut [u64],

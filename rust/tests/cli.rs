@@ -552,6 +552,76 @@ fn des_trace_exports_valid_chrome_trace() {
     assert!(events.iter().any(|e| e.get("ph").as_str() == Some("C")), "no counters");
 }
 
+/// Golden: the timing-wheel calendar is an engine swap, not a semantics
+/// change. Replaying the checked-in production trace under `--calendar
+/// wheel` and `--calendar heap` must print byte-identical des reports.
+#[test]
+fn calendar_wheel_and_heap_reports_are_bit_identical() {
+    let dir = tmpdir("calendar_golden");
+    let design = write_design(&dir);
+    let trace = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/data/sample.trace");
+    let scenario = format!("trace:{}", trace.to_str().unwrap());
+    let run = |calendar: &str| {
+        let out = olympus()
+            .args([
+                "des",
+                design.to_str().unwrap(),
+                "--pipeline",
+                "sanitize, iris, channel-reassign",
+                "--scenario",
+                scenario.as_str(),
+                "--calendar",
+                calendar,
+            ])
+            .output()
+            .unwrap();
+        assert!(out.status.success(), "{calendar}: {}", String::from_utf8_lossy(&out.stderr));
+        String::from_utf8_lossy(&out.stdout).to_string()
+    };
+    let wheel = run("wheel");
+    let heap = run("heap");
+    assert!(wheel.contains("des report"), "{wheel}");
+    assert_eq!(wheel, heap, "calendar choice must not move a byte of the report");
+    // the default IS the wheel: no flag and --calendar wheel agree
+    let out = olympus()
+        .args([
+            "des",
+            design.to_str().unwrap(),
+            "--pipeline",
+            "sanitize, iris, channel-reassign",
+            "--scenario",
+            scenario.as_str(),
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    assert_eq!(String::from_utf8_lossy(&out.stdout), wheel, "wheel is the default");
+}
+
+/// A bad `--calendar` is a targeted flag error naming the valid engines,
+/// never a silent fallback; and the analytic DSE objective rejects the
+/// flag outright (it replays nothing, so the flag would be dead).
+#[test]
+fn bad_calendar_is_rejected_with_candidates() {
+    let dir = tmpdir("badcal");
+    let design = write_design(&dir);
+    let d = design.to_str().unwrap();
+    let out = olympus()
+        .args(["des", d, "--pipeline", "sanitize", "--calendar", "bogus"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let s = String::from_utf8_lossy(&out.stderr);
+    assert!(s.contains("wheel | heap"), "error lists the engines: {s}");
+    let out = olympus().args(["dse", d, "--calendar", "wheel"]).output().unwrap();
+    assert!(!out.status.success());
+    assert!(
+        String::from_utf8_lossy(&out.stderr).contains("--calendar"),
+        "{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+}
+
 /// Zero-perturbation acceptance: observability must not move a byte of any
 /// result. `--log-level off` vs `debug` and `--trace` on vs off produce
 /// identical stdout for both `dse` and `des`.
