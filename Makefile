@@ -19,7 +19,9 @@ bench:
 
 # Refresh the checked-in perf trajectory (BENCH_DES.json): DES events/sec,
 # cold/warm DSE wall, and 0-vs-2-worker serve latency. Commit the updated
-# snapshot alongside perf-relevant changes.
+# snapshot alongside perf-relevant changes. Only commit numbers produced by
+# this target (or the CI `bench-snapshot` artifact, measured on a real
+# runner) — never hand-edit the figures.
 bench-snapshot:
 	BENCH_SNAPSHOT_OUT=$(CURDIR)/BENCH_DES.json cargo bench --bench bench_snapshot
 

@@ -13,7 +13,9 @@ use crate::lower::{
 };
 use crate::obs::TraceSink;
 use crate::passes::manager::{parse_pipeline, PassContext, PassRecord};
-use crate::passes::{run_dse_with, CandidateCache, DseObjective, DseOptions, DseReport as DseTable};
+use crate::passes::{
+    run_dse_multi, run_dse_with, CandidateCache, DseObjective, DseOptions, DseReport as DseTable,
+};
 use crate::platform::PlatformSpec;
 use crate::search::DriverKind;
 use crate::service::remote::WorkerPool;
@@ -22,6 +24,14 @@ use crate::util::ContentHash;
 /// Flow configuration.
 pub struct Flow {
     pub platform: PlatformSpec,
+    /// The platform *axis* for DSE mode (`olympus dse --platforms a,b,..`):
+    /// with two or more specs the platform itself becomes a search
+    /// dimension — the strategy grid is crossed with this list, every
+    /// candidate is scored on its own platform, and the rest of the flow
+    /// (analyses, lowering, emission, DES replay) runs on the platform
+    /// that won. Empty or a single entry keeps the classic
+    /// single-platform flow on [`Flow::platform`] bit-identically.
+    pub platforms: Vec<PlatformSpec>,
     /// Explicit pass pipeline; `None` runs the DSE loop instead.
     pub pipeline: Option<String>,
     /// Replication factors swept by the DSE (empty = defaults).
@@ -87,6 +97,7 @@ impl Flow {
     pub fn new(platform: PlatformSpec) -> Self {
         Flow {
             platform,
+            platforms: Vec::new(),
             pipeline: None,
             dse_factors: Vec::new(),
             driver: DriverKind::Exhaustive,
@@ -102,6 +113,17 @@ impl Flow {
 
     pub fn with_pipeline(mut self, pipeline: &str) -> Self {
         self.pipeline = Some(pipeline.to_string());
+        self
+    }
+
+    /// Make the platform a search axis (see [`Flow::platforms`]). The first
+    /// spec also becomes the primary [`Flow::platform`], so a one-entry
+    /// list is exactly `Flow::new(spec)`.
+    pub fn with_platforms(mut self, platforms: Vec<PlatformSpec>) -> Self {
+        if let Some(first) = platforms.first() {
+            self.platform = first.clone();
+        }
+        self.platforms = platforms;
         self
     }
 
@@ -176,10 +198,21 @@ impl Flow {
             None => {
                 let factors = crate::search::normalize_factors(&self.dse_factors)
                     .unwrap_or_else(|_| self.dse_factors.clone());
-                format!(
+                let mut route = format!(
                     "dse:{:?}:factors={:?}:driver={:?}",
                     self.objective, factors, self.driver
-                )
+                );
+                if self.platforms.len() >= 2 {
+                    // a multi-platform search answers a different question,
+                    // so the whole ordered axis joins the address. Folding
+                    // the extra fingerprints into the route (rather than a
+                    // new key part) keeps single-platform keys — and every
+                    // journal written before this axis existed — untouched.
+                    let fps: Vec<String> =
+                        self.platforms.iter().map(|p| p.fingerprint()).collect();
+                    route.push_str(&format!(":platforms={fps:?}"));
+                }
+                route
             }
         };
         let replay = match &self.scenario {
@@ -215,15 +248,34 @@ impl Flow {
                     driver: self.driver.clone(),
                     remote: self.remote.clone(),
                 };
-                let rep = run_dse_with(&module, &self.platform, &opts)?;
+                let rep = if self.platforms.len() >= 2 {
+                    run_dse_multi(&module, &self.platforms, &opts)?
+                } else {
+                    run_dse_with(&module, &self.platform, &opts)?
+                };
                 module = rep.best.clone();
                 dse = Some(rep);
             }
         }
+        // in a cross-platform search the winning candidate carries its
+        // platform stamp; everything downstream of the search lowers onto
+        // that platform. Single-platform runs (stamp absent) fall back to
+        // the primary spec, bit-identically with the pre-axis flow.
+        let plat = dse
+            .as_ref()
+            .and_then(|rep| {
+                let win = rep
+                    .candidates
+                    .iter()
+                    .find(|c| c.strategy == rep.best_strategy)?;
+                let name = win.platform.as_deref()?;
+                self.platforms.iter().find(|p| p.name == name)
+            })
+            .unwrap_or(&self.platform);
         let dfg = Dfg::build(&module);
-        let bandwidth = analyze_bandwidth(&module, &self.platform, &dfg);
-        let resources = analyze_resources(&module, &self.platform, &dfg);
-        let arch = build_architecture(&module, &self.platform)?;
+        let bandwidth = analyze_bandwidth(&module, plat, &dfg);
+        let resources = analyze_resources(&module, plat, &dfg);
+        let arch = build_architecture(&module, plat)?;
         let cfg = emit_vitis_cfg(&arch);
         let verilog = emit_verilog(&arch);
         let driver = emit_host_driver(&arch, app_name);
@@ -348,6 +400,56 @@ mod tests {
         let p2 = Flow::new(builtin("u280").unwrap())
             .with_pipeline("sanitize, iris, channel-reassign")
             .with_driver(DriverKind::SuccessiveHalving { budget: 3 })
+            .cache_key(&m);
+        assert_eq!(p1, p2);
+    }
+
+    #[test]
+    fn multi_platform_flow_lowers_on_the_winning_platform() {
+        // primary (first-listed) platform is generic-ddr, but the fig4a
+        // workload streams three channels — u280's HBM spread wins the
+        // search, and the whole back half of the flow must follow it
+        let r = Flow::new(builtin("generic-ddr").unwrap())
+            .with_platforms(vec![builtin("generic-ddr").unwrap(), builtin("u280").unwrap()])
+            .run(fig4a_module(), "app")
+            .unwrap();
+        let dse = r.dse.expect("dse table");
+        assert_eq!(dse.platforms, ["generic-ddr", "u280"]);
+        assert!(
+            dse.best_strategy.starts_with("u280/"),
+            "expected a u280 winner, got {}",
+            dse.best_strategy
+        );
+        assert_eq!(r.arch.platform.name, "u280", "lowering follows the winner");
+        assert!(!r.arch.cus.is_empty());
+        assert!(!r.cfg.is_empty());
+    }
+
+    #[test]
+    fn cache_key_covers_the_platform_axis() {
+        let m = fig4a_module();
+        let single = Flow::new(builtin("u280").unwrap()).cache_key(&m);
+        // a one-entry axis IS the classic single-platform flow: same key,
+        // so journals written before the axis existed stay warm
+        let one = Flow::new(builtin("u280").unwrap())
+            .with_platforms(vec![builtin("u280").unwrap()])
+            .cache_key(&m);
+        assert_eq!(single, one);
+        let two = Flow::new(builtin("u280").unwrap())
+            .with_platforms(vec![builtin("u280").unwrap(), builtin("generic-ddr").unwrap()])
+            .cache_key(&m);
+        assert_ne!(single, two, "the axis changes what a response means");
+        let reordered = Flow::new(builtin("u280").unwrap())
+            .with_platforms(vec![builtin("generic-ddr").unwrap(), builtin("u280").unwrap()])
+            .cache_key(&m);
+        assert_ne!(two, reordered, "axis order breaks ties, so it is addressed");
+        // explicit pipelines never search, so the axis is ignored there
+        let p1 = Flow::new(builtin("u280").unwrap())
+            .with_pipeline("sanitize")
+            .cache_key(&m);
+        let p2 = Flow::new(builtin("u280").unwrap())
+            .with_platforms(vec![builtin("u280").unwrap(), builtin("generic-ddr").unwrap()])
+            .with_pipeline("sanitize")
             .cache_key(&m);
         assert_eq!(p1, p2);
     }

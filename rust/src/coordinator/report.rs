@@ -2,7 +2,7 @@
 
 use crate::util::Json;
 
-use crate::passes::DseReport;
+use crate::passes::{DseCandidate, DseReport};
 
 /// Machine-readable flow report (`report.json` emitted by `olympus lower`):
 /// the design summary a downstream CI would diff against.
@@ -104,12 +104,15 @@ pub fn flow_report_json(r: &super::flow::FlowResult) -> Json {
 
 /// Render the DSE decision table (strategy × metrics). When the des-score
 /// objective ran, two extra columns show the simulated scenario makespan
-/// and p99 job latency.
+/// and p99 job latency. Cross-platform searches get a wider strategy
+/// column (labels are `platform/strategy`) and one `best[platform]` row
+/// per searched platform above the overall winner.
 pub fn render_dse_table(rep: &DseReport) -> String {
     let has_des = rep.candidates.iter().any(|c| c.des_makespan_s.is_some());
+    let w = if rep.platforms.is_empty() { 16 } else { 28 };
     let mut out = String::new();
     out.push_str(&format!(
-        "{:<16} {:>12} {:>12} {:>8} {:>8} {:>6} {:>5}",
+        "{:<w$} {:>12} {:>12} {:>8} {:>8} {:>6} {:>5}",
         "strategy", "makespan", "GB/s", "bw-eff", "util", "CUs", "fits"
     ));
     if has_des {
@@ -118,7 +121,7 @@ pub fn render_dse_table(rep: &DseReport) -> String {
     out.push('\n');
     for c in &rep.candidates {
         out.push_str(&format!(
-            "{:<16} {:>10.3}us {:>12.2} {:>7.1}% {:>7.1}% {:>6} {:>5}",
+            "{:<w$} {:>10.3}us {:>12.2} {:>7.1}% {:>7.1}% {:>6} {:>5}",
             c.strategy,
             c.makespan_s * 1e6,
             c.achieved_gbs,
@@ -136,6 +139,21 @@ pub fn render_dse_table(rep: &DseReport) -> String {
             }
         }
         out.push('\n');
+    }
+    for name in &rep.platforms {
+        // same rule the search uses: first strict minimum over finite scores
+        let best = rep
+            .candidates
+            .iter()
+            .filter(|c| c.platform.as_deref() == Some(name.as_str()) && c.score.is_finite())
+            .fold(None::<&DseCandidate>, |acc, c| match acc {
+                Some(b) if b.score <= c.score => Some(b),
+                _ => Some(c),
+            });
+        match best {
+            Some(b) => out.push_str(&format!("best[{name}]: {}\n", b.strategy)),
+            None => out.push_str(&format!("best[{name}]: (no feasible candidate)\n")),
+        }
     }
     out.push_str(&format!("best: {}\n", rep.best_strategy));
     out
@@ -157,6 +175,21 @@ mod tests {
         assert!(t.lines().count() >= rep.candidates.len() + 2);
         // analytic mode: no DES columns
         assert!(!t.contains("des-makespan"));
+    }
+
+    #[test]
+    fn table_shows_per_platform_winner_rows_for_cross_platform_runs() {
+        use crate::passes::{run_dse_multi, DseOptions};
+        let plats = [builtin("u280").unwrap(), builtin("generic-ddr").unwrap()];
+        let opts = DseOptions {
+            factors: vec![2],
+            ..DseOptions::default()
+        };
+        let rep = run_dse_multi(&fig4a_module(), &plats, &opts).unwrap();
+        let t = render_dse_table(&rep);
+        assert!(t.contains("best[u280]: u280/"), "{t}");
+        assert!(t.contains("best[generic-ddr]: generic-ddr/"), "{t}");
+        assert!(t.contains(&format!("best: {}\n", rep.best_strategy)));
     }
 
     #[test]

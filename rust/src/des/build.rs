@@ -211,16 +211,28 @@ pub fn build_network(arch: &Architecture) -> Result<DesNet> {
         });
     }
 
+    // Port sharing (the mapping phase's budget decisions): k endpoints
+    // time-multiplexing one physical AXI port each see the channel through
+    // a 1/k duty window — modelled as a k× beat inflation on every flow of
+    // a shared endpoint. Conservative and static; k = 1 (a dedicated port,
+    // the common case) leaves the flow bit-identical to the unmapped model.
     let mut movers = Vec::new();
     for mv in &arch.movers {
         if mv.pc_id as usize >= arch.platform.pcs.len() {
             bail!("mover '{}': pc {} out of range", mv.name, mv.pc_id);
         }
+        let mut flows = mover_flows(arch, mv);
+        let sharers = arch.mapping.sharers_of(&mv.name);
+        if sharers > 1 {
+            for fl in flows.iter_mut() {
+                fl.beats_per_elem *= sharers as f64;
+            }
+        }
         movers.push(MoverSpec {
             name: mv.name.clone(),
             pc: mv.pc_id as usize,
             read: mv.dir == MoverDir::Read,
-            flows: mover_flows(arch, mv),
+            flows,
         });
     }
     // complex channels: AXI masters contend for the channel like movers do
@@ -230,6 +242,7 @@ pub fn build_network(arch: &Architecture) -> Result<DesNet> {
             bail!("axi port '{}': pc {} out of range", ax.name, ax.pc_id);
         }
         let width = arch.platform.pcs[pc].width_bits;
+        let sharers = arch.mapping.sharers_of(&format!("axi:{}", ax.name));
         movers.push(MoverSpec {
             name: format!("axi_{}", ax.name),
             pc,
@@ -238,7 +251,7 @@ pub fn build_network(arch: &Architecture) -> Result<DesNet> {
                 base: ax.name.clone(),
                 fifo: None,
                 elems_per_job: (ax.bytes / 4).max(1),
-                beats_per_elem: 32.0 / width as f64,
+                beats_per_elem: 32.0 / width as f64 * sharers as f64,
             }],
         });
     }
@@ -296,8 +309,24 @@ pub fn build_network(arch: &Architecture) -> Result<DesNet> {
         });
     }
 
+    // Bank conflicts: once more movers sit on one channel than it has
+    // banks, not every stream can hide its row activates behind bank
+    // interleaving — fold the platform's conflict derate into the
+    // channel's sustained fraction. DES-only, like `sustained_frac`
+    // itself; HBM builtins carry derate 1.0 so this is a DDR effect.
+    let mut platform = arch.platform.clone();
+    let mut movers_on_pc = vec![0usize; platform.pcs.len()];
+    for mv in &movers {
+        movers_on_pc[mv.pc] += 1;
+    }
+    for (pc, spec) in platform.pcs.iter_mut().enumerate() {
+        if movers_on_pc[pc] > spec.banks as usize && spec.bank_conflict_derate < 1.0 {
+            spec.sustained_frac *= spec.bank_conflict_derate;
+        }
+    }
+
     Ok(DesNet {
-        platform: arch.platform.clone(),
+        platform,
         fifos,
         movers,
         cus,
@@ -430,5 +459,86 @@ mod tests {
         assert_eq!(replica_index("ch0#r1"), 1);
         assert_eq!(replica_index("ch0#r12"), 12);
         assert_eq!(replica_index("bus#r3"), 3);
+    }
+
+    fn tiny_plat(axi_ports: usize, banks: u32) -> PlatformSpec {
+        use crate::platform::{MemKind, PcSpec};
+        PlatformSpec {
+            name: "tiny".into(),
+            pcs: vec![PcSpec {
+                kind: MemKind::Ddr,
+                width_bits: 32,
+                freq_mhz: 1000.0,
+                capacity_bytes: 1 << 30,
+                sustained_frac: 0.9,
+                banks,
+                bank_conflict_derate: 0.5,
+            }],
+            resources: crate::dialect::ResourceVec::new(2_000_000, 1_000_000, 2_000, 100, 4_000),
+            util_limit: 0.8,
+            kernel_mhz: 300.0,
+            axi_ports,
+        }
+    }
+
+    fn net_on(plat: &PlatformSpec, pipeline: &str) -> DesNet {
+        let mut m = fig4a_module();
+        let mut ctx = PassContext::new(plat.clone());
+        parse_pipeline(pipeline, &mut ctx).unwrap().run(&mut m, &ctx).unwrap();
+        let arch = build_architecture(&m, plat).unwrap();
+        build_network(&arch).unwrap()
+    }
+
+    #[test]
+    fn shared_ports_inflate_beats() {
+        // 3 movers on one channel through 2 ports: the two endpoints on
+        // the shared port pay 2x beats, the dedicated one stays at 1x
+        let net = net_on(&tiny_plat(2, 16), "sanitize");
+        let mut factors: Vec<f64> =
+            net.movers.iter().map(|m| m.flows[0].beats_per_elem).collect();
+        factors.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(factors, vec![1.0, 2.0, 2.0]);
+        // with a port per endpoint the inflation disappears
+        let free = net_on(&tiny_plat(3, 16), "sanitize");
+        assert!(free.movers.iter().all(|m| m.flows[0].beats_per_elem == 1.0));
+    }
+
+    #[test]
+    fn bank_conflicts_derate_sustained_frac() {
+        // 3 movers on a single-bank channel: sustained 0.9 x 0.5 = 0.45
+        let net = net_on(&tiny_plat(3, 1), "sanitize");
+        assert!((net.platform.pcs[0].sustained_frac - 0.45).abs() < 1e-12);
+        // enough banks: no derate
+        let free = net_on(&tiny_plat(3, 16), "sanitize");
+        assert!((free.platform.pcs[0].sustained_frac - 0.9).abs() < 1e-12);
+        // the architecture's own platform is never mutated
+        let mut m = fig4a_module();
+        let plat = tiny_plat(3, 1);
+        let mut ctx = PassContext::new(plat.clone());
+        parse_pipeline("sanitize", &mut ctx).unwrap().run(&mut m, &ctx).unwrap();
+        let arch = build_architecture(&m, &plat).unwrap();
+        let _ = build_network(&arch).unwrap();
+        assert!((arch.platform.pcs[0].sustained_frac - 0.9).abs() < 1e-12);
+    }
+
+    #[test]
+    fn port_sharing_slows_the_des_makespan() {
+        use crate::des::{simulate, DesConfig, WorkloadScenario};
+        let sc = WorkloadScenario::closed_loop(2);
+        let cfg = DesConfig::default();
+        let run = |ports: usize| {
+            let plat = tiny_plat(ports, 16);
+            let mut m = fig4a_module();
+            let mut ctx = PassContext::new(plat.clone());
+            parse_pipeline("sanitize", &mut ctx).unwrap().run(&mut m, &ctx).unwrap();
+            let arch = build_architecture(&m, &plat).unwrap();
+            simulate(&arch, &sc, &cfg).unwrap().makespan_s
+        };
+        let dedicated = run(3);
+        let shared = run(2);
+        assert!(
+            shared > dedicated,
+            "sharing ports must cost wall time: shared {shared} vs dedicated {dedicated}"
+        );
     }
 }

@@ -3,7 +3,8 @@
 //! ```text
 //! olympus platforms
 //! olympus opt   <file.mlir> [--platform u280] [--pipeline "sanitize,iris"]
-//! olympus dse   <file.mlir> [--platform u280] [--objective analytic|des-score|slo-score]
+//! olympus dse   <file.mlir> [--platform u280 | --platforms u280,generic-ddr,...]
+//!               [--objective analytic|des-score|slo-score]
 //!               [--slo "CLASS=p99<MS,..."] [--jobs N]
 //!               [--driver exhaustive|random|successive-halving|iterative]
 //!               [--budget N] [--search-seed N] [--cache-dir DIR]
@@ -37,6 +38,12 @@
 //! the simulation; `--slo` scores design-space candidates by SLO
 //! violations (p99 targets + deadline misses) instead of raw makespan —
 //! see README "Production traffic & SLOs".
+//!
+//! `dse --platforms` (also accepted by searching `des` runs and `submit`)
+//! makes the platform itself a search axis: every strategy is scored on
+//! every listed platform, the table shows `platform/strategy` rows plus
+//! one `best[platform]` line per platform, and the flow lowers onto the
+//! overall winner — see README "Platforms & back-ends".
 //!
 //! `run` executes the lowered design on the platform simulator with seeded
 //! random host buffers and prints the simulation report.
@@ -103,6 +110,45 @@ fn parse_args(argv: &[String]) -> Args {
     Args { positional, flags }
 }
 
+/// Parse + validate `--platforms` (the cross-platform search axis): a
+/// comma-separated list of builtin names or JSON platform files. Two or
+/// more entries make the platform itself a search dimension — the DSE
+/// scores every strategy on every listed platform and the flow lowers
+/// onto the winner. Mutually exclusive with `--platform`; duplicates are
+/// rejected (they would only pad the table with identical rows). `None`
+/// when the flag is absent.
+fn load_platforms(args: &Args) -> Result<Option<Vec<PlatformSpec>>> {
+    let Some(list) = args.flags.get("platforms") else { return Ok(None) };
+    if args.flags.contains_key("platform") {
+        bail!(
+            "--platform and --platforms are mutually exclusive; --platforms searches the \
+             listed platforms and lowers onto the winner"
+        );
+    }
+    let mut specs: Vec<PlatformSpec> = Vec::new();
+    let mut seen = std::collections::BTreeSet::new();
+    for name in list.split(',').map(|s| s.trim()).filter(|s| !s.is_empty()) {
+        let spec = match builtin(name) {
+            Some(p) => p,
+            None => PlatformSpec::load(Path::new(name)).with_context(|| {
+                format!(
+                    "--platforms entry '{name}' is neither a builtin ({:?}) nor a readable \
+                     platform file",
+                    builtin_names()
+                )
+            })?,
+        };
+        if !seen.insert(spec.name.clone()) {
+            bail!("--platforms lists platform '{}' more than once", spec.name);
+        }
+        specs.push(spec);
+    }
+    if specs.is_empty() {
+        bail!("--platforms names no platforms (e.g. --platforms u280,generic-ddr)");
+    }
+    Ok(Some(specs))
+}
+
 fn load_platform(args: &Args) -> Result<PlatformSpec> {
     let name = args.flags.get("platform").map(|s| s.as_str()).unwrap_or("u280");
     if let Some(p) = builtin(name) {
@@ -135,7 +181,7 @@ fn load_module(path: &str) -> Result<Module> {
 fn usage() -> ! {
     eprintln!(
         "usage: olympus <platforms|opt|dse|des|lower|run|serve|worker|submit|cache-stats|stats> \
-         [input.mlir] [--platform NAME|file.json] [--pipeline P] \
+         [input.mlir] [--platform NAME|file.json] [--platforms NAME,NAME,...] [--pipeline P] \
          [--objective analytic|des-score|slo-score] [--slo CLASS=p99<MS,...] \
          [--driver exhaustive|random|successive-halving|iterative] [--budget N] \
          [--search-seed N] \
@@ -173,7 +219,7 @@ fn factors_from_args(args: &Args) -> Result<Option<Vec<u64>>> {
 /// to the searching commands (`dse`, and `des` without an explicit
 /// pipeline); anywhere else they would be silently dead, so
 /// [`reject_search_flags`] turns them into loud errors.
-const SEARCH_FLAGS: [&str; 4] = ["driver", "budget", "search-seed", "factors"];
+const SEARCH_FLAGS: [&str; 5] = ["driver", "budget", "search-seed", "factors", "platforms"];
 
 /// Reject any search flag present in `args`; `context` explains why the
 /// flags are dead here (e.g. which command, or "with an explicit
@@ -307,8 +353,12 @@ fn main() -> Result<()> {
         "dse" => {
             let input = args.positional.first().unwrap_or_else(|| usage());
             let m = load_module(input)?;
-            let plat = load_platform(&args)?;
-            let mut flow = olympus::coordinator::Flow::new(plat);
+            let mut flow = match load_platforms(&args)? {
+                Some(specs) => {
+                    olympus::coordinator::Flow::new(specs[0].clone()).with_platforms(specs)
+                }
+                None => olympus::coordinator::Flow::new(load_platform(&args)?),
+            };
             if let Some(jobs) = args.flags.get("jobs") {
                 flow = flow.with_jobs(jobs.parse().context("--jobs wants a thread count")?);
             }
@@ -373,12 +423,16 @@ fn main() -> Result<()> {
                 );
             }
             let m = load_module(input)?;
-            let plat = load_platform(&args)?;
             let pipeline = args.flags.get("pipeline").map(|s| s.as_str());
             let (scenario, cfg) = scenario_and_config(&args)?;
             let slo = slo_from_args(&args)?;
-            let mut flow =
-                olympus::coordinator::Flow::new(plat).with_scenario(scenario.clone());
+            let mut flow = match load_platforms(&args)? {
+                Some(specs) => {
+                    olympus::coordinator::Flow::new(specs[0].clone()).with_platforms(specs)
+                }
+                None => olympus::coordinator::Flow::new(load_platform(&args)?),
+            }
+            .with_scenario(scenario.clone());
             flow.des_config = cfg.clone();
             match pipeline {
                 Some(p) => {
@@ -580,6 +634,36 @@ fn main() -> Result<()> {
                     let spec = PlatformSpec::load(Path::new(p))?;
                     fields.push(("platform_json", spec.to_json()));
                 }
+            }
+            if let Some(list) = args.flags.get("platforms") {
+                if args.flags.contains_key("platform") {
+                    bail!(
+                        "--platform and --platforms are mutually exclusive; --platforms \
+                         searches the listed platforms and lowers onto the winner"
+                    );
+                }
+                // the wire carries names, so only builtins can ride the
+                // axis; a custom board ships its one spec via --platform
+                let mut names: Vec<Json> = Vec::new();
+                let mut seen = std::collections::BTreeSet::new();
+                for name in list.split(',').map(|s| s.trim()).filter(|s| !s.is_empty()) {
+                    if builtin(name).is_none() {
+                        bail!(
+                            "--platforms entry '{name}' is not a builtin ({:?}); submitted \
+                             platform axes carry builtin names only — use --platform \
+                             file.json for a single custom board",
+                            builtin_names()
+                        );
+                    }
+                    if !seen.insert(name.to_string()) {
+                        bail!("--platforms lists platform '{name}' more than once");
+                    }
+                    names.push(name.into());
+                }
+                if names.is_empty() {
+                    bail!("--platforms names no platforms (e.g. --platforms u280,generic-ddr)");
+                }
+                fields.push(("platforms", Json::Arr(names)));
             }
             for key in ["pipeline", "objective", "driver", "slo", "autoscale"] {
                 if let Some(v) = args.flags.get(key) {

@@ -49,7 +49,7 @@
 
 use std::sync::Arc;
 
-use anyhow::Result;
+use anyhow::{anyhow, bail, Result};
 
 use crate::analysis::{analyze_bandwidth, analyze_resources, Dfg};
 use crate::des::{simulate, simulate_arena, DesConfig, EngineArena, WorkloadScenario};
@@ -57,7 +57,8 @@ use crate::ir::{parse_module, print_module, Module};
 use crate::lower::build_architecture;
 use crate::platform::PlatformSpec;
 use crate::search::{
-    iterative_moves, normalize_factors, run_driver, DriverKind, ObjectiveEvaluator, StrategyGrid,
+    iterative_moves, normalize_factors, run_driver, DriverKind, Evaluator,
+    MultiPlatformEvaluator, MultiPlatformGrid, ObjectiveEvaluator, StrategyGrid,
 };
 use crate::service::cache::EvalCache;
 use crate::service::remote::{RemoteEvaluator, WorkerPool};
@@ -82,6 +83,12 @@ pub struct DseCandidate {
     /// The value the winner was selected on (lower = better; infinite =
     /// infeasible under the objective).
     pub score: f64,
+    /// Platform that scored this row (multi-platform searches only; `None`
+    /// in classic single-platform reports). Like the row label, it is
+    /// stamped by the evaluator layer after cache retrieval and is *not*
+    /// part of the cached outcome — the platform fingerprint already
+    /// addresses the cache entry.
+    pub platform: Option<String>,
 }
 
 /// DSE outcome: the winning module + the full decision table, plus search
@@ -98,6 +105,11 @@ pub struct DseReport {
     /// Full-fidelity evaluations actually computed (cache hits excluded) —
     /// under `des-score` each one is a discrete-event simulation.
     pub full_evals: usize,
+    /// Platform names searched when the platform itself was a search axis
+    /// ([`run_dse_multi`] with two or more platforms); empty for classic
+    /// single-platform reports. Order matches the requested list; the
+    /// report renderer derives per-platform winner rows from it.
+    pub platforms: Vec<String>,
 }
 
 /// How candidates are scored.
@@ -230,6 +242,8 @@ pub fn outcome_from_json(j: &Json) -> Option<CandidateOutcome> {
         des_makespan_s: opt_f64("des_makespan_s")?,
         des_p99_latency_s: opt_f64("des_p99_latency_s")?,
         score: f64_from_bits_json(j.get("score"))?,
+        // not serialized: the evaluator stamps it after retrieval
+        platform: None,
     };
     Some(CandidateOutcome::Evaluated { cand, module })
 }
@@ -373,6 +387,7 @@ pub fn evaluate_candidate_arena(
         des_makespan_s: None,
         des_p99_latency_s: None,
         score: if fits && makespan > 0.0 { makespan } else { f64::INFINITY },
+        platform: None,
     };
     let (scenario, config, slo) = match objective {
         DseObjective::Analytic => return cand,
@@ -456,6 +471,108 @@ pub fn run_dse(input: &Module, plat: &PlatformSpec, factors: &[u64]) -> Result<D
         plat,
         &DseOptions { factors: factors.to_vec(), ..DseOptions::default() },
     )
+}
+
+/// Run DSE with the *platform itself as a search axis*: the strategy grid
+/// crossed with `platforms` ([`MultiPlatformGrid`]), every (platform,
+/// schedule) pair scored by that platform's own evaluator
+/// ([`MultiPlatformEvaluator`]) and the winner picked across the whole
+/// product space. Candidate rows come back platform-qualified
+/// (`u280/widen`) and platform-stamped; [`DseReport::platforms`] records
+/// the searched list.
+///
+/// A one-platform list delegates to [`run_dse_with`] bit-identically
+/// (`platforms` stays empty), so callers can route every request through
+/// here. Duplicate platform names are rejected — they would evaluate the
+/// same sub-space twice under colliding labels.
+pub fn run_dse_multi(
+    input: &Module,
+    platforms: &[PlatformSpec],
+    opts: &DseOptions,
+) -> Result<DseReport> {
+    let mut seen = std::collections::BTreeSet::new();
+    for p in platforms {
+        if !seen.insert(p.name.as_str()) {
+            bail!("platform '{}' listed more than once in the search axis", p.name);
+        }
+    }
+    match platforms {
+        [] => bail!("cross-platform DSE needs at least one platform"),
+        [only] => return run_dse_with(input, only, opts),
+        _ => {}
+    }
+    let names: Vec<String> = platforms.iter().map(|p| p.name.clone()).collect();
+
+    // The iterative driver grows one schedule move-by-move through
+    // `screen_from`, which carries no platform index to partition on — run
+    // it per platform and merge, keeping the first-minimum winner rule
+    // over the platform-major candidate order.
+    if matches!(opts.driver, DriverKind::Iterative { .. }) {
+        let mut candidates = Vec::new();
+        let mut screened = 0;
+        let mut full_evals = 0;
+        let mut best: Option<(f64, Module, String)> = None;
+        for plat in platforms {
+            let rep = run_dse_with(input, plat, opts)?;
+            screened += rep.screened;
+            full_evals += rep.full_evals;
+            let score = rep
+                .candidates
+                .iter()
+                .find(|c| c.strategy == rep.best_strategy)
+                .map(|c| c.score)
+                .unwrap_or(f64::INFINITY);
+            if score.is_finite()
+                && best.as_ref().map(|(b, _, _)| score < *b).unwrap_or(true)
+            {
+                let label = format!("{}/{}", plat.name, rep.best_strategy);
+                best = Some((score, rep.best.clone(), label));
+            }
+            for mut c in rep.candidates {
+                c.strategy = format!("{}/{}", plat.name, c.strategy);
+                c.platform = Some(plat.name.clone());
+                candidates.push(c);
+            }
+        }
+        let (_, best_m, best_strategy) =
+            best.ok_or_else(|| anyhow!("no feasible DSE candidate on any platform"))?;
+        return Ok(DseReport {
+            best: best_m,
+            best_strategy,
+            candidates,
+            driver: opts.driver.name().to_string(),
+            screened,
+            full_evals,
+            platforms: names,
+        });
+    }
+
+    let factors = normalize_factors(&opts.factors).map_err(|e| anyhow!(e))?;
+    let space = MultiPlatformGrid::new(StrategyGrid::new(&factors), names.clone());
+    let mut inner: Vec<Box<dyn Evaluator + '_>> = Vec::with_capacity(platforms.len());
+    for plat in platforms {
+        match opts.remote.as_ref().filter(|p| !p.is_empty()) {
+            Some(pool) => inner.push(Box::new(RemoteEvaluator::new(
+                pool.clone(),
+                input,
+                plat,
+                &opts.objective,
+                opts.threads,
+                opts.cache.clone(),
+            ))),
+            None => inner.push(Box::new(ObjectiveEvaluator::new(
+                input,
+                plat,
+                &opts.objective,
+                opts.threads,
+                opts.cache.clone(),
+            ))),
+        }
+    }
+    let evaluator = MultiPlatformEvaluator::new(names.clone(), inner);
+    let mut rep = run_driver(&opts.driver, &space, &evaluator)?;
+    rep.platforms = names;
+    Ok(rep)
 }
 
 #[cfg(test)]
@@ -562,6 +679,128 @@ mod tests {
         assert!(!rep.candidates.is_empty());
         // a feasible best exists even without HBM
         assert!(rep.candidates.iter().any(|c| c.fits));
+    }
+
+    /// Two 64-bit streams through one kernel: each channel alone saturates
+    /// a single PC, so the platform with the fastest *single* memory
+    /// channel wins — generic-ddr's 19.2 GB/s DDR4-2400 beats one
+    /// 14.4 GB/s HBM pseudo-channel, and replication cannot rescue the
+    /// U280 because clones replay the full payload per PC.
+    fn low_parallelism_module() -> crate::ir::Module {
+        let mut b = DfgBuilder::new();
+        let a = b.channel(64, ParamType::Stream, 4096);
+        let o = b.channel(64, ParamType::Stream, 4096);
+        b.kernel(
+            "copy_4096",
+            &[a],
+            &[o],
+            KernelEst { latency: 100, ii: 1, res: ResourceVec::new(4000, 5000, 2, 0, 4) },
+        );
+        b.finish()
+    }
+
+    #[test]
+    fn cross_platform_dse_picks_the_platform_per_workload() {
+        let plats = [builtin("u280").unwrap(), builtin("generic-ddr").unwrap()];
+        let opts = DseOptions { factors: vec![2], ..DseOptions::default() };
+
+        // many parallel streams: u280 spreads them one-per-HBM-PC while
+        // generic-ddr piles them onto its 2 DDR channels
+        let wide = fig4a_module();
+        let rep = run_dse_multi(&wide, &plats, &opts).unwrap();
+        assert_eq!(rep.platforms, ["u280", "generic-ddr"]);
+        assert_eq!(rep.driver, "exhaustive");
+        let win =
+            rep.candidates.iter().find(|c| c.strategy == rep.best_strategy).unwrap();
+        assert_eq!(win.platform.as_deref(), Some("u280"), "winner {}", rep.best_strategy);
+        assert!(rep.best_strategy.starts_with("u280/"), "{}", rep.best_strategy);
+
+        // a single stream pair: no parallelism for the HBM fabric to
+        // exploit, so the faster individual DDR channel wins
+        let narrow = low_parallelism_module();
+        let rep = run_dse_multi(&narrow, &plats, &opts).unwrap();
+        let win =
+            rep.candidates.iter().find(|c| c.strategy == rep.best_strategy).unwrap();
+        assert_eq!(
+            win.platform.as_deref(),
+            Some("generic-ddr"),
+            "winner {}",
+            rep.best_strategy
+        );
+
+        // every row is platform-stamped and platform-qualified
+        for c in &rep.candidates {
+            let p = c.platform.as_deref().expect("row stamped with its platform");
+            assert!(c.strategy.starts_with(&format!("{p}/")), "{}", c.strategy);
+        }
+    }
+
+    #[test]
+    fn run_dse_multi_rejects_duplicates_and_delegates_single() {
+        let m = fig4a_module();
+        let u = builtin("u280").unwrap();
+        let err = run_dse_multi(&m, &[u.clone(), u.clone()], &DseOptions::default())
+            .unwrap_err();
+        assert!(err.to_string().contains("more than once"), "{err}");
+        // a one-platform list is the classic single-platform search
+        let opts = DseOptions { factors: vec![2], ..DseOptions::default() };
+        let multi = run_dse_multi(&m, &[u.clone()], &opts).unwrap();
+        let single = run_dse(&m, &u, &[2]).unwrap();
+        assert!(multi.platforms.is_empty(), "one platform is not an axis");
+        assert_eq!(multi.best_strategy, single.best_strategy);
+        assert_eq!(multi.candidates.len(), single.candidates.len());
+        for (a, b) in multi.candidates.iter().zip(&single.candidates) {
+            assert_eq!(a.strategy, b.strategy);
+            assert_eq!(a.score.to_bits(), b.score.to_bits());
+            assert_eq!(a.platform, None);
+        }
+    }
+
+    #[test]
+    fn multi_platform_and_single_platform_runs_share_the_cache() {
+        let m = fig4a_module();
+        let plats = [builtin("u280").unwrap(), builtin("generic-ddr").unwrap()];
+        let cache = std::sync::Arc::new(CandidateCache::new());
+        let opts = |c: Option<std::sync::Arc<CandidateCache>>| DseOptions {
+            factors: vec![2],
+            cache: c,
+            ..DseOptions::default()
+        };
+        // warm the memo with two classic single-platform runs
+        let su = run_dse_with(&m, &plats[0], &opts(Some(cache.clone()))).unwrap();
+        let sg = run_dse_with(&m, &plats[1], &opts(Some(cache.clone()))).unwrap();
+        let misses = cache.stats().misses;
+        assert_eq!(misses, 14, "7 grid points per platform, keyed apart");
+        // the multi-platform sweep answers every point from the memo...
+        let warm = run_dse_multi(&m, &plats, &opts(Some(cache.clone()))).unwrap();
+        assert_eq!(cache.stats().misses, misses, "multi run recomputes nothing");
+        assert_eq!(warm.full_evals, 0);
+        // ...bit-identically to a cold multi-platform run
+        let cold = run_dse_multi(&m, &plats, &opts(None)).unwrap();
+        assert_eq!(warm.best_strategy, cold.best_strategy);
+        assert_eq!(warm.candidates.len(), cold.candidates.len());
+        for (a, b) in warm.candidates.iter().zip(&cold.candidates) {
+            assert_eq!(a.strategy, b.strategy);
+            assert_eq!(a.platform, b.platform);
+            assert_eq!(a.score.to_bits(), b.score.to_bits());
+        }
+        // labels come back platform-qualified even though the memo
+        // journaled them under the single-platform labels...
+        assert!(warm.candidates.iter().all(|c| c.strategy.contains('/')));
+        // ...and each single-platform table matches its slice of the
+        // platform-major multi table
+        for (rep, name) in [(&su, "u280"), (&sg, "generic-ddr")] {
+            let slice: Vec<_> = warm
+                .candidates
+                .iter()
+                .filter(|c| c.platform.as_deref() == Some(name))
+                .collect();
+            assert_eq!(slice.len(), rep.candidates.len());
+            for (a, b) in slice.iter().zip(&rep.candidates) {
+                assert_eq!(a.strategy, format!("{name}/{}", b.strategy));
+                assert_eq!(a.score.to_bits(), b.score.to_bits());
+            }
+        }
     }
 
     /// A compute-heavy app: big streams, deeply pipelined kernel (II = 8).

@@ -31,7 +31,7 @@ pub mod sanitize;
 
 pub use dse::{
     candidate_cache_key, evaluate_candidate, objective_from_json, objective_to_json,
-    outcome_from_json, outcome_to_json, run_dse, run_dse_with, run_iterative, CandidateCache,
-    CandidateOutcome, DseCandidate, DseObjective, DseOptions, DseReport,
+    outcome_from_json, outcome_to_json, run_dse, run_dse_multi, run_dse_with, run_iterative,
+    CandidateCache, CandidateOutcome, DseCandidate, DseObjective, DseOptions, DseReport,
 };
 pub use manager::{make_pass, parse_pipeline, Pass, PassContext, PassManager, PassOutcome};

@@ -49,6 +49,17 @@ pub struct PcSpec {
     /// Only the discrete-event simulator ([`crate::des`]) consumes this; the
     /// static analytic model intentionally ignores it.
     pub sustained_frac: f64,
+    /// Concurrently interleavable banks (HBM pseudo-channel bank count, or
+    /// DDR banks × bank groups). More masters than banks on one channel
+    /// cannot all hide their row-activate latency behind interleaving, so
+    /// the DES derates the channel (see [`PcSpec::bank_conflict_derate`]).
+    pub banks: u32,
+    /// Multiplier applied to `sustained_frac` when more movers land on this
+    /// channel than it has `banks` (bank-conflict regime). arXiv 2010.08916
+    /// measures DDR4 losing ~40% under conflicting multi-master streams;
+    /// HBM pseudo-channels are single-master behind the switch, so `1.0`
+    /// there. Must be in `(0, 1]`; `1.0` = conflicts cost nothing extra.
+    pub bank_conflict_derate: f64,
 }
 
 impl PcSpec {
@@ -86,6 +97,13 @@ pub struct PlatformSpec {
     pub util_limit: f64,
     /// Kernel clock in MHz (the fabric clock kernels are compiled at).
     pub kernel_mhz: f64,
+    /// AXI master port budget: how many memory-mapped AXI masters the shell
+    /// + memory subsystem accepts (U280: one per HBM switch port plus the
+    /// DDR controllers). The mapping phase of
+    /// [`crate::lower::build_architecture`] shares ports when a design
+    /// needs more, and rejects designs spread over more distinct channels
+    /// than there are ports.
+    pub axi_ports: usize,
 }
 
 impl PlatformSpec {
@@ -131,6 +149,8 @@ impl PlatformSpec {
                     ("freq_mhz", p.freq_mhz.into()),
                     ("capacity_bytes", (p.capacity_bytes as usize).into()),
                     ("sustained_frac", p.sustained_frac.into()),
+                    ("banks", (p.banks as usize).into()),
+                    ("bank_conflict_derate", p.bank_conflict_derate.into()),
                 ])
             })
             .collect();
@@ -149,6 +169,7 @@ impl PlatformSpec {
             ),
             ("util_limit", self.util_limit.into()),
             ("kernel_mhz", self.kernel_mhz.into()),
+            ("axi_ports", self.axi_ports.into()),
         ])
     }
 
@@ -162,16 +183,43 @@ impl PlatformSpec {
             let freq_mhz = p.get("freq_mhz").as_f64().context("pc freq_mhz")?;
             let capacity_bytes = p.get("capacity_bytes").as_usize().unwrap_or(0) as u64;
             let sustained_frac = p.get("sustained_frac").as_f64().unwrap_or(1.0);
+            // absent bank topology = one big bank that never conflicts
+            let banks = p.get("banks").as_usize().unwrap_or(1) as u32;
+            let bank_conflict_derate = p.get("bank_conflict_derate").as_f64().unwrap_or(1.0);
             if width_bits == 0 || freq_mhz <= 0.0 {
                 bail!("pc {i}: non-positive width/frequency");
             }
             if !(0.0..=1.0).contains(&sustained_frac) {
                 bail!("pc {i}: sustained_frac must be in [0, 1]");
             }
-            pcs.push(PcSpec { kind, width_bits, freq_mhz, capacity_bytes, sustained_frac });
+            if banks == 0 {
+                bail!("pc {i}: banks must be >= 1");
+            }
+            if !(bank_conflict_derate > 0.0 && bank_conflict_derate <= 1.0) {
+                bail!("pc {i}: bank_conflict_derate must be in (0, 1]");
+            }
+            pcs.push(PcSpec {
+                kind,
+                width_bits,
+                freq_mhz,
+                capacity_bytes,
+                sustained_frac,
+                banks,
+                bank_conflict_derate,
+            });
         }
         if pcs.is_empty() {
             bail!("platform '{name}' has no memory channels");
+        }
+        // absent port budget = one AXI master per channel (never constrains
+        // a valid per-channel mapping), so pre-topology JSON files keep
+        // lowering exactly as before
+        let axi_ports = match v.get("axi_ports") {
+            Json::Null => pcs.len(),
+            j => j.as_usize().context("platform: axi_ports must be an integer")?,
+        };
+        if axi_ports == 0 {
+            bail!("platform '{name}': axi_ports must be >= 1");
         }
         let r = v.get("resources");
         let g = |k: &str| r.get(k).as_usize().unwrap_or(0) as u64;
@@ -181,6 +229,7 @@ impl PlatformSpec {
             resources: ResourceVec::new(g("ff"), g("lut"), g("bram"), g("uram"), g("dsp")),
             util_limit: v.get("util_limit").as_f64().unwrap_or(0.8),
             kernel_mhz: v.get("kernel_mhz").as_f64().unwrap_or(300.0),
+            axi_ports,
         })
     }
 
@@ -203,6 +252,8 @@ mod tests {
             freq_mhz: 450.0,
             capacity_bytes: 256 << 20,
             sustained_frac: 0.85,
+            banks: 16,
+            bank_conflict_derate: 1.0,
         }
     }
 
@@ -224,11 +275,14 @@ mod tests {
                     freq_mhz: 2400.0,
                     capacity_bytes: 16 << 30,
                     sustained_frac: 0.95,
+                    banks: 16,
+                    bank_conflict_derate: 0.6,
                 },
             ],
             resources: ResourceVec::new(1, 2, 3, 4, 5),
             util_limit: 0.8,
             kernel_mhz: 300.0,
+            axi_ports: 3,
         };
         let j = spec.to_json().to_string();
         let back = PlatformSpec::from_json(&Json::parse(&j).unwrap()).unwrap();
@@ -245,6 +299,11 @@ mod tests {
         let spec = PlatformSpec::from_json(&j).unwrap();
         assert_eq!(spec.pcs[0].sustained_frac, 1.0);
         assert_eq!(spec.pcs[0].shared_beat_rate(1), spec.pcs[0].shared_beat_rate(4));
+        // absent topology fields: one never-conflicting bank, one AXI
+        // master per channel — pre-topology JSON specs lower as before
+        assert_eq!(spec.pcs[0].banks, 1);
+        assert_eq!(spec.pcs[0].bank_conflict_derate, 1.0);
+        assert_eq!(spec.axi_ports, spec.pcs.len());
         // explicit derate only kicks in under contention
         let p = pc();
         assert!((p.shared_beat_rate(1) - 450e6).abs() < 1e-3);
@@ -266,6 +325,7 @@ mod tests {
             resources: ResourceVec::new(1, 2, 3, 4, 5),
             util_limit: 0.8,
             kernel_mhz: 300.0,
+            axi_ports: 1,
         };
         // a JSON round-trip preserves the fingerprint...
         let back =
@@ -284,6 +344,25 @@ mod tests {
     }
 
     #[test]
+    fn rejects_bad_port_bank_topology() {
+        let mk = |extra: &str| {
+            Json::parse(&format!(
+                r#"{{"name": "x", "pcs": [{{"kind": "hbm", "width_bits": 256,
+                    "freq_mhz": 450.0{extra}}}]}}"#
+            ))
+            .unwrap()
+        };
+        assert!(PlatformSpec::from_json(&mk(r#", "banks": 0"#)).is_err());
+        assert!(PlatformSpec::from_json(&mk(r#", "bank_conflict_derate": 0.0"#)).is_err());
+        assert!(PlatformSpec::from_json(&mk(r#", "bank_conflict_derate": 1.5"#)).is_err());
+        let mut v = mk("");
+        if let Json::Obj(o) = &mut v {
+            o.insert("axi_ports".into(), Json::Num(0.0));
+        }
+        assert!(PlatformSpec::from_json(&v).is_err());
+    }
+
+    #[test]
     fn pc_ids_by_kind() {
         let spec = PlatformSpec {
             name: "t".into(),
@@ -295,12 +374,15 @@ mod tests {
                     freq_mhz: 2400.0,
                     capacity_bytes: 0,
                     sustained_frac: 1.0,
+                    banks: 1,
+                    bank_conflict_derate: 1.0,
                 },
                 pc(),
             ],
             resources: ResourceVec::ZERO,
             util_limit: 0.8,
             kernel_mhz: 300.0,
+            axi_ports: 3,
         };
         assert_eq!(spec.pc_ids(MemKind::Hbm), vec![0, 2]);
         assert_eq!(spec.pc_ids(MemKind::Ddr), vec![1]);

@@ -170,6 +170,9 @@ fn collect_report(
         driver: driver.to_string(),
         screened,
         full_evals,
+        // single-platform by construction; `run_dse_multi` stamps the
+        // searched platform list after the driver returns
+        platforms: Vec::new(),
     })
 }
 

@@ -245,9 +245,16 @@ impl<'a> ObjectiveEvaluator<'a> {
                     if i >= n {
                         break;
                     }
-                    if let CandidateOutcome::Evaluated { cand, module } =
+                    if let CandidateOutcome::Evaluated { mut cand, module } =
                         self.memoized(&points[i], objective, memoize, count)
                     {
+                        // the row label is deliberately outside the cache
+                        // key, so a memo hit may carry the label it was
+                        // first journaled under (e.g. platform-qualified
+                        // from a multi-platform sweep); restore this
+                        // point's own label for bit-identical reports
+                        // across cache temperatures
+                        cand.strategy = points[i].label.clone();
                         slots.lock().unwrap()[i] = Some((cand, module));
                     }
                 });
@@ -288,6 +295,83 @@ impl Evaluator for ObjectiveEvaluator<'_> {
     }
 }
 
+/// The platform-axis evaluator: one inner evaluator per searched platform
+/// (local [`ObjectiveEvaluator`] or remote
+/// [`RemoteEvaluator`](crate::service::remote::RemoteEvaluator), mixed
+/// freely), points partitioned by their
+/// [`platform`](CandidatePoint::platform) index. Results scatter back into
+/// point order, so every driver sees the product space exactly as the
+/// [`MultiPlatformGrid`](crate::search::MultiPlatformGrid) enumerated it.
+/// Each candidate is stamped with its platform's name for the per-platform
+/// winner rows of the report.
+pub struct MultiPlatformEvaluator<'a> {
+    platforms: Vec<String>,
+    inner: Vec<Box<dyn Evaluator + 'a>>,
+}
+
+impl<'a> MultiPlatformEvaluator<'a> {
+    pub fn new(
+        platforms: Vec<String>,
+        inner: Vec<Box<dyn Evaluator + 'a>>,
+    ) -> MultiPlatformEvaluator<'a> {
+        assert!(!inner.is_empty(), "multi-platform evaluation needs at least one platform");
+        assert_eq!(platforms.len(), inner.len(), "one evaluator per platform");
+        MultiPlatformEvaluator { platforms, inner }
+    }
+
+    /// Partition `points` by platform index, run each group on its own
+    /// evaluator (which parallelizes internally), and scatter the results
+    /// back into the original slots.
+    fn scatter<F>(&self, points: &[CandidatePoint], run: F) -> Vec<Option<(DseCandidate, Module)>>
+    where
+        F: Fn(&dyn Evaluator, &[CandidatePoint]) -> Vec<Option<(DseCandidate, Module)>>,
+    {
+        let mut groups: Vec<Vec<usize>> = vec![Vec::new(); self.inner.len()];
+        for (i, p) in points.iter().enumerate() {
+            groups[p.platform.unwrap_or(0).min(self.inner.len() - 1)].push(i);
+        }
+        let mut out: Vec<Option<(DseCandidate, Module)>> =
+            (0..points.len()).map(|_| None).collect();
+        for (idx, members) in groups.iter().enumerate() {
+            if members.is_empty() {
+                continue;
+            }
+            let pts: Vec<CandidatePoint> =
+                members.iter().map(|&i| points[i].clone()).collect();
+            let results = run(self.inner[idx].as_ref(), &pts);
+            for (&i, slot) in members.iter().zip(results) {
+                out[i] = slot.map(|(mut cand, m)| {
+                    cand.platform = Some(self.platforms[idx].clone());
+                    (cand, m)
+                });
+            }
+        }
+        out
+    }
+}
+
+impl Evaluator for MultiPlatformEvaluator<'_> {
+    fn evaluate(&self, points: &[CandidatePoint]) -> Vec<Option<(DseCandidate, Module)>> {
+        self.scatter(points, |e, pts| e.evaluate(pts))
+    }
+
+    fn screen(&self, points: &[CandidatePoint]) -> Vec<Option<(DseCandidate, Module)>> {
+        self.scatter(points, |e, pts| e.screen(pts))
+    }
+
+    fn screen_from(&self, base: &Module, pipeline: &str) -> Option<(DseCandidate, Module)> {
+        // only the greedy descent calls this, and multi-platform runs
+        // execute the iterative driver per platform (each on its own
+        // single-platform evaluator); the first platform is a conservative
+        // fallback for a caller that skips that split
+        self.inner[0].screen_from(base, pipeline)
+    }
+
+    fn full_evals(&self) -> usize {
+        self.inner.iter().map(|e| e.full_evals()).sum()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -317,6 +401,71 @@ mod tests {
             assert_eq!(sc.score, fc.score);
             assert_eq!(sc.makespan_s, fc.makespan_s);
         }
+    }
+
+    #[test]
+    fn memo_hits_restore_the_requesting_points_label() {
+        let m = fig4a_module();
+        let plat = builtin("u280").unwrap();
+        let obj = DseObjective::Analytic;
+        let cache = Arc::new(CandidateCache::new());
+        let eval = ObjectiveEvaluator::new(&m, &plat, &obj, 1, Some(cache));
+        let a = eval.evaluate(&[CandidatePoint::new("baseline", "sanitize")]);
+        // same pipeline, different label: hits the memo entry journaled above
+        let b = eval.evaluate(&[CandidatePoint::new("u280/baseline", "sanitize")]);
+        let (ca, _) = a[0].as_ref().unwrap();
+        let (cb, _) = b[0].as_ref().unwrap();
+        assert_eq!(ca.strategy, "baseline");
+        assert_eq!(cb.strategy, "u280/baseline", "memo hit must not leak the journaled label");
+        assert_eq!(cb.score, ca.score);
+        assert_eq!(eval.full_evals(), 1, "second call answers from the memo");
+    }
+
+    #[test]
+    fn multi_platform_evaluator_partitions_and_scatters_in_order() {
+        let m = fig4a_module();
+        let u280 = builtin("u280").unwrap();
+        let gddr = builtin("generic-ddr").unwrap();
+        let obj = DseObjective::Analytic;
+        let inner: Vec<Box<dyn Evaluator>> = vec![
+            Box::new(ObjectiveEvaluator::new(&m, &u280, &obj, 1, None)),
+            Box::new(ObjectiveEvaluator::new(&m, &gddr, &obj, 1, None)),
+        ];
+        let multi = MultiPlatformEvaluator::new(
+            vec!["u280".to_string(), "generic-ddr".to_string()],
+            inner,
+        );
+        // interleaved platforms: results must come back in point order
+        let pts = vec![
+            CandidatePoint {
+                label: "u280/baseline".to_string(),
+                pipeline: "sanitize".to_string(),
+                platform: Some(0),
+            },
+            CandidatePoint {
+                label: "generic-ddr/baseline".to_string(),
+                pipeline: "sanitize".to_string(),
+                platform: Some(1),
+            },
+            CandidatePoint {
+                label: "u280/iris".to_string(),
+                pipeline: "sanitize, iris, channel-reassign".to_string(),
+                platform: Some(0),
+            },
+        ];
+        let out = multi.evaluate(&pts);
+        assert_eq!(out.len(), 3);
+        let cands: Vec<&DseCandidate> =
+            out.iter().map(|s| &s.as_ref().unwrap().0).collect();
+        assert_eq!(cands[0].strategy, "u280/baseline");
+        assert_eq!(cands[1].strategy, "generic-ddr/baseline");
+        assert_eq!(cands[2].strategy, "u280/iris");
+        assert_eq!(cands[0].platform.as_deref(), Some("u280"));
+        assert_eq!(cands[1].platform.as_deref(), Some("generic-ddr"));
+        assert_eq!(cands[2].platform.as_deref(), Some("u280"));
+        // the same pipeline genuinely scores differently per platform
+        assert_ne!(cands[0].score, cands[1].score);
+        assert_eq!(multi.full_evals(), 3);
     }
 
     #[test]

@@ -8,12 +8,15 @@
 //!
 //! * [`SearchSpace`] — generates candidates as composable pipeline
 //!   schedules. [`StrategyGrid`] is the classic strategy-table × factor
-//!   grid (plus the iterative loop); spaces support seeded random
-//!   sampling out of the box.
+//!   grid (plus the iterative loop); [`MultiPlatformGrid`] crosses any
+//!   space with a platform list, making the platform itself a search axis;
+//!   spaces support seeded random sampling out of the box.
 //! * [`Evaluator`] — scores candidates at two fidelities: a cheap analytic
 //!   *screen* and the run's full objective (analytic or `des-score`).
 //!   [`ObjectiveEvaluator`] carries the content-addressed candidate memo
-//!   and the std-thread evaluation pool.
+//!   and the std-thread evaluation pool; [`MultiPlatformEvaluator`]
+//!   partitions the product space across one inner evaluator per platform
+//!   (local or remote, mixed freely).
 //! * [`SearchDriver`] — the policy: [`ExhaustiveDriver`] (bit-identical to
 //!   the pre-refactor `olympus dse`), [`RandomDriver`] (seeded, budgeted),
 //!   [`SuccessiveHalvingDriver`] (multi-fidelity: screen everything,
@@ -35,8 +38,8 @@ pub use driver::{
     greedy_descent, run_driver, DriverKind, ExhaustiveDriver, IterativeDriver, RandomDriver,
     SearchDriver, SuccessiveHalvingDriver, DEFAULT_SEARCH_SEED,
 };
-pub use evaluate::{Evaluator, ObjectiveEvaluator};
+pub use evaluate::{Evaluator, MultiPlatformEvaluator, ObjectiveEvaluator};
 pub use space::{
     iterative_moves, iterative_tag, normalize_factors, parse_iterative_tag, CandidatePoint,
-    SearchSpace, StrategyGrid, DEFAULT_FACTORS, ITERATIVE_TAG,
+    MultiPlatformGrid, SearchSpace, StrategyGrid, DEFAULT_FACTORS, ITERATIVE_TAG,
 };

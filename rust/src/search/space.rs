@@ -20,11 +20,16 @@ pub struct CandidatePoint {
     pub label: String,
     /// Pass pipeline evaluated for this point.
     pub pipeline: String,
+    /// Index into the searched platform list when the platform is itself a
+    /// search axis ([`MultiPlatformGrid`]); `None` in single-platform
+    /// spaces. Deliberately *not* part of the candidate cache key — the
+    /// platform fingerprint already is.
+    pub platform: Option<usize>,
 }
 
 impl CandidatePoint {
     pub fn new(label: impl Into<String>, pipeline: impl Into<String>) -> CandidatePoint {
-        CandidatePoint { label: label.into(), pipeline: pipeline.into() }
+        CandidatePoint { label: label.into(), pipeline: pipeline.into(), platform: None }
     }
 }
 
@@ -146,6 +151,42 @@ impl SearchSpace for StrategyGrid {
     }
 }
 
+/// The platform as a search axis: the cross product of an inner space with
+/// a list of platform names. Enumeration is platform-major — for each
+/// platform, the inner space in its own order — so per-platform decision
+/// tables read contiguously and the first-minimum winner rule prefers
+/// earlier-listed platforms on exact ties. Labels are qualified as
+/// `platform/label`; `platform` carries the index the evaluator partitions
+/// on ([`crate::search::MultiPlatformEvaluator`]).
+#[derive(Debug, Clone)]
+pub struct MultiPlatformGrid<S> {
+    pub inner: S,
+    pub platforms: Vec<String>,
+}
+
+impl<S: SearchSpace> MultiPlatformGrid<S> {
+    pub fn new(inner: S, platforms: Vec<String>) -> MultiPlatformGrid<S> {
+        MultiPlatformGrid { inner, platforms }
+    }
+}
+
+impl<S: SearchSpace> SearchSpace for MultiPlatformGrid<S> {
+    fn enumerate(&self) -> Vec<CandidatePoint> {
+        let base = self.inner.enumerate();
+        let mut points = Vec::with_capacity(base.len() * self.platforms.len());
+        for (idx, name) in self.platforms.iter().enumerate() {
+            for p in &base {
+                points.push(CandidatePoint {
+                    label: format!("{name}/{}", p.label),
+                    pipeline: p.pipeline.clone(),
+                    platform: Some(idx),
+                });
+            }
+        }
+        points
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -197,6 +238,30 @@ mod tests {
         assert_eq!(parse_iterative_tag(&iterative_tag(20)), Some(20));
         assert_eq!(parse_iterative_tag("sanitize, iris"), None);
         assert_eq!(parse_iterative_tag("@iterative{max_rounds=x}"), None);
+    }
+
+    #[test]
+    fn multi_platform_grid_is_platform_major_with_qualified_labels() {
+        let grid = MultiPlatformGrid::new(
+            StrategyGrid::new(&[2]),
+            vec!["u280".to_string(), "generic-ddr".to_string()],
+        );
+        let pts = grid.enumerate();
+        let inner = StrategyGrid::new(&[2]).enumerate();
+        assert_eq!(pts.len(), inner.len() * 2);
+        // platform-major: the whole inner grid for u280, then generic-ddr
+        for (i, p) in pts.iter().enumerate() {
+            let (plat, idx) =
+                if i < inner.len() { ("u280", 0) } else { ("generic-ddr", 1) };
+            let base = &inner[i % inner.len()];
+            assert_eq!(p.label, format!("{plat}/{}", base.label));
+            assert_eq!(p.pipeline, base.pipeline);
+            assert_eq!(p.platform, Some(idx));
+        }
+        // the default sampler works over the product space unchanged
+        let s = grid.sample(3, 7);
+        assert_eq!(s, grid.sample(3, 7));
+        assert_eq!(s.len(), 3);
     }
 
     #[test]

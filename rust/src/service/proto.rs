@@ -18,6 +18,7 @@
 //!  "slo": "interactive=p99<5", "autoscale": "0.001:256:16:1:4",
 //!  "scenario_json": {"name": "trace-3job-...", "arrivals": {...}},
 //!  "priority": 2, "deadline_ms": 5000}
+//! {"cmd": "dse",  "ir": "<mlir>", "platforms": ["u280", "generic-ddr"], "factors": [2]}
 //! {"cmd": "des",  "ir": "<mlir>", "pipeline": "sanitize, iris, channel-reassign",
 //!  "scenario": "poisson:1000:20", "seed": 7}
 //! {"cmd": "flow", "ir": "<mlir>", "platform": "u280"}
@@ -43,7 +44,13 @@
 //! cross-checks it against `key` (`key-mismatch` on skew).
 //!
 //! `platform` is a builtin name; `platform_json` may carry a full inline
-//! platform spec object instead. `id` (any JSON value) is echoed back.
+//! platform spec object instead. `platforms` (an array of two or more
+//! builtin names, e.g. `["u280", "generic-ddr"]`) makes the platform a
+//! search axis for `dse`/`des`: every strategy is scored on every listed
+//! platform and the flow lowers onto the winner; it is mutually exclusive
+//! with `platform`/`platform_json` and with an explicit `pipeline`, and
+//! entries must be builtin names (custom boards submit a single
+//! `platform_json`). `id` (any JSON value) is echoed back.
 //! `driver` selects the search policy (`exhaustive` default | `random` |
 //! `successive-halving` | `iterative`) with `budget` / `search_seed` as its
 //! knobs; driver and budget are part of the response cache key, so a
@@ -159,6 +166,12 @@ pub struct Request {
     pub platform: Option<String>,
     /// Full inline platform spec (overrides `platform`).
     pub platform_json: Option<Json>,
+    /// Cross-platform search axis: two or more *builtin* platform names
+    /// (the wire carries names, not specs). The DSE scores every strategy
+    /// on every listed platform and the flow lowers onto the winner.
+    /// Mutually exclusive with `platform`/`platform_json` (executor-
+    /// checked); duplicates and non-string entries are parse errors.
+    pub platforms: Option<Vec<String>>,
     /// Explicit pass pipeline (skips DSE for `des`/`flow`).
     pub pipeline: Option<String>,
     /// "analytic" (default), "des-score" or "slo-score".
@@ -330,6 +343,39 @@ pub fn parse_request(line: &str) -> Result<Request, ProtoError> {
         Json::Null => None,
         j => Some(j.clone()),
     };
+    let platforms = match v.get("platforms") {
+        Json::Null => None,
+        j => {
+            let arr = j.as_arr().ok_or_else(|| {
+                ProtoError::new("bad-request", "'platforms' must be an array of platform names")
+                    .with_id(id.clone())
+            })?;
+            if arr.is_empty() {
+                return Err(ProtoError::new(
+                    "bad-request",
+                    "'platforms' must not be empty (omit the field for a single platform)",
+                )
+                .with_id(id));
+            }
+            let mut names = Vec::with_capacity(arr.len());
+            let mut seen = std::collections::BTreeSet::new();
+            for n in arr {
+                let name = n.as_str().ok_or_else(|| {
+                    ProtoError::new("bad-request", "'platforms' entries must be strings")
+                        .with_id(id.clone())
+                })?;
+                if !seen.insert(name.to_string()) {
+                    return Err(ProtoError::new(
+                        "bad-request",
+                        format!("'platforms' lists platform '{name}' more than once"),
+                    )
+                    .with_id(id));
+                }
+                names.push(name.to_string());
+            }
+            Some(names)
+        }
+    };
     let scenario_json = match v.get("scenario_json") {
         Json::Null => None,
         j => Some(j.clone()),
@@ -340,6 +386,7 @@ pub fn parse_request(line: &str) -> Result<Request, ProtoError> {
         ir,
         platform: opt_str("platform"),
         platform_json,
+        platforms,
         pipeline: opt_str("pipeline"),
         objective: opt_str("objective"),
         scenario: opt_str("scenario"),
@@ -440,6 +487,27 @@ mod tests {
         assert_eq!(e.id, Json::Num(5.0), "id survives into the error");
         // zero factors are rejected too
         assert!(parse_request(r#"{"cmd": "dse", "ir": "x", "factors": [0]}"#).is_err());
+    }
+
+    #[test]
+    fn platform_axis_parses_and_validates() {
+        let r = parse_request(
+            r#"{"cmd": "dse", "ir": "x", "platforms": ["u280", "generic-ddr"]}"#,
+        )
+        .unwrap();
+        assert_eq!(r.platforms, Some(vec!["u280".to_string(), "generic-ddr".to_string()]));
+        // empty lists, duplicates and non-string entries are structured errors
+        let e = parse_request(r#"{"cmd": "dse", "ir": "x", "platforms": [], "id": 7}"#)
+            .unwrap_err();
+        assert_eq!(e.code, "bad-request");
+        assert!(e.message.contains("platforms"), "{}", e.message);
+        assert_eq!(e.id, Json::Num(7.0));
+        let e = parse_request(r#"{"cmd": "dse", "ir": "x", "platforms": ["u280", "u280"]}"#)
+            .unwrap_err();
+        assert_eq!(e.code, "bad-request");
+        assert!(e.message.contains("more than once"), "{}", e.message);
+        assert!(parse_request(r#"{"cmd": "dse", "ir": "x", "platforms": [1]}"#).is_err());
+        assert!(parse_request(r#"{"cmd": "dse", "ir": "x", "platforms": "u280"}"#).is_err());
     }
 
     #[test]

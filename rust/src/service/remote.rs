@@ -459,9 +459,15 @@ impl Evaluator for RemoteEvaluator<'_> {
                     if i >= n {
                         break;
                     }
-                    if let CandidateOutcome::Evaluated { cand, module } =
+                    if let CandidateOutcome::Evaluated { mut cand, module } =
                         self.outcome_for(&points[i])
                     {
+                        // a worker journal (or the coordinator memo) may
+                        // hold this outcome under the label it was first
+                        // computed with — the label is outside the key, so
+                        // restore this point's own label for bit-identical
+                        // reports across cache temperatures
+                        cand.strategy = points[i].label.clone();
                         slots.lock().unwrap()[i] = Some((cand, module));
                     }
                 });

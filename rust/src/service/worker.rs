@@ -436,8 +436,15 @@ fn execute_job(
     req: &Request,
 ) -> Result<(String, Served, bool), ProtoError> {
     let module = load_module(req)?;
-    let platform = load_platform(req)?;
-    let flow = build_flow(state, req, platform)?;
+    let axis = load_platform_axis(req)?;
+    let platform = match &axis {
+        Some(specs) => specs[0].clone(),
+        None => load_platform(req)?,
+    };
+    let mut flow = build_flow(state, req, platform)?;
+    if let Some(specs) = axis {
+        flow = flow.with_platforms(specs);
+    }
     let cmd = req.cmd;
     // `dse` and `flow` can share a Flow::cache_key but render different
     // payloads, so the command is part of the response address
@@ -467,6 +474,37 @@ fn load_module(req: &Request) -> Result<Module, ProtoError> {
         return Err(ProtoError::new("bad-ir", format!("dialect verification failed: {derrs:?}")));
     }
     Ok(m)
+}
+
+/// Resolve the `platforms` search axis when present: builtin names only
+/// (the wire carries names, not full specs), mutually exclusive with
+/// `platform`/`platform_json`. The first entry doubles as the primary
+/// platform, mirroring the CLI's `--platforms`.
+fn load_platform_axis(req: &Request) -> Result<Option<Vec<PlatformSpec>>, ProtoError> {
+    let Some(names) = &req.platforms else { return Ok(None) };
+    if req.platform.is_some() || req.platform_json.is_some() {
+        return Err(ProtoError::new(
+            "bad-request",
+            "'platforms' is mutually exclusive with 'platform'/'platform_json'; the axis \
+             searches the listed platforms and lowers onto the winner",
+        ));
+    }
+    let mut specs = Vec::with_capacity(names.len());
+    for name in names {
+        let spec = builtin(name).ok_or_else(|| {
+            ProtoError::new(
+                "bad-platform",
+                format!(
+                    "unknown builtin platform '{name}' in 'platforms' (have {:?}); the axis \
+                     carries builtin names only — submit 'platform_json' for a single \
+                     custom board",
+                    builtin_names()
+                ),
+            )
+        })?;
+        specs.push(spec);
+    }
+    Ok(Some(specs))
 }
 
 fn load_platform(req: &Request) -> Result<PlatformSpec, ProtoError> {
@@ -533,12 +571,13 @@ fn build_flow(
         && (req.driver.is_some()
             || req.budget.is_some()
             || req.search_seed.is_some()
-            || req.factors.is_some())
+            || req.factors.is_some()
+            || req.platforms.is_some())
     {
         return Err(ProtoError::new(
             "bad-request",
-            "'driver'/'budget'/'search_seed'/'factors' configure the design-space search; \
-             drop 'pipeline' to search, or drop the search fields",
+            "'driver'/'budget'/'search_seed'/'factors'/'platforms' configure the \
+             design-space search; drop 'pipeline' to search, or drop the search fields",
         ));
     }
     let mut flow = Flow::new(platform)
@@ -842,6 +881,49 @@ mod tests {
         let resp = Json::parse(&rx.recv().unwrap()).unwrap();
         assert_eq!(resp.get("ok"), &Json::Bool(false));
         assert_eq!(resp.get("error").get("code").as_str(), Some("deadline-expired"));
+    }
+
+    #[test]
+    fn platform_axis_serves_cross_platform_table_and_keys_apart() {
+        let state = ServiceState::new(0, 1);
+        let single = request(r#"{"factors": [2]}"#);
+        let multi = request(r#"{"factors": [2], "platforms": ["u280", "generic-ddr"]}"#);
+        let s = Json::parse(&execute_request(&state, &single)).unwrap();
+        let m = Json::parse(&execute_request(&state, &multi)).unwrap();
+        assert_eq!(s.get("ok"), &Json::Bool(true), "{s}");
+        assert_eq!(m.get("ok"), &Json::Bool(true), "{m}");
+        assert_ne!(s.get("key"), m.get("key"), "the platform axis rides the response key");
+        let table = m.get("result").get("table").as_str().unwrap();
+        assert!(table.contains("best[u280]: u280/"), "{table}");
+        assert!(table.contains("best[generic-ddr]: generic-ddr/"), "{table}");
+        assert!(m.get("result").get("best_strategy").as_str().unwrap().contains('/'), "{m}");
+        // the shared candidate cache answers the u280 half of the product
+        // space from the single-platform run: a warm repeat computes nothing
+        let warm = Json::parse(&execute_request(&state, &multi)).unwrap();
+        assert_eq!(warm.get("cached"), &Json::Bool(true));
+        assert_eq!(warm.get("result"), m.get("result"));
+    }
+
+    #[test]
+    fn platform_axis_conflicts_fail_structured() {
+        let state = ServiceState::new(0, 1);
+        // unknown builtin in the axis
+        let bad = request(r#"{"platforms": ["u280", "nonesuch"]}"#);
+        let v = Json::parse(&execute_request(&state, &bad)).unwrap();
+        assert_eq!(v.get("ok"), &Json::Bool(false));
+        assert_eq!(v.get("error").get("code").as_str(), Some("bad-platform"));
+        assert!(v.get("error").get("message").as_str().unwrap().contains("u50"), "{v}");
+        // axis alongside a single-platform field
+        let both = request(r#"{"platforms": ["u280", "generic-ddr"], "platform": "u280"}"#);
+        let v = Json::parse(&execute_request(&state, &both)).unwrap();
+        assert_eq!(v.get("error").get("code").as_str(), Some("bad-request"));
+        // axis alongside an explicit pipeline (the axis would be dead)
+        let mut dead = request(r#"{"platforms": ["u280", "generic-ddr"]}"#);
+        dead.cmd = Command::Des;
+        dead.pipeline = Some("sanitize".into());
+        let v = Json::parse(&execute_request(&state, &dead)).unwrap();
+        assert_eq!(v.get("error").get("code").as_str(), Some("bad-request"));
+        assert!(v.get("error").get("message").as_str().unwrap().contains("platforms"), "{v}");
     }
 
     #[test]

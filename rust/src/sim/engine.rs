@@ -37,6 +37,15 @@ pub struct Simulator<'a> {
 /// without sorting first.
 type LaneStage = FxHashMap<(usize, usize), Vec<f32>>; // (fifo idx, lane) -> data
 
+/// Reusable staging buffers for [`Simulator::fire`] — the hot loop runs one
+/// firing per chunk, so the per-input argument vectors are cleared and
+/// refilled instead of reallocated every firing.
+#[derive(Default)]
+struct FireScratch {
+    /// One staged input buffer per CU input slot.
+    args: Vec<Vec<f32>>,
+}
+
 impl<'a> Simulator<'a> {
     pub fn new(arch: &'a Architecture, registry: &'a KernelRegistry) -> Self {
         Simulator { arch, registry, congestion_model: true, utilization: 0.0 }
@@ -176,6 +185,7 @@ impl<'a> Simulator<'a> {
         }
 
         let mut safety = 0u64;
+        let mut scratch = FireScratch::default();
         loop {
             // phase 1: fire on full chunks until quiescent
             loop {
@@ -195,6 +205,7 @@ impl<'a> Simulator<'a> {
                             &mut lane_stage,
                             &mut cu_elems,
                             &mut cu_firings,
+                            &mut scratch,
                         )?;
                         progress = true;
                         safety += 1;
@@ -236,6 +247,7 @@ impl<'a> Simulator<'a> {
                         &mut lane_stage,
                         &mut cu_elems,
                         &mut cu_firings,
+                        &mut scratch,
                     )?;
                     drained = true;
                     safety += 1;
@@ -456,28 +468,34 @@ impl<'a> Simulator<'a> {
         lane_stage: &mut LaneStage,
         cu_elems: &mut [u64],
         cu_firings: &mut [u64],
+        scratch: &mut FireScratch,
     ) -> Result<()> {
-        let e = self.registry.entry(&cu.callee).context("validated")?.clone();
-        let mut args: Vec<Vec<f32>> = Vec::with_capacity(cu.inputs.len());
+        let e = self.registry.entry(&cu.callee).context("validated")?;
+        if scratch.args.len() < cu.inputs.len() {
+            scratch.args.resize_with(cu.inputs.len(), Vec::new);
+        }
         // fraction of a full chunk actually consumed (partial-drain firings)
         let mut frac: f64 = 1.0;
         for (k, ep) in cu.inputs.iter().enumerate() {
             let need = e.input_len(k);
-            let mut data: Vec<f32> = match ep {
+            let data = &mut scratch.args[k];
+            data.clear();
+            match ep {
                 Endpoint::Fifo(i) => {
                     let q = if cu.lanes > 1 {
                         lane_inputs.get_mut(&(ci, *i)).unwrap()
                     } else {
                         &mut fifos[*i]
                     };
-                    q.drain(..need.min(q.len())).collect()
+                    let take = need.min(q.len());
+                    data.extend(q.drain(..take));
                 }
-                Endpoint::Plm(i) => plms[*i].iter().take(need).copied().collect(),
+                Endpoint::Plm(i) => data.extend(plms[*i].iter().take(need).copied()),
                 Endpoint::Axi(i) => {
                     let off = cu_firings[ci] as usize * need;
-                    axi[*i].iter().skip(off).take(need).copied().collect()
+                    data.extend(axi[*i].iter().skip(off).take(need).copied());
                 }
-            };
+            }
             cu_elems[ci] += data.len() as u64;
             if data.len() < need {
                 if !allow_partial && matches!(ep, Endpoint::Fifo(_)) {
@@ -488,9 +506,9 @@ impl<'a> Simulator<'a> {
                 }
                 data.resize(need, 0.0); // zero padding
             }
-            args.push(data);
         }
-        let arg_refs: Vec<&[f32]> = args.iter().map(|d| d.as_slice()).collect();
+        let arg_refs: Vec<&[f32]> =
+            scratch.args[..cu.inputs.len()].iter().map(|d| d.as_slice()).collect();
         let results = self
             .registry
             .execute(&cu.callee, &arg_refs)

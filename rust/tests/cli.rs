@@ -511,6 +511,125 @@ fn serve_and_submit_round_trip_with_cache() {
     let _ = child.wait();
 }
 
+/// `--platforms` makes the platform a search axis: the table carries
+/// `platform/strategy` rows plus one `best[platform]` row per platform,
+/// and a one-entry axis is byte-identical to the classic `--platform` run.
+#[test]
+fn dse_platforms_cross_platform_search() {
+    let dir = tmpdir("dse_platforms");
+    let design = write_design(&dir);
+    let d = design.to_str().unwrap();
+    let run = |args: &[&str]| {
+        let out = olympus().args(args).output().unwrap();
+        assert!(out.status.success(), "{args:?}: {}", String::from_utf8_lossy(&out.stderr));
+        String::from_utf8_lossy(&out.stdout).to_string()
+    };
+    let multi = run(&["dse", d, "--factors", "2", "--platforms", "u280,generic-ddr"]);
+    assert!(multi.contains("u280/baseline"), "{multi}");
+    assert!(multi.contains("generic-ddr/baseline"), "{multi}");
+    assert!(multi.contains("best[u280]: u280/"), "{multi}");
+    assert!(multi.contains("best[generic-ddr]: generic-ddr/"), "{multi}");
+    // a one-entry axis IS the single-platform run, byte for byte
+    let single = run(&["dse", d, "--factors", "2", "--platform", "generic-ddr"]);
+    let one = run(&["dse", d, "--factors", "2", "--platforms", "generic-ddr"]);
+    assert_eq!(single, one, "one-entry axis must match --platform exactly");
+    // worker counts must not move a byte of the cross-platform table
+    let jobs4 =
+        run(&["dse", d, "--factors", "2", "--platforms", "u280,generic-ddr", "--jobs", "4"]);
+    assert_eq!(multi, jobs4, "--jobs must not change the cross-platform table");
+}
+
+/// Bad `--platforms` values are loud, contextual errors: unknown names list
+/// the builtin registry, duplicates are rejected, and the flag is mutually
+/// exclusive with `--platform` and dead outside the searching commands.
+#[test]
+fn bad_platforms_flag_is_rejected_with_candidates() {
+    let dir = tmpdir("bad_platforms");
+    let design = write_design(&dir);
+    let d = design.to_str().unwrap();
+    let fail = |args: &[&str]| {
+        let out = olympus().args(args).output().unwrap();
+        assert!(!out.status.success(), "{args:?} must fail");
+        String::from_utf8_lossy(&out.stderr).to_string()
+    };
+    let s = fail(&["dse", d, "--platforms", "u280,nonesuch"]);
+    assert!(s.contains("u50"), "error lists the builtin registry: {s}");
+    let s = fail(&["dse", d, "--platforms", "u280,u280"]);
+    assert!(s.contains("more than once"), "{s}");
+    let s = fail(&["dse", d, "--platforms", ","]);
+    assert!(s.contains("--platforms"), "{s}");
+    let s = fail(&["dse", d, "--platform", "u280", "--platforms", "u280,generic-ddr"]);
+    assert!(s.contains("mutually exclusive"), "{s}");
+    // dead anywhere that does not search
+    let s = fail(&["opt", d, "--platforms", "u280,generic-ddr"]);
+    assert!(s.contains("--platforms"), "{s}");
+    let s = fail(&["des", d, "--pipeline", "sanitize", "--platforms", "u280,generic-ddr"]);
+    assert!(s.contains("--platforms"), "{s}");
+}
+
+/// Acceptance: served cross-platform results are bit-identical to the
+/// single-shot CLI, across cache temperatures and platform axes.
+#[test]
+fn serve_platform_axis_matches_single_shot_cli() {
+    use std::io::{BufRead, BufReader};
+    let dir = tmpdir("serve_platforms");
+    let design = write_design(&dir);
+    let d = design.to_str().unwrap();
+    let mut child = olympus()
+        .args(["serve", "--addr", "127.0.0.1:0", "--jobs", "2"])
+        .stdout(std::process::Stdio::piped())
+        .spawn()
+        .unwrap();
+    let mut first_line = String::new();
+    BufReader::new(child.stdout.as_mut().unwrap()).read_line(&mut first_line).unwrap();
+    let addr = first_line.trim().rsplit(' ').next().unwrap().to_string();
+
+    // single-shot CLI is the reference output
+    let local = olympus()
+        .args(["dse", d, "--factors", "2", "--platforms", "u280,generic-ddr"])
+        .output()
+        .unwrap();
+    assert!(local.status.success(), "{}", String::from_utf8_lossy(&local.stderr));
+    let local_out = String::from_utf8_lossy(&local.stdout).to_string();
+
+    let submit = || {
+        let out = olympus()
+            .args([
+                "submit",
+                d,
+                "--addr",
+                addr.as_str(),
+                "--factors",
+                "2",
+                "--platforms",
+                "u280,generic-ddr",
+            ])
+            .output()
+            .unwrap();
+        assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+        String::from_utf8_lossy(&out.stdout).to_string()
+    };
+    let cold = submit();
+    assert_eq!(cold, local_out, "served table must match the single-shot CLI");
+    let warm = submit();
+    assert_eq!(warm, cold, "cache temperature must not move a byte");
+
+    // a custom platform file cannot ride the axis over the wire
+    let out = olympus()
+        .args(["submit", d, "--addr", addr.as_str(), "--platforms", "u280,custom.json"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(
+        String::from_utf8_lossy(&out.stderr).contains("builtin"),
+        "{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+
+    child.kill().unwrap();
+    let _ = child.wait();
+}
+
 /// `des --trace` exports a Chrome trace-event JSON file (the Perfetto
 /// format): valid JSON, a non-empty `traceEvents` array, `pid`/`tid`/`ts`
 /// on every event, and — because the DES calendar dispatches in
