@@ -228,6 +228,16 @@ impl Flow {
         ])
     }
 
+    /// Content-addressed key of the *serving-layer response* for running
+    /// this flow on `input` under `verb` (`dse`/`des`/`flow`): the verb
+    /// folded over [`Flow::cache_key`]. This is the address the service's
+    /// response cache, disk journal, and shard router all agree on — the
+    /// bytes match the keys every journal written since v1 stores, so old
+    /// caches stay warm.
+    pub fn response_key(&self, verb: &str, input: &Module) -> ContentHash {
+        ContentHash::of_parts(&["olympus-serve-v1", verb, &self.cache_key(input).to_hex()])
+    }
+
     /// Run optimize -> analyze -> lower -> emit (-> simulate).
     pub fn run(&self, input: Module, app_name: &str) -> Result<FlowResult> {
         let mut module = input;
@@ -402,6 +412,21 @@ mod tests {
             .with_driver(DriverKind::SuccessiveHalving { budget: 3 })
             .cache_key(&m);
         assert_eq!(p1, p2);
+    }
+
+    #[test]
+    fn response_key_is_the_verb_folded_over_the_flow_key() {
+        // pinned: this exact composition is what every response journal on
+        // disk is keyed by — changing it cold-starts the world's caches
+        let m = fig4a_module();
+        let flow = Flow::new(builtin("u280").unwrap());
+        let manual = ContentHash::of_parts(&[
+            "olympus-serve-v1",
+            "dse",
+            &flow.cache_key(&m).to_hex(),
+        ]);
+        assert_eq!(flow.response_key("dse", &m), manual);
+        assert_ne!(flow.response_key("dse", &m), flow.response_key("des", &m));
     }
 
     #[test]

@@ -18,6 +18,8 @@
 //! olympus worker [--addr 127.0.0.1:7900] [--jobs N] [--cache-capacity N] [--cache-dir DIR]
 //! olympus submit <file.mlir> [--addr ...] [--cmd dse|des|flow] [--platform ...]
 //!               [--priority N] [--deadline-ms N] [...]
+//! olympus join  <worker host:port> [--addr coordinator]
+//! olympus leave <worker host:port> [--addr coordinator]
 //! olympus cache-stats [--addr ...]
 //! olympus stats [host:port] [--raw]
 //! ```
@@ -56,18 +58,22 @@
 //! evaluated work from the journal instead of recomputing it.
 //!
 //! `stats` queries a daemon's `metrics` verb and renders one fleet-wide
-//! table: the coordinator plus every remote worker it is configured with
-//! (`--raw` prints the aggregated JSON instead, for scripts and CI).
+//! table: the coordinator plus every remote worker it is configured with,
+//! including response-shard routing (`rshard`) and journal-gossip
+//! (`g_sent`/`g_recv`) columns (`--raw` prints the aggregated JSON
+//! instead, for scripts and CI).
 //! `des --trace FILE` additionally exports the DES timeline as Chrome
 //! trace-event JSON, viewable in Perfetto — see README "Observability".
 //!
 //! `worker` runs a remote evaluation daemon, and `serve --workers` turns a
-//! daemon into the coordinator of that fleet: each DSE candidate
-//! evaluation routes to the worker owning its consistent-hash key shard
-//! (answered from the worker's warm `--cache-dir` journal when possible),
-//! falling back to local evaluation when a worker is unreachable — see
-//! README "Distributed evaluation". (clap is not vendored in this offline
-//! build; argument parsing is hand-rolled.)
+//! daemon into the coordinator of that fleet: whole jobs route to the
+//! worker owning each response key's rendezvous-hash shard, DSE candidate
+//! evaluations route the same way one level down, and workers gossip their
+//! persisted journals to each other so a rebuilt worker re-warms from its
+//! neighbors. `join`/`leave` resize the fleet at runtime (re-rendezvoused
+//! shard map under a bumped epoch, no restart) — see README "Distributed
+//! evaluation" and PROTOCOL.md for the wire format. (clap is not vendored
+//! in this offline build; argument parsing is hand-rolled.)
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
@@ -180,7 +186,8 @@ fn load_module(path: &str) -> Result<Module> {
 
 fn usage() -> ! {
     eprintln!(
-        "usage: olympus <platforms|opt|dse|des|lower|run|serve|worker|submit|cache-stats|stats> \
+        "usage: olympus <platforms|opt|dse|des|lower|run|serve|worker|submit|join|leave|\
+         cache-stats|stats> \
          [input.mlir] [--platform NAME|file.json] [--platforms NAME,NAME,...] [--pipeline P] \
          [--objective analytic|des-score|slo-score] [--slo CLASS=p99<MS,...] \
          [--driver exhaustive|random|successive-halving|iterative] [--budget N] \
@@ -725,6 +732,27 @@ fn main() -> Result<()> {
             }
             Ok(())
         }
+        "join" | "leave" => {
+            reject_search_flags(&args, &format!("by '{cmd}'"))?;
+            let worker = args.positional.first().unwrap_or_else(|| usage());
+            let v = roundtrip(
+                &args,
+                Json::obj(vec![("cmd", cmd.as_str().into()), ("worker", worker.as_str().into())]),
+            )?;
+            let result = v.get("result");
+            let members: Vec<String> = result
+                .get("workers")
+                .as_arr()
+                .map(|ws| ws.iter().filter_map(|w| w.as_str().map(str::to_string)).collect())
+                .unwrap_or_default();
+            println!(
+                "{cmd} {worker}: shard map epoch {} over {} worker(s) [{}]",
+                result.get("epoch").as_u64().unwrap_or(0),
+                result.get("total").as_u64().unwrap_or(0),
+                members.join(", ")
+            );
+            Ok(())
+        }
         "cache-stats" => {
             reject_search_flags(&args, "by 'cache-stats'")?;
             let v = roundtrip(&args, Json::obj(vec![("cmd", "cache-stats".into())]))?;
@@ -810,9 +838,9 @@ fn run_stats(args: &Args) -> Result<()> {
         return Ok(());
     }
     println!(
-        "{:<28} {:>8} {:>7} {:>7} {:>7} {:>7} {:>9} {:>9} {:>9} {:>11} {:>6}",
-        "node", "uptime_s", "reqs", "local", "remote", "hits", "p50", "p95", "p99", "des ev/s",
-        "cal"
+        "{:<28} {:>8} {:>7} {:>7} {:>7} {:>7} {:>7} {:>7} {:>7} {:>9} {:>9} {:>9} {:>11} {:>6}",
+        "node", "uptime_s", "reqs", "local", "remote", "hits", "rshard", "g_sent", "g_recv",
+        "p50", "p95", "p99", "des ev/s", "cal"
     );
     print_stats_row(&format!("{addr} (coordinator)"), Some(&coord));
     for (w, m) in &workers {
@@ -843,9 +871,15 @@ fn print_stats_row(node: &str, m: Option<&Json>) {
     };
     let evs = m.get("des").get("last_events_per_sec").as_f64().unwrap_or(0.0);
     let cal = m.get("des").get("calendar").as_str().unwrap_or("-");
+    // response-shard routing lives on the coordinator's remote block and
+    // gossip on every node; both print "-" where they don't apply
+    let opt = |v: &Json| v.as_u64().map(|n| n.to_string()).unwrap_or_else(|| "-".to_string());
+    let rshard = opt(m.get("remote").get("resp_shard_hits"));
+    let gsent = opt(m.get("gossip").get("records_sent"));
+    let grecv = opt(m.get("gossip").get("records_received"));
     println!(
-        "{node:<28} {uptime_s:>8} {reqs:>7} {:>7} {:>7} {:>7} {:>9} {:>9} {:>9} {evs:>11.0} \
-         {cal:>6}",
+        "{node:<28} {uptime_s:>8} {reqs:>7} {:>7} {:>7} {:>7} {rshard:>7} {gsent:>7} \
+         {grecv:>7} {:>9} {:>9} {:>9} {evs:>11.0} {cal:>6}",
         count("eval_local"),
         count("eval_remote"),
         count("eval_cache_hit"),

@@ -231,6 +231,9 @@ pub struct Metrics {
     pub remote_rtt: Histogram,
     /// Disk journal open+replay time per journal.
     pub journal_replay: Histogram,
+    /// Peer-to-peer journal gossip: wall time of one pull round against one
+    /// peer (connect + `journal-pull` exchanges + warm inserts).
+    pub journal_gossip: Histogram,
     /// Calendar events dispatched across all DES runs.
     pub des_events: Counter,
     /// Wall nanoseconds spent inside the DES main loop.
@@ -259,6 +262,7 @@ impl Metrics {
             eval_cache_hit: Histogram::new(),
             remote_rtt: Histogram::new(),
             journal_replay: Histogram::new(),
+            journal_gossip: Histogram::new(),
             des_events: Counter::new(),
             des_wall_ns: Counter::new(),
             des_last_events_per_sec: Gauge::new(),
@@ -308,6 +312,7 @@ impl Metrics {
             ("eval_cache_hit".into(), self.eval_cache_hit.snapshot().to_json()),
             ("remote_rtt".into(), self.remote_rtt.snapshot().to_json()),
             ("journal_replay".into(), self.journal_replay.snapshot().to_json()),
+            ("journal_gossip".into(), self.journal_gossip.snapshot().to_json()),
         ];
         for (class, h) in self.class_queue_wait.lock().unwrap().iter() {
             rows.push((format!("queue_wait_{class}"), h.snapshot().to_json()));

@@ -1,0 +1,322 @@
+//! Peer-to-peer journal gossip: how a rebuilt or newly joined worker warms
+//! its response shard from neighbors instead of recomputing it.
+//!
+//! Every persisted response journal record (`responses.jrnl`) is also
+//! appended to an in-memory [`GossipLog`] — an append-only, deduplicated
+//! sequence of `(key, encoded-bytes)` pairs in journal order. Peers page
+//! through each other's logs with the `journal-pull` verb: a high-water
+//! `cursor` (index into the log) plus an optional `shard` filter for
+//! callers that only want the keys one shard owns under the current
+//! rendezvous map. The built-in pull loop deliberately does *not* filter —
+//! it mirrors the full log, so every worker converges on the union of the
+//! fleet's journals and any surviving neighbor can warm a replacement
+//! worker for *any* shard (a filter-to-own-shard loop would never move a
+//! record across shards, and a dead worker's keyspace would die with it).
+//! Because cursors are per-peer and monotone, a pull round is idempotent
+//! and cheap once caught up (one empty page per peer).
+//!
+//! Records travel as the *exact bytes* the disk journal stores
+//! ([`encode_served`](super::persist::encode_served) output), so a gossiped
+//! entry is bit-identical to one computed locally — the determinism
+//! contract ("same answer no matter which process computed it") survives
+//! replication. Received records are absorbed through the same
+//! `warm_insert` + journal-append path as disk replay, and re-offered to
+//! this worker's own log, so warmth spreads transitively through fleets
+//! that are not fully connected.
+//!
+//! The pull loop runs on one background thread per server
+//! ([`spawn_gossip_thread`]), started lazily when a handshake supplies a
+//! shard map with peer addresses. It holds only a [`Weak`] reference to the
+//! server state — upgraded per round, dropped before sleeping — so it never
+//! keeps a shut-down server (or its journal writer lock) alive.
+//! `cache-stats` surfaces progress as `gossip_records_sent` /
+//! `gossip_records_received`; round wall time lands in the
+//! `journal_gossip` histogram.
+
+use std::collections::{HashMap, HashSet};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, Weak};
+use std::time::{Duration, Instant};
+
+use crate::util::{ContentHash, Json};
+
+use super::remote::shard_of;
+use super::worker::ServiceState;
+
+/// Sleep between pull rounds. Short enough that a joining worker warms in
+/// well under a second on a LAN; long enough to stay invisible in profiles.
+pub const GOSSIP_ROUND_MS: u64 = 200;
+/// Records per `journal-pull` page. Bounds response lines well under the
+/// service's request cap even with large rendered reports in the values.
+pub const GOSSIP_PAGE_LIMIT: u64 = 64;
+
+const CONNECT_TIMEOUT: Duration = Duration::from_millis(500);
+const IO_TIMEOUT: Duration = Duration::from_secs(2);
+
+/// One page of a peer's log, as returned by [`GossipLog::page`].
+pub struct GossipPage {
+    /// Records in log order, filtered to the requested shard.
+    pub records: Vec<(ContentHash, Vec<u8>)>,
+    /// Cursor to resume from (records *scanned*, not returned — a filtered
+    /// page still advances past what it inspected).
+    pub next: u64,
+    /// Total log length, so pullers know when they are caught up.
+    pub total: u64,
+}
+
+#[derive(Default)]
+struct LogInner {
+    records: Vec<(ContentHash, Vec<u8>)>,
+    seen: HashSet<ContentHash>,
+}
+
+/// Append-only, deduplicated journal mirror served to peers.
+///
+/// Entries are `(response key, encoded Served bytes)` in the order this
+/// process first saw them (disk replay first, then live computes and
+/// absorbed gossip). Indices are stable forever — the log never compacts —
+/// which is what makes a plain integer cursor a correct high-water mark.
+#[derive(Default)]
+pub struct GossipLog {
+    inner: Mutex<LogInner>,
+    sent: AtomicU64,
+    received: AtomicU64,
+}
+
+impl GossipLog {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Append a record unless its key is already present. Returns whether
+    /// the record was new.
+    pub fn offer(&self, key: ContentHash, value: Vec<u8>) -> bool {
+        let mut inner = self.inner.lock().unwrap();
+        if !inner.seen.insert(key) {
+            return false;
+        }
+        inner.records.push((key, value));
+        true
+    }
+
+    pub fn len(&self) -> u64 {
+        self.inner.lock().unwrap().records.len() as u64
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Serve one page starting at `cursor`: scan up to `limit` records,
+    /// keep those owned by `shard` (all of them when `None`), and report
+    /// where the scan stopped so the caller can resume. Served records
+    /// count toward `gossip_records_sent`.
+    pub fn page(&self, cursor: u64, limit: u64, shard: Option<(u64, u64)>) -> GossipPage {
+        let inner = self.inner.lock().unwrap();
+        let total = inner.records.len() as u64;
+        let from = cursor.min(total) as usize;
+        let to = cursor.saturating_add(limit.max(1)).min(total) as usize;
+        let records: Vec<(ContentHash, Vec<u8>)> = inner.records[from..to]
+            .iter()
+            .filter(|(key, _)| match shard {
+                Some((index, total)) => shard_of(*key, total as usize) as u64 == index,
+                None => true,
+            })
+            .cloned()
+            .collect();
+        drop(inner);
+        self.sent.fetch_add(records.len() as u64, Ordering::Relaxed);
+        GossipPage { records, next: to as u64, total }
+    }
+
+    /// Count records absorbed from peers (called by the pull loop).
+    pub fn note_received(&self, n: u64) {
+        self.received.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn records_sent(&self) -> u64 {
+        self.sent.load(Ordering::Relaxed)
+    }
+
+    pub fn records_received(&self) -> u64 {
+        self.received.load(Ordering::Relaxed)
+    }
+}
+
+/// Start the background pull loop. Returns immediately; the thread exits on
+/// its own once `state` is dropped or the server begins shutdown.
+pub fn spawn_gossip_thread(state: Weak<ServiceState>) -> std::thread::JoinHandle<()> {
+    std::thread::Builder::new()
+        .name("olympus-gossip".into())
+        .spawn(move || pull_loop(state))
+        .expect("spawn gossip thread")
+}
+
+fn pull_loop(state: Weak<ServiceState>) {
+    // High-water cursor per peer address. A peer that restarts with an
+    // empty log answers `total < cursor`; the cursor resets on that signal.
+    let mut cursors: HashMap<String, u64> = HashMap::new();
+    loop {
+        {
+            let Some(st) = state.upgrade() else { break };
+            if st.stopping() {
+                break;
+            }
+            for peer in st.gossip_peers() {
+                pull_from_peer(&st, &peer, &mut cursors);
+            }
+        }
+        std::thread::sleep(Duration::from_millis(GOSSIP_ROUND_MS));
+    }
+}
+
+/// Page through one peer's log until caught up. Any transport or decode
+/// problem abandons this peer until the next round — gossip is best-effort
+/// by design; correctness never depends on it (a miss just recomputes).
+fn pull_from_peer(st: &ServiceState, peer: &str, cursors: &mut HashMap<String, u64>) {
+    let start = Instant::now();
+    let Some(mut conn) = connect(peer) else { return };
+    let mut absorbed = 0u64;
+    loop {
+        let cursor = cursors.get(peer).copied().unwrap_or(0);
+        let req = Json::obj(vec![
+            ("cmd", "journal-pull".into()),
+            ("cursor", cursor.into()),
+            ("limit", GOSSIP_PAGE_LIMIT.into()),
+        ]);
+        let Some(resp) = roundtrip(&mut conn, &req.to_string()) else { break };
+        if resp.get("ok").as_bool() != Some(true) {
+            break;
+        }
+        let result = resp.get("result");
+        let (Some(next), Some(total)) = (result.get("next").as_u64(), result.get("total").as_u64())
+        else {
+            break;
+        };
+        if let Some(records) = result.get("records").as_arr() {
+            for rec in records {
+                let Some(key) = rec.get("key").as_str().and_then(ContentHash::from_hex) else {
+                    continue;
+                };
+                let Some(value) = rec.get("value").as_str() else { continue };
+                if st.absorb_gossip_record(key, value.as_bytes()) {
+                    absorbed += 1;
+                }
+            }
+        }
+        // A shrunken log means the peer restarted: start over next round.
+        cursors.insert(peer.to_string(), if total < cursor { 0 } else { next });
+        if next >= total {
+            break;
+        }
+    }
+    if absorbed > 0 {
+        crate::obs::info(
+            "gossip-warmed",
+            &[("peer", peer.into()), ("records", absorbed.into())],
+        );
+    }
+    crate::obs::metrics().journal_gossip.record_duration(start.elapsed());
+}
+
+struct Conn {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+fn connect(addr: &str) -> Option<Conn> {
+    let sock = addr.to_socket_addrs().ok()?.next()?;
+    let stream = TcpStream::connect_timeout(&sock, CONNECT_TIMEOUT).ok()?;
+    stream.set_nodelay(true).ok()?;
+    stream.set_read_timeout(Some(IO_TIMEOUT)).ok()?;
+    stream.set_write_timeout(Some(IO_TIMEOUT)).ok()?;
+    let writer = stream.try_clone().ok()?;
+    Some(Conn { reader: BufReader::new(stream), writer })
+}
+
+fn roundtrip(conn: &mut Conn, line: &str) -> Option<Json> {
+    conn.writer.write_all(line.as_bytes()).ok()?;
+    conn.writer.write_all(b"\n").ok()?;
+    conn.writer.flush().ok()?;
+    let mut reply = String::new();
+    let n = conn.reader.read_line(&mut reply).ok()?;
+    if n == 0 {
+        return None;
+    }
+    Json::parse(reply.trim_end()).ok()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(n: u64) -> ContentHash {
+        ContentHash::of_parts(&["gossip-test", &n.to_string()])
+    }
+
+    #[test]
+    fn offer_dedupes_by_key_and_preserves_order() {
+        let log = GossipLog::new();
+        assert!(log.offer(key(1), b"a".to_vec()));
+        assert!(log.offer(key(2), b"b".to_vec()));
+        assert!(!log.offer(key(1), b"other".to_vec()), "duplicate key must be rejected");
+        assert_eq!(log.len(), 2);
+        let page = log.page(0, 10, None);
+        assert_eq!(page.records[0], (key(1), b"a".to_vec()));
+        assert_eq!(page.records[1], (key(2), b"b".to_vec()));
+        assert_eq!((page.next, page.total), (2, 2));
+    }
+
+    #[test]
+    fn page_cursor_windows_the_log() {
+        let log = GossipLog::new();
+        for n in 0..5 {
+            log.offer(key(n), vec![n as u8]);
+        }
+        let first = log.page(0, 2, None);
+        assert_eq!(first.records.len(), 2);
+        assert_eq!((first.next, first.total), (2, 5));
+        let second = log.page(first.next, 2, None);
+        assert_eq!(second.records.len(), 2);
+        assert_eq!(second.next, 4);
+        let last = log.page(second.next, 2, None);
+        assert_eq!(last.records.len(), 1);
+        assert_eq!((last.next, last.total), (5, 5));
+        // Caught up: an empty page that does not advance.
+        let done = log.page(last.next, 2, None);
+        assert!(done.records.is_empty());
+        assert_eq!(done.next, 5);
+    }
+
+    #[test]
+    fn shard_filter_partitions_without_loss() {
+        let log = GossipLog::new();
+        for n in 0..32 {
+            log.offer(key(n), vec![n as u8]);
+        }
+        let a = log.page(0, 100, Some((0, 2)));
+        let b = log.page(0, 100, Some((1, 2)));
+        assert_eq!(a.records.len() + b.records.len(), 32, "shards must partition the log");
+        assert!(!a.records.is_empty() && !b.records.is_empty(), "32 keys should hit both shards");
+        // The filtered page still advances the cursor past everything scanned.
+        assert_eq!(a.next, 32);
+        for (k, _) in &a.records {
+            assert_eq!(shard_of(*k, 2), 0);
+        }
+    }
+
+    #[test]
+    fn sent_counter_tracks_served_records() {
+        let log = GossipLog::new();
+        for n in 0..4 {
+            log.offer(key(n), vec![]);
+        }
+        assert_eq!(log.records_sent(), 0);
+        let page = log.page(0, 10, None);
+        assert_eq!(log.records_sent(), page.records.len() as u64);
+        log.note_received(3);
+        assert_eq!(log.records_received(), 3);
+    }
+}

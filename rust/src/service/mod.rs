@@ -23,10 +23,17 @@
 //! * **[`worker`]** — request execution through a two-level memo (whole
 //!   responses + individual DSE candidates);
 //! * **[`remote`]** — horizontal scale-out: `olympus worker` daemons each
-//!   own a consistent-hash shard of the candidate key space, and a
-//!   coordinator started with `--workers host:port,...` routes every
-//!   candidate evaluation to its shard owner (warm journals answer without
-//!   recomputing), failing over to local evaluation when a worker dies.
+//!   own a rendezvous-hash shard of *both* content-addressed key spaces.
+//!   A coordinator started with `--workers host:port,...` routes every
+//!   candidate evaluation — and every whole client-facing job, by response
+//!   key — to its shard owner (warm journals answer without recomputing),
+//!   failing over to local evaluation when a worker dies. The fleet is
+//!   elastic: `join`/`leave` re-rendezvous the shard map at runtime under a
+//!   bumped membership epoch, no restart;
+//! * **[`gossip`]** — peer-to-peer journal replication: workers page each
+//!   other's persisted response records over `journal-pull`, so a rebuilt
+//!   or newly joined worker warms its shard from neighbors instead of
+//!   recomputing it.
 //!
 //! Determinism contract: a served result is bit-identical to the single-shot
 //! CLI output for the same inputs, whether it was computed cold, served
@@ -37,6 +44,7 @@
 //! live.) `rust/tests/service.rs` pins this.
 
 pub mod cache;
+pub mod gossip;
 pub mod persist;
 pub mod proto;
 pub mod queue;
@@ -44,13 +52,15 @@ pub mod remote;
 pub mod worker;
 
 pub use cache::{CacheStats, EvalCache};
+pub use gossip::GossipLog;
 pub use persist::{DiskStats, DiskStore};
 pub use proto::{
-    error_response, ok_response, parse_request, Command, ProtoError, Request, PROTO_VERSION,
+    encode_request, error_response, ok_response, parse_request, Command, ProtoError, Request,
+    CAPABILITIES, PROTO_VERSION,
 };
 pub use queue::JobQueue;
-pub use remote::{shard_of, RemoteEvaluator, RemoteStats, WorkerPool};
-pub use worker::{execute_request, Job, Served, ServiceState};
+pub use remote::{shard_of, shard_of_hex, RemoteEvaluator, RemoteStats, WorkerPool};
+pub use worker::{execute_request, Job, Served, ServiceState, ShardInfo};
 
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
@@ -129,6 +139,9 @@ impl Server {
             state.remote = Some(Arc::new(remote::WorkerPool::connect(&opts.remote_workers)?));
         }
         let state = Arc::new(state);
+        // background threads (gossip) hold a Weak reference to the state,
+        // registered here so they can never outlive the server
+        state.set_self();
         crate::obs::info(
             "service-start",
             &[
@@ -195,6 +208,7 @@ impl Server {
     /// jobs, join everything.
     pub fn shutdown(mut self) {
         self.stop.store(true, Ordering::SeqCst);
+        self.state.request_stop();
         self.queue.close();
         let _ = TcpStream::connect(self.addr); // unblock accept()
         self.join();
@@ -214,6 +228,7 @@ impl Drop for Server {
     fn drop(&mut self) {
         // belt-and-braces for tests that panic before shutdown()
         self.stop.store(true, Ordering::SeqCst);
+        self.state.request_stop();
         self.queue.close();
         let _ = TcpStream::connect(self.addr);
         self.join();
@@ -314,7 +329,7 @@ fn handle_conn(
                 let (tx, rx) = mpsc::channel();
                 // requests carrying `priority` jump ahead of lower-priority
                 // queued jobs; absent = 0, the back of the line
-                let prio = req.priority.unwrap_or(0).min(u32::MAX as u64) as u32;
+                let prio = req.common.priority.unwrap_or(0).min(u32::MAX as u64) as u32;
                 let job = Job { req, reply: tx, enqueued: std::time::Instant::now() };
                 if queue.push_prio(job, prio) {
                     match rx.recv() {
@@ -339,6 +354,7 @@ fn handle_conn(
         }
         if shutdown_after_reply {
             stop.store(true, Ordering::SeqCst);
+            state.request_stop();
             queue.close();
             let _ = TcpStream::connect(server_addr); // unblock accept()
             break;

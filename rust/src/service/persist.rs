@@ -484,13 +484,16 @@ fn write_compacted(path: &Path, entries: &[(ContentHash, Vec<u8>)]) -> Result<()
 /// decodable record seeds the in-memory tier, every fresh computation
 /// writes through. `encode` may decline (`None`) values that must not
 /// outlive the process; `decode` failures are counted as corrupt-skipped.
+/// Also returns the accepted raw records, in journal order, so a caller
+/// can seed a secondary index over the same bytes — the journal gossip
+/// log ([`crate::service::gossip`]) serves exactly these records to peers.
 pub fn open_persistent_cache<V, E, D>(
     path: &Path,
     capacity: usize,
     sync_every_append: bool,
     encode: E,
     decode: D,
-) -> Result<(EvalCache<V>, Arc<DiskStore>)>
+) -> Result<(EvalCache<V>, Arc<DiskStore>, Vec<(ContentHash, Vec<u8>)>)>
 where
     V: Clone,
     E: Fn(&V) -> Option<Vec<u8>> + Send + Sync + 'static,
@@ -500,16 +503,18 @@ where
     let store = Arc::new(store);
     let mut cache = EvalCache::with_capacity(capacity);
     cache.persist_to(store.clone(), encode);
+    let mut accepted = Vec::with_capacity(entries.len());
     for (key, bytes) in entries {
         match decode(&bytes) {
             Some(v) => {
                 cache.warm_insert(key, v);
                 store.note_loaded();
+                accepted.push((key, bytes));
             }
             None => store.note_corrupt(),
         }
     }
-    Ok((cache, store))
+    Ok((cache, store, accepted))
 }
 
 /// Serialize a [`Served`] response for the disk tier. The stored `Json` is
@@ -550,7 +555,7 @@ pub fn open_candidate_cache(
     dir: &Path,
     capacity: usize,
 ) -> Result<(Arc<CandidateCache>, Arc<DiskStore>)> {
-    let (cache, store) = open_persistent_cache(
+    let (cache, store, _) = open_persistent_cache(
         &dir.join(CANDIDATES_JOURNAL),
         capacity,
         false,
@@ -810,13 +815,16 @@ mod tests {
             )
             .unwrap()
         };
-        let (cache, store) = open();
+        let (cache, store, entries) = open();
+        assert!(entries.is_empty());
         cache.get_or_compute(key(1), || 7);
         cache.get_or_compute(key(2), || -1); // declined by the encoder
         assert_eq!(store.stats().persisted, 1);
         drop((cache, store));
-        let (cache, store) = open();
+        let (cache, store, entries) = open();
         assert_eq!(store.stats().loaded, 1);
+        // the accepted raw records come back for secondary indexes
+        assert_eq!(entries, vec![(key(1), 7i64.to_le_bytes().to_vec())]);
         let (v, cached) = cache.get_or_compute(key(1), || panic!("warm"));
         assert_eq!((v, cached), (7, true));
         // the declined key recomputes after a restart, as intended

@@ -8,89 +8,93 @@
 //! with a `too-large` error; the server drains (never buffers) the rest of
 //! the oversized line and the connection stays open.
 //!
+//! Every request decodes through one typed envelope:
+//! [`Request`]`{ cmd, id, common, verb }`. `cmd` selects the verb, `id`
+//! (any JSON value) is echoed back, [`CommonOpts`] carries the fields every
+//! verb accepts (`priority`, `deadline_ms`), and [`VerbPayload`] holds the
+//! verb-specific fields. A known verb with an *unknown* field is a
+//! structured `bad-request` naming the field (`error.detail.field`) — never
+//! silently ignored. The full field tables, defaults and error codes live
+//! in `PROTOCOL.md` at the repo root.
+//!
 //! Requests:
 //!
 //! ```json
 //! {"cmd": "dse",  "ir": "<mlir>", "platform": "u280", "objective": "des-score",
 //!  "scenario": "closed:4", "seed": 42, "factors": [2, 4],
 //!  "driver": "successive-halving", "budget": 3, "id": 1}
-//! {"cmd": "dse",  "ir": "<mlir>", "objective": "slo-score",
-//!  "slo": "interactive=p99<5", "autoscale": "0.001:256:16:1:4",
-//!  "scenario_json": {"name": "trace-3job-...", "arrivals": {...}},
-//!  "priority": 2, "deadline_ms": 5000}
-//! {"cmd": "dse",  "ir": "<mlir>", "platforms": ["u280", "generic-ddr"], "factors": [2]}
 //! {"cmd": "des",  "ir": "<mlir>", "pipeline": "sanitize, iris, channel-reassign",
 //!  "scenario": "poisson:1000:20", "seed": 7}
 //! {"cmd": "flow", "ir": "<mlir>", "platform": "u280"}
-//! {"cmd": "handshake", "proto_version": 2,
-//!  "shard_map": {"index": 0, "total": 2, "workers": ["h1:7900", "h2:7900"]}}
+//! {"cmd": "handshake", "proto_version": 3, "capabilities": ["journal-gossip"],
+//!  "shard_map": {"index": 0, "total": 2, "epoch": 4,
+//!                "workers": ["h1:7900", "h2:7900"]}}
 //! {"cmd": "eval-candidate", "ir": "<mlir>", "platform_json": {...},
 //!  "objective_json": {"kind": "analytic"}, "point_label": "full(x4)",
 //!  "point_pipeline": "sanitize, ...", "key": "<32-hex>"}
+//! {"cmd": "eval-response", "job_cmd": "dse", "ir": "<mlir>", "seed": 42,
+//!  "key": "<32-hex>"}
+//! {"cmd": "journal-pull", "cursor": 0, "limit": 64}
+//! {"cmd": "join",  "worker": "h3:7900"}
+//! {"cmd": "leave", "worker": "h2:7900"}
 //! {"cmd": "cache-stats"}
 //! {"cmd": "ping"}
 //! {"cmd": "shutdown"}
 //! ```
 //!
-//! `handshake` and `eval-candidate` are the distributed-evaluation verbs
-//! (see [`crate::service::remote`]): a coordinator handshakes each
-//! `olympus worker` with the protocol version and the worker's shard of
-//! the consistent-hash key space, then routes individual candidate
-//! evaluations to the shard owner. A version mismatch is a structured
-//! `proto-mismatch` error; a malformed or truncated shard map is a
-//! structured `bad-request` — never a dropped connection. `eval-candidate`
-//! carries the full inline platform/objective specs (not names), so the
-//! worker recomputes the same content-addressed candidate key and
-//! cross-checks it against `key` (`key-mismatch` on skew).
+//! The distributed verbs (see [`crate::service::remote`] and
+//! [`crate::service::gossip`]):
 //!
-//! `platform` is a builtin name; `platform_json` may carry a full inline
-//! platform spec object instead. `platforms` (an array of two or more
-//! builtin names, e.g. `["u280", "generic-ddr"]`) makes the platform a
-//! search axis for `dse`/`des`: every strategy is scored on every listed
-//! platform and the flow lowers onto the winner; it is mutually exclusive
-//! with `platform`/`platform_json` and with an explicit `pipeline`, and
-//! entries must be builtin names (custom boards submit a single
-//! `platform_json`). `id` (any JSON value) is echoed back.
-//! `driver` selects the search policy (`exhaustive` default | `random` |
-//! `successive-halving` | `iterative`) with `budget` / `search_seed` as its
-//! knobs; driver and budget are part of the response cache key, so a
-//! budgeted search never shares an address with an exhaustive one.
-//! `factors` must be a non-empty array of integers >= 1 when present; it is
-//! normalized (sorted, deduplicated) before evaluation and cache keying.
-//!
-//! Traffic fields: `scenario_json` carries a full inline scenario
-//! ([`crate::des::WorkloadScenario::to_json`]) — the way `submit` ships a
-//! local `trace:<file>` to a daemon that cannot see the file; it overrides
-//! `scenario`. `slo` (an SLO spec, job commands) selects the `slo-score`
-//! objective's targets; `autoscale` (a policy spec) turns on elastic
-//! replicas inside the DES. `priority` (integer, default 0) orders the
-//! request in the serve queue ahead of lower-priority jobs; `deadline_ms`
-//! sheds it with a `deadline-expired` error if it is still queued when the
-//! deadline lapses. Per-priority queue-wait histograms land in the
-//! `metrics` verb (`olympus stats --raw`).
+//! * `handshake` — a coordinator announces the protocol version, its
+//!   capability list and the worker's shard of the rendezvous-hash key
+//!   space (with the membership `epoch` so stale maps are recognizable). A
+//!   version mismatch is a structured `proto-mismatch` error; a malformed
+//!   shard map is a structured `bad-request` — never a dropped connection.
+//! * `eval-candidate` — evaluate one DSE candidate, answered through the
+//!   worker's candidate cache. Carries full inline platform/objective specs
+//!   (not names) so the worker recomputes the same content-addressed key
+//!   and cross-checks it against `key` (`key-mismatch` on skew).
+//! * `eval-response` — evaluate one *whole* job (`job_cmd` = dse|des|flow,
+//!   plus the job's own fields) on the worker owning the response key's
+//!   shard, answered through the worker's response cache. The worker
+//!   re-derives the response key and cross-checks it against `key`.
+//! * `journal-pull` — page persisted journal records out of a peer worker
+//!   (`cursor` high-water mark, `limit` page size, optional `shard` filter)
+//!   so a rebuilt or newly joined worker warms its shard from neighbors
+//!   instead of recomputing.
+//! * `join` / `leave` — coordinator-side membership edits: add or remove a
+//!   worker at runtime and re-rendezvous the shard map under a bumped
+//!   epoch, no restart.
 //!
 //! Responses: `{"ok": true, "id": ..., "cached": bool, "key": "<32-hex>",
 //! "result": {...}}` — `key` is the content-address of the evaluation
 //! (stable across servers), `cached` whether this answer skipped
-//! evaluation (including answers replayed from a `--cache-dir` journal by
-//! a restarted daemon). `cache-stats` reports, per cache tier, the memory
-//! counters (`entries`/`hits`/`misses`/`coalesced`/`evicted`) plus the
-//! disk-tier counters `disk_loaded` (journal records decoded at startup),
-//! `disk_persisted` (records written through by this process) and
-//! `disk_corrupt_skipped` (torn or undecodable records dropped).
+//! evaluation. Every failure, on every path, is
+//! `{"ok": false, "id": ..., "error": {"code", "message", "id"?,
+//! "detail"?}}` — one shape for parse errors, executor errors, version
+//! skew, oversize lines and drain-time teardowns alike.
 
 use crate::util::Json;
 
 /// Version of the distributed-evaluation protocol. A coordinator announces
 /// it in every `handshake`; a worker built from a different version answers
 /// `proto-mismatch` instead of silently computing keys the coordinator
-/// would disagree with. Bump whenever the handshake, the `eval-candidate`
-/// fields, or any wire codec they carry changes shape.
+/// would disagree with. Bump whenever the handshake, the `eval-*` fields,
+/// or any wire codec they carry changes shape.
 ///
 /// v2: traffic fields (`scenario_json`, `slo`, `autoscale`, `priority`,
 /// `deadline_ms`), the `slo-score` objective and the trace/diurnal
 /// scenario codecs.
-pub const PROTO_VERSION: u64 = 2;
+///
+/// v3: the typed request envelope (unknown fields rejected), the unified
+/// error shape, capability + epoch handshake, and the `eval-response` /
+/// `journal-pull` / `join` / `leave` verbs.
+pub const PROTO_VERSION: u64 = 3;
+
+/// What this build of the service can do, exchanged in `handshake` so
+/// mixed-version fleets can see at a glance which peers support which
+/// distributed features.
+pub const CAPABILITIES: &[&str] = &["response-shard", "journal-gossip", "elastic-membership"];
 
 /// What a request asks the service to do.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -101,11 +105,20 @@ pub enum Command {
     Des,
     /// Full flow report (analyses + architecture + emission summary).
     Flow,
-    /// Coordinator -> worker: version check + shard assignment.
+    /// Coordinator -> worker: version/capability check + shard assignment.
     Handshake,
     /// Coordinator -> worker: evaluate one DSE candidate, answered through
     /// the worker's candidate cache (memory + `--cache-dir` journal).
     EvalCandidate,
+    /// Coordinator -> worker: evaluate one whole job on its response-key
+    /// shard owner, answered through the worker's response cache.
+    EvalResponse,
+    /// Worker -> worker: page journal records out of a peer (gossip).
+    JournalPull,
+    /// Add a worker to the fleet at runtime (coordinator only).
+    Join,
+    /// Remove a worker from the fleet at runtime (coordinator only).
+    Leave,
     /// Evaluation-cache counters.
     CacheStats,
     /// Observability snapshot: per-verb request counters, latency
@@ -125,6 +138,10 @@ impl Command {
             "flow" => Some(Command::Flow),
             "handshake" => Some(Command::Handshake),
             "eval-candidate" => Some(Command::EvalCandidate),
+            "eval-response" => Some(Command::EvalResponse),
+            "journal-pull" => Some(Command::JournalPull),
+            "join" => Some(Command::Join),
+            "leave" => Some(Command::Leave),
             "cache-stats" => Some(Command::CacheStats),
             "metrics" => Some(Command::Metrics),
             "ping" => Some(Command::Ping),
@@ -140,6 +157,10 @@ impl Command {
             Command::Flow => "flow",
             Command::Handshake => "handshake",
             Command::EvalCandidate => "eval-candidate",
+            Command::EvalResponse => "eval-response",
+            Command::JournalPull => "journal-pull",
+            Command::Join => "join",
+            Command::Leave => "leave",
             Command::CacheStats => "cache-stats",
             Command::Metrics => "metrics",
             Command::Ping => "ping",
@@ -150,18 +171,34 @@ impl Command {
     /// Does this command evaluate a design (and therefore go through the
     /// job queue + cache)?
     pub fn is_job(self) -> bool {
-        matches!(self, Command::Dse | Command::Des | Command::Flow | Command::EvalCandidate)
+        matches!(
+            self,
+            Command::Dse
+                | Command::Des
+                | Command::Flow
+                | Command::EvalCandidate
+                | Command::EvalResponse
+        )
     }
 }
 
-/// A parsed request.
-#[derive(Debug, Clone)]
-pub struct Request {
-    pub cmd: Command,
-    /// Echoed verbatim in the response (`Json::Null` when absent).
-    pub id: Json,
-    /// Olympus MLIR text (required for job commands).
-    pub ir: Option<String>,
+/// Fields every verb accepts (the queue knobs; no-ops for inline verbs).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct CommonOpts {
+    /// Serve-queue priority of this request (default 0; higher jumps
+    /// ahead of lower-priority queued jobs).
+    pub priority: Option<u64>,
+    /// Queue deadline, ms: a job still waiting when it lapses is answered
+    /// with a `deadline-expired` error instead of evaluated.
+    pub deadline_ms: Option<u64>,
+}
+
+/// The fields of a whole evaluation job (`dse` / `des` / `flow`, and the
+/// job carried inside an `eval-response`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobPayload {
+    /// Olympus MLIR text (required).
+    pub ir: String,
     /// Builtin platform name (default "u280").
     pub platform: Option<String>,
     /// Full inline platform spec (overrides `platform`).
@@ -188,12 +225,6 @@ pub struct Request {
     /// Autoscale policy spec (`INTERVAL_S:UP:DOWN:MIN:MAX`) enabling
     /// elastic replicas inside the DES.
     pub autoscale: Option<String>,
-    /// Serve-queue priority of this request (default 0; higher jumps
-    /// ahead of lower-priority queued jobs).
-    pub priority: Option<u64>,
-    /// Queue deadline, ms: a job still waiting when it lapses is answered
-    /// with a `deadline-expired` error instead of evaluated.
-    pub deadline_ms: Option<u64>,
     /// DES seed (engine default when absent).
     pub seed: Option<u64>,
     /// Replication factors for DSE (absent = defaults). Normalized (sorted,
@@ -205,112 +236,224 @@ pub struct Request {
     pub budget: Option<u64>,
     /// Sampling seed for the `random` driver.
     pub search_seed: Option<u64>,
-    /// Distributed-protocol version announced by a `handshake`.
-    pub proto_version: Option<u64>,
-    /// Raw shard-map object of a `handshake` (validated by the executor so
-    /// malformed maps answer structured errors, not parse panics).
-    pub shard_map: Option<Json>,
-    /// Expected candidate key (32 hex digits) of an `eval-candidate`; the
-    /// worker cross-checks it against the key it derives itself.
-    pub key: Option<String>,
-    /// Decision-table label of an `eval-candidate` point.
-    pub point_label: Option<String>,
-    /// Pass pipeline (or iterative tag) of an `eval-candidate` point.
-    pub point_pipeline: Option<String>,
-    /// Full objective spec of an `eval-candidate`
-    /// ([`crate::passes::objective_to_json`]).
+}
+
+/// Fields of an `eval-candidate` request.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EvalCandidatePayload {
+    /// Olympus MLIR text (required).
+    pub ir: String,
+    /// Builtin platform name (default "u280").
+    pub platform: Option<String>,
+    /// Full inline platform spec (overrides `platform`).
+    pub platform_json: Option<Json>,
+    /// Full objective spec ([`crate::passes::objective_to_json`]).
     pub objective_json: Option<Json>,
+    /// Expected candidate key (32 hex digits); the worker cross-checks it
+    /// against the key it derives itself (`key-mismatch` on skew).
+    pub key: Option<String>,
+    /// Decision-table label of the point.
+    pub point_label: Option<String>,
+    /// Pass pipeline (or iterative tag) of the point (required).
+    pub point_pipeline: String,
+}
+
+/// Fields of an `eval-response` request: one whole job routed to the
+/// response-key shard owner.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EvalResponsePayload {
+    /// The verb this job answers (`dse` | `des` | `flow`); enters the
+    /// response cache key exactly as the client-facing verb would.
+    pub job_cmd: Command,
+    /// Expected response key (32 hex digits); the worker cross-checks it
+    /// against the key it derives itself (`key-mismatch` on skew).
+    pub key: Option<String>,
+    /// The job itself (same fields as a direct `dse`/`des`/`flow`).
+    pub job: JobPayload,
+}
+
+/// Fields of a `handshake` request.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HandshakePayload {
+    /// Distributed-protocol version announced by the coordinator
+    /// (executor-required so the mismatch answer can be structured).
+    pub proto_version: Option<u64>,
+    /// Raw shard-map object (validated by the executor so malformed maps
+    /// answer structured errors, not parse panics).
+    pub shard_map: Option<Json>,
+    /// Capability list of the announcing peer (see [`CAPABILITIES`]).
+    pub capabilities: Option<Vec<String>>,
+}
+
+/// Fields of a `journal-pull` request.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JournalPullPayload {
+    /// High-water mark: first journal record index not yet seen (default 0).
+    pub cursor: u64,
+    /// Max records scanned per page (default 64, clamped by the server).
+    pub limit: Option<u64>,
+    /// Optional `(index, total)` rendezvous filter: only records whose key
+    /// hashes to this shard are returned (full replication omits it).
+    pub shard: Option<(u64, u64)>,
+}
+
+/// Fields of a `join` / `leave` membership edit.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MembershipPayload {
+    /// `host:port` of the worker to add or remove.
+    pub worker: String,
+}
+
+/// The verb-specific half of a [`Request`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum VerbPayload {
+    /// `dse` / `des` / `flow`.
+    Job(JobPayload),
+    /// `eval-candidate`.
+    EvalCandidate(EvalCandidatePayload),
+    /// `eval-response`.
+    EvalResponse(EvalResponsePayload),
+    /// `handshake`.
+    Handshake(HandshakePayload),
+    /// `journal-pull`.
+    JournalPull(JournalPullPayload),
+    /// `join` / `leave`.
+    Membership(MembershipPayload),
+    /// `cache-stats` / `metrics` / `ping` / `shutdown` (no payload).
+    Control,
+}
+
+/// A parsed request: one envelope for every verb.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Request {
+    pub cmd: Command,
+    /// Echoed verbatim in the response (`Json::Null` when absent).
+    pub id: Json,
+    /// Fields accepted on every verb.
+    pub common: CommonOpts,
+    /// The verb-specific payload.
+    pub verb: VerbPayload,
+}
+
+impl Request {
+    /// The job carried by this request: a direct `dse`/`des`/`flow`, or
+    /// the inner job of an `eval-response`.
+    pub fn job(&self) -> Option<&JobPayload> {
+        match &self.verb {
+            VerbPayload::Job(j) => Some(j),
+            VerbPayload::EvalResponse(r) => Some(&r.job),
+            _ => None,
+        }
+    }
 }
 
 /// A protocol-level failure: structured error code + message, with the
-/// request id when one was recoverable from the line.
+/// request id when one was recoverable from the line and optional
+/// machine-readable detail (e.g. the offending field name).
 #[derive(Debug, Clone)]
 pub struct ProtoError {
     pub id: Json,
     pub code: &'static str,
     pub message: String,
+    pub detail: Option<Json>,
 }
 
 impl ProtoError {
     pub fn new(code: &'static str, message: impl Into<String>) -> ProtoError {
-        ProtoError { id: Json::Null, code, message: message.into() }
+        ProtoError { id: Json::Null, code, message: message.into(), detail: None }
     }
 
-    fn with_id(mut self, id: Json) -> ProtoError {
+    pub fn with_id(mut self, id: Json) -> ProtoError {
         self.id = id;
+        self
+    }
+
+    pub fn with_detail(mut self, detail: Json) -> ProtoError {
+        self.detail = Some(detail);
         self
     }
 }
 
-/// Parse one request line. Never panics on hostile input; every failure
-/// mode maps to a [`ProtoError`] the caller turns into an error response.
-pub fn parse_request(line: &str) -> Result<Request, ProtoError> {
-    let v = Json::parse(line)
-        .map_err(|e| ProtoError::new("bad-json", format!("request is not valid JSON: {e}")))?;
-    if v.as_obj().is_none() {
-        return Err(ProtoError::new("bad-request", "request must be a JSON object"));
+/// Fields accepted on *every* verb (the [`CommonOpts`] knobs + framing).
+const COMMON_FIELDS: &[&str] = &["cmd", "id", "priority", "deadline_ms"];
+/// Fields of a whole evaluation job ([`JobPayload`]).
+const JOB_FIELDS: &[&str] = &[
+    "ir",
+    "platform",
+    "platform_json",
+    "platforms",
+    "pipeline",
+    "objective",
+    "scenario",
+    "scenario_json",
+    "slo",
+    "autoscale",
+    "seed",
+    "factors",
+    "driver",
+    "budget",
+    "search_seed",
+];
+const EVAL_RESPONSE_FIELDS: &[&str] = &["job_cmd", "key"];
+const EVAL_CANDIDATE_FIELDS: &[&str] =
+    &["ir", "platform", "platform_json", "objective_json", "key", "point_label", "point_pipeline"];
+const HANDSHAKE_FIELDS: &[&str] = &["proto_version", "shard_map", "capabilities"];
+const JOURNAL_PULL_FIELDS: &[&str] = &["cursor", "limit", "shard"];
+const MEMBERSHIP_FIELDS: &[&str] = &["worker"];
+
+/// The verb-specific fields `cmd` accepts (on top of [`COMMON_FIELDS`]).
+/// `eval-response` additionally accepts every job field.
+fn verb_fields(cmd: Command) -> &'static [&'static str] {
+    match cmd {
+        Command::Dse | Command::Des | Command::Flow => JOB_FIELDS,
+        Command::EvalCandidate => EVAL_CANDIDATE_FIELDS,
+        Command::EvalResponse => EVAL_RESPONSE_FIELDS,
+        Command::Handshake => HANDSHAKE_FIELDS,
+        Command::JournalPull => JOURNAL_PULL_FIELDS,
+        Command::Join | Command::Leave => MEMBERSHIP_FIELDS,
+        Command::CacheStats | Command::Metrics | Command::Ping | Command::Shutdown => &[],
     }
-    let id = v.get("id").clone();
-    let cmd_str = v
-        .get("cmd")
-        .as_str()
-        .ok_or_else(|| {
-            ProtoError::new("bad-request", "missing string field 'cmd'").with_id(id.clone())
-        })?;
-    let cmd = Command::parse(cmd_str).ok_or_else(|| {
-        ProtoError::new(
-            "bad-request",
-            format!(
-                "unknown cmd '{cmd_str}' (want dse|des|flow|handshake|eval-candidate|\
-                 cache-stats|metrics|ping|shutdown)"
-            ),
-        )
-        .with_id(id.clone())
-    })?;
-    let opt_str = |k: &str| v.get(k).as_str().map(|s| s.to_string());
-    let ir = opt_str("ir");
-    if cmd.is_job() && ir.is_none() {
-        return Err(ProtoError::new(
-            "bad-request",
-            format!("cmd '{cmd_str}' requires string field 'ir'"),
-        )
-        .with_id(id));
+}
+
+fn uint_field(v: &Json, k: &'static str, id: &Json) -> Result<Option<u64>, ProtoError> {
+    match v.get(k) {
+        Json::Null => Ok(None),
+        j => j
+            .as_f64()
+            .filter(|n| *n >= 0.0 && n.fract() == 0.0)
+            .map(|n| Some(n as u64))
+            .ok_or_else(|| {
+                ProtoError::new("bad-request", format!("'{k}' must be a non-negative integer"))
+                    .with_id(id.clone())
+            }),
     }
-    // non-negative integer fields share one parser ('seed', 'budget', ...)
-    let uint_field = |k: &'static str| -> Result<Option<u64>, ProtoError> {
-        match v.get(k) {
-            Json::Null => Ok(None),
-            j => j
-                .as_f64()
-                .filter(|n| *n >= 0.0 && n.fract() == 0.0)
-                .map(|n| Some(n as u64))
-                .ok_or_else(|| {
-                    ProtoError::new("bad-request", format!("'{k}' must be a non-negative integer"))
-                        .with_id(id.clone())
-                }),
-        }
-    };
-    let seed = uint_field("seed")?;
-    let budget = uint_field("budget")?;
-    let search_seed = uint_field("search_seed")?;
-    let proto_version = uint_field("proto_version")?;
-    let priority = uint_field("priority")?;
-    let deadline_ms = uint_field("deadline_ms")?;
-    if cmd == Command::EvalCandidate && v.get("point_pipeline").as_str().is_none() {
-        return Err(ProtoError::new(
-            "bad-request",
-            "'eval-candidate' requires string field 'point_pipeline'",
-        )
-        .with_id(id));
+}
+
+fn str_field(v: &Json, k: &'static str, id: &Json) -> Result<Option<String>, ProtoError> {
+    match v.get(k) {
+        Json::Null => Ok(None),
+        Json::Str(s) => Ok(Some(s.clone())),
+        _ => Err(ProtoError::new("bad-request", format!("'{k}' must be a string"))
+            .with_id(id.clone())),
     }
-    let shard_map = match v.get("shard_map") {
+}
+
+fn json_field(v: &Json, k: &str) -> Option<Json> {
+    match v.get(k) {
         Json::Null => None,
         j => Some(j.clone()),
-    };
-    let objective_json = match v.get("objective_json") {
-        Json::Null => None,
-        j => Some(j.clone()),
-    };
+    }
+}
+
+fn required_ir(v: &Json, cmd_str: &str, id: &Json) -> Result<String, ProtoError> {
+    str_field(v, "ir", id)?.ok_or_else(|| {
+        ProtoError::new("bad-request", format!("cmd '{cmd_str}' requires string field 'ir'"))
+            .with_id(id.clone())
+    })
+}
+
+fn parse_job_payload(v: &Json, cmd_str: &str, id: &Json) -> Result<JobPayload, ProtoError> {
+    let ir = required_ir(v, cmd_str, id)?;
     let factors = match v.get("factors") {
         Json::Null => None,
         j => {
@@ -323,7 +466,7 @@ pub fn parse_request(line: &str) -> Result<Request, ProtoError> {
                     "bad-request",
                     "'factors' must not be empty (omit the field for the default sweep)",
                 )
-                .with_id(id));
+                .with_id(id.clone()));
             }
             let mut out = Vec::with_capacity(arr.len());
             for f in arr {
@@ -339,10 +482,6 @@ pub fn parse_request(line: &str) -> Result<Request, ProtoError> {
             Some(normalized)
         }
     };
-    let platform_json = match v.get("platform_json") {
-        Json::Null => None,
-        j => Some(j.clone()),
-    };
     let platforms = match v.get("platforms") {
         Json::Null => None,
         j => {
@@ -355,7 +494,7 @@ pub fn parse_request(line: &str) -> Result<Request, ProtoError> {
                     "bad-request",
                     "'platforms' must not be empty (omit the field for a single platform)",
                 )
-                .with_id(id));
+                .with_id(id.clone()));
             }
             let mut names = Vec::with_capacity(arr.len());
             let mut seen = std::collections::BTreeSet::new();
@@ -369,44 +508,277 @@ pub fn parse_request(line: &str) -> Result<Request, ProtoError> {
                         "bad-request",
                         format!("'platforms' lists platform '{name}' more than once"),
                     )
-                    .with_id(id));
+                    .with_id(id.clone()));
                 }
                 names.push(name.to_string());
             }
             Some(names)
         }
     };
-    let scenario_json = match v.get("scenario_json") {
-        Json::Null => None,
-        j => Some(j.clone()),
-    };
-    Ok(Request {
-        cmd,
-        id,
+    Ok(JobPayload {
         ir,
-        platform: opt_str("platform"),
-        platform_json,
+        platform: str_field(v, "platform", id)?,
+        platform_json: json_field(v, "platform_json"),
         platforms,
-        pipeline: opt_str("pipeline"),
-        objective: opt_str("objective"),
-        scenario: opt_str("scenario"),
-        scenario_json,
-        slo: opt_str("slo"),
-        autoscale: opt_str("autoscale"),
-        priority,
-        deadline_ms,
-        seed,
+        pipeline: str_field(v, "pipeline", id)?,
+        objective: str_field(v, "objective", id)?,
+        scenario: str_field(v, "scenario", id)?,
+        scenario_json: json_field(v, "scenario_json"),
+        slo: str_field(v, "slo", id)?,
+        autoscale: str_field(v, "autoscale", id)?,
+        seed: uint_field(v, "seed", id)?,
         factors,
-        driver: opt_str("driver"),
-        budget,
-        search_seed,
-        proto_version,
-        shard_map,
-        key: opt_str("key"),
-        point_label: opt_str("point_label"),
-        point_pipeline: opt_str("point_pipeline"),
-        objective_json,
+        driver: str_field(v, "driver", id)?,
+        budget: uint_field(v, "budget", id)?,
+        search_seed: uint_field(v, "search_seed", id)?,
     })
+}
+
+/// Parse one request line into the typed envelope. Never panics on hostile
+/// input; every failure mode maps to a [`ProtoError`] the caller turns
+/// into an error response.
+pub fn parse_request(line: &str) -> Result<Request, ProtoError> {
+    let v = Json::parse(line)
+        .map_err(|e| ProtoError::new("bad-json", format!("request is not valid JSON: {e}")))?;
+    let Some(obj) = v.as_obj() else {
+        return Err(ProtoError::new("bad-request", "request must be a JSON object"));
+    };
+    let id = v.get("id").clone();
+    let cmd_str = v.get("cmd").as_str().ok_or_else(|| {
+        ProtoError::new("bad-request", "missing string field 'cmd'").with_id(id.clone())
+    })?;
+    let cmd = Command::parse(cmd_str).ok_or_else(|| {
+        ProtoError::new(
+            "bad-request",
+            format!(
+                "unknown cmd '{cmd_str}' (want dse|des|flow|handshake|eval-candidate|\
+                 eval-response|journal-pull|join|leave|cache-stats|metrics|ping|shutdown)"
+            ),
+        )
+        .with_id(id.clone())
+    })?;
+    // a known verb with an unknown field is an error naming the field —
+    // a typo must never silently change what gets evaluated
+    let verb_allowed = verb_fields(cmd);
+    let job_extras = cmd == Command::EvalResponse;
+    for k in obj.keys() {
+        let known = COMMON_FIELDS.contains(&k.as_str())
+            || verb_allowed.contains(&k.as_str())
+            || (job_extras && JOB_FIELDS.contains(&k.as_str()));
+        if !known {
+            return Err(ProtoError::new(
+                "bad-request",
+                format!("unknown field '{k}' for cmd '{cmd_str}' (see PROTOCOL.md)"),
+            )
+            .with_id(id)
+            .with_detail(Json::obj(vec![("field", k.as_str().into())])));
+        }
+    }
+    let common = CommonOpts {
+        priority: uint_field(&v, "priority", &id)?,
+        deadline_ms: uint_field(&v, "deadline_ms", &id)?,
+    };
+    let verb = match cmd {
+        Command::Dse | Command::Des | Command::Flow => {
+            VerbPayload::Job(parse_job_payload(&v, cmd_str, &id)?)
+        }
+        Command::EvalCandidate => {
+            let ir = required_ir(&v, cmd_str, &id)?;
+            let point_pipeline = str_field(&v, "point_pipeline", &id)?.ok_or_else(|| {
+                ProtoError::new(
+                    "bad-request",
+                    "'eval-candidate' requires string field 'point_pipeline'",
+                )
+                .with_id(id.clone())
+            })?;
+            VerbPayload::EvalCandidate(EvalCandidatePayload {
+                ir,
+                platform: str_field(&v, "platform", &id)?,
+                platform_json: json_field(&v, "platform_json"),
+                objective_json: json_field(&v, "objective_json"),
+                key: str_field(&v, "key", &id)?,
+                point_label: str_field(&v, "point_label", &id)?,
+                point_pipeline,
+            })
+        }
+        Command::EvalResponse => {
+            let job_cmd_str = str_field(&v, "job_cmd", &id)?.ok_or_else(|| {
+                ProtoError::new("bad-request", "'eval-response' requires string field 'job_cmd'")
+                    .with_id(id.clone())
+            })?;
+            let job_cmd = match Command::parse(&job_cmd_str) {
+                Some(c @ (Command::Dse | Command::Des | Command::Flow)) => c,
+                _ => {
+                    return Err(ProtoError::new(
+                        "bad-request",
+                        format!("'job_cmd' must be dse|des|flow, got '{job_cmd_str}'"),
+                    )
+                    .with_id(id));
+                }
+            };
+            VerbPayload::EvalResponse(EvalResponsePayload {
+                job_cmd,
+                key: str_field(&v, "key", &id)?,
+                job: parse_job_payload(&v, cmd_str, &id)?,
+            })
+        }
+        Command::Handshake => {
+            let capabilities = match v.get("capabilities") {
+                Json::Null => None,
+                j => {
+                    let arr = j.as_arr().ok_or_else(|| {
+                        ProtoError::new("bad-request", "'capabilities' must be a string array")
+                            .with_id(id.clone())
+                    })?;
+                    let mut caps = Vec::with_capacity(arr.len());
+                    for c in arr {
+                        let s = c.as_str().ok_or_else(|| {
+                            ProtoError::new(
+                                "bad-request",
+                                "'capabilities' entries must be strings",
+                            )
+                            .with_id(id.clone())
+                        })?;
+                        caps.push(s.to_string());
+                    }
+                    Some(caps)
+                }
+            };
+            VerbPayload::Handshake(HandshakePayload {
+                proto_version: uint_field(&v, "proto_version", &id)?,
+                shard_map: json_field(&v, "shard_map"),
+                capabilities,
+            })
+        }
+        Command::JournalPull => {
+            let shard = match v.get("shard") {
+                Json::Null => None,
+                j => {
+                    let index = j.get("index").as_u64();
+                    let total = j.get("total").as_u64();
+                    match (index, total) {
+                        (Some(i), Some(t)) if t >= 1 && i < t => Some((i, t)),
+                        _ => {
+                            return Err(ProtoError::new(
+                                "bad-request",
+                                "'shard' must be {\"index\": I, \"total\": T} with I < T",
+                            )
+                            .with_id(id));
+                        }
+                    }
+                }
+            };
+            VerbPayload::JournalPull(JournalPullPayload {
+                cursor: uint_field(&v, "cursor", &id)?.unwrap_or(0),
+                limit: uint_field(&v, "limit", &id)?,
+                shard,
+            })
+        }
+        Command::Join | Command::Leave => {
+            let worker = str_field(&v, "worker", &id)?.ok_or_else(|| {
+                ProtoError::new(
+                    "bad-request",
+                    format!("cmd '{cmd_str}' requires string field 'worker'"),
+                )
+                .with_id(id.clone())
+            })?;
+            VerbPayload::Membership(MembershipPayload { worker })
+        }
+        Command::CacheStats | Command::Metrics | Command::Ping | Command::Shutdown => {
+            VerbPayload::Control
+        }
+    };
+    Ok(Request { cmd, id, common, verb })
+}
+
+fn push_opt_str(out: &mut Vec<(&'static str, Json)>, k: &'static str, v: &Option<String>) {
+    if let Some(s) = v {
+        out.push((k, s.as_str().into()));
+    }
+}
+
+fn push_opt_json(out: &mut Vec<(&'static str, Json)>, k: &'static str, v: &Option<Json>) {
+    if let Some(j) = v {
+        out.push((k, j.clone()));
+    }
+}
+
+fn push_opt_uint(out: &mut Vec<(&'static str, Json)>, k: &'static str, v: &Option<u64>) {
+    if let Some(n) = v {
+        out.push((k, (*n).into()));
+    }
+}
+
+fn push_job_fields(out: &mut Vec<(&'static str, Json)>, j: &JobPayload) {
+    out.push(("ir", j.ir.as_str().into()));
+    push_opt_str(out, "platform", &j.platform);
+    push_opt_json(out, "platform_json", &j.platform_json);
+    if let Some(ps) = &j.platforms {
+        out.push(("platforms", ps.clone().into()));
+    }
+    push_opt_str(out, "pipeline", &j.pipeline);
+    push_opt_str(out, "objective", &j.objective);
+    push_opt_str(out, "scenario", &j.scenario);
+    push_opt_json(out, "scenario_json", &j.scenario_json);
+    push_opt_str(out, "slo", &j.slo);
+    push_opt_str(out, "autoscale", &j.autoscale);
+    push_opt_uint(out, "seed", &j.seed);
+    if let Some(fs) = &j.factors {
+        out.push(("factors", fs.clone().into()));
+    }
+    push_opt_str(out, "driver", &j.driver);
+    push_opt_uint(out, "budget", &j.budget);
+    push_opt_uint(out, "search_seed", &j.search_seed);
+}
+
+/// Inverse of [`parse_request`]: encode a request back to its wire object.
+/// Every documented field survives the round trip (`parse(encode(r)) == r`
+/// up to already-applied normalization) — this is what the coordinator uses
+/// to forward a job to its response-shard owner verbatim.
+pub fn encode_request(req: &Request) -> Json {
+    let mut out: Vec<(&'static str, Json)> = vec![("cmd", req.cmd.as_str().into())];
+    if req.id != Json::Null {
+        out.push(("id", req.id.clone()));
+    }
+    push_opt_uint(&mut out, "priority", &req.common.priority);
+    push_opt_uint(&mut out, "deadline_ms", &req.common.deadline_ms);
+    match &req.verb {
+        VerbPayload::Job(j) => push_job_fields(&mut out, j),
+        VerbPayload::EvalCandidate(c) => {
+            out.push(("ir", c.ir.as_str().into()));
+            push_opt_str(&mut out, "platform", &c.platform);
+            push_opt_json(&mut out, "platform_json", &c.platform_json);
+            push_opt_json(&mut out, "objective_json", &c.objective_json);
+            push_opt_str(&mut out, "key", &c.key);
+            push_opt_str(&mut out, "point_label", &c.point_label);
+            out.push(("point_pipeline", c.point_pipeline.as_str().into()));
+        }
+        VerbPayload::EvalResponse(r) => {
+            out.push(("job_cmd", r.job_cmd.as_str().into()));
+            push_opt_str(&mut out, "key", &r.key);
+            push_job_fields(&mut out, &r.job);
+        }
+        VerbPayload::Handshake(h) => {
+            push_opt_uint(&mut out, "proto_version", &h.proto_version);
+            push_opt_json(&mut out, "shard_map", &h.shard_map);
+            if let Some(caps) = &h.capabilities {
+                out.push(("capabilities", caps.clone().into()));
+            }
+        }
+        VerbPayload::JournalPull(p) => {
+            out.push(("cursor", p.cursor.into()));
+            push_opt_uint(&mut out, "limit", &p.limit);
+            if let Some((index, total)) = p.shard {
+                out.push((
+                    "shard",
+                    Json::obj(vec![("index", index.into()), ("total", total.into())]),
+                ));
+            }
+        }
+        VerbPayload::Membership(m) => out.push(("worker", m.worker.as_str().into())),
+        VerbPayload::Control => {}
+    }
+    Json::obj(out)
 }
 
 /// Serialize a success response.
@@ -430,17 +802,21 @@ pub fn ok_response(
     Json::obj(fields).to_string()
 }
 
-/// Serialize an error response.
+/// Serialize an error response: the one shape every failure path answers
+/// with — `{"ok": false, "id": ..., "error": {"code", "message", "id"?,
+/// "detail"?}}` (`id` repeated inside `error` when present, so error
+/// objects stay self-describing when extracted from a log).
 pub fn error_response(err: &ProtoError) -> String {
-    Json::obj(vec![
-        ("ok", Json::Bool(false)),
-        ("id", err.id.clone()),
-        (
-            "error",
-            Json::obj(vec![("code", err.code.into()), ("message", err.message.as_str().into())]),
-        ),
-    ])
-    .to_string()
+    let mut e =
+        vec![("code", err.code.into()), ("message", Json::Str(err.message.clone()))];
+    if err.id != Json::Null {
+        e.push(("id", err.id.clone()));
+    }
+    if let Some(d) = &err.detail {
+        e.push(("detail", d.clone()));
+    }
+    Json::obj(vec![("ok", Json::Bool(false)), ("id", err.id.clone()), ("error", Json::obj(e))])
+        .to_string()
 }
 
 #[cfg(test)]
@@ -451,13 +827,14 @@ mod tests {
     fn parses_minimal_dse_request() {
         let r = parse_request(r#"{"cmd": "dse", "ir": "x", "id": 3}"#).unwrap();
         assert_eq!(r.cmd, Command::Dse);
-        assert_eq!(r.ir.as_deref(), Some("x"));
         assert_eq!(r.id, Json::Num(3.0));
-        assert_eq!(r.factors, None);
-        assert_eq!(r.seed, None);
-        assert_eq!(r.driver, None);
-        assert_eq!(r.budget, None);
-        assert_eq!(r.search_seed, None);
+        let j = r.job().expect("dse carries a job payload");
+        assert_eq!(j.ir, "x");
+        assert_eq!(j.factors, None);
+        assert_eq!(j.seed, None);
+        assert_eq!(j.driver, None);
+        assert_eq!(j.budget, None);
+        assert_eq!(j.search_seed, None);
     }
 
     #[test]
@@ -467,11 +844,12 @@ mod tests {
                 "search_seed": 9, "factors": [4, 2, 2]}"#,
         )
         .unwrap();
-        assert_eq!(r.driver.as_deref(), Some("successive-halving"));
-        assert_eq!(r.budget, Some(3));
-        assert_eq!(r.search_seed, Some(9));
+        let j = r.job().unwrap();
+        assert_eq!(j.driver.as_deref(), Some("successive-halving"));
+        assert_eq!(j.budget, Some(3));
+        assert_eq!(j.search_seed, Some(9));
         // factors arrive normalized: sorted, deduplicated
-        assert_eq!(r.factors, Some(vec![2, 4]));
+        assert_eq!(j.factors, Some(vec![2, 4]));
         // bad budget types are structured errors
         let e = parse_request(r#"{"cmd": "dse", "ir": "x", "budget": -1}"#).unwrap_err();
         assert_eq!(e.code, "bad-request");
@@ -495,7 +873,8 @@ mod tests {
             r#"{"cmd": "dse", "ir": "x", "platforms": ["u280", "generic-ddr"]}"#,
         )
         .unwrap();
-        assert_eq!(r.platforms, Some(vec!["u280".to_string(), "generic-ddr".to_string()]));
+        let j = r.job().unwrap();
+        assert_eq!(j.platforms, Some(vec!["u280".to_string(), "generic-ddr".to_string()]));
         // empty lists, duplicates and non-string entries are structured errors
         let e = parse_request(r#"{"cmd": "dse", "ir": "x", "platforms": [], "id": 7}"#)
             .unwrap_err();
@@ -522,6 +901,25 @@ mod tests {
         // bad field types
         assert!(parse_request(r#"{"cmd": "dse", "ir": "x", "seed": -1}"#).is_err());
         assert!(parse_request(r#"{"cmd": "dse", "ir": "x", "factors": "two"}"#).is_err());
+        assert!(parse_request(r#"{"cmd": "dse", "ir": "x", "pipeline": 5}"#).is_err());
+    }
+
+    #[test]
+    fn unknown_fields_on_known_verbs_are_named() {
+        let e = parse_request(r#"{"cmd": "dse", "ir": "x", "factrs": [2], "id": 9}"#)
+            .unwrap_err();
+        assert_eq!(e.code, "bad-request");
+        assert!(e.message.contains("'factrs'"), "{}", e.message);
+        assert!(e.message.contains("PROTOCOL.md"), "{}", e.message);
+        assert_eq!(e.id, Json::Num(9.0));
+        assert_eq!(e.detail.as_ref().unwrap().get("field").as_str(), Some("factrs"));
+        // verb fields do not leak across verbs: 'worker' is join/leave-only
+        let e = parse_request(r#"{"cmd": "ping", "worker": "h:1"}"#).unwrap_err();
+        assert_eq!(e.detail.as_ref().unwrap().get("field").as_str(), Some("worker"));
+        // ...and job fields are not valid on handshake
+        assert!(parse_request(r#"{"cmd": "handshake", "proto_version": 3, "seed": 1}"#).is_err());
+        // common knobs are accepted everywhere
+        assert!(parse_request(r#"{"cmd": "cache-stats", "priority": 1}"#).is_ok());
     }
 
     #[test]
@@ -534,6 +932,17 @@ mod tests {
         let v = Json::parse(&err).unwrap();
         assert_eq!(v.get("ok"), &Json::Bool(false));
         assert_eq!(v.get("error").get("code").as_str(), Some("bad-json"));
+        assert_eq!(v.get("error").get("id"), &Json::Null, "no id when none was recoverable");
+        // with id + detail, the error object is self-describing
+        let err = error_response(
+            &ProtoError::new("bad-request", "unknown field")
+                .with_id(Json::Num(7.0))
+                .with_detail(Json::obj(vec![("field", "x".into())])),
+        );
+        let v = Json::parse(&err).unwrap();
+        assert_eq!(v.get("id").as_u64(), Some(7));
+        assert_eq!(v.get("error").get("id").as_u64(), Some(7));
+        assert_eq!(v.get("error").get("detail").get("field").as_str(), Some("x"));
         // single line (newline-delimited framing)
         assert!(!ok.contains('\n') && !err.contains('\n'));
     }
@@ -547,16 +956,17 @@ mod tests {
                 "scenario_json": {"name": "t", "arrivals": {"kind": "closed", "jobs": "4"}}}"#,
         )
         .unwrap();
-        assert_eq!(r.slo.as_deref(), Some("interactive=p99<5"));
-        assert_eq!(r.autoscale.as_deref(), Some("0.001:256:16:1:4"));
-        assert_eq!(r.priority, Some(3));
-        assert_eq!(r.deadline_ms, Some(5000));
-        let sj = r.scenario_json.as_ref().expect("scenario_json parsed");
+        assert_eq!(r.common.priority, Some(3));
+        assert_eq!(r.common.deadline_ms, Some(5000));
+        let j = r.job().unwrap();
+        assert_eq!(j.slo.as_deref(), Some("interactive=p99<5"));
+        assert_eq!(j.autoscale.as_deref(), Some("0.001:256:16:1:4"));
+        let sj = j.scenario_json.as_ref().expect("scenario_json parsed");
         assert_eq!(sj.get("arrivals").get("kind").as_str(), Some("closed"));
         // absent fields default to None; bad types are structured errors
         let r = parse_request(r#"{"cmd": "ping"}"#).unwrap();
-        assert_eq!((r.priority, r.deadline_ms), (None, None));
-        assert!(r.slo.is_none() && r.autoscale.is_none() && r.scenario_json.is_none());
+        assert_eq!((r.common.priority, r.common.deadline_ms), (None, None));
+        assert_eq!(r.verb, VerbPayload::Control);
         let e = parse_request(r#"{"cmd": "dse", "ir": "x", "priority": -2}"#).unwrap_err();
         assert_eq!(e.code, "bad-request");
         assert!(e.message.contains("priority"), "{}", e.message);
@@ -565,7 +975,7 @@ mod tests {
 
     #[test]
     fn non_job_commands_need_no_ir() {
-        for cmd in ["cache-stats", "metrics", "ping", "shutdown", "handshake"] {
+        for cmd in ["cache-stats", "metrics", "ping", "shutdown", "handshake", "journal-pull"] {
             let r = parse_request(&format!(r#"{{"cmd": "{cmd}"}}"#)).unwrap();
             assert!(!r.cmd.is_job());
         }
@@ -579,8 +989,18 @@ mod tests {
         )
         .unwrap();
         assert_eq!(r.cmd, Command::Handshake);
-        assert_eq!(r.proto_version, Some(1));
-        assert!(r.shard_map.is_some());
+        let VerbPayload::Handshake(h) = &r.verb else { panic!("handshake payload") };
+        assert_eq!(h.proto_version, Some(1));
+        assert!(h.shard_map.is_some());
+        assert_eq!(h.capabilities, None);
+
+        let r = parse_request(
+            r#"{"cmd": "handshake", "proto_version": 3, "capabilities": ["journal-gossip"]}"#,
+        )
+        .unwrap();
+        let VerbPayload::Handshake(h) = &r.verb else { panic!("handshake payload") };
+        assert_eq!(h.capabilities.as_deref(), Some(&["journal-gossip".to_string()][..]));
+        assert!(parse_request(r#"{"cmd": "handshake", "capabilities": [1]}"#).is_err());
 
         let r = parse_request(
             r#"{"cmd": "eval-candidate", "ir": "x", "point_label": "full(x2)",
@@ -589,10 +1009,11 @@ mod tests {
         )
         .unwrap();
         assert!(r.cmd.is_job(), "eval-candidate goes through the job queue");
-        assert_eq!(r.point_label.as_deref(), Some("full(x2)"));
-        assert_eq!(r.point_pipeline.as_deref(), Some("sanitize"));
-        assert_eq!(r.key.as_deref(), Some("00ff"));
-        let obj = r.objective_json.as_ref().expect("objective_json parsed");
+        let VerbPayload::EvalCandidate(c) = &r.verb else { panic!("eval-candidate payload") };
+        assert_eq!(c.point_label.as_deref(), Some("full(x2)"));
+        assert_eq!(c.point_pipeline, "sanitize");
+        assert_eq!(c.key.as_deref(), Some("00ff"));
+        let obj = c.objective_json.as_ref().expect("objective_json parsed");
         assert_eq!(obj.get("kind").as_str(), Some("analytic"));
 
         // a missing point_pipeline is a structured parse error, id intact
@@ -602,5 +1023,85 @@ mod tests {
         // ...and so is a missing ir (eval-candidate is a job command)
         let e = parse_request(r#"{"cmd": "eval-candidate", "point_pipeline": "x"}"#).unwrap_err();
         assert_eq!(e.code, "bad-request");
+    }
+
+    #[test]
+    fn fabric_verbs_parse_and_validate() {
+        // eval-response wraps a whole job plus routing metadata
+        let r = parse_request(
+            r#"{"cmd": "eval-response", "job_cmd": "dse", "ir": "x", "seed": 9,
+                "key": "00ff", "id": 2}"#,
+        )
+        .unwrap();
+        assert!(r.cmd.is_job(), "eval-response goes through the job queue");
+        let VerbPayload::EvalResponse(er) = &r.verb else { panic!("eval-response payload") };
+        assert_eq!(er.job_cmd, Command::Dse);
+        assert_eq!(er.key.as_deref(), Some("00ff"));
+        assert_eq!(er.job.seed, Some(9));
+        assert_eq!(r.job().unwrap().ir, "x", "job() reaches the inner payload");
+        let e = parse_request(r#"{"cmd": "eval-response", "ir": "x"}"#).unwrap_err();
+        assert!(e.message.contains("job_cmd"), "{}", e.message);
+        let e = parse_request(r#"{"cmd": "eval-response", "job_cmd": "ping", "ir": "x"}"#)
+            .unwrap_err();
+        assert!(e.message.contains("dse|des|flow"), "{}", e.message);
+
+        // journal-pull defaults + shard filter validation
+        let r = parse_request(r#"{"cmd": "journal-pull"}"#).unwrap();
+        let VerbPayload::JournalPull(p) = &r.verb else { panic!("journal-pull payload") };
+        assert_eq!((p.cursor, p.limit, p.shard), (0, None, None));
+        let r = parse_request(
+            r#"{"cmd": "journal-pull", "cursor": 7, "limit": 64,
+                "shard": {"index": 1, "total": 2}}"#,
+        )
+        .unwrap();
+        let VerbPayload::JournalPull(p) = &r.verb else { panic!("journal-pull payload") };
+        assert_eq!((p.cursor, p.limit, p.shard), (7, Some(64), Some((1, 2))));
+        let oob = r#"{"cmd": "journal-pull", "shard": {"index": 2, "total": 2}}"#;
+        assert!(parse_request(oob).is_err(), "shard index must be < total");
+        assert!(parse_request(r#"{"cmd": "journal-pull", "cursor": -1}"#).is_err());
+
+        // join/leave need a worker address
+        let r = parse_request(r#"{"cmd": "join", "worker": "h3:7900"}"#).unwrap();
+        let VerbPayload::Membership(m) = &r.verb else { panic!("membership payload") };
+        assert_eq!(m.worker, "h3:7900");
+        let e = parse_request(r#"{"cmd": "leave"}"#).unwrap_err();
+        assert!(e.message.contains("worker"), "{}", e.message);
+    }
+
+    #[test]
+    fn every_documented_field_survives_encode_then_parse() {
+        // one representative line per verb, every field populated
+        let lines = [
+            r#"{"cmd": "dse", "id": 1, "priority": 2, "deadline_ms": 100, "ir": "x",
+                "platform": "u280", "pipeline": "sanitize", "objective": "des-score",
+                "scenario": "closed:4", "slo": "i=p99<5", "autoscale": "1:2:1:1:4",
+                "seed": 42, "factors": [2, 4], "driver": "random", "budget": 3,
+                "search_seed": 9}"#,
+            r#"{"cmd": "des", "ir": "x", "platforms": ["u280", "generic-ddr"],
+                "scenario_json": {"name": "t"}}"#,
+            r#"{"cmd": "flow", "ir": "x", "platform_json": {"name": "p"}}"#,
+            r#"{"cmd": "eval-candidate", "ir": "x", "platform": "u280",
+                "platform_json": {"name": "p"}, "objective_json": {"kind": "analytic"},
+                "key": "00ff", "point_label": "full(x2)", "point_pipeline": "sanitize"}"#,
+            r#"{"cmd": "eval-response", "id": "r1", "job_cmd": "des", "key": "00ff",
+                "ir": "x", "scenario": "closed:4", "seed": 7}"#,
+            r#"{"cmd": "handshake", "proto_version": 3, "capabilities": ["journal-gossip"],
+                "shard_map": {"index": 0, "total": 2, "epoch": 1, "workers": ["a:1", "b:2"]}}"#,
+            r#"{"cmd": "journal-pull", "cursor": 5, "limit": 16,
+                "shard": {"index": 0, "total": 2}}"#,
+            r#"{"cmd": "join", "worker": "h3:7900"}"#,
+            r#"{"cmd": "leave", "worker": "h2:7900"}"#,
+            r#"{"cmd": "cache-stats"}"#,
+            r#"{"cmd": "metrics"}"#,
+            r#"{"cmd": "ping", "id": 9}"#,
+            r#"{"cmd": "shutdown"}"#,
+        ];
+        for line in lines {
+            let parsed = parse_request(line).unwrap_or_else(|e| panic!("{line}: {}", e.message));
+            let encoded = encode_request(&parsed).to_string();
+            let reparsed = parse_request(&encoded)
+                .unwrap_or_else(|e| panic!("re-parse {encoded}: {}", e.message));
+            assert_eq!(reparsed, parsed, "round trip changed the request: {encoded}");
+        }
     }
 }

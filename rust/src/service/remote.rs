@@ -1,19 +1,30 @@
-//! Distributed candidate evaluation: the coordinator side of
+//! The coordinator side of the distributed cache fabric:
 //! `olympus serve --workers`.
 //!
-//! The content-addressed candidate keys ([`candidate_cache_key`]) are
-//! process-independent and — with `--cache-dir` — survive process death, so
-//! any `olympus worker` can own a slice of the key space and serve every
-//! journal record it holds. This module supplies the two pieces that turn
-//! that property into a horizontally scaled service:
+//! The content-addressed keys (candidate keys via [`candidate_cache_key`],
+//! response keys via `Flow::response_key`) are process-independent and —
+//! with `--cache-dir` — survive process death, so any `olympus worker` can
+//! own a slice of the key space and serve every journal record it holds.
+//! This module supplies the pieces that turn that property into a
+//! horizontally scaled service:
 //!
 //! * **[`WorkerPool`]** — one persistent connection per remote worker,
-//!   handshaken with the protocol version and the worker's shard of the
-//!   key space ([`PROTO_VERSION`], `shard_map`). Each candidate evaluation
-//!   routes to the worker owning its key under **rendezvous (highest-
-//!   random-weight) hashing** ([`shard_of`]): adding or removing a worker
-//!   only remaps the keys it owned, so warm worker journals keep their
-//!   value as the fleet changes.
+//!   handshaken with the protocol version, a capability list and the
+//!   worker's shard of the key space under an **epoch-versioned shard
+//!   map** ([`PROTO_VERSION`], `shard_map`). Work routes to the worker
+//!   owning its key under **rendezvous (highest-random-weight) hashing**
+//!   ([`shard_of`]): adding or removing a worker only remaps the keys it
+//!   owned, so warm worker journals keep their value as the fleet changes.
+//!   Membership is **elastic**: [`WorkerPool::join`] / [`WorkerPool::leave`]
+//!   re-rendezvous the map at runtime (epoch bump + fleet-wide
+//!   re-handshake, no restart); the key handoff itself rides on journal
+//!   gossip ([`super::gossip`]).
+//! * **Response routing** ([`WorkerPool::eval_response_line`]) — whole
+//!   requests forwarded to their response key's shard owner as an
+//!   `eval-response` line. The owner answers with the byte-exact response
+//!   a direct submission would get, and the coordinator passes the raw
+//!   line through unparsed — the coordinator is a thin router, and warm
+//!   response hits scale with the fleet.
 //! * **[`RemoteEvaluator`]** — a [`Evaluator`] that slots under every
 //!   `SearchDriver` unchanged. Full-fidelity evaluations go through the
 //!   coordinator's own candidate memo first (single-flight, exactly like
@@ -22,14 +33,16 @@
 //!   (microseconds each — a network hop would cost more than it saves).
 //!
 //! **Failover**: a transport failure retries once on a fresh connection,
-//! then the evaluation runs locally — a dead worker degrades throughput,
-//! never availability and never the answer. **Determinism**: outcomes
-//! travel in the same bit-exact codec the disk journals use
-//! ([`outcome_from_json`]: floats as raw bit patterns, modules as printed
-//! IR), and the worker cross-checks the routed key against the one it
-//! derives itself, so a served result is bit-identical to a single-process
-//! run no matter which process computed it. `cache-stats` exposes
-//! `remote_hits` / `remote_evals` / `remote_failovers`.
+//! then the work runs locally — a dead worker degrades throughput, never
+//! availability and never the answer. **Determinism**: outcomes travel in
+//! the same bit-exact codec the disk journals use ([`outcome_from_json`]:
+//! floats as raw bit patterns, modules as printed IR), routed responses
+//! travel as raw bytes, and the worker cross-checks every routed key
+//! against the one it derives itself, so a served result is bit-identical
+//! to a single-process run no matter which process computed it.
+//! `cache-stats` exposes `remote_hits` / `remote_evals` /
+//! `remote_failovers` (candidate level) and `resp_shard_hits` /
+//! `resp_shard_evals` / `resp_shard_failovers` (whole-request level).
 
 use std::fmt;
 use std::io::{BufRead, BufReader, Write};
@@ -49,7 +62,7 @@ use crate::platform::PlatformSpec;
 use crate::search::{CandidatePoint, Evaluator, ObjectiveEvaluator};
 use crate::util::{fnv1a_64, ContentHash, Json};
 
-use super::proto::PROTO_VERSION;
+use super::proto::{CAPABILITIES, PROTO_VERSION};
 
 /// Establishing a TCP connection to a worker.
 const CONNECT_TIMEOUT: Duration = Duration::from_secs(2);
@@ -68,13 +81,19 @@ const WRITE_TIMEOUT: Duration = Duration::from_secs(30);
 /// Coordinator-side counters surfaced through `cache-stats`.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct RemoteStats {
-    /// Evaluations a worker answered from its warm cache.
+    /// Candidate evaluations a worker answered from its warm cache.
     pub remote_hits: u64,
-    /// Evaluations a worker computed fresh.
+    /// Candidate evaluations a worker computed fresh.
     pub remote_evals: u64,
-    /// Evaluations that fell back to local compute (worker unreachable or
-    /// answering garbage, after the one retry).
+    /// Candidate evaluations that fell back to local compute (worker
+    /// unreachable or answering garbage, after the one retry).
     pub remote_failovers: u64,
+    /// Routed whole requests the shard owner answered from its warm cache.
+    pub resp_shard_hits: u64,
+    /// Routed whole requests the shard owner computed fresh.
+    pub resp_shard_evals: u64,
+    /// Routed whole requests that fell back to local execution.
+    pub resp_shard_failovers: u64,
 }
 
 /// Rendezvous (highest-random-weight) owner of `key` among `n` shards:
@@ -85,6 +104,13 @@ pub struct RemoteStats {
 pub fn shard_of(key: ContentHash, n: usize) -> usize {
     let hex = key.to_hex();
     (0..n).max_by_key(|i| fnv1a_64(format!("{hex}#{i}").as_bytes())).unwrap_or(0)
+}
+
+/// [`shard_of`] for callers holding a key in its 32-hex-digit wire form
+/// (tests, CI tooling computing which worker to kill). `None` when the
+/// string is not a well-formed key.
+pub fn shard_of_hex(hex: &str, n: usize) -> Option<usize> {
+    ContentHash::from_hex(hex).map(|k| shard_of(k, n))
 }
 
 /// How a remote call failed.
@@ -112,15 +138,15 @@ struct Conn {
     writer: TcpStream,
 }
 
-/// One request line -> one parsed response line.
-fn roundtrip(conn: &mut Conn, line: &str) -> Result<Json, String> {
+/// One request line -> one raw response line.
+fn roundtrip(conn: &mut Conn, line: &str) -> Result<String, String> {
     conn.writer.write_all(line.as_bytes()).map_err(|e| format!("send: {e}"))?;
     conn.writer.write_all(b"\n").map_err(|e| format!("send: {e}"))?;
     conn.writer.flush().map_err(|e| format!("send: {e}"))?;
     let mut resp = String::new();
     match conn.reader.read_line(&mut resp) {
         Ok(0) => Err("connection closed by worker".to_string()),
-        Ok(_) => Json::parse(resp.trim()).map_err(|e| format!("malformed response: {e}")),
+        Ok(_) => Ok(resp.trim_end().to_string()),
         Err(e) => Err(format!("recv: {e}")),
     }
 }
@@ -130,20 +156,33 @@ struct RemoteWorker {
     conn: Mutex<Option<Conn>>,
 }
 
+/// An immutable snapshot of the fleet at one epoch. Calls route against a
+/// snapshot, so a concurrent `join`/`leave` never shifts indices under an
+/// in-flight request.
+type Members = Arc<Vec<Arc<RemoteWorker>>>;
+
 /// The coordinator's set of remote evaluation workers (`serve --workers`).
-/// See the module docs for routing, handshake and failover semantics.
+/// See the module docs for routing, handshake, membership and failover
+/// semantics.
 pub struct WorkerPool {
-    workers: Vec<RemoteWorker>,
+    members: Mutex<Members>,
+    /// Bumped by every membership change; announced in each handshake so
+    /// workers can tell a re-rendezvous from a reconnect.
+    epoch: AtomicU64,
+    /// Serializes `join`/`leave` so concurrent membership changes cannot
+    /// interleave their handshake/commit phases.
+    admin: Mutex<()>,
     hits: AtomicU64,
     evals: AtomicU64,
     failovers: AtomicU64,
+    resp_hits: AtomicU64,
+    resp_evals: AtomicU64,
+    resp_failovers: AtomicU64,
 }
 
 impl fmt::Debug for WorkerPool {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        f.debug_struct("WorkerPool")
-            .field("workers", &self.workers.iter().map(|w| w.addr.as_str()).collect::<Vec<_>>())
-            .finish()
+        f.debug_struct("WorkerPool").field("workers", &self.addrs()).finish()
     }
 }
 
@@ -156,40 +195,56 @@ impl WorkerPool {
         if addrs.is_empty() {
             bail!("--workers names no worker addresses");
         }
-        let pool = WorkerPool {
-            workers: addrs
+        let members: Members = Arc::new(
+            addrs
                 .iter()
-                .map(|a| RemoteWorker { addr: a.clone(), conn: Mutex::new(None) })
+                .map(|a| Arc::new(RemoteWorker { addr: a.clone(), conn: Mutex::new(None) }))
                 .collect(),
+        );
+        let pool = WorkerPool {
+            members: Mutex::new(members.clone()),
+            epoch: AtomicU64::new(1),
+            admin: Mutex::new(()),
             hits: AtomicU64::new(0),
             evals: AtomicU64::new(0),
             failovers: AtomicU64::new(0),
+            resp_hits: AtomicU64::new(0),
+            resp_evals: AtomicU64::new(0),
+            resp_failovers: AtomicU64::new(0),
         };
-        for index in 0..pool.workers.len() {
-            let addr = pool.workers[index].addr.clone();
-            match pool.establish(index) {
-                Ok(conn) => *pool.workers[index].conn.lock().unwrap() = Some(conn),
-                Err(RemoteError::Protocol(msg)) => bail!("worker {addr}: {msg}"),
+        for (index, worker) in members.iter().enumerate() {
+            match pool.establish(&members, index, 1) {
+                Ok(conn) => *worker.conn.lock().unwrap() = Some(conn),
+                Err(RemoteError::Protocol(msg)) => bail!("worker {}: {msg}", worker.addr),
                 Err(RemoteError::Transport(msg)) => crate::obs::warn(
                     "remote-worker-unreachable",
-                    &[("worker", addr.as_str().into()), ("error", msg.as_str().into())],
+                    &[("worker", worker.addr.as_str().into()), ("error", msg.as_str().into())],
                 ),
             }
         }
         Ok(pool)
     }
 
+    fn snapshot(&self) -> Members {
+        self.members.lock().unwrap().clone()
+    }
+
     pub fn len(&self) -> usize {
-        self.workers.len()
+        self.snapshot().len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.workers.is_empty()
+        self.len() == 0
     }
 
-    /// The configured worker addresses, in shard-index order.
+    /// The current worker addresses, in shard-index order.
     pub fn addrs(&self) -> Vec<String> {
-        self.workers.iter().map(|w| w.addr.clone()).collect()
+        self.snapshot().iter().map(|w| w.addr.clone()).collect()
+    }
+
+    /// The shard-map version. Starts at 1; every `join`/`leave` bumps it.
+    pub fn epoch(&self) -> u64 {
+        self.epoch.load(Ordering::Relaxed)
     }
 
     pub fn stats(&self) -> RemoteStats {
@@ -197,25 +252,116 @@ impl WorkerPool {
             remote_hits: self.hits.load(Ordering::Relaxed),
             remote_evals: self.evals.load(Ordering::Relaxed),
             remote_failovers: self.failovers.load(Ordering::Relaxed),
+            resp_shard_hits: self.resp_hits.load(Ordering::Relaxed),
+            resp_shard_evals: self.resp_evals.load(Ordering::Relaxed),
+            resp_shard_failovers: self.resp_failovers.load(Ordering::Relaxed),
         }
     }
 
-    /// Count one local failover (the evaluator performs the local compute).
+    /// Count one local candidate failover (the evaluator performs the
+    /// local compute).
     fn note_failover(&self) {
         self.failovers.fetch_add(1, Ordering::Relaxed);
     }
 
-    /// The handshake line announcing worker `index`'s shard assignment.
-    fn handshake_line(&self, index: usize) -> String {
-        let workers: Vec<Json> = self.workers.iter().map(|w| w.addr.as_str().into()).collect();
+    /// Count one local whole-request failover (the caller executes the
+    /// request itself).
+    pub fn note_response_failover(&self) {
+        self.resp_failovers.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Admit `addr` into the fleet at the next shard index. The new worker
+    /// is handshaken with the proposed map *before* anything commits — a
+    /// dead or incompatible address changes nothing. On success the epoch
+    /// bumps and every incumbent is re-handshaken with the new map.
+    pub fn join(&self, addr: &str) -> Result<(), String> {
+        let _admin = self.admin.lock().unwrap();
+        let current = self.snapshot();
+        if current.iter().any(|w| w.addr == addr) {
+            return Err(format!("worker '{addr}' is already a member"));
+        }
+        let mut next: Vec<Arc<RemoteWorker>> = current.as_ref().clone();
+        next.push(Arc::new(RemoteWorker { addr: addr.to_string(), conn: Mutex::new(None) }));
+        let next: Members = Arc::new(next);
+        let epoch = self.epoch() + 1;
+        let index = next.len() - 1;
+        match self.establish(&next, index, epoch) {
+            Ok(conn) => *next[index].conn.lock().unwrap() = Some(conn),
+            Err(e) => return Err(format!("worker {addr}: {e}")),
+        }
+        *self.members.lock().unwrap() = next.clone();
+        self.epoch.store(epoch, Ordering::Relaxed);
+        self.rehandshake(&next, epoch, Some(index));
+        crate::obs::info(
+            "fleet-join",
+            &[("worker", addr.into()), ("epoch", epoch.into()), ("total", next.len().into())],
+        );
+        Ok(())
+    }
+
+    /// Remove `addr` from the fleet (dead or retiring — no connection is
+    /// needed). The epoch bumps and every survivor is re-handshaken with
+    /// the shrunk map; keys the leaver owned re-rendezvous onto survivors,
+    /// whose journals gossip has already warmed.
+    pub fn leave(&self, addr: &str) -> Result<(), String> {
+        let _admin = self.admin.lock().unwrap();
+        let current = self.snapshot();
+        let Some(pos) = current.iter().position(|w| w.addr == addr) else {
+            return Err(format!("worker '{addr}' is not a member"));
+        };
+        let mut next: Vec<Arc<RemoteWorker>> = current.as_ref().clone();
+        next.remove(pos);
+        let next: Members = Arc::new(next);
+        let epoch = self.epoch() + 1;
+        *self.members.lock().unwrap() = next.clone();
+        self.epoch.store(epoch, Ordering::Relaxed);
+        self.rehandshake(&next, epoch, None);
+        crate::obs::info(
+            "fleet-leave",
+            &[("worker", addr.into()), ("epoch", epoch.into()), ("total", next.len().into())],
+        );
+        Ok(())
+    }
+
+    /// Push a new shard map to every member (except `skip`, which already
+    /// has it). Best-effort: an unreachable member keeps a stale map until
+    /// its next per-call reconnect, which re-handshakes anyway.
+    fn rehandshake(&self, members: &Members, epoch: u64, skip: Option<usize>) {
+        for (index, worker) in members.iter().enumerate() {
+            if Some(index) == skip {
+                continue;
+            }
+            match self.establish(members, index, epoch) {
+                Ok(conn) => *worker.conn.lock().unwrap() = Some(conn),
+                Err(e) => {
+                    *worker.conn.lock().unwrap() = None;
+                    crate::obs::warn(
+                        "fleet-rehandshake-failed",
+                        &[
+                            ("worker", worker.addr.as_str().into()),
+                            ("error", e.to_string().into()),
+                        ],
+                    );
+                }
+            }
+        }
+    }
+
+    /// The handshake line announcing worker `index`'s shard assignment
+    /// under `epoch`, plus this coordinator's capabilities.
+    fn handshake_line(members: &Members, index: usize, epoch: u64) -> String {
+        let workers: Vec<Json> = members.iter().map(|w| w.addr.as_str().into()).collect();
+        let caps: Vec<Json> = CAPABILITIES.iter().map(|&c| c.into()).collect();
         Json::obj(vec![
             ("cmd", "handshake".into()),
             ("proto_version", PROTO_VERSION.into()),
+            ("capabilities", Json::Arr(caps)),
             (
                 "shard_map",
                 Json::obj(vec![
                     ("index", index.into()),
-                    ("total", self.workers.len().into()),
+                    ("total", members.len().into()),
+                    ("epoch", epoch.into()),
                     ("workers", Json::Arr(workers)),
                 ]),
             ),
@@ -223,9 +369,9 @@ impl WorkerPool {
         .to_string()
     }
 
-    /// Open + handshake a fresh connection to worker `index`.
-    fn establish(&self, index: usize) -> Result<Conn, RemoteError> {
-        let addr = &self.workers[index].addr;
+    /// Open + handshake a fresh connection to `members[index]`.
+    fn establish(&self, members: &Members, index: usize, epoch: u64) -> Result<Conn, RemoteError> {
+        let addr = &members[index].addr;
         let transport = |m: String| RemoteError::Transport(m);
         let sock = addr
             .to_socket_addrs()
@@ -239,8 +385,11 @@ impl WorkerPool {
         let _ = writer.set_read_timeout(Some(HANDSHAKE_TIMEOUT));
         let reader = writer.try_clone().map_err(|e| transport(format!("clone {addr}: {e}")))?;
         let mut conn = Conn { reader: BufReader::new(reader), writer };
-        let resp = roundtrip(&mut conn, &self.handshake_line(index))
+        let line = Self::handshake_line(members, index, epoch);
+        let raw = roundtrip(&mut conn, &line)
             .map_err(|e| transport(format!("handshake {addr}: {e}")))?;
+        let resp = Json::parse(&raw)
+            .map_err(|e| transport(format!("handshake {addr}: malformed response: {e}")))?;
         if resp.get("ok") != &Json::Bool(true) {
             return Err(RemoteError::Protocol(format!(
                 "handshake rejected [{}]: {}",
@@ -259,15 +408,21 @@ impl WorkerPool {
         Ok(conn)
     }
 
-    /// One request/response against worker `index`, (re)establishing the
-    /// connection as needed. A transport failure drops the connection and
-    /// retries exactly once on a fresh one before giving up.
-    fn call(&self, index: usize, line: &str) -> Result<Json, RemoteError> {
-        let mut guard = self.workers[index].conn.lock().unwrap();
+    /// One request/response against `members[index]`, (re)establishing the
+    /// connection as needed. A transport failure (including an unparsable
+    /// reply) drops the connection and retries exactly once on a fresh one
+    /// before giving up. Returns the raw response line plus its parse.
+    fn call(
+        &self,
+        members: &Members,
+        index: usize,
+        line: &str,
+    ) -> Result<(String, Json), RemoteError> {
+        let mut guard = members[index].conn.lock().unwrap();
         let mut last = String::from("unreachable");
         for _attempt in 0..2 {
             if guard.is_none() {
-                match self.establish(index) {
+                match self.establish(members, index, self.epoch()) {
                     Ok(conn) => *guard = Some(conn),
                     Err(RemoteError::Protocol(msg)) => return Err(RemoteError::Protocol(msg)),
                     Err(RemoteError::Transport(msg)) => {
@@ -278,10 +433,16 @@ impl WorkerPool {
             }
             let started = std::time::Instant::now();
             match roundtrip(guard.as_mut().expect("connection just ensured"), line) {
-                Ok(v) => {
-                    crate::obs::metrics().remote_rtt.record_duration(started.elapsed());
-                    return Ok(v);
-                }
+                Ok(raw) => match Json::parse(&raw) {
+                    Ok(v) => {
+                        crate::obs::metrics().remote_rtt.record_duration(started.elapsed());
+                        return Ok((raw, v));
+                    }
+                    Err(e) => {
+                        *guard = None; // mid-line garbage: never reuse
+                        last = format!("malformed response: {e}");
+                    }
+                },
                 Err(msg) => {
                     *guard = None; // poisoned half-stream: never reuse
                     last = msg;
@@ -303,8 +464,12 @@ impl WorkerPool {
         objective_json: &Json,
         point: &CandidatePoint,
     ) -> Result<(CandidateOutcome, bool), String> {
-        let index = shard_of(key, self.workers.len());
-        let addr = &self.workers[index].addr;
+        let members = self.snapshot();
+        if members.is_empty() {
+            return Err("the fleet has no members (all workers left)".to_string());
+        }
+        let index = shard_of(key, members.len());
+        let addr = members[index].addr.clone();
         let line = Json::obj(vec![
             ("cmd", "eval-candidate".into()),
             ("ir", ir.into()),
@@ -315,7 +480,8 @@ impl WorkerPool {
             ("key", key.to_hex().into()),
         ])
         .to_string();
-        let resp = self.call(index, &line).map_err(|e| format!("worker {addr}: {e}"))?;
+        let (_, resp) =
+            self.call(&members, index, &line).map_err(|e| format!("worker {addr}: {e}"))?;
         if resp.get("ok") != &Json::Bool(true) {
             return Err(format!(
                 "worker {addr} rejected eval [{}]: {}",
@@ -332,6 +498,40 @@ impl WorkerPool {
             self.evals.fetch_add(1, Ordering::Relaxed);
         }
         Ok((outcome, !cached))
+    }
+
+    /// Route a whole request to the worker owning its response key and
+    /// return the worker's response line **verbatim** — the owner renders
+    /// the byte-exact response a direct submission would get, so passing
+    /// the raw bytes through preserves bit-identity without a re-serialize.
+    /// Every failure mode (transport, rejection, skew) comes back as a
+    /// message; the caller executes the request locally instead.
+    pub fn eval_response_line(&self, key: ContentHash, line: &str) -> Result<String, String> {
+        let members = self.snapshot();
+        if members.is_empty() {
+            return Err("the fleet has no members (all workers left)".to_string());
+        }
+        let index = shard_of(key, members.len());
+        let addr = members[index].addr.clone();
+        let (raw, resp) =
+            self.call(&members, index, line).map_err(|e| format!("worker {addr}: {e}"))?;
+        if resp.get("ok") != &Json::Bool(true) {
+            // The request already validated locally (its response key
+            // exists), so a rejection here means version skew or a
+            // disputed key — recompute locally for availability; the
+            // answer is deterministic either way.
+            return Err(format!(
+                "worker {addr} rejected routed request [{}]: {}",
+                resp.get("error").get("code").as_str().unwrap_or("?"),
+                resp.get("error").get("message").as_str().unwrap_or("?")
+            ));
+        }
+        if resp.get("cached") == &Json::Bool(true) {
+            self.resp_hits.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.resp_evals.fetch_add(1, Ordering::Relaxed);
+        }
+        Ok(raw)
     }
 }
 
@@ -534,5 +734,39 @@ mod tests {
                 assert_eq!(shard_of(k, 2), with3, "surviving owner must not change");
             }
         }
+    }
+
+    #[test]
+    fn shard_of_hex_matches_shard_of() {
+        for i in 0..50u32 {
+            let k = key(&format!("k{i}"));
+            assert_eq!(shard_of_hex(&k.to_hex(), 3), Some(shard_of(k, 3)));
+        }
+        assert_eq!(shard_of_hex("not a key", 3), None);
+    }
+
+    #[test]
+    fn leave_shrinks_the_fleet_and_bumps_the_epoch() {
+        // ports 1/2 refuse instantly, so connect() warns and proceeds —
+        // membership bookkeeping is testable without live workers
+        let addrs = vec!["127.0.0.1:1".to_string(), "127.0.0.1:2".to_string()];
+        let pool = WorkerPool::connect(&addrs).unwrap();
+        assert_eq!((pool.len(), pool.epoch()), (2, 1));
+        assert!(pool.leave("127.0.0.1:9").is_err(), "unknown member must be rejected");
+        pool.leave("127.0.0.1:1").unwrap();
+        assert_eq!((pool.len(), pool.epoch()), (1, 2));
+        assert_eq!(pool.addrs(), vec!["127.0.0.1:2".to_string()]);
+        assert!(pool.leave("127.0.0.1:1").is_err(), "cannot leave twice");
+        assert_eq!(pool.stats().resp_shard_failovers, 0);
+    }
+
+    #[test]
+    fn join_of_an_unreachable_worker_changes_nothing() {
+        let addrs = vec!["127.0.0.1:1".to_string()];
+        let pool = WorkerPool::connect(&addrs).unwrap();
+        assert!(pool.join("127.0.0.1:1").is_err(), "duplicate member must be rejected");
+        // handshake-first: a dead joiner must not commit a new epoch
+        assert!(pool.join("127.0.0.1:2").is_err());
+        assert_eq!((pool.len(), pool.epoch()), (1, 1));
     }
 }

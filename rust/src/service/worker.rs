@@ -1,22 +1,33 @@
 //! Job execution: turn a parsed [`Request`] into a response line, answering
 //! through the two-level content-addressed cache.
 //!
-//! * **Response cache** — keyed on [`Flow::cache_key`] (module IR, platform,
-//!   pipeline/objective, scenario, seed). A warm repeat of an identical
-//!   request skips *everything* and replays the stored payload, which is
-//!   bit-identical to a fresh run because every evaluation is deterministic.
+//! * **Response cache** — keyed on [`Flow::response_key`] (command + module
+//!   IR, platform, pipeline/objective, scenario, seed). A warm repeat of an
+//!   identical request skips *everything* and replays the stored payload,
+//!   which is bit-identical to a fresh run because every evaluation is
+//!   deterministic.
 //! * **Candidate cache** — shared across jobs via
 //!   [`DseOptions::cache`](crate::passes::DseOptions): overlapping requests
 //!   (same module on another platform, a grown factor sweep, a different
 //!   scenario on the same candidates) reuse individual candidate
 //!   evaluations even when the response key differs.
 //!
+//! With a worker fleet attached (`--workers`), a whole client-facing job is
+//! additionally *routed*: the coordinator derives the response key, peeks
+//! its own cache (old journals stay warm), and otherwise forwards the
+//! request as an `eval-response` to the rendezvous owner of the key's
+//! shard. Any routing failure falls back to local compute — bit-identical
+//! by determinism, surfaced in `resp_shard_failovers`. Computed responses
+//! also feed the [`GossipLog`] peers replicate over `journal-pull` (see
+//! [`crate::service::gossip`]).
+//!
 //! Workers are plain std threads popping a [`JobQueue`]; results travel
 //! back to the connection thread over the job's `mpsc` channel.
 
 use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, Weak};
 
 use anyhow::Result;
 
@@ -29,11 +40,17 @@ use crate::passes::{
 use crate::platform::{builtin, builtin_names, PlatformSpec};
 use crate::search::{CandidatePoint, ObjectiveEvaluator};
 use crate::traffic::{AutoscalePolicy, SloSpec};
-use crate::util::Json;
+use crate::util::{ContentHash, Json};
 
 use super::cache::{CacheStats, EvalCache};
-use super::persist::{decode_served, encode_served, open_candidate_cache, open_persistent_cache};
-use super::proto::{error_response, ok_response, Command, ProtoError, Request, PROTO_VERSION};
+use super::gossip::{GossipLog, GOSSIP_PAGE_LIMIT};
+use super::persist::{
+    decode_served, encode_served, open_candidate_cache, open_persistent_cache, DiskStore,
+};
+use super::proto::{
+    encode_request, error_response, ok_response, Command, EvalResponsePayload, JobPayload,
+    ProtoError, Request, VerbPayload, CAPABILITIES, PROTO_VERSION,
+};
 use super::queue::JobQueue;
 use super::remote::WorkerPool;
 
@@ -55,6 +72,17 @@ pub enum Served {
     Failed(String),
 }
 
+/// A coordinator's `handshake` shard assignment: this worker's slot in the
+/// rendezvous map, the membership epoch the map was computed under, and the
+/// full worker address list (gossip peers = everyone but ourselves).
+#[derive(Debug, Clone, Default)]
+pub struct ShardInfo {
+    pub index: u64,
+    pub total: u64,
+    pub epoch: u64,
+    pub workers: Vec<String>,
+}
+
 /// Shared service state: the caches and per-job evaluation knobs.
 pub struct ServiceState {
     /// Whole-response memo (single-flight).
@@ -67,30 +95,60 @@ pub struct ServiceState {
     /// Remote evaluation pool (`olympus serve --workers`); `None`
     /// evaluates every candidate in-process.
     pub remote: Option<Arc<WorkerPool>>,
+    /// Response journal writer (with `--cache-dir`): absorbed gossip
+    /// records are appended too, so a warmed shard survives a restart.
+    resp_store: Option<Arc<DiskStore>>,
+    /// Journal mirror peers page over `journal-pull`.
+    pub gossip: GossipLog,
     /// Shard assignment announced by a coordinator's `handshake` (worker
     /// daemons only); echoed by `cache-stats`.
-    pub shard: Mutex<Option<(u64, u64)>>,
+    pub shard: Mutex<Option<ShardInfo>>,
+    /// Set at shutdown so background threads (gossip) exit promptly.
+    stop: AtomicBool,
+    /// Weak handle to the owning `Arc` (set by `bind`); what the lazily
+    /// started gossip thread holds so it never outlives the server.
+    self_ref: Mutex<Weak<ServiceState>>,
+    gossip_started: AtomicBool,
     /// Daemon start time (`uptime_ms` in `cache-stats`/`metrics`).
     pub started: std::time::Instant,
 }
 
 impl ServiceState {
+    fn assemble(
+        responses: EvalCache<Served>,
+        candidates: Arc<CandidateCache>,
+        dse_threads: usize,
+        resp_store: Option<Arc<DiskStore>>,
+    ) -> ServiceState {
+        // Touch the registry so the process uptime epoch is pinned at
+        // daemon construction, not at the first request.
+        let _ = crate::obs::metrics();
+        ServiceState {
+            responses,
+            candidates,
+            dse_threads: dse_threads.max(1),
+            remote: None,
+            resp_store,
+            gossip: GossipLog::new(),
+            shard: Mutex::new(None),
+            stop: AtomicBool::new(false),
+            self_ref: Mutex::new(Weak::new()),
+            gossip_started: AtomicBool::new(false),
+            started: std::time::Instant::now(),
+        }
+    }
+
     pub fn new(response_capacity: usize, dse_threads: usize) -> ServiceState {
         // Candidate entries hold cloned Modules, so a bounded response cache
         // implies a bounded candidate cache too (~a dozen candidates per
         // response); 0 keeps both unbounded.
         let candidate_capacity = response_capacity.saturating_mul(16);
-        // Touch the registry so the process uptime epoch is pinned at
-        // daemon construction, not at the first request.
-        let _ = crate::obs::metrics();
-        ServiceState {
-            responses: EvalCache::with_capacity(response_capacity),
-            candidates: Arc::new(CandidateCache::with_capacity(candidate_capacity)),
-            dse_threads: dse_threads.max(1),
-            remote: None,
-            shard: Mutex::new(None),
-            started: std::time::Instant::now(),
-        }
+        Self::assemble(
+            EvalCache::with_capacity(response_capacity),
+            Arc::new(CandidateCache::with_capacity(candidate_capacity)),
+            dse_threads,
+            None,
+        )
     }
 
     /// Like [`ServiceState::new`], plus an optional on-disk persistence
@@ -110,7 +168,7 @@ impl ServiceState {
         // responses fsync per append (a served answer must survive a crash
         // once the client saw it); candidates are OS-buffered + fsync at
         // drop — losing one to a power cut only re-pays one evaluation
-        let (responses, _rstore) = open_persistent_cache(
+        let (responses, rstore, replayed) = open_persistent_cache(
             &dir.join(super::persist::RESPONSES_JOURNAL),
             response_capacity,
             true,
@@ -118,19 +176,81 @@ impl ServiceState {
             decode_served,
         )?;
         let (candidates, _cstore) = open_candidate_cache(dir, candidate_capacity)?;
-        Ok(ServiceState {
-            responses,
-            candidates,
-            dse_threads: dse_threads.max(1),
-            remote: None,
-            shard: Mutex::new(None),
-            started: std::time::Instant::now(),
-        })
+        let state = Self::assemble(responses, candidates, dse_threads, Some(rstore));
+        // replayed journal records seed the gossip log, so a restarted
+        // worker warms its *peers* (not just itself) from disk
+        for (key, bytes) in replayed {
+            state.gossip.offer(key, bytes);
+        }
+        Ok(state)
     }
 
     /// Counters for `cache-stats`.
     pub fn stats(&self) -> (CacheStats, CacheStats) {
         (self.responses.stats(), self.candidates.stats())
+    }
+
+    /// Register the owning `Arc` (done by `bind`) so lazily started
+    /// background threads can hold a `Weak` reference to this state.
+    pub fn set_self(self: &Arc<Self>) {
+        *self.self_ref.lock().unwrap() = Arc::downgrade(self);
+    }
+
+    /// Ask background threads (gossip) to exit; called at shutdown so the
+    /// response journal's writer lock is released promptly.
+    pub fn request_stop(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+    }
+
+    pub fn stopping(&self) -> bool {
+        self.stop.load(Ordering::SeqCst)
+    }
+
+    /// Addresses this worker gossips with: every fleet member except the
+    /// slot the coordinator assigned to us. Empty until a handshake
+    /// supplies a shard map with a worker list.
+    pub fn gossip_peers(&self) -> Vec<String> {
+        let shard = self.shard.lock().unwrap();
+        let Some(info) = shard.as_ref() else { return Vec::new() };
+        info.workers
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| *i as u64 != info.index)
+            .map(|(_, w)| w.clone())
+            .collect()
+    }
+
+    /// Absorb one gossiped journal record: decode, warm the response cache
+    /// (first writer wins — an already-present key is a no-op), append to
+    /// our own journal and re-offer to our own log so warmth spreads
+    /// transitively. Returns whether the record was new here.
+    pub fn absorb_gossip_record(&self, key: ContentHash, bytes: &[u8]) -> bool {
+        let Some(served) = decode_served(bytes) else { return false };
+        if !self.responses.warm_insert(key, served) {
+            return false;
+        }
+        if let Some(store) = &self.resp_store {
+            store.append(key, bytes);
+        }
+        self.gossip.offer(key, bytes.to_vec());
+        self.gossip.note_received(1);
+        true
+    }
+
+    /// Start the gossip pull loop once we know our peers (first handshake
+    /// carrying a worker list). A no-op for states never wrapped in an
+    /// `Arc` (plain test states) — gossip is a daemon-only concern.
+    pub fn maybe_spawn_gossip(&self) {
+        if self.gossip_peers().is_empty() {
+            return;
+        }
+        let weak = self.self_ref.lock().unwrap().clone();
+        if weak.upgrade().is_none() {
+            return;
+        }
+        if !self.gossip_started.swap(true, Ordering::SeqCst) {
+            let _ = super::gossip::spawn_gossip_thread(weak);
+        }
     }
 }
 
@@ -144,9 +264,9 @@ pub fn worker_loop(queue: Arc<JobQueue<Job>>, state: Arc<ServiceState>) {
         let m = crate::obs::metrics();
         let waited = job.enqueued.elapsed();
         m.queue_wait.record_duration(waited);
-        m.class_queue_wait(&format!("p{}", job.req.priority.unwrap_or(0)))
+        m.class_queue_wait(&format!("p{}", job.req.common.priority.unwrap_or(0)))
             .record_duration(waited);
-        if let Some(limit) = job.req.deadline_ms {
+        if let Some(limit) = job.req.common.deadline_ms {
             if waited.as_millis() > u128::from(limit) {
                 let mut e = ProtoError::new(
                     "deadline-expired",
@@ -177,6 +297,47 @@ fn stats_json(s: &CacheStats) -> Json {
         ("disk_persisted", s.disk_persisted.into()),
         ("disk_corrupt_skipped", s.disk_corrupt_skipped.into()),
     ])
+}
+
+/// The `remote` stats object of `cache-stats`/`metrics`. Canonical counter
+/// names are bare snake_case (`hits`, `resp_shard_hits`, ...); the
+/// `remote_*` aliases of the candidate counters are kept for one release
+/// (see PROTOCOL.md). `workers` is a count in `cache-stats` and the
+/// address list in `metrics` (pinned shapes).
+fn remote_stats_json(state: &ServiceState, workers_as_addrs: bool) -> Json {
+    let (rs, count, epoch, addrs) = match &state.remote {
+        Some(p) => (p.stats(), p.len(), p.epoch(), p.addrs()),
+        None => (Default::default(), 0, 0, Vec::new()),
+    };
+    let workers = if workers_as_addrs {
+        Json::Arr(addrs.iter().map(|a| a.as_str().into()).collect())
+    } else {
+        count.into()
+    };
+    Json::obj(vec![
+        ("workers", workers),
+        ("epoch", epoch.into()),
+        ("hits", rs.remote_hits.into()),
+        ("evals", rs.remote_evals.into()),
+        ("failovers", rs.remote_failovers.into()),
+        ("resp_shard_hits", rs.resp_shard_hits.into()),
+        ("resp_shard_evals", rs.resp_shard_evals.into()),
+        ("resp_shard_failovers", rs.resp_shard_failovers.into()),
+        ("remote_hits", rs.remote_hits.into()),
+        ("remote_evals", rs.remote_evals.into()),
+        ("remote_failovers", rs.remote_failovers.into()),
+    ])
+}
+
+fn shard_json(state: &ServiceState) -> Option<Json> {
+    let shard = state.shard.lock().unwrap();
+    shard.as_ref().map(|s| {
+        Json::obj(vec![
+            ("index", s.index.into()),
+            ("total", s.total.into()),
+            ("epoch", s.epoch.into()),
+        ])
+    })
 }
 
 /// Evaluate one request to a full response line. Pure up to cache effects:
@@ -214,31 +375,25 @@ fn execute_request_inner(state: &ServiceState, req: &Request) -> String {
         }
         Command::CacheStats => {
             let (resp, cand) = state.stats();
-            let remote = state.remote.as_ref().map(|p| p.stats()).unwrap_or_default();
-            let workers = state.remote.as_ref().map(|p| p.len()).unwrap_or(0);
             let mut fields = vec![
                 ("responses", stats_json(&resp)),
                 ("candidates", stats_json(&cand)),
-                (
-                    "remote",
-                    Json::obj(vec![
-                        ("workers", workers.into()),
-                        ("remote_hits", remote.remote_hits.into()),
-                        ("remote_evals", remote.remote_evals.into()),
-                        ("remote_failovers", remote.remote_failovers.into()),
-                    ]),
-                ),
+                ("remote", remote_stats_json(state, false)),
+                ("gossip_records_sent", state.gossip.records_sent().into()),
+                ("gossip_records_received", state.gossip.records_received().into()),
+                ("gossip_log_entries", state.gossip.len().into()),
+                ("uptime_ms", uptime_ms(state).into()),
+                ("requests", crate::obs::metrics().requests_json()),
             ];
-            fields.push(("uptime_ms", uptime_ms(state).into()));
-            fields.push(("requests", crate::obs::metrics().requests_json()));
-            if let Some((index, total)) = *state.shard.lock().unwrap() {
-                let shard = Json::obj(vec![("index", index.into()), ("total", total.into())]);
+            if let Some(shard) = shard_json(state) {
                 fields.push(("shard", shard));
             }
             ok_response(&req.id, req.cmd, false, None, Json::obj(fields))
         }
         Command::Metrics => execute_metrics(state, req),
         Command::Handshake => execute_handshake(state, req),
+        Command::JournalPull => execute_journal_pull(state, req),
+        Command::Join | Command::Leave => execute_membership(state, req),
         Command::EvalCandidate => match execute_eval_candidate(state, req) {
             Ok(resp) => resp,
             Err(mut e) => {
@@ -246,21 +401,28 @@ fn execute_request_inner(state: &ServiceState, req: &Request) -> String {
                 error_response(&e)
             }
         },
-        Command::Dse | Command::Des | Command::Flow => match execute_job(state, req) {
-            Ok((key, payload, cached)) => match payload {
-                Served::Ok(result) => ok_response(&req.id, req.cmd, cached, Some(&key), result),
-                Served::Failed(msg) => {
-                    let mut e = ProtoError::new("eval-failed", msg);
-                    e.id = req.id.clone();
-                    error_response(&e)
-                }
-            },
-            Err(mut e) => {
-                e.id = req.id.clone();
-                error_response(&e)
-            }
-        },
+        Command::EvalResponse => {
+            let VerbPayload::EvalResponse(p) = &req.verb else {
+                return mismatched_payload(req);
+            };
+            serve_job(state, req, p.job_cmd, &p.job, p.key.as_deref())
+        }
+        Command::Dse | Command::Des | Command::Flow => {
+            let VerbPayload::Job(job) = &req.verb else {
+                return mismatched_payload(req);
+            };
+            serve_job(state, req, req.cmd, job, None)
+        }
     }
+}
+
+/// A request whose payload variant does not match its command can only be
+/// built by a bug (the parser always pairs them); answer a structured
+/// `internal` error instead of panicking a worker thread.
+fn mismatched_payload(req: &Request) -> String {
+    let mut e = ProtoError::new("internal", "request payload does not match its cmd");
+    e.id = req.id.clone();
+    error_response(&e)
 }
 
 fn uptime_ms(state: &ServiceState) -> u64 {
@@ -270,7 +432,8 @@ fn uptime_ms(state: &ServiceState) -> u64 {
 /// The `metrics` verb: the process-wide registry as one JSON object —
 /// per-verb request counters, latency histogram summaries, DES throughput —
 /// plus (on a coordinator) the remote counters and worker addresses
-/// `olympus stats` fans out to, and (on a worker) the shard assignment.
+/// `olympus stats` fans out to, the gossip counters, and (on a worker) the
+/// shard assignment.
 fn execute_metrics(state: &ServiceState, req: &Request) -> String {
     let m = crate::obs::metrics();
     let mut fields = vec![
@@ -278,22 +441,20 @@ fn execute_metrics(state: &ServiceState, req: &Request) -> String {
         ("requests", m.requests_json()),
         ("histograms", m.histograms_json()),
         ("des", m.des_json()),
-    ];
-    if let Some(pool) = &state.remote {
-        let rs = pool.stats();
-        let workers: Vec<Json> = pool.addrs().iter().map(|a| a.as_str().into()).collect();
-        fields.push((
-            "remote",
+        (
+            "gossip",
             Json::obj(vec![
-                ("workers", Json::Arr(workers)),
-                ("remote_hits", rs.remote_hits.into()),
-                ("remote_evals", rs.remote_evals.into()),
-                ("remote_failovers", rs.remote_failovers.into()),
+                ("records_sent", state.gossip.records_sent().into()),
+                ("records_received", state.gossip.records_received().into()),
+                ("log_entries", state.gossip.len().into()),
             ]),
-        ));
+        ),
+    ];
+    if state.remote.is_some() {
+        fields.push(("remote", remote_stats_json(state, true)));
     }
-    if let Some((index, total)) = *state.shard.lock().unwrap() {
-        fields.push(("shard", Json::obj(vec![("index", index.into()), ("total", total.into())])));
+    if let Some(shard) = shard_json(state) {
+        fields.push(("shard", shard));
     }
     ok_response(&req.id, req.cmd, false, None, Json::obj(fields))
 }
@@ -301,14 +462,19 @@ fn execute_metrics(state: &ServiceState, req: &Request) -> String {
 /// Validate a coordinator's `handshake`: exact protocol version, then a
 /// well-formed shard map. Every failure mode — malformed registration,
 /// version skew, truncated shard map — is a structured error on a live
-/// connection, never a drop or a panic.
+/// connection, never a drop or a panic. Success stores the shard
+/// assignment, answers with this build's capability list, and (once peers
+/// are known) starts the gossip pull loop.
 fn execute_handshake(state: &ServiceState, req: &Request) -> String {
+    let VerbPayload::Handshake(h) = &req.verb else {
+        return mismatched_payload(req);
+    };
     let fail = |code: &'static str, msg: String| {
         let mut e = ProtoError::new(code, msg);
         e.id = req.id.clone();
         error_response(&e)
     };
-    let Some(version) = req.proto_version else {
+    let Some(version) = h.proto_version else {
         return fail("bad-request", "handshake requires integer field 'proto_version'".into());
     };
     if version != PROTO_VERSION {
@@ -317,13 +483,20 @@ fn execute_handshake(state: &ServiceState, req: &Request) -> String {
             format!("coordinator speaks protocol {version}, this worker speaks {PROTO_VERSION}"),
         );
     }
-    let Some(map) = &req.shard_map else {
+    let Some(map) = &h.shard_map else {
         return fail("bad-request", "handshake requires object field 'shard_map'".into());
     };
     match parse_shard_map(map) {
         Err(msg) => fail("bad-request", msg),
-        Ok((index, total)) => {
-            *state.shard.lock().unwrap() = Some((index, total));
+        Ok(info) => {
+            let shard = Json::obj(vec![
+                ("index", info.index.into()),
+                ("total", info.total.into()),
+                ("epoch", info.epoch.into()),
+            ]);
+            *state.shard.lock().unwrap() = Some(info);
+            state.maybe_spawn_gossip();
+            let caps: Vec<Json> = CAPABILITIES.iter().map(|c| (*c).into()).collect();
             ok_response(
                 &req.id,
                 req.cmd,
@@ -331,7 +504,8 @@ fn execute_handshake(state: &ServiceState, req: &Request) -> String {
                 None,
                 Json::obj(vec![
                     ("proto_version", PROTO_VERSION.into()),
-                    ("shard", Json::obj(vec![("index", index.into()), ("total", total.into())])),
+                    ("capabilities", Json::Arr(caps)),
+                    ("shard", shard),
                 ]),
             )
         }
@@ -339,10 +513,11 @@ fn execute_handshake(state: &ServiceState, req: &Request) -> String {
 }
 
 /// Well-formedness of a handshake `shard_map`: an object with
-/// `index < total`, `total >= 1` and — when present — exactly `total`
-/// string entries in `workers`. Error messages name the offending field so
-/// a truncated map is diagnosable from the coordinator side.
-fn parse_shard_map(map: &Json) -> Result<(u64, u64), String> {
+/// `index < total`, `total >= 1`, an optional non-negative `epoch` and —
+/// when present — exactly `total` string entries in `workers`. Error
+/// messages name the offending field so a truncated map is diagnosable
+/// from the coordinator side.
+fn parse_shard_map(map: &Json) -> Result<ShardInfo, String> {
     if map.as_obj().is_none() {
         return Err("'shard_map' must be an object".to_string());
     }
@@ -360,6 +535,13 @@ fn parse_shard_map(map: &Json) -> Result<(u64, u64), String> {
     if index >= total {
         return Err(format!("'shard_map.index' {index} out of range for total {total}"));
     }
+    let epoch = match map.get("epoch") {
+        Json::Null => 0,
+        j => j
+            .as_u64()
+            .ok_or_else(|| "'shard_map.epoch' must be a non-negative integer".to_string())?,
+    };
+    let mut workers = Vec::new();
     if map.get("workers") != &Json::Null {
         let arr = map
             .get("workers")
@@ -371,11 +553,75 @@ fn parse_shard_map(map: &Json) -> Result<(u64, u64), String> {
                 arr.len()
             ));
         }
-        if arr.iter().any(|w| w.as_str().is_none()) {
-            return Err("'shard_map.workers' entries must be strings".to_string());
+        for w in arr {
+            let addr = w
+                .as_str()
+                .ok_or_else(|| "'shard_map.workers' entries must be strings".to_string())?;
+            workers.push(addr.to_string());
         }
     }
-    Ok((index, total))
+    Ok(ShardInfo { index, total, epoch, workers })
+}
+
+/// The `journal-pull` verb: one page of this worker's gossip log, records
+/// rendered as `{key: <32-hex>, value: <journal bytes as text>}`. The page
+/// size is clamped so a hostile `limit` cannot make the response line
+/// unbounded.
+fn execute_journal_pull(state: &ServiceState, req: &Request) -> String {
+    let VerbPayload::JournalPull(p) = &req.verb else {
+        return mismatched_payload(req);
+    };
+    let limit = p.limit.unwrap_or(GOSSIP_PAGE_LIMIT).clamp(1, 1024);
+    let page = state.gossip.page(p.cursor, limit, p.shard);
+    let records: Vec<Json> = page
+        .records
+        .iter()
+        .map(|(key, value)| {
+            Json::obj(vec![
+                ("key", key.to_hex().into()),
+                ("value", String::from_utf8_lossy(value).into_owned().into()),
+            ])
+        })
+        .collect();
+    let result = Json::obj(vec![
+        ("records", Json::Arr(records)),
+        ("next", page.next.into()),
+        ("total", page.total.into()),
+    ]);
+    ok_response(&req.id, req.cmd, false, None, result)
+}
+
+/// The `join`/`leave` membership verbs: edit the worker fleet at runtime
+/// and answer with the re-rendezvoused map (bumped epoch + address list).
+/// Only a coordinator has a fleet to edit; rejected edits (duplicate join,
+/// unknown leave, unreachable joiner) are structured errors and change
+/// nothing.
+fn execute_membership(state: &ServiceState, req: &Request) -> String {
+    let VerbPayload::Membership(m) = &req.verb else {
+        return mismatched_payload(req);
+    };
+    let fail = |code: &'static str, msg: String| {
+        let mut e = ProtoError::new(code, msg);
+        e.id = req.id.clone();
+        error_response(&e)
+    };
+    let Some(pool) = &state.remote else {
+        return fail("no-fleet", "this server has no worker fleet (start with --workers)".into());
+    };
+    let edit = match req.cmd {
+        Command::Join => pool.join(&m.worker),
+        _ => pool.leave(&m.worker),
+    };
+    if let Err(msg) = edit {
+        return fail("membership-rejected", msg);
+    }
+    let workers: Vec<Json> = pool.addrs().iter().map(|a| a.as_str().into()).collect();
+    let result = Json::obj(vec![
+        ("epoch", pool.epoch().into()),
+        ("total", pool.len().into()),
+        ("workers", Json::Arr(workers)),
+    ]);
+    ok_response(&req.id, req.cmd, false, None, result)
 }
 
 /// Evaluate one DSE candidate for a coordinator (`eval-candidate`),
@@ -386,25 +632,26 @@ fn parse_shard_map(map: &Json) -> Result<(u64, u64), String> {
 /// produced; the derived key is cross-checked against the routed one so
 /// codec skew fails structured instead of caching under a wrong address.
 fn execute_eval_candidate(state: &ServiceState, req: &Request) -> Result<String, ProtoError> {
-    let module = load_module(req)?;
-    let platform = load_platform(req)?;
-    let objective = match &req.objective_json {
+    let VerbPayload::EvalCandidate(p) = &req.verb else {
+        return Err(ProtoError::new("internal", "request payload does not match its cmd"));
+    };
+    let module = load_module(&p.ir)?;
+    let platform = load_platform(p.platform.as_deref(), p.platform_json.as_ref())?;
+    let objective = match &p.objective_json {
         Some(j) => objective_from_json(j).ok_or_else(|| {
             ProtoError::new("bad-request", "undecodable 'objective_json' (version skew?)")
         })?,
         None => DseObjective::Analytic,
     };
-    let pipeline = req.point_pipeline.as_deref().ok_or_else(|| {
-        ProtoError::new("bad-request", "'eval-candidate' requires string field 'point_pipeline'")
-    })?;
-    let point = CandidatePoint::new(req.point_label.as_deref().unwrap_or("remote"), pipeline);
+    let label = p.point_label.as_deref().unwrap_or("remote");
+    let point = CandidatePoint::new(label, &p.point_pipeline);
     let key = candidate_cache_key(
         &module_fingerprint(&module),
         &platform.fingerprint(),
         &point.pipeline,
         &format!("{objective:?}"),
     );
-    if let Some(expected) = &req.key {
+    if let Some(expected) = &p.key {
         if *expected != key.to_hex() {
             return Err(ProtoError::new(
                 "key-mismatch",
@@ -429,41 +676,142 @@ fn execute_eval_candidate(state: &ServiceState, req: &Request) -> Result<String,
     Ok(ok_response(&req.id, req.cmd, cached, Some(&key.to_hex()), outcome_to_json(&outcome)))
 }
 
-/// Resolve + evaluate a job command through the response cache. Returns the
-/// content-address (hex), the served payload and whether it came from cache.
-fn execute_job(
+/// Serve one whole job — a client-facing `dse`/`des`/`flow`, or the inner
+/// job of a routed `eval-response` — through the response cache. The
+/// response key is derived here (never trusted from the wire); a routed key
+/// that disagrees is a structured `key-mismatch`. Client-facing jobs on a
+/// coordinator first try the shard route ([`try_route_response`]); fresh
+/// local computes feed the gossip log.
+fn serve_job(
     state: &ServiceState,
     req: &Request,
-) -> Result<(String, Served, bool), ProtoError> {
-    let module = load_module(req)?;
-    let axis = load_platform_axis(req)?;
-    let platform = match &axis {
-        Some(specs) => specs[0].clone(),
-        None => load_platform(req)?,
+    cmd: Command,
+    job: &JobPayload,
+    routed_key: Option<&str>,
+) -> String {
+    let (module, flow) = match prepare_job(state, cmd, job) {
+        Ok(mf) => mf,
+        Err(mut e) => {
+            e.id = req.id.clone();
+            return error_response(&e);
+        }
     };
-    let mut flow = build_flow(state, req, platform)?;
-    if let Some(specs) = axis {
-        flow = flow.with_platforms(specs);
+    let key = flow.response_key(cmd.as_str(), &module);
+    if let Some(expected) = routed_key {
+        if expected != key.to_hex() {
+            let mut e = ProtoError::new(
+                "key-mismatch",
+                format!(
+                    "coordinator routed response key {expected} but this worker derives {}; \
+                     refusing to answer under a disputed address (version skew?)",
+                    key.to_hex()
+                ),
+            );
+            e.id = req.id.clone();
+            return error_response(&e);
+        }
     }
-    let cmd = req.cmd;
-    // `dse` and `flow` can share a Flow::cache_key but render different
-    // payloads, so the command is part of the response address
-    let key = crate::util::ContentHash::of_parts(&[
-        "olympus-serve-v1",
-        cmd.as_str(),
-        &flow.cache_key(&module).to_hex(),
-    ]);
+    if routed_key.is_none() {
+        if let Some(line) = try_route_response(state, req, cmd, job, key) {
+            return line;
+        }
+    }
     let (served, cached) = state.responses.get_or_compute(key, || {
         match flow.run(module.clone(), "app") {
             Ok(r) => Served::Ok(render_result(cmd, &r)),
             Err(e) => Served::Failed(format!("{e:#}")),
         }
     });
-    Ok((key.to_hex(), served, cached))
+    if !cached {
+        if let Some(bytes) = encode_served(&served) {
+            state.gossip.offer(key, bytes);
+        }
+    }
+    match served {
+        Served::Ok(result) => ok_response(&req.id, cmd, cached, Some(&key.to_hex()), result),
+        Served::Failed(msg) => {
+            let mut e = ProtoError::new("eval-failed", msg);
+            e.id = req.id.clone();
+            error_response(&e)
+        }
+    }
 }
 
-fn load_module(req: &Request) -> Result<Module, ProtoError> {
-    let text = req.ir.as_deref().ok_or_else(|| ProtoError::new("bad-request", "missing 'ir'"))?;
+/// Route a client-facing job to the response-key shard owner (coordinator
+/// only). `None` means "answer locally": no fleet, or the owner failed
+/// (local failover recomputes the same bytes by determinism, surfaced in
+/// `resp_shard_failovers`). A local cache hit short-circuits the route so
+/// journals written before the fabric existed stay warm. The owner's raw
+/// response line passes through *verbatim* — it answered under the
+/// client-facing `cmd` and the same `id`, so the bytes are exactly what a
+/// direct submission to that worker would have produced.
+fn try_route_response(
+    state: &ServiceState,
+    req: &Request,
+    cmd: Command,
+    job: &JobPayload,
+    key: ContentHash,
+) -> Option<String> {
+    let pool = state.remote.as_ref()?;
+    if pool.is_empty() {
+        return None;
+    }
+    if let Some(served) = state.responses.get(key) {
+        return Some(match served {
+            Served::Ok(result) => ok_response(&req.id, cmd, true, Some(&key.to_hex()), result),
+            Served::Failed(msg) => {
+                let mut e = ProtoError::new("eval-failed", msg);
+                e.id = req.id.clone();
+                error_response(&e)
+            }
+        });
+    }
+    let fwd = Request {
+        cmd: Command::EvalResponse,
+        id: req.id.clone(),
+        common: req.common.clone(),
+        verb: VerbPayload::EvalResponse(EvalResponsePayload {
+            job_cmd: cmd,
+            key: Some(key.to_hex()),
+            job: job.clone(),
+        }),
+    };
+    let line = encode_request(&fwd).to_string();
+    match pool.eval_response_line(key, &line) {
+        Ok(raw) => Some(raw),
+        Err(msg) => {
+            pool.note_response_failover();
+            crate::obs::warn(
+                "response-failover",
+                &[("key", key.to_hex().into()), ("error", msg.into())],
+            );
+            None
+        }
+    }
+}
+
+/// Resolve a job payload into its module + fully configured flow. Shared by
+/// direct jobs and routed `eval-response` jobs so both sides derive the
+/// same response key from the same inputs.
+fn prepare_job(
+    state: &ServiceState,
+    cmd: Command,
+    job: &JobPayload,
+) -> Result<(Module, Flow), ProtoError> {
+    let module = load_module(&job.ir)?;
+    let axis = load_platform_axis(job)?;
+    let platform = match &axis {
+        Some(specs) => specs[0].clone(),
+        None => load_platform(job.platform.as_deref(), job.platform_json.as_ref())?,
+    };
+    let mut flow = build_flow(state, cmd, job, platform)?;
+    if let Some(specs) = axis {
+        flow = flow.with_platforms(specs);
+    }
+    Ok((module, flow))
+}
+
+fn load_module(text: &str) -> Result<Module, ProtoError> {
     let m = parse_module(text).map_err(|e| ProtoError::new("bad-ir", e.to_string()))?;
     let errs = crate::ir::verify_module(&m);
     if !errs.is_empty() {
@@ -480,9 +828,9 @@ fn load_module(req: &Request) -> Result<Module, ProtoError> {
 /// (the wire carries names, not full specs), mutually exclusive with
 /// `platform`/`platform_json`. The first entry doubles as the primary
 /// platform, mirroring the CLI's `--platforms`.
-fn load_platform_axis(req: &Request) -> Result<Option<Vec<PlatformSpec>>, ProtoError> {
-    let Some(names) = &req.platforms else { return Ok(None) };
-    if req.platform.is_some() || req.platform_json.is_some() {
+fn load_platform_axis(job: &JobPayload) -> Result<Option<Vec<PlatformSpec>>, ProtoError> {
+    let Some(names) = &job.platforms else { return Ok(None) };
+    if job.platform.is_some() || job.platform_json.is_some() {
         return Err(ProtoError::new(
             "bad-request",
             "'platforms' is mutually exclusive with 'platform'/'platform_json'; the axis \
@@ -507,12 +855,12 @@ fn load_platform_axis(req: &Request) -> Result<Option<Vec<PlatformSpec>>, ProtoE
     Ok(Some(specs))
 }
 
-fn load_platform(req: &Request) -> Result<PlatformSpec, ProtoError> {
-    if let Some(j) = &req.platform_json {
+fn load_platform(name: Option<&str>, json: Option<&Json>) -> Result<PlatformSpec, ProtoError> {
+    if let Some(j) = json {
         return PlatformSpec::from_json(j)
             .map_err(|e| ProtoError::new("bad-platform", format!("{e:#}")));
     }
-    let name = req.platform.as_deref().unwrap_or("u280");
+    let name = name.unwrap_or("u280");
     builtin(name).ok_or_else(|| {
         ProtoError::new(
             "bad-platform",
@@ -529,13 +877,14 @@ fn load_platform(req: &Request) -> Result<PlatformSpec, ProtoError> {
 /// are bit-identical to single-shot runs.
 fn build_flow(
     state: &ServiceState,
-    req: &Request,
+    cmd: Command,
+    job: &JobPayload,
     platform: PlatformSpec,
 ) -> Result<Flow, ProtoError> {
     // a pre-resolved `scenario_json` (how the CLI ships trace files, so the
     // daemon never needs the client's filesystem) wins over the spec string;
     // the string form still resolves `trace:` against the daemon's own disk
-    let scenario = match (&req.scenario_json, req.scenario.as_deref()) {
+    let scenario = match (&job.scenario_json, job.scenario.as_deref()) {
         (Some(j), _) => Some(WorkloadScenario::from_json(j).ok_or_else(|| {
             ProtoError::new("bad-request", "undecodable 'scenario_json' (version skew?)")
         })?),
@@ -546,20 +895,20 @@ fn build_flow(
         (None, None) => None,
     };
     let mut cfg = DesConfig::default();
-    if let Some(seed) = req.seed {
+    if let Some(seed) = job.seed {
         cfg.seed = seed;
     }
-    if let Some(spec) = req.autoscale.as_deref() {
+    if let Some(spec) = job.autoscale.as_deref() {
         cfg.autoscale =
             Some(AutoscalePolicy::parse(spec).map_err(|e| ProtoError::new("bad-request", e))?);
     }
-    let slo = match req.slo.as_deref() {
+    let slo = match job.slo.as_deref() {
         Some(spec) => Some(SloSpec::parse(spec).map_err(|e| ProtoError::new("bad-request", e))?),
         None => None,
     };
     // an SLO only scores under the slo-score objective; alongside an
     // explicit analytic/des-score objective it would be silently dead
-    if slo.is_some() && matches!(req.objective.as_deref(), Some("analytic") | Some("des-score")) {
+    if slo.is_some() && matches!(job.objective.as_deref(), Some("analytic") | Some("des-score")) {
         return Err(ProtoError::new(
             "bad-request",
             "'slo' only scores under objective 'slo-score'; drop it or switch objective",
@@ -567,12 +916,12 @@ fn build_flow(
     }
     // an explicit pipeline skips the DSE entirely, so search fields on the
     // same request would be silently dead — reject, mirroring the CLI
-    if req.pipeline.is_some()
-        && (req.driver.is_some()
-            || req.budget.is_some()
-            || req.search_seed.is_some()
-            || req.factors.is_some()
-            || req.platforms.is_some())
+    if job.pipeline.is_some()
+        && (job.driver.is_some()
+            || job.budget.is_some()
+            || job.search_seed.is_some()
+            || job.factors.is_some()
+            || job.platforms.is_some())
     {
         return Err(ProtoError::new(
             "bad-request",
@@ -589,17 +938,17 @@ fn build_flow(
         // NOT part of any cache key
         flow = flow.with_remote(pool.clone());
     }
-    flow.dse_factors = req.factors.clone().unwrap_or_default();
+    flow.dse_factors = job.factors.clone().unwrap_or_default();
     flow.des_config = cfg.clone();
     // driver + budget round-trip into the flow (and thus the cache key)
     let driver = crate::search::DriverKind::from_flags(
-        req.driver.as_deref().unwrap_or("exhaustive"),
-        req.budget.map(|b| b as usize),
-        req.search_seed,
+        job.driver.as_deref().unwrap_or("exhaustive"),
+        job.budget.map(|b| b as usize),
+        job.search_seed,
     )
     .map_err(|e| ProtoError::new("bad-request", e))?;
     flow = flow.with_driver(driver);
-    match (req.objective.as_deref(), &slo) {
+    match (job.objective.as_deref(), &slo) {
         (None, None) | (Some("analytic"), _) => {}
         // a bare `slo` implies the slo-score objective
         (None, Some(sl)) | (Some("slo-score"), Some(sl)) => {
@@ -623,9 +972,9 @@ fn build_flow(
             ));
         }
     }
-    match req.cmd {
+    match cmd {
         Command::Dse => {
-            if let Some(p) = &req.pipeline {
+            if let Some(p) = &job.pipeline {
                 return Err(ProtoError::new(
                     "bad-request",
                     format!("'dse' explores strategies itself; drop pipeline '{p}' or use cmd 'flow'"),
@@ -635,20 +984,20 @@ fn build_flow(
         Command::Des => {
             let sc = scenario.clone().unwrap_or_else(|| WorkloadScenario::closed_loop(4));
             flow = flow.with_scenario(sc.clone());
-            match &req.pipeline {
+            match &job.pipeline {
                 Some(p) => flow = flow.with_pipeline(p),
                 // no explicit pipeline: DSE picks the design, scored by the
                 // DES too (mirrors `olympus des`) — unless an slo-score
                 // objective is already in charge
                 None => {
-                    if slo.is_none() && req.objective.as_deref() != Some("slo-score") {
+                    if slo.is_none() && job.objective.as_deref() != Some("slo-score") {
                         flow = flow.with_objective(DseObjective::des_score_with(sc, cfg));
                     }
                 }
             }
         }
         Command::Flow => {
-            if let Some(p) = &req.pipeline {
+            if let Some(p) = &job.pipeline {
                 flow = flow.with_pipeline(p);
             }
             if let Some(sc) = scenario {
@@ -714,9 +1063,9 @@ mod tests {
     use crate::ir::print_module;
     use crate::service::proto::parse_request;
 
-    fn request(extra: &str) -> Request {
+    fn request_with(cmd: &str, extra: &str) -> Request {
         let ir = print_module(&fig4a_module());
-        let line = Json::obj(vec![("cmd", "dse".into()), ("ir", ir.into())]).to_string();
+        let line = Json::obj(vec![("cmd", cmd.into()), ("ir", ir.into())]).to_string();
         // splice extra fields in via reparse to keep escaping correct
         let mut v = Json::parse(&line).unwrap();
         if !extra.is_empty() {
@@ -726,6 +1075,10 @@ mod tests {
             }
         }
         parse_request(&v.to_string()).unwrap()
+    }
+
+    fn request(extra: &str) -> Request {
+        request_with("dse", extra)
     }
 
     #[test]
@@ -764,9 +1117,11 @@ mod tests {
     #[test]
     fn des_request_reports_scenario_replay() {
         let state = ServiceState::new(0, 1);
-        let mut req = request(r#"{"scenario": "closed:2", "seed": 7}"#);
-        req.cmd = Command::Des;
-        req.pipeline = Some("sanitize, iris, channel-reassign".into());
+        let req = request_with(
+            "des",
+            r#"{"scenario": "closed:2", "seed": 7,
+                "pipeline": "sanitize, iris, channel-reassign"}"#,
+        );
         let v = Json::parse(&execute_request(&state, &req)).unwrap();
         assert_eq!(v.get("ok"), &Json::Bool(true), "{v}");
         assert_eq!(v.get("result").get("jobs_completed").as_usize(), Some(2));
@@ -798,9 +1153,10 @@ mod tests {
         assert_eq!(b.get("error").get("code").as_str(), Some("bad-request"));
         // search fields alongside an explicit pipeline are dead, so the
         // protocol rejects the combination just like the CLI does
-        let mut dead = request(r#"{"driver": "successive-halving", "budget": 2}"#);
-        dead.cmd = Command::Des;
-        dead.pipeline = Some("sanitize".into());
+        let dead = request_with(
+            "des",
+            r#"{"driver": "successive-halving", "budget": 2, "pipeline": "sanitize"}"#,
+        );
         let d = Json::parse(&execute_request(&state, &dead)).unwrap();
         assert_eq!(d.get("ok"), &Json::Bool(false));
         assert_eq!(d.get("error").get("code").as_str(), Some("bad-request"));
@@ -837,14 +1193,12 @@ mod tests {
     #[test]
     fn autoscale_and_scenario_json_ride_the_response_key() {
         let state = ServiceState::new(0, 1);
-        let mk = |extra: &str| {
-            let mut r = request(extra);
-            r.cmd = Command::Des;
-            r.pipeline = Some("sanitize".into());
-            r
-        };
-        let plain = mk(r#"{"scenario": "closed:2", "seed": 7}"#);
-        let scaled = mk(r#"{"scenario": "closed:2", "seed": 7, "autoscale": "0.001:4:0:1:4"}"#);
+        let mk = |extra: &str| request_with("des", extra);
+        let plain = mk(r#"{"scenario": "closed:2", "seed": 7, "pipeline": "sanitize"}"#);
+        let scaled = mk(
+            r#"{"scenario": "closed:2", "seed": 7, "pipeline": "sanitize",
+                "autoscale": "0.001:4:0:1:4"}"#,
+        );
         let p = Json::parse(&execute_request(&state, &plain)).unwrap();
         let s = Json::parse(&execute_request(&state, &scaled)).unwrap();
         assert_eq!(p.get("ok"), &Json::Bool(true), "{p}");
@@ -853,15 +1207,16 @@ mod tests {
         // a scenario shipped pre-resolved as JSON keys identically to the
         // same scenario named by spec string
         let sc = WorkloadScenario::closed_loop(2);
-        let mut by_json = mk(r#"{"seed": 7}"#);
-        by_json.scenario = None;
-        by_json.scenario_json = Some(sc.to_json());
+        let mut by_json = mk(r#"{"seed": 7, "pipeline": "sanitize"}"#);
+        let VerbPayload::Job(job) = &mut by_json.verb else { panic!("job payload") };
+        job.scenario = None;
+        job.scenario_json = Some(sc.to_json());
         let j = Json::parse(&execute_request(&state, &by_json)).unwrap();
         assert_eq!(j.get("ok"), &Json::Bool(true), "{j}");
         assert_eq!(j.get("key"), p.get("key"), "resolved scenario keys like its spec");
         assert_eq!(j.get("cached"), &Json::Bool(true), "and replays the cached payload");
         // a malformed autoscale spec fails structured
-        let bad = mk(r#"{"scenario": "closed:2", "autoscale": "nope"}"#);
+        let bad = mk(r#"{"scenario": "closed:2", "pipeline": "sanitize", "autoscale": "nope"}"#);
         let b = Json::parse(&execute_request(&state, &bad)).unwrap();
         assert_eq!(b.get("error").get("code").as_str(), Some("bad-request"));
     }
@@ -872,7 +1227,7 @@ mod tests {
         let queue = Arc::new(JobQueue::new());
         let (tx, rx) = mpsc::channel();
         let mut req = request("{}");
-        req.deadline_ms = Some(0);
+        req.common.deadline_ms = Some(0);
         // enqueued in the past, so any deadline has expired by pickup
         let enqueued = std::time::Instant::now() - std::time::Duration::from_millis(50);
         queue.push(Job { req, reply: tx, enqueued });
@@ -918,9 +1273,10 @@ mod tests {
         let v = Json::parse(&execute_request(&state, &both)).unwrap();
         assert_eq!(v.get("error").get("code").as_str(), Some("bad-request"));
         // axis alongside an explicit pipeline (the axis would be dead)
-        let mut dead = request(r#"{"platforms": ["u280", "generic-ddr"]}"#);
-        dead.cmd = Command::Des;
-        dead.pipeline = Some("sanitize".into());
+        let dead = request_with(
+            "des",
+            r#"{"platforms": ["u280", "generic-ddr"], "pipeline": "sanitize"}"#,
+        );
         let v = Json::parse(&execute_request(&state, &dead)).unwrap();
         assert_eq!(v.get("error").get("code").as_str(), Some("bad-request"));
         assert!(v.get("error").get("message").as_str().unwrap().contains("platforms"), "{v}");
@@ -944,5 +1300,147 @@ mod tests {
         );
         // only the two new replicate/full x4 variants (plus nothing else) evaluate
         assert_eq!(after.misses, cand_misses + 2, "{after:?}");
+    }
+
+    #[test]
+    fn handshake_announces_capabilities_and_epoch() {
+        let state = ServiceState::new(0, 1);
+        let line = format!(
+            r#"{{"cmd": "handshake", "proto_version": {PROTO_VERSION},
+                "capabilities": ["response-shard"],
+                "shard_map": {{"index": 0, "total": 2, "epoch": 5,
+                               "workers": ["a:1", "b:2"]}}}}"#
+        );
+        let req = parse_request(&line).unwrap();
+        let v = Json::parse(&execute_request(&state, &req)).unwrap();
+        assert_eq!(v.get("ok"), &Json::Bool(true), "{v}");
+        assert_eq!(v.get("result").get("proto_version").as_u64(), Some(PROTO_VERSION));
+        let caps = v.get("result").get("capabilities").as_arr().unwrap();
+        assert!(caps.iter().any(|c| c.as_str() == Some("journal-gossip")), "{v}");
+        assert_eq!(v.get("result").get("shard").get("epoch").as_u64(), Some(5));
+        // the stored shard info yields the peer list (everyone but us)
+        assert_eq!(state.gossip_peers(), vec!["b:2".to_string()]);
+        // ...and rides cache-stats / metrics
+        let stats = parse_request(r#"{"cmd": "cache-stats"}"#).unwrap();
+        let s = Json::parse(&execute_request(&state, &stats)).unwrap();
+        assert_eq!(s.get("result").get("shard").get("epoch").as_u64(), Some(5));
+        // a malformed epoch is a structured error
+        let bad = parse_request(&format!(
+            r#"{{"cmd": "handshake", "proto_version": {PROTO_VERSION},
+                "shard_map": {{"index": 0, "total": 1, "epoch": "x"}}}}"#
+        ))
+        .unwrap();
+        let b = Json::parse(&execute_request(&state, &bad)).unwrap();
+        assert_eq!(b.get("error").get("code").as_str(), Some("bad-request"));
+        assert!(b.get("error").get("message").as_str().unwrap().contains("epoch"), "{b}");
+    }
+
+    #[test]
+    fn v1_handshake_gets_structured_proto_mismatch() {
+        let state = ServiceState::new(0, 1);
+        let req = parse_request(
+            r#"{"cmd": "handshake", "proto_version": 1, "shard_map": {"index": 0, "total": 1}}"#,
+        )
+        .unwrap();
+        let v = Json::parse(&execute_request(&state, &req)).unwrap();
+        assert_eq!(v.get("ok"), &Json::Bool(false));
+        assert_eq!(v.get("error").get("code").as_str(), Some("proto-mismatch"));
+        let msg = v.get("error").get("message").as_str().unwrap();
+        assert!(msg.contains("speaks protocol 1"), "{msg}");
+    }
+
+    #[test]
+    fn journal_pull_pages_the_gossip_log() {
+        let state = ServiceState::new(0, 1);
+        let job = request(r#"{"factors": [2]}"#);
+        let served = Json::parse(&execute_request(&state, &job)).unwrap();
+        let key = served.get("key").as_str().unwrap().to_string();
+        assert_eq!(state.gossip.len(), 1, "a fresh compute feeds the gossip log");
+        let pull = parse_request(r#"{"cmd": "journal-pull", "cursor": 0}"#).unwrap();
+        let v = Json::parse(&execute_request(&state, &pull)).unwrap();
+        assert_eq!(v.get("ok"), &Json::Bool(true), "{v}");
+        let result = v.get("result");
+        assert_eq!(result.get("next").as_u64(), Some(1));
+        assert_eq!(result.get("total").as_u64(), Some(1));
+        let records = result.get("records").as_arr().unwrap();
+        assert_eq!(records.len(), 1);
+        assert_eq!(records[0].get("key").as_str(), Some(key.as_str()));
+        // the value is the exact journal encoding of the served result
+        let value = records[0].get("value").as_str().unwrap();
+        assert_eq!(Json::parse(value).unwrap().get("ok"), served.get("result"));
+    }
+
+    #[test]
+    fn absorbed_gossip_records_serve_bit_identical_repeats() {
+        let a = ServiceState::new(0, 1);
+        let req = request(r#"{"factors": [2], "id": 1}"#);
+        let direct = execute_request(&a, &req);
+        let fresh = Json::parse(&direct).unwrap();
+        let key = ContentHash::from_hex(fresh.get("key").as_str().unwrap()).unwrap();
+        let page = a.gossip.page(0, 10, None);
+        assert_eq!(page.records.len(), 1);
+        let (gossip_key, bytes) = &page.records[0];
+        assert_eq!(*gossip_key, key);
+
+        let b = ServiceState::new(0, 1);
+        assert!(b.absorb_gossip_record(key, bytes), "first absorb is new");
+        assert!(!b.absorb_gossip_record(key, bytes), "repeat absorb is a no-op");
+        assert_eq!(b.gossip.records_received(), 1);
+        assert_eq!(b.gossip.len(), 1, "absorbed records re-offer to our own log");
+        // the warmed cache answers the repeat without evaluating anything
+        let warmed = Json::parse(&execute_request(&b, &req)).unwrap();
+        assert_eq!(warmed.get("cached"), &Json::Bool(true), "{warmed}");
+        assert_eq!(warmed.get("result"), fresh.get("result"), "bit-identical payload");
+        assert_eq!(warmed.get("key"), fresh.get("key"));
+        assert_eq!(b.responses.stats().misses, 0, "zero evaluations after gossip warmup");
+    }
+
+    #[test]
+    fn eval_response_serves_bit_identical_to_direct() {
+        let a = ServiceState::new(0, 1);
+        let direct_req = request(r#"{"factors": [2], "id": "j1"}"#);
+        let direct = execute_request(&a, &direct_req);
+
+        let b = ServiceState::new(0, 1);
+        let VerbPayload::Job(job) = &direct_req.verb else { panic!("job payload") };
+        let routed_req = Request {
+            cmd: Command::EvalResponse,
+            id: direct_req.id.clone(),
+            common: direct_req.common.clone(),
+            verb: VerbPayload::EvalResponse(EvalResponsePayload {
+                job_cmd: Command::Dse,
+                key: None,
+                job: job.clone(),
+            }),
+        };
+        let routed = execute_request(&b, &routed_req);
+        assert_eq!(routed, direct, "routed answer must be byte-identical to direct");
+        // ...and the encode/parse round trip preserves that
+        let reparsed = parse_request(&encode_request(&routed_req).to_string()).unwrap();
+        assert_eq!(reparsed, routed_req);
+        // a disputed key is refused before any evaluation happens
+        let disputed = Request {
+            verb: VerbPayload::EvalResponse(EvalResponsePayload {
+                job_cmd: Command::Dse,
+                key: Some("0".repeat(32)),
+                job: job.clone(),
+            }),
+            ..routed_req
+        };
+        let v = Json::parse(&execute_request(&b, &disputed)).unwrap();
+        assert_eq!(v.get("error").get("code").as_str(), Some("key-mismatch"));
+    }
+
+    #[test]
+    fn membership_without_a_fleet_fails_structured() {
+        let state = ServiceState::new(0, 1);
+        let join = parse_request(r#"{"cmd": "join", "worker": "h:1", "id": 4}"#).unwrap();
+        let v = Json::parse(&execute_request(&state, &join)).unwrap();
+        assert_eq!(v.get("ok"), &Json::Bool(false));
+        assert_eq!(v.get("error").get("code").as_str(), Some("no-fleet"));
+        assert_eq!(v.get("id").as_u64(), Some(4));
+        let leave = parse_request(r#"{"cmd": "leave", "worker": "h:1"}"#).unwrap();
+        let v = Json::parse(&execute_request(&state, &leave)).unwrap();
+        assert_eq!(v.get("error").get("code").as_str(), Some("no-fleet"));
     }
 }

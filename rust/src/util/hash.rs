@@ -77,6 +77,16 @@ impl ContentHash {
     pub fn to_hex(self) -> String {
         format!("{:032x}", self.0)
     }
+
+    /// Inverse of [`ContentHash::to_hex`]: parse exactly 32 hex digits.
+    /// Wire payloads (gossiped journal records, precomputed `key` fields)
+    /// carry keys in hex; anything else is `None`, never a panic.
+    pub fn from_hex(hex: &str) -> Option<ContentHash> {
+        if hex.len() != 32 || !hex.bytes().all(|b| b.is_ascii_hexdigit()) {
+            return None;
+        }
+        u128::from_str_radix(hex, 16).ok().map(ContentHash)
+    }
 }
 
 impl fmt::Display for ContentHash {
@@ -110,5 +120,17 @@ mod tests {
         let hex = h.to_hex();
         assert_eq!(hex.len(), 32);
         assert_eq!(hex, h.to_string());
+    }
+
+    #[test]
+    fn hex_round_trips_and_rejects_garbage() {
+        let h = ContentHash::of_parts(&["hello"]);
+        assert_eq!(ContentHash::from_hex(&h.to_hex()), Some(h));
+        for probe in [ContentHash(0), ContentHash(u128::MAX)] {
+            assert_eq!(ContentHash::from_hex(&probe.to_hex()), Some(probe));
+        }
+        assert_eq!(ContentHash::from_hex("too short"), None);
+        assert_eq!(ContentHash::from_hex(&"f".repeat(33)), None);
+        assert_eq!(ContentHash::from_hex(&"g".repeat(32)), None);
     }
 }

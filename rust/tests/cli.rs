@@ -507,6 +507,16 @@ fn serve_and_submit_round_trip_with_cache() {
     let s = String::from_utf8_lossy(&stats.stdout);
     assert!(s.contains("\"hits\":1"), "{s}");
 
+    // membership verbs against a fleetless daemon: a structured no-fleet
+    // error surfaced through the CLI, not a hang or a dropped connection
+    let join = olympus().args(["join", "127.0.0.1:1", "--addr", addr.as_str()]).output().unwrap();
+    assert!(!join.status.success());
+    assert!(
+        String::from_utf8_lossy(&join.stderr).contains("no-fleet"),
+        "{}",
+        String::from_utf8_lossy(&join.stderr)
+    );
+
     child.kill().unwrap();
     let _ = child.wait();
 }

@@ -9,6 +9,12 @@
 //! deadline is a different key), and the new scenario kinds (trace, diurnal,
 //! slo-score, autoscale) serve byte-identically across worker count and
 //! cache temperature.
+//!
+//! The v2 wire protocol's fabric is covered end-to-end too: whole requests
+//! route to the worker owning their response key's rendezvous shard,
+//! workers gossip their journals to each other, a malformed-request sweep
+//! exercises the unified error shape on every verb, and `join`/`leave`
+//! resize the fleet at runtime without a restart or a recompute.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpStream};
@@ -83,6 +89,18 @@ fn wait_for_lock_release(dir: &std::path::Path) {
     panic!("journal writer locks were not released after shutdown");
 }
 
+/// Poll `cond` for up to ~8s (gossip rounds are 200ms apart); panic with
+/// `what` on timeout.
+fn wait_until(what: &str, mut cond: impl FnMut() -> bool) {
+    for _ in 0..160 {
+        if cond() {
+            return;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(50));
+    }
+    panic!("timed out waiting for {what}");
+}
+
 fn dse_request(seed: u64, factors: &[u64]) -> Vec<(&'static str, Json)> {
     vec![
         ("cmd", "dse".into()),
@@ -135,6 +153,70 @@ fn malformed_requests_get_structured_errors_and_connection_survives() {
     assert_eq!(v.get("ok"), &Json::Bool(true));
     assert_eq!(v.get("id").as_str(), Some("still-alive"));
 
+    server.shutdown();
+}
+
+/// Satellite: one malformed-request sweep across every verb. Unknown
+/// fields and mistyped fields must produce the single structured error
+/// shape — `{ok: false, error: {code, message}}`, with the offending
+/// unknown field named in `error.detail.field` — and the connection must
+/// survive the whole sweep.
+#[test]
+fn malformed_sweep_rejects_unknown_and_mistyped_fields_on_every_verb() {
+    let server = Server::bind("127.0.0.1:0", ServeOptions::default()).unwrap();
+    let mut c = Client::connect(server.addr());
+
+    // every verb rejects an unknown field, naming it
+    for cmd in [
+        "ping",
+        "shutdown",
+        "cache-stats",
+        "metrics",
+        "handshake",
+        "dse",
+        "des",
+        "flow",
+        "eval-candidate",
+        "eval-response",
+        "journal-pull",
+        "join",
+        "leave",
+    ] {
+        let v = c.call_raw(&format!(r#"{{"cmd": "{cmd}", "no_such_field": 1}}"#));
+        assert_eq!(v.get("ok"), &Json::Bool(false), "{cmd}: {v}");
+        assert_eq!(v.get("error").get("code").as_str(), Some("bad-request"), "{cmd}: {v}");
+        assert!(!v.get("error").get("message").as_str().unwrap_or("").is_empty(), "{cmd}: {v}");
+        assert_eq!(
+            v.get("error").get("detail").get("field").as_str(),
+            Some("no_such_field"),
+            "{cmd}: {v}"
+        );
+    }
+
+    // mistyped or missing-required fields, one probe per verb family
+    for line in [
+        r#"{"cmd": "dse", "ir": 42}"#,
+        r#"{"cmd": "des", "ir": "x", "priority": "high"}"#,
+        r#"{"cmd": "flow", "ir": "x", "deadline_ms": -1}"#,
+        r#"{"cmd": "dse", "ir": "x", "factors": "2,4"}"#,
+        r#"{"cmd": "eval-candidate", "ir": "x"}"#,
+        r#"{"cmd": "eval-response", "job": []}"#,
+        r#"{"cmd": "journal-pull", "cursor": "zero"}"#,
+        r#"{"cmd": "join"}"#,
+        r#"{"cmd": "leave", "worker": 9}"#,
+        r#"{"cmd": "handshake", "proto_version": "three"}"#,
+    ] {
+        let v = c.call_raw(line);
+        assert_eq!(v.get("ok"), &Json::Bool(false), "{line}: {v}");
+        assert_eq!(v.get("error").get("code").as_str(), Some("bad-request"), "{line}: {v}");
+        let msg = v.get("error").get("message").as_str().unwrap_or("");
+        assert!(!msg.is_empty(), "{line}: {v}");
+    }
+
+    // the connection survived the whole sweep
+    let v = c.call(vec![("cmd", "ping".into()), ("id", "post-sweep".into())]);
+    assert_eq!(v.get("ok"), &Json::Bool(true));
+    assert_eq!(v.get("id").as_str(), Some("post-sweep"));
     server.shutdown();
 }
 
@@ -392,6 +474,13 @@ fn handshake_validates_version_and_shard_map() {
     assert_eq!(v.get("ok"), &Json::Bool(true), "{v}");
     assert_eq!(v.get("result").get("proto_version").as_u64(), Some(PROTO_VERSION));
     assert_eq!(v.get("result").get("shard").get("index").as_u64(), Some(1));
+    // v2 handshakes advertise capabilities and echo the shard-map epoch
+    // (absent epoch = 0, the pre-elastic static fleet)
+    let caps = v.get("result").get("capabilities").as_arr().expect("capability list");
+    for cap in ["response-shard", "journal-gossip", "elastic-membership"] {
+        assert!(caps.iter().any(|c| c.as_str() == Some(cap)), "missing {cap}: {v}");
+    }
+    assert_eq!(v.get("result").get("shard").get("epoch").as_u64(), Some(0), "{v}");
     // cache-stats echoes the assignment back
     let stats = c.call(vec![("cmd", "cache-stats".into())]);
     assert_eq!(stats.get("result").get("shard").get("total").as_u64(), Some(2), "{stats}");
@@ -402,6 +491,16 @@ fn handshake_validates_version_and_shard_map() {
         PROTO_VERSION + 1
     ));
     assert_eq!(v.get("error").get("code").as_str(), Some("proto-mismatch"), "{v}");
+
+    // pinned: a v1-only peer gets the same structured mismatch — never a
+    // dropped connection (rolling upgrades depend on this)
+    let v = c.call_raw(
+        r#"{"cmd": "handshake", "proto_version": 1, "shard_map": {"index": 0, "total": 1}}"#,
+    );
+    assert_eq!(v.get("ok"), &Json::Bool(false), "{v}");
+    assert_eq!(v.get("error").get("code").as_str(), Some("proto-mismatch"), "{v}");
+    let msg = v.get("error").get("message").as_str().unwrap_or("");
+    assert!(msg.contains("protocol 1"), "mismatch names both versions: {v}");
 
     // missing proto_version / missing shard_map
     let v = c.call_raw(r#"{"cmd": "handshake"}"#);
@@ -498,12 +597,13 @@ fn eval_candidate_serves_bit_identical_outcomes_and_checks_keys() {
     server.shutdown();
 }
 
-/// Acceptance: a DSE request served by a coordinator with two remote
-/// workers returns bytes identical to the same request served
-/// single-process (cold and warm), and killing a worker mid-fleet degrades
-/// to local evaluation without changing the answer.
+/// Acceptance: a whole DSE request routes to the worker owning its
+/// response key's rendezvous shard and returns bytes identical to the same
+/// request served single-process (cold and warm); killing exactly the
+/// owning worker degrades to local evaluation without changing a byte.
 #[test]
 fn distributed_dse_is_bit_identical_and_fails_over() {
+    use olympus::service::shard_of_hex;
     let w1 = Server::bind("127.0.0.1:0", ServeOptions::default()).unwrap();
     let w2 = Server::bind("127.0.0.1:0", ServeOptions::default()).unwrap();
     let coord = Server::bind(
@@ -518,41 +618,128 @@ fn distributed_dse_is_bit_identical_and_fails_over() {
     let mut cs = Client::connect(single.addr());
     let mut cc = Client::connect(coord.addr());
 
-    // cold: every candidate evaluates, routed across the two shards
+    // cold: the whole job lands on its response-shard owner
     let cold_single = cs.call(dse_request(21, &[2, 4]));
     let cold_dist = cc.call(dse_request(21, &[2, 4]));
     assert_eq!(cold_single.get("ok"), &Json::Bool(true), "{cold_single}");
+    assert_eq!(cold_dist.get("cached"), &Json::Bool(false));
     assert_eq!(cold_dist.get("result"), cold_single.get("result"), "cold distributed == single");
     assert_eq!(cold_dist.get("key"), cold_single.get("key"));
 
-    // warm: the coordinator's response cache answers, still identical
+    // warm: the owner's response cache answers through the router,
+    // still identical
     let warm_dist = cc.call(dse_request(21, &[2, 4]));
     assert_eq!(warm_dist.get("cached"), &Json::Bool(true));
     assert_eq!(warm_dist.get("result"), cold_single.get("result"), "warm distributed == single");
 
-    // the evaluations really went remote, and both shards saw work
+    // the routing really happened and the thin router computed nothing
     let stats = cc.call(vec![("cmd", "cache-stats".into())]);
-    let remote = stats.get("result").get("remote");
+    let r = stats.get("result");
+    let remote = r.get("remote");
     assert_eq!(remote.get("workers").as_usize(), Some(2), "{stats}");
-    assert!(remote.get("remote_evals").as_u64().unwrap() >= 1, "{stats}");
-    assert_eq!(remote.get("remote_failovers").as_u64(), Some(0), "{stats}");
-    let (w1_miss, w2_miss) = (w1.state().stats().1.misses, w2.state().stats().1.misses);
-    assert!(w1_miss + w2_miss >= 1, "workers computed candidates: {w1_miss}/{w2_miss}");
+    assert!(remote.get("resp_shard_evals").as_u64().unwrap() >= 1, "{stats}");
+    assert!(remote.get("resp_shard_hits").as_u64().unwrap() >= 1, "{stats}");
+    assert_eq!(remote.get("resp_shard_failovers").as_u64(), Some(0), "{stats}");
+    assert_eq!(r.get("responses").get("misses").as_usize(), Some(0), "router computes nothing");
+    // the worker that owns the key did the one evaluation
+    let owner = shard_of_hex(cold_dist.get("key").as_str().unwrap(), 2).expect("valid key");
+    let owner_misses =
+        if owner == 0 { w1.state().stats().0.misses } else { w2.state().stats().0.misses };
+    assert_eq!(owner_misses, 1, "the shard owner computed the response");
+    // deprecated aliases (one release) mirror the canonical counter names
+    assert_eq!(remote.get("remote_evals"), remote.get("evals"), "{stats}");
+    assert_eq!(remote.get("remote_hits"), remote.get("hits"), "{stats}");
+    assert_eq!(remote.get("remote_failovers"), remote.get("failovers"), "{stats}");
 
-    // kill one worker: a fresh request fails over to local evaluation and
-    // the answer still matches the single-process run bit-for-bit
-    w2.shutdown();
+    // kill exactly the worker owning the next request's shard: the
+    // coordinator must fail over to local evaluation, bit-identically
     let ref2 = cs.call(dse_request(22, &[2, 4]));
+    assert_eq!(ref2.get("ok"), &Json::Bool(true), "{ref2}");
+    let owner2 = shard_of_hex(ref2.get("key").as_str().unwrap(), 2).expect("valid key");
+    let (dead, alive) = if owner2 == 0 { (w1, w2) } else { (w2, w1) };
+    dead.shutdown();
     let dist2 = cc.call(dse_request(22, &[2, 4]));
     assert_eq!(dist2.get("ok"), &Json::Bool(true), "{dist2}");
     assert_eq!(dist2.get("result"), ref2.get("result"), "failover must not change the answer");
     let stats = cc.call(vec![("cmd", "cache-stats".into())]);
     let remote = stats.get("result").get("remote");
-    assert!(remote.get("remote_failovers").as_u64().unwrap() >= 1, "{stats}");
+    assert!(remote.get("resp_shard_failovers").as_u64().unwrap() >= 1, "{stats}");
 
     coord.shutdown();
     single.shutdown();
-    w1.shutdown();
+    alive.shutdown();
+}
+
+/// Tentpole acceptance, in-process: journal gossip mirrors every worker's
+/// records onto its peers, and the fleet survives losing a shard owner —
+/// `leave` the dead worker, `join` a fresh one mid-run, and the same
+/// request keeps being answered from cache, byte-identically, with zero
+/// local re-evaluations on the coordinator.
+#[test]
+fn elastic_fleet_rewarms_replacement_workers_from_gossip() {
+    use olympus::service::shard_of_hex;
+    let w1 = Server::bind("127.0.0.1:0", ServeOptions::default()).unwrap();
+    let w2 = Server::bind("127.0.0.1:0", ServeOptions::default()).unwrap();
+    let coord = Server::bind(
+        "127.0.0.1:0",
+        ServeOptions {
+            remote_workers: vec![w1.addr().to_string(), w2.addr().to_string()],
+            ..ServeOptions::default()
+        },
+    )
+    .unwrap();
+    let mut cc = Client::connect(coord.addr());
+
+    let cold = cc.call(dse_request(51, &[2]));
+    assert_eq!(cold.get("ok"), &Json::Bool(true), "{cold}");
+    assert_eq!(cold.get("cached"), &Json::Bool(false));
+    let owner = shard_of_hex(cold.get("key").as_str().unwrap(), 2).expect("valid key");
+    let (dead, alive) = if owner == 0 { (w1, w2) } else { (w2, w1) };
+
+    // gossip mirrors the owner's record onto the other worker
+    let received = |addr: SocketAddr| -> u64 {
+        let mut c = Client::connect(addr);
+        let v = c.call(vec![("cmd", "cache-stats".into())]);
+        v.get("result").get("gossip_records_received").as_u64().unwrap_or(0)
+    };
+    wait_until("surviving worker absorbs the record", || received(alive.addr()) >= 1);
+
+    // lose the owner, then shrink the fleet around the loss — no restart
+    let dead_addr = dead.addr().to_string();
+    dead.shutdown();
+    let v = cc.call(vec![("cmd", "leave".into()), ("worker", dead_addr.into())]);
+    assert_eq!(v.get("ok"), &Json::Bool(true), "{v}");
+    assert_eq!(v.get("result").get("total").as_u64(), Some(1), "{v}");
+    let epoch_after_leave = v.get("result").get("epoch").as_u64().unwrap();
+    assert!(epoch_after_leave >= 2, "leave bumps the shard-map epoch: {v}");
+
+    // the lone survivor owns everything and answers from its gossip-warmed
+    // cache: byte-identical, cached, nothing recomputed anywhere
+    let warm = cc.call(dse_request(51, &[2]));
+    assert_eq!(warm.get("cached"), &Json::Bool(true), "{warm}");
+    assert_eq!(warm.get("result"), cold.get("result"), "bytes survive the owner's death");
+    assert_eq!(alive.state().stats().0.misses, 0, "survivor served from gossip, not compute");
+    assert_eq!(coord.state().stats().0.misses, 0, "the router never computed locally");
+
+    // grow the fleet again: a brand-new worker joins mid-run and re-warms
+    // from its neighbor's journal before it is ever asked anything
+    let w3 = Server::bind("127.0.0.1:0", ServeOptions::default()).unwrap();
+    let v = cc.call(vec![("cmd", "join".into()), ("worker", w3.addr().to_string().into())]);
+    assert_eq!(v.get("ok"), &Json::Bool(true), "{v}");
+    assert_eq!(v.get("result").get("total").as_u64(), Some(2), "{v}");
+    assert!(v.get("result").get("epoch").as_u64().unwrap() > epoch_after_leave, "{v}");
+    wait_until("joined worker re-warms from gossip", || received(w3.addr()) >= 1);
+
+    // whichever of the two now owns the key, gossip already handed it the
+    // record: cached, byte-identical, still zero local evaluations
+    let again = cc.call(dse_request(51, &[2]));
+    assert_eq!(again.get("cached"), &Json::Bool(true), "{again}");
+    assert_eq!(again.get("result"), cold.get("result"));
+    assert_eq!(coord.state().stats().0.misses, 0);
+
+    coord.shutdown();
+    alive.shutdown();
+    w3.shutdown();
 }
 
 #[test]
@@ -789,6 +976,8 @@ fn stats_cli_aggregates_a_two_worker_fleet() {
 
     let table = stats(&[]);
     assert!(table.contains("node"), "{table}");
+    assert!(table.contains("rshard"), "response-shard column: {table}");
+    assert!(table.contains("g_sent") && table.contains("g_recv"), "gossip columns: {table}");
     assert!(table.contains("(coordinator)"), "{table}");
     assert!(table.contains(&w1.addr().to_string()), "worker 1 row: {table}");
     assert!(table.contains(&w2.addr().to_string()), "worker 2 row: {table}");
@@ -797,12 +986,18 @@ fn stats_cli_aggregates_a_two_worker_fleet() {
     let raw = Json::parse(stats(&["--raw"]).trim()).expect("--raw emits valid JSON");
     let coord_m = raw.get("coordinator");
     assert!(coord_m.get("uptime_ms").as_u64().is_some(), "{raw}");
-    assert!(coord_m.get("remote").get("remote_evals").as_u64().unwrap() >= 1, "{raw}");
+    assert!(coord_m.get("remote").get("resp_shard_evals").as_u64().unwrap() >= 1, "{raw}");
+    assert!(coord_m.get("gossip").get("records_sent").as_u64().is_some(), "{raw}");
     assert!(
         coord_m.get("histograms").get("request_latency").get("count").as_u64().unwrap() >= 1,
         "{raw}"
     );
-    assert_eq!(raw.get("workers").as_arr().unwrap().len(), 2, "{raw}");
+    let workers = raw.get("workers").as_arr().unwrap();
+    assert_eq!(workers.len(), 2, "{raw}");
+    for w in workers {
+        let m = w.get("metrics");
+        assert!(m.get("gossip").get("records_received").as_u64().is_some(), "{raw}");
+    }
 
     coord.shutdown();
     w1.shutdown();
